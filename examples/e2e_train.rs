@@ -1,0 +1,108 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer stack on a real small workload:
+//!   * generates the real-sim analog dataset (~5.8k × 2.1k sparse),
+//!   * trains linear SVM with DSO on a simulated 4-machine × 2-core
+//!     cluster for 150 epochs, logging the full convergence curve,
+//!   * cross-checks the final objective against an independent
+//!     high-accuracy solver (BMRM, plus the DCD reference),
+//!   * if AOT artifacts are present, additionally trains the dense ocr
+//!     analog through the tile/PJRT path (Pallas kernel execution),
+//!   * writes results/e2e/*.csv and prints the loss curve.
+//!
+//! Run: `cargo run --release --example e2e_train`
+
+use dso::config::{Algorithm, ExecMode, TrainConfig};
+use dso::losses::{Loss, Problem, Regularizer};
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::Path::new("results/e2e");
+    std::fs::create_dir_all(out)?;
+    let lambda = 1e-4;
+
+    // ---------- sparse path: scalar DSO on real-sim ----------
+    let ds = dso::data::registry::generate("real-sim", 1.0, 7).map_err(anyhow::Error::msg)?;
+    let (train, test) = ds.split(0.2, 7);
+    println!(
+        "[e2e] real-sim analog: m={} d={} nnz={} (density {:.3}%)",
+        train.m(),
+        train.d(),
+        train.nnz(),
+        100.0 * train.x.density()
+    );
+
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = Algorithm::Dso;
+    cfg.optim.epochs = 150;
+    cfg.optim.eta0 = 0.1;
+    cfg.model.lambda = lambda;
+    cfg.cluster.machines = 4;
+    cfg.cluster.cores = 2;
+    cfg.monitor.every = 1;
+
+    let dso_r = dso::coordinator::train(&cfg, &train, Some(&test))?;
+    dso_r.history.write_csv(&out.join("dso_realsim.csv"))?;
+
+    // Reference optimum: BMRM run to tight gap + DCD solver.
+    let mut bcfg = cfg.clone();
+    bcfg.optim.algorithm = Algorithm::Bmrm;
+    bcfg.optim.epochs = 300;
+    let bmrm_r = dso::coordinator::train(&bcfg, &train, Some(&test))?;
+    bmrm_r.history.write_csv(&out.join("bmrm_realsim.csv"))?;
+    let dcd = dso::optim::dcd::solve_hinge_l2(&train, lambda, 2000, 1e-10, 1);
+    let problem = Problem::new(Loss::Hinge, Regularizer::L2, lambda);
+    let p_star = problem.primal(&train, &dcd.w).min(bmrm_r.final_primal);
+
+    println!("\n[e2e] loss curve (every 10 epochs):");
+    println!("{:>6} {:>12} {:>12} {:>10}", "epoch", "objective", "gap", "test_err");
+    for row in dso_r.history.rows.iter().step_by(10) {
+        println!("{:>6} {:>12.6} {:>12.4e} {:>10.4}", row[0], row[3], row[5], row[6]);
+    }
+
+    let rel = (dso_r.final_primal - p_star) / p_star.abs().max(1e-12);
+    println!(
+        "\n[e2e] DSO objective {:.6} vs reference optimum {:.6} (rel excess {:.3}%)",
+        dso_r.final_primal,
+        p_star,
+        100.0 * rel
+    );
+    println!(
+        "[e2e] duality gap {:.3e}; test error {:.4}; {:.1} MB communicated",
+        dso_r.final_gap,
+        dso_r.history.col("test_error").unwrap().last().unwrap(),
+        dso_r.comm_bytes as f64 / 1e6
+    );
+    anyhow::ensure!(rel < 0.05, "DSO did not reach within 5% of the optimum");
+    anyhow::ensure!(dso_r.final_gap >= -1e-6, "weak duality violated");
+
+    // ---------- dense path: tile DSO through PJRT ----------
+    match dso::runtime::Manifest::load_default() {
+        Err(e) => println!("\n[e2e] tile path skipped (no artifacts: {e})"),
+        Ok(_) => {
+            let dense =
+                dso::data::registry::generate("ocr", 0.3, 7).map_err(anyhow::Error::msg)?;
+            let (dtrain, dtest) = dense.split(0.2, 7);
+            let mut tcfg = TrainConfig::default();
+            tcfg.optim.algorithm = Algorithm::Dso;
+            tcfg.optim.epochs = 40;
+            tcfg.optim.eta0 = 0.3;
+            tcfg.model.lambda = lambda;
+            tcfg.cluster.machines = 2;
+            tcfg.cluster.cores = 2;
+            tcfg.cluster.mode = ExecMode::Tile;
+            tcfg.monitor.every = 2;
+            let tile_r = dso::coordinator::train(&tcfg, &dtrain, Some(&dtest))?;
+            tile_r.history.write_csv(&out.join("dso_tile_ocr.csv"))?;
+            let at_zero = Problem::new(Loss::Hinge, Regularizer::L2, lambda)
+                .primal(&dtrain, &vec![0.0; dtrain.d()]);
+            println!(
+                "\n[e2e] tile/PJRT on ocr analog: objective {:.6} (P(0)={:.6}), gap {:.3e}",
+                tile_r.final_primal, at_zero, tile_r.final_gap
+            );
+            anyhow::ensure!(tile_r.final_primal < 0.8 * at_zero, "tile path failed to learn");
+        }
+    }
+
+    println!("\n[e2e] OK — curves in {}", out.display());
+    Ok(())
+}

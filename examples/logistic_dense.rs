@@ -1,0 +1,39 @@
+//! Logistic regression on the dense ocr analog through the tile/PJRT
+//! path: the AOT-compiled Pallas kernel executes every block update.
+//! Falls back to the scalar engine when artifacts are missing.
+//!
+//! Run: `make artifacts && cargo run --release --example logistic_dense`
+
+use dso::config::{Algorithm, ExecMode, LossKind, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let ds = dso::data::registry::generate("ocr", 0.4, 5).map_err(anyhow::Error::msg)?;
+    let (train, test) = ds.split(0.2, 5);
+    println!("ocr analog: m={} d={} (dense)", train.m(), train.d());
+
+    let have_artifacts = dso::runtime::Manifest::load_default().is_ok();
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = Algorithm::Dso;
+    cfg.model.loss = LossKind::Logistic;
+    cfg.model.lambda = 1e-4;
+    cfg.optim.epochs = 50;
+    cfg.optim.eta0 = 0.3;
+    cfg.cluster.machines = 2;
+    cfg.cluster.cores = 2;
+    cfg.cluster.mode = if have_artifacts { ExecMode::Tile } else { ExecMode::Scalar };
+    cfg.monitor.every = 5;
+    println!(
+        "mode: {}",
+        if have_artifacts { "tile (Pallas kernel via PJRT)" } else { "scalar (run `make artifacts`)" }
+    );
+
+    let r = dso::coordinator::train(&cfg, &train, Some(&test))?;
+    println!("\n{}", r.history.render(20));
+    println!(
+        "final objective {:.6}, gap {:.3e}, test error {:.4}",
+        r.final_primal,
+        r.final_gap,
+        r.history.col("test_error").unwrap().last().unwrap()
+    );
+    Ok(())
+}

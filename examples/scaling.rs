@@ -1,0 +1,56 @@
+//! DSO scaling study (Figure 5 workload): machines ∈ {1, 2, 4, 8},
+//! fixed cores per machine, on the sparse kdda analog and the dense
+//! ocr analog. Prints virtual-time speedups and the objective reached.
+//!
+//! Run: `cargo run --release --example scaling [scale]`
+
+use dso::config::{Algorithm, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.4);
+    for dataset in ["kdda", "ocr"] {
+        let ds =
+            dso::data::registry::generate(dataset, scale, 3).map_err(anyhow::Error::msg)?;
+        let (train, _) = ds.split(0.2, 3);
+        println!(
+            "\n=== {dataset} analog: m={} d={} nnz={} ===",
+            train.m(),
+            train.d(),
+            train.nnz()
+        );
+        println!(
+            "{:>9} {:>9} {:>12} {:>11} {:>9} {:>10}",
+            "machines", "workers", "objective", "virtual_s", "speedup", "comm_MB"
+        );
+        let mut base = None;
+        for machines in [1usize, 2, 4, 8] {
+            let mut cfg = TrainConfig::default();
+            cfg.optim.algorithm = Algorithm::Dso;
+            cfg.optim.epochs = 20;
+            cfg.optim.eta0 = 0.1;
+            cfg.model.lambda = 1e-4;
+            cfg.cluster.machines = machines;
+            cfg.cluster.cores = 4;
+            cfg.monitor.every = 0;
+            let r = dso::coordinator::train(&cfg, &train, None)?;
+            let speedup = match base {
+                None => {
+                    base = Some(r.total_virtual_s);
+                    1.0
+                }
+                Some(b) => b / r.total_virtual_s,
+            };
+            println!(
+                "{:>9} {:>9} {:>12.6} {:>11.4} {:>9.2} {:>10.2}",
+                machines,
+                machines * 4,
+                r.final_primal,
+                r.total_virtual_s,
+                speedup,
+                r.comm_bytes as f64 / 1e6
+            );
+        }
+    }
+    Ok(())
+}

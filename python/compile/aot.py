@@ -1,0 +1,112 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/ for the Rust
+PJRT runtime.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos or .serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts [--tiles 128x128,64x64]
+Writes one .hlo.txt per (kind, loss, tile shape) plus manifest.json.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dso_tile, ref
+
+DEFAULT_TILES = "256x256,128x128,64x64,32x32"
+DEFAULT_ITERS = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tile_update(loss, bm, bd, iters=1):
+    fn = model.tile_update_fn(loss, bm, bd, iters)
+    return jax.jit(fn).lower(*dso_tile.example_args(bm, bd))
+
+
+def lower_tile_objective(loss, bm, bd):
+    fn = model.tile_objective_fn(loss, bm, bd)
+    return jax.jit(fn).lower(*model.objective_example_args(bm, bd))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tiles", default=DEFAULT_TILES)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    tiles = []
+    for spec in args.tiles.split(","):
+        bm, bd = spec.lower().split("x")
+        tiles.append((int(bm), int(bd)))
+
+    entries = []
+    for loss in ref.LOSSES:
+        for bm, bd in tiles:
+            # tile_update at each fused iteration count (amortizes the
+            # PJRT per-call overhead — see EXPERIMENTS.md §Perf).
+            for iters in DEFAULT_ITERS:
+                name = f"tile_update_{loss}_{bm}x{bd}_x{iters}"
+                path = f"{name}.hlo.txt"
+                text = to_hlo_text(lower_tile_update(loss, bm, bd, iters))
+                with open(os.path.join(args.out, path), "w") as f:
+                    f.write(text)
+                entries.append(
+                    {
+                        "name": name,
+                        "kind": "tile_update",
+                        "loss": loss,
+                        "bm": bm,
+                        "bd": bd,
+                        "iters": iters,
+                        "path": path,
+                        "vmem_bytes": dso_tile.vmem_bytes(bm, bd),
+                    }
+                )
+                print(f"wrote {path} ({len(text)} chars)")
+            name = f"tile_objective_{loss}_{bm}x{bd}"
+            path = f"{name}.hlo.txt"
+            text = to_hlo_text(lower_tile_objective(loss, bm, bd))
+            with open(os.path.join(args.out, path), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "kind": "tile_objective",
+                    "loss": loss,
+                    "bm": bm,
+                    "bd": bd,
+                    "iters": 1,
+                    "path": path,
+                    "vmem_bytes": dso_tile.vmem_bytes(bm, bd),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "schema": 1,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

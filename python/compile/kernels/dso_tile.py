@@ -1,0 +1,166 @@
+"""L1 — the DSO tile-update Pallas kernel.
+
+The paper's hot spot is the stream of stochastic saddle updates (Eq. 8)
+over the active block Omega^(q, sigma_r(q)). On dense data the batched
+(tile) form of that update is two matmuls plus elementwise work — an
+MXU-shaped computation. This kernel fuses the whole tile step:
+
+    u      = X_tile @ w_blk            # MXU, (bm,bd)x(bd,) -> (bm,)
+    g_a    = h'(alpha,y)*row_scale - u/m
+    t      = X_tile^T @ alpha          # MXU (old alpha: simultaneous)
+    g_w    = lam*2w*col_scale - t/m
+    AdaGrad accumulate/step + projections on both halves (VPU)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the original
+paper is CPU/MPI; the TPU formulation holds the (bm, bd) f32 tile in
+VMEM (256x256 -> 256 KiB, far under the ~16 MiB budget, leaving room
+for double buffering), feeds the MXU with both matmuls, and fuses the
+AdaGrad/projection elementwise tail into the same kernel so the tile is
+read exactly once per visit.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which runs bit-for-bit
+on the Rust side. Real-TPU performance is therefore *estimated* in
+DESIGN.md §Perf, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ADAGRAD_EPS = ref.ADAGRAD_EPS
+LOGISTIC_EPS = ref.LOGISTIC_EPS
+
+
+def _kernel_body(
+    loss,
+    iters,
+    x_ref,
+    w_ref,
+    w_acc_ref,
+    alpha_ref,
+    a_acc_ref,
+    y_ref,
+    row_scale_ref,
+    col_scale_ref,
+    params_ref,
+    w_out_ref,
+    w_acc_out_ref,
+    alpha_out_ref,
+    a_acc_out_ref,
+):
+    x = x_ref[...]
+    y = y_ref[...]
+    row_scale = row_scale_ref[...]
+    col_scale = col_scale_ref[...]
+    eta0 = params_ref[0]
+    lam = params_ref[1]
+    inv_m = params_ref[2]
+    w_bound = params_ref[3]
+
+    def step(_, carry):
+        w, w_acc, alpha, a_acc = carry
+        # --- dual (alpha) half ---
+        u = x @ w  # (bm,)
+        if loss == "hinge":
+            hp = y
+        elif loss == "logistic":
+            beta = jnp.clip(y * alpha, LOGISTIC_EPS, 1.0 - LOGISTIC_EPS)
+            hp = y * jnp.log((1.0 - beta) / beta)
+        else:  # square
+            hp = y - alpha
+        g_a = hp * row_scale - u * inv_m
+
+        # --- primal (w) half, old alpha (simultaneous step) ---
+        t = x.T @ alpha  # (bd,)
+        g_w = lam * (2.0 * w) * col_scale - t * inv_m
+
+        # --- AdaGrad + projections ---
+        a_acc2 = a_acc + g_a * g_a
+        eta_a = eta0 / jnp.sqrt(ADAGRAD_EPS + a_acc2)
+        alpha2 = alpha + eta_a * g_a
+        if loss == "hinge":
+            alpha2 = y * jnp.clip(y * alpha2, 0.0, 1.0)
+        elif loss == "logistic":
+            alpha2 = y * jnp.clip(y * alpha2, LOGISTIC_EPS, 1.0 - LOGISTIC_EPS)
+
+        w_acc2 = w_acc + g_w * g_w
+        eta_w = eta0 / jnp.sqrt(ADAGRAD_EPS + w_acc2)
+        w2 = jnp.clip(w - eta_w * g_w, -w_bound, w_bound)
+        return (w2, w_acc2, alpha2, a_acc2)
+
+    carry = (w_ref[...], w_acc_ref[...], alpha_ref[...], a_acc_ref[...])
+    # `iters` batched steps fused into one kernel invocation: amortizes
+    # the PJRT call overhead, which profiling showed dominates small
+    # tiles (EXPERIMENTS.md §Perf).
+    if iters == 1:
+        carry = step(0, carry)
+    else:
+        carry = jax.lax.fori_loop(0, iters, step, carry)
+    w2, w_acc2, alpha2, a_acc2 = carry
+
+    w_out_ref[...] = w2
+    w_acc_out_ref[...] = w_acc2
+    alpha_out_ref[...] = alpha2
+    a_acc_out_ref[...] = a_acc2
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "bm", "bd", "iters"))
+def tile_update(
+    loss, bm, bd, x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params, iters=1
+):
+    """Pallas tile update; same signature/semantics as `iters`
+    applications of ref.tile_update, with static (loss, bm, bd, iters)."""
+    f32 = jnp.float32
+    out_shape = (
+        jax.ShapeDtypeStruct((bd,), f32),  # w
+        jax.ShapeDtypeStruct((bd,), f32),  # w_acc
+        jax.ShapeDtypeStruct((bm,), f32),  # alpha
+        jax.ShapeDtypeStruct((bm,), f32),  # a_acc
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_body, loss, iters),
+        out_shape=out_shape,
+        interpret=True,
+    )(x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params)
+
+
+def make_tile_fn(loss, bm, bd, iters=1):
+    """A jittable function of the 9 array args with the statics bound —
+    the unit aot.py lowers to one HLO artifact."""
+
+    def fn(x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params):
+        return tile_update(
+            loss, bm, bd, x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params,
+            iters=iters,
+        )
+
+    fn.__name__ = f"dso_tile_{loss}_{bm}x{bd}_x{iters}"
+    return fn
+
+
+def example_args(bm, bd):
+    """ShapeDtypeStructs for lowering (order matters — the Rust runtime
+    packs literals in exactly this order)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((bm, bd), f32),  # x
+        jax.ShapeDtypeStruct((bd,), f32),     # w
+        jax.ShapeDtypeStruct((bd,), f32),     # w_acc
+        jax.ShapeDtypeStruct((bm,), f32),     # alpha
+        jax.ShapeDtypeStruct((bm,), f32),     # a_acc
+        jax.ShapeDtypeStruct((bm,), f32),     # y
+        jax.ShapeDtypeStruct((bm,), f32),     # row_scale
+        jax.ShapeDtypeStruct((bd,), f32),     # col_scale
+        jax.ShapeDtypeStruct((4,), f32),      # params
+    )
+
+
+def vmem_bytes(bm, bd):
+    """Estimated VMEM residency of one tile invocation (f32):
+    tile + 2*(bd) + 2*(bm) vectors in and the same out + y/scales."""
+    return 4 * (bm * bd + 4 * bd + 6 * bm + 4)

@@ -1,0 +1,106 @@
+"""Pure-jnp reference ("oracle") for the DSO tile-update kernel.
+
+This file intentionally contains no Pallas: it is the ground truth the
+Pallas kernel (dso_tile.py) is validated against by pytest/hypothesis,
+and it mirrors, in batched form, the scalar update (Eq. 8 of the paper)
+implemented in rust/src/coordinator/updates.rs:
+
+    u    = X.w                                   (margins of the tile)
+    g_a  = h'(alpha, y) * row_scale - u / m      (dual ascent direction)
+    g_w  = lambda * phi'(w) * col_scale - X^T.alpha / m
+    AdaGrad accumulate + step on both halves, evaluated at the OLD
+    (w, alpha) — the simultaneous step analyzed by Lemma 2 — followed by
+    the App. B projections (w box, dual feasible interval).
+
+row_scale encodes |Omega_i ∩ tile_cols| / (m*|Omega_i|) and col_scale
+encodes |Omega_bar_j ∩ tile_rows| / |Omega_bar_j| — the tile-restricted
+nonzero counts, so the batched step is the exact gradient of f
+restricted to the tile (zero scales on padding rows/columns).
+"""
+
+import jax.numpy as jnp
+
+ADAGRAD_EPS = 1e-8
+LOGISTIC_EPS = 1e-6  # f32 kernel cannot resolve the paper's 1e-14
+
+LOSSES = ("hinge", "logistic", "square")
+
+
+def dual_utility_grad(loss, alpha, y):
+    """h'(alpha, y) = -grad of the conjugate, per Table 1."""
+    if loss == "hinge":
+        return y * jnp.ones_like(alpha)
+    if loss == "logistic":
+        beta = jnp.clip(y * alpha, LOGISTIC_EPS, 1.0 - LOGISTIC_EPS)
+        return y * jnp.log((1.0 - beta) / beta)
+    if loss == "square":
+        return y - alpha
+    raise ValueError(f"unknown loss {loss}")
+
+
+def project_alpha(loss, alpha, y):
+    """Projection onto the dual feasible set (App. B)."""
+    if loss == "hinge":
+        return y * jnp.clip(y * alpha, 0.0, 1.0)
+    if loss == "logistic":
+        return y * jnp.clip(y * alpha, LOGISTIC_EPS, 1.0 - LOGISTIC_EPS)
+    if loss == "square":
+        return alpha
+    raise ValueError(f"unknown loss {loss}")
+
+
+def tile_update(loss, x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params):
+    """One batched saddle step on a dense tile.
+
+    Args:
+      loss: one of LOSSES (static python string).
+      x: (bm, bd) tile of the data matrix.
+      w: (bd,) weight block.       w_acc: (bd,) AdaGrad accumulators.
+      alpha: (bm,) dual block.     a_acc: (bm,) AdaGrad accumulators.
+      y: (bm,) labels (+-1; regression targets for square loss).
+      row_scale: (bm,) |Omega_i ∩ tile|/(m*|Omega_i|), 0 on padding rows.
+      col_scale: (bd,) |Omega_bar_j ∩ tile|/|Omega_bar_j|, 0 on padding.
+      params: (4,) f32 [eta0, lambda, inv_m, w_bound].
+
+    Returns (w', w_acc', alpha', a_acc'), all f32.
+    """
+    x = x.astype(jnp.float32)
+    eta0, lam, inv_m, w_bound = params[0], params[1], params[2], params[3]
+
+    u = x @ w  # (bm,)
+    g_a = dual_utility_grad(loss, alpha, y) * row_scale - u * inv_m
+    t = x.T @ alpha  # (bd,) — OLD alpha: simultaneous step
+    # phi(w) = w^2 (the paper's square-norm regularizer): phi' = 2w.
+    g_w = lam * (2.0 * w) * col_scale - t * inv_m
+
+    a_acc2 = a_acc + g_a * g_a
+    eta_a = eta0 / jnp.sqrt(ADAGRAD_EPS + a_acc2)
+    alpha2 = project_alpha(loss, alpha + eta_a * g_a, y)
+
+    w_acc2 = w_acc + g_w * g_w
+    eta_w = eta0 / jnp.sqrt(ADAGRAD_EPS + w_acc2)
+    w2 = jnp.clip(w - eta_w * g_w, -w_bound, w_bound)
+
+    return (
+        w2.astype(jnp.float32),
+        w_acc2.astype(jnp.float32),
+        alpha2.astype(jnp.float32),
+        a_acc2.astype(jnp.float32),
+    )
+
+
+def primal_objective(loss, x, y, w, lam):
+    """Dense primal P(w) = lam*sum(w^2) + mean loss (Eq. 1), used to
+    validate the L2 model objective against hand computations and the
+    Rust evaluator."""
+    u = x @ w
+    if loss == "hinge":
+        risk = jnp.maximum(0.0, 1.0 - y * u)
+    elif loss == "logistic":
+        z = -y * u
+        risk = jnp.log1p(jnp.exp(-jnp.abs(z))) + jnp.maximum(z, 0.0)
+    elif loss == "square":
+        risk = 0.5 * (u - y) ** 2
+    else:
+        raise ValueError(loss)
+    return lam * jnp.sum(w * w) + jnp.mean(risk)

@@ -1,0 +1,65 @@
+"""L2 — JAX model functions built around the L1 kernel.
+
+Two computations are AOT-exported for the Rust coordinator:
+
+  * the tile saddle-update step (wraps kernels.dso_tile; one artifact
+    per (loss, bm, bd) variant), and
+  * a dense-tile objective evaluator `tile_objective` used by the tile
+    engine's monitor to accumulate the primal risk and margins
+    block-by-block without leaving the PJRT runtime.
+
+Everything here is build-time only: `make artifacts` lowers these
+functions to HLO text; Python never runs during training.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dso_tile
+
+
+def tile_update_fn(loss, bm, bd, iters=1):
+    """The exported tile update (see kernels.dso_tile.make_tile_fn)."""
+    return dso_tile.make_tile_fn(loss, bm, bd, iters)
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def _tile_objective(loss, x, y, w, active):
+    """Partial primal risk of one dense tile.
+
+    Returns (risk_sum, margins): `risk_sum` the summed loss over the
+    tile's *active* rows (active is a 0/1 mask covering padding), and
+    `margins` = X.w for downstream test-error evaluation. The Rust
+    monitor adds the regularizer term and divides by m.
+    """
+    u = x @ w
+    if loss == "hinge":
+        risk = jnp.maximum(0.0, 1.0 - y * u)
+    elif loss == "logistic":
+        z = -y * u
+        risk = jnp.log1p(jnp.exp(-jnp.abs(z))) + jnp.maximum(z, 0.0)
+    elif loss == "square":
+        risk = 0.5 * (u - y) ** 2
+    else:
+        raise ValueError(loss)
+    return (jnp.sum(risk * active), u)
+
+
+def tile_objective_fn(loss, bm, bd):
+    def fn(x, y, w, active):
+        return _tile_objective(loss, x, y, w, active)
+
+    fn.__name__ = f"tile_objective_{loss}_{bm}x{bd}"
+    return fn
+
+
+def objective_example_args(bm, bd):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((bm, bd), f32),  # x
+        jax.ShapeDtypeStruct((bm,), f32),     # y
+        jax.ShapeDtypeStruct((bd,), f32),     # w
+        jax.ShapeDtypeStruct((bm,), f32),     # active mask
+    )

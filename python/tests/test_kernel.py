@@ -1,0 +1,198 @@
+"""L1 correctness: the Pallas tile kernel vs the pure-jnp oracle
+(ref.py), swept over shapes/losses/magnitudes with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import dso_tile, ref
+
+RNG = np.random.default_rng(0)
+
+
+def make_inputs(bm, bd, seed, loss="hinge", scale=1.0):
+    rng = np.random.default_rng(seed)
+    f32 = np.float32
+    x = (rng.standard_normal((bm, bd)) * scale).astype(f32)
+    w = (rng.standard_normal(bd) * 0.1).astype(f32)
+    w_acc = np.abs(rng.standard_normal(bd)).astype(f32) * 0.01
+    y = np.where(rng.random(bm) < 0.5, 1.0, -1.0).astype(f32)
+    if loss == "hinge":
+        beta = rng.random(bm).astype(f32)
+        alpha = (y * beta).astype(f32)
+    elif loss == "logistic":
+        beta = np.clip(rng.random(bm), 1e-3, 1 - 1e-3).astype(f32)
+        alpha = (y * beta).astype(f32)
+    else:
+        alpha = rng.standard_normal(bm).astype(f32)
+    a_acc = np.abs(rng.standard_normal(bm)).astype(f32) * 0.01
+    m = 4 * bm
+    row_counts = rng.integers(1, bd + 1, size=bm)
+    row_scale = (1.0 / (m * row_counts)).astype(f32)
+    col_counts = rng.integers(1, 4 * bm, size=bd)
+    col_scale = (1.0 / col_counts).astype(f32)
+    lam = 1e-3
+    params = np.array([0.1, lam, 1.0 / m, 1.0 / np.sqrt(lam)], dtype=f32)
+    return (x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params)
+
+
+def run_both(loss, bm, bd, args):
+    got = dso_tile.tile_update(loss, bm, bd, *args)
+    want = ref.tile_update(loss, *args)
+    return got, want
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+@pytest.mark.parametrize("bm,bd", [(8, 8), (16, 4), (4, 16), (32, 32)])
+def test_kernel_matches_ref(loss, bm, bd):
+    args = make_inputs(bm, bd, seed=42, loss=loss)
+    got, want = run_both(loss, bm, bd, args)
+    names = ("w", "w_acc", "alpha", "a_acc")
+    for g, r, name in zip(got, want, names):
+        np.testing.assert_allclose(g, r, rtol=1e-5, atol=1e-6, err_msg=f"{loss}:{name}")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bm=st.integers(1, 48),
+    bd=st.integers(1, 48),
+    seed=st.integers(0, 2**31),
+    loss=st.sampled_from(ref.LOSSES),
+    scale=st.floats(0.01, 10.0),
+)
+def test_kernel_matches_ref_hypothesis(bm, bd, seed, loss, scale):
+    args = make_inputs(bm, bd, seed=seed, loss=loss, scale=scale)
+    got, want = run_both(loss, bm, bd, args)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+def test_outputs_respect_constraints(loss):
+    bm, bd = 16, 12
+    args = make_inputs(bm, bd, seed=7, loss=loss)
+    # Huge eta to force projections to bind.
+    params = args[-1].copy()
+    params[0] = 1e4
+    args = args[:-1] + (params,)
+    w2, _, alpha2, _ = dso_tile.tile_update(loss, bm, bd, *args)
+    w_bound = params[3]
+    assert np.all(np.abs(np.asarray(w2)) <= w_bound + 1e-5)
+    y = args[5]
+    beta = np.asarray(y * alpha2)
+    if loss == "hinge":
+        assert np.all(beta >= -1e-6) and np.all(beta <= 1 + 1e-6)
+    elif loss == "logistic":
+        assert np.all(beta > 0) and np.all(beta < 1)
+
+
+def test_padding_rows_and_cols_are_inert():
+    """Zero-padded rows/cols (zero x, zero scales, zero state) must not
+    move — the invariant the Rust tile engine's edge-padding relies on."""
+    bm, bd = 16, 16
+    args = list(make_inputs(bm, bd, seed=3, loss="hinge"))
+    pad_r, pad_c = 12, 10  # rows >= pad_r and cols >= pad_c are padding
+    x = np.array(args[0])
+    x[pad_r:, :] = 0.0
+    x[:, pad_c:] = 0.0
+    args[0] = x
+    for idx, cut in ((1, pad_c), (2, pad_c)):  # w, w_acc
+        v = np.array(args[idx])
+        v[cut:] = 0.0
+        args[idx] = v
+    for idx, cut in ((3, pad_r), (4, pad_r)):  # alpha, a_acc
+        v = np.array(args[idx])
+        v[cut:] = 0.0
+        args[idx] = v
+    rs = np.array(args[6]); rs[pad_r:] = 0.0; args[6] = rs
+    cs = np.array(args[7]); cs[pad_c:] = 0.0; args[7] = cs
+
+    w2, w_acc2, alpha2, a_acc2 = dso_tile.tile_update("hinge", bm, bd, *args)
+    # Padded w coords: g_w = lam*2*0*0 - 0 = 0 -> w stays 0.
+    assert np.all(np.asarray(w2)[pad_c:] == 0.0)
+    assert np.all(np.asarray(alpha2)[pad_r:] == 0.0)
+    assert np.all(np.asarray(w_acc2)[pad_c:] == 0.0)
+    assert np.all(np.asarray(a_acc2)[pad_r:] == 0.0)
+    # Active coords still updated.
+    assert np.any(np.asarray(w2)[:pad_c] != np.asarray(args[1])[:pad_c])
+
+
+def test_deterministic():
+    bm, bd = 8, 8
+    args = make_inputs(bm, bd, seed=11)
+    a = dso_tile.tile_update("hinge", bm, bd, *args)
+    b = dso_tile.tile_update("hinge", bm, bd, *args)
+    for x, y_ in zip(a, b):
+        np.testing.assert_array_equal(x, y_)
+
+
+def test_adagrad_accumulators_monotone():
+    bm, bd = 8, 8
+    args = list(make_inputs(bm, bd, seed=13))
+    for _ in range(5):
+        w2, w_acc2, alpha2, a_acc2 = dso_tile.tile_update("hinge", bm, bd, *args)
+        assert np.all(np.asarray(w_acc2) >= np.asarray(args[2]) - 1e-7)
+        assert np.all(np.asarray(a_acc2) >= np.asarray(args[4]) - 1e-7)
+        args[1], args[2], args[3], args[4] = w2, w_acc2, alpha2, a_acc2
+
+
+def test_repeated_updates_reduce_primal_on_tiny_problem():
+    """Sanity: iterating the tile update on a full (non-padded) tile
+    should walk toward the saddle — primal objective decreases."""
+    bm, bd = 32, 8
+    rng = np.random.default_rng(5)
+    f32 = np.float32
+    wstar = rng.standard_normal(bd)
+    x = rng.standard_normal((bm, bd)).astype(f32) / np.sqrt(bd)
+    y = np.sign(x @ wstar + 1e-9).astype(f32)
+    lam = 1e-2
+    m = bm
+    w = np.zeros(bd, f32)
+    w_acc = np.zeros(bd, f32)
+    alpha = np.zeros(bm, f32)
+    a_acc = np.zeros(bm, f32)
+    row_scale = np.full(bm, 1.0 / (m * bd), f32)
+    col_scale = np.full(bd, 1.0 / bm, f32)
+    params = np.array([0.5, lam, 1.0 / m, 1.0 / np.sqrt(lam)], f32)
+    p0 = float(ref.primal_objective("hinge", x, y, w, lam))
+    for _ in range(300):
+        w, w_acc, alpha, a_acc = dso_tile.tile_update(
+            "hinge", bm, bd, x, w, w_acc, alpha, a_acc, y, row_scale, col_scale, params
+        )
+    p1 = float(ref.primal_objective("hinge", x, np.asarray(y), np.asarray(w), lam))
+    assert p1 < 0.6 * p0, f"{p0} -> {p1}"
+
+
+def test_vmem_estimate_sane():
+    assert dso_tile.vmem_bytes(256, 256) < 16 * 2**20 / 8
+    assert dso_tile.vmem_bytes(128, 128) > 4 * 128 * 128
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+def test_fused_iters_matches_repeated_ref(loss):
+    """The iters=k fused kernel must equal k sequential applications of
+    the oracle (the optimization must not change semantics)."""
+    bm, bd = 16, 12
+    args = make_inputs(bm, bd, seed=17, loss=loss)
+    got = dso_tile.tile_update(loss, bm, bd, *args, iters=5)
+    state = args[1], args[2], args[3], args[4]
+    for _ in range(5):
+        w2, wa2, al2, aa2 = ref.tile_update(
+            loss, args[0], state[0], state[1], state[2], state[3], *args[5:]
+        )
+        state = (w2, wa2, al2, aa2)
+    for g, r in zip(got, state):
+        np.testing.assert_allclose(g, r, rtol=3e-5, atol=1e-5, err_msg=loss)
+
+
+def test_fused_iters_one_equals_plain():
+    bm, bd = 8, 8
+    args = make_inputs(bm, bd, seed=19)
+    a = dso_tile.tile_update("hinge", bm, bd, *args, iters=1)
+    b = dso_tile.tile_update("hinge", bm, bd, *args)
+    for x, y_ in zip(a, b):
+        np.testing.assert_array_equal(x, y_)

@@ -1,0 +1,75 @@
+//! Microbench: PJRT tile-kernel execution latency per artifact shape,
+//! plus literal pack/unpack overhead (EXPERIMENTS.md §Perf runtime).
+
+use dso::runtime::pjrt::{lit_mat, lit_vec, PjrtRuntime};
+use dso::runtime::Manifest;
+use dso::util::bench::Runner;
+
+fn main() {
+    let mut runner = Runner::from_env("runtime");
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("no artifacts (run `make artifacts`); skipping runtime bench");
+        return;
+    };
+    let mut rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+
+    for e in manifest.find("tile_update", "hinge") {
+        rt.load(&e.name, &e.path).expect("load artifact");
+        let (bm, bd) = (e.bm, e.bd);
+        let x = vec![0.01f32; bm * bd];
+        let w = vec![0.1f32; bd];
+        let w_acc = vec![0.01f32; bd];
+        let alpha = vec![0.1f32; bm];
+        let a_acc = vec![0.01f32; bm];
+        let y = vec![1.0f32; bm];
+        let rs = vec![1e-4f32; bm];
+        let cs = vec![1e-2f32; bd];
+        let params = vec![0.1f32, 1e-4, 1e-4, 100.0];
+        let inputs = vec![
+            lit_mat(&x, bm, bd).unwrap(),
+            lit_vec(&w),
+            lit_vec(&w_acc),
+            lit_vec(&alpha),
+            lit_vec(&a_acc),
+            lit_vec(&y),
+            lit_vec(&rs),
+            lit_vec(&cs),
+            lit_vec(&params),
+        ];
+        runner.bench(&format!("exec_{}", e.name), || {
+            rt.execute(&e.name, &inputs).unwrap()
+        });
+        if let Some(r) = runner.results.last() {
+            // Tile update = 2 matmuls per fused step.
+            let flops = 4.0 * bm as f64 * bd as f64 * e.iters as f64;
+            println!(
+                "    -> {:.2} MFLOP/s effective on the tile matmuls",
+                flops / r.median() / 1e6
+            );
+        }
+        // Literal packing cost (what the tile engine pays per call).
+        runner.bench(&format!("literal_pack_{bm}x{bd}"), || {
+            (lit_mat(&x, bm, bd).unwrap(), lit_vec(&w), lit_vec(&alpha))
+        });
+    }
+
+    // Objective artifact.
+    if let Some(e) = manifest.find("tile_objective", "hinge").first() {
+        rt.load(&e.name, &e.path).expect("load objective");
+        let (bm, bd) = (e.bm, e.bd);
+        let x = vec![0.01f32; bm * bd];
+        let y = vec![1.0f32; bm];
+        let w = vec![0.1f32; bd];
+        let active = vec![1.0f32; bm];
+        let inputs = vec![
+            lit_mat(&x, bm, bd).unwrap(),
+            lit_vec(&y),
+            lit_vec(&w),
+            lit_vec(&active),
+        ];
+        runner.bench(&format!("tile_objective_exec_{bm}x{bd}"), || {
+            rt.execute(&e.name, &inputs).unwrap()
+        });
+    }
+    runner.finish("runtime");
+}

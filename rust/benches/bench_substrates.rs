@@ -1,0 +1,67 @@
+//! Microbench: the substrates under the engine — Ω block construction,
+//! partitioning, network router hop latency, dataset generation, CSR
+//! ops. These bound how fast epochs can cycle outside the update loop.
+
+use dso::data::synth::SparseSpec;
+use dso::net::{CostModel, Router};
+use dso::partition::{OmegaBlocks, Partition, RingSchedule};
+use dso::util::bench::Runner;
+
+fn main() {
+    let mut runner = Runner::from_env("substrates");
+
+    let ds = SparseSpec {
+        name: "bench".into(),
+        m: 20_000,
+        d: 8_000,
+        nnz_per_row: 12.0,
+        zipf_s: 0.9,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 2,
+    }
+    .generate();
+    println!("dataset: m={} d={} nnz={}", ds.m(), ds.d(), ds.nnz());
+
+    runner.bench("omega_build_p8", || {
+        let rp = Partition::even(ds.m(), 8);
+        let cp = Partition::even(ds.d(), 8);
+        OmegaBlocks::build(&ds.x, &rp, &cp)
+    });
+
+    let weights: Vec<u64> = (0..ds.m()).map(|i| ds.x.row_nnz(i) as u64).collect();
+    runner.bench("partition_balanced_p32", || Partition::balanced(&weights, 32));
+
+    runner.bench("csr_to_csc", || ds.x.to_csc());
+
+    let w = vec![0.1f32; ds.d()];
+    runner.bench("row_dot_full_pass", || {
+        let mut s = 0.0;
+        for i in 0..ds.m() {
+            s += ds.x.row_dot(i, &w);
+        }
+        s
+    });
+
+    runner.bench("dense_block_256x256", || ds.x.dense_block(0, 256, 0, 256));
+
+    // Ring hop: send + receive one w block through the router.
+    let sched = RingSchedule::new(8);
+    let mut router: Router<Vec<f32>> = Router::new(8, CostModel::new(100.0, 1000.0, 4));
+    let eps = router.take_endpoints();
+    let block = vec![0f32; ds.d() / 8];
+    runner.bench("ring_rotate_8workers", || {
+        for q in 0..8 {
+            eps[q].send(sched.send_to(q), block.clone(), 4 * block.len());
+        }
+        for ep in &eps {
+            ep.recv().unwrap();
+        }
+    });
+
+    runner.bench("gen_realsim_scale0.2", || {
+        dso::data::registry::generate("real-sim", 0.2, 3).unwrap()
+    });
+
+    runner.finish("substrates");
+}

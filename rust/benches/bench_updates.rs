@@ -1,0 +1,80 @@
+//! Microbench: the scalar saddle-update hot loop (Eq. 8) — updates per
+//! second per worker, across losses and step rules. This is the number
+//! the §Perf pass optimizes (EXPERIMENTS.md §Perf L3).
+
+use dso::coordinator::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+use dso::data::synth::SparseSpec;
+use dso::losses::{Loss, Regularizer};
+use dso::partition::omega::Entry;
+use dso::util::bench::{human_time, Runner};
+
+fn main() {
+    let mut runner = Runner::from_env("updates");
+
+    // A realistic block: 64k entries over 4k rows x 2k cols.
+    let ds = SparseSpec {
+        name: "bench".into(),
+        m: 4000,
+        d: 2000,
+        nnz_per_row: 16.0,
+        zipf_s: 0.8,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 1,
+    }
+    .generate();
+    let row_counts: Vec<u32> = (0..ds.m()).map(|i| ds.x.row_nnz(i) as u32).collect();
+    let col_counts = ds.x.col_counts();
+    let entries: Vec<Entry> = (0..ds.m())
+        .flat_map(|i| {
+            let (idx, val) = ds.x.row(i);
+            idx.iter()
+                .zip(val)
+                .map(move |(&j, &x)| Entry { i: i as u32, j, x })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let n = entries.len();
+    println!("block: {n} entries");
+
+    for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+        for (rname, rule) in
+            [("fixed", StepRule::Fixed(0.1)), ("adagrad", StepRule::AdaGrad(0.1))]
+        {
+            let ctx = SweepCtx {
+                loss,
+                reg: Regularizer::L2,
+                lambda: 1e-4,
+                m: ds.m() as f64,
+                row_counts: &row_counts,
+                col_counts: &col_counts,
+                y: &ds.y,
+                w_bound: loss.w_bound(1e-4),
+                rule,
+            };
+            let mut w = vec![0.01f32; ds.d()];
+            let mut w_acc = vec![0f32; ds.d()];
+            let mut alpha = vec![0f32; ds.m()];
+            let mut a_acc = vec![0f32; ds.m()];
+            runner.bench(&format!("sweep_{}_{rname}", loss.name()), || {
+                let mut st = BlockState {
+                    w: &mut w,
+                    w_acc: &mut w_acc,
+                    w_off: 0,
+                    alpha: &mut alpha,
+                    a_acc: &mut a_acc,
+                    a_off: 0,
+                };
+                sweep_block(&entries, &ctx, &mut st)
+            });
+            if let Some(r) = runner.results.last() {
+                println!(
+                    "    -> {:.1} M updates/s ({}/update)",
+                    n as f64 / r.median() / 1e6,
+                    human_time(r.median() / n as f64)
+                );
+            }
+        }
+    }
+    runner.finish("updates");
+}

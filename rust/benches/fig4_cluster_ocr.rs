@@ -1,0 +1,30 @@
+//! End-to-end figure regeneration bench: Figure 4 — cluster SVM on dense ocr (tile path when artifacts built).
+//!
+//! Runs the experiment driver once at bench scale, reports wall time,
+//! and leaves the CSV series under results/bench-figures/. Scale via
+//! DSO_BENCH_SCALE / DSO_BENCH_EPOCHS_MUL.
+
+use dso::exp::{self, ExpOptions};
+use std::time::Instant;
+
+fn main() {
+    dso::util::logger::init();
+    let mut opts = ExpOptions::default();
+    opts.scale = std::env::var("DSO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+    opts.epochs_mul = std::env::var("DSO_BENCH_EPOCHS_MUL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.3);
+    opts.out_dir = "results/bench-figures".into();
+    let t0 = Instant::now();
+    exp::run("fig4", &opts).expect("experiment failed");
+    println!(
+        "\n[bench] fig4 regenerated in {:.2}s (scale {}, epochs x{})",
+        t0.elapsed().as_secs_f64(),
+        opts.scale,
+        opts.epochs_mul
+    );
+}

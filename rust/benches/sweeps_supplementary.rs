@@ -1,0 +1,22 @@
+//! End-to-end supplementary sweep bench: Figures 6–45 (serial sweep)
+//! and Figures 46–77 (parallel sweep) at reduced scale. The full-scale
+//! sweeps are `dso exp serial-sweep` / `dso exp parallel-sweep`.
+
+use dso::exp::{self, ExpOptions};
+use std::time::Instant;
+
+fn main() {
+    dso::util::logger::init();
+    let mut opts = ExpOptions::default();
+    opts.scale = std::env::var("DSO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.06);
+    opts.epochs_mul = 0.15;
+    opts.out_dir = "results/bench-figures".into();
+    for exp_name in ["serial-sweep", "parallel-sweep"] {
+        let t0 = Instant::now();
+        exp::run(exp_name, &opts).expect("sweep failed");
+        println!("\n[bench] {exp_name} regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,26 @@
+//! End-to-end table regeneration bench: Table 2 (dataset summary) —
+//! generation throughput for every registry dataset.
+
+use dso::exp::{self, ExpOptions};
+use dso::util::bench::Runner;
+use std::time::Instant;
+
+fn main() {
+    dso::util::logger::init();
+    let mut opts = ExpOptions::default();
+    opts.scale = 0.25;
+    opts.out_dir = "results/bench-figures".into();
+    let t0 = Instant::now();
+    exp::run("table2", &opts).expect("table2 failed");
+    exp::run("table1", &opts).expect("table1 failed");
+    println!("\n[bench] tables regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // Per-dataset generation microbench.
+    let mut runner = Runner::from_env("datasets");
+    for &name in dso::data::registry::NAMES {
+        runner.bench(&format!("gen_{name}"), || {
+            dso::data::registry::generate(name, 0.1, 1).unwrap()
+        });
+    }
+    runner.finish("datasets");
+}

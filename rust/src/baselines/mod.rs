@@ -1,0 +1,7 @@
+//! The paper's comparison algorithms (§5): serial SGD with AdaGrad,
+//! PSGD (Zinkevich et al.) for the distributed stochastic comparison,
+//! and BMRM (Teo et al.) for the batch comparison.
+
+pub mod bmrm;
+pub mod psgd;
+pub mod sgd;

@@ -1,0 +1,134 @@
+//! Minimal argument parser (clap is not in the offline crate set).
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--flag`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(raw: &[String]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("unexpected bare '--'".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value follows unless the next token is a flag/end.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            a.flags.insert(name.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => {
+                            a.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error if unknown flags remain (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k}; known: {}", known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare flag followed by a non-flag token consumes it as
+        // its value ("--verbose x" ⇒ verbose=x); boolean flags must be
+        // last or followed by another flag.
+        let a = parse(&["train", "x", "--lambda", "0.001", "--algo=dso", "--verbose"]);
+        assert_eq!(a.positional, vec!["train", "x"]);
+        assert_eq!(a.get("lambda"), Some("0.001"));
+        assert_eq!(a.get("algo"), Some("dso"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--x", "2.5", "--n", "7"]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        assert!(a.get_f64("n", 0.0).is_ok());
+        let b = parse(&["--bad", "zz"]);
+        assert!(b.get_f64("bad", 0.0).is_err());
+        assert!(b.get_usize("bad", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["--flag"]);
+        assert!(a.get_bool("flag"));
+        let b = parse(&["--flag", "--other", "v"]);
+        assert!(b.get_bool("flag"));
+        assert_eq!(b.get("other"), Some("v"));
+    }
+
+    #[test]
+    fn check_known_catches_typos() {
+        let a = parse(&["--lambda", "1"]);
+        assert!(a.check_known(&["lambda"]).is_ok());
+        assert!(a.check_known(&["lamda"]).is_err());
+    }
+
+    #[test]
+    fn bare_double_dash_rejected() {
+        assert!(Args::parse(&["--".to_string()]).is_err());
+    }
+}

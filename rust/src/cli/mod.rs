@@ -1,0 +1,282 @@
+//! The `dso` command-line launcher.
+//!
+//! ```text
+//! dso train  [--config run.toml] [--data NAME] [--algo dso|sgd|psgd|bmrm]
+//!            [--loss hinge|logistic|square] [--lambda X] [--epochs N]
+//!            [--machines M] [--cores C] [--mode scalar|tile] [--scale S]
+//!            [--eta0 X] [--dcd-init] [--out results/run.csv] [--path f.libsvm]
+//! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
+//!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
+//! dso stats  [--name NAME | --all] [--scale S]
+//! dso gen-data --name NAME --out FILE [--scale S] [--seed N]
+//! dso inspect-artifacts
+//! ```
+
+pub mod args;
+
+use crate::config::TrainConfig;
+use crate::exp::ExpOptions;
+use args::Args;
+use anyhow::Result;
+
+pub fn main_entry(raw: Vec<String>) -> Result<i32> {
+    crate::util::logger::init();
+    let args = Args::parse(&raw).map_err(anyhow::Error::msg)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "stats" => cmd_stats(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "inspect-artifacts" => cmd_inspect_artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+pub fn usage() -> String {
+    "dso — Distributed Stochastic Optimization of the Regularized Risk\n\
+     commands:\n\
+     \x20 train               train a model (DSO or a baseline)\n\
+     \x20 exp <name>          reproduce a paper table/figure (or 'all')\n\
+     \x20 stats               dataset summary (Table 2)\n\
+     \x20 gen-data            export a synthetic dataset to libsvm\n\
+     \x20 inspect-artifacts   list AOT artifacts and their status\n\
+     run `dso <cmd> --help-flags` is not needed: see module docs / README.\n"
+        .to_string()
+}
+
+fn build_train_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        TrainConfig::from_toml(&text).map_err(anyhow::Error::msg)?
+    } else {
+        TrainConfig::default()
+    };
+    if let Some(v) = args.get("data") {
+        cfg.data.name = v.to_string();
+    }
+    if let Some(v) = args.get("path") {
+        cfg.data.path = Some(v.to_string());
+    }
+    if let Some(v) = args.get("algo") {
+        cfg.optim.algorithm = crate::config::Algorithm::parse(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get("loss") {
+        cfg.model.loss = crate::config::LossKind::parse(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get("mode") {
+        cfg.cluster.mode = crate::config::ExecMode::parse(v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.model.lambda = args.get_f64("lambda", cfg.model.lambda).map_err(anyhow::Error::msg)?;
+    cfg.optim.epochs = args.get_usize("epochs", cfg.optim.epochs).map_err(anyhow::Error::msg)?;
+    cfg.optim.eta0 = args.get_f64("eta0", cfg.optim.eta0).map_err(anyhow::Error::msg)?;
+    cfg.optim.dcd_init = cfg.optim.dcd_init || args.get_bool("dcd-init");
+    cfg.optim.seed = args.get_u64("seed", cfg.optim.seed).map_err(anyhow::Error::msg)?;
+    cfg.cluster.machines =
+        args.get_usize("machines", cfg.cluster.machines).map_err(anyhow::Error::msg)?;
+    cfg.cluster.cores = args.get_usize("cores", cfg.cluster.cores).map_err(anyhow::Error::msg)?;
+    cfg.data.scale = args.get_f64("scale", cfg.data.scale).map_err(anyhow::Error::msg)?;
+    cfg.data.seed = args.get_u64("data-seed", cfg.data.seed).map_err(anyhow::Error::msg)?;
+    if let Some(v) = args.get("out") {
+        cfg.monitor.out = v.to_string();
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+/// Load the dataset a config points at (registry or libsvm path).
+pub fn load_dataset(cfg: &TrainConfig) -> Result<crate::data::Dataset> {
+    match &cfg.data.path {
+        Some(p) => Ok(crate::data::libsvm::read(std::path::Path::new(p), 0)?),
+        None => crate::data::registry::generate(&cfg.data.name, cfg.data.scale, cfg.data.seed)
+            .map_err(anyhow::Error::msg),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    args.check_known(&[
+        "config", "data", "path", "algo", "loss", "mode", "lambda", "epochs", "eta0",
+        "dcd-init", "seed", "machines", "cores", "scale", "data-seed", "out", "test-frac",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let mut cfg = build_train_config(args)?;
+    cfg.data.test_frac =
+        args.get_f64("test-frac", cfg.data.test_frac).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(&cfg)?;
+    let (train, test) = ds.split(cfg.data.test_frac, cfg.data.seed);
+    crate::log_info!(
+        "training {} on {} (m={}, d={}, nnz={}) with {} workers",
+        cfg.optim.algorithm.name(),
+        train.name,
+        train.m(),
+        train.d(),
+        train.nnz(),
+        cfg.workers()
+    );
+    let r = crate::coordinator::train(&cfg, &train, Some(&test))?;
+    println!(
+        "{}: objective={:.6} gap={:.3e} test_error={:.4} virtual={:.3}s wall={:.3}s updates={}",
+        r.algorithm,
+        r.final_primal,
+        r.final_gap,
+        r.history.col("test_error").and_then(|c| c.last().copied()).unwrap_or(f64::NAN),
+        r.total_virtual_s,
+        r.total_wall_s,
+        r.total_updates
+    );
+    if !cfg.monitor.out.is_empty() {
+        let p = std::path::PathBuf::from(&cfg.monitor.out);
+        r.history.write_csv(&p)?;
+        println!("history -> {}", p.display());
+    }
+    Ok(0)
+}
+
+fn cmd_exp(args: &Args) -> Result<i32> {
+    args.check_known(&["scale", "epochs-mul", "out", "seed"]).map_err(anyhow::Error::msg)?;
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: dso exp <name>; names: {}", crate::exp::ALL.join(", ")))?;
+    let mut opts = ExpOptions::default();
+    opts.scale = args.get_f64("scale", opts.scale).map_err(anyhow::Error::msg)?;
+    opts.epochs_mul =
+        args.get_f64("epochs-mul", opts.epochs_mul).map_err(anyhow::Error::msg)?;
+    opts.seed = args.get_u64("seed", opts.seed).map_err(anyhow::Error::msg)?;
+    if let Some(v) = args.get("out") {
+        opts.out_dir = v.into();
+    }
+    crate::exp::run(name, &opts)?;
+    Ok(0)
+}
+
+fn cmd_stats(args: &Args) -> Result<i32> {
+    args.check_known(&["name", "all", "scale", "seed"]).map_err(anyhow::Error::msg)?;
+    let scale = args.get_f64("scale", 1.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    println!("{}", crate::data::DatasetStats::header());
+    let names: Vec<&str> = match args.get("name") {
+        Some(n) => vec![n],
+        None => crate::data::registry::NAMES.to_vec(),
+    };
+    for name in names {
+        let ds = crate::data::registry::generate(name, scale, seed)
+            .map_err(anyhow::Error::msg)?;
+        println!("{}", ds.stats().row());
+    }
+    Ok(0)
+}
+
+fn cmd_gen_data(args: &Args) -> Result<i32> {
+    args.check_known(&["name", "out", "scale", "seed"]).map_err(anyhow::Error::msg)?;
+    let name = args
+        .get("name")
+        .ok_or_else(|| anyhow::anyhow!("gen-data requires --name"))?;
+    let out = args.get("out").ok_or_else(|| anyhow::anyhow!("gen-data requires --out"))?;
+    let scale = args.get_f64("scale", 1.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let ds =
+        crate::data::registry::generate(name, scale, seed).map_err(anyhow::Error::msg)?;
+    crate::data::libsvm::write(&ds, std::path::Path::new(out))?;
+    println!("wrote {} (m={}, d={}, nnz={})", out, ds.m(), ds.d(), ds.nnz());
+    Ok(0)
+}
+
+fn cmd_inspect_artifacts() -> Result<i32> {
+    match crate::runtime::Manifest::load_default() {
+        Err(e) => {
+            println!("artifacts: NOT BUILT ({e}); run `make artifacts`");
+            Ok(1)
+        }
+        Ok(m) => {
+            println!(
+                "artifacts @ {} (jax {}):",
+                m.dir.display(),
+                m.jax_version
+            );
+            println!("{:<36} {:>6} {:>6} {:>12}", "name", "bm", "bd", "vmem_bytes");
+            for e in &m.entries {
+                println!("{:<36} {:>6} {:>6} {:>12}", e.name, e.bm, e.bd, e.vmem_bytes);
+            }
+            Ok(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(toks: &[&str]) -> Result<i32> {
+        main_entry(toks.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run(&["help"]).unwrap(), 0);
+        assert_eq!(run(&["bogus"]).unwrap(), 2);
+    }
+
+    #[test]
+    fn stats_runs() {
+        assert_eq!(run(&["stats", "--name", "real-sim", "--scale", "0.05"]).unwrap(), 0);
+        assert!(run(&["stats", "--name", "nope", "--scale", "0.05"]).is_err());
+    }
+
+    #[test]
+    fn train_quick() {
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "3",
+                "--machines", "2", "--cores", "1"
+            ])
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn train_rejects_unknown_flag() {
+        assert!(run(&["train", "--lamda", "0.1"]).is_err());
+    }
+
+    #[test]
+    fn gen_data_roundtrip() {
+        let out = std::env::temp_dir().join("dso-cli-gen.libsvm");
+        let out_s = out.to_str().unwrap();
+        assert_eq!(
+            run(&["gen-data", "--name", "news20", "--scale", "0.03", "--out", out_s]).unwrap(),
+            0
+        );
+        let ds = crate::data::libsvm::read(&out, 0).unwrap();
+        assert!(ds.m() > 0);
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn train_from_config_file() {
+        let dir = std::env::temp_dir().join("dso-cli-cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("run.toml");
+        std::fs::write(
+            &cfg_path,
+            "[data]\nname = \"real-sim\"\nscale = 0.05\n[optim]\nepochs = 2\n",
+        )
+        .unwrap();
+        assert_eq!(run(&["train", "--config", cfg_path.to_str().unwrap()]).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exp_requires_name() {
+        assert!(run(&["exp"]).is_err());
+        assert!(run(&["exp", "nope"]).is_err());
+    }
+}

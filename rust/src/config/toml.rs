@@ -1,0 +1,312 @@
+//! TOML-subset parser.
+//!
+//! serde/toml are not in the offline crate set. DSO's config files need
+//! tables, key = value with strings / ints / floats / bools, and flat
+//! arrays — this module implements exactly that subset with good error
+//! messages (line numbers), and nothing more.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lambda = 1` works).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `table.key -> Value`. Keys in the root table have
+/// no prefix; `[section]` prefixes subsequent keys with `section.`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error, line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(TomlError { line: line_no, msg: "empty section name".into() });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(TomlError {
+                line: line_no,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(TomlError { line: line_no, msg: "empty key".into() });
+            }
+            let full_key =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = parse_value(val.trim(), line_no)?;
+            if entries.insert(full_key.clone(), value).is_some() {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: format!("duplicate key '{full_key}'"),
+                });
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+
+    /// Keys of a section (unprefixed part).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.entries.keys().filter_map(move |k| k.strip_prefix(prefix.as_str()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| err("unterminated string".into()))?;
+        // Basic escape handling.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(err(format!("bad escape '\\{other:?}'"))),
+                }
+            } else if c == '"' {
+                return Err(err("unescaped quote inside string".into()));
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value '{s}'")))
+}
+
+/// Split a flat array body on commas that are not inside strings.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = Doc::parse(
+            "a = 1\nb = -2.5\nc = \"hi\"\nd = true\ne = false\nf = 1e-4\ng = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("a"), Some(1));
+        assert_eq!(doc.get_f64("b"), Some(-2.5));
+        assert_eq!(doc.get_str("c"), Some("hi"));
+        assert_eq!(doc.get_bool("d"), Some(true));
+        assert_eq!(doc.get_bool("e"), Some(false));
+        assert_eq!(doc.get_f64("f"), Some(1e-4));
+        assert_eq!(doc.get_i64("g"), Some(1000));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = Doc::parse("lambda = 1\n").unwrap();
+        assert_eq!(doc.get_f64("lambda"), Some(1.0));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let doc = Doc::parse("x = 1\n[optim]\neta = 0.5\n[data]\nname = \"ocr\"\n").unwrap();
+        assert_eq!(doc.get_i64("x"), Some(1));
+        assert_eq!(doc.get_f64("optim.eta"), Some(0.5));
+        assert_eq!(doc.get_str("data.name"), Some("ocr"));
+        let keys: Vec<&str> = doc.section_keys("optim").collect();
+        assert_eq!(keys, vec!["eta"]);
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = Doc::parse("# full line\na = 1 # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc.get_i64("a"), Some(1));
+        assert_eq!(doc.get_str("b"), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Doc::parse("xs = [1, 2, 3]\nys = [1.5, \"a,b\", true]\nempty = []\n").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+        let ys = doc.get("ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[1].as_str(), Some("a,b"));
+        assert_eq!(ys[2].as_bool(), Some(true));
+        assert_eq!(doc.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = Doc::parse("s = \"a\\nb\\t\\\"q\\\"\"\n").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a\nb\t\"q\""));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Doc::parse("a = \n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Doc::parse("a = 1\na = 2\n").is_err());
+        // Same key in different sections is fine.
+        assert!(Doc::parse("[x]\na = 1\n[y]\na = 2\n").is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for s in ["a = zzz", "a = \"open", "a = [1, 2", "a = 1.2.3"] {
+            assert!(Doc::parse(s).is_err(), "{s}");
+        }
+    }
+}

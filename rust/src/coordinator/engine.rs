@@ -1,0 +1,635 @@
+//! The DSO engine — Algorithm 1.
+//!
+//! p = machines × cores workers run as OS threads on a simulated
+//! cluster ([`crate::net`]). Rows/α are partitioned once (I_q); w is
+//! partitioned (J_r) and its blocks *rotate* around the ring: at inner
+//! iteration r worker q sweeps Ω^(q, σ_r(q)) — stochastic saddle
+//! updates (Eq. 8) on coordinates nobody else is touching — then ships
+//! its w block (plus that block's AdaGrad state) to the next owner.
+//! p inner iterations = 1 epoch; after each epoch the leader
+//! re-assembles (w, α) for monitoring.
+//!
+//! The engine is deterministic given a seed: the same configuration
+//! produces bit-identical parameters whether executed on p threads or
+//! replayed serially ([`run_replay`]) — the serializability property of
+//! Lemma 2, enforced by test.
+
+use super::monitor::{Monitor, TrainResult};
+use super::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+use crate::config::{ExecMode, StepKind, TrainConfig};
+use crate::data::Dataset;
+use crate::losses::{Loss, Problem, Regularizer};
+use crate::net::{CostModel, Router, VirtualClock};
+use crate::partition::{OmegaBlocks, Partition, RingSchedule};
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+/// Message carrying a w block (and its AdaGrad accumulators) around the
+/// ring.
+struct WMsg {
+    block_id: usize,
+    w: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// Everything a worker needs for one epoch, moved in and out of the
+/// worker threads.
+struct WorkerSlot {
+    q: usize,
+    w: Vec<f32>,
+    w_acc: Vec<f32>,
+    alpha: Vec<f32>,
+    a_acc: Vec<f32>,
+    clock: VirtualClock,
+    block_id: usize,
+    updates: u64,
+}
+
+/// Precomputed, immutable run setup shared by threads.
+pub struct DsoSetup {
+    pub problem: Problem,
+    pub omega: OmegaBlocks,
+    pub schedule: RingSchedule,
+    pub p: usize,
+    pub w_bound: f64,
+    pub cost: CostModel,
+}
+
+impl DsoSetup {
+    pub fn new(cfg: &TrainConfig, train: &Dataset) -> DsoSetup {
+        let p = cfg.workers().min(train.m()).min(train.d()).max(1);
+        let loss = Loss::from(cfg.model.loss);
+        let reg = Regularizer::from(cfg.model.reg);
+        let problem = Problem::new(loss, reg, cfg.model.lambda);
+        let (row_part, col_part) = make_partitions(cfg, train, p);
+        let omega = OmegaBlocks::build(&train.x, &row_part, &col_part);
+        let cost = CostModel::new(
+            cfg.cluster.latency_us,
+            cfg.cluster.bandwidth_mbps,
+            cfg.cluster.cores.max(1),
+        );
+        DsoSetup {
+            problem,
+            omega,
+            schedule: RingSchedule::new(p),
+            p,
+            w_bound: loss.w_bound(cfg.model.lambda),
+            cost,
+        }
+    }
+}
+
+/// Build row/column partitions per the configured strategy: equal
+/// index counts, or contiguous blocks balanced by nonzeros so that
+/// |Ω^(q,r)| ≈ |Ω|/p² even on zipf-skewed data (Theorem 1's load
+/// assumption).
+pub fn make_partitions(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    p: usize,
+) -> (Partition, Partition) {
+    match cfg.cluster.partition {
+        crate::config::PartitionKind::Even => {
+            (Partition::even(train.m(), p), Partition::even(train.d(), p))
+        }
+        crate::config::PartitionKind::Balanced => {
+            let row_w: Vec<u64> =
+                (0..train.m()).map(|i| train.x.row_nnz(i) as u64).collect();
+            let col_w: Vec<u64> =
+                train.x.col_counts().iter().map(|&c| c as u64).collect();
+            (Partition::balanced(&row_w, p), Partition::balanced(&col_w, p))
+        }
+    }
+}
+
+/// Train with DSO (Algorithm 1). `test` enables test-error columns.
+pub fn train_dso(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    if cfg.cluster.mode == ExecMode::Tile {
+        anyhow::bail!("tile mode is handled by coordinator::tile::train_dso_tile");
+    }
+    let setup = DsoSetup::new(cfg, train);
+    run_epochs(cfg, train, test, &setup, false)
+}
+
+/// Serial replay of the identical update sequence (Lemma 2): one
+/// thread, same per-(epoch, q, r) ordering. Produces bit-identical
+/// parameters to [`train_dso`]; used by tests and for debugging.
+pub fn run_replay(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    let setup = DsoSetup::new(cfg, train);
+    run_epochs(cfg, train, test, &setup, true)
+}
+
+fn init_state(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    setup: &DsoSetup,
+) -> (Vec<WorkerSlot>, u64) {
+    let p = setup.p;
+    let loss = setup.problem.loss;
+    let mut slots = Vec::with_capacity(p);
+    let mut init_comm: u64 = 0;
+
+    // Optional App. B warm start: every worker runs DCD on its local
+    // rows, α initialized locally, w averaged across workers.
+    let mut w_full = vec![0f32; train.d()];
+    let mut alpha_full: Vec<f32> =
+        (0..train.m()).map(|i| loss.alpha_init(train.y[i] as f64) as f32).collect();
+    if cfg.optim.dcd_init {
+        let mut w_sum = vec![0f64; train.d()];
+        for q in 0..p {
+            let rows: Vec<usize> = setup.omega.row_part.block(q).collect();
+            let local = Dataset::new(
+                format!("{}-shard{q}", train.name),
+                train.x.select_rows(&rows),
+                rows.iter().map(|&i| train.y[i]).collect(),
+            );
+            let r = crate::optim::dcd::solve_hinge_l2(
+                &local,
+                cfg.model.lambda,
+                10,
+                1e-3,
+                cfg.optim.seed ^ (q as u64),
+            );
+            for j in 0..train.d() {
+                w_sum[j] += r.w[j] as f64;
+            }
+            for (k, &i) in rows.iter().enumerate() {
+                alpha_full[i] = loss.project_alpha(r.alpha[k] as f64, train.y[i] as f64) as f32;
+            }
+            // Averaging w is an allreduce: d floats in and out.
+            init_comm += 2 * 4 * train.d() as u64;
+        }
+        for j in 0..train.d() {
+            w_full[j] = (w_sum[j] / p as f64) as f32;
+        }
+    }
+
+    for q in 0..p {
+        let wr = setup.omega.col_part.block(q);
+        let ar = setup.omega.row_part.block(q);
+        slots.push(WorkerSlot {
+            q,
+            w: w_full[wr.clone()].to_vec(),
+            w_acc: vec![0f32; wr.len()],
+            alpha: alpha_full[ar.clone()].to_vec(),
+            a_acc: vec![0f32; ar.len()],
+            clock: VirtualClock::new(),
+            block_id: q,
+            updates: 0,
+        });
+    }
+    (slots, init_comm)
+}
+
+fn run_epochs(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    setup: &DsoSetup,
+    replay: bool,
+) -> Result<TrainResult> {
+    let p = setup.p;
+    let (mut slots, init_comm) = init_state(cfg, train, setup);
+    let mut monitor = Monitor::new(cfg.monitor.every);
+    let wall = Stopwatch::new();
+    let mut router: Router<WMsg> = Router::new(p, setup.cost);
+    let stats = router.stats();
+    let mut endpoints = if replay { Vec::new() } else { router.take_endpoints() };
+    let mut virtual_now;
+
+    for epoch in 1..=cfg.optim.epochs {
+        let rule = match cfg.optim.step {
+            StepKind::Const => StepRule::Fixed(cfg.optim.eta0),
+            StepKind::InvSqrt => StepRule::Fixed(cfg.optim.eta0 / (epoch as f64).sqrt()),
+            StepKind::AdaGrad => StepRule::AdaGrad(cfg.optim.eta0),
+        };
+
+        if replay {
+            run_epoch_serial(cfg, train, setup, &mut slots, rule, epoch);
+        } else {
+            endpoints = run_epoch_threaded(cfg, train, setup, &mut slots, rule, epoch, endpoints);
+        }
+
+        // Bulk synchronization barrier.
+        let mut clocks: Vec<VirtualClock> = slots.iter().map(|s| s.clock).collect();
+        virtual_now = VirtualClock::synchronize(&mut clocks);
+        for (s, c) in slots.iter_mut().zip(clocks) {
+            s.clock = c;
+        }
+
+        if monitor.due(epoch) || epoch == cfg.optim.epochs {
+            let (w, alpha) = assemble(setup, &slots);
+            let updates: u64 = slots.iter().map(|s| s.updates).sum();
+            monitor.record_saddle(
+                &setup.problem,
+                train,
+                test,
+                &w,
+                &alpha,
+                epoch,
+                virtual_now,
+                wall.elapsed_secs(),
+                updates,
+                stats.total_bytes() + init_comm,
+            );
+        }
+    }
+
+    let (w, alpha) = assemble(setup, &slots);
+    let updates: u64 = slots.iter().map(|s| s.updates).sum();
+    let final_primal = setup.problem.primal(train, &w);
+    let final_gap = final_primal - setup.problem.dual(train, &alpha);
+    Ok(TrainResult {
+        algorithm: if replay { "dso-replay".into() } else { "dso".into() },
+        w,
+        alpha,
+        history: monitor.history,
+        final_primal,
+        final_gap,
+        total_updates: updates,
+        total_virtual_s: slots.iter().map(|s| s.clock.total()).fold(0.0, f64::max),
+        total_wall_s: wall.elapsed_secs(),
+        comm_bytes: stats.total_bytes() + init_comm,
+    })
+}
+
+/// Reassemble the full (w, α) from the slots. After a completed epoch,
+/// worker q holds w block q (blocks make a full ring tour per epoch).
+fn assemble(setup: &DsoSetup, slots: &[WorkerSlot]) -> (Vec<f32>, Vec<f32>) {
+    let d = setup.omega.col_part.n();
+    let m = setup.omega.row_part.n();
+    let mut w = vec![0f32; d];
+    let mut alpha = vec![0f32; m];
+    for s in slots {
+        debug_assert_eq!(s.block_id, s.q, "block not home after epoch");
+        w[setup.omega.col_part.block(s.block_id)].copy_from_slice(&s.w);
+        alpha[setup.omega.row_part.block(s.q)].copy_from_slice(&s.alpha);
+    }
+    (w, alpha)
+}
+
+/// Pick the entries a worker processes this inner iteration: the whole
+/// block (paper default) or a random sample of `k` (updates_per_block).
+fn select_entries<'a>(
+    entries: &'a [crate::partition::omega::Entry],
+    k: usize,
+    seed: u64,
+    epoch: usize,
+    q: usize,
+    r: usize,
+) -> std::borrow::Cow<'a, [crate::partition::omega::Entry]> {
+    if k == 0 || k >= entries.len() {
+        return std::borrow::Cow::Borrowed(entries);
+    }
+    let mix = seed
+        ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (q as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ (r as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    let mut rng = Xoshiro256::new(mix);
+    let sampled: Vec<_> = (0..k).map(|_| entries[rng.gen_index(entries.len())]).collect();
+    std::borrow::Cow::Owned(sampled)
+}
+
+fn sweep_ctx<'a>(
+    cfg: &TrainConfig,
+    train: &'a Dataset,
+    setup: &'a DsoSetup,
+    rule: StepRule,
+) -> SweepCtx<'a> {
+    SweepCtx {
+        loss: setup.problem.loss,
+        reg: setup.problem.reg,
+        lambda: cfg.model.lambda,
+        m: train.m() as f64,
+        row_counts: &setup.omega.row_counts,
+        col_counts: &setup.omega.col_counts,
+        y: &train.y,
+        w_bound: setup.w_bound,
+        rule,
+    }
+}
+
+fn run_epoch_threaded(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    setup: &DsoSetup,
+    slots: &mut Vec<WorkerSlot>,
+    rule: StepRule,
+    epoch: usize,
+    endpoints: Vec<crate::net::router::Endpoint<WMsg>>,
+) -> Vec<crate::net::router::Endpoint<WMsg>> {
+    let p = setup.p;
+    let adagrad = matches!(rule, StepRule::AdaGrad(_));
+    let taken: Vec<(WorkerSlot, crate::net::router::Endpoint<WMsg>)> =
+        slots.drain(..).zip(endpoints).collect();
+
+    let results: Vec<(WorkerSlot, crate::net::router::Endpoint<WMsg>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = taken
+                .into_iter()
+                .map(|(mut slot, ep)| {
+                    let ctx = sweep_ctx(cfg, train, setup, rule);
+                    scope.spawn(move || {
+                        let q = slot.q;
+                        for r in 0..p {
+                            debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
+                            let entries = setup.omega.block(q, slot.block_id);
+                            let chosen = select_entries(
+                                entries,
+                                cfg.cluster.updates_per_block,
+                                cfg.optim.seed,
+                                epoch,
+                                q,
+                                r,
+                            );
+                            let w_off = setup.omega.col_part.bounds[slot.block_id];
+                            let a_off = setup.omega.row_part.bounds[q];
+                            let t0 = std::time::Instant::now();
+                            let mut st = BlockState {
+                                w: &mut slot.w,
+                                w_acc: &mut slot.w_acc,
+                                w_off,
+                                alpha: &mut slot.alpha,
+                                a_acc: &mut slot.a_acc,
+                                a_off,
+                            };
+                            slot.updates += sweep_block(&chosen, &ctx, &mut st) as u64;
+                            slot.clock.add_compute(t0.elapsed().as_secs_f64());
+
+                            // Rotate the w block (with its AdaGrad state).
+                            let w = std::mem::take(&mut slot.w);
+                            let acc = std::mem::take(&mut slot.w_acc);
+                            let bytes =
+                                16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+                            ep.send(
+                                setup.schedule.send_to(q),
+                                WMsg { block_id: slot.block_id, w, acc },
+                                bytes,
+                            );
+                            let d = ep.recv().expect("ring peer hung up");
+                            slot.clock.add_comm(d.comm_secs);
+                            slot.block_id = d.payload.block_id;
+                            slot.w = d.payload.w;
+                            slot.w_acc = d.payload.acc;
+                        }
+                        (slot, ep)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+
+    let mut eps = Vec::with_capacity(p);
+    for (slot, ep) in results {
+        slots.push(slot);
+        eps.push(ep);
+    }
+    slots.sort_by_key(|s| s.q);
+    eps.sort_by_key(|e| e.id);
+    eps
+}
+
+/// One epoch executed on a single thread in the canonical serial order
+/// (inner iteration r outer, worker rank q inner) — the order Lemma 2
+/// serializes to. No network involved; comm costs are charged from the
+/// cost model directly.
+fn run_epoch_serial(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    setup: &DsoSetup,
+    slots: &mut [WorkerSlot],
+    rule: StepRule,
+    epoch: usize,
+) {
+    let p = setup.p;
+    let adagrad = matches!(rule, StepRule::AdaGrad(_));
+    let ctx = sweep_ctx(cfg, train, setup, rule);
+    for r in 0..p {
+        for slot in slots.iter_mut() {
+            let q = slot.q;
+            debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
+            let entries = setup.omega.block(q, slot.block_id);
+            let chosen =
+                select_entries(entries, cfg.cluster.updates_per_block, cfg.optim.seed, epoch, q, r);
+            let w_off = setup.omega.col_part.bounds[slot.block_id];
+            let a_off = setup.omega.row_part.bounds[q];
+            let t0 = std::time::Instant::now();
+            let mut st = BlockState {
+                w: &mut slot.w,
+                w_acc: &mut slot.w_acc,
+                w_off,
+                alpha: &mut slot.alpha,
+                a_acc: &mut slot.a_acc,
+                a_off,
+            };
+            slot.updates += sweep_block(&chosen, &ctx, &mut st) as u64;
+            slot.clock.add_compute(t0.elapsed().as_secs_f64());
+        }
+        // Rotate all blocks one hop (dst = q-1 ring).
+        let mut moved: Vec<(usize, usize, Vec<f32>, Vec<f32>)> = Vec::with_capacity(p);
+        for slot in slots.iter_mut() {
+            let dst = setup.schedule.send_to(slot.q);
+            let w = std::mem::take(&mut slot.w);
+            let acc = std::mem::take(&mut slot.w_acc);
+            let bytes = 16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+            let secs = setup.cost.transfer_secs(slot.q, dst, bytes);
+            moved.push((dst, slot.block_id, w, acc));
+            let _ = secs;
+        }
+        for (dst, block_id, w, acc) in moved {
+            let src = setup.schedule.recv_from(dst);
+            let bytes = 16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+            let secs = setup.cost.transfer_secs(src, dst, bytes);
+            let slot = &mut slots[dst];
+            slot.block_id = block_id;
+            slot.w = w;
+            slot.w_acc = acc;
+            slot.clock.add_comm(secs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, StepKind, TrainConfig};
+    use crate::data::synth::SparseSpec;
+
+    fn dataset(m: usize, d: usize, seed: u64) -> Dataset {
+        SparseSpec {
+            name: "engine-test".into(),
+            m,
+            d,
+            nnz_per_row: 6.0,
+            zipf_s: 0.7,
+            label_noise: 0.03,
+            pos_frac: 0.5,
+            seed,
+        }
+        .generate()
+    }
+
+    fn base_cfg(p: usize, epochs: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.optim.algorithm = Algorithm::Dso;
+        cfg.optim.epochs = epochs;
+        cfg.optim.eta0 = 0.5;
+        cfg.optim.step = StepKind::AdaGrad;
+        cfg.model.lambda = 1e-3;
+        cfg.cluster.machines = p;
+        cfg.cluster.cores = 1;
+        cfg.monitor.every = 0;
+        cfg
+    }
+
+    #[test]
+    fn single_worker_reduces_objective_and_gap() {
+        let ds = dataset(300, 80, 5);
+        let cfg = base_cfg(1, 30);
+        let setup = DsoSetup::new(&cfg, &ds);
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        let at_zero = setup.problem.primal(&ds, &vec![0.0; ds.d()]);
+        assert!(r.final_primal < at_zero, "{} !< {at_zero}", r.final_primal);
+        assert!(r.final_gap >= -1e-6);
+        assert!(r.final_gap < at_zero, "gap {}", r.final_gap);
+        assert!(r.total_updates > 0);
+    }
+
+    #[test]
+    fn multi_worker_matches_serial_replay_bitwise() {
+        // Lemma 2: the threaded run must be exactly serializable.
+        let ds = dataset(200, 64, 9);
+        for p in [2usize, 3, 4] {
+            let cfg = base_cfg(p, 5);
+            let threaded = train_dso(&cfg, &ds, None).unwrap();
+            let replayed = run_replay(&cfg, &ds, None).unwrap();
+            assert_eq!(threaded.w, replayed.w, "w differs at p={p}");
+            assert_eq!(threaded.alpha, replayed.alpha, "alpha differs at p={p}");
+            assert_eq!(threaded.total_updates, replayed.total_updates);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let ds = dataset(150, 40, 11);
+        let cfg = base_cfg(4, 4);
+        let a = train_dso(&cfg, &ds, None).unwrap();
+        let b = train_dso(&cfg, &ds, None).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn invsqrt_schedule_also_converges() {
+        let ds = dataset(250, 60, 13);
+        let mut cfg = base_cfg(2, 40);
+        cfg.optim.step = StepKind::InvSqrt;
+        cfg.optim.eta0 = 1.0;
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        let p = DsoSetup::new(&cfg, &ds).problem;
+        let at_zero = p.primal(&ds, &vec![0.0; ds.d()]);
+        assert!(r.final_primal < at_zero);
+    }
+
+    #[test]
+    fn gap_decreases_over_epochs() {
+        let ds = dataset(300, 80, 17);
+        let mut cfg = base_cfg(2, 40);
+        cfg.monitor.every = 1;
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        let gaps = r.history.col("gap").unwrap();
+        assert!(gaps.len() >= 30);
+        let early: f64 = gaps[..5].iter().sum::<f64>() / 5.0;
+        let late: f64 = gaps[gaps.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(late < early * 0.8, "early {early} late {late}");
+        // Gaps are nonnegative (weak duality) throughout.
+        assert!(gaps.iter().all(|&g| g >= -1e-6));
+    }
+
+    #[test]
+    fn comm_bytes_scale_with_p_and_epochs() {
+        let ds = dataset(120, 100, 19);
+        let mut cfg = base_cfg(4, 3);
+        cfg.monitor.every = 0;
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        // Per epoch: p inner iters × p workers... each worker sends its
+        // block once per inner iteration: p*p messages of ~(d/p)*8 bytes.
+        let approx = 3 * 4 * (2 * 4 * ds.d() / 4 + 16) * 4;
+        assert!(r.comm_bytes > 0);
+        assert!(
+            (r.comm_bytes as f64) < 3.0 * approx as f64,
+            "bytes {} vs approx {approx}",
+            r.comm_bytes
+        );
+    }
+
+    #[test]
+    fn dcd_init_starts_closer() {
+        // With a negligible step size the run's final point is ~the
+        // initial point, so this isolates the warm start's quality.
+        let ds = dataset(400, 60, 23);
+        let mut cfg = base_cfg(2, 1);
+        cfg.optim.eta0 = 1e-9;
+        cfg.monitor.every = 1;
+        let cold = train_dso(&cfg, &ds, None).unwrap();
+        cfg.optim.dcd_init = true;
+        let warm = train_dso(&cfg, &ds, None).unwrap();
+        assert!(
+            warm.final_primal < cold.final_primal,
+            "warm {} !< cold {}",
+            warm.final_primal,
+            cold.final_primal
+        );
+        // Warm start also charges communication for the w averaging.
+        assert!(warm.comm_bytes > cold.comm_bytes);
+    }
+
+    #[test]
+    fn updates_per_block_subsamples() {
+        let ds = dataset(200, 50, 29);
+        let mut cfg = base_cfg(2, 2);
+        cfg.cluster.updates_per_block = 5;
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        // ≤ 5 updates × p inner iters × p workers × epochs.
+        assert!(r.total_updates <= (5 * 2 * 2 * 2) as u64);
+        assert!(r.total_updates > 0);
+    }
+
+    #[test]
+    fn p_capped_by_dimensions() {
+        let ds = dataset(20, 6, 31);
+        let mut cfg = base_cfg(16, 2);
+        cfg.cluster.machines = 16;
+        let setup = DsoSetup::new(&cfg, &ds);
+        assert!(setup.p <= 6);
+        // Still runs.
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        assert!(r.final_primal.is_finite());
+    }
+
+    #[test]
+    fn logistic_loss_runs_and_converges() {
+        let ds = dataset(250, 60, 37);
+        let mut cfg = base_cfg(3, 30);
+        cfg.model.loss = crate::config::LossKind::Logistic;
+        let r = train_dso(&cfg, &ds, None).unwrap();
+        let p = DsoSetup::new(&cfg, &ds).problem;
+        let at_zero = p.primal(&ds, &vec![0.0; ds.d()]);
+        assert!(r.final_primal < at_zero);
+        assert!(r.final_gap >= -1e-6);
+    }
+
+    #[test]
+    fn test_error_reported_when_test_given() {
+        let ds = dataset(300, 50, 41);
+        let (train, test) = ds.split(0.25, 7);
+        let mut cfg = base_cfg(2, 10);
+        cfg.monitor.every = 1;
+        let r = train_dso(&cfg, &train, Some(&test)).unwrap();
+        let errs = r.history.col("test_error").unwrap();
+        assert!(errs.iter().all(|&e| (0.0..=1.0).contains(&e)));
+        // Should learn something.
+        assert!(*errs.last().unwrap() < 0.5);
+    }
+}

@@ -1,0 +1,34 @@
+//! The DSO coordinator — the paper's system contribution (Section 3).
+
+pub mod async_engine;
+pub mod engine;
+pub mod monitor;
+pub mod tile;
+pub mod updates;
+
+pub use async_engine::train_dso_async;
+pub use engine::{run_replay, train_dso, DsoSetup};
+pub use monitor::{EvalRow, Monitor, TrainResult};
+
+use crate::config::{Algorithm, TrainConfig};
+use crate::data::Dataset;
+use anyhow::Result;
+
+/// Train with the algorithm selected in the config — DSO or one of the
+/// paper's baselines. The one-stop entry point used by the CLI,
+/// examples, and experiment drivers.
+pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    match cfg.optim.algorithm {
+        Algorithm::Dso => {
+            if cfg.cluster.mode == crate::config::ExecMode::Tile {
+                tile::train_dso_tile(cfg, train, test)
+            } else {
+                train_dso(cfg, train, test)
+            }
+        }
+        Algorithm::DsoAsync => async_engine::train_dso_async(cfg, train, test),
+        Algorithm::Sgd => crate::baselines::sgd::train_sgd(cfg, train, test),
+        Algorithm::Psgd => crate::baselines::psgd::train_psgd(cfg, train, test),
+        Algorithm::Bmrm => crate::baselines::bmrm::train_bmrm(cfg, train, test),
+    }
+}

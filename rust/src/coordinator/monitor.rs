@@ -1,0 +1,252 @@
+//! Convergence monitoring shared by every solver (DSO and baselines).
+//!
+//! Each evaluation produces one row of the run history with the exact
+//! quantities the paper plots: objective value (primal), dual value and
+//! duality gap where the algorithm maintains duals, test error, and
+//! both time axes ("number of iterations" and "time spent" — here
+//! simulated cluster time plus measured wall time).
+
+use crate::data::Dataset;
+use crate::losses::Problem;
+use crate::util::csv::Table;
+
+pub const HISTORY_COLUMNS: [&str; 9] = [
+    "epoch",
+    "virtual_s",
+    "wall_s",
+    "primal",
+    "dual",
+    "gap",
+    "test_error",
+    "updates",
+    "comm_bytes",
+];
+
+/// Collects per-epoch evaluation rows.
+#[derive(Clone, Debug)]
+pub struct Monitor {
+    pub history: Table,
+    /// Evaluate every `every` epochs (0 = only on demand).
+    pub every: usize,
+}
+
+impl Monitor {
+    pub fn new(every: usize) -> Monitor {
+        Monitor { history: Table::new(&HISTORY_COLUMNS), every }
+    }
+
+    pub fn due(&self, epoch: usize) -> bool {
+        self.every > 0 && (epoch % self.every == 0 || epoch == 1)
+    }
+
+    /// Record a full saddle-point evaluation (algorithms with duals).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_saddle(
+        &mut self,
+        problem: &Problem,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        w: &[f32],
+        alpha: &[f32],
+        epoch: usize,
+        virtual_s: f64,
+        wall_s: f64,
+        updates: u64,
+        comm_bytes: u64,
+    ) -> EvalRow {
+        let primal = problem.primal(train, w);
+        let dual = problem.dual(train, alpha);
+        let test_error = test.map(|t| t.test_error(w)).unwrap_or(f64::NAN);
+        let row = EvalRow {
+            epoch,
+            virtual_s,
+            wall_s,
+            primal,
+            dual,
+            gap: primal - dual,
+            test_error,
+            updates,
+            comm_bytes,
+        };
+        self.push(row);
+        row
+    }
+
+    /// Record a primal-only evaluation (SGD/PSGD have no duals).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_primal(
+        &mut self,
+        problem: &Problem,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        w: &[f32],
+        epoch: usize,
+        virtual_s: f64,
+        wall_s: f64,
+        updates: u64,
+        comm_bytes: u64,
+    ) -> EvalRow {
+        let primal = problem.primal(train, w);
+        let test_error = test.map(|t| t.test_error(w)).unwrap_or(f64::NAN);
+        let row = EvalRow {
+            epoch,
+            virtual_s,
+            wall_s,
+            primal,
+            dual: f64::NAN,
+            gap: f64::NAN,
+            test_error,
+            updates,
+            comm_bytes,
+        };
+        self.push(row);
+        row
+    }
+
+    /// Record with an externally computed lower bound (BMRM's cutting
+    /// plane model value stands in for the dual).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_with_bound(
+        &mut self,
+        problem: &Problem,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        w: &[f32],
+        lower_bound: f64,
+        epoch: usize,
+        virtual_s: f64,
+        wall_s: f64,
+        updates: u64,
+        comm_bytes: u64,
+    ) -> EvalRow {
+        let primal = problem.primal(train, w);
+        let test_error = test.map(|t| t.test_error(w)).unwrap_or(f64::NAN);
+        let row = EvalRow {
+            epoch,
+            virtual_s,
+            wall_s,
+            primal,
+            dual: lower_bound,
+            gap: primal - lower_bound,
+            test_error,
+            updates,
+            comm_bytes,
+        };
+        self.push(row);
+        row
+    }
+
+    fn push(&mut self, r: EvalRow) {
+        self.history.push(vec![
+            r.epoch as f64,
+            r.virtual_s,
+            r.wall_s,
+            r.primal,
+            r.dual,
+            r.gap,
+            r.test_error,
+            r.updates as f64,
+            r.comm_bytes as f64,
+        ]);
+    }
+
+    pub fn last_primal(&self) -> Option<f64> {
+        self.history.rows.last().map(|r| r[3])
+    }
+
+    pub fn last_gap(&self) -> Option<f64> {
+        self.history.rows.last().map(|r| r[5])
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRow {
+    pub epoch: usize,
+    pub virtual_s: f64,
+    pub wall_s: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    pub test_error: f64,
+    pub updates: u64,
+    pub comm_bytes: u64,
+}
+
+/// Final result of a training run (all solvers return this).
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub algorithm: String,
+    pub w: Vec<f32>,
+    /// Dual variables where maintained (empty otherwise).
+    pub alpha: Vec<f32>,
+    pub history: Table,
+    pub final_primal: f64,
+    pub final_gap: f64,
+    pub total_updates: u64,
+    pub total_virtual_s: f64,
+    pub total_wall_s: f64,
+    pub comm_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Csr;
+    use crate::losses::{Loss, Regularizer};
+
+    fn setup() -> (Problem, Dataset) {
+        let x = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, -1.0)]]);
+        let ds = Dataset::new("t", x, vec![1.0, -1.0]);
+        (Problem::new(Loss::Hinge, Regularizer::L2, 0.1), ds)
+    }
+
+    #[test]
+    fn due_schedule() {
+        let m = Monitor::new(5);
+        assert!(m.due(1)); // always evaluate first epoch
+        assert!(m.due(5));
+        assert!(m.due(10));
+        assert!(!m.due(3));
+        let m0 = Monitor::new(0);
+        assert!(!m0.due(1));
+    }
+
+    #[test]
+    fn saddle_row_has_gap() {
+        let (p, ds) = setup();
+        let mut m = Monitor::new(1);
+        let w = vec![0.5f32, -0.5];
+        let alpha = vec![0.5f32, -0.5];
+        let row = m.record_saddle(&p, &ds, Some(&ds), &w, &alpha, 1, 0.1, 0.2, 10, 100);
+        assert!((row.gap - (row.primal - row.dual)).abs() < 1e-12);
+        assert!(row.gap >= -1e-9); // weak duality
+        assert_eq!(m.history.len(), 1);
+        assert_eq!(m.last_primal().unwrap(), row.primal);
+    }
+
+    #[test]
+    fn primal_row_has_nan_dual() {
+        let (p, ds) = setup();
+        let mut m = Monitor::new(1);
+        let row = m.record_primal(&p, &ds, None, &[0.0, 0.0], 1, 0.0, 0.0, 0, 0);
+        assert!(row.dual.is_nan());
+        assert!(row.test_error.is_nan());
+        assert!((row.primal - 1.0).abs() < 1e-12); // hinge at margin 0
+    }
+
+    #[test]
+    fn bound_row_uses_bound() {
+        let (p, ds) = setup();
+        let mut m = Monitor::new(1);
+        let row = m.record_with_bound(&p, &ds, None, &[0.0, 0.0], 0.4, 2, 0.0, 0.0, 0, 0);
+        assert!((row.gap - (row.primal - 0.4)).abs() < 1e-12);
+        assert_eq!(m.last_gap().unwrap(), row.gap);
+    }
+
+    #[test]
+    fn history_columns_stable() {
+        let m = Monitor::new(1);
+        assert_eq!(m.history.columns.len(), HISTORY_COLUMNS.len());
+        assert_eq!(m.history.columns[5], "gap");
+    }
+}

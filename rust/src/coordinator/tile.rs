@@ -1,0 +1,24 @@
+//! Tile-batched DSO for dense data — the L1/L2 execution path.
+//!
+//! For dense datasets (ocr/alpha/dna analogs) the scalar sweep is
+//! memory-bound; the TPU-shaped formulation batches each active block's
+//! update into two MXU matmuls (see DESIGN.md §Hardware-Adaptation).
+//! The kernel is authored in Pallas (python/compile/kernels/dso_tile.py),
+//! AOT-lowered to HLO text, and executed here through the PJRT runtime.
+//!
+//! Implemented in full once `runtime::artifacts` are built — see
+//! `train_dso_tile`.
+
+use super::monitor::TrainResult;
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use anyhow::Result;
+
+/// Train DSO with tile-batched block updates through the PJRT runtime.
+pub fn train_dso_tile(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+) -> Result<TrainResult> {
+    crate::runtime::tile_engine::train(cfg, train, test)
+}

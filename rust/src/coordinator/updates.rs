@@ -1,0 +1,349 @@
+//! The scalar saddle-point update kernel — Eq. (8) plus AdaGrad and the
+//! App. B projections. This is DSO's hot path for sparse data: every
+//! worker calls [`sweep_block`] once per inner iteration on its active
+//! block Ω^(q, σ_r(q)).
+//!
+//! Update for a sampled nonzero (i, j) with x = x_ij:
+//!
+//! ```text
+//!   g_w = λ∇φ(w_j)/|Ω̄_j| − α_i·x/m          (descent direction in w_j)
+//!   g_α = h'(α_i)/(m|Ω_i|) − w_j·x/m         (ascent direction in α_i)
+//!   w_j ← Π_B [ w_j − η_w·g_w ]
+//!   α_i ← Π_A [ α_i + η_α·g_α ]
+//! ```
+//!
+//! Both gradients are evaluated at the *old* (w_j, α_i), matching the
+//! simultaneous gradient step analyzed in Lemma 2 / Theorem 1. η is
+//! either the epoch-level η_t = η₀/√t of Algorithm 1 or per-coordinate
+//! AdaGrad (App. B); Π_B is the w box, Π_A the dual feasible set.
+
+use crate::losses::{Loss, Regularizer};
+use crate::optim::step::ADAGRAD_EPS;
+use crate::partition::omega::Entry;
+
+/// Which step rule the sweep applies.
+#[derive(Clone, Copy, Debug)]
+pub enum StepRule {
+    /// Fixed η for this sweep (η_t of Algorithm 1).
+    Fixed(f64),
+    /// AdaGrad with η₀; accumulators supplied per sweep.
+    AdaGrad(f64),
+}
+
+/// Immutable per-sweep context (problem constants and global count
+/// tables shared read-only by every worker).
+pub struct SweepCtx<'a> {
+    pub loss: Loss,
+    pub reg: Regularizer,
+    pub lambda: f64,
+    /// Number of training points m (as f64, used in every update).
+    pub m: f64,
+    /// |Ω_i| per global row.
+    pub row_counts: &'a [u32],
+    /// |Ω̄_j| per global column.
+    pub col_counts: &'a [u32],
+    /// Full label vector.
+    pub y: &'a [f32],
+    /// w box bound B (App. B): iterates clamped to [−B, B].
+    pub w_bound: f64,
+    pub rule: StepRule,
+}
+
+/// Mutable views of the worker's current parameter blocks. `w`/`w_acc`
+/// are the travelling w-block (global coords `w_off ..`), `alpha` /
+/// `a_acc` the worker-resident α block (global coords `a_off ..`).
+pub struct BlockState<'a> {
+    pub w: &'a mut [f32],
+    pub w_acc: &'a mut [f32],
+    pub w_off: usize,
+    pub alpha: &'a mut [f32],
+    pub a_acc: &'a mut [f32],
+    pub a_off: usize,
+}
+
+/// Sweep every entry once, in storage order. Returns #updates.
+pub fn sweep_block(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState) -> usize {
+    match ctx.rule {
+        StepRule::Fixed(eta) => sweep_fixed(entries, ctx, st, eta),
+        StepRule::AdaGrad(eta0) => sweep_adagrad(entries, ctx, st, eta0),
+    }
+}
+
+#[inline]
+fn gradients(ctx: &SweepCtx, e: &Entry, wj: f64, ai: f64) -> (f64, f64) {
+    let x = e.x as f64;
+    let y = ctx.y[e.i as usize] as f64;
+    let gw = ctx.lambda * ctx.reg.grad(wj) / ctx.col_counts[e.j as usize] as f64
+        - ai * x / ctx.m;
+    let ga = ctx.loss.dual_utility_grad(ai, y) / (ctx.m * ctx.row_counts[e.i as usize] as f64)
+        - wj * x / ctx.m;
+    (gw, ga)
+}
+
+fn sweep_fixed(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta: f64) -> usize {
+    let b = ctx.w_bound;
+    // Same in-bounds-by-construction argument as `sweep_adagrad`.
+    for e in entries {
+        let jw = e.j as usize - st.w_off;
+        let ia = e.i as usize - st.a_off;
+        debug_assert!(jw < st.w.len() && ia < st.alpha.len());
+        unsafe {
+            let wj = *st.w.get_unchecked(jw) as f64;
+            let ai = *st.alpha.get_unchecked(ia) as f64;
+            let x = e.x as f64;
+            let y = *ctx.y.get_unchecked(e.i as usize) as f64;
+            let gw = ctx.lambda * ctx.reg.grad(wj)
+                / *ctx.col_counts.get_unchecked(e.j as usize) as f64
+                - ai * x / ctx.m;
+            let ga = ctx.loss.dual_utility_grad(ai, y)
+                / (ctx.m * *ctx.row_counts.get_unchecked(e.i as usize) as f64)
+                - wj * x / ctx.m;
+            *st.w.get_unchecked_mut(jw) = (wj - eta * gw).clamp(-b, b) as f32;
+            *st.alpha.get_unchecked_mut(ia) = ctx.loss.project_alpha(ai + eta * ga, y) as f32;
+        }
+    }
+    entries.len()
+}
+
+fn sweep_adagrad(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f64) -> usize {
+    let b = ctx.w_bound;
+    // Hot path (§Perf): entries come from `OmegaBlocks::build`, whose
+    // indices are in-bounds by construction (validated by
+    // `OmegaBlocks::validate` in tests); unchecked indexing removes 8
+    // bounds checks per update.
+    for e in entries {
+        let jw = e.j as usize - st.w_off;
+        let ia = e.i as usize - st.a_off;
+        debug_assert!(jw < st.w.len() && ia < st.alpha.len());
+        unsafe {
+            let wj = *st.w.get_unchecked(jw) as f64;
+            let ai = *st.alpha.get_unchecked(ia) as f64;
+            let x = e.x as f64;
+            let y = *ctx.y.get_unchecked(e.i as usize) as f64;
+            let gw = ctx.lambda * ctx.reg.grad(wj)
+                / *ctx.col_counts.get_unchecked(e.j as usize) as f64
+                - ai * x / ctx.m;
+            let ga = ctx.loss.dual_utility_grad(ai, y)
+                / (ctx.m * *ctx.row_counts.get_unchecked(e.i as usize) as f64)
+                - wj * x / ctx.m;
+
+            let wa = *st.w_acc.get_unchecked(jw) as f64 + gw * gw;
+            *st.w_acc.get_unchecked_mut(jw) = wa as f32;
+            let eta_w = eta0 / (ADAGRAD_EPS + wa).sqrt();
+
+            let aa = *st.a_acc.get_unchecked(ia) as f64 + ga * ga;
+            *st.a_acc.get_unchecked_mut(ia) = aa as f32;
+            let eta_a = eta0 / (ADAGRAD_EPS + aa).sqrt();
+
+            *st.w.get_unchecked_mut(jw) = (wj - eta_w * gw).clamp(-b, b) as f32;
+            *st.alpha.get_unchecked_mut(ia) =
+                ctx.loss.project_alpha(ai + eta_a * ga, y) as f32;
+        }
+    }
+    entries.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{Loss, Regularizer};
+
+    fn ctx<'a>(
+        row_counts: &'a [u32],
+        col_counts: &'a [u32],
+        y: &'a [f32],
+        rule: StepRule,
+    ) -> SweepCtx<'a> {
+        SweepCtx {
+            loss: Loss::Hinge,
+            reg: Regularizer::L2,
+            lambda: 0.1,
+            m: y.len() as f64,
+            row_counts,
+            col_counts,
+            y,
+            w_bound: Loss::Hinge.w_bound(0.1),
+            rule,
+        }
+    }
+
+    #[test]
+    fn single_update_matches_hand_computation() {
+        let row_counts = [2u32, 1];
+        let col_counts = [1u32, 2];
+        let y = [1.0f32, -1.0];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(0.5));
+        let entries = [Entry { i: 0, j: 1, x: 2.0 }];
+        let mut w = [0.5f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0.25f32];
+        let mut aacc = [0f32];
+        let mut st = BlockState {
+            w: &mut w,
+            w_acc: &mut wacc,
+            w_off: 1,
+            alpha: &mut alpha,
+            a_acc: &mut aacc,
+            a_off: 0,
+        };
+        let n = sweep_block(&entries, &c, &mut st);
+        assert_eq!(n, 1);
+        // m = 2, |Ω̄_1| = 2, |Ω_0| = 2.
+        // g_w = 0.1 * 2*0.5 / 2 − 0.25*2/2 = 0.05 − 0.25 = −0.2
+        // w   = 0.5 − 0.5*(−0.2) = 0.6
+        assert!((w[0] - 0.6).abs() < 1e-6, "w {}", w[0]);
+        // h'(α, y=1) = 1 (hinge). g_α = 1/(2·2) − 0.5·2/2 = 0.25 − 0.5 = −0.25
+        // α = 0.25 + 0.5·(−0.25) = 0.125
+        assert!((alpha[0] - 0.125).abs() < 1e-6, "α {}", alpha[0]);
+    }
+
+    #[test]
+    fn projection_keeps_iterates_in_boxes() {
+        let row_counts = [1u32];
+        let col_counts = [1u32];
+        let y = [1.0f32];
+        // Huge step to force projection.
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1e4));
+        let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let mut w = [0f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0f32];
+        let mut aacc = [0f32];
+        let mut st = BlockState {
+            w: &mut w,
+            w_acc: &mut wacc,
+            w_off: 0,
+            alpha: &mut alpha,
+            a_acc: &mut aacc,
+            a_off: 0,
+        };
+        for _ in 0..20 {
+            sweep_block(&entries, &c, &mut st);
+            let b = c.w_bound as f32;
+            assert!((-b..=b).contains(&st.w[0]), "w {}", st.w[0]);
+            let beta = y[0] * st.alpha[0];
+            assert!((0.0..=1.0).contains(&beta), "β {beta}");
+        }
+    }
+
+    #[test]
+    fn adagrad_accumulators_grow_monotonically() {
+        let row_counts = [1u32];
+        let col_counts = [1u32];
+        let y = [1.0f32];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.1));
+        let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let mut w = [0.3f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0.1f32];
+        let mut aacc = [0f32];
+        let mut prev_w = 0.0;
+        let mut prev_a = 0.0;
+        for _ in 0..10 {
+            let mut st = BlockState {
+                w: &mut w,
+                w_acc: &mut wacc,
+                w_off: 0,
+                alpha: &mut alpha,
+                a_acc: &mut aacc,
+                a_off: 0,
+            };
+            sweep_block(&entries, &c, &mut st);
+            assert!(wacc[0] >= prev_w);
+            assert!(aacc[0] >= prev_a);
+            prev_w = wacc[0];
+            prev_a = aacc[0];
+        }
+        assert!(prev_w > 0.0);
+        assert!(prev_a > 0.0);
+    }
+
+    #[test]
+    fn disjoint_entries_commute() {
+        // Updates on (i,j) and (i',j') with i≠i', j≠j' must commute
+        // exactly — the key observation of Section 3.
+        let row_counts = [1u32, 1];
+        let col_counts = [1u32, 1];
+        let y = [1.0f32, -1.0];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
+        let e0 = Entry { i: 0, j: 0, x: 1.5 };
+        let e1 = Entry { i: 1, j: 1, x: -0.5 };
+        let run = |order: [Entry; 2]| {
+            let mut w = [0.1f32, -0.2];
+            let mut wacc = [0f32; 2];
+            let mut alpha = [0.05f32, -0.3];
+            let mut aacc = [0f32; 2];
+            let mut st = BlockState {
+                w: &mut w,
+                w_acc: &mut wacc,
+                w_off: 0,
+                alpha: &mut alpha,
+                a_acc: &mut aacc,
+                a_off: 0,
+            };
+            sweep_block(&order, &c, &mut st);
+            (w, alpha, wacc, aacc)
+        };
+        let a = run([e0, e1]);
+        let b = run([e1, e0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fixed_step_deterministic() {
+        let row_counts = [2u32, 2];
+        let col_counts = [2u32, 2];
+        let y = [1.0f32, -1.0];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(0.1));
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.0 },
+            Entry { i: 0, j: 1, x: 0.5 },
+            Entry { i: 1, j: 0, x: -1.0 },
+            Entry { i: 1, j: 1, x: 2.0 },
+        ];
+        let run = || {
+            let mut w = [0f32; 2];
+            let mut wacc = [0f32; 2];
+            let mut alpha = [0f32; 2];
+            let mut aacc = [0f32; 2];
+            let mut st = BlockState {
+                w: &mut w,
+                w_acc: &mut wacc,
+                w_off: 0,
+                alpha: &mut alpha,
+                a_acc: &mut aacc,
+                a_off: 0,
+            };
+            for _ in 0..5 {
+                sweep_block(&entries, &c, &mut st);
+            }
+            (w, alpha)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn square_loss_alpha_unconstrained() {
+        let row_counts = [1u32];
+        let col_counts = [1u32];
+        let y = [3.0f32];
+        let mut c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1.0));
+        c.loss = Loss::Square;
+        let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let mut w = [0f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0f32];
+        let mut aacc = [0f32];
+        let mut st = BlockState {
+            w: &mut w,
+            w_acc: &mut wacc,
+            w_off: 0,
+            alpha: &mut alpha,
+            a_acc: &mut aacc,
+            a_off: 0,
+        };
+        sweep_block(&entries, &c, &mut st);
+        // g_α = (y − α)/m − wx/m = 3/1 − 0 = 3 → α = 3 (no clamp).
+        assert!((alpha[0] - 3.0).abs() < 1e-6);
+    }
+}

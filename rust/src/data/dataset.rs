@@ -1,0 +1,177 @@
+//! Labeled dataset container + train/test splitting + summary stats
+//! (the quantities reported in the paper's Table 2).
+
+use super::sparse::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// A binary-classification (or regression) dataset: X is m×d CSR,
+/// labels are ±1 for classification (f32 targets for square loss).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Csr,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Csr, y: Vec<f32>) -> Dataset {
+        assert_eq!(x.rows, y.len(), "labels/rows mismatch");
+        Dataset { name: name.into(), x, y }
+    }
+
+    pub fn m(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Summary statistics matching the columns of the paper's Table 2.
+    pub fn stats(&self) -> DatasetStats {
+        let pos = self.y.iter().filter(|&&v| v > 0.0).count();
+        let neg = self.y.len() - pos;
+        DatasetStats {
+            name: self.name.clone(),
+            m: self.m(),
+            d: self.d(),
+            nnz: self.nnz(),
+            density_pct: 100.0 * self.x.density(),
+            pos_neg_ratio: if neg > 0 { pos as f64 / neg as f64 } else { f64::INFINITY },
+        }
+    }
+
+    /// Deterministic shuffled train/test split.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut order: Vec<usize> = (0..self.m()).collect();
+        let mut rng = Xoshiro256::new(seed);
+        rng.shuffle(&mut order);
+        let n_test = ((self.m() as f64) * test_frac).round() as usize;
+        let (test_rows, train_rows) = order.split_at(n_test);
+        let mk = |rows: &[usize], tag: &str| {
+            Dataset::new(
+                format!("{}-{tag}", self.name),
+                self.x.select_rows(rows),
+                rows.iter().map(|&i| self.y[i]).collect(),
+            )
+        };
+        (mk(train_rows, "train"), mk(test_rows, "test"))
+    }
+
+    /// 0/1 test error of a linear model sign(⟨w, x⟩).
+    pub fn test_error(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.d());
+        let mut wrong = 0usize;
+        for i in 0..self.m() {
+            let pred = self.x.row_dot(i, w);
+            let yhat = if pred >= 0.0 { 1.0 } else { -1.0 };
+            if (yhat as f32 - self.y[i]).abs() > 1e-6 {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / self.m().max(1) as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub name: String,
+    pub m: usize,
+    pub d: usize,
+    pub nnz: usize,
+    pub density_pct: f64,
+    pub pos_neg_ratio: f64,
+}
+
+impl DatasetStats {
+    pub fn header() -> String {
+        format!(
+            "{:<16} {:>9} {:>9} {:>11} {:>9} {:>8}",
+            "name", "m", "d", "|Omega|", "s(%)", "m+:m-"
+        )
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<16} {:>9} {:>9} {:>11} {:>9.4} {:>8.2}",
+            self.name, self.m, self.d, self.nnz, self.density_pct, self.pos_neg_ratio
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Csr;
+
+    fn toy() -> Dataset {
+        let x = Csr::from_rows(
+            2,
+            vec![
+                vec![(0, 1.0)],
+                vec![(1, 1.0)],
+                vec![(0, -1.0)],
+                vec![(1, -1.0)],
+                vec![(0, 2.0), (1, 0.5)],
+                vec![(0, -2.0)],
+            ],
+        );
+        let y = vec![1.0, 1.0, -1.0, -1.0, 1.0, -1.0];
+        Dataset::new("toy", x, y)
+    }
+
+    #[test]
+    fn stats_fields() {
+        let d = toy();
+        let s = d.stats();
+        assert_eq!(s.m, 6);
+        assert_eq!(s.d, 2);
+        assert_eq!(s.nnz, 7);
+        assert!((s.pos_neg_ratio - 1.0).abs() < 1e-12);
+        assert!(s.density_pct > 0.0 && s.density_pct <= 100.0);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let (tr, te) = d.split(0.33, 1);
+        assert_eq!(tr.m() + te.m(), d.m());
+        assert_eq!(te.m(), 2);
+        assert_eq!(tr.d(), d.d());
+        // Determinism.
+        let (tr2, te2) = d.split(0.33, 1);
+        assert_eq!(tr.y, tr2.y);
+        assert_eq!(te.y, te2.y);
+        // Different seed shuffles differently (with high probability).
+        let (tr3, _) = d.split(0.33, 2);
+        assert!(tr.y != tr3.y || tr.x != tr3.x || d.m() < 4);
+    }
+
+    #[test]
+    fn test_error_perfect_and_flipped() {
+        let d = toy();
+        // w = (1, 1) classifies everything correctly.
+        assert_eq!(d.test_error(&[1.0, 1.0]), 0.0);
+        // Flipped model gets everything wrong.
+        assert_eq!(d.test_error(&[-1.0, -1.0]), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels/rows mismatch")]
+    fn mismatched_labels_panics() {
+        let x = Csr::from_rows(1, vec![vec![(0, 1.0)]]);
+        Dataset::new("bad", x, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn header_and_row_render() {
+        let s = toy().stats();
+        assert!(DatasetStats::header().contains("|Omega|"));
+        assert!(s.row().contains("toy"));
+    }
+}

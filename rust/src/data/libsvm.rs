@@ -1,0 +1,190 @@
+//! LIBSVM text format reader/writer.
+//!
+//! The paper's datasets (real-sim, news20, kdda, …) are distributed in
+//! this format; users can point the CLI at real files, and the synthetic
+//! generators can export to it for interchange with other tools.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with
+//! 1-based feature indices. `#` starts a comment.
+
+use super::dataset::Dataset;
+use super::sparse::Csr;
+use std::io::{BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+/// Parse from a string. `min_dim` lets callers force a dimensionality
+/// larger than the max observed index (e.g. to align train/test).
+pub fn parse(name: &str, text: &str, min_dim: usize) -> Result<Dataset, LibsvmError> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_col: usize = 0;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label '{label_tok}'"),
+        })?;
+        let mut row = Vec::new();
+        for tok in parts {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature token '{tok}'"),
+            })?;
+            let idx: usize = idx_s.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad index '{idx_s}'"),
+            })?;
+            if idx == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based; found 0".into(),
+                });
+            }
+            let val: f32 = val_s.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad value '{val_s}'"),
+            })?;
+            max_col = max_col.max(idx);
+            row.push(((idx - 1) as u32, val));
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+    let dim = max_col.max(min_dim);
+    Ok(Dataset::new(name, Csr::from_rows(dim, rows), labels))
+}
+
+pub fn read(path: &Path, min_dim: usize) -> Result<Dataset, LibsvmError> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "libsvm".to_string());
+    // Stream to keep memory proportional to the data, not 2x.
+    let f = std::fs::File::open(path)?;
+    let mut reader = BufReader::new(f);
+    let mut text = String::new();
+    reader.read_to_string(&mut text)?;
+    parse(&name, &text, min_dim)
+}
+
+use std::io::Read as _;
+
+/// Serialize a dataset to libsvm text.
+pub fn emit(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for i in 0..ds.m() {
+        let y = ds.y[i];
+        if y == y.trunc() {
+            out.push_str(&format!("{}", y as i64));
+        } else {
+            out.push_str(&format!("{y}"));
+        }
+        let (idx, val) = ds.x.row(i);
+        for k in 0..idx.len() {
+            out.push_str(&format!(" {}:{}", idx[k] + 1, val[k]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn write(ds: &Dataset, path: &Path) -> Result<(), LibsvmError> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(emit(ds).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let ds = parse("t", text, 0).unwrap();
+        assert_eq!(ds.m(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.row(0).0, &[0, 2]);
+        assert_eq!(ds.x.row(1).1, &[2.0]);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        let text = "# header\n\n1 1:1 # trailing\n";
+        let ds = parse("t", text, 0).unwrap();
+        assert_eq!(ds.m(), 1);
+        assert_eq!(ds.nnz(), 1);
+    }
+
+    #[test]
+    fn parse_min_dim() {
+        let ds = parse("t", "1 1:1\n", 10).unwrap();
+        assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(parse("t", "1 0:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_tokens() {
+        assert!(parse("t", "abc 1:1\n", 0).is_err());
+        assert!(parse("t", "1 12\n", 0).is_err());
+        assert!(parse("t", "1 x:1\n", 0).is_err());
+        assert!(parse("t", "1 1:y\n", 0).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.5 3:1.5\n-1 2:2\n1 1:-3\n";
+        let ds = parse("t", text, 0).unwrap();
+        let ds2 = parse("t", &emit(&ds), 0).unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x, ds2.x);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dso_libsvm_test");
+        let path = dir.join("d.libsvm");
+        let ds = parse("t", "1 1:1 2:0.25\n-1 2:-1\n", 0).unwrap();
+        write(&ds, &path).unwrap();
+        let ds2 = read(&path, 0).unwrap();
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds2.name, "d");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fractional_labels_roundtrip() {
+        let ds = parse("t", "0.5 1:1\n", 0).unwrap();
+        let ds2 = parse("t", &emit(&ds), 0).unwrap();
+        assert_eq!(ds2.y, vec![0.5]);
+    }
+
+    #[test]
+    fn parse_error_reports_line() {
+        let err = parse("t", "1 1:1\nbogus\n", 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2"), "{msg}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: sparse matrix storage, LIBSVM interchange, synthetic
+//! dataset generators, and the Table 2 dataset registry.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod registry;
+pub mod sparse;
+pub mod synth;
+
+pub use dataset::{Dataset, DatasetStats};
+pub use sparse::{Csc, Csr};

@@ -1,0 +1,237 @@
+//! Named dataset recipes mirroring the paper's Table 2, scaled down so
+//! every experiment runs on one box in seconds-to-minutes. Each recipe
+//! preserves the *ratios* that matter to DSO: d/m, density and its skew,
+//! dense-vs-sparse storage, and the m+:m− label balance. The `scale`
+//! multiplier lets experiments (and the perf pass) grow them.
+//!
+//! Paper Table 2 for reference:
+//!   reuters-ccat  m=23149   d=47236   s=0.161%    m+:m-=0.87   (sparse)
+//!   real-sim      m=57763   d=20958   s=0.245%    m+:m-=0.44   (sparse)
+//!   news20        m=15960   d=1.36M   s=0.033%    m+:m-=1.00   (sparse)
+//!   worm          m=0.82M   d=804     s=25.12%    m+:m-=0.06   (block-dense)
+//!   alpha         m=0.4M    d=500     s=100%      m+:m-=0.99   (dense)
+//!   kdda          m=8.41M   d=20.22M  s=1.82e-4%  m+:m-=6.56   (ultra-sparse)
+//!   kddb          m=19.26M  d=29.89M  s=1.02e-4%  m+:m-=7.91   (ultra-sparse)
+//!   ocr           m=2.8M    d=1156    s=100%      m+:m-=0.96   (dense, redundant)
+//!   dna           m=40M     d=800     s=25%       m+:m-=3e-3   (block-dense)
+
+use super::dataset::Dataset;
+use super::synth::{DenseSpec, SparseSpec};
+
+/// All dataset names in paper order.
+pub const NAMES: &[&str] = &[
+    "reuters-ccat",
+    "real-sim",
+    "news20",
+    "worm",
+    "alpha",
+    "kdda",
+    "kddb",
+    "ocr",
+    "dna",
+];
+
+/// Which datasets the paper uses in the serial experiments (Figs 6–45).
+pub const SERIAL_NAMES: &[&str] = &["reuters-ccat", "real-sim", "news20", "worm", "alpha"];
+
+/// Which datasets the paper uses in the parallel experiments (Figs 46–77).
+pub const PARALLEL_NAMES: &[&str] = &["kdda", "kddb", "ocr", "dna"];
+
+/// Generate the named dataset at `scale` (1.0 = default reduced size).
+/// Returns an error for unknown names listing the valid ones.
+pub fn generate(name: &str, scale: f64, seed: u64) -> Result<Dataset, String> {
+    let s = |x: usize| ((x as f64 * scale).round() as usize).max(8);
+    let ds = match name {
+        // Text-like sparse datasets. Row counts reduced ~10–20x, feature
+        // space reduced to keep d/m and density(%) close to Table 2.
+        "reuters-ccat" => SparseSpec {
+            name: name.into(),
+            m: s(2400),
+            d: s(4800),
+            nnz_per_row: 7.7, // -> density ≈ 0.161%
+            zipf_s: 1.0,
+            label_noise: 0.05,
+            pos_frac: 0.465, // m+:m- = 0.87
+            seed,
+        }
+        .generate(),
+        "real-sim" => SparseSpec {
+            name: name.into(),
+            m: s(5800),
+            d: s(2100),
+            nnz_per_row: 5.1, // -> density ≈ 0.245%
+            zipf_s: 0.9,
+            label_noise: 0.05,
+            pos_frac: 0.306, // 0.44
+            seed,
+        }
+        .generate(),
+        "news20" => SparseSpec {
+            name: name.into(),
+            m: s(1600),
+            d: s(27000),
+            nnz_per_row: 8.9, // -> density ≈ 0.033%
+            zipf_s: 1.05,
+            label_noise: 0.05,
+            pos_frac: 0.5, // 1.00
+            seed,
+        }
+        .generate(),
+        "worm" => DenseSpec {
+            name: name.into(),
+            m: s(8000),
+            d: s(160),
+            density: 0.2512,
+            label_noise: 0.03,
+            pos_frac: 0.057, // 0.06
+            prototypes: 64,
+            seed,
+        }
+        .generate(),
+        "alpha" => DenseSpec {
+            name: name.into(),
+            m: s(4000),
+            d: s(100),
+            density: 1.0,
+            label_noise: 0.08,
+            pos_frac: 0.497, // 0.99
+            prototypes: 256,
+            seed,
+        }
+        .generate(),
+        // Ultra-sparse kdd datasets: huge d relative to m, few nnz/row.
+        "kdda" => SparseSpec {
+            name: name.into(),
+            m: s(8400),
+            d: s(20200),
+            nnz_per_row: 36.0, // paper: ~37 nnz/row
+            zipf_s: 1.1,
+            label_noise: 0.05,
+            pos_frac: 0.868, // 6.56
+            seed,
+        }
+        .generate(),
+        "kddb" => SparseSpec {
+            name: name.into(),
+            m: s(9600),
+            d: s(15000),
+            nnz_per_row: 30.0,
+            zipf_s: 1.1,
+            label_noise: 0.05,
+            pos_frac: 0.888, // 7.91
+            seed,
+        }
+        .generate(),
+        // Dense + highly redundant (few prototypes) — the regime where
+        // the paper reports PSGD winning and BMRM being time-competitive.
+        "ocr" => DenseSpec {
+            name: name.into(),
+            m: s(7000),
+            d: s(289),
+            density: 1.0,
+            label_noise: 0.06,
+            pos_frac: 0.49, // 0.96
+            prototypes: 24,
+            seed,
+        }
+        .generate(),
+        "dna" => DenseSpec {
+            name: name.into(),
+            m: s(16000),
+            d: s(200),
+            density: 0.25,
+            label_noise: 0.01,
+            pos_frac: 0.003, // 3e-3 — extreme imbalance
+            prototypes: 48,
+            seed,
+        }
+        .generate(),
+        other => {
+            return Err(format!(
+                "unknown dataset '{other}'; valid: {}",
+                NAMES.join(", ")
+            ))
+        }
+    };
+    Ok(ds)
+}
+
+/// Whether the named dataset is dense enough for the tile (PJRT kernel)
+/// execution path to be the natural choice.
+pub fn is_dense(name: &str) -> bool {
+    matches!(name, "worm" | "alpha" | "ocr" | "dna")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_generate_small() {
+        for &n in NAMES {
+            let ds = generate(n, 0.05, 1).unwrap_or_else(|e| panic!("{n}: {e}"));
+            assert!(ds.m() >= 8, "{n}");
+            assert!(ds.d() >= 8, "{n}");
+            ds.x.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_options() {
+        let e = generate("nope", 1.0, 1).unwrap_err();
+        assert!(e.contains("real-sim"));
+    }
+
+    #[test]
+    fn density_ratios_roughly_match_table2() {
+        // (name, expected density %, tolerance factor)
+        for (name, target_pct) in
+            [("reuters-ccat", 0.161), ("real-sim", 0.245), ("news20", 0.033)]
+        {
+            let ds = generate(name, 0.25, 2).unwrap();
+            let s = ds.stats().density_pct;
+            assert!(
+                s / target_pct < 5.0 && target_pct / s < 5.0,
+                "{name}: density {s}% vs target {target_pct}%"
+            );
+        }
+        let ocr = generate("ocr", 0.1, 2).unwrap();
+        assert!((ocr.stats().density_pct - 100.0).abs() < 1e-6);
+        let dna = generate("dna", 0.25, 2).unwrap();
+        assert!((dna.stats().density_pct - 25.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn label_ratios_roughly_match_table2() {
+        for (name, ratio) in [("kdda", 6.56), ("real-sim", 0.44), ("news20", 1.0)] {
+            let ds = generate(name, 0.25, 3).unwrap();
+            let r = ds.stats().pos_neg_ratio;
+            assert!(
+                (r / ratio) < 1.6 && (ratio / r) < 1.6,
+                "{name}: ratio {r} vs {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_scales_m() {
+        let a = generate("real-sim", 0.1, 1).unwrap();
+        let b = generate("real-sim", 0.2, 1).unwrap();
+        assert!(b.m() > (a.m() as f64 * 1.7) as usize);
+    }
+
+    #[test]
+    fn dense_flags() {
+        assert!(is_dense("ocr"));
+        assert!(is_dense("dna"));
+        assert!(!is_dense("kdda"));
+        assert!(!is_dense("real-sim"));
+    }
+
+    #[test]
+    fn serial_and_parallel_subsets_are_known() {
+        for &n in SERIAL_NAMES.iter().chain(PARALLEL_NAMES) {
+            assert!(NAMES.contains(&n), "{n}");
+        }
+    }
+}

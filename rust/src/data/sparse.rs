@@ -1,0 +1,338 @@
+//! Sparse matrix storage.
+//!
+//! The training data `X` (m × d, stacked xᵢᵀ) is stored in CSR form —
+//! the DSO worker loop iterates rows within an (I_q × J_r) block — with
+//! an optional CSC view for column-wise statistics (|Ω̄_j|, needed by
+//! the regularizer scaling in Eq. 6/8).
+
+/// Compressed sparse row matrix (f32 values, usize indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer, len = rows + 1.
+    pub indptr: Vec<usize>,
+    /// Column index per nonzero, len = nnz. Sorted within each row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Build from per-row (col, value) lists. Columns are sorted and
+    /// duplicate columns within a row are summed.
+    pub fn from_rows(cols: usize, rows: Vec<Vec<(u32, f32)>>) -> Csr {
+        let nrows = rows.len();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for mut row in rows {
+            row.sort_by_key(|&(c, _)| c);
+            let mut last: Option<u32> = None;
+            for (c, v) in row {
+                assert!((c as usize) < cols, "column {c} out of bounds ({cols})");
+                if last == Some(c) {
+                    *values.last_mut().unwrap() += v;
+                } else {
+                    indices.push(c);
+                    values.push(v);
+                    last = Some(c);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: nrows, cols, indptr, indices, values }
+    }
+
+    /// Row slice as (indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// ⟨w, x_i⟩ for a dense w.
+    pub fn row_dot(&self, i: usize, w: &[f32]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut s = 0.0f64;
+        for k in 0..idx.len() {
+            s += val[k] as f64 * w[idx[k] as usize] as f64;
+        }
+        s
+    }
+
+    /// Number of nonzeros in each column (|Ω̄_j| in the paper).
+    pub fn col_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Transpose into CSC (same data viewed column-major).
+    pub fn to_csc(&self) -> Csc {
+        let mut counts = vec![0usize; self.cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        let mut indptr = vec![0usize; self.cols + 1];
+        for j in 0..self.cols {
+            indptr[j + 1] = indptr[j] + counts[j];
+        }
+        let mut pos = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                let j = idx[k] as usize;
+                indices[pos[j]] = i as u32;
+                values[pos[j]] = val[k];
+                pos[j] += 1;
+            }
+        }
+        Csc { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Dense row-major copy (for the dense/tile execution path).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                out[i * self.cols + idx[k] as usize] = val[k];
+            }
+        }
+        out
+    }
+
+    /// Dense sub-block copy, rows [r0, r1) × cols [c0, c1), row-major.
+    pub fn dense_block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Vec<f32> {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let (h, w) = (r1 - r0, c1 - c0);
+        let mut out = vec![0f32; h * w];
+        for i in r0..r1 {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                let j = idx[k] as usize;
+                if j >= c0 && j < c1 {
+                    out[(i - r0) * w + (j - c0)] = val[k];
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract the sub-matrix of the given rows (keeps all columns).
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &i in rows {
+            let (idx, val) = self.row(i);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+        Csr { rows: rows.len(), cols: self.cols, indptr, indices, values }
+    }
+
+    /// Scale every row to unit L2 norm (common preprocessing for the
+    /// paper's text datasets).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.rows {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            let norm: f64 =
+                self.values[s..e].iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for v in &mut self.values[s..e] {
+                    *v = (*v as f64 / norm) as f32;
+                }
+            }
+        }
+    }
+
+    /// Structural validation (sorted, in-bounds, monotone indptr).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.nnz() {
+            return Err("indptr endpoints".into());
+        }
+        for i in 0..self.rows {
+            if self.indptr[i] > self.indptr[i + 1] {
+                return Err(format!("indptr not monotone at {i}"));
+            }
+            let (idx, _) = self.row(i);
+            for k in 0..idx.len() {
+                if idx[k] as usize >= self.cols {
+                    return Err(format!("col out of bounds row {i}"));
+                }
+                if k > 0 && idx[k - 1] >= idx[k] {
+                    return Err(format!("row {i} not strictly sorted"));
+                }
+            }
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length".into());
+        }
+        Ok(())
+    }
+}
+
+/// Compressed sparse column matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    /// Row index per nonzero, sorted within each column.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csc {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.indptr[j + 1] - self.indptr[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [0, 3, 4]]
+        Csr::from_rows(
+            3,
+            vec![vec![(0, 1.0), (2, 2.0)], vec![], vec![(2, 4.0), (1, 3.0)]],
+        )
+    }
+
+    #[test]
+    fn from_rows_sorts_and_counts() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(2).0, &[1, 2]);
+        assert_eq!(m.row(2).1, &[3.0, 4.0]);
+        assert_eq!(m.row_nnz(1), 0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_columns_summed() {
+        let m = Csr::from_rows(2, vec![vec![(1, 1.0), (1, 2.5)], vec![(0, 1.0)]]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row(0).1, &[3.5]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn row_dot_matches_dense() {
+        let m = sample();
+        let w = [2.0f32, -1.0, 0.5];
+        assert!((m.row_dot(0, &w) - (1.0 * 2.0 + 2.0 * 0.5)).abs() < 1e-9);
+        assert_eq!(m.row_dot(1, &w), 0.0);
+        assert!((m.row_dot(2, &w) - (3.0 * -1.0 + 4.0 * 0.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn col_counts_match() {
+        let m = sample();
+        assert_eq!(m.col_counts(), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn csc_roundtrip_structure() {
+        let m = sample();
+        let c = m.to_csc();
+        assert_eq!(c.nnz(), m.nnz());
+        assert_eq!(c.col(2).0, &[0, 2]);
+        assert_eq!(c.col(2).1, &[2.0, 4.0]);
+        assert_eq!(c.col_nnz(0), 1);
+        assert_eq!(c.col_nnz(1), 1);
+    }
+
+    #[test]
+    fn dense_copy() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_block_copy() {
+        let m = sample();
+        let b = m.dense_block(1, 3, 1, 3);
+        assert_eq!(b, vec![0.0, 0.0, 3.0, 4.0]);
+        let full = m.dense_block(0, 3, 0, 3);
+        assert_eq!(full, m.to_dense());
+        let empty = m.dense_block(0, 0, 0, 0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(0).0, &[1, 2]);
+        assert_eq!(s.row(1).0, &[0, 2]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut m = sample();
+        m.normalize_rows();
+        for i in [0usize, 2] {
+            let (_, vals) = m.row(i);
+            let n: f64 = vals.iter().map(|&v| (v as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-6, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let mut m = sample();
+        m.indices.swap(0, 1);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn density() {
+        let m = sample();
+        assert!((m.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,112 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * step-size rule (Algorithm 1's η₀/√t vs const vs the paper's
+//!   experimental AdaGrad),
+//! * bulk-synchronous vs asynchronous (NOMAD-style, §6) coordination,
+//! * tile_iters — the batched-steps-per-visit knob of the tile engine
+//!   (only when AOT artifacts are built),
+//! * DCD warm start on/off (App. B).
+
+use super::{cfg_for, run_and_save, ExpOptions};
+use crate::config::{Algorithm, StepKind};
+use anyhow::Result;
+
+pub const LAMBDA: f64 = 1e-4;
+pub const BASE_EPOCHS: usize = 40;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let ds = crate::data::registry::generate("real-sim", opts.scale, opts.seed)
+        .map_err(anyhow::Error::msg)?;
+    let (train, test) = ds.split(0.2, opts.seed);
+    let epochs = opts.epochs(BASE_EPOCHS);
+    println!("\nAblation — DSO design choices on real-sim (λ={LAMBDA}, {epochs} epochs)");
+    println!(
+        "{:<26} {:>12} {:>12} {:>10} {:>12}",
+        "variant", "objective", "gap", "test_err", "virtual_s"
+    );
+
+    let mut report = |label: &str, r: &crate::coordinator::TrainResult| {
+        println!(
+            "{:<26} {:>12.6} {:>12.3e} {:>10.4} {:>12.4}",
+            label,
+            r.final_primal,
+            r.final_gap,
+            r.history.col("test_error").and_then(|c| c.last().copied()).unwrap_or(f64::NAN),
+            r.total_virtual_s
+        );
+    };
+
+    // Step-size rules.
+    for (label, step, eta0) in [
+        ("step=adagrad (paper)", StepKind::AdaGrad, 0.1),
+        ("step=invsqrt (thm 1)", StepKind::InvSqrt, 1.0),
+        ("step=const", StepKind::Const, 0.05),
+    ] {
+        let mut cfg = cfg_for(Algorithm::Dso, "real-sim", LAMBDA, epochs, 2, 2, opts);
+        cfg.optim.step = step;
+        cfg.optim.eta0 = eta0;
+        let r = run_and_save("ablation", &label.replace([' ', '='], "_"), &cfg, &train, Some(&test), &opts.out_dir)?;
+        report(label, &r);
+    }
+
+    // Sync vs async coordination.
+    for (label, algo) in [
+        ("coord=bulk-sync", Algorithm::Dso),
+        ("coord=async (NOMAD)", Algorithm::DsoAsync),
+    ] {
+        let cfg = cfg_for(algo, "real-sim", LAMBDA, epochs, 2, 2, opts);
+        let r = run_and_save("ablation", &label.replace([' ', '='], "_"), &cfg, &train, Some(&test), &opts.out_dir)?;
+        report(label, &r);
+    }
+
+    // DCD warm start.
+    {
+        let mut cfg = cfg_for(Algorithm::Dso, "real-sim", LAMBDA, epochs, 2, 2, opts);
+        cfg.optim.dcd_init = true;
+        let r = run_and_save("ablation", "dcd_init_on", &cfg, &train, Some(&test), &opts.out_dir)?;
+        report("dcd-init=on (App. B)", &r);
+    }
+
+    // tile_iters (dense path), if artifacts are available.
+    if crate::runtime::Manifest::load_default().is_ok() {
+        let dense = crate::data::registry::generate("ocr", (opts.scale * 0.5).max(0.02), opts.seed)
+            .map_err(anyhow::Error::msg)?;
+        let (dtrain, dtest) = dense.split(0.2, opts.seed);
+        println!("\n  tile_iters ablation (ocr analog, tile/PJRT engine):");
+        for iters in [1usize, 2, 4, 8, 16] {
+            let mut cfg =
+                cfg_for(Algorithm::Dso, "ocr", LAMBDA, opts.epochs(15), 2, 1, opts);
+            cfg.cluster.mode = crate::config::ExecMode::Tile;
+            cfg.cluster.tile_iters = iters;
+            let r = run_and_save(
+                "ablation",
+                &format!("tile_iters_{iters}"),
+                &cfg,
+                &dtrain,
+                Some(&dtest),
+                &opts.out_dir,
+            )?;
+            report(&format!("tile_iters={iters}"), &r);
+        }
+    } else {
+        println!("  (tile_iters ablation skipped — run `make artifacts`)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_quick_runs() {
+        let mut opts = ExpOptions::quick();
+        opts.out_dir = std::env::temp_dir().join("dso-ablation-test");
+        run(&opts).unwrap();
+        // Step rules, coordination, and dcd CSVs all written.
+        let dir = opts.out_dir.join("ablation");
+        let n = std::fs::read_dir(&dir).unwrap().count();
+        assert!(n >= 6, "only {n} ablation outputs in {dir:?}");
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

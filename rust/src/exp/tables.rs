@@ -1,0 +1,93 @@
+//! Table 1 (loss conjugates — verified numerically) and Table 2
+//! (dataset summary — regenerated from the registry).
+
+use super::ExpOptions;
+use crate::data::registry;
+use crate::losses::Loss;
+use anyhow::Result;
+
+/// Table 1: print the loss/dual pairs and *verify* them numerically —
+/// max Fenchel–Young violation and biconjugation error over a grid.
+pub fn table1(_opts: &ExpOptions) -> Result<()> {
+    println!("\nTable 1 — losses and their duals (numerically verified)");
+    println!(
+        "{:<10} {:<28} {:<34} {:>14} {:>14}",
+        "name", "l(u)", "-l*(-a)", "max FY viol", "biconj err"
+    );
+    let specs = [
+        (Loss::Hinge, "max(1 - y u, 0)", "y a  for  y a in [0, 1]"),
+        (Loss::Logistic, "log(1 + exp(-y u))", "-[b ln b + (1-b) ln(1-b)], b = y a"),
+        (Loss::Square, "(u - y)^2 / 2", "y a - a^2/2"),
+    ];
+    for (loss, prim, dual) in specs {
+        let mut max_fy: f64 = 0.0; // FY inequality violations (should be ~0)
+        let mut max_bc: f64 = 0.0; // biconjugation gap
+        for &y in &[1.0, -1.0] {
+            for iu in -40..=40 {
+                let u = iu as f64 * 0.1;
+                let mut sup = f64::NEG_INFINITY;
+                for k in 0..=2000 {
+                    let alpha = match loss {
+                        // α* = y − u ranges over ±(1+4) on this u grid.
+                        Loss::Square => -6.0 + 12.0 * k as f64 / 2000.0,
+                        _ => y * (k as f64 / 2000.0),
+                    };
+                    let v = loss.dual_utility(alpha, y) - u * alpha;
+                    if v > sup {
+                        sup = v;
+                    }
+                    max_fy = max_fy.max(v - loss.primal(u, y));
+                }
+                max_bc = max_bc.max((loss.primal(u, y) - sup).abs());
+            }
+        }
+        println!("{:<10} {:<28} {:<34} {:>14.2e} {:>14.2e}", loss.name(), prim, dual, max_fy, max_bc);
+        anyhow::ensure!(max_fy < 1e-9, "{}: Fenchel–Young violated", loss.name());
+        anyhow::ensure!(max_bc < 5e-3, "{}: biconjugation off", loss.name());
+    }
+    Ok(())
+}
+
+/// Table 2: dataset summary statistics from the registry generators.
+pub fn table2(opts: &ExpOptions) -> Result<()> {
+    println!("\nTable 2 — dataset summary (registry @ scale {})", opts.scale);
+    println!("{}", crate::data::DatasetStats::header());
+    let mut table = crate::util::csv::Table::new(&["m", "d", "nnz", "density_pct", "pos_neg"]);
+    for &name in registry::NAMES {
+        let ds = registry::generate(name, opts.scale, opts.seed).map_err(anyhow::Error::msg)?;
+        let s = ds.stats();
+        println!("{}", s.row());
+        table.push(vec![
+            s.m as f64,
+            s.d as f64,
+            s.nnz as f64,
+            s.density_pct,
+            s.pos_neg_ratio,
+        ]);
+    }
+    let dir = opts.out_dir.join("table2");
+    std::fs::create_dir_all(&dir)?;
+    table.write_csv(&dir.join("datasets.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_verifies() {
+        table1(&ExpOptions::quick()).unwrap();
+    }
+
+    #[test]
+    fn table2_writes_csv() {
+        let mut opts = ExpOptions::quick();
+        opts.out_dir = std::env::temp_dir().join("dso-table2-test");
+        table2(&opts).unwrap();
+        let t =
+            crate::util::csv::Table::read_csv(&opts.out_dir.join("table2/datasets.csv")).unwrap();
+        assert_eq!(t.len(), registry::NAMES.len());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,32 @@
+//! # DSO — Distributed Stochastic Optimization of the Regularized Risk
+//!
+//! A production-quality reproduction of Matsushima, Yun & Vishwanathan
+//! (2014): regularized risk minimization rewritten as the saddle-point
+//! problem `max_α min_w f(w, α)` (Eq. 6), solved by a distributed
+//! stochastic optimizer whose workers update disjoint (w_j, α_i) blocks
+//! in parallel and rotate ownership of `w` around a ring (Algorithm 1).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: data/partition/network
+//!   substrates, the DSO engine, the paper's baselines (SGD, PSGD,
+//!   BMRM), experiment drivers for every figure/table, CLI.
+//! * **L2/L1 (python/, build-time only)** — a JAX model plus a Pallas
+//!   tile-update kernel, AOT-lowered to HLO text and executed from Rust
+//!   through the PJRT CPU client (`runtime`).
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod losses;
+pub mod net;
+pub mod optim;
+pub mod partition;
+pub mod runtime;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

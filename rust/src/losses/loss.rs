@@ -1,0 +1,387 @@
+//! Loss functions and their Fenchel duals (paper Table 1).
+//!
+//! For each supported loss ℓ_i(u) = ℓ(u, y_i) we need, besides the
+//! primal value/derivative, the *dual utility*
+//!
+//! ```text
+//!     h(α, y) := −ℓ*(−α)
+//! ```
+//!
+//! (ℓ* the Fenchel–Legendre conjugate of ℓ(·, y)), its derivative
+//! h'(α, y) — which is the `−∇ℓ*(−α_i)` appearing in update (8) — and
+//! the dual feasible interval onto which α_i is projected (App. B).
+//!
+//! Table 1 with our parameterization (β := y·α ∈ [0, 1]):
+//!
+//! ```text
+//!   hinge:    ℓ = max(0, 1−yu)        h = y·α          β ∈ [0, 1]
+//!   logistic: ℓ = log(1+exp(−yu))     h = H(β)         β ∈ (0, 1)
+//!             (H the binary entropy −β ln β − (1−β) ln(1−β))
+//!   square:   ℓ = (u−y)²/2            h = y·α − α²/2   α ∈ ℝ
+//! ```
+//!
+//! Enum (not trait-object) dispatch so the scalar update loop inlines.
+
+use crate::config::LossKind;
+
+/// Margin clamp for the logistic dual (App. B: values projected to lie
+/// in (1e−14, 1−1e−14) to prevent degeneracy of the entropy terms).
+pub const LOGISTIC_EPS: f64 = 1e-14;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    Hinge,
+    Logistic,
+    Square,
+}
+
+impl From<LossKind> for Loss {
+    fn from(k: LossKind) -> Self {
+        match k {
+            LossKind::Hinge => Loss::Hinge,
+            LossKind::Logistic => Loss::Logistic,
+            LossKind::Square => Loss::Square,
+        }
+    }
+}
+
+impl Loss {
+    /// Primal loss ℓ(u, y).
+    #[inline]
+    pub fn primal(self, u: f64, y: f64) -> f64 {
+        match self {
+            Loss::Hinge => (1.0 - y * u).max(0.0),
+            Loss::Logistic => {
+                // Numerically stable log(1 + exp(-yu)).
+                let z = -y * u;
+                if z > 35.0 {
+                    z
+                } else {
+                    z.exp().ln_1p()
+                }
+            }
+            Loss::Square => 0.5 * (u - y) * (u - y),
+        }
+    }
+
+    /// Primal (sub)derivative dℓ/du.
+    #[inline]
+    pub fn primal_grad(self, u: f64, y: f64) -> f64 {
+        match self {
+            Loss::Hinge => {
+                if y * u < 1.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+            Loss::Logistic => {
+                let z = -y * u;
+                // -y * sigmoid(-yu), stable in both tails.
+                let s = if z >= 0.0 {
+                    1.0 / (1.0 + (-z).exp())
+                } else {
+                    let e = z.exp();
+                    e / (1.0 + e)
+                };
+                -y * s
+            }
+            Loss::Square => u - y,
+        }
+    }
+
+    /// Dual utility h(α, y) = −ℓ*(−α). Callers must pass a feasible α
+    /// (use [`Loss::project_alpha`]); infeasible hinge/logistic α return
+    /// −∞ consistent with the conjugate's domain.
+    #[inline]
+    pub fn dual_utility(self, alpha: f64, y: f64) -> f64 {
+        match self {
+            Loss::Hinge => {
+                let beta = y * alpha;
+                if (-1e-12..=1.0 + 1e-12).contains(&beta) {
+                    y * alpha
+                } else {
+                    f64::NEG_INFINITY
+                }
+            }
+            Loss::Logistic => {
+                let beta = y * alpha;
+                if (0.0..=1.0).contains(&beta) {
+                    entropy(beta)
+                } else {
+                    f64::NEG_INFINITY
+                }
+            }
+            Loss::Square => y * alpha - 0.5 * alpha * alpha,
+        }
+    }
+
+    /// h'(α, y) — the `−∇ℓ*(−α_i)` of update (8). Feasible α assumed;
+    /// for logistic the derivative is evaluated at the ε-clamped β.
+    #[inline]
+    pub fn dual_utility_grad(self, alpha: f64, y: f64) -> f64 {
+        match self {
+            Loss::Hinge => y,
+            Loss::Logistic => {
+                let beta = (y * alpha).clamp(LOGISTIC_EPS, 1.0 - LOGISTIC_EPS);
+                y * ((1.0 - beta) / beta).ln()
+            }
+            Loss::Square => y - alpha,
+        }
+    }
+
+    /// Project α onto the dual feasible set (App. B): β = yα clamped to
+    /// [0,1] (hinge), (ε, 1−ε) (logistic); identity for square loss.
+    #[inline]
+    pub fn project_alpha(self, alpha: f64, y: f64) -> f64 {
+        match self {
+            Loss::Hinge => y * (y * alpha).clamp(0.0, 1.0),
+            Loss::Logistic => y * (y * alpha).clamp(LOGISTIC_EPS, 1.0 - LOGISTIC_EPS),
+            Loss::Square => alpha,
+        }
+    }
+
+    /// Box bound B for the primal weights (App. B): |w_j| ≤ 1/√λ for
+    /// SVM, √(log 2 / λ) for logistic. Square loss gets the SVM bound
+    /// (the paper does not run square loss; the bound keeps iterates
+    /// compact, satisfying Theorem 1's bounded-diameter assumption).
+    #[inline]
+    pub fn w_bound(self, lambda: f64) -> f64 {
+        match self {
+            Loss::Hinge | Loss::Square => 1.0 / lambda.sqrt(),
+            Loss::Logistic => (std::f64::consts::LN_2 / lambda).sqrt(),
+        }
+    }
+
+    /// Initial α recommended by App. B: 0 for SVM, 0.0005·y for
+    /// logistic (strictly inside the open feasible interval).
+    #[inline]
+    pub fn alpha_init(self, y: f64) -> f64 {
+        match self {
+            Loss::Hinge | Loss::Square => 0.0,
+            Loss::Logistic => 0.0005 * y,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Hinge => "hinge",
+            Loss::Logistic => "logistic",
+            Loss::Square => "square",
+        }
+    }
+}
+
+/// Binary entropy H(β) = −β ln β − (1−β) ln(1−β), with the 0·ln 0 = 0
+/// convention.
+#[inline]
+pub fn entropy(beta: f64) -> f64 {
+    let mut h = 0.0;
+    if beta > 0.0 {
+        h -= beta * beta.ln();
+    }
+    if beta < 1.0 {
+        h -= (1.0 - beta) * (1.0 - beta).ln();
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOSSES: [Loss; 3] = [Loss::Hinge, Loss::Logistic, Loss::Square];
+
+    #[test]
+    fn hinge_primal_values() {
+        assert_eq!(Loss::Hinge.primal(0.0, 1.0), 1.0);
+        assert_eq!(Loss::Hinge.primal(2.0, 1.0), 0.0);
+        assert_eq!(Loss::Hinge.primal(-1.0, 1.0), 2.0);
+        assert_eq!(Loss::Hinge.primal(-2.0, -1.0), 0.0);
+    }
+
+    #[test]
+    fn logistic_primal_stable() {
+        let l = Loss::Logistic;
+        assert!((l.primal(0.0, 1.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        // Large margins: loss → 0; large negative margins: loss ≈ |yu|.
+        assert!(l.primal(100.0, 1.0) < 1e-12);
+        assert!((l.primal(-100.0, 1.0) - 100.0).abs() < 1e-9);
+        assert!(l.primal(1e6, 1.0).is_finite());
+        assert!(l.primal(-1e6, 1.0).is_finite());
+    }
+
+    #[test]
+    fn square_primal() {
+        assert_eq!(Loss::Square.primal(3.0, 1.0), 2.0);
+        assert_eq!(Loss::Square.primal(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn primal_grad_matches_finite_difference() {
+        let eps = 1e-6;
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for &u in &[-2.0, -0.5, 0.3, 0.99, 1.7] {
+                    // Skip hinge kink.
+                    if loss == Loss::Hinge && (y * u - 1.0f64).abs() < 1e-3 {
+                        continue;
+                    }
+                    let fd = (loss.primal(u + eps, y) - loss.primal(u - eps, y)) / (2.0 * eps);
+                    let g = loss.primal_grad(u, y);
+                    assert!(
+                        (fd - g).abs() < 1e-5,
+                        "{loss:?} y={y} u={u}: fd {fd} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dual_grad_matches_finite_difference() {
+        let eps = 1e-7;
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for &beta in &[0.2, 0.5, 0.8] {
+                    let alpha = y * beta;
+                    let fd = (loss.dual_utility(alpha + eps, y)
+                        - loss.dual_utility(alpha - eps, y))
+                        / (2.0 * eps);
+                    let g = loss.dual_utility_grad(alpha, y);
+                    assert!(
+                        (fd - g).abs() < 1e-4,
+                        "{loss:?} y={y} α={alpha}: fd {fd} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Fenchel–Young: ℓ(u) + ℓ*(−α) ≥ −u·α, with equality at the
+    /// maximizing α. Equivalently ℓ(u) ≥ h(α) − u·α... checking the
+    /// inequality over a grid validates the Table 1 conjugate pairs.
+    #[test]
+    fn fenchel_young_inequality() {
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for iu in -20..=20 {
+                    let u = iu as f64 * 0.25;
+                    for ib in 1..20 {
+                        let alpha = match loss {
+                            Loss::Square => -2.0 + 4.0 * ib as f64 / 20.0,
+                            _ => y * (ib as f64 / 20.0),
+                        };
+                        let lhs = loss.primal(u, y);
+                        let rhs = loss.dual_utility(alpha, y) - u * alpha;
+                        assert!(
+                            lhs >= rhs - 1e-9,
+                            "{loss:?} y={y} u={u} α={alpha}: {lhs} < {rhs}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// sup_α [h(α) − uα] should recover ℓ(u) (biconjugation; ℓ convex
+    /// closed). Grid-maximize and compare.
+    #[test]
+    fn biconjugation_recovers_primal() {
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for &u in &[-1.5, -0.3, 0.0, 0.7, 2.0] {
+                    let mut best = f64::NEG_INFINITY;
+                    for k in 0..=4000 {
+                        let alpha = match loss {
+                            Loss::Square => -4.0 + 8.0 * k as f64 / 4000.0,
+                            _ => y * (k as f64 / 4000.0),
+                        };
+                        let v = loss.dual_utility(alpha, y) - u * alpha;
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                    let lhs = loss.primal(u, y);
+                    let tol = match loss {
+                        Loss::Square => 1e-3, // grid resolution
+                        _ => 2e-3,
+                    };
+                    assert!(
+                        (lhs - best).abs() < tol,
+                        "{loss:?} y={y} u={u}: primal {lhs} vs sup {best}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn projection_feasible_and_idempotent() {
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for &a in &[-5.0, -0.5, 0.0, 0.3, 0.9, 1.0, 7.0] {
+                    let p = loss.project_alpha(a, y);
+                    let pp = loss.project_alpha(p, y);
+                    assert!(
+                        (p - pp).abs() < 1e-15,
+                        "{loss:?} projection not idempotent at {a}"
+                    );
+                    assert!(loss.dual_utility(p, y).is_finite(), "{loss:?} infeasible {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_projection_box() {
+        assert_eq!(Loss::Hinge.project_alpha(2.0, 1.0), 1.0);
+        assert_eq!(Loss::Hinge.project_alpha(-0.5, 1.0), 0.0);
+        assert_eq!(Loss::Hinge.project_alpha(-2.0, -1.0), -1.0);
+        assert_eq!(Loss::Hinge.project_alpha(0.5, -1.0), 0.0);
+    }
+
+    #[test]
+    fn logistic_projection_open_interval() {
+        let p = Loss::Logistic.project_alpha(0.0, 1.0);
+        assert!(p > 0.0 && p < 1e-10);
+        let q = Loss::Logistic.project_alpha(1.0, 1.0);
+        assert!(q < 1.0);
+        assert!(Loss::Logistic.dual_utility_grad(p, 1.0).is_finite());
+    }
+
+    #[test]
+    fn w_bounds_match_appendix_b() {
+        let lam = 0.01;
+        assert!((Loss::Hinge.w_bound(lam) - 10.0).abs() < 1e-12);
+        assert!(
+            (Loss::Logistic.w_bound(lam) - (std::f64::consts::LN_2 / lam).sqrt()).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn alpha_init_feasible() {
+        for loss in LOSSES {
+            for &y in &[1.0, -1.0] {
+                let a = loss.alpha_init(y);
+                assert!(loss.dual_utility(a, y).is_finite());
+            }
+        }
+        assert_eq!(Loss::Logistic.alpha_init(-1.0), -0.0005);
+    }
+
+    #[test]
+    fn entropy_endpoints() {
+        assert_eq!(entropy(0.0), 0.0);
+        assert_eq!(entropy(1.0), 0.0);
+        assert!((entropy(0.5) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_losskind() {
+        use crate::config::LossKind;
+        assert_eq!(Loss::from(LossKind::Hinge), Loss::Hinge);
+        assert_eq!(Loss::from(LossKind::Logistic), Loss::Logistic);
+        assert_eq!(Loss::from(LossKind::Square), Loss::Square);
+    }
+}

@@ -1,0 +1,10 @@
+//! Loss functions, their Fenchel duals (Table 1), regularizers, and the
+//! primal / dual / saddle objective evaluations (Eq. 1, Eq. 6, Eq. 10).
+
+pub mod loss;
+pub mod objective;
+pub mod regularizer;
+
+pub use loss::Loss;
+pub use objective::Problem;
+pub use regularizer::Regularizer;

@@ -1,0 +1,255 @@
+//! Objective evaluation: the primal regularized risk P(w) of Eq. (1),
+//! the dual objective D(α) = min_w f(w, α), the saddle value f(w, α)
+//! of Eq. (6), and the duality gap ε(w, α) = P(w) − D(α) used as the
+//! convergence measure throughout the paper (Theorem 1).
+
+use super::loss::Loss;
+use super::regularizer::Regularizer;
+use crate::data::Dataset;
+
+/// Problem definition shared by all solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct Problem {
+    pub loss: Loss,
+    pub reg: Regularizer,
+    pub lambda: f64,
+}
+
+impl Problem {
+    pub fn new(loss: Loss, reg: Regularizer, lambda: f64) -> Problem {
+        assert!(lambda > 0.0);
+        Problem { loss, reg, lambda }
+    }
+
+    /// Primal regularized risk P(w), Eq. (1).
+    pub fn primal(&self, ds: &Dataset, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), ds.d());
+        let mut risk = 0.0;
+        for i in 0..ds.m() {
+            let u = ds.x.row_dot(i, w);
+            risk += self.loss.primal(u, ds.y[i] as f64);
+        }
+        self.reg.total(self.lambda, w) + risk / ds.m() as f64
+    }
+
+    /// c_j(α) = (1/m) Σ_i α_i x_ij — the linear coefficient of w_j in
+    /// f(w, α). Returned for all j.
+    pub fn linear_coeff(&self, ds: &Dataset, alpha: &[f32]) -> Vec<f64> {
+        assert_eq!(alpha.len(), ds.m());
+        let m = ds.m() as f64;
+        let mut c = vec![0f64; ds.d()];
+        for i in 0..ds.m() {
+            let (idx, val) = ds.x.row(i);
+            let a = alpha[i] as f64;
+            if a != 0.0 {
+                for k in 0..idx.len() {
+                    c[idx[k] as usize] += a * val[k] as f64;
+                }
+            }
+        }
+        for cj in c.iter_mut() {
+            *cj /= m;
+        }
+        c
+    }
+
+    /// The w minimizing f(·, α): w_j = argmin_w λφ(w) − c_j w.
+    /// (For L1, the argmin is 0 on the feasible dual ball.)
+    pub fn w_from_alpha(&self, ds: &Dataset, alpha: &[f32]) -> Vec<f32> {
+        self.linear_coeff(ds, alpha)
+            .into_iter()
+            .map(|c| self.reg.conjugate_argmin(c, self.lambda) as f32)
+            .collect()
+    }
+
+    /// Dual objective D(α) = min_w f(w, α)
+    ///   = Σ_j min_w [λφ(w) − c_j w] + (1/m) Σ_i h(α_i, y_i).
+    /// Infeasible α (outside the conjugate domain) yields −∞; callers
+    /// that maintain projections never see that.
+    pub fn dual(&self, ds: &Dataset, alpha: &[f32]) -> f64 {
+        let c = self.linear_coeff(ds, alpha);
+        let mut v = 0.0;
+        for &cj in &c {
+            v += self.reg.conjugate_min_value(cj, self.lambda);
+        }
+        let m = ds.m() as f64;
+        for i in 0..ds.m() {
+            v += self.loss.dual_utility(alpha[i] as f64, ds.y[i] as f64) / m;
+        }
+        v
+    }
+
+    /// Saddle value f(w, α) of Eq. (6).
+    pub fn saddle(&self, ds: &Dataset, w: &[f32], alpha: &[f32]) -> f64 {
+        assert_eq!(w.len(), ds.d());
+        assert_eq!(alpha.len(), ds.m());
+        let m = ds.m() as f64;
+        let mut v = self.reg.total(self.lambda, w);
+        for i in 0..ds.m() {
+            let u = ds.x.row_dot(i, w);
+            let a = alpha[i] as f64;
+            v -= a * u / m;
+            v += self.loss.dual_utility(a, ds.y[i] as f64) / m;
+        }
+        v
+    }
+
+    /// Duality gap ε(w, α) = P(w) − D(α) ≥ 0 (Eq. 10's measure).
+    pub fn duality_gap(&self, ds: &Dataset, w: &[f32], alpha: &[f32]) -> f64 {
+        self.primal(ds, w) - self.dual(ds, alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Csr;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy() -> Dataset {
+        let x = Csr::from_rows(
+            3,
+            vec![
+                vec![(0, 1.0), (1, 0.5)],
+                vec![(1, -1.0), (2, 0.25)],
+                vec![(0, -0.5), (2, 1.0)],
+                vec![(0, 0.75)],
+            ],
+        );
+        Dataset::new("toy", x, vec![1.0, -1.0, -1.0, 1.0])
+    }
+
+    fn problems() -> Vec<Problem> {
+        vec![
+            Problem::new(Loss::Hinge, Regularizer::L2, 0.1),
+            Problem::new(Loss::Logistic, Regularizer::L2, 0.05),
+            Problem::new(Loss::Square, Regularizer::L2, 0.2),
+        ]
+    }
+
+    #[test]
+    fn primal_at_zero_is_loss_at_zero_margin() {
+        let ds = toy();
+        let w = vec![0f32; 3];
+        let p = Problem::new(Loss::Hinge, Regularizer::L2, 0.1);
+        assert!((p.primal(&ds, &w) - 1.0).abs() < 1e-12); // hinge(0) = 1
+        let p = Problem::new(Loss::Logistic, Regularizer::L2, 0.1);
+        assert!((p.primal(&ds, &w) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_coeff_matches_manual() {
+        let ds = toy();
+        let alpha = [1.0f32, -1.0, 0.5, 0.0];
+        let p = Problem::new(Loss::Hinge, Regularizer::L2, 0.1);
+        let c = p.linear_coeff(&ds, &alpha);
+        // c_0 = (1*1 + 0.5*(-0.5)) / 4 = 0.75/4
+        assert!((c[0] - 0.75 / 4.0).abs() < 1e-9);
+        // c_1 = (1*0.5 + (-1)*(-1)) / 4 = 1.5/4
+        assert!((c[1] - 1.5 / 4.0).abs() < 1e-9);
+        // c_2 = ((-1)*0.25 + 0.5*1) / 4 = 0.25/4
+        assert!((c[2] - 0.25 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weak_duality_random_points() {
+        let ds = toy();
+        let mut rng = Xoshiro256::new(99);
+        for p in problems() {
+            for _ in 0..200 {
+                let w: Vec<f32> = (0..3).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+                let alpha: Vec<f32> = (0..4)
+                    .map(|i| {
+                        p.loss.project_alpha(rng.uniform(-1.5, 1.5), ds.y[i] as f64) as f32
+                    })
+                    .collect();
+                let gap = p.duality_gap(&ds, &w, &alpha);
+                assert!(gap >= -1e-9, "{:?}: negative gap {gap}", p.loss);
+            }
+        }
+    }
+
+    #[test]
+    fn dual_equals_saddle_at_w_star() {
+        let ds = toy();
+        let mut rng = Xoshiro256::new(7);
+        for p in problems() {
+            for _ in 0..50 {
+                let alpha: Vec<f32> = (0..4)
+                    .map(|i| {
+                        p.loss.project_alpha(rng.uniform(-1.0, 1.0), ds.y[i] as f64) as f32
+                    })
+                    .collect();
+                let w_star = p.w_from_alpha(&ds, &alpha);
+                let d = p.dual(&ds, &alpha);
+                let s = p.saddle(&ds, &w_star, &alpha);
+                assert!((d - s).abs() < 1e-6, "{:?}: dual {d} vs saddle {s}", p.loss);
+            }
+        }
+    }
+
+    #[test]
+    fn w_star_minimizes_saddle() {
+        let ds = toy();
+        let p = Problem::new(Loss::Hinge, Regularizer::L2, 0.1);
+        let alpha = [0.5f32, -0.25, -1.0, 1.0];
+        let w_star = p.w_from_alpha(&ds, &alpha);
+        let base = p.saddle(&ds, &w_star, &alpha);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..100 {
+            let w: Vec<f32> =
+                w_star.iter().map(|&x| x + rng.uniform(-0.5, 0.5) as f32).collect();
+            assert!(p.saddle(&ds, &w, &alpha) >= base - 1e-9);
+        }
+    }
+
+    /// At the optimum of a tiny SVM solved by brute force, the duality
+    /// gap should be ~0: strong duality sanity check.
+    #[test]
+    fn strong_duality_on_grid_solved_problem() {
+        // One feature, two points: min λw² + (1/2)[hinge(w; y=1) + hinge(-w·1; y=-1)]
+        let x = Csr::from_rows(1, vec![vec![(0, 1.0)], vec![(0, 1.0)]]);
+        let ds = Dataset::new("line", x, vec![1.0, -1.0]);
+        let p = Problem::new(Loss::Hinge, Regularizer::L2, 0.25);
+        // Grid search the primal.
+        let mut best_w = 0.0f32;
+        let mut best_p = f64::INFINITY;
+        for k in -400..=400 {
+            let w = [k as f32 * 0.01];
+            let v = p.primal(&ds, &w);
+            if v < best_p {
+                best_p = v;
+                best_w = w[0];
+            }
+        }
+        // Grid search the dual.
+        let mut best_d = f64::NEG_INFINITY;
+        let mut best_alpha = [0f32; 2];
+        for a in 0..=100 {
+            for b in 0..=100 {
+                let alpha = [a as f32 / 100.0, -(b as f32) / 100.0];
+                let v = p.dual(&ds, &alpha);
+                if v > best_d {
+                    best_d = v;
+                    best_alpha = alpha;
+                }
+            }
+        }
+        assert!(
+            (best_p - best_d).abs() < 1e-2,
+            "primal {best_p} (w={best_w}) vs dual {best_d} (α={best_alpha:?})"
+        );
+    }
+
+    #[test]
+    fn gap_shrinks_towards_optimum() {
+        // Moving w towards w*(α) with α near-optimal should reduce the gap.
+        let ds = toy();
+        let p = Problem::new(Loss::Square, Regularizer::L2, 0.5);
+        let alpha: Vec<f32> =
+            (0..4).map(|i| (ds.y[i] as f64 * 0.5) as f32).collect();
+        let w_star = p.w_from_alpha(&ds, &alpha);
+        let w_far: Vec<f32> = w_star.iter().map(|&x| x + 1.0).collect();
+        assert!(p.duality_gap(&ds, &w_star, &alpha) < p.duality_gap(&ds, &w_far, &alpha));
+    }
+}

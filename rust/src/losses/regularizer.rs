@@ -1,0 +1,155 @@
+//! Regularizers φ_j(·) of Eq. (1). The paper instantiates φ_j(w) = w²
+//! (square-norm, used in all experiments) and notes φ_j(w) = |w| gives
+//! LASSO; both are implemented.
+
+use crate::config::RegKind;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regularizer {
+    /// φ(w) = w² — the paper's choice for SVM / logistic experiments.
+    L2,
+    /// φ(w) = |w| — LASSO-style.
+    L1,
+}
+
+impl From<RegKind> for Regularizer {
+    fn from(k: RegKind) -> Self {
+        match k {
+            RegKind::L2 => Regularizer::L2,
+            RegKind::L1 => Regularizer::L1,
+        }
+    }
+}
+
+impl Regularizer {
+    #[inline]
+    pub fn value(self, w: f64) -> f64 {
+        match self {
+            Regularizer::L2 => w * w,
+            Regularizer::L1 => w.abs(),
+        }
+    }
+
+    /// (Sub)gradient ∇φ(w); sign(w) with 0 at the kink for L1.
+    #[inline]
+    pub fn grad(self, w: f64) -> f64 {
+        match self {
+            Regularizer::L2 => 2.0 * w,
+            Regularizer::L1 => {
+                if w > 0.0 {
+                    1.0
+                } else if w < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Total regularizer λ Σ_j φ(w_j).
+    pub fn total(self, lambda: f64, w: &[f32]) -> f64 {
+        let mut s = 0.0;
+        match self {
+            Regularizer::L2 => {
+                for &x in w {
+                    s += x as f64 * x as f64;
+                }
+            }
+            Regularizer::L1 => {
+                for &x in w {
+                    s += x.abs() as f64;
+                }
+            }
+        }
+        lambda * s
+    }
+
+    /// Closed-form minimizer of λφ(w) − c·w (used by the dual objective):
+    /// L2: w* = c / (2λ); L1: w* = 0 when |c| ≤ λ (else the problem is
+    /// unbounded — callers clamp c, see `objective::dual_objective`).
+    #[inline]
+    pub fn conjugate_argmin(self, c: f64, lambda: f64) -> f64 {
+        match self {
+            Regularizer::L2 => c / (2.0 * lambda),
+            Regularizer::L1 => 0.0,
+        }
+    }
+
+    /// min_w [λφ(w) − c·w]. For L1 the value is 0 inside the dual-ball
+    /// |c| ≤ λ and −∞ outside; we return the clipped value (0), which
+    /// yields the standard "clipped" dual for LASSO-type problems.
+    #[inline]
+    pub fn conjugate_min_value(self, c: f64, lambda: f64) -> f64 {
+        match self {
+            Regularizer::L2 => -c * c / (4.0 * lambda),
+            Regularizer::L1 => 0.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Regularizer::L2 => "l2",
+            Regularizer::L1 => "l1",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_and_grads() {
+        assert_eq!(Regularizer::L2.value(3.0), 9.0);
+        assert_eq!(Regularizer::L2.grad(3.0), 6.0);
+        assert_eq!(Regularizer::L1.value(-2.0), 2.0);
+        assert_eq!(Regularizer::L1.grad(-2.0), -1.0);
+        assert_eq!(Regularizer::L1.grad(0.0), 0.0);
+    }
+
+    #[test]
+    fn grad_is_derivative_of_value() {
+        for reg in [Regularizer::L2, Regularizer::L1] {
+            for &w in &[-2.0, -0.5, 0.4, 1.7] {
+                let eps = 1e-6;
+                let fd = (reg.value(w + eps) - reg.value(w - eps)) / (2.0 * eps);
+                assert!((fd - reg.grad(w)).abs() < 1e-5, "{reg:?} at {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn total_sums() {
+        let w = [1.0f32, -2.0, 0.5];
+        assert!((Regularizer::L2.total(0.1, &w) - 0.1 * (1.0 + 4.0 + 0.25)).abs() < 1e-9);
+        assert!((Regularizer::L1.total(2.0, &w) - 2.0 * 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l2_conjugate_argmin_minimizes() {
+        let (lambda, c) = (0.3, 1.7);
+        let w_star = Regularizer::L2.conjugate_argmin(c, lambda);
+        let val = |w: f64| lambda * Regularizer::L2.value(w) - c * w;
+        let v_star = val(w_star);
+        assert!((v_star - Regularizer::L2.conjugate_min_value(c, lambda)).abs() < 1e-12);
+        for &dw in &[-0.1, -0.01, 0.01, 0.1] {
+            assert!(val(w_star + dw) >= v_star);
+        }
+    }
+
+    #[test]
+    fn l1_conjugate_inside_ball() {
+        // |c| <= lambda: minimum of lambda|w| - c w is 0 at w = 0.
+        let v = Regularizer::L1.conjugate_min_value(0.5, 1.0);
+        assert_eq!(v, 0.0);
+        assert_eq!(Regularizer::L1.conjugate_argmin(0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn from_regkind() {
+        use crate::config::RegKind;
+        assert_eq!(Regularizer::from(RegKind::L2), Regularizer::L2);
+        assert_eq!(Regularizer::from(RegKind::L1), Regularizer::L1);
+    }
+}

@@ -1,0 +1,12 @@
+//! `dso` — the leader entrypoint / CLI launcher (L3).
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match dso::cli::main_entry(raw) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

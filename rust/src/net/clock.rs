@@ -1,0 +1,96 @@
+//! Per-worker virtual clocks.
+//!
+//! Each simulated worker accumulates (a) measured wall-clock compute
+//! time and (b) simulated communication time from the [`CostModel`].
+//! The cluster-level virtual time of a bulk-synchronous phase is the
+//! max across workers — the quantity the paper plots on its "time
+//! spent" axes and the one Theorem 1's `(|Ω|T_u/p + T_c)T` bound
+//! describes.
+
+/// Virtual clock: compute + communication seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VirtualClock {
+    pub compute_s: f64,
+    pub comm_s: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    #[inline]
+    pub fn add_compute(&mut self, secs: f64) {
+        debug_assert!(secs >= 0.0);
+        self.compute_s += secs;
+    }
+
+    #[inline]
+    pub fn add_comm(&mut self, secs: f64) {
+        debug_assert!(secs >= 0.0);
+        self.comm_s += secs;
+    }
+
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// Bulk synchronization: all workers wait for the slowest, so every
+    /// clock jumps to the max. Returns the synchronized time.
+    pub fn synchronize(clocks: &mut [VirtualClock]) -> f64 {
+        let t = clocks.iter().map(|c| c.total()).fold(0.0, f64::max);
+        for c in clocks.iter_mut() {
+            // Waiting time is attributed to communication.
+            let wait = t - c.total();
+            c.comm_s += wait;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut c = VirtualClock::new();
+        c.add_compute(1.5);
+        c.add_comm(0.5);
+        c.add_compute(0.25);
+        assert!((c.compute_s - 1.75).abs() < 1e-12);
+        assert!((c.comm_s - 0.5).abs() < 1e-12);
+        assert!((c.total() - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synchronize_aligns_to_max() {
+        let mut clocks = vec![
+            VirtualClock { compute_s: 1.0, comm_s: 0.0 },
+            VirtualClock { compute_s: 3.0, comm_s: 0.5 },
+            VirtualClock { compute_s: 0.0, comm_s: 0.0 },
+        ];
+        let t = VirtualClock::synchronize(&mut clocks);
+        assert!((t - 3.5).abs() < 1e-12);
+        for c in &clocks {
+            assert!((c.total() - 3.5).abs() < 1e-12);
+        }
+        // Fast workers' wait shows up as comm time.
+        assert!((clocks[2].comm_s - 3.5).abs() < 1e-12);
+        assert_eq!(clocks[2].compute_s, 0.0);
+    }
+
+    #[test]
+    fn synchronize_idempotent() {
+        let mut clocks = vec![
+            VirtualClock { compute_s: 2.0, comm_s: 0.0 },
+            VirtualClock { compute_s: 1.0, comm_s: 0.0 },
+        ];
+        let t1 = VirtualClock::synchronize(&mut clocks);
+        let snapshot = clocks.clone();
+        let t2 = VirtualClock::synchronize(&mut clocks);
+        assert_eq!(t1, t2);
+        assert_eq!(clocks, snapshot);
+    }
+}

@@ -1,0 +1,210 @@
+//! Message routing between simulated workers.
+//!
+//! A [`Router`] owns one mpsc channel per worker. Worker threads take
+//! their `Endpoint` (receiver + sender handles to everyone) before
+//! spawning. Sends are non-blocking; receives block until a message
+//! arrives — exactly the semantics DSO's ring rotation needs (worker q
+//! cannot start inner iteration r+1 before its next w block arrives).
+//! Every transfer is accounted in [`NetStats`] (messages, bytes,
+//! simulated seconds) so experiments can report communication volume.
+
+use super::CostModel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// A routed message: payload plus simulated arrival metadata.
+pub struct Delivery<T> {
+    pub from: usize,
+    pub payload: T,
+    /// Simulated transfer cost the receiver must add to its clock.
+    pub comm_secs: f64,
+    pub bytes: usize,
+}
+
+/// Shared network statistics.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    /// Total simulated comm microseconds (sum across links).
+    pub sim_comm_us: AtomicU64,
+}
+
+impl NetStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn total_sim_comm_secs(&self) -> f64 {
+        self.sim_comm_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+}
+
+/// One worker's handle onto the network.
+pub struct Endpoint<T> {
+    pub id: usize,
+    rx: Receiver<Delivery<T>>,
+    txs: Vec<Sender<Delivery<T>>>,
+    cost: CostModel,
+    stats: Arc<NetStats>,
+}
+
+impl<T> Endpoint<T> {
+    /// Send `payload` of logical size `bytes` to worker `to`.
+    pub fn send(&self, to: usize, payload: T, bytes: usize) {
+        let comm_secs = self.cost.transfer_secs(self.id, to, bytes);
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.stats
+            .sim_comm_us
+            .fetch_add((comm_secs * 1e6) as u64, Ordering::Relaxed);
+        // Receiver gone (e.g. panic elsewhere) — drop silently; the
+        // engine surfaces the original panic via thread join.
+        let _ = self.txs[to].send(Delivery { from: self.id, payload, comm_secs, bytes });
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> Option<Delivery<T>> {
+        self.rx.recv().ok()
+    }
+
+    pub fn try_recv(&self) -> Option<Delivery<T>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Builder for a p-worker network.
+pub struct Router<T> {
+    endpoints: Vec<Endpoint<T>>,
+    stats: Arc<NetStats>,
+}
+
+impl<T> Router<T> {
+    pub fn new(p: usize, cost: CostModel) -> Router<T> {
+        let stats = Arc::new(NetStats::default());
+        let mut txs = Vec::with_capacity(p);
+        let mut rxs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = std::sync::mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let endpoints = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(id, rx)| Endpoint {
+                id,
+                rx,
+                txs: txs.clone(),
+                cost,
+                stats: stats.clone(),
+            })
+            .collect();
+        Router { endpoints, stats }
+    }
+
+    /// Take all endpoints (one per worker thread). Call once.
+    pub fn take_endpoints(&mut self) -> Vec<Endpoint<T>> {
+        std::mem::take(&mut self.endpoints)
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let mut router: Router<Vec<f32>> = Router::new(2, CostModel::new(10.0, 100.0, 1));
+        let mut eps = router.take_endpoints();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, vec![1.0, 2.0], 8);
+        let d = e1.recv().unwrap();
+        assert_eq!(d.from, 0);
+        assert_eq!(d.payload, vec![1.0, 2.0]);
+        assert_eq!(d.bytes, 8);
+        assert!(d.comm_secs > 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut router: Router<u32> = Router::new(3, CostModel::new(100.0, 1.0, 1));
+        let stats = router.stats();
+        let eps = router.take_endpoints();
+        eps[0].send(1, 7, 1000);
+        eps[0].send(2, 8, 2000);
+        eps[1].recv().unwrap();
+        eps[2].recv().unwrap();
+        assert_eq!(stats.total_messages(), 2);
+        assert_eq!(stats.total_bytes(), 3000);
+        assert!(stats.total_sim_comm_secs() > 2.0 * 100e-6);
+    }
+
+    #[test]
+    fn intra_machine_message_free_but_counted() {
+        let mut router: Router<u32> = Router::new(4, CostModel::new(100.0, 1.0, 2));
+        let stats = router.stats();
+        let eps = router.take_endpoints();
+        eps[0].send(1, 1, 500); // same machine (cores_per_machine = 2)
+        let d = eps[1].recv().unwrap();
+        assert_eq!(d.comm_secs, 0.0);
+        assert_eq!(stats.total_bytes(), 500);
+    }
+
+    #[test]
+    fn fifo_per_sender() {
+        let mut router: Router<u32> = Router::new(2, CostModel::free());
+        let eps = router.take_endpoints();
+        for k in 0..10 {
+            eps[0].send(1, k, 4);
+        }
+        for k in 0..10 {
+            assert_eq!(eps[1].recv().unwrap().payload, k);
+        }
+    }
+
+    #[test]
+    fn cross_thread_ring_rotation() {
+        // 4 workers pass a token around the ring twice.
+        let p = 4;
+        let mut router: Router<u64> = Router::new(p, CostModel::new(1.0, 1000.0, 1));
+        let eps = router.take_endpoints();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let mut token = ep.id as u64;
+                    for _ in 0..2 * p {
+                        let to = (ep.id + p - 1) % p;
+                        ep.send(to, token, 8);
+                        token = ep.recv().unwrap().payload;
+                    }
+                    token
+                })
+            })
+            .collect();
+        let finals: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // After 2p hops each token returns home.
+        assert_eq!(finals, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let mut router: Router<u32> = Router::new(2, CostModel::free());
+        let eps = router.take_endpoints();
+        assert!(eps[1].try_recv().is_none());
+        eps[0].send(1, 5, 4);
+        // Message is in the channel immediately (sim time is virtual).
+        assert_eq!(eps[1].try_recv().unwrap().payload, 5);
+    }
+}

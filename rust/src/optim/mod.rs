@@ -1,0 +1,9 @@
+//! Optimization machinery: step-size schedules (η₀/√t of Algorithm 1,
+//! AdaGrad of App. B), the LIBLINEAR-style dual coordinate descent used
+//! for warm starts, and the simplex QP solver behind BMRM.
+
+pub mod dcd;
+pub mod qp;
+pub mod step;
+
+pub use step::{AdaGrad, Schedule, Stepper};

@@ -1,0 +1,243 @@
+//! Simplex-constrained QP solver for the BMRM inner problem.
+//!
+//! BMRM (Teo et al., JMLR 2010) with an L2 regularizer solves, at every
+//! iteration, the dual of its cutting-plane model:
+//!
+//! ```text
+//!     max_β  bᵀβ − (1/4λ) βᵀGβ    s.t.  β ≥ 0, Σβ = 1,
+//! ```
+//!
+//! where G_kl = ⟨a_k, a_l⟩ is the Gram matrix of subgradients. This
+//! module solves the equivalent minimization
+//!
+//! ```text
+//!     min_β  ½ βᵀHβ − bᵀβ,   H = G/(2λ),
+//! ```
+//!
+//! by projected gradient with a Lipschitz step and Duchi et al.'s O(n
+//! log n) Euclidean projection onto the simplex. Problem sizes are tiny
+//! (n = number of cutting planes, ≤ a few hundred), so robustness beats
+//! cleverness here.
+
+/// Euclidean projection of v onto the probability simplex
+/// {β : β ≥ 0, Σβ = 1} (Duchi, Shalev-Shwartz, Singer, Chandra 2008).
+pub fn project_simplex(v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    assert!(n > 0);
+    let mut u = v.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut rho = 0;
+    let mut theta = 0.0;
+    for (k, &uk) in u.iter().enumerate() {
+        css += uk;
+        let t = (css - 1.0) / (k + 1) as f64;
+        if uk - t > 0.0 {
+            rho = k + 1;
+            theta = t;
+        }
+    }
+    let _ = rho;
+    v.iter().map(|&x| (x - theta).max(0.0)).collect()
+}
+
+/// Result of a QP solve.
+#[derive(Clone, Debug)]
+pub struct QpSolution {
+    pub beta: Vec<f64>,
+    /// Objective value bᵀβ − ¼λ⁻¹ βᵀGβ at the solution (the *max* form).
+    pub value: f64,
+    pub iterations: usize,
+    /// Max KKT violation at exit (projected-gradient norm).
+    pub kkt_residual: f64,
+}
+
+/// Solve max_β bᵀβ − (1/4λ)βᵀGβ over the simplex.
+///
+/// `gram[k][l]` must be ⟨a_k, a_l⟩ (symmetric PSD). Converges to
+/// `tol` on the projected-gradient residual or stops at `max_iter`.
+pub fn solve_bmrm_dual(
+    gram: &[Vec<f64>],
+    b: &[f64],
+    lambda: f64,
+    tol: f64,
+    max_iter: usize,
+) -> QpSolution {
+    let n = b.len();
+    assert_eq!(gram.len(), n);
+    assert!(lambda > 0.0);
+    if n == 1 {
+        let beta = vec![1.0];
+        let value = b[0] - gram[0][0] / (4.0 * lambda);
+        return QpSolution { beta, value, iterations: 0, kkt_residual: 0.0 };
+    }
+
+    // H = G/(2λ). Lipschitz constant of ∇(½βᵀHβ − bᵀβ) is ‖H‖₂ ≤
+    // max_k Σ_l |H_kl| (infinity norm bound, fine at these sizes).
+    let scale = 1.0 / (2.0 * lambda);
+    let mut lip: f64 = 0.0;
+    for k in 0..n {
+        let row: f64 = gram[k].iter().map(|x| x.abs() * scale).sum();
+        lip = lip.max(row);
+    }
+    let step = if lip > 0.0 { 1.0 / lip } else { 1.0 };
+
+    // Start uniform.
+    let mut beta = vec![1.0 / n as f64; n];
+    let mut grad = vec![0.0; n];
+    let mut resid = f64::INFINITY;
+    let mut it = 0;
+    while it < max_iter {
+        // grad = Hβ − b.
+        for k in 0..n {
+            let mut s = 0.0;
+            for l in 0..n {
+                s += gram[k][l] * beta[l];
+            }
+            grad[k] = s * scale - b[k];
+        }
+        let cand: Vec<f64> =
+            (0..n).map(|k| beta[k] - step * grad[k]).collect();
+        let next = project_simplex(&cand);
+        resid = (0..n)
+            .map(|k| (next[k] - beta[k]).abs())
+            .fold(0.0, f64::max)
+            / step;
+        beta = next;
+        it += 1;
+        if resid < tol {
+            break;
+        }
+    }
+
+    // Value in the max form.
+    let mut quad = 0.0;
+    for k in 0..n {
+        for l in 0..n {
+            quad += beta[k] * gram[k][l] * beta[l];
+        }
+    }
+    let value =
+        b.iter().zip(&beta).map(|(bi, bv)| bi * bv).sum::<f64>() - quad / (4.0 * lambda);
+    QpSolution { beta, value, iterations: it, kkt_residual: resid }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn simplex_projection_properties() {
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..200 {
+            let n = 1 + rng.gen_index(8);
+            let v: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let p = project_simplex(&v);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn simplex_projection_identity_on_simplex() {
+        let v = vec![0.2, 0.3, 0.5];
+        let p = project_simplex(&v);
+        for (a, b) in v.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn simplex_projection_is_nearest_point() {
+        // Check against brute-force grid on 2 dims: project (x, y),
+        // nearest point on the segment β0+β1=1, β≥0.
+        let v = [1.7, -0.4];
+        let p = project_simplex(&v);
+        let mut best = (0.0, f64::INFINITY);
+        for k in 0..=1000 {
+            let b0 = k as f64 / 1000.0;
+            let b1 = 1.0 - b0;
+            let d = (v[0] - b0).powi(2) + (v[1] - b1).powi(2);
+            if d < best.1 {
+                best = (b0, d);
+            }
+        }
+        assert!((p[0] - best.0).abs() < 2e-3, "{} vs {}", p[0], best.0);
+    }
+
+    #[test]
+    fn single_plane_trivial() {
+        let sol = solve_bmrm_dual(&[vec![2.0]], &[3.0], 0.5, 1e-9, 100);
+        assert_eq!(sol.beta, vec![1.0]);
+        assert!((sol.value - (3.0 - 2.0 / 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_brute_force_two_planes() {
+        // a1 = (1, 0), a2 = (0, 2) → G = [[1,0],[0,4]].
+        let gram = vec![vec![1.0, 0.0], vec![0.0, 4.0]];
+        let b = vec![0.5, 1.0];
+        let lambda = 0.25;
+        let sol = solve_bmrm_dual(&gram, &b, lambda, 1e-10, 10_000);
+        // Brute force over the simplex.
+        let mut best = f64::NEG_INFINITY;
+        let mut best_b0 = 0.0;
+        for k in 0..=100_000 {
+            let b0 = k as f64 / 100_000.0;
+            let b1 = 1.0 - b0;
+            let quad = b0 * b0 * 1.0 + b1 * b1 * 4.0;
+            let v = 0.5 * b0 + 1.0 * b1 - quad / (4.0 * lambda);
+            if v > best {
+                best = v;
+                best_b0 = b0;
+            }
+        }
+        assert!((sol.value - best).abs() < 1e-6, "{} vs {best}", sol.value);
+        assert!((sol.beta[0] - best_b0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn random_psd_problems_satisfy_kkt() {
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..20 {
+            let n = 2 + rng.gen_index(6);
+            let dim = 3 + rng.gen_index(5);
+            // Random subgradient vectors → PSD Gram.
+            let a: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect())
+                .collect();
+            let gram: Vec<Vec<f64>> = (0..n)
+                .map(|k| {
+                    (0..n)
+                        .map(|l| a[k].iter().zip(&a[l]).map(|(x, y)| x * y).sum())
+                        .collect()
+                })
+                .collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let lambda = rng.uniform(0.05, 1.0);
+            let sol = solve_bmrm_dual(&gram, &b, lambda, 1e-9, 50_000);
+            assert!(sol.kkt_residual < 1e-6, "residual {}", sol.kkt_residual);
+            // Value must beat every vertex within tolerance.
+            for k in 0..n {
+                let v = b[k] - gram[k][k] / (4.0 * lambda);
+                assert!(sol.value >= v - 1e-7, "vertex {k}: {v} > {}", sol.value);
+            }
+            // And every random feasible point.
+            for _ in 0..50 {
+                let r: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+                let beta = project_simplex(&r);
+                let mut quad = 0.0;
+                for k in 0..n {
+                    for l in 0..n {
+                        quad += beta[k] * gram[k][l] * beta[l];
+                    }
+                }
+                let v = b.iter().zip(&beta).map(|(x, y)| x * y).sum::<f64>()
+                    - quad / (4.0 * lambda);
+                assert!(sol.value >= v - 1e-7);
+            }
+        }
+    }
+}

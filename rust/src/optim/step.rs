@@ -1,0 +1,161 @@
+//! Step-size machinery.
+//!
+//! Algorithm 1 uses η_t = η₀/√t per epoch; the experiments (App. B)
+//! use AdaGrad [Duchi et al.] per-coordinate adaptation. Both are
+//! provided; AdaGrad is the default as in the paper.
+
+use crate::config::StepKind;
+
+/// Epoch-level scalar schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    Const { eta0: f64 },
+    /// η_t = η₀ / √t (t = epoch, 1-based) — the schedule of Theorem 1.
+    InvSqrt { eta0: f64 },
+}
+
+impl Schedule {
+    pub fn eta(&self, epoch: usize) -> f64 {
+        match *self {
+            Schedule::Const { eta0 } => eta0,
+            Schedule::InvSqrt { eta0 } => eta0 / ((epoch.max(1)) as f64).sqrt(),
+        }
+    }
+}
+
+/// Per-coordinate AdaGrad state: η_j = η₀ / √(ε + Σ g²).
+///
+/// The accumulators for the `w` coordinates travel with the `w` block
+/// in DSO's ring rotation (they are part of the coordinate's state),
+/// while the α accumulators stay put with their owner.
+#[derive(Clone, Debug)]
+pub struct AdaGrad {
+    pub eta0: f64,
+    pub accum: Vec<f32>,
+}
+
+pub const ADAGRAD_EPS: f64 = 1e-8;
+
+impl AdaGrad {
+    pub fn new(n: usize, eta0: f64) -> AdaGrad {
+        assert!(eta0 > 0.0);
+        AdaGrad { eta0, accum: vec![0.0; n] }
+    }
+
+    /// Accumulate g² for coordinate `j` and return the step size to use
+    /// for this update.
+    #[inline]
+    pub fn step(&mut self, j: usize, g: f64) -> f64 {
+        let a = self.accum[j] as f64 + g * g;
+        self.accum[j] = a as f32;
+        self.eta0 / (ADAGRAD_EPS + a).sqrt()
+    }
+
+    /// Read-only current step size (no accumulation).
+    #[inline]
+    pub fn current(&self, j: usize) -> f64 {
+        self.eta0 / (ADAGRAD_EPS + self.accum[j] as f64).sqrt()
+    }
+
+    pub fn len(&self) -> usize {
+        self.accum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accum.is_empty()
+    }
+}
+
+/// Unified stepper used by the scalar update loop: either a shared
+/// scalar η_t or AdaGrad per-coordinate state.
+#[derive(Clone, Debug)]
+pub enum Stepper {
+    Scalar(Schedule),
+    AdaGrad(AdaGrad),
+}
+
+impl Stepper {
+    pub fn new(kind: StepKind, n: usize, eta0: f64) -> Stepper {
+        match kind {
+            StepKind::Const => Stepper::Scalar(Schedule::Const { eta0 }),
+            StepKind::InvSqrt => Stepper::Scalar(Schedule::InvSqrt { eta0 }),
+            StepKind::AdaGrad => Stepper::AdaGrad(AdaGrad::new(n, eta0)),
+        }
+    }
+
+    /// Step size for coordinate `j` with incoming gradient `g` at epoch
+    /// `t` (1-based). AdaGrad accumulates; scalar schedules ignore j, g.
+    #[inline]
+    pub fn step(&mut self, j: usize, g: f64, epoch: usize) -> f64 {
+        match self {
+            Stepper::Scalar(s) => s.eta(epoch),
+            Stepper::AdaGrad(a) => a.step(j, g),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invsqrt_schedule() {
+        let s = Schedule::InvSqrt { eta0: 2.0 };
+        assert!((s.eta(1) - 2.0).abs() < 1e-12);
+        assert!((s.eta(4) - 1.0).abs() < 1e-12);
+        assert!((s.eta(100) - 0.2).abs() < 1e-12);
+        // Guard t = 0.
+        assert!((s.eta(0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn const_schedule() {
+        let s = Schedule::Const { eta0: 0.5 };
+        assert_eq!(s.eta(1), 0.5);
+        assert_eq!(s.eta(1000), 0.5);
+    }
+
+    #[test]
+    fn adagrad_decreases_with_gradient_mass() {
+        let mut a = AdaGrad::new(2, 1.0);
+        let e1 = a.step(0, 1.0);
+        let e2 = a.step(0, 1.0);
+        let e3 = a.step(0, 1.0);
+        assert!(e1 > e2 && e2 > e3);
+        assert!((e1 - 1.0).abs() < 1e-4); // 1/sqrt(1)
+        assert!((e2 - 1.0 / 2f64.sqrt()).abs() < 1e-4);
+        // Other coordinate untouched.
+        assert_eq!(a.accum[1], 0.0);
+    }
+
+    #[test]
+    fn adagrad_per_coordinate_independent() {
+        let mut a = AdaGrad::new(2, 1.0);
+        for _ in 0..10 {
+            a.step(0, 2.0);
+        }
+        let big = a.current(0);
+        let fresh = a.current(1);
+        assert!(fresh > big * 5.0);
+    }
+
+    #[test]
+    fn adagrad_zero_grad_keeps_step() {
+        let mut a = AdaGrad::new(1, 1.0);
+        let e = a.step(0, 0.0);
+        assert!(e > 1e3); // 1/sqrt(eps)
+        assert_eq!(a.accum[0], 0.0);
+    }
+
+    #[test]
+    fn stepper_dispatch() {
+        let mut s = Stepper::new(StepKind::InvSqrt, 4, 1.0);
+        assert!((s.step(0, 123.0, 4) - 0.5).abs() < 1e-12);
+        let mut s = Stepper::new(StepKind::AdaGrad, 4, 1.0);
+        let e1 = s.step(2, 1.0, 1);
+        let e2 = s.step(2, 1.0, 1);
+        assert!(e2 < e1);
+        let mut s = Stepper::new(StepKind::Const, 4, 0.25);
+        assert_eq!(s.step(3, 9.0, 77), 0.25);
+    }
+}

@@ -1,0 +1,199 @@
+//! Partitioning of rows, columns, and the nonzero set Ω (Section 3).
+//!
+//! DSO partitions {1..m} into I_1..I_p and {1..d} into J_1..J_p, which
+//! induces the p×p block grid Ω^(q,r). At inner iteration r, worker q
+//! works on Ω^(q, σ_r(q)) with σ_r(q) = ((q+r−2) mod p) + 1 — a
+//! diagonal-shift schedule that keeps all active blocks row- and
+//! column-disjoint, the property that makes the parallel updates
+//! serializable (Lemma 2).
+
+pub mod omega;
+pub mod schedule;
+
+pub use omega::OmegaBlocks;
+pub use schedule::RingSchedule;
+
+/// A contiguous partition of `[0, n)` into `p` blocks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Block boundaries; len = p + 1, bounds[0] = 0, bounds[p] = n.
+    pub bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Equal-count partition (±1).
+    pub fn even(n: usize, p: usize) -> Partition {
+        assert!(p >= 1);
+        let mut bounds = Vec::with_capacity(p + 1);
+        for q in 0..=p {
+            bounds.push(q * n / p);
+        }
+        Partition { bounds }
+    }
+
+    /// Weight-balanced contiguous partition: greedy sweep targeting
+    /// total_weight/p per block (used to balance nnz across workers so
+    /// |Ω^(q,r)| ≈ |Ω|/p², Theorem 1's load assumption).
+    pub fn balanced(weights: &[u64], p: usize) -> Partition {
+        assert!(p >= 1);
+        let n = weights.len();
+        let total: u64 = weights.iter().sum();
+        let mut bounds = vec![0usize];
+        let mut i = 0usize;
+        let mut consumed: u64 = 0;
+        for q in 0..p - 1 {
+            let remaining_blocks = (p - q) as u64;
+            let remaining_weight = total - consumed;
+            // Adaptive target: remaining weight split over remaining
+            // blocks. Recomputing per block absorbs heavy outlier items
+            // instead of leaving empty blocks behind them.
+            let target = (remaining_weight + remaining_blocks - 1) / remaining_blocks;
+            let mut acc: u64 = 0;
+            // Leave at least one item per remaining block when possible.
+            let reserve = p - q - 1;
+            while i < n && n - i > reserve && (acc < target || weights[i] == 0 && acc == 0) {
+                acc += weights[i];
+                i += 1;
+                if acc >= target {
+                    break;
+                }
+            }
+            // Degenerate all-zero tail: fall back to even spacing.
+            if acc == 0 && i < n && remaining_weight == 0 {
+                i = ((q + 1) * n / p).max(i);
+            }
+            consumed += acc;
+            bounds.push(i);
+        }
+        bounds.push(n);
+        Partition { bounds }
+    }
+
+    pub fn p(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn n(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Half-open range of block q.
+    #[inline]
+    pub fn block(&self, q: usize) -> std::ops::Range<usize> {
+        self.bounds[q]..self.bounds[q + 1]
+    }
+
+    #[inline]
+    pub fn block_len(&self, q: usize) -> usize {
+        self.bounds[q + 1] - self.bounds[q]
+    }
+
+    /// Owner block of item `i` (binary search).
+    #[inline]
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.n());
+        // partition_point returns count of bounds <= i, in [1, p].
+        self.bounds.partition_point(|&b| b <= i) - 1
+    }
+
+    /// Verify cover & disjointness.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bounds.is_empty() || self.bounds[0] != 0 {
+            return Err("bounds must start at 0".into());
+        }
+        for k in 1..self.bounds.len() {
+            if self.bounds[k] < self.bounds[k - 1] {
+                return Err(format!("bounds not monotone at {k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn even_partition_covers() {
+        let p = Partition::even(10, 3);
+        assert_eq!(p.bounds, vec![0, 3, 6, 10]);
+        assert_eq!(p.p(), 3);
+        assert_eq!(p.block(2), 6..10);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn even_partition_more_blocks_than_items() {
+        let p = Partition::even(2, 4);
+        p.validate().unwrap();
+        assert_eq!(p.n(), 2);
+        let total: usize = (0..4).map(|q| p.block_len(q)).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn owner_matches_block() {
+        let p = Partition::even(100, 7);
+        for q in 0..7 {
+            for i in p.block(q) {
+                assert_eq!(p.owner(i), q, "item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_partition_balances_weights() {
+        // Heavily skewed weights: first item huge.
+        let mut weights = vec![1u64; 100];
+        weights[0] = 100;
+        let p = Partition::balanced(&weights, 4);
+        p.validate().unwrap();
+        assert_eq!(p.n(), 100);
+        // First block should contain just the heavy item.
+        assert_eq!(p.block_len(0), 1, "block0 {:?}", p.bounds);
+        let sums: Vec<u64> =
+            (0..4).map(|q| p.block(q).map(|i| weights[i]).sum()).collect();
+        // The three tail blocks split the remaining weight evenly.
+        let tail_max = *sums[1..].iter().max().unwrap() as f64;
+        let tail_min = *sums[1..].iter().min().unwrap() as f64;
+        assert!(tail_max / tail_min.max(1.0) < 1.5, "sums {sums:?}");
+        assert!(sums[1..].iter().all(|&s| s > 0), "empty tail block: {sums:?}");
+    }
+
+    #[test]
+    fn balanced_partition_zero_weights() {
+        let p = Partition::balanced(&vec![0u64; 10], 3);
+        p.validate().unwrap();
+        assert_eq!(p.n(), 10);
+        assert_eq!(p.p(), 3);
+    }
+
+    #[test]
+    fn prop_partitions_cover_and_disjoint() {
+        prop::check("partition cover", 200, |g| {
+            let n = g.usize_in(1, 500);
+            let p_count = g.usize_in(1, 16);
+            let part = if g.bool() {
+                Partition::even(n, p_count)
+            } else {
+                let weights: Vec<u64> =
+                    (0..n).map(|_| g.usize_in(0, 20) as u64).collect();
+                Partition::balanced(&weights, p_count)
+            };
+            part.validate().map_err(|e| e)?;
+            prop::assert_that(part.p() == p_count, "block count")?;
+            prop::assert_that(part.n() == n, "n")?;
+            let total: usize = (0..p_count).map(|q| part.block_len(q)).sum();
+            prop::assert_that(total == n, format!("cover {total} != {n}"))?;
+            // owner() consistent on a sample of items.
+            for _ in 0..10.min(n) {
+                let i = g.usize_in(0, n - 1);
+                let q = part.owner(i);
+                prop::assert_that(part.block(q).contains(&i), format!("owner of {i}"))?;
+            }
+            Ok(())
+        });
+    }
+}

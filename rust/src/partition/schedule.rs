@@ -1,0 +1,140 @@
+//! The ring schedule σ_r of Section 3.
+//!
+//! Paper (1-based): at inner iteration r, processor q owns w-block
+//! σ_r(q) = ((q + r − 2) mod p) + 1. We use 0-based indices throughout:
+//! σ_r(q) = (q + r) mod p, with r ∈ {0, …, p−1} inside an epoch.
+//! After inner iteration r, worker q sends its w-block to the worker
+//! that owns it at r+1, which is worker (q − 1 + p) mod p — i.e. blocks
+//! travel backwards around the ring, one hop per inner iteration.
+
+#[derive(Clone, Copy, Debug)]
+pub struct RingSchedule {
+    pub p: usize,
+}
+
+impl RingSchedule {
+    pub fn new(p: usize) -> RingSchedule {
+        assert!(p >= 1);
+        RingSchedule { p }
+    }
+
+    /// Block of `w` owned by worker q at inner iteration r (0-based).
+    #[inline]
+    pub fn owned_block(&self, q: usize, r: usize) -> usize {
+        (q + r) % self.p
+    }
+
+    /// Worker owning block `b` at inner iteration r.
+    #[inline]
+    pub fn owner_of_block(&self, b: usize, r: usize) -> usize {
+        (b + self.p - (r % self.p)) % self.p
+    }
+
+    /// Destination worker for q's current block when moving from inner
+    /// iteration r to r+1.
+    #[inline]
+    pub fn send_to(&self, q: usize) -> usize {
+        (q + self.p - 1) % self.p
+    }
+
+    /// Worker from which q receives its next block.
+    #[inline]
+    pub fn recv_from(&self, q: usize) -> usize {
+        (q + 1) % self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matches_paper_formula_1based() {
+        // σ_r(q) = ((q + r − 2) mod p) + 1 in 1-based == (q0 + r0) mod p.
+        let p = 5;
+        let s = RingSchedule::new(p);
+        for q1 in 1..=p {
+            for r1 in 1..=p {
+                let paper = ((q1 + r1 - 2) % p) + 1;
+                assert_eq!(s.owned_block(q1 - 1, r1 - 1) + 1, paper);
+            }
+        }
+    }
+
+    #[test]
+    fn each_worker_sees_every_block_once_per_epoch() {
+        for p in 1..=8 {
+            let s = RingSchedule::new(p);
+            for q in 0..p {
+                let mut seen: Vec<usize> = (0..p).map(|r| s.owned_block(q, r)).collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..p).collect::<Vec<_>>(), "p={p} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_blocks_disjoint_within_inner_iteration() {
+        // At any r, the map q -> owned_block(q, r) must be a bijection —
+        // this is what guarantees no two workers share a w block.
+        for p in 1..=8 {
+            let s = RingSchedule::new(p);
+            for r in 0..p {
+                let mut blocks: Vec<usize> = (0..p).map(|q| s.owned_block(q, r)).collect();
+                blocks.sort_unstable();
+                assert_eq!(blocks, (0..p).collect::<Vec<_>>(), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn owner_of_block_inverts_owned_block() {
+        prop::check("ring inverse", 200, |g| {
+            let p = g.usize_in(1, 12);
+            let s = RingSchedule::new(p);
+            let q = g.usize_in(0, p - 1);
+            let r = g.usize_in(0, 3 * p);
+            let b = s.owned_block(q, r);
+            prop::assert_that(
+                s.owner_of_block(b, r) == q,
+                format!("p={p} q={q} r={r} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn send_to_delivers_block_to_next_owner() {
+        // The worker q sends block b = owned_block(q, r) to send_to(q);
+        // that worker must own b at r+1.
+        for p in 1..=8 {
+            let s = RingSchedule::new(p);
+            for r in 0..2 * p {
+                for q in 0..p {
+                    let b = s.owned_block(q, r);
+                    let dst = s.send_to(q);
+                    assert_eq!(s.owned_block(dst, r + 1), b, "p={p} q={q} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recv_from_is_inverse_of_send_to() {
+        for p in 1..=8 {
+            let s = RingSchedule::new(p);
+            for q in 0..p {
+                assert_eq!(s.send_to(s.recv_from(q)), q);
+                assert_eq!(s.recv_from(s.send_to(q)), q);
+            }
+        }
+    }
+
+    #[test]
+    fn p_equals_one_is_identity() {
+        let s = RingSchedule::new(1);
+        assert_eq!(s.owned_block(0, 0), 0);
+        assert_eq!(s.owned_block(0, 5), 0);
+        assert_eq!(s.send_to(0), 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact manifest — the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (run time).
+//!
+//! `make artifacts` writes `artifacts/manifest.json` listing every AOT
+//! HLO module: its kind (`tile_update` / `tile_objective`), loss, tile
+//! shape (bm × bd), file path, and estimated VMEM residency. The
+//! runtime never guesses shapes: everything it loads is declared here.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub loss: String,
+    pub bm: usize,
+    pub bd: usize,
+    /// Fused batched steps per invocation (tile_update artifacts).
+    pub iters: usize,
+    pub path: PathBuf,
+    pub vmem_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default location: `$DSO_ARTIFACTS` or `artifacts/` under the
+    /// current directory (walking up to 3 parents, so tests and
+    /// examples work from any workspace subdirectory).
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        if let Ok(dir) = std::env::var("DSO_ARTIFACTS") {
+            return Self::load(Path::new(&dir));
+        }
+        let mut base = std::env::current_dir()?;
+        for _ in 0..4 {
+            let cand = base.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::load(&cand);
+            }
+            if !base.pop() {
+                break;
+            }
+        }
+        anyhow::bail!("no artifacts/manifest.json found; run `make artifacts`")
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let schema = v.get("schema").and_then(|s| s.as_i64()).unwrap_or(0);
+        anyhow::ensure!(schema == 1, "unsupported manifest schema {schema}");
+        let jax_version =
+            v.get("jax_version").and_then(|s| s.as_str()).unwrap_or("unknown").to_string();
+        let mut entries = Vec::new();
+        for e in v.get("entries").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let get_s = |k: &str| {
+                e.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry missing '{k}'"))
+            };
+            let get_n = |k: &str| {
+                e.get(k)
+                    .and_then(|x| x.as_i64())
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry missing '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                name: get_s("name")?,
+                kind: get_s("kind")?,
+                loss: get_s("loss")?,
+                bm: get_n("bm")? as usize,
+                bd: get_n("bd")? as usize,
+                iters: get_n("iters").unwrap_or(1) as usize,
+                path: dir.join(get_s("path")?),
+                vmem_bytes: get_n("vmem_bytes").unwrap_or(0) as u64,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Manifest { dir: dir.to_path_buf(), jax_version, entries })
+    }
+
+    /// Entries of a kind/loss, any shape.
+    pub fn find(&self, kind: &str, loss: &str) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.kind == kind && e.loss == loss).collect()
+    }
+
+    /// Exact shape lookup (any iters; prefers iters == 1).
+    pub fn find_exact(&self, kind: &str, loss: &str, bm: usize, bd: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.loss == loss && e.bm == bm && e.bd == bd)
+            .min_by_key(|e| e.iters)
+    }
+
+    /// Exact (shape, iters) lookup.
+    pub fn find_iters(
+        &self,
+        kind: &str,
+        loss: &str,
+        bm: usize,
+        bd: usize,
+        iters: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == kind && e.loss == loss && e.bm == bm && e.bd == bd && e.iters == iters
+        })
+    }
+
+    /// Choose the tile shape that minimizes padded work for a block of
+    /// `rows × cols`: minimal total padded area over the sub-tile grid.
+    pub fn choose_tile(&self, kind: &str, loss: &str, rows: usize, cols: usize) -> Option<&ArtifactEntry> {
+        self.find(kind, loss)
+            .into_iter()
+            .min_by_key(|e| {
+                let tiles_r = rows.div_ceil(e.bm).max(1);
+                let tiles_c = cols.div_ceil(e.bd).max(1);
+                // Padded area + per-call overhead. Profiling (§Perf):
+                // a PJRT call costs ~120µs fixed vs ~3ns per element,
+                // i.e. one call ≈ 40k elements — so fewer, larger tiles
+                // win until padding dwarfs the fixed cost.
+                (tiles_r * e.bm * tiles_c * e.bd) as u64
+                    + 40_000 * (tiles_r * tiles_c) as u64
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schema": 1,
+      "jax_version": "0.8.2",
+      "entries": [
+        {"name": "tile_update_hinge_64x64", "kind": "tile_update", "loss": "hinge",
+         "bm": 64, "bd": 64, "path": "a.hlo.txt", "vmem_bytes": 100},
+        {"name": "tile_update_hinge_32x32", "kind": "tile_update", "loss": "hinge",
+         "bm": 32, "bd": 32, "path": "b.hlo.txt", "vmem_bytes": 50},
+        {"name": "tile_objective_hinge_64x64", "kind": "tile_objective", "loss": "hinge",
+         "bm": 64, "bd": 64, "path": "c.hlo.txt", "vmem_bytes": 80}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.entries[0].path, Path::new("/tmp/x/a.hlo.txt"));
+    }
+
+    #[test]
+    fn find_filters() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert_eq!(m.find("tile_update", "hinge").len(), 2);
+        assert_eq!(m.find("tile_update", "logistic").len(), 0);
+        assert!(m.find_exact("tile_update", "hinge", 32, 32).is_some());
+        assert!(m.find_exact("tile_update", "hinge", 16, 16).is_none());
+    }
+
+    #[test]
+    fn choose_tile_minimizes_padding() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        // 33x33 block: 64x64 pads to 4096, 32x32 needs 4 tiles = 4096 +
+        // more call overhead... 64x64 = 1 tile. Area equal; overhead
+        // favors 64.
+        let t = m.choose_tile("tile_update", "hinge", 33, 33).unwrap();
+        assert_eq!(t.bm, 64);
+        // 32x32 block fits 32 exactly.
+        let t = m.choose_tile("tile_update", "hinge", 32, 32).unwrap();
+        assert_eq!(t.bm, 32);
+        // 128x128 block: 4 tiles of 64 (16384) vs 16 tiles of 32 — area
+        // equal, fewer calls wins.
+        let t = m.choose_tile("tile_update", "hinge", 128, 128).unwrap();
+        assert_eq!(t.bm, 64);
+    }
+
+    #[test]
+    fn rejects_bad_schema_and_empty() {
+        assert!(Manifest::parse(Path::new("."), r#"{"schema": 2, "entries": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"schema": 1, "entries": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        // Integration hook: when `make artifacts` has run, validate the
+        // real manifest.
+        if let Ok(m) = Manifest::load_default() {
+            assert!(!m.entries.is_empty());
+            for e in &m.entries {
+                assert!(e.path.exists(), "{} missing", e.path.display());
+                assert!(e.bm > 0 && e.bd > 0);
+            }
+            // All three losses present for tile_update.
+            for loss in ["hinge", "logistic", "square"] {
+                assert!(!m.find("tile_update", loss).is_empty(), "{loss}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: the bridge from the Rust coordinator to the AOT
+//! JAX/Pallas artifacts (HLO text → compile once → execute on the hot
+//! path). Python never runs at training time.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod tile_engine;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,276 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once on the
+//! CPU PJRT client, and execute them from the coordinator's paths.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile`.
+//! Executables are cached by name — compilation happens once per
+//! artifact per process. The `xla` crate's client is `Rc`-based (not
+//! `Send`), so a [`PjrtRuntime`] lives on one thread; the tile engine
+//! simulates worker parallelism with virtual clocks instead (see
+//! `tile_engine`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact under `name`. No-op if
+    /// already loaded.
+    pub fn load(&mut self, name: &str, path: &Path) -> anyhow::Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            anyhow::anyhow!("loading HLO text {}: {e:?}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            anyhow::anyhow!("compiling {}: {e:?}", path.display())
+        })?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute a loaded artifact. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into its element literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Pack an f32 slice as a rank-1 literal.
+pub fn lit_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Pack an f32 slice as a rank-2 (rows × cols) literal.
+pub fn lit_mat(v: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "matrix literal size mismatch");
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Unpack a rank-n f32 literal into a Vec.
+pub fn lit_to_vec(l: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+
+    // These tests require `make artifacts`; they are skipped (not
+    // failed) when the manifest is absent so `cargo test` works on a
+    // fresh checkout. CI/Makefile always builds artifacts first.
+    fn manifest() -> Option<Manifest> {
+        Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_execute_tile_update() {
+        let Some(m) = manifest() else { return };
+        let e = m.find_exact("tile_update", "hinge", 32, 32).expect("32x32 artifact");
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        rt.load(&e.name, &e.path).unwrap();
+        assert!(rt.is_loaded(&e.name));
+        // Idempotent load.
+        rt.load(&e.name, &e.path).unwrap();
+
+        let (bm, bd) = (e.bm, e.bd);
+        let x = vec![0.01f32; bm * bd];
+        let w = vec![0.5f32; bd];
+        let w_acc = vec![0f32; bd];
+        let alpha = vec![0.5f32; bm];
+        let a_acc = vec![0f32; bm];
+        let y = vec![1.0f32; bm];
+        let row_scale = vec![1e-3f32; bm];
+        let col_scale = vec![1e-2f32; bd];
+        let lambda = 1e-3f32;
+        let params = vec![0.1f32, lambda, 1e-3, 1.0 / lambda.sqrt()];
+        let inputs = vec![
+            lit_mat(&x, bm, bd).unwrap(),
+            lit_vec(&w),
+            lit_vec(&w_acc),
+            lit_vec(&alpha),
+            lit_vec(&a_acc),
+            lit_vec(&y),
+            lit_vec(&row_scale),
+            lit_vec(&col_scale),
+            lit_vec(&params),
+        ];
+        let out = rt.execute(&e.name, &inputs).unwrap();
+        assert_eq!(out.len(), 4);
+        let w2 = lit_to_vec(&out[0]).unwrap();
+        let alpha2 = lit_to_vec(&out[2]).unwrap();
+        assert_eq!(w2.len(), bd);
+        assert_eq!(alpha2.len(), bm);
+        // Must have moved and stayed feasible.
+        assert!(w2.iter().any(|&v| (v - 0.5).abs() > 1e-9));
+        assert!(alpha2.iter().all(|&a| (0.0..=1.0).contains(&a)));
+    }
+
+    #[test]
+    fn execute_matches_rust_scalar_semantics_on_1x1() {
+        // On a 1x1 tile the batched update *is* the scalar update (8):
+        // cross-check the kernel against coordinator::updates.
+        let Some(m) = manifest() else { return };
+        let e = m.find_exact("tile_update", "hinge", 32, 32).unwrap();
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        rt.load(&e.name, &e.path).unwrap();
+        let (bm, bd) = (e.bm, e.bd);
+
+        // Only cell (0,0) active; everything else padding.
+        let mut x = vec![0f32; bm * bd];
+        x[0] = 2.0;
+        let mut w = vec![0f32; bd];
+        w[0] = 0.5;
+        let w_acc = vec![0f32; bd];
+        let mut alpha = vec![0f32; bm];
+        alpha[0] = 0.25;
+        let a_acc = vec![0f32; bm];
+        let mut y = vec![1.0f32; bm];
+        y[0] = 1.0;
+        // m=2, |Ω_0|=2, |Ω̄_0|=2 as in the updates.rs unit test.
+        let mut row_scale = vec![0f32; bm];
+        row_scale[0] = 1.0 / (2.0 * 2.0);
+        let mut col_scale = vec![0f32; bd];
+        col_scale[0] = 1.0 / 2.0;
+        let lambda = 0.1f32;
+        // Fixed-step equivalent: AdaGrad with fresh accumulators gives
+        // eta = eta0/|g| — instead cross-check against the AdaGrad rust
+        // path for exactness.
+        let params = vec![0.5f32, lambda, 0.5, 1.0 / lambda.sqrt()];
+        let inputs = vec![
+            lit_mat(&x, bm, bd).unwrap(),
+            lit_vec(&w),
+            lit_vec(&w_acc),
+            lit_vec(&alpha),
+            lit_vec(&a_acc),
+            lit_vec(&y),
+            lit_vec(&row_scale),
+            lit_vec(&col_scale),
+            lit_vec(&params),
+        ];
+        let out = rt.execute(&e.name, &inputs).unwrap();
+        let w2 = lit_to_vec(&out[0]).unwrap();
+        let a2 = lit_to_vec(&out[2]).unwrap();
+
+        // Rust scalar path (AdaGrad, same numbers).
+        use crate::coordinator::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+        use crate::partition::omega::Entry;
+        let row_counts = [2u32, 1];
+        let col_counts = [2u32, 1];
+        let ys = [1.0f32, -1.0];
+        let ctx = SweepCtx {
+            loss: crate::losses::Loss::Hinge,
+            reg: crate::losses::Regularizer::L2,
+            lambda: 0.1,
+            m: 2.0,
+            row_counts: &row_counts,
+            col_counts: &col_counts,
+            y: &ys,
+            w_bound: crate::losses::Loss::Hinge.w_bound(0.1),
+            rule: StepRule::AdaGrad(0.5),
+        };
+        let entries = [Entry { i: 0, j: 0, x: 2.0 }];
+        let mut ws = [0.5f32];
+        let mut wacc = [0f32];
+        let mut al = [0.25f32];
+        let mut aacc = [0f32];
+        let mut st = BlockState {
+            w: &mut ws,
+            w_acc: &mut wacc,
+            w_off: 0,
+            alpha: &mut al,
+            a_acc: &mut aacc,
+            a_off: 0,
+        };
+        sweep_block(&entries, &ctx, &mut st);
+        assert!((w2[0] - ws[0]).abs() < 1e-5, "kernel {} vs rust {}", w2[0], ws[0]);
+        assert!((a2[0] - al[0]).abs() < 1e-5, "kernel {} vs rust {}", a2[0], al[0]);
+        // Padding untouched.
+        assert!(w2[1..].iter().all(|&v| v == 0.0));
+        assert!(a2[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tile_objective_margins_match_cpu() {
+        let Some(m) = manifest() else { return };
+        let e = m.find_exact("tile_objective", "logistic", 32, 32).unwrap();
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        rt.load(&e.name, &e.path).unwrap();
+        let (bm, bd) = (e.bm, e.bd);
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let x: Vec<f32> = (0..bm * bd).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let y: Vec<f32> =
+            (0..bm).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let w: Vec<f32> = (0..bd).map(|_| rng.uniform(-0.3, 0.3) as f32).collect();
+        let active = vec![1.0f32; bm];
+        let out = rt
+            .execute(
+                &e.name,
+                &[
+                    lit_mat(&x, bm, bd).unwrap(),
+                    lit_vec(&y),
+                    lit_vec(&w),
+                    lit_vec(&active),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let margins = lit_to_vec(&out[1]).unwrap();
+        for i in 0..bm {
+            let u: f64 = (0..bd).map(|j| x[i * bd + j] as f64 * w[j] as f64).sum();
+            assert!((margins[i] as f64 - u).abs() < 1e-4, "row {i}");
+        }
+        let risk = lit_to_vec(&out[0]).unwrap()[0] as f64;
+        let expect: f64 = (0..bm)
+            .map(|i| {
+                crate::losses::Loss::Logistic.primal(margins[i] as f64, y[i] as f64)
+            })
+            .sum();
+        assert!((risk - expect).abs() / expect.max(1.0) < 1e-4, "{risk} vs {expect}");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let err = match rt.execute("nope", &[]) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("not loaded"));
+        let mut rt = rt;
+        assert!(rt.load("x", Path::new("/nonexistent/file.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Micro-benchmark harness.
+//!
+//! criterion is not in the offline crate set, so DSO ships a compact
+//! harness with the same core discipline: warmup, fixed-time batched
+//! measurement, and robust summary statistics. Benches under
+//! `rust/benches/` use `harness = false` and drive this module from
+//! their own `main`, so `cargo bench` works end to end.
+
+use super::stats::quantile;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum number of measured samples regardless of time budget.
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for CI / `cargo test` smoke usage.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            max_samples: 50,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        super::stats::mean(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        super::stats::median(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let mut s = super::stats::Streaming::new();
+        for &x in &self.samples {
+            s.push(x);
+        }
+        s.stddev()
+    }
+
+    pub fn p05(&self) -> f64 {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, 0.05)
+    }
+
+    pub fn p95(&self) -> f64 {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, 0.95)
+    }
+
+    /// Iterations (calls of the benched closure) per second.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median().max(1e-18)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  median={} mean={} p95={} (n={} x{})",
+            self.name,
+            human_time(self.median()),
+            human_time(self.median()),
+            human_time(self.mean()),
+            human_time(self.p95()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run one benchmark: auto-calibrated batch size, warmup, then timed
+/// samples until the time budget or sample cap is reached.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Calibrate: how many iterations fit in ~1ms?
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters_per_sample = ((1e-3 / once).ceil() as u64).clamp(1, 1_000_000);
+
+    // Warmup.
+    let warm_end = Instant::now() + cfg.warmup;
+    while Instant::now() < warm_end {
+        for _ in 0..iters_per_sample {
+            black_box(f());
+        }
+    }
+
+    // Measure.
+    let mut samples = Vec::new();
+    let measure_end = Instant::now() + cfg.measure;
+    while (Instant::now() < measure_end || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+
+    BenchResult { name: name.to_string(), samples, iters_per_sample }
+}
+
+/// Bench group runner: prints criterion-style lines and collects results
+/// so bench binaries can also dump CSVs.
+pub struct Runner {
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Runner {
+    /// Honors the `--bench <filter>` / positional filter that `cargo
+    /// bench -- <filter>` passes on argv, plus `DSO_BENCH_QUICK=1`.
+    pub fn from_env(group: &str) -> Self {
+        let cfg = if std::env::var("DSO_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--") && !a.is_empty());
+        println!("== bench group: {group} ==");
+        Self { cfg, results: Vec::new(), filter }
+    }
+
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        if let Some(ref flt) = self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        let r = bench(name, &self.cfg, f);
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+
+    /// Write a summary CSV under results/bench/.
+    pub fn finish(&self, group: &str) {
+        let mut t = super::csv::Table::new(&["median_s", "mean_s", "p95_s", "samples"]);
+        for r in &self.results {
+            t.push(vec![r.median(), r.mean(), r.p95(), r.samples.len() as f64]);
+        }
+        let dir = std::path::Path::new("results/bench");
+        let _ = std::fs::create_dir_all(dir);
+        // Names live in a side file because Table is numeric-only.
+        let names: Vec<String> = self.results.iter().map(|r| r.name.clone()).collect();
+        let _ = std::fs::write(dir.join(format!("{group}.names.txt")), names.join("\n"));
+        let _ = t.write_csv(&dir.join(format!("{group}.csv")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let cfg = BenchConfig::quick();
+        let r = bench("noop", &cfg, || 1 + 1);
+        assert!(r.samples.len() >= cfg.min_samples);
+        assert!(r.median() >= 0.0);
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn bench_orders_fast_vs_slow() {
+        let cfg = BenchConfig::quick();
+        let fast = bench("fast", &cfg, || black_box(0u64));
+        let slow = bench("slow", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..2000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(slow.median() > fast.median());
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with('s'));
+        assert!(human_time(2e-3).ends_with("ms"));
+        assert!(human_time(2e-6).ends_with("us"));
+        assert!(human_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn result_percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            iters_per_sample: 1,
+        };
+        assert!(r.p05() <= r.median());
+        assert!(r.median() <= r.p95());
+        assert!((r.throughput() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

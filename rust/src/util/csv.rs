@@ -1,0 +1,206 @@
+//! CSV series writer used by the experiment drivers to emit the data
+//! behind every reproduced figure. Kept deliberately simple: numeric
+//! columns, a header, and an atomic write-to-temp-then-rename.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A table of named numeric columns collected row by row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Self { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Column by name.
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row.iter().map(|v| format_num(*v)).collect();
+            s.push_str(&line.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Atomic write (temp + rename) so partially-written result files are
+    /// never observed by plotting scripts.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp: PathBuf = path.with_extension("csv.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(self.to_csv().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+
+    pub fn read_csv(path: &Path) -> std::io::Result<Table> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse_csv(&text))
+    }
+
+    pub fn parse_csv(text: &str) -> Table {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        let columns: Vec<String> = header.split(',').map(|s| s.trim().to_string()).collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row: Vec<f64> =
+                line.split(',').map(|v| v.trim().parse::<f64>().unwrap_or(f64::NAN)).collect();
+            rows.push(row);
+        }
+        Table { columns, rows }
+    }
+
+    /// Render as an aligned ASCII table (for terminal output of the
+    /// experiment drivers, mirroring the paper's reported rows).
+    pub fn render(&self, max_rows: usize) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let shown = self.rows.iter().take(max_rows);
+        let formatted: Vec<Vec<String>> =
+            shown.map(|r| r.iter().map(|v| format_num(*v)).collect()).collect();
+        for row in &formatted {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+        for row in &formatted {
+            for (i, cell) in row.iter().enumerate() {
+                out.push_str(&format!("{:>w$}  ", cell, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        if self.rows.len() > max_rows {
+            out.push_str(&format!("... ({} more rows)\n", self.rows.len() - max_rows));
+        }
+        out
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v.is_nan() {
+        return "nan".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e12 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 1e-3 && v.abs() < 1e7 {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_string() {
+        let mut t = Table::new(&["epoch", "obj", "gap"]);
+        t.push(vec![1.0, 0.5, 0.25]);
+        t.push(vec![2.0, 0.45, 0.125]);
+        let t2 = Table::parse_csv(&t.to_csv());
+        assert_eq!(t2.columns, t.columns);
+        assert_eq!(t2.rows.len(), 2);
+        assert!((t2.rows[1][1] - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("dso_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec![1e-9, 123456789.0]);
+        t.write_csv(&path).unwrap();
+        let t2 = Table::read_csv(&path).unwrap();
+        assert!((t2.rows[0][0] - 1e-9).abs() < 1e-21);
+        assert_eq!(t2.rows[0][1], 123456789.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn col_access() {
+        let mut t = Table::new(&["x", "y"]);
+        t.push(vec![1.0, 10.0]);
+        t.push(vec![2.0, 20.0]);
+        assert_eq!(t.col("y").unwrap(), vec![10.0, 20.0]);
+        assert!(t.col("z").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_row_width_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec![1.0]);
+    }
+
+    #[test]
+    fn render_produces_header_and_rows() {
+        let mut t = Table::new(&["epoch", "objective"]);
+        t.push(vec![1.0, 0.693147]);
+        let r = t.render(10);
+        assert!(r.contains("epoch"));
+        assert!(r.contains("0.693147"));
+    }
+
+    #[test]
+    fn render_truncates() {
+        let mut t = Table::new(&["i"]);
+        for i in 0..20 {
+            t.push(vec![i as f64]);
+        }
+        let r = t.render(5);
+        assert!(r.contains("more rows"));
+    }
+
+    #[test]
+    fn format_num_styles() {
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(0.5), "0.5");
+        assert_eq!(format_num(f64::NAN), "nan");
+        assert!(format_num(1.23e-8).contains('e'));
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundation utilities (offline substitutes for rand / serde_json /
+//! criterion / proptest, plus timing/stats/CSV plumbing shared by the
+//! coordinator, the experiment drivers and the benches).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,149 @@
+//! Tiny property-based testing harness (offline substitute for
+//! proptest). Provides seeded case generation, a configurable number of
+//! cases, and first-failure reporting with the failing seed so a case
+//! can be replayed deterministically.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("partition covers", 200, |g| {
+//!     let n = g.usize_in(1, 1000);
+//!     let p = g.usize_in(1, 16);
+//!     let parts = partition(n, p);
+//!     prop::assert_that(parts.concat().len() == n, "cover")
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        assert!(lo <= hi_inclusive);
+        lo + self.rng.gen_index(hi_inclusive - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_index(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` randomized cases of `body`. The body returns
+/// `Result<(), String>`; the first failure panics with the case seed.
+/// Base seed can be overridden via `DSO_PROP_SEED` for replay;
+/// `DSO_PROP_CASES` scales the case count.
+pub fn check(name: &str, cases: usize, mut body: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed = std::env::var("DSO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xD50_2014);
+    let cases = std::env::var("DSO_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(cases);
+    let mut root = Xoshiro256::new(base_seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen { rng: Xoshiro256::new(case_seed), case_seed };
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with DSO_PROP_SEED={base_seed}, case seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper for readable assertions inside property bodies.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always true", 50, |g| {
+            n += 1;
+            let x = g.usize_in(0, 10);
+            assert_that(x <= 10, "bound")
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            assert_that(x > 1000, "impossible")
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", 100, |g| {
+            let u = g.usize_in(3, 7);
+            assert_that((3..=7).contains(&u), format!("usize {u}"))?;
+            let f = g.f64_in(-1.0, 1.0);
+            assert_that((-1.0..1.0).contains(&f), format!("f64 {f}"))?;
+            let v = g.vec_f32(5, 0.0, 2.0);
+            assert_that(v.len() == 5 && v.iter().all(|&x| (0.0..2.0).contains(&x)), "vec")
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+
+    #[test]
+    fn pick_returns_member() {
+        check("pick", 50, |g| {
+            let xs = [1, 5, 9];
+            let p = *g.pick(&xs);
+            assert_that(xs.contains(&p), "member")
+        });
+    }
+}

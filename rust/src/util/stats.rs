@@ -1,0 +1,242 @@
+//! Streaming statistics and small numeric helpers used by the bench
+//! harness, the convergence monitor and the experiment drivers.
+
+/// Welford streaming mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Streaming {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Streaming {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Streaming) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 =
+            self.m2 + other.m2 + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact quantile of a sample (interpolated, type-7 like numpy default).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted slice (copies).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&v, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Ordinary least squares slope of y on x — used to measure convergence
+/// rates (e.g. log gap vs log T should have slope ≈ −1/2 per Theorem 1).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..x.len() {
+        num += (x[i] - mx) * (y[i] - my);
+        den += (x[i] - mx) * (x[i] - mx);
+    }
+    num / den
+}
+
+/// Relative difference |a-b| / max(|a|, |b|, eps).
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / scale
+}
+
+/// Dot product (f64 accumulation over f32 slices).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// L2 norm squared.
+#[inline]
+pub fn norm2_f32(a: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in a {
+        s += x as f64 * x as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0, -5.0];
+        let mut s = Streaming::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let m = mean(&xs);
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((s.mean() - m).abs() < 1e-12);
+        assert!((s.variance() - var).abs() < 1e-12);
+        assert_eq!(s.min(), -5.0);
+        assert_eq!(s.max(), 10.0);
+        assert_eq!(s.count(), 6);
+    }
+
+    #[test]
+    fn streaming_merge_equals_combined() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut a = Streaming::new();
+        let mut b = Streaming::new();
+        let mut all = Streaming::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = Streaming::new();
+        a.push(1.0);
+        a.push(2.0);
+        let b = Streaming::new();
+        let before = a.clone();
+        a.merge(&b);
+        assert_eq!(a.mean(), before.mean());
+        let mut e = Streaming::new();
+        e.merge(&before);
+        assert_eq!(e.mean(), before.mean());
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+        assert!((quantile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((median(&[4.0, 1.0, 2.0, 3.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_slope_recovers_line() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.5 * v - 7.0).collect();
+        assert!((ols_slope(&x, &y) - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        assert!((rel_diff(1.0, 1.1) - rel_diff(1.1, 1.0)).abs() < 1e-15);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+        assert!(rel_diff(1.0, 2.0) > 0.49);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert!((dot_f32(&a, &b) - 12.0).abs() < 1e-9);
+        assert!((norm2_f32(&a) - 14.0).abs() < 1e-9);
+    }
+}

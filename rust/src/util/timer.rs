@@ -1,0 +1,165 @@
+//! Wall-clock timing helpers and a phase profiler used by the
+//! coordinator (compute vs communication accounting, Theorem 1's
+//! `T_u` / `T_c` split) and by the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates durations per named phase — e.g. "update", "sync",
+/// "monitor" — so experiments can report the compute/communication
+/// breakdown that Theorem 1's cost model predicts.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseProfiler {
+    acc: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    /// Time `f` and account it to `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.acc.get(phase).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &PhaseProfiler) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, v.as_secs_f64()))
+    }
+
+    pub fn report(&self) -> String {
+        let total: f64 = self.acc.values().map(|d| d.as_secs_f64()).sum();
+        let mut out = String::new();
+        for (k, v) in &self.acc {
+            let s = v.as_secs_f64();
+            let pct = if total > 0.0 { 100.0 * s / total } else { 0.0 };
+            out.push_str(&format!(
+                "{k:>12}: {s:>9.4}s ({pct:>5.1}%)  n={}\n",
+                self.counts.get(k).copied().unwrap_or(0)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let e = sw.restart();
+        assert!(e.as_millis() >= 1);
+        assert!(sw.elapsed() < e + Duration::from_millis(100));
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = PhaseProfiler::new();
+        p.add("update", Duration::from_millis(10));
+        p.add("update", Duration::from_millis(5));
+        p.add("sync", Duration::from_millis(1));
+        assert!((p.secs("update") - 0.015).abs() < 1e-9);
+        assert_eq!(p.count("update"), 2);
+        assert_eq!(p.count("sync"), 1);
+        assert_eq!(p.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn profiler_time_returns_value() {
+        let mut p = PhaseProfiler::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("work"), 1);
+    }
+
+    #[test]
+    fn profiler_merge() {
+        let mut a = PhaseProfiler::new();
+        a.add("x", Duration::from_millis(3));
+        let mut b = PhaseProfiler::new();
+        b.add("x", Duration::from_millis(7));
+        b.add("y", Duration::from_millis(2));
+        a.merge(&b);
+        assert!((a.secs("x") - 0.010).abs() < 1e-9);
+        assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn report_contains_phases() {
+        let mut p = PhaseProfiler::new();
+        p.add("update", Duration::from_millis(1));
+        let r = p.report();
+        assert!(r.contains("update"));
+        assert!(r.contains("n=1"));
+    }
+}

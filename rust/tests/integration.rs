@@ -1,0 +1,313 @@
+//! Cross-module integration: full pipelines from config text / CLI /
+//! libsvm files through training; tile-vs-scalar cross-checks through
+//! the real PJRT runtime; failure injection (bad configs, corrupt
+//! artifacts, malformed data files) yields clean errors, not panics.
+
+use dso::config::{Algorithm, ExecMode, TrainConfig};
+use dso::data::synth::DenseSpec;
+use dso::losses::{Loss, Problem, Regularizer};
+
+fn have_artifacts() -> bool {
+    dso::runtime::Manifest::load_default().is_ok()
+}
+
+#[test]
+fn toml_config_to_training_pipeline() {
+    let text = r#"
+[data]
+name = "real-sim"
+scale = 0.08
+test_frac = 0.2
+
+[model]
+loss = "hinge"
+lambda = 1e-3
+
+[optim]
+algorithm = "dso"
+epochs = 8
+eta0 = 0.2
+
+[cluster]
+machines = 2
+cores = 2
+
+[monitor]
+every = 2
+"#;
+    let cfg = TrainConfig::from_toml(text).unwrap();
+    let ds = dso::cli::load_dataset(&cfg).unwrap();
+    let (train, test) = ds.split(cfg.data.test_frac, cfg.data.seed);
+    let r = dso::coordinator::train(&cfg, &train, Some(&test)).unwrap();
+    assert!(r.final_primal.is_finite());
+    assert!(r.history.len() >= 4);
+    assert!(r.final_gap >= -1e-6);
+}
+
+#[test]
+fn libsvm_file_to_training_pipeline() {
+    let dir = std::env::temp_dir().join("dso-int-libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("data.libsvm");
+    let ds = dso::data::registry::generate("news20", 0.05, 3).unwrap();
+    dso::data::libsvm::write(&ds, &path).unwrap();
+
+    let mut cfg = TrainConfig::default();
+    cfg.data.path = Some(path.to_str().unwrap().to_string());
+    cfg.optim.epochs = 5;
+    cfg.cluster.machines = 2;
+    cfg.cluster.cores = 1;
+    let loaded = dso::cli::load_dataset(&cfg).unwrap();
+    assert_eq!(loaded.m(), ds.m());
+    let r = dso::coordinator::train(&cfg, &loaded, None).unwrap();
+    assert!(r.final_primal.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tile_and_scalar_engines_reach_similar_optima() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ds = DenseSpec {
+        name: "int-dense".into(),
+        m: 128,
+        d: 48,
+        density: 1.0,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        prototypes: 16,
+        seed: 11,
+    }
+    .generate();
+    let mk = |mode: ExecMode| {
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 80;
+        c.optim.eta0 = 0.3;
+        c.model.lambda = 1e-3;
+        c.cluster.machines = 2;
+        c.cluster.cores = 1;
+        c.cluster.mode = mode;
+        c
+    };
+    let scalar = dso::coordinator::train(&mk(ExecMode::Scalar), &ds, None).unwrap();
+    let tile = dso::coordinator::train(&mk(ExecMode::Tile), &ds, None).unwrap();
+    // Different update granularity (Gauss-Seidel scalar vs Jacobi tile)
+    // but the same saddle problem: optima must agree loosely.
+    let rel = (scalar.final_primal - tile.final_primal).abs()
+        / scalar.final_primal.abs().max(1e-12);
+    assert!(
+        rel < 0.15,
+        "scalar {} vs tile {}",
+        scalar.final_primal,
+        tile.final_primal
+    );
+    assert!(tile.final_gap >= -1e-5);
+}
+
+#[test]
+fn tile_engine_beats_zero_and_tracks_dcd() {
+    if !have_artifacts() {
+        return;
+    }
+    let ds = DenseSpec {
+        name: "int-dense2".into(),
+        m: 160,
+        d: 64,
+        density: 1.0,
+        label_noise: 0.02,
+        pos_frac: 0.5,
+        prototypes: 20,
+        seed: 13,
+    }
+    .generate();
+    let mut c = TrainConfig::default();
+    c.optim.epochs = 120;
+    c.optim.eta0 = 0.5;
+    c.model.lambda = 1e-3;
+    c.cluster.machines = 2;
+    c.cluster.cores = 1;
+    c.cluster.mode = ExecMode::Tile;
+    let r = dso::coordinator::train(&c, &ds, None).unwrap();
+    let dcd = dso::optim::dcd::solve_hinge_l2(&ds, 1e-3, 800, 1e-10, 1);
+    let p = Problem::new(Loss::Hinge, Regularizer::L2, 1e-3);
+    let p_star = p.primal(&ds, &dcd.w);
+    let rel = (r.final_primal - p_star) / p_star.abs().max(1e-12);
+    assert!(rel < 0.12, "tile {} vs optimum {p_star} (rel {rel})", r.final_primal);
+}
+
+// ---------- failure injection ----------
+
+#[test]
+fn invalid_configs_error_cleanly() {
+    for bad in [
+        "[model]\nlambda = -1\n",
+        "[optim]\nalgorithm = \"nope\"\n",
+        "[cluster]\ncores = 0\n",
+        "[data]\nscale = 0\n",
+        "model.lambda = \n",
+    ] {
+        assert!(TrainConfig::from_toml(bad).is_err(), "{bad:?} accepted");
+    }
+}
+
+#[test]
+fn missing_libsvm_file_errors() {
+    let mut cfg = TrainConfig::default();
+    cfg.data.path = Some("/nonexistent/path/data.libsvm".into());
+    assert!(dso::cli::load_dataset(&cfg).is_err());
+}
+
+#[test]
+fn corrupt_libsvm_errors_with_line_number() {
+    let dir = std::env::temp_dir().join("dso-int-corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.libsvm");
+    std::fs::write(&path, "1 1:0.5\n1 garbage\n").unwrap();
+    let err = dso::data::libsvm::read(&path, 0).unwrap_err();
+    assert!(format!("{err}").contains("line 2"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_artifact_manifest_errors() {
+    let dir = std::env::temp_dir().join("dso-int-badmanifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(dso::runtime::Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"schema": 1, "entries": []}"#).unwrap();
+    assert!(dso::runtime::Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_artifact_fails_at_load_not_panic() {
+    let dir = std::env::temp_dir().join("dso-int-badhlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let hlo = dir.join("bad.hlo.txt");
+    std::fs::write(&hlo, "HloModule garbage\nthis is not hlo\n").unwrap();
+    let mut rt = dso::runtime::PjrtRuntime::cpu().unwrap();
+    assert!(rt.load("bad", &hlo).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tile_mode_without_artifacts_errors_cleanly() {
+    // Point artifact discovery at an empty dir via env override.
+    // (Run serially with other tests — env var is process-global; the
+    // variable is restored immediately.)
+    let dir = std::env::temp_dir().join("dso-int-noartifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let old = std::env::var("DSO_ARTIFACTS").ok();
+    std::env::set_var("DSO_ARTIFACTS", dir.to_str().unwrap());
+    let ds = DenseSpec {
+        name: "x".into(),
+        m: 32,
+        d: 16,
+        density: 1.0,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        prototypes: 4,
+        seed: 1,
+    }
+    .generate();
+    let mut c = TrainConfig::default();
+    c.cluster.mode = ExecMode::Tile;
+    c.optim.epochs = 2;
+    let res = dso::coordinator::train(&c, &ds, None);
+    match old {
+        Some(v) => std::env::set_var("DSO_ARTIFACTS", v),
+        None => std::env::remove_var("DSO_ARTIFACTS"),
+    }
+    assert!(res.is_err());
+}
+
+#[test]
+fn degenerate_datasets_handled() {
+    use dso::data::{Csr, Dataset};
+    // All-positive labels.
+    let x = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 1.0)], vec![(0, 0.5)]]);
+    let ds = Dataset::new("allpos", x, vec![1.0, 1.0, 1.0]);
+    let mut c = TrainConfig::default();
+    c.optim.epochs = 3;
+    c.cluster.machines = 1;
+    c.cluster.cores = 1;
+    let r = dso::coordinator::train(&c, &ds, None).unwrap();
+    assert!(r.final_primal.is_finite());
+
+    // Dataset with an empty row (no features).
+    let x = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![], vec![(1, -1.0)]]);
+    let ds = Dataset::new("emptyrow", x, vec![1.0, -1.0, -1.0]);
+    let r = dso::coordinator::train(&c, &ds, None).unwrap();
+    assert!(r.final_primal.is_finite());
+
+    // Single data point, single feature, p capped to 1.
+    let x = Csr::from_rows(1, vec![vec![(0, 1.0)]]);
+    let ds = Dataset::new("single", x, vec![1.0]);
+    let mut c8 = c.clone();
+    c8.cluster.machines = 8;
+    let r = dso::coordinator::train(&c8, &ds, None).unwrap();
+    assert!(r.final_primal.is_finite());
+}
+
+#[test]
+fn all_baselines_run_on_all_registry_serial_datasets() {
+    for &name in dso::data::registry::SERIAL_NAMES {
+        let ds = dso::data::registry::generate(name, 0.05, 1).unwrap();
+        for algo in [Algorithm::Dso, Algorithm::Sgd, Algorithm::Psgd, Algorithm::Bmrm] {
+            let mut c = TrainConfig::default();
+            c.optim.algorithm = algo;
+            c.optim.epochs = 3;
+            c.cluster.machines = 2;
+            c.cluster.cores = 1;
+            let r = dso::coordinator::train(&c, &ds, None)
+                .unwrap_or_else(|e| panic!("{name}/{algo:?}: {e}"));
+            assert!(r.final_primal.is_finite(), "{name}/{algo:?}");
+        }
+    }
+}
+
+#[test]
+fn balanced_partition_reduces_epoch_imbalance_on_skewed_data() {
+    use dso::config::PartitionKind;
+    use dso::coordinator::engine::make_partitions;
+    use dso::partition::OmegaBlocks;
+    // Heavily zipf-skewed features: even column cuts put all hot
+    // features in one block.
+    let ds = dso::data::synth::SparseSpec {
+        name: "skew".into(),
+        m: 600,
+        d: 400,
+        nnz_per_row: 10.0,
+        zipf_s: 1.3,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 3,
+    }
+    .generate();
+    let mut cfg = TrainConfig::default();
+    cfg.cluster.machines = 4;
+    cfg.cluster.cores = 1;
+
+    cfg.cluster.partition = PartitionKind::Even;
+    let (re, ce) = make_partitions(&cfg, &ds, 4);
+    let even = OmegaBlocks::build(&ds.x, &re, &ce).epoch_imbalance();
+
+    cfg.cluster.partition = PartitionKind::Balanced;
+    let (rb, cb) = make_partitions(&cfg, &ds, 4);
+    let om = OmegaBlocks::build(&ds.x, &rb, &cb);
+    om.validate(&ds.x).unwrap();
+    let balanced = om.epoch_imbalance();
+    assert!(
+        balanced < even,
+        "balanced {balanced} !< even {even} (epoch imbalance)"
+    );
+
+    // And training still works + serializability holds under balanced.
+    cfg.optim.epochs = 3;
+    let a = dso::coordinator::train_dso(&cfg, &ds, None).unwrap();
+    let b = dso::coordinator::run_replay(&cfg, &ds, None).unwrap();
+    assert_eq!(a.w, b.w);
+    assert!(a.final_gap >= -1e-6);
+}

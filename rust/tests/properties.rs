@@ -1,0 +1,161 @@
+//! Property-based integration tests: randomized problem shapes feed
+//! full training runs and system invariants are asserted on the
+//! results (weak duality, feasibility, projection boxes, replay
+//! equality, libsvm round-tripping of generated data).
+
+use dso::config::{LossKind, TrainConfig};
+use dso::data::synth::SparseSpec;
+use dso::losses::{Loss, Problem, Regularizer};
+use dso::util::prop;
+
+fn random_dataset(g: &mut prop::Gen) -> dso::data::Dataset {
+    SparseSpec {
+        name: "prop".into(),
+        m: g.usize_in(20, 200),
+        d: g.usize_in(10, 120),
+        nnz_per_row: g.f64_in(2.0, 8.0),
+        zipf_s: g.f64_in(0.0, 1.1),
+        label_noise: g.f64_in(0.0, 0.1),
+        pos_frac: g.f64_in(0.2, 0.8),
+        seed: g.case_seed,
+    }
+    .generate()
+}
+
+fn random_cfg(g: &mut prop::Gen) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.optim.epochs = g.usize_in(1, 6);
+    c.optim.eta0 = g.f64_in(0.01, 1.0);
+    c.model.lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+    c.model.loss = *g.pick(&[LossKind::Hinge, LossKind::Logistic, LossKind::Square]);
+    c.cluster.machines = g.usize_in(1, 5);
+    c.cluster.cores = 1;
+    c.monitor.every = 0;
+    c
+}
+
+#[test]
+fn prop_weak_duality_and_feasibility_after_training() {
+    prop::check("weak duality after DSO", 25, |g| {
+        let ds = random_dataset(g);
+        let cfg = random_cfg(g);
+        let r = dso::coordinator::train(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        prop::assert_that(
+            r.final_gap >= -1e-5,
+            format!("negative gap {}", r.final_gap),
+        )?;
+        // α feasibility per loss.
+        let loss = Loss::from(cfg.model.loss);
+        for (i, &a) in r.alpha.iter().enumerate() {
+            let pa = loss.project_alpha(a as f64, ds.y[i] as f64);
+            prop::assert_close(pa, a as f64, 1e-5, &format!("alpha[{i}] feasible"))?;
+        }
+        // w box (App. B).
+        let b = loss.w_bound(cfg.model.lambda) as f32 + 1e-3;
+        prop::assert_that(
+            r.w.iter().all(|&wj| (-b..=b).contains(&wj)),
+            "w outside box",
+        )?;
+        // All finite.
+        prop::assert_that(
+            r.w.iter().all(|v| v.is_finite()) && r.alpha.iter().all(|v| v.is_finite()),
+            "non-finite parameters",
+        )
+    });
+}
+
+#[test]
+fn prop_threaded_equals_replay() {
+    prop::check("replay equality", 15, |g| {
+        let ds = random_dataset(g);
+        let cfg = random_cfg(g);
+        let a = dso::coordinator::train_dso(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        let b = dso::coordinator::run_replay(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        prop::assert_that(a.w == b.w, "w differs from replay")?;
+        prop::assert_that(a.alpha == b.alpha, "alpha differs from replay")
+    });
+}
+
+#[test]
+fn prop_training_never_worsens_vs_zero_start_much() {
+    // Stochastic saddle steps can transiently increase the primal, but
+    // a full run should never end dramatically above P(0).
+    prop::check("no blowup", 20, |g| {
+        let ds = random_dataset(g);
+        let cfg = random_cfg(g);
+        let problem = Problem::new(
+            Loss::from(cfg.model.loss),
+            Regularizer::from(cfg.model.reg),
+            cfg.model.lambda,
+        );
+        let at_zero = problem.primal(&ds, &vec![0.0; ds.d()]);
+        let r = dso::coordinator::train(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        prop::assert_that(
+            r.final_primal < at_zero * 2.0 + 1.0,
+            format!("blowup: {} vs P(0)={at_zero}", r.final_primal),
+        )
+    });
+}
+
+#[test]
+fn prop_generated_datasets_roundtrip_libsvm() {
+    prop::check("libsvm roundtrip", 20, |g| {
+        let ds = random_dataset(g);
+        let text = dso::data::libsvm::emit(&ds);
+        let back =
+            dso::data::libsvm::parse(&ds.name, &text, ds.d()).map_err(|e| e.to_string())?;
+        prop::assert_that(back.m() == ds.m(), "m")?;
+        prop::assert_that(back.d() == ds.d(), "d")?;
+        prop::assert_that(back.y == ds.y, "labels")?;
+        prop::assert_that(back.x.nnz() == ds.x.nnz(), "nnz")?;
+        // Values survive the decimal round-trip to f32 precision.
+        for i in 0..ds.m() {
+            let (ia, va) = ds.x.row(i);
+            let (ib, vb) = back.x.row(i);
+            prop::assert_that(ia == ib, format!("row {i} indices"))?;
+            for k in 0..va.len() {
+                prop::assert_close(va[k] as f64, vb[k] as f64, 1e-6, "value")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monitor_history_wellformed() {
+    prop::check("history well-formed", 10, |g| {
+        let ds = random_dataset(g);
+        let mut cfg = random_cfg(g);
+        cfg.monitor.every = 1;
+        let r = dso::coordinator::train(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        prop::assert_that(r.history.len() == cfg.optim.epochs, "one row per epoch")?;
+        let epochs = r.history.col("epoch").unwrap();
+        let virt = r.history.col("virtual_s").unwrap();
+        let updates = r.history.col("updates").unwrap();
+        for k in 1..epochs.len() {
+            prop::assert_that(epochs[k] > epochs[k - 1], "epochs increasing")?;
+            prop::assert_that(virt[k] >= virt[k - 1], "virtual time monotone")?;
+            prop::assert_that(updates[k] >= updates[k - 1], "updates monotone")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioned_training_matches_worker_count_invariants() {
+    prop::check("worker count invariants", 15, |g| {
+        let ds = random_dataset(g);
+        let mut cfg = random_cfg(g);
+        cfg.monitor.every = 0;
+        cfg.optim.epochs = 2;
+        let r = dso::coordinator::train_dso(&cfg, &ds, None).map_err(|e| e.to_string())?;
+        // Every nonzero is visited once per epoch (full sweeps).
+        let expected = 2 * ds.nnz() as u64;
+        prop::assert_that(
+            r.total_updates == expected,
+            format!("updates {} != 2*nnz {}", r.total_updates, expected),
+        )?;
+        prop::assert_that(r.w.len() == ds.d(), "w length")?;
+        prop::assert_that(r.alpha.len() == ds.m(), "alpha length")
+    });
+}

