@@ -1,10 +1,19 @@
 //! Microbench: PJRT tile-kernel execution latency per artifact shape,
 //! plus literal pack/unpack overhead (EXPERIMENTS.md §Perf runtime).
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("bench_runtime requires the `xla` feature (PJRT bindings); skipping");
+}
+
+#[cfg(feature = "xla")]
 use dso::runtime::pjrt::{lit_mat, lit_vec, PjrtRuntime};
+#[cfg(feature = "xla")]
 use dso::runtime::Manifest;
+#[cfg(feature = "xla")]
 use dso::util::bench::Runner;
 
+#[cfg(feature = "xla")]
 fn main() {
     let mut runner = Runner::from_env("runtime");
     let Ok(manifest) = Manifest::load_default() else {

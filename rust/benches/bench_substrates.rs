@@ -4,7 +4,7 @@
 
 use dso::data::synth::SparseSpec;
 use dso::net::{CostModel, Router};
-use dso::partition::{OmegaBlocks, Partition, RingSchedule};
+use dso::partition::{PackedBlocks, Partition, RingSchedule};
 use dso::util::bench::Runner;
 
 fn main() {
@@ -26,7 +26,7 @@ fn main() {
     runner.bench("omega_build_p8", || {
         let rp = Partition::even(ds.m(), 8);
         let cp = Partition::even(ds.d(), 8);
-        OmegaBlocks::build(&ds.x, &rp, &cp)
+        PackedBlocks::build(&ds.x, &rp, &cp)
     });
 
     let weights: Vec<u64> = (0..ds.m()).map(|i| ds.x.row_nnz(i) as u64).collect();

@@ -1,11 +1,22 @@
-//! Microbench: the scalar saddle-update hot loop (Eq. 8) — updates per
-//! second per worker, across losses and step rules. This is the number
-//! the §Perf pass optimizes (EXPERIMENTS.md §Perf L3).
+//! Microbench: the saddle-update hot loop (Eq. 8) — updates per second
+//! per worker, across losses and step rules, for BOTH kernels:
+//!
+//! * `ref_*`    — the seed's COO `sweep_block` (global indices, live
+//!                divisions, per-update enum dispatch),
+//! * `packed_*` — the `PackedBlocks` + monomorphized `sweep_packed`
+//!                production path.
+//!
+//! The acceptance target for the packed path is ≥2× the reference's
+//! median updates/sec on the same 64k-entry block. Run with
+//! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (name, median
+//! s/iter, updates/sec) so the perf trajectory is tracked across PRs.
 
-use dso::coordinator::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+use dso::coordinator::updates::{
+    sweep_block, sweep_packed, BlockState, PackedCtx, PackedState, StepRule, SweepCtx,
+};
 use dso::data::synth::SparseSpec;
 use dso::losses::{Loss, Regularizer};
-use dso::partition::omega::Entry;
+use dso::partition::{PackedBlocks, Partition};
 use dso::util::bench::{human_time, Runner};
 
 fn main() {
@@ -23,40 +34,44 @@ fn main() {
         seed: 1,
     }
     .generate();
-    let row_counts: Vec<u32> = (0..ds.m()).map(|i| ds.x.row_nnz(i) as u32).collect();
-    let col_counts = ds.x.col_counts();
-    let entries: Vec<Entry> = (0..ds.m())
-        .flat_map(|i| {
-            let (idx, val) = ds.x.row(i);
-            idx.iter()
-                .zip(val)
-                .map(move |(&j, &x)| Entry { i: i as u32, j, x })
-                .collect::<Vec<_>>()
-        })
-        .collect();
-    let n = entries.len();
+
+    // p = 1: the whole matrix is one Ω^(0,0) block. The packed
+    // constructor supplies the SoA layout, reciprocal tables, and the
+    // exact entries the reference path sweeps — no hand-rolled per-row
+    // collect() churn.
+    let rp = Partition::even(ds.m(), 1);
+    let cp = Partition::even(ds.d(), 1);
+    let omega = PackedBlocks::build(&ds.x, &rp, &cp);
+    let block = omega.block(0, 0);
+    let entries = omega.block_entries(&ds.x, 0, 0);
+    let y_local = omega.stripe_labels(&ds.y);
+    let n = block.nnz();
     println!("block: {n} entries");
 
+    let lambda = 1e-4;
     for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
         for (rname, rule) in
             [("fixed", StepRule::Fixed(0.1)), ("adagrad", StepRule::AdaGrad(0.1))]
         {
+            let ref_name = format!("ref_sweep_{}_{rname}", loss.name());
+            let packed_name = format!("packed_sweep_{}_{rname}", loss.name());
+            // --- Seed COO kernel (reference) ---
             let ctx = SweepCtx {
                 loss,
                 reg: Regularizer::L2,
-                lambda: 1e-4,
+                lambda,
                 m: ds.m() as f64,
-                row_counts: &row_counts,
-                col_counts: &col_counts,
+                row_counts: &omega.row_counts,
+                col_counts: &omega.col_counts,
                 y: &ds.y,
-                w_bound: loss.w_bound(1e-4),
+                w_bound: loss.w_bound(lambda),
                 rule,
             };
             let mut w = vec![0.01f32; ds.d()];
             let mut w_acc = vec![0f32; ds.d()];
             let mut alpha = vec![0f32; ds.m()];
             let mut a_acc = vec![0f32; ds.m()];
-            runner.bench(&format!("sweep_{}_{rname}", loss.name()), || {
+            runner.bench_units(&ref_name, n as u64, || {
                 let mut st = BlockState {
                     w: &mut w,
                     w_acc: &mut w_acc,
@@ -67,11 +82,44 @@ fn main() {
                 };
                 sweep_block(&entries, &ctx, &mut st)
             });
-            if let Some(r) = runner.results.last() {
+
+            // --- Packed kernel (production) ---
+            let pctx = PackedCtx {
+                loss,
+                reg: Regularizer::L2,
+                lambda,
+                w_bound: loss.w_bound(lambda),
+                rule,
+                inv_col: &omega.inv_col[0],
+                inv_row: &omega.inv_row[0],
+                y: &y_local[0],
+            };
+            let mut pw = vec![0.01f32; ds.d()];
+            let mut pw_acc = vec![0f32; ds.d()];
+            let mut palpha = vec![0f32; ds.m()];
+            let mut pa_acc = vec![0f32; ds.m()];
+            runner.bench_units(&packed_name, n as u64, || {
+                let mut st = PackedState {
+                    w: &mut pw,
+                    w_acc: &mut pw_acc,
+                    alpha: &mut palpha,
+                    a_acc: &mut pa_acc,
+                };
+                sweep_packed(block, &pctx, &mut st)
+            });
+
+            // Look results up by name — a CLI bench filter may have
+            // skipped either side, and results.last() would mispair.
+            let median =
+                |name: &str| runner.results.iter().find(|r| r.name == name).map(|r| r.median());
+            if let (Some(rm), Some(pm)) = (median(&ref_name), median(&packed_name)) {
                 println!(
-                    "    -> {:.1} M updates/s ({}/update)",
-                    n as f64 / r.median() / 1e6,
-                    human_time(r.median() / n as f64)
+                    "    -> ref {:.1} M upd/s ({}/upd)  packed {:.1} M upd/s ({}/upd)  speedup {:.2}x",
+                    n as f64 / rm / 1e6,
+                    human_time(rm / n as f64),
+                    n as f64 / pm / 1e6,
+                    human_time(pm / n as f64),
+                    rm / pm
                 );
             }
         }

@@ -24,12 +24,12 @@
 //! in-flight blocks.
 
 use super::monitor::{Monitor, TrainResult};
-use super::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+use super::updates::{sweep_packed, PackedCtx, PackedState, StepRule};
 use crate::config::{StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::CostModel;
-use crate::partition::{OmegaBlocks, Partition};
+use crate::partition::{PackedBlocks, Partition};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -67,7 +67,8 @@ pub fn train_dso_async(
     let problem = Problem::new(loss, reg, cfg.model.lambda);
     let row_part = Partition::even(train.m(), p);
     let col_part = Partition::even(train.d(), p);
-    let omega = OmegaBlocks::build(&train.x, &row_part, &col_part);
+    let omega = PackedBlocks::build(&train.x, &row_part, &col_part);
+    let y_local = omega.stripe_labels(&train.y);
     let w_bound = loss.w_bound(cfg.model.lambda);
     let cost = CostModel::new(
         cfg.cluster.latency_us,
@@ -129,26 +130,14 @@ pub fn train_dso_async(
         let shared = &shared;
         let updates_total = &updates_total;
         let omega = &omega;
-        let row_part = &row_part;
-        let col_part = &col_part;
+        let y_local = &y_local;
         let mut handles = Vec::new();
         for (q, rx) in receivers.into_iter().enumerate() {
             let mut alpha = std::mem::take(&mut alpha_blocks[q]);
             let mut a_acc = std::mem::take(&mut a_acc_blocks[q]);
             let mut rng = Xoshiro256::new(cfg.optim.seed ^ (0xA5A5 + q as u64));
-            let ctx = SweepCtx {
-                loss,
-                reg,
-                lambda: cfg.model.lambda,
-                m: train.m() as f64,
-                row_counts: &omega.row_counts,
-                col_counts: &omega.col_counts,
-                y: &train.y,
-                w_bound,
-                rule,
-            };
+            let lambda = cfg.model.lambda;
             handles.push(scope.spawn(move || {
-                let a_off = row_part.bounds[q];
                 loop {
                     // Poll with timeout so we observe the stop flag.
                     let mut token = match rx.recv_timeout(std::time::Duration::from_millis(20)) {
@@ -165,16 +154,24 @@ pub fn train_dso_async(
                         shared.parked.lock().unwrap().push(token);
                         continue; // keep draining the queue
                     }
-                    let entries = omega.block(q, token.block_id);
-                    let mut st = BlockState {
+                    let block = omega.block(q, token.block_id);
+                    let ctx = PackedCtx {
+                        loss,
+                        reg,
+                        lambda,
+                        w_bound,
+                        rule,
+                        inv_col: &omega.inv_col[token.block_id],
+                        inv_row: &omega.inv_row[q],
+                        y: &y_local[q],
+                    };
+                    let mut st = PackedState {
                         w: &mut token.w,
                         w_acc: &mut token.acc,
-                        w_off: col_part.bounds[token.block_id],
                         alpha: &mut alpha,
                         a_acc: &mut a_acc,
-                        a_off,
                     };
-                    let n = sweep_block(entries, &ctx, &mut st);
+                    let n = sweep_packed(block, &ctx, &mut st);
                     updates_total.fetch_add(n as u64, Ordering::Relaxed);
                     token.hops += 1;
                     let visits = shared.visits.fetch_add(1, Ordering::AcqRel) + 1;

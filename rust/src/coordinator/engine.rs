@@ -15,12 +15,12 @@
 //! Lemma 2, enforced by test.
 
 use super::monitor::{Monitor, TrainResult};
-use super::updates::{sweep_block, BlockState, StepRule, SweepCtx};
+use super::updates::{sweep_packed, sweep_packed_sampled, PackedCtx, PackedState, StepRule};
 use crate::config::{ExecMode, StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::{CostModel, Router, VirtualClock};
-use crate::partition::{OmegaBlocks, Partition, RingSchedule};
+use crate::partition::{PackedBlocks, Partition, RingSchedule};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -44,12 +44,17 @@ struct WorkerSlot {
     clock: VirtualClock,
     block_id: usize,
     updates: u64,
+    /// Reusable buffer for subsampled entry indices
+    /// (`cluster.updates_per_block`) — no per-iteration allocation.
+    scratch: Vec<u32>,
 }
 
 /// Precomputed, immutable run setup shared by threads.
 pub struct DsoSetup {
     pub problem: Problem,
-    pub omega: OmegaBlocks,
+    pub omega: PackedBlocks,
+    /// Per row-stripe label tables (f64) for the packed kernel.
+    pub y_local: Vec<Vec<f64>>,
     pub schedule: RingSchedule,
     pub p: usize,
     pub w_bound: f64,
@@ -63,7 +68,8 @@ impl DsoSetup {
         let reg = Regularizer::from(cfg.model.reg);
         let problem = Problem::new(loss, reg, cfg.model.lambda);
         let (row_part, col_part) = make_partitions(cfg, train, p);
-        let omega = OmegaBlocks::build(&train.x, &row_part, &col_part);
+        let omega = PackedBlocks::build(&train.x, &row_part, &col_part);
+        let y_local = omega.stripe_labels(&train.y);
         let cost = CostModel::new(
             cfg.cluster.latency_us,
             cfg.cluster.bandwidth_mbps,
@@ -72,6 +78,7 @@ impl DsoSetup {
         DsoSetup {
             problem,
             omega,
+            y_local,
             schedule: RingSchedule::new(p),
             p,
             w_bound: loss.w_bound(cfg.model.lambda),
@@ -177,6 +184,7 @@ fn init_state(
             clock: VirtualClock::new(),
             block_id: q,
             updates: 0,
+            scratch: Vec::new(),
         });
     }
     (slots, init_comm)
@@ -206,9 +214,10 @@ fn run_epochs(
         };
 
         if replay {
-            run_epoch_serial(cfg, train, setup, &mut slots, rule, epoch);
+            run_epoch_serial(cfg, setup, &mut slots, rule, epoch);
         } else {
-            endpoints = run_epoch_threaded(cfg, train, setup, &mut slots, rule, epoch, endpoints);
+            endpoints =
+                run_epoch_threaded(cfg, setup, &mut slots, rule, epoch, endpoints);
         }
 
         // Bulk synchronization barrier.
@@ -270,49 +279,79 @@ fn assemble(setup: &DsoSetup, slots: &[WorkerSlot]) -> (Vec<f32>, Vec<f32>) {
 }
 
 /// Pick the entries a worker processes this inner iteration: the whole
-/// block (paper default) or a random sample of `k` (updates_per_block).
-fn select_entries<'a>(
-    entries: &'a [crate::partition::omega::Entry],
+/// block (paper default, returns false) or a random sample of `k` flat
+/// entry indices (updates_per_block) written into `out`. The RNG mix
+/// and call sequence match the seed's COO sampling, and both the
+/// threaded and serial paths use the same function — Lemma-2
+/// bit-identity is preserved.
+fn select_indices(
+    nnz: usize,
     k: usize,
     seed: u64,
     epoch: usize,
     q: usize,
     r: usize,
-) -> std::borrow::Cow<'a, [crate::partition::omega::Entry]> {
-    if k == 0 || k >= entries.len() {
-        return std::borrow::Cow::Borrowed(entries);
+    out: &mut Vec<u32>,
+) -> bool {
+    if k == 0 || k >= nnz {
+        return false;
     }
     let mix = seed
         ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ (q as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
         ^ (r as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
     let mut rng = Xoshiro256::new(mix);
-    let sampled: Vec<_> = (0..k).map(|_| entries[rng.gen_index(entries.len())]).collect();
-    std::borrow::Cow::Owned(sampled)
+    out.clear();
+    out.extend((0..k).map(|_| rng.gen_index(nnz) as u32));
+    true
 }
 
-fn sweep_ctx<'a>(
+/// One block visit: full packed sweep or subsampled updates. Shared by
+/// the threaded and serial epoch loops (identical update sequence).
+fn visit_block(
     cfg: &TrainConfig,
-    train: &'a Dataset,
-    setup: &'a DsoSetup,
+    setup: &DsoSetup,
+    slot: &mut WorkerSlot,
     rule: StepRule,
-) -> SweepCtx<'a> {
-    SweepCtx {
+    epoch: usize,
+    r: usize,
+) -> usize {
+    let q = slot.q;
+    let block = setup.omega.block(q, slot.block_id);
+    let sampled = select_indices(
+        block.nnz(),
+        cfg.cluster.updates_per_block,
+        cfg.optim.seed,
+        epoch,
+        q,
+        r,
+        &mut slot.scratch,
+    );
+    let ctx = PackedCtx {
         loss: setup.problem.loss,
         reg: setup.problem.reg,
         lambda: cfg.model.lambda,
-        m: train.m() as f64,
-        row_counts: &setup.omega.row_counts,
-        col_counts: &setup.omega.col_counts,
-        y: &train.y,
         w_bound: setup.w_bound,
         rule,
+        inv_col: &setup.omega.inv_col[slot.block_id],
+        inv_row: &setup.omega.inv_row[q],
+        y: &setup.y_local[q],
+    };
+    let mut st = PackedState {
+        w: &mut slot.w,
+        w_acc: &mut slot.w_acc,
+        alpha: &mut slot.alpha,
+        a_acc: &mut slot.a_acc,
+    };
+    if sampled {
+        sweep_packed_sampled(block, &slot.scratch, &ctx, &mut st)
+    } else {
+        sweep_packed(block, &ctx, &mut st)
     }
 }
 
 fn run_epoch_threaded(
     cfg: &TrainConfig,
-    train: &Dataset,
     setup: &DsoSetup,
     slots: &mut Vec<WorkerSlot>,
     rule: StepRule,
@@ -329,32 +368,13 @@ fn run_epoch_threaded(
             let handles: Vec<_> = taken
                 .into_iter()
                 .map(|(mut slot, ep)| {
-                    let ctx = sweep_ctx(cfg, train, setup, rule);
                     scope.spawn(move || {
                         let q = slot.q;
                         for r in 0..p {
                             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
-                            let entries = setup.omega.block(q, slot.block_id);
-                            let chosen = select_entries(
-                                entries,
-                                cfg.cluster.updates_per_block,
-                                cfg.optim.seed,
-                                epoch,
-                                q,
-                                r,
-                            );
-                            let w_off = setup.omega.col_part.bounds[slot.block_id];
-                            let a_off = setup.omega.row_part.bounds[q];
                             let t0 = std::time::Instant::now();
-                            let mut st = BlockState {
-                                w: &mut slot.w,
-                                w_acc: &mut slot.w_acc,
-                                w_off,
-                                alpha: &mut slot.alpha,
-                                a_acc: &mut slot.a_acc,
-                                a_off,
-                            };
-                            slot.updates += sweep_block(&chosen, &ctx, &mut st) as u64;
+                            let n = visit_block(cfg, setup, &mut slot, rule, epoch, r);
+                            slot.updates += n as u64;
                             slot.clock.add_compute(t0.elapsed().as_secs_f64());
 
                             // Rotate the w block (with its AdaGrad state).
@@ -396,7 +416,6 @@ fn run_epoch_threaded(
 /// cost model directly.
 fn run_epoch_serial(
     cfg: &TrainConfig,
-    train: &Dataset,
     setup: &DsoSetup,
     slots: &mut [WorkerSlot],
     rule: StepRule,
@@ -404,26 +423,12 @@ fn run_epoch_serial(
 ) {
     let p = setup.p;
     let adagrad = matches!(rule, StepRule::AdaGrad(_));
-    let ctx = sweep_ctx(cfg, train, setup, rule);
     for r in 0..p {
         for slot in slots.iter_mut() {
-            let q = slot.q;
-            debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
-            let entries = setup.omega.block(q, slot.block_id);
-            let chosen =
-                select_entries(entries, cfg.cluster.updates_per_block, cfg.optim.seed, epoch, q, r);
-            let w_off = setup.omega.col_part.bounds[slot.block_id];
-            let a_off = setup.omega.row_part.bounds[q];
+            debug_assert_eq!(slot.block_id, setup.schedule.owned_block(slot.q, r));
             let t0 = std::time::Instant::now();
-            let mut st = BlockState {
-                w: &mut slot.w,
-                w_acc: &mut slot.w_acc,
-                w_off,
-                alpha: &mut slot.alpha,
-                a_acc: &mut slot.a_acc,
-                a_off,
-            };
-            slot.updates += sweep_block(&chosen, &ctx, &mut st) as u64;
+            let n = visit_block(cfg, setup, slot, rule, epoch, r);
+            slot.updates += n as u64;
             slot.clock.add_compute(t0.elapsed().as_secs_f64());
         }
         // Rotate all blocks one hop (dst = q-1 ring).

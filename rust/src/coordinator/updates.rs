@@ -1,6 +1,6 @@
 //! The scalar saddle-point update kernel — Eq. (8) plus AdaGrad and the
 //! App. B projections. This is DSO's hot path for sparse data: every
-//! worker calls [`sweep_block`] once per inner iteration on its active
+//! worker calls [`sweep_packed`] once per inner iteration on its active
 //! block Ω^(q, σ_r(q)).
 //!
 //! Update for a sampled nonzero (i, j) with x = x_ij:
@@ -16,10 +16,40 @@
 //! simultaneous gradient step analyzed in Lemma 2 / Theorem 1. η is
 //! either the epoch-level η_t = η₀/√t of Algorithm 1 or per-coordinate
 //! AdaGrad (App. B); Π_B is the w box, Π_A the dual feasible set.
+//!
+//! ## Two implementations
+//!
+//! * [`sweep_packed`] — the production kernel over
+//!   [`PackedBlock`](crate::partition::omega::PackedBlock) (§Perf). The
+//!   `(Loss, Regularizer, StepRule)` triple is dispatched **once per
+//!   sweep** into one of 12 monomorphized loops (`losses::kernel`), and
+//!   the packed layout supplies block-local indices, `x/m` pre-folded
+//!   into the stored value, and reciprocal tables for both Eq. (8)
+//!   denominators — the inner loop performs zero divisions, zero offset
+//!   subtractions, and zero enum dispatch. Row-invariant state (y_i,
+//!   α_i and its AdaGrad accumulator, 1/(m|Ω_i|)) is loaded once per
+//!   row group instead of once per nonzero; α stays in a register
+//!   across the group (rounded through f32 after each update, exactly
+//!   as the store/reload of the reference path rounds it).
+//!   `sweep_packed_sampled` is the `updates_per_block` variant that
+//!   processes an explicit list of flat entry indices.
+//! * [`sweep_block`] — the seed's COO `Entry` kernel with per-update
+//!   enum dispatch, global indices and live divisions. Kept as the
+//!   *reference path*: property tests replay both on the same block
+//!   and require agreement within 1e-5 relative error (the only
+//!   permitted differences are reciprocal-multiply vs divide rounding
+//!   and the f32 fold of x/m). `benches/bench_updates.rs` benchmarks
+//!   the two side by side; `BENCH_updates.json` records the speedup.
+//!
+//! The packed sweep visits entries in the same (row, col) order as the
+//! reference path, so Lemma-2 serializability — and the bit-identity
+//! between the threaded engine and `run_replay`, which both call the
+//! packed kernel — is unaffected.
 
+use crate::losses::kernel::{HingeK, L1K, L2K, LogisticK, LossK, RegK, SquareK};
 use crate::losses::{Loss, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
-use crate::partition::omega::Entry;
+use crate::partition::omega::{Entry, PackedBlock};
 
 /// Which step rule the sweep applies.
 #[derive(Clone, Copy, Debug)]
@@ -31,7 +61,8 @@ pub enum StepRule {
 }
 
 /// Immutable per-sweep context (problem constants and global count
-/// tables shared read-only by every worker).
+/// tables shared read-only by every worker). Used by the COO
+/// *reference* path.
 pub struct SweepCtx<'a> {
     pub loss: Loss,
     pub reg: Regularizer,
@@ -49,9 +80,10 @@ pub struct SweepCtx<'a> {
     pub rule: StepRule,
 }
 
-/// Mutable views of the worker's current parameter blocks. `w`/`w_acc`
-/// are the travelling w-block (global coords `w_off ..`), `alpha` /
-/// `a_acc` the worker-resident α block (global coords `a_off ..`).
+/// Mutable views of the worker's current parameter blocks for the
+/// reference path. `w`/`w_acc` are the travelling w-block (global
+/// coords `w_off ..`), `alpha`/`a_acc` the worker-resident α block
+/// (global coords `a_off ..`).
 pub struct BlockState<'a> {
     pub w: &'a mut [f32],
     pub w_acc: &'a mut [f32],
@@ -61,7 +93,219 @@ pub struct BlockState<'a> {
     pub a_off: usize,
 }
 
+/// Immutable per-sweep context for the packed kernel. All tables are
+/// stripe-local: `inv_col` belongs to the active column stripe (the
+/// travelling w block), `inv_row`/`y` to the worker's row stripe.
+pub struct PackedCtx<'a> {
+    pub loss: Loss,
+    pub reg: Regularizer,
+    pub lambda: f64,
+    pub w_bound: f64,
+    pub rule: StepRule,
+    /// 1/|Ω̄_j| per block-local column.
+    pub inv_col: &'a [f64],
+    /// 1/(m·|Ω_i|) per block-local row.
+    pub inv_row: &'a [f64],
+    /// Labels per block-local row.
+    pub y: &'a [f64],
+}
+
+/// Mutable stripe-local parameter views for the packed kernel. No
+/// offsets: packed blocks index these directly.
+pub struct PackedState<'a> {
+    pub w: &'a mut [f32],
+    pub w_acc: &'a mut [f32],
+    pub alpha: &'a mut [f32],
+    pub a_acc: &'a mut [f32],
+}
+
+// ---------------------------------------------------------------------
+// Packed kernel (production path)
+// ---------------------------------------------------------------------
+
+/// Step rule resolved at compile time. `eta` may update the AdaGrad
+/// accumulator in place; the fixed rule ignores it.
+trait StepK: Copy {
+    fn eta(self, acc: &mut f32, g: f64) -> f64;
+}
+
+#[derive(Clone, Copy)]
+struct FixedStep(f64);
+
+impl StepK for FixedStep {
+    #[inline(always)]
+    fn eta(self, _acc: &mut f32, _g: f64) -> f64 {
+        self.0
+    }
+}
+
+#[derive(Clone, Copy)]
+struct AdaGradStep(f64);
+
+impl StepK for AdaGradStep {
+    #[inline(always)]
+    fn eta(self, acc: &mut f32, g: f64) -> f64 {
+        // Accumulate in f64, store back f32 — same rounding as the
+        // reference path and `optim::step::AdaGrad`.
+        let a = *acc as f64 + g * g;
+        *acc = a as f32;
+        self.0 / (ADAGRAD_EPS + a).sqrt()
+    }
+}
+
+/// Sweep every entry of a packed block once, in storage order.
+/// Returns #updates.
+pub fn sweep_packed(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
+    match ctx.rule {
+        StepRule::Fixed(eta) => dispatch_loss_reg(block, ctx, st, FixedStep(eta)),
+        StepRule::AdaGrad(eta0) => dispatch_loss_reg(block, ctx, st, AdaGradStep(eta0)),
+    }
+}
+
+/// Resolve (loss, reg) once per sweep into a monomorphized loop.
+fn dispatch_loss_reg<S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    match (ctx.loss, ctx.reg) {
+        (Loss::Hinge, Regularizer::L2) => sweep_mono::<HingeK, L2K, S>(block, ctx, st, step),
+        (Loss::Hinge, Regularizer::L1) => sweep_mono::<HingeK, L1K, S>(block, ctx, st, step),
+        (Loss::Logistic, Regularizer::L2) => {
+            sweep_mono::<LogisticK, L2K, S>(block, ctx, st, step)
+        }
+        (Loss::Logistic, Regularizer::L1) => {
+            sweep_mono::<LogisticK, L1K, S>(block, ctx, st, step)
+        }
+        (Loss::Square, Regularizer::L2) => sweep_mono::<SquareK, L2K, S>(block, ctx, st, step),
+        (Loss::Square, Regularizer::L1) => sweep_mono::<SquareK, L1K, S>(block, ctx, st, step),
+    }
+}
+
+/// Validate, once per sweep, everything the unchecked inner loop
+/// relies on: the stripe-local views cover the block's index spaces,
+/// the row groups tile `0..nnz` with in-bounds rows, and every
+/// block-local column is within the stripe. `PackedBlocks::build`
+/// establishes these invariants, but `PackedBlock`'s fields are public
+/// — re-checking here keeps `sweep_packed` sound for any safely
+/// constructed block. Cost is O(groups) + one vectorizable u32 max
+/// scan over `cols`, amortized over the ~20+ cycles each update costs.
+#[inline]
+fn check_packed_bounds(block: &PackedBlock, ctx: &PackedCtx, st: &PackedState) {
+    assert!(block.n_cols as usize <= st.w.len());
+    assert!(block.n_rows as usize <= st.alpha.len());
+    assert!(st.w_acc.len() == st.w.len());
+    assert!(st.a_acc.len() == st.alpha.len());
+    assert!(block.n_cols as usize <= ctx.inv_col.len());
+    assert!(block.n_rows as usize <= ctx.inv_row.len());
+    assert!(block.n_rows as usize <= ctx.y.len());
+    assert!(block.vals.len() == block.cols.len());
+    let mut next = 0u32;
+    for g in &block.groups {
+        assert!(g.start == next && g.end >= g.start, "groups must tile 0..nnz");
+        assert!(g.li < block.n_rows, "row group out of stripe");
+        next = g.end;
+    }
+    assert!(next as usize == block.cols.len(), "groups must cover all entries");
+    if let Some(&max_col) = block.cols.iter().max() {
+        assert!(max_col < block.n_cols, "column out of stripe");
+    }
+}
+
+fn sweep_mono<L: LossK, R: RegK, S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    check_packed_bounds(block, ctx, st);
+    let b = ctx.w_bound;
+    let lambda = ctx.lambda;
+    let cols = &block.cols[..];
+    let vals = &block.vals[..];
+    for g in &block.groups {
+        let li = g.li as usize;
+        debug_assert!(li < st.alpha.len());
+        // Row-invariant state: loaded once per row group.
+        let (y, hr, mut ai, mut aa) = unsafe {
+            (
+                *ctx.y.get_unchecked(li),
+                *ctx.inv_row.get_unchecked(li),
+                *st.alpha.get_unchecked(li) as f64,
+                *st.a_acc.get_unchecked(li),
+            )
+        };
+        for k in g.start as usize..g.end as usize {
+            debug_assert!(k < cols.len());
+            unsafe {
+                let lj = *cols.get_unchecked(k) as usize;
+                let xm = *vals.get_unchecked(k) as f64; // x/m, pre-folded
+                debug_assert!(lj < st.w.len());
+                let wj = *st.w.get_unchecked(lj) as f64;
+                let gw = lambda * R::grad(wj) * *ctx.inv_col.get_unchecked(lj) - ai * xm;
+                let ga = L::dual_grad(ai, y) * hr - wj * xm;
+                let eta_w = step.eta(st.w_acc.get_unchecked_mut(lj), gw);
+                let eta_a = step.eta(&mut aa, ga);
+                *st.w.get_unchecked_mut(lj) = (wj - eta_w * gw).clamp(-b, b) as f32;
+                // Round α through f32 like the reference path's
+                // store/reload, so both paths see the same value when
+                // a row has several entries.
+                ai = L::project(ai + eta_a * ga, y) as f32 as f64;
+            }
+        }
+        unsafe {
+            *st.alpha.get_unchecked_mut(li) = ai as f32;
+            *st.a_acc.get_unchecked_mut(li) = aa;
+        }
+    }
+    block.vals.len()
+}
+
+/// Subsampled sweep (`cluster.updates_per_block`): process the given
+/// flat entry indices, in order, one update each. Cold path — plain
+/// enum dispatch and checked indexing; numerics are identical to
+/// [`sweep_packed`] on the same entries.
+pub fn sweep_packed_sampled(
+    block: &PackedBlock,
+    idxs: &[u32],
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
+    // No check_packed_bounds here: this path uses checked indexing
+    // throughout (it is O(k), and the O(nnz) column scan of the full
+    // sweep's validation would defeat the point of subsampling).
+    let b = ctx.w_bound;
+    for &k in idxs {
+        let g = block.groups[block.group_of(k)];
+        let li = g.li as usize;
+        let lj = block.cols[k as usize] as usize;
+        let xm = block.vals[k as usize] as f64;
+        let y = ctx.y[li];
+        let hr = ctx.inv_row[li];
+        let wj = st.w[lj] as f64;
+        let ai = st.alpha[li] as f64;
+        let gw = ctx.lambda * ctx.reg.grad(wj) * ctx.inv_col[lj] - ai * xm;
+        let ga = ctx.loss.dual_utility_grad(ai, y) * hr - wj * xm;
+        let (eta_w, eta_a) = match ctx.rule {
+            StepRule::Fixed(eta) => (eta, eta),
+            StepRule::AdaGrad(eta0) => (
+                AdaGradStep(eta0).eta(&mut st.w_acc[lj], gw),
+                AdaGradStep(eta0).eta(&mut st.a_acc[li], ga),
+            ),
+        };
+        st.w[lj] = (wj - eta_w * gw).clamp(-b, b) as f32;
+        st.alpha[li] = ctx.loss.project_alpha(ai + eta_a * ga, y) as f32;
+    }
+    idxs.len()
+}
+
+// ---------------------------------------------------------------------
+// COO reference path (correctness oracle + old-vs-new benchmark)
+// ---------------------------------------------------------------------
+
 /// Sweep every entry once, in storage order. Returns #updates.
+/// Reference implementation over global-coordinate COO entries.
 pub fn sweep_block(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState) -> usize {
     match ctx.rule {
         StepRule::Fixed(eta) => sweep_fixed(entries, ctx, st, eta),
@@ -69,8 +313,10 @@ pub fn sweep_block(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState) -> us
     }
 }
 
+/// The Eq. (8) gradient pair at the current iterate — the checked
+/// scalar oracle the packed kernels are validated against.
 #[inline]
-fn gradients(ctx: &SweepCtx, e: &Entry, wj: f64, ai: f64) -> (f64, f64) {
+pub fn gradients(ctx: &SweepCtx, e: &Entry, wj: f64, ai: f64) -> (f64, f64) {
     let x = e.x as f64;
     let y = ctx.y[e.i as usize] as f64;
     let gw = ctx.lambda * ctx.reg.grad(wj) / ctx.col_counts[e.j as usize] as f64
@@ -79,6 +325,11 @@ fn gradients(ctx: &SweepCtx, e: &Entry, wj: f64, ai: f64) -> (f64, f64) {
         - wj * x / ctx.m;
     (gw, ga)
 }
+
+// The two loops below are kept verbatim from the seed (unchecked
+// indexing, inline gradient expressions) so `bench_updates` compares
+// the packed kernel against the genuine old hot path, not a slowed
+// rewrite. `gradients()` above is the readable form of the same math.
 
 fn sweep_fixed(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta: f64) -> usize {
     let b = ctx.w_bound;
@@ -107,9 +358,9 @@ fn sweep_fixed(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta: f64)
 
 fn sweep_adagrad(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f64) -> usize {
     let b = ctx.w_bound;
-    // Hot path (§Perf): entries come from `OmegaBlocks::build`, whose
-    // indices are in-bounds by construction (validated by
-    // `OmegaBlocks::validate` in tests); unchecked indexing removes 8
+    // Entries come from `PackedBlocks`-derived COO lists whose indices
+    // are in-bounds by construction (validated by
+    // `PackedBlocks::validate` in tests); unchecked indexing removes 8
     // bounds checks per update.
     for e in entries {
         let jw = e.j as usize - st.w_off;
@@ -147,6 +398,7 @@ fn sweep_adagrad(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f
 mod tests {
     use super::*;
     use crate::losses::{Loss, Regularizer};
+    use crate::partition::omega::RowGroup;
 
     fn ctx<'a>(
         row_counts: &'a [u32],
@@ -164,6 +416,49 @@ mod tests {
             y,
             w_bound: Loss::Hinge.w_bound(0.1),
             rule,
+        }
+    }
+
+    /// Hand-pack a single-block PackedBlock plus ctx tables from the
+    /// reference inputs (m = y.len()); entries must be (i, j)-sorted.
+    fn pack(
+        entries: &[Entry],
+        row_counts: &[u32],
+        col_counts: &[u32],
+        y: &[f32],
+    ) -> (PackedBlock, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let m = y.len() as f64;
+        let mut b = PackedBlock {
+            n_rows: row_counts.len() as u32,
+            n_cols: col_counts.len() as u32,
+            ..PackedBlock::default()
+        };
+        for e in entries {
+            let pos = b.cols.len() as u32;
+            if matches!(b.groups.last(), Some(g) if g.li == e.i) {
+                b.groups.last_mut().unwrap().end = pos + 1;
+            } else {
+                b.groups.push(RowGroup { li: e.i, start: pos, end: pos + 1 });
+            }
+            b.cols.push(e.j);
+            b.vals.push((e.x as f64 / m) as f32);
+        }
+        let inv_col: Vec<f64> = col_counts.iter().map(|&c| 1.0 / c as f64).collect();
+        let inv_row: Vec<f64> = row_counts.iter().map(|&c| 1.0 / (m * c as f64)).collect();
+        let yl: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        (b, inv_col, inv_row, yl)
+    }
+
+    fn packed_ctx<'a>(c: &SweepCtx, inv_col: &'a [f64], inv_row: &'a [f64], y: &'a [f64]) -> PackedCtx<'a> {
+        PackedCtx {
+            loss: c.loss,
+            reg: c.reg,
+            lambda: c.lambda,
+            w_bound: c.w_bound,
+            rule: c.rule,
+            inv_col,
+            inv_row,
+            y,
         }
     }
 
@@ -198,6 +493,178 @@ mod tests {
     }
 
     #[test]
+    fn packed_single_update_matches_hand_computation() {
+        // Same problem as `single_update_matches_hand_computation`, in
+        // block-local coordinates: one entry (li=0, lj=0, x=2, m=2), so
+        // x/m = 1 is exact and the packed result is exactly 0.6/0.125.
+        let row_counts = [2u32];
+        let col_counts = [2u32];
+        let y = [1.0f32, -1.0];
+        let entries = [Entry { i: 0, j: 0, x: 2.0 }];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(0.5));
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let mut w = [0.5f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0.25f32];
+        let mut aacc = [0f32];
+        let mut st = PackedState {
+            w: &mut w,
+            w_acc: &mut wacc,
+            alpha: &mut alpha,
+            a_acc: &mut aacc,
+        };
+        let n = sweep_packed(&b, &pc, &mut st);
+        assert_eq!(n, 1);
+        assert!((w[0] - 0.6).abs() < 1e-6, "w {}", w[0]);
+        assert!((alpha[0] - 0.125).abs() < 1e-6, "α {}", alpha[0]);
+    }
+
+    /// Packed vs reference on a small multi-row block, every loss ×
+    /// reg × rule: agreement within 1e-5 relative error over repeated
+    /// sweeps.
+    #[test]
+    fn packed_matches_reference_all_combinations() {
+        let row_counts = [2u32, 2, 1];
+        let col_counts = [2u32, 2, 1];
+        let y = [1.0f32, -1.0, 1.0];
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.5 },
+            Entry { i: 0, j: 2, x: -0.5 },
+            Entry { i: 1, j: 0, x: 0.7 },
+            Entry { i: 1, j: 1, x: 2.0 },
+            Entry { i: 2, j: 1, x: -1.2 },
+        ];
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+            for reg in [Regularizer::L2, Regularizer::L1] {
+                for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                    let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                    c.loss = loss;
+                    c.reg = reg;
+                    c.m = 3.0;
+                    c.w_bound = loss.w_bound(c.lambda);
+                    let (b, inv_col, inv_row, yl) =
+                        pack(&entries, &row_counts, &col_counts, &y);
+                    let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+
+                    let mut rw = [0.2f32, -0.1, 0.05];
+                    let mut rwa = [0f32; 3];
+                    let mut ra: Vec<f32> = y
+                        .iter()
+                        .map(|&v| loss.alpha_init(v as f64) as f32)
+                        .collect();
+                    let mut raa = [0f32; 3];
+                    let mut pw = rw;
+                    let mut pwa = rwa;
+                    let mut pa = ra.clone();
+                    let mut paa = raa;
+
+                    for _ in 0..5 {
+                        let mut rst = BlockState {
+                            w: &mut rw,
+                            w_acc: &mut rwa,
+                            w_off: 0,
+                            alpha: &mut ra,
+                            a_acc: &mut raa,
+                            a_off: 0,
+                        };
+                        sweep_block(&entries, &c, &mut rst);
+                        let mut pst = PackedState {
+                            w: &mut pw,
+                            w_acc: &mut pwa,
+                            alpha: &mut pa,
+                            a_acc: &mut paa,
+                        };
+                        sweep_packed(&b, &pc, &mut pst);
+                    }
+                    for k in 0..3 {
+                        let dw = (rw[k] - pw[k]).abs() as f64;
+                        let da = (ra[k] - pa[k]).abs() as f64;
+                        assert!(
+                            dw <= 1e-5 * rw[k].abs().max(1.0) as f64,
+                            "{loss:?}/{reg:?}/{rule:?} w[{k}]: {} vs {}",
+                            rw[k],
+                            pw[k]
+                        );
+                        assert!(
+                            da <= 1e-5 * ra[k].abs().max(1.0) as f64,
+                            "{loss:?}/{reg:?}/{rule:?} α[{k}]: {} vs {}",
+                            ra[k],
+                            pa[k]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sampled_matches_full_on_all_indices() {
+        // Sampling every index once, in order, must equal a full sweep.
+        let row_counts = [2u32, 2];
+        let col_counts = [2u32, 2];
+        let y = [1.0f32, -1.0];
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.0 },
+            Entry { i: 0, j: 1, x: 0.5 },
+            Entry { i: 1, j: 0, x: -1.0 },
+            Entry { i: 1, j: 1, x: 2.0 },
+        ];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let run_full = || {
+            let mut w = [0.1f32, -0.2];
+            let mut wa = [0f32; 2];
+            let mut a = [0.05f32, -0.3];
+            let mut aa = [0f32; 2];
+            let mut st =
+                PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+            sweep_packed(&b, &pc, &mut st);
+            (w, a, wa, aa)
+        };
+        let run_sampled = || {
+            let mut w = [0.1f32, -0.2];
+            let mut wa = [0f32; 2];
+            let mut a = [0.05f32, -0.3];
+            let mut aa = [0f32; 2];
+            let mut st =
+                PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+            sweep_packed_sampled(&b, &[0, 1, 2, 3], &pc, &mut st);
+            (w, a, wa, aa)
+        };
+        assert_eq!(run_full(), run_sampled());
+    }
+
+    #[test]
+    fn packed_disjoint_entries_commute() {
+        // Updates on (i,j) and (i',j') with i≠i', j≠j' must commute
+        // exactly — the key observation of Section 3, on the packed
+        // path (exercised via the sampled variant to control order).
+        let row_counts = [1u32, 1];
+        let col_counts = [1u32, 1];
+        let y = [1.0f32, -1.0];
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.5 },
+            Entry { i: 1, j: 1, x: -0.5 },
+        ];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let run = |order: [u32; 2]| {
+            let mut w = [0.1f32, -0.2];
+            let mut wa = [0f32; 2];
+            let mut a = [0.05f32, -0.3];
+            let mut aa = [0f32; 2];
+            let mut st =
+                PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+            sweep_packed_sampled(&b, &order, &pc, &mut st);
+            (w, a, wa, aa)
+        };
+        assert_eq!(run([0, 1]), run([1, 0]));
+    }
+
+    #[test]
     fn projection_keeps_iterates_in_boxes() {
         let row_counts = [1u32];
         let col_counts = [1u32];
@@ -205,23 +672,23 @@ mod tests {
         // Huge step to force projection.
         let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1e4));
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
         let mut w = [0f32];
         let mut wacc = [0f32];
         let mut alpha = [0f32];
         let mut aacc = [0f32];
-        let mut st = BlockState {
-            w: &mut w,
-            w_acc: &mut wacc,
-            w_off: 0,
-            alpha: &mut alpha,
-            a_acc: &mut aacc,
-            a_off: 0,
-        };
         for _ in 0..20 {
-            sweep_block(&entries, &c, &mut st);
-            let b = c.w_bound as f32;
-            assert!((-b..=b).contains(&st.w[0]), "w {}", st.w[0]);
-            let beta = y[0] * st.alpha[0];
+            let mut st = PackedState {
+                w: &mut w,
+                w_acc: &mut wacc,
+                alpha: &mut alpha,
+                a_acc: &mut aacc,
+            };
+            sweep_packed(&b, &pc, &mut st);
+            let bb = c.w_bound as f32;
+            assert!((-bb..=bb).contains(&w[0]), "w {}", w[0]);
+            let beta = y[0] * alpha[0];
             assert!((0.0..=1.0).contains(&beta), "β {beta}");
         }
     }
@@ -233,6 +700,8 @@ mod tests {
         let y = [1.0f32];
         let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.1));
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
         let mut w = [0.3f32];
         let mut wacc = [0f32];
         let mut alpha = [0.1f32];
@@ -240,15 +709,13 @@ mod tests {
         let mut prev_w = 0.0;
         let mut prev_a = 0.0;
         for _ in 0..10 {
-            let mut st = BlockState {
+            let mut st = PackedState {
                 w: &mut w,
                 w_acc: &mut wacc,
-                w_off: 0,
                 alpha: &mut alpha,
                 a_acc: &mut aacc,
-                a_off: 0,
             };
-            sweep_block(&entries, &c, &mut st);
+            sweep_packed(&b, &pc, &mut st);
             assert!(wacc[0] >= prev_w);
             assert!(aacc[0] >= prev_a);
             prev_w = wacc[0];
@@ -256,37 +723,6 @@ mod tests {
         }
         assert!(prev_w > 0.0);
         assert!(prev_a > 0.0);
-    }
-
-    #[test]
-    fn disjoint_entries_commute() {
-        // Updates on (i,j) and (i',j') with i≠i', j≠j' must commute
-        // exactly — the key observation of Section 3.
-        let row_counts = [1u32, 1];
-        let col_counts = [1u32, 1];
-        let y = [1.0f32, -1.0];
-        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
-        let e0 = Entry { i: 0, j: 0, x: 1.5 };
-        let e1 = Entry { i: 1, j: 1, x: -0.5 };
-        let run = |order: [Entry; 2]| {
-            let mut w = [0.1f32, -0.2];
-            let mut wacc = [0f32; 2];
-            let mut alpha = [0.05f32, -0.3];
-            let mut aacc = [0f32; 2];
-            let mut st = BlockState {
-                w: &mut w,
-                w_acc: &mut wacc,
-                w_off: 0,
-                alpha: &mut alpha,
-                a_acc: &mut aacc,
-                a_off: 0,
-            };
-            sweep_block(&order, &c, &mut st);
-            (w, alpha, wacc, aacc)
-        };
-        let a = run([e0, e1]);
-        let b = run([e1, e0]);
-        assert_eq!(a, b);
     }
 
     #[test]
@@ -301,21 +737,21 @@ mod tests {
             Entry { i: 1, j: 0, x: -1.0 },
             Entry { i: 1, j: 1, x: 2.0 },
         ];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
         let run = || {
             let mut w = [0f32; 2];
             let mut wacc = [0f32; 2];
             let mut alpha = [0f32; 2];
             let mut aacc = [0f32; 2];
-            let mut st = BlockState {
-                w: &mut w,
-                w_acc: &mut wacc,
-                w_off: 0,
-                alpha: &mut alpha,
-                a_acc: &mut aacc,
-                a_off: 0,
-            };
             for _ in 0..5 {
-                sweep_block(&entries, &c, &mut st);
+                let mut st = PackedState {
+                    w: &mut w,
+                    w_acc: &mut wacc,
+                    alpha: &mut alpha,
+                    a_acc: &mut aacc,
+                };
+                sweep_packed(&b, &pc, &mut st);
             }
             (w, alpha)
         };
@@ -330,19 +766,19 @@ mod tests {
         let mut c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1.0));
         c.loss = Loss::Square;
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
+        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
         let mut w = [0f32];
         let mut wacc = [0f32];
         let mut alpha = [0f32];
         let mut aacc = [0f32];
-        let mut st = BlockState {
+        let mut st = PackedState {
             w: &mut w,
             w_acc: &mut wacc,
-            w_off: 0,
             alpha: &mut alpha,
             a_acc: &mut aacc,
-            a_off: 0,
         };
-        sweep_block(&entries, &c, &mut st);
+        sweep_packed(&b, &pc, &mut st);
         // g_α = (y − α)/m − wx/m = 3/1 − 0 = 3 → α = 3 (no clamp).
         assert!((alpha[0] - 3.0).abs() < 1e-6);
     }

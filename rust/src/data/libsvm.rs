@@ -12,12 +12,34 @@ use super::sparse::Csr;
 use std::io::{BufReader, Write};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            LibsvmError::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse from a string. `min_dim` lets callers force a dimensionality

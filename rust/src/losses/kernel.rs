@@ -1,0 +1,94 @@
+//! Compile-time kernel dispatch for the packed sweep (§Perf).
+//!
+//! The scalar hot loop (`coordinator::updates::sweep_packed`) used to
+//! pay an enum `match` on [`Loss`] and [`Regularizer`] for every
+//! nonzero. These zero-sized marker types lift the choice to a generic
+//! parameter so the `(Loss, Regularizer, StepRule)` combination is
+//! resolved **once per sweep**: each of the 12 combinations
+//! monomorphizes into its own straight-line loop where LLVM constant-
+//! folds the match away (hinge's `h'(α) = y` hoists to the row level,
+//! L2's `∇φ = 2w` fuses into the FMA, …).
+//!
+//! The impls delegate to the enum methods with a `const` discriminant —
+//! the numerical definitions live in exactly one place ([`Loss`] /
+//! [`Regularizer`]), so the monomorphized kernels are bit-identical to
+//! the enum-dispatched reference path by construction.
+
+use super::{Loss, Regularizer};
+
+/// Loss selected at compile time. `dual_grad`/`project` match
+/// [`Loss::dual_utility_grad`] / [`Loss::project_alpha`] exactly.
+pub trait LossK: Copy + Send + Sync + 'static {
+    const LOSS: Loss;
+
+    #[inline(always)]
+    fn dual_grad(alpha: f64, y: f64) -> f64 {
+        Self::LOSS.dual_utility_grad(alpha, y)
+    }
+
+    #[inline(always)]
+    fn project(alpha: f64, y: f64) -> f64 {
+        Self::LOSS.project_alpha(alpha, y)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct HingeK;
+#[derive(Clone, Copy, Debug)]
+pub struct LogisticK;
+#[derive(Clone, Copy, Debug)]
+pub struct SquareK;
+
+impl LossK for HingeK {
+    const LOSS: Loss = Loss::Hinge;
+}
+impl LossK for LogisticK {
+    const LOSS: Loss = Loss::Logistic;
+}
+impl LossK for SquareK {
+    const LOSS: Loss = Loss::Square;
+}
+
+/// Regularizer selected at compile time. `grad` matches
+/// [`Regularizer::grad`] exactly.
+pub trait RegK: Copy + Send + Sync + 'static {
+    const REG: Regularizer;
+
+    #[inline(always)]
+    fn grad(w: f64) -> f64 {
+        Self::REG.grad(w)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct L1K;
+#[derive(Clone, Copy, Debug)]
+pub struct L2K;
+
+impl RegK for L1K {
+    const REG: Regularizer = Regularizer::L1;
+}
+impl RegK for L2K {
+    const REG: Regularizer = Regularizer::L2;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernels_match_enum_dispatch() {
+        for &(a, y) in &[(0.3, 1.0), (-0.7, -1.0), (0.99, 1.0), (0.0, -1.0)] {
+            assert_eq!(HingeK::dual_grad(a, y), Loss::Hinge.dual_utility_grad(a, y));
+            assert_eq!(LogisticK::dual_grad(a, y), Loss::Logistic.dual_utility_grad(a, y));
+            assert_eq!(SquareK::dual_grad(a, y), Loss::Square.dual_utility_grad(a, y));
+            assert_eq!(HingeK::project(a, y), Loss::Hinge.project_alpha(a, y));
+            assert_eq!(LogisticK::project(a, y), Loss::Logistic.project_alpha(a, y));
+            assert_eq!(SquareK::project(a, y), Loss::Square.project_alpha(a, y));
+        }
+        for &w in &[-1.5, 0.0, 0.4] {
+            assert_eq!(L1K::grad(w), Regularizer::L1.grad(w));
+            assert_eq!(L2K::grad(w), Regularizer::L2.grad(w));
+        }
+    }
+}

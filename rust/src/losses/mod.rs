@@ -1,10 +1,12 @@
 //! Loss functions, their Fenchel duals (Table 1), regularizers, and the
 //! primal / dual / saddle objective evaluations (Eq. 1, Eq. 6, Eq. 10).
 
+pub mod kernel;
 pub mod loss;
 pub mod objective;
 pub mod regularizer;
 
+pub use kernel::{HingeK, L1K, L2K, LogisticK, LossK, RegK, SquareK};
 pub use loss::Loss;
 pub use objective::Problem;
 pub use regularizer::Regularizer;

@@ -10,7 +10,7 @@
 pub mod omega;
 pub mod schedule;
 
-pub use omega::OmegaBlocks;
+pub use omega::{Entry, OmegaBlocks, PackedBlock, PackedBlocks, RowGroup};
 pub use schedule::RingSchedule;
 
 /// A contiguous partition of `[0, n)` into `p` blocks.

@@ -1,15 +1,40 @@
-//! The p×p block decomposition of the nonzero set Ω.
+//! The p×p block decomposition of the nonzero set Ω, in packed form.
 //!
-//! Ω^(q,r) = {(i,j) ∈ Ω : i ∈ I_q, j ∈ J_r}. Each block is stored as a
-//! COO list sorted by (row, col) — the order the worker sweeps. Blocks
-//! also carry the sampling metadata the update rule needs: the global
-//! |Ω_i| (row nnz) and |Ω̄_j| (column nnz) counts appear in Eq. (8)'s
-//! scaling, so they are computed once on the full matrix and shared.
+//! Ω^(q,r) = {(i,j) ∈ Ω : i ∈ I_q, j ∈ J_r}. The seed stored each block
+//! as a COO `Vec<Entry>` with 12-byte entries and *global* indices; the
+//! hot loop then re-derived everything per nonzero: two offset
+//! subtractions, three f64 divisions, and re-loads of row-invariant
+//! state (y_i, α_i, 1/(m|Ω_i|)). [`PackedBlocks`] is the §Perf
+//! replacement:
+//!
+//! * **SoA row groups** — each block stores its nonzeros as parallel
+//!   arrays `cols` (block-local u32 column ids) and `vals` (f32,
+//!   pre-scaled to x/m), segmented into [`RowGroup`]s of consecutive
+//!   entries sharing a row. The sweep walks 8 bytes per nonzero instead
+//!   of 12 and loads row state once per group instead of once per entry.
+//! * **Precomputed reciprocals** — per column-stripe tables
+//!   `inv_col[r][lj] = 1/|Ω̄_j|` and per row-stripe tables
+//!   `inv_row[q][li] = 1/(m·|Ω_i|)` turn every division in update (8)
+//!   into a multiply; folding `x/m` into the stored value removes the
+//!   remaining one. The inner loop has **zero divisions and zero offset
+//!   subtractions**.
+//! * **Block-local indices** — `cols`/`li` are already relative to the
+//!   stripe, so the kernel indexes the travelling w block and resident
+//!   α block directly.
+//!
+//! Blocks keep the sampling metadata the update rule needs — the global
+//! |Ω_i| (row nnz) and |Ω̄_j| (column nnz) counts of Eq. (8) — computed
+//! once on the full matrix and shared. Entries appear in the same
+//! (row, col)-sorted order the COO layout used, so the sweep order (and
+//! with it the Lemma-2 serializability argument and the parallel ↔
+//! replay bit-identity) is unchanged.
 
 use super::Partition;
 use crate::data::sparse::Csr;
 
-/// One nonzero entry within a block (global coordinates).
+/// One nonzero entry in global coordinates. Retained as the unit of the
+/// scalar *reference* path (`coordinator::updates::sweep_block`), which
+/// serves as the correctness oracle for the packed kernels.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Entry {
     pub i: u32,
@@ -17,56 +42,182 @@ pub struct Entry {
     pub x: f32,
 }
 
-/// All p×p blocks of Ω plus the global per-row/per-column nnz counts.
+/// A run of consecutive entries sharing one (block-local) row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowGroup {
+    /// Block-local row id (i − row stripe offset).
+    pub li: u32,
+    /// Entry range [start, end) into the block's `cols`/`vals`.
+    pub start: u32,
+    pub end: u32,
+}
+
+/// One Ω^(q,r) block in packed SoA form.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PackedBlock {
+    /// Non-empty row segments, ascending in `li`; ranges tile
+    /// `0..nnz()` exactly.
+    pub groups: Vec<RowGroup>,
+    /// Block-local column id per entry, sorted within each group.
+    pub cols: Vec<u32>,
+    /// Pre-scaled value x_ij/m per entry (f32 — matches the parameter
+    /// precision; the kernel computes in f64).
+    pub vals: Vec<f32>,
+    /// Row-stripe height (bound on `li`, exclusive).
+    pub n_rows: u32,
+    /// Column-stripe width (bound on `cols`, exclusive).
+    pub n_cols: u32,
+}
+
+impl PackedBlock {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Index of the [`RowGroup`] containing flat entry `k` (binary
+    /// search; used by the subsampled sweep path).
+    #[inline]
+    pub fn group_of(&self, k: u32) -> usize {
+        debug_assert!((k as usize) < self.nnz());
+        // Groups tile [0, nnz), so the first group with `end > k` owns k.
+        self.groups.partition_point(|g| g.end <= k)
+    }
+}
+
+/// All p×p packed blocks of Ω plus the global per-row/per-column nnz
+/// counts and the precomputed reciprocal tables.
 #[derive(Clone, Debug)]
-pub struct OmegaBlocks {
+pub struct PackedBlocks {
     pub p: usize,
-    /// blocks[q * p + r] = entries of Ω^(q,r).
-    pub blocks: Vec<Vec<Entry>>,
+    /// blocks[q * p + r] = packed Ω^(q,r).
+    pub blocks: Vec<PackedBlock>,
     /// |Ω_i| for every row i.
     pub row_counts: Vec<u32>,
     /// |Ω̄_j| for every column j.
     pub col_counts: Vec<u32>,
+    /// 1/|Ω̄_j| per column stripe r, indexed by block-local column.
+    /// 0.0 for empty columns (never read by the sweep: no entries).
+    pub inv_col: Vec<Vec<f64>>,
+    /// 1/(m·|Ω_i|) per row stripe q, indexed by block-local row.
+    /// 0.0 for empty rows (never read by the sweep).
+    pub inv_row: Vec<Vec<f64>>,
+    /// Number of training points m.
+    pub m: usize,
     pub row_part: Partition,
     pub col_part: Partition,
 }
 
-impl OmegaBlocks {
-    pub fn build(x: &Csr, row_part: &Partition, col_part: &Partition) -> OmegaBlocks {
+/// Backwards-compatible name for the block decomposition.
+pub type OmegaBlocks = PackedBlocks;
+
+impl PackedBlocks {
+    pub fn build(x: &Csr, row_part: &Partition, col_part: &Partition) -> PackedBlocks {
         assert_eq!(row_part.n(), x.rows);
         assert_eq!(col_part.n(), x.cols);
         assert_eq!(row_part.p(), col_part.p(), "row/col partitions must have equal p");
         let p = row_part.p();
-        let mut blocks: Vec<Vec<Entry>> = vec![Vec::new(); p * p];
-        let row_counts: Vec<u32> =
-            (0..x.rows).map(|i| x.row_nnz(i) as u32).collect();
+        let m = x.rows;
+        let inv_m = 1.0 / (m as f64).max(1.0);
+
+        let mut blocks: Vec<PackedBlock> = (0..p * p)
+            .map(|qr| PackedBlock {
+                n_rows: row_part.block_len(qr / p) as u32,
+                n_cols: col_part.block_len(qr % p) as u32,
+                ..PackedBlock::default()
+            })
+            .collect();
+
+        let row_counts: Vec<u32> = (0..x.rows).map(|i| x.row_nnz(i) as u32).collect();
         let col_counts = x.col_counts();
+
         for i in 0..x.rows {
             let q = row_part.owner(i);
+            let li = (i - row_part.bounds[q]) as u32;
             let (idx, val) = x.row(i);
             for k in 0..idx.len() {
                 let j = idx[k] as usize;
                 let r = col_part.owner(j);
-                blocks[q * p + r].push(Entry { i: i as u32, j: idx[k], x: val[k] });
+                let b = &mut blocks[q * p + r];
+                let pos = b.cols.len() as u32;
+                if matches!(b.groups.last(), Some(g) if g.li == li) {
+                    b.groups.last_mut().unwrap().end = pos + 1;
+                } else {
+                    b.groups.push(RowGroup { li, start: pos, end: pos + 1 });
+                }
+                b.cols.push(idx[k] - col_part.bounds[r] as u32);
+                b.vals.push((val[k] as f64 * inv_m) as f32);
             }
         }
-        OmegaBlocks {
+
+        let inv_col: Vec<Vec<f64>> = (0..p)
+            .map(|r| {
+                col_part
+                    .block(r)
+                    .map(|j| {
+                        let c = col_counts[j];
+                        if c == 0 { 0.0 } else { 1.0 / c as f64 }
+                    })
+                    .collect()
+            })
+            .collect();
+        let inv_row: Vec<Vec<f64>> = (0..p)
+            .map(|q| {
+                row_part
+                    .block(q)
+                    .map(|i| {
+                        let c = row_counts[i];
+                        if c == 0 { 0.0 } else { 1.0 / (m as f64 * c as f64) }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        PackedBlocks {
             p,
             blocks,
             row_counts,
             col_counts,
+            inv_col,
+            inv_row,
+            m,
             row_part: row_part.clone(),
             col_part: col_part.clone(),
         }
     }
 
     #[inline]
-    pub fn block(&self, q: usize, r: usize) -> &[Entry] {
+    pub fn block(&self, q: usize, r: usize) -> &PackedBlock {
         &self.blocks[q * self.p + r]
     }
 
     pub fn total_nnz(&self) -> usize {
-        self.blocks.iter().map(|b| b.len()).sum()
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Per-row-stripe label tables in f64, ready for the packed kernel
+    /// (`y[q][li]` = label of global row `row_part.bounds[q] + li`).
+    pub fn stripe_labels(&self, y: &[f32]) -> Vec<Vec<f64>> {
+        assert_eq!(y.len(), self.row_part.n());
+        (0..self.p)
+            .map(|q| self.row_part.block(q).map(|i| y[i] as f64).collect())
+            .collect()
+    }
+
+    /// Reconstruct a block's entries in global COO coordinates (the
+    /// format the scalar reference path consumes). Values are exact:
+    /// they are re-read from the source matrix, not un-scaled.
+    pub fn block_entries(&self, x: &Csr, q: usize, r: usize) -> Vec<Entry> {
+        let mut out = Vec::with_capacity(self.block(q, r).nnz());
+        for i in self.row_part.block(q) {
+            let (idx, val) = x.row(i);
+            for k in 0..idx.len() {
+                if self.col_part.owner(idx[k] as usize) == r {
+                    out.push(Entry { i: i as u32, j: idx[k], x: val[k] });
+                }
+            }
+        }
+        out
     }
 
     /// Load imbalance across the p "diagonals" used in an epoch: the
@@ -83,28 +234,102 @@ impl OmegaBlocks {
             let mut worst = 0usize;
             for q in 0..self.p {
                 let b = (q + r) % self.p;
-                worst = worst.max(self.block(q, b).len());
+                worst = worst.max(self.block(q, b).nnz());
             }
             epoch_cost += worst;
         }
         epoch_cost as f64 / ideal
     }
 
-    /// Structural invariant check used by tests: every entry lands in
-    /// the block of its owners, blocks cover Ω exactly.
+    /// Structural invariant check used by tests (and the safety
+    /// argument for the kernel's unchecked indexing): blocks cover Ω
+    /// exactly, groups tile each block's entry range with ascending
+    /// in-bounds local rows, columns are sorted and in-bounds, values
+    /// carry x/m, and the reciprocal tables match the counts.
     pub fn validate(&self, x: &Csr) -> Result<(), String> {
         if self.total_nnz() != x.nnz() {
             return Err(format!("cover: {} != {}", self.total_nnz(), x.nnz()));
         }
+        if self.m != x.rows {
+            return Err(format!("m: {} != {}", self.m, x.rows));
+        }
+        let inv_m = 1.0 / (self.m as f64).max(1.0);
         for q in 0..self.p {
             for r in 0..self.p {
-                for e in self.block(q, r) {
-                    if self.row_part.owner(e.i as usize) != q {
-                        return Err(format!("entry ({},{}) wrong row block", e.i, e.j));
+                let b = self.block(q, r);
+                if b.n_rows as usize != self.row_part.block_len(q)
+                    || b.n_cols as usize != self.col_part.block_len(r)
+                {
+                    return Err(format!("block ({q},{r}) stripe dims wrong"));
+                }
+                let mut next = 0u32;
+                let mut prev_li: Option<u32> = None;
+                for g in &b.groups {
+                    if g.start != next || g.end <= g.start {
+                        return Err(format!("block ({q},{r}) groups don't tile entries"));
                     }
-                    if self.col_part.owner(e.j as usize) != r {
-                        return Err(format!("entry ({},{}) wrong col block", e.i, e.j));
+                    if let Some(pl) = prev_li {
+                        if g.li <= pl {
+                            return Err(format!("block ({q},{r}) rows not ascending"));
+                        }
                     }
+                    if g.li >= b.n_rows {
+                        return Err(format!("block ({q},{r}) row {} out of stripe", g.li));
+                    }
+                    for k in g.start..g.end {
+                        let lj = b.cols[k as usize];
+                        if lj >= b.n_cols {
+                            return Err(format!("block ({q},{r}) col {lj} out of stripe"));
+                        }
+                        if k > g.start && b.cols[k as usize - 1] >= lj {
+                            return Err(format!("block ({q},{r}) cols not sorted"));
+                        }
+                    }
+                    prev_li = Some(g.li);
+                    next = g.end;
+                }
+                if next as usize != b.nnz() {
+                    return Err(format!("block ({q},{r}) groups cover {next} != {}", b.nnz()));
+                }
+                // Cross-check content against the source matrix.
+                let expect = self.block_entries(x, q, r);
+                if expect.len() != b.nnz() {
+                    return Err(format!("block ({q},{r}) entry count vs matrix"));
+                }
+                let mut k = 0usize;
+                for g in &b.groups {
+                    for e in &expect[g.start as usize..g.end as usize] {
+                        let gi = self.row_part.bounds[q] + g.li as usize;
+                        let gj = self.col_part.bounds[r] + b.cols[k] as usize;
+                        if gi != e.i as usize || gj != e.j as usize {
+                            return Err(format!(
+                                "block ({q},{r}) entry {k}: ({gi},{gj}) != ({},{})",
+                                e.i, e.j
+                            ));
+                        }
+                        if b.vals[k] != (e.x as f64 * inv_m) as f32 {
+                            return Err(format!("block ({q},{r}) entry {k}: value drift"));
+                        }
+                        k += 1;
+                    }
+                }
+            }
+        }
+        for r in 0..self.p {
+            for (lj, j) in self.col_part.block(r).enumerate() {
+                let c = self.col_counts[j];
+                let want = if c == 0 { 0.0 } else { 1.0 / c as f64 };
+                if self.inv_col[r][lj] != want {
+                    return Err(format!("inv_col[{r}][{lj}] wrong"));
+                }
+            }
+        }
+        for q in 0..self.p {
+            for (li, i) in self.row_part.block(q).enumerate() {
+                let c = self.row_counts[i];
+                let want = if c == 0 { 0.0 } else { 1.0 / (self.m as f64 * c as f64) };
+                if self.inv_row[q][li] != want {
+                    return Err(format!("inv_row[{q}][{li}] wrong"));
                 }
             }
         }
@@ -136,46 +361,112 @@ mod tests {
         let x = toy_matrix();
         let rp = Partition::even(5, 2);
         let cp = Partition::even(4, 2);
-        let om = OmegaBlocks::build(&x, &rp, &cp);
+        let om = PackedBlocks::build(&x, &rp, &cp);
         om.validate(&x).unwrap();
-        // Rows 0..2 are block 0; cols 0..1 are block 0.
-        // Ω^(0,0) = {(0,0,1.0), (1,1,3.0)}.
+        // Rows 0..2 are stripe 0; cols 0..1 are stripe 0.
+        // Ω^(0,0) = {(0,0,1.0), (1,1,3.0)} → local rows 0 and 1.
         let b00 = om.block(0, 0);
-        assert_eq!(b00.len(), 2);
-        assert_eq!(b00[0], Entry { i: 0, j: 0, x: 1.0 });
-        assert_eq!(b00[1], Entry { i: 1, j: 1, x: 3.0 });
-        // Ω^(0,1) = {(0,3,2.0)}.
-        assert_eq!(om.block(0, 1), &[Entry { i: 0, j: 3, x: 2.0 }]);
+        assert_eq!(b00.nnz(), 2);
+        assert_eq!(
+            b00.groups,
+            vec![
+                RowGroup { li: 0, start: 0, end: 1 },
+                RowGroup { li: 1, start: 1, end: 2 }
+            ]
+        );
+        assert_eq!(b00.cols, vec![0, 1]);
+        // Values are pre-scaled by 1/m (m = 5).
+        assert_eq!(b00.vals, vec![(1.0f64 / 5.0) as f32, (3.0f64 / 5.0) as f32]);
+        // Ω^(0,1) = {(0,3,2.0)} → local row 0, local col 1.
+        let b01 = om.block(0, 1);
+        assert_eq!(b01.groups, vec![RowGroup { li: 0, start: 0, end: 1 }]);
+        assert_eq!(b01.cols, vec![1]);
+        assert_eq!(b01.vals, vec![(2.0f64 / 5.0) as f32]);
     }
 
     #[test]
-    fn counts_match_matrix() {
+    fn counts_and_reciprocals_match_matrix() {
         let x = toy_matrix();
         let rp = Partition::even(5, 2);
         let cp = Partition::even(4, 2);
-        let om = OmegaBlocks::build(&x, &rp, &cp);
+        let om = PackedBlocks::build(&x, &rp, &cp);
         assert_eq!(om.row_counts, vec![2, 1, 2, 1, 2]);
         assert_eq!(om.col_counts, vec![2, 2, 2, 2]);
         assert_eq!(om.total_nnz(), x.nnz());
+        // inv_col[r][lj] = 1/|Ω̄_j|, inv_row[q][li] = 1/(m|Ω_i|).
+        assert_eq!(om.inv_col[0], vec![0.5, 0.5]);
+        assert_eq!(om.inv_col[1], vec![0.5, 0.5]);
+        assert_eq!(om.inv_row[0], vec![1.0 / 10.0, 1.0 / 5.0]);
+        assert_eq!(om.inv_row[1], vec![1.0 / 10.0, 1.0 / 5.0, 1.0 / 10.0]);
     }
 
     #[test]
-    fn entries_sorted_within_block_by_row() {
+    fn groups_ascending_and_cols_sorted() {
         let x = toy_matrix();
         let rp = Partition::even(5, 2);
         let cp = Partition::even(4, 2);
-        let om = OmegaBlocks::build(&x, &rp, &cp);
+        let om = PackedBlocks::build(&x, &rp, &cp);
         for q in 0..2 {
             for r in 0..2 {
                 let b = om.block(q, r);
-                for k in 1..b.len() {
-                    assert!(
-                        (b[k - 1].i, b[k - 1].j) < (b[k].i, b[k].j),
-                        "block ({q},{r}) not sorted"
-                    );
+                for gk in 1..b.groups.len() {
+                    assert!(b.groups[gk - 1].li < b.groups[gk].li, "block ({q},{r})");
+                }
+                for g in &b.groups {
+                    for k in (g.start + 1)..g.end {
+                        assert!(
+                            b.cols[k as usize - 1] < b.cols[k as usize],
+                            "block ({q},{r}) cols"
+                        );
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn group_of_finds_owning_row() {
+        let x = toy_matrix();
+        let rp = Partition::even(5, 1);
+        let cp = Partition::even(4, 1);
+        let om = PackedBlocks::build(&x, &rp, &cp);
+        let b = om.block(0, 0);
+        for (gi, g) in b.groups.iter().enumerate() {
+            for k in g.start..g.end {
+                assert_eq!(b.group_of(k), gi, "entry {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_entries_reconstruct_exact_values() {
+        let x = toy_matrix();
+        let rp = Partition::even(5, 2);
+        let cp = Partition::even(4, 2);
+        let om = PackedBlocks::build(&x, &rp, &cp);
+        let e00 = om.block_entries(&x, 0, 0);
+        assert_eq!(
+            e00,
+            vec![Entry { i: 0, j: 0, x: 1.0 }, Entry { i: 1, j: 1, x: 3.0 }]
+        );
+        assert_eq!(om.block_entries(&x, 0, 1), vec![Entry { i: 0, j: 3, x: 2.0 }]);
+        let total: usize =
+            (0..2).flat_map(|q| (0..2).map(move |r| (q, r)))
+                .map(|(q, r)| om.block_entries(&x, q, r).len())
+                .sum();
+        assert_eq!(total, x.nnz());
+    }
+
+    #[test]
+    fn stripe_labels_follow_row_partition() {
+        let x = toy_matrix();
+        let rp = Partition::even(5, 2);
+        let cp = Partition::even(4, 2);
+        let om = PackedBlocks::build(&x, &rp, &cp);
+        let y = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let yl = om.stripe_labels(&y);
+        assert_eq!(yl[0], vec![1.0, -1.0]);
+        assert_eq!(yl[1], vec![1.0, -1.0, 1.0]);
     }
 
     #[test]
@@ -197,7 +488,7 @@ mod tests {
             .generate();
             let rp = Partition::even(ds.m(), p);
             let cp = Partition::even(ds.d(), p);
-            let om = OmegaBlocks::build(&ds.x, &rp, &cp);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
             om.validate(&ds.x).map_err(|e| e)?;
             prop::assert_that(om.epoch_imbalance() >= 0.99, "imbalance >= 1")
         });
@@ -205,17 +496,12 @@ mod tests {
 
     #[test]
     fn imbalance_perfect_on_uniform_diagonal() {
-        // Diagonal matrix, p = n: every block has exactly one entry on
-        // the diagonal blocks and zero elsewhere — per inner iteration
-        // exactly one active diagonal has entries... with even
-        // partition each diagonal r has max block size 1 -> epoch cost p,
-        // ideal = nnz/p = 1 -> imbalance = p. Just verify it computes.
+        // Diagonal matrix, p = n: all entries are on the r=0 diagonal:
+        // epoch cost = 1 (r=0) + 0 + 0, ideal = 1 -> imbalance 1.0.
         let x = Csr::from_rows(3, vec![vec![(0, 1.0)], vec![(1, 1.0)], vec![(2, 1.0)]]);
         let rp = Partition::even(3, 3);
         let cp = Partition::even(3, 3);
-        let om = OmegaBlocks::build(&x, &rp, &cp);
-        // All entries are on the r=0 diagonal: epoch cost = 1 (r=0) + 0 + 0,
-        // ideal = 1 -> imbalance 1.0.
+        let om = PackedBlocks::build(&x, &rp, &cp);
         assert!((om.epoch_imbalance() - 1.0).abs() < 1e-12);
     }
 
@@ -225,6 +511,6 @@ mod tests {
         let x = toy_matrix();
         let rp = Partition::even(5, 2);
         let cp = Partition::even(4, 3);
-        OmegaBlocks::build(&x, &rp, &cp);
+        PackedBlocks::build(&x, &rp, &cp);
     }
 }

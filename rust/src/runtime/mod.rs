@@ -1,10 +1,39 @@
 //! PJRT runtime: the bridge from the Rust coordinator to the AOT
 //! JAX/Pallas artifacts (HLO text → compile once → execute on the hot
 //! path). Python never runs at training time.
+//!
+//! The PJRT client itself comes from the `xla` bindings, which are not
+//! in the offline crate set — the modules that touch them are gated
+//! behind the `xla` cargo feature. With the feature off (the default),
+//! artifact-manifest handling still works and the tile engine returns a
+//! clean runtime error instead of failing the build.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(feature = "xla")]
 pub mod tile_engine;
 
+#[cfg(not(feature = "xla"))]
+pub mod tile_engine {
+    //! Stub tile engine used when the `xla` feature is disabled.
+    use crate::config::TrainConfig;
+    use crate::coordinator::monitor::TrainResult;
+    use crate::data::Dataset;
+    use anyhow::Result;
+
+    pub fn train(
+        _cfg: &TrainConfig,
+        _train: &Dataset,
+        _test: Option<&Dataset>,
+    ) -> Result<TrainResult> {
+        anyhow::bail!(
+            "tile mode requires the PJRT runtime; rebuild with \
+             `--features xla` (needs the vendored xla bindings)"
+        )
+    }
+}
+
 pub use artifacts::{ArtifactEntry, Manifest};
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;

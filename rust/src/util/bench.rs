@@ -46,6 +46,9 @@ pub struct BenchResult {
     pub name: String,
     pub samples: Vec<f64>, // seconds per iteration
     pub iters_per_sample: u64,
+    /// Work units (e.g. coordinate updates) performed per iteration;
+    /// lets reports derive units/sec. 1 when not specified.
+    pub units_per_iter: u64,
 }
 
 impl BenchResult {
@@ -144,7 +147,7 @@ pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Benc
         samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
     }
 
-    BenchResult { name: name.to_string(), samples, iters_per_sample }
+    BenchResult { name: name.to_string(), samples, iters_per_sample, units_per_iter: 1 }
 }
 
 /// Bench group runner: prints criterion-style lines and collects results
@@ -172,17 +175,28 @@ impl Runner {
     }
 
     pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        self.bench_units(name, 1, f);
+    }
+
+    /// Like [`Runner::bench`], declaring that each iteration performs
+    /// `units` units of work (e.g. one coordinate update per nonzero),
+    /// so reports can derive units/sec.
+    pub fn bench_units<T>(&mut self, name: &str, units: u64, f: impl FnMut() -> T) {
         if let Some(ref flt) = self.filter {
             if !name.contains(flt.as_str()) {
                 return;
             }
         }
-        let r = bench(name, &self.cfg, f);
+        let mut r = bench(name, &self.cfg, f);
+        r.units_per_iter = units.max(1);
         println!("{}", r.report());
         self.results.push(r);
     }
 
-    /// Write a summary CSV under results/bench/.
+    /// Write a summary CSV under results/bench/, plus — when the
+    /// `DSO_BENCH_JSON` env var is set to anything but "0" — a
+    /// machine-readable `BENCH_<group>.json` in the working directory
+    /// so the perf trajectory can be tracked across PRs.
     pub fn finish(&self, group: &str) {
         let mut t = super::csv::Table::new(&["median_s", "mean_s", "p95_s", "samples"]);
         for r in &self.results {
@@ -194,6 +208,34 @@ impl Runner {
         let names: Vec<String> = self.results.iter().map(|r| r.name.clone()).collect();
         let _ = std::fs::write(dir.join(format!("{group}.names.txt")), names.join("\n"));
         let _ = t.write_csv(&dir.join(format!("{group}.csv")));
+        if matches!(std::env::var("DSO_BENCH_JSON"), Ok(v) if v != "0") {
+            let _ = std::fs::write(format!("BENCH_{group}.json"), self.emit_json(group));
+        }
+    }
+
+    /// Machine-readable results: name, median s/iter, units/sec.
+    pub fn emit_json(&self, group: &str) -> String {
+        use super::json::{obj, Json};
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_s_per_iter", Json::Num(r.median())),
+                    ("mean_s_per_iter", Json::Num(r.mean())),
+                    ("p95_s_per_iter", Json::Num(r.p95())),
+                    ("samples", Json::Num(r.samples.len() as f64)),
+                    ("units_per_iter", Json::Num(r.units_per_iter as f64)),
+                    (
+                        "units_per_sec",
+                        Json::Num(r.units_per_iter as f64 / r.median().max(1e-18)),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![("group", Json::Str(group.to_string())), ("results", Json::Arr(results))])
+            .emit()
     }
 }
 
@@ -225,6 +267,26 @@ mod tests {
     }
 
     #[test]
+    fn emit_json_is_parseable_and_carries_units() {
+        use crate::util::json::Json;
+        let mut runner = Runner {
+            cfg: BenchConfig::quick(),
+            results: Vec::new(),
+            filter: None,
+        };
+        runner.bench_units("sweep_smoke", 1000, || std::hint::black_box(7u64));
+        let text = runner.emit_json("updates");
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str(), Some("updates"));
+        let rs = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("sweep_smoke"));
+        assert_eq!(rs[0].get("units_per_iter").unwrap().as_i64(), Some(1000));
+        assert!(rs[0].get("units_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rs[0].get("median_s_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
     fn human_time_units() {
         assert!(human_time(2.0).ends_with('s'));
         assert!(human_time(2e-3).ends_with("ms"));
@@ -238,6 +300,7 @@ mod tests {
             name: "x".into(),
             samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
             iters_per_sample: 1,
+            units_per_iter: 1,
         };
         assert!(r.p05() <= r.median());
         assert!(r.median() <= r.p95());

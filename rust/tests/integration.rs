@@ -272,7 +272,7 @@ fn all_baselines_run_on_all_registry_serial_datasets() {
 fn balanced_partition_reduces_epoch_imbalance_on_skewed_data() {
     use dso::config::PartitionKind;
     use dso::coordinator::engine::make_partitions;
-    use dso::partition::OmegaBlocks;
+    use dso::partition::PackedBlocks;
     // Heavily zipf-skewed features: even column cuts put all hot
     // features in one block.
     let ds = dso::data::synth::SparseSpec {
@@ -292,11 +292,11 @@ fn balanced_partition_reduces_epoch_imbalance_on_skewed_data() {
 
     cfg.cluster.partition = PartitionKind::Even;
     let (re, ce) = make_partitions(&cfg, &ds, 4);
-    let even = OmegaBlocks::build(&ds.x, &re, &ce).epoch_imbalance();
+    let even = PackedBlocks::build(&ds.x, &re, &ce).epoch_imbalance();
 
     cfg.cluster.partition = PartitionKind::Balanced;
     let (rb, cb) = make_partitions(&cfg, &ds, 4);
-    let om = OmegaBlocks::build(&ds.x, &rb, &cb);
+    let om = PackedBlocks::build(&ds.x, &rb, &cb);
     om.validate(&ds.x).unwrap();
     let balanced = om.epoch_imbalance();
     assert!(

@@ -1,0 +1,317 @@
+//! Property tests for the packed sweep kernel: on random sparse blocks
+//! × {Hinge, Logistic, Square} × {L1, L2} × {Fixed, AdaGrad}, the
+//! packed kernel's (w, α) trajectory must match the checked scalar
+//! reference path (`sweep_block`, whose math is `gradients()`) within
+//! tolerance, and the serializability building blocks
+//! (disjoint-updates commutation, threaded ≡ replay) must hold on the
+//! packed path.
+//!
+//! Tolerance rationale: the packed kernel differs from the reference
+//! only in (a) multiplying by precomputed reciprocals instead of
+//! dividing (≤1 ulp in f64 per op) and (b) folding x/m into an f32
+//! (≤2⁻²⁴ relative). A single update therefore agrees to ≪1e-5
+//! relative error; repeated sweeps stay well inside 1e-4.
+
+use dso::config::{LossKind, RegKind, StepKind, TrainConfig};
+use dso::coordinator::updates::{
+    sweep_block, sweep_packed, BlockState, PackedCtx, PackedState, StepRule, SweepCtx,
+};
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+use dso::losses::{Loss, Regularizer};
+use dso::partition::{PackedBlocks, Partition};
+use dso::util::prop;
+
+fn random_dataset(g: &mut prop::Gen) -> Dataset {
+    SparseSpec {
+        name: "packed-prop".into(),
+        m: g.usize_in(10, 120),
+        d: g.usize_in(8, 80),
+        nnz_per_row: g.f64_in(1.0, 8.0),
+        zipf_s: g.f64_in(0.0, 1.2),
+        label_noise: g.f64_in(0.0, 0.1),
+        pos_frac: g.f64_in(0.2, 0.8),
+        seed: g.case_seed,
+    }
+    .generate()
+}
+
+/// Run `sweeps` reference sweeps of block (q, r) and return the final
+/// stripe-local (w, α).
+#[allow(clippy::too_many_arguments)]
+fn reference_trajectory(
+    ds: &Dataset,
+    om: &PackedBlocks,
+    q: usize,
+    r: usize,
+    loss: Loss,
+    reg: Regularizer,
+    lambda: f64,
+    rule: StepRule,
+    sweeps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let entries = om.block_entries(&ds.x, q, r);
+    let ctx = SweepCtx {
+        loss,
+        reg,
+        lambda,
+        m: ds.m() as f64,
+        row_counts: &om.row_counts,
+        col_counts: &om.col_counts,
+        y: &ds.y,
+        w_bound: loss.w_bound(lambda),
+        rule,
+    };
+    let w_off = om.col_part.bounds[r];
+    let a_off = om.row_part.bounds[q];
+    let mut w = vec![0.01f32; om.col_part.block_len(r)];
+    let mut w_acc = vec![0f32; w.len()];
+    let mut alpha: Vec<f32> = om
+        .row_part
+        .block(q)
+        .map(|i| loss.alpha_init(ds.y[i] as f64) as f32)
+        .collect();
+    let mut a_acc = vec![0f32; alpha.len()];
+    for _ in 0..sweeps {
+        let mut st = BlockState {
+            w: &mut w,
+            w_acc: &mut w_acc,
+            w_off,
+            alpha: &mut alpha,
+            a_acc: &mut a_acc,
+            a_off,
+        };
+        sweep_block(&entries, &ctx, &mut st);
+    }
+    (w, alpha)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn packed_trajectory(
+    ds: &Dataset,
+    om: &PackedBlocks,
+    q: usize,
+    r: usize,
+    loss: Loss,
+    reg: Regularizer,
+    lambda: f64,
+    rule: StepRule,
+    sweeps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let y_local = om.stripe_labels(&ds.y);
+    let ctx = PackedCtx {
+        loss,
+        reg,
+        lambda,
+        w_bound: loss.w_bound(lambda),
+        rule,
+        inv_col: &om.inv_col[r],
+        inv_row: &om.inv_row[q],
+        y: &y_local[q],
+    };
+    let block = om.block(q, r);
+    let mut w = vec![0.01f32; om.col_part.block_len(r)];
+    let mut w_acc = vec![0f32; w.len()];
+    let mut alpha: Vec<f32> = om
+        .row_part
+        .block(q)
+        .map(|i| loss.alpha_init(ds.y[i] as f64) as f32)
+        .collect();
+    let mut a_acc = vec![0f32; alpha.len()];
+    for _ in 0..sweeps {
+        let mut st = PackedState {
+            w: &mut w,
+            w_acc: &mut w_acc,
+            alpha: &mut alpha,
+            a_acc: &mut a_acc,
+        };
+        sweep_packed(block, &ctx, &mut st);
+    }
+    (w, alpha)
+}
+
+#[test]
+fn prop_packed_matches_reference_across_losses_regs_rules() {
+    prop::check("packed kernel vs scalar oracle", 40, |g| {
+        let ds = random_dataset(g);
+        let p = g.usize_in(1, 4.min(ds.m()).min(ds.d()));
+        let rp = Partition::even(ds.m(), p);
+        let cp = Partition::even(ds.d(), p);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        om.validate(&ds.x).map_err(|e| e)?;
+
+        let loss = Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic, LossKind::Square]));
+        let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+        let eta = g.f64_in(0.05, 0.5);
+        let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+        let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+        let q = g.usize_in(0, p - 1);
+        let r = g.usize_in(0, p - 1);
+        let sweeps = g.usize_in(1, 3);
+
+        let (rw, ra) = reference_trajectory(&ds, &om, q, r, loss, reg, lambda, rule, sweeps);
+        let (pw, pa) = packed_trajectory(&ds, &om, q, r, loss, reg, lambda, rule, sweeps);
+        for k in 0..rw.len() {
+            prop::assert_close(rw[k] as f64, pw[k] as f64, 1e-4, &format!("w[{k}]"))?;
+        }
+        for k in 0..ra.len() {
+            prop::assert_close(ra[k] as f64, pa[k] as f64, 1e-4, &format!("alpha[{k}]"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_sweep_matches_reference_to_1e5() {
+    // The headline contract: one packed sweep of a real block agrees
+    // with the reference update to ≤1e-5 relative error, for every
+    // loss × reg × rule combination.
+    let ds = SparseSpec {
+        name: "contract".into(),
+        m: 200,
+        d: 80,
+        nnz_per_row: 6.0,
+        zipf_s: 0.8,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed: 42,
+    }
+    .generate();
+    let p = 2;
+    let rp = Partition::even(ds.m(), p);
+    let cp = Partition::even(ds.d(), p);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+        for reg in [Regularizer::L2, Regularizer::L1] {
+            for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+                for (q, r) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let (rw, ra) =
+                        reference_trajectory(&ds, &om, q, r, loss, reg, 1e-3, rule, 1);
+                    let (pw, pa) =
+                        packed_trajectory(&ds, &om, q, r, loss, reg, 1e-3, rule, 1);
+                    for k in 0..rw.len() {
+                        let rel = (rw[k] - pw[k]).abs() as f64
+                            / (rw[k].abs() as f64).max(1e-3);
+                        assert!(
+                            rel <= 1e-5,
+                            "{loss:?}/{reg:?}/{rule:?} block ({q},{r}) w[{k}]: {} vs {}",
+                            rw[k],
+                            pw[k]
+                        );
+                    }
+                    for k in 0..ra.len() {
+                        let rel = (ra[k] - pa[k]).abs() as f64
+                            / (ra[k].abs() as f64).max(1e-3);
+                        assert!(
+                            rel <= 1e-5,
+                            "{loss:?}/{reg:?}/{rule:?} block ({q},{r}) alpha[{k}]: {} vs {}",
+                            ra[k],
+                            pa[k]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_disjoint_blocks_commute() {
+    // Section 3's key observation on the packed path: sweeping blocks
+    // whose row and column stripes are disjoint commutes exactly —
+    // each sweep touches only its own stripe's state.
+    prop::check("packed disjoint blocks commute", 20, |g| {
+        let ds = random_dataset(g);
+        let p = g.usize_in(2, 3.min(ds.m()).min(ds.d()));
+        if p < 2 {
+            return Ok(());
+        }
+        let rp = Partition::even(ds.m(), p);
+        let cp = Partition::even(ds.d(), p);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        let y_local = om.stripe_labels(&ds.y);
+        let rule = StepRule::AdaGrad(0.3);
+        let lambda = 1e-3;
+        let loss = Loss::Hinge;
+
+        // Fresh state for both stripes (q=0 uses block (0,0); q=1 uses
+        // block (1,1) — row- and column-disjoint as in the diagonal
+        // schedule).
+        let run = |order: [usize; 2]| {
+            let mut w0 = vec![0.01f32; om.col_part.block_len(0)];
+            let mut w1 = vec![0.01f32; om.col_part.block_len(1)];
+            let mut wa0 = vec![0f32; w0.len()];
+            let mut wa1 = vec![0f32; w1.len()];
+            let mut al0 = vec![0f32; om.row_part.block_len(0)];
+            let mut al1 = vec![0f32; om.row_part.block_len(1)];
+            let mut aa0 = vec![0f32; al0.len()];
+            let mut aa1 = vec![0f32; al1.len()];
+            for &q in &order {
+                let ctx = PackedCtx {
+                    loss,
+                    reg: Regularizer::L2,
+                    lambda,
+                    w_bound: loss.w_bound(lambda),
+                    rule,
+                    inv_col: &om.inv_col[q],
+                    inv_row: &om.inv_row[q],
+                    y: &y_local[q],
+                };
+                let mut st = if q == 0 {
+                    PackedState {
+                        w: &mut w0,
+                        w_acc: &mut wa0,
+                        alpha: &mut al0,
+                        a_acc: &mut aa0,
+                    }
+                } else {
+                    PackedState {
+                        w: &mut w1,
+                        w_acc: &mut wa1,
+                        alpha: &mut al1,
+                        a_acc: &mut aa1,
+                    }
+                };
+                sweep_packed(om.block(q, q), &ctx, &mut st);
+            }
+            (w0, w1, al0, al1, wa0, wa1, aa0, aa1)
+        };
+        let a = run([0, 1]);
+        let b = run([1, 0]);
+        prop::assert_that(a == b, "disjoint block sweeps do not commute")
+    });
+}
+
+#[test]
+fn engine_bit_identity_survives_packed_path() {
+    // End-to-end restatement of the Lemma-2 contract on the new
+    // kernels: threaded engine ≡ serial replay, bit for bit.
+    let ds = SparseSpec {
+        name: "bit-id".into(),
+        m: 180,
+        d: 64,
+        nnz_per_row: 5.0,
+        zipf_s: 0.7,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed: 7,
+    }
+    .generate();
+    for (step, upb) in [(StepKind::AdaGrad, 0), (StepKind::InvSqrt, 0), (StepKind::AdaGrad, 6)]
+    {
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 3;
+        c.optim.eta0 = 0.3;
+        c.optim.step = step;
+        c.model.lambda = 1e-3;
+        c.cluster.machines = 4;
+        c.cluster.cores = 1;
+        c.cluster.updates_per_block = upb;
+        c.monitor.every = 0;
+        let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+        let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+        assert_eq!(threaded.w, replayed.w, "step {step:?} upb {upb}");
+        assert_eq!(threaded.alpha, replayed.alpha, "step {step:?} upb {upb}");
+        assert_eq!(threaded.total_updates, replayed.total_updates);
+    }
+}

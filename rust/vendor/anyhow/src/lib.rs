@@ -1,0 +1,122 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline crate set has no crates.io access, so this shim provides
+//! exactly the API surface the `dso` crate uses: [`Error`], [`Result`],
+//! [`Error::msg`], and the `anyhow!` / `bail!` / `ensure!` macros. The
+//! error is a flat message (no backtrace / cause chain); `?` works on
+//! any `std::error::Error + Send + Sync + 'static` source via the same
+//! blanket `From` impl real anyhow uses.
+
+use std::fmt;
+
+/// A flat, message-carrying error type.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, exactly
+/// like real anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes this blanket impl coherent (same trick as real
+// anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrips_display_and_debug() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io boom"))?;
+            Ok(())
+        }
+        assert!(io_fail().unwrap_err().to_string().contains("io boom"));
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 1 {
+                bail!("one is not allowed");
+            }
+            Err(anyhow!("fallthrough {}", x))
+        }
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(1).unwrap_err().to_string().contains("one"));
+        assert!(f(2).unwrap_err().to_string().contains("fallthrough 2"));
+    }
+}

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI gate: format, lint, tests, and a quick-mode bench smoke that also
+# records BENCH_updates.json (the cross-PR perf trajectory).
+#
+# Usage: scripts/ci.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH" >&2
+    exit 1
+fi
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy -D warnings =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== bench smoke (quick mode) =="
+    DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
+    if [[ -f BENCH_updates.json ]]; then
+        echo "recorded BENCH_updates.json"
+    fi
+fi
+
+echo "ci.sh: all green"
