@@ -3,7 +3,13 @@
 
 #[cfg(not(feature = "xla"))]
 fn main() {
+    // Keep the cross-PR BENCH_runtime.json trajectory well-defined even
+    // when the PJRT path is compiled out: record an empty result set
+    // (under DSO_BENCH_JSON=1) so scripts/plot_results.py sees the
+    // group was run-and-skipped rather than a silent gap.
+    let runner = dso::util::bench::Runner::from_env("runtime");
     println!("bench_runtime requires the `xla` feature (PJRT bindings); skipping");
+    runner.finish("runtime");
 }
 
 #[cfg(feature = "xla")]

@@ -1,18 +1,22 @@
 //! Microbench: the saddle-update hot loop (Eq. 8) — updates per second
-//! per worker, across losses and step rules, for BOTH kernels:
+//! per worker, across losses and step rules, for ALL THREE kernels:
 //!
 //! * `ref_*`    — the seed's COO `sweep_block` (global indices, live
 //!                divisions, per-update enum dispatch),
-//! * `packed_*` — the `PackedBlocks` + monomorphized `sweep_packed`
-//!                production path.
+//! * `packed_*` — the `PackedBlocks` + monomorphized scalar
+//!                `sweep_packed` path,
+//! * `lanes_*`  — the lane-major SIMD `sweep_lanes` production path
+//!                (8-wide f32 value lanes on the w side).
 //!
-//! The acceptance target for the packed path is ≥2× the reference's
-//! median updates/sec on the same 64k-entry block. Run with
-//! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (name, median
-//! s/iter, updates/sec) so the perf trajectory is tracked across PRs.
+//! Acceptance targets: packed ≥2× the reference, lanes ≥1.5× packed,
+//! both as median updates/sec on the same 64k-entry block. Run with
+//! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all three
+//! kernels) and `BENCH_lanes.json` (the scalar-vs-lane pair the CI
+//! smoke tracks) so the perf trajectory is recorded across PRs.
 
 use dso::coordinator::updates::{
-    sweep_block, sweep_packed, BlockState, PackedCtx, PackedState, StepRule, SweepCtx,
+    sweep_block, sweep_lanes, sweep_packed, BlockState, PackedCtx, PackedState, StepRule,
+    SweepCtx,
 };
 use dso::data::synth::SparseSpec;
 use dso::losses::{Loss, Regularizer};
@@ -21,8 +25,12 @@ use dso::util::bench::{human_time, Runner};
 
 fn main() {
     let mut runner = Runner::from_env("updates");
+    // Separate group for the scalar-vs-lane comparison: CI's quick
+    // smoke records it as BENCH_lanes.json.
+    let mut lane_runner = Runner::from_env("lanes");
 
-    // A realistic block: 64k entries over 4k rows x 2k cols.
+    // A realistic block: 64k entries over 4k rows x 2k cols (≈16 nnz
+    // per row group — two full lane chunks on average).
     let ds = SparseSpec {
         name: "bench".into(),
         m: 4000,
@@ -36,9 +44,9 @@ fn main() {
     .generate();
 
     // p = 1: the whole matrix is one Ω^(0,0) block. The packed
-    // constructor supplies the SoA layout, reciprocal tables, and the
-    // exact entries the reference path sweeps — no hand-rolled per-row
-    // collect() churn.
+    // constructor supplies the lane-major SoA layout, reciprocal
+    // tables, and the exact entries the reference path sweeps — no
+    // hand-rolled per-row collect() churn.
     let rp = Partition::even(ds.m(), 1);
     let cp = Partition::even(ds.d(), 1);
     let omega = PackedBlocks::build(&ds.x, &rp, &cp);
@@ -46,7 +54,11 @@ fn main() {
     let entries = omega.block_entries(&ds.x, 0, 0);
     let y_local = omega.stripe_labels(&ds.y);
     let n = block.nnz();
-    println!("block: {n} entries");
+    println!(
+        "block: {n} entries ({} padded slots, {} lane-eligible groups)",
+        block.padded_nnz(),
+        block.lane_groups
+    );
 
     let lambda = 1e-4;
     for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
@@ -55,6 +67,7 @@ fn main() {
         {
             let ref_name = format!("ref_sweep_{}_{rname}", loss.name());
             let packed_name = format!("packed_sweep_{}_{rname}", loss.name());
+            let lanes_name = format!("lanes_sweep_{}_{rname}", loss.name());
             // --- Seed COO kernel (reference) ---
             let ctx = SweepCtx {
                 loss,
@@ -83,7 +96,7 @@ fn main() {
                 sweep_block(&entries, &ctx, &mut st)
             });
 
-            // --- Packed kernel (production) ---
+            // --- Packed kernels (scalar + lanes) ---
             let pctx = PackedCtx {
                 loss,
                 reg: Regularizer::L2,
@@ -91,6 +104,7 @@ fn main() {
                 w_bound: loss.w_bound(lambda),
                 rule,
                 inv_col: &omega.inv_col[0],
+                inv_col32: &omega.inv_col32[0],
                 inv_row: &omega.inv_row[0],
                 y: &y_local[0],
             };
@@ -108,8 +122,30 @@ fn main() {
                 sweep_packed(block, &pctx, &mut st)
             });
 
+            let mut lw = vec![0.01f32; ds.d()];
+            let mut lw_acc = vec![0f32; ds.d()];
+            let mut lalpha = vec![0f32; ds.m()];
+            let mut la_acc = vec![0f32; ds.m()];
+            runner.bench_units(&lanes_name, n as u64, || {
+                let mut st = PackedState {
+                    w: &mut lw,
+                    w_acc: &mut lw_acc,
+                    alpha: &mut lalpha,
+                    a_acc: &mut la_acc,
+                };
+                sweep_lanes(block, &pctx, &mut st)
+            });
+
+            // Mirror the scalar/lane pair into the lanes group so
+            // BENCH_lanes.json carries the comparison on its own.
+            for name in [&packed_name, &lanes_name] {
+                if let Some(r) = runner.results.iter().find(|r| &r.name == name) {
+                    lane_runner.results.push(r.clone());
+                }
+            }
+
             // Look results up by name — a CLI bench filter may have
-            // skipped either side, and results.last() would mispair.
+            // skipped any side, and results.last() would mispair.
             let median =
                 |name: &str| runner.results.iter().find(|r| r.name == name).map(|r| r.median());
             if let (Some(rm), Some(pm)) = (median(&ref_name), median(&packed_name)) {
@@ -122,7 +158,16 @@ fn main() {
                     rm / pm
                 );
             }
+            if let (Some(pm), Some(lm)) = (median(&packed_name), median(&lanes_name)) {
+                println!(
+                    "    -> lanes {:.1} M upd/s ({}/upd)  speedup vs packed {:.2}x (target ≥1.5x)",
+                    n as f64 / lm / 1e6,
+                    human_time(lm / n as f64),
+                    pm / lm
+                );
+            }
         }
     }
     runner.finish("updates");
+    lane_runner.finish("lanes");
 }

@@ -247,6 +247,22 @@ mod tests {
         assert!(run(&["train", "--lamda", "0.1"]).is_err());
     }
 
+    /// `--mode tile` on a build without the `xla` feature must surface
+    /// the stub's actionable error through the full CLI → coordinator →
+    /// runtime routing, not a panic or a silent fallback to scalar.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn train_tile_mode_reports_gated_stub_error() {
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1", "--mode",
+            "tile",
+        ])
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("tile mode requires the PJRT runtime"), "msg: {msg}");
+        assert!(msg.contains("--features xla"), "msg: {msg}");
+    }
+
     #[test]
     fn gen_data_roundtrip() {
         let out = std::env::temp_dir().join("dso-cli-gen.libsvm");

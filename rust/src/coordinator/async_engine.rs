@@ -24,7 +24,7 @@
 //! in-flight blocks.
 
 use super::monitor::{Monitor, TrainResult};
-use super::updates::{sweep_packed, PackedCtx, PackedState, StepRule};
+use super::updates::{sweep_lanes, sweep_packed, PackedCtx, PackedState, StepRule};
 use crate::config::{StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
@@ -162,6 +162,7 @@ pub fn train_dso_async(
                         w_bound,
                         rule,
                         inv_col: &omega.inv_col[token.block_id],
+                        inv_col32: &omega.inv_col32[token.block_id],
                         inv_row: &omega.inv_row[q],
                         y: &y_local[q],
                     };
@@ -171,7 +172,14 @@ pub fn train_dso_async(
                         alpha: &mut alpha,
                         a_acc: &mut a_acc,
                     };
-                    let n = sweep_packed(block, &ctx, &mut st);
+                    // Same size-based dispatch as the bulk-synchronous
+                    // engine: lane kernel iff the block has
+                    // lane-eligible row groups.
+                    let n = if block.has_lanes() {
+                        sweep_lanes(block, &ctx, &mut st)
+                    } else {
+                        sweep_packed(block, &ctx, &mut st)
+                    };
                     updates_total.fetch_add(n as u64, Ordering::Relaxed);
                     token.hops += 1;
                     let visits = shared.visits.fetch_add(1, Ordering::AcqRel) + 1;

@@ -15,12 +15,14 @@
 //! Lemma 2, enforced by test.
 
 use super::monitor::{Monitor, TrainResult};
-use super::updates::{sweep_packed, sweep_packed_sampled, PackedCtx, PackedState, StepRule};
+use super::updates::{
+    sweep_lanes, sweep_packed, sweep_packed_sampled, PackedCtx, PackedState, StepRule,
+};
 use crate::config::{ExecMode, StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::{CostModel, Router, VirtualClock};
-use crate::partition::{PackedBlocks, Partition, RingSchedule};
+use crate::partition::{PackedBlocks, Partition, RingSchedule, LANES};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -68,7 +70,12 @@ impl DsoSetup {
         let reg = Regularizer::from(cfg.model.reg);
         let problem = Problem::new(loss, reg, cfg.model.lambda);
         let (row_part, col_part) = make_partitions(cfg, train, p);
-        let omega = PackedBlocks::build(&train.x, &row_part, &col_part);
+        let mut omega = PackedBlocks::build(&train.x, &row_part, &col_part);
+        if cfg.cluster.updates_per_block > 0 {
+            // Only the subsampled sweep reads the per-entry side
+            // tables; don't pay +4 bytes/nnz on full-sweep runs.
+            omega = omega.with_sampling_tables();
+        }
         let y_local = omega.stripe_labels(&train.y);
         let cost = CostModel::new(
             cfg.cluster.latency_us,
@@ -105,7 +112,13 @@ pub fn make_partitions(
                 (0..train.m()).map(|i| train.x.row_nnz(i) as u64).collect();
             let col_w: Vec<u64> =
                 train.x.col_counts().iter().map(|&c| c as u64).collect();
-            (Partition::balanced(&row_w, p), Partition::balanced(&col_w, p))
+            // Column (w) stripes are padded to a lane multiple so the
+            // lane-major packed blocks end on chunk boundaries; the
+            // cost is at most LANES/2 columns of imbalance per cut.
+            (
+                Partition::balanced(&row_w, p),
+                Partition::balanced(&col_w, p).lane_aligned(LANES),
+            )
         }
     }
 }
@@ -334,6 +347,7 @@ fn visit_block(
         w_bound: setup.w_bound,
         rule,
         inv_col: &setup.omega.inv_col[slot.block_id],
+        inv_col32: &setup.omega.inv_col32[slot.block_id],
         inv_row: &setup.omega.inv_row[q],
         y: &setup.y_local[q],
     };
@@ -343,8 +357,13 @@ fn visit_block(
         alpha: &mut slot.alpha,
         a_acc: &mut slot.a_acc,
     };
+    // Size-based dispatch: the SIMD lane kernel when the block has
+    // lane-eligible row groups, the scalar kernel for short-group
+    // blocks and the subsampled path.
     if sampled {
         sweep_packed_sampled(block, &slot.scratch, &ctx, &mut st)
+    } else if block.has_lanes() {
+        sweep_lanes(block, &ctx, &mut st)
     } else {
         sweep_packed(block, &ctx, &mut st)
     }

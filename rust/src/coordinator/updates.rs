@@ -1,7 +1,7 @@
-//! The scalar saddle-point update kernel — Eq. (8) plus AdaGrad and the
+//! The saddle-point update kernels — Eq. (8) plus AdaGrad and the
 //! App. B projections. This is DSO's hot path for sparse data: every
-//! worker calls [`sweep_packed`] once per inner iteration on its active
-//! block Ω^(q, σ_r(q)).
+//! worker calls one of the packed sweeps once per inner iteration on
+//! its active block Ω^(q, σ_r(q)).
 //!
 //! Update for a sampled nonzero (i, j) with x = x_ij:
 //!
@@ -17,39 +17,66 @@
 //! either the epoch-level η_t = η₀/√t of Algorithm 1 or per-coordinate
 //! AdaGrad (App. B); Π_B is the w box, Π_A the dual feasible set.
 //!
-//! ## Two implementations
+//! ## Three implementations
 //!
-//! * [`sweep_packed`] — the production kernel over
-//!   [`PackedBlock`](crate::partition::omega::PackedBlock) (§Perf). The
-//!   `(Loss, Regularizer, StepRule)` triple is dispatched **once per
-//!   sweep** into one of 12 monomorphized loops (`losses::kernel`), and
-//!   the packed layout supplies block-local indices, `x/m` pre-folded
-//!   into the stored value, and reciprocal tables for both Eq. (8)
+//! * [`sweep_lanes`] — the SIMD production kernel over lane-major
+//!   [`PackedBlock`](crate::partition::omega::PackedBlock)s (§Perf).
+//!   Within a row group every entry touches a *distinct* w column, so
+//!   the w side of the update is conflict-free and batches into
+//!   [`LANES`] (= 8) f32 value lanes: per chunk the kernel gathers 8
+//!   (w_j, x, 1/|Ω̄_j|) triples, evaluates ∇φ ([`RegK::grad_lane`]),
+//!   the gradient FMA, the step rule (`StepK::eta_lane` — AdaGrad's
+//!   accumulate/√/divide becomes one 8-wide op each) and the box clamp
+//!   full-width branch-free (sentinel-padded lanes compute garbage that
+//!   is *never stored*), then scatters the first `len` lanes back. The
+//!   α side is inherently sequential — all 8 entries update the same
+//!   α_i — so the α recurrence stays scalar f64, consuming the lanes'
+//!   w·x dot products; it is arithmetically identical to the scalar
+//!   kernel's. Groups shorter than `LANES` fall back to the scalar
+//!   group loop (same code path as [`sweep_packed`]).
+//!
+//!   **Numerics**: the w side computes in f32 (that is what buys the
+//!   8-wide vectors), so `sweep_lanes` is *tolerance-equivalent* to the
+//!   scalar kernel — ≤1e-5 relative after a sweep, property-tested in
+//!   `tests/lane_kernel.rs` — not bit-identical. Threaded ≡ replay
+//!   bit-identity is unaffected (both executions dispatch to the same
+//!   kernel); tests that pin exact trajectories stay on the scalar
+//!   path.
+//!
+//! * [`sweep_packed`] — the scalar packed kernel. The `(Loss,
+//!   Regularizer, StepRule)` triple is dispatched **once per sweep**
+//!   into one of 12 monomorphized loops (`losses::kernel`), and the
+//!   packed layout supplies block-local indices, `x/m` pre-folded into
+//!   the stored value, and reciprocal tables for both Eq. (8)
 //!   denominators — the inner loop performs zero divisions, zero offset
 //!   subtractions, and zero enum dispatch. Row-invariant state (y_i,
 //!   α_i and its AdaGrad accumulator, 1/(m|Ω_i|)) is loaded once per
 //!   row group instead of once per nonzero; α stays in a register
 //!   across the group (rounded through f32 after each update, exactly
-//!   as the store/reload of the reference path rounds it).
-//!   `sweep_packed_sampled` is the `updates_per_block` variant that
-//!   processes an explicit list of flat entry indices.
+//!   as the store/reload of the reference path rounds it). The engines
+//!   use it for blocks with no lane-eligible group
+//!   (`PackedBlock::has_lanes`), and [`sweep_packed_sampled`] — the
+//!   `updates_per_block` variant, which resolves each sampled entry's
+//!   row through the cold `entry_group` side table (one load, no
+//!   binary search) — for the subsampled path.
+//!
 //! * [`sweep_block`] — the seed's COO `Entry` kernel with per-update
 //!   enum dispatch, global indices and live divisions. Kept as the
-//!   *reference path*: property tests replay both on the same block
-//!   and require agreement within 1e-5 relative error (the only
-//!   permitted differences are reciprocal-multiply vs divide rounding
-//!   and the f32 fold of x/m). `benches/bench_updates.rs` benchmarks
-//!   the two side by side; `BENCH_updates.json` records the speedup.
+//!   *reference path*: property tests replay the packed kernels against
+//!   it on the same block and require agreement within 1e-5 relative
+//!   error. `benches/bench_updates.rs` benchmarks all three side by
+//!   side; `BENCH_updates.json` / `BENCH_lanes.json` record the
+//!   speedups.
 //!
-//! The packed sweep visits entries in the same (row, col) order as the
-//! reference path, so Lemma-2 serializability — and the bit-identity
-//! between the threaded engine and `run_replay`, which both call the
-//! packed kernel — is unaffected.
+//! The packed sweeps visit real entries in the same (row, col) order as
+//! the reference path, so Lemma-2 serializability — and the bit-identity
+//! between the threaded engine and `run_replay`, which dispatch to the
+//! same kernel — is unaffected.
 
-use crate::losses::kernel::{HingeK, L1K, L2K, LogisticK, LossK, RegK, SquareK};
+use crate::losses::kernel::{HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK};
 use crate::losses::{Loss, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
-use crate::partition::omega::{Entry, PackedBlock};
+use crate::partition::omega::{Entry, PackedBlock, LANES};
 
 /// Which step rule the sweep applies.
 #[derive(Clone, Copy, Debug)]
@@ -93,24 +120,27 @@ pub struct BlockState<'a> {
     pub a_off: usize,
 }
 
-/// Immutable per-sweep context for the packed kernel. All tables are
-/// stripe-local: `inv_col` belongs to the active column stripe (the
-/// travelling w block), `inv_row`/`y` to the worker's row stripe.
+/// Immutable per-sweep context for the packed kernels. All tables are
+/// stripe-local: `inv_col`/`inv_col32` belong to the active column
+/// stripe (the travelling w block), `inv_row`/`y` to the worker's row
+/// stripe.
 pub struct PackedCtx<'a> {
     pub loss: Loss,
     pub reg: Regularizer,
     pub lambda: f64,
     pub w_bound: f64,
     pub rule: StepRule,
-    /// 1/|Ω̄_j| per block-local column.
+    /// 1/|Ω̄_j| per block-local column (scalar kernel, f64).
     pub inv_col: &'a [f64],
+    /// 1/|Ω̄_j| per block-local column (lane kernel, f32).
+    pub inv_col32: &'a [f32],
     /// 1/(m·|Ω_i|) per block-local row.
     pub inv_row: &'a [f64],
     /// Labels per block-local row.
     pub y: &'a [f64],
 }
 
-/// Mutable stripe-local parameter views for the packed kernel. No
+/// Mutable stripe-local parameter views for the packed kernels. No
 /// offsets: packed blocks index these directly.
 pub struct PackedState<'a> {
     pub w: &'a mut [f32],
@@ -120,22 +150,37 @@ pub struct PackedState<'a> {
 }
 
 // ---------------------------------------------------------------------
-// Packed kernel (production path)
+// Step rules (compile-time dispatched)
 // ---------------------------------------------------------------------
 
 /// Step rule resolved at compile time. `eta` may update the AdaGrad
-/// accumulator in place; the fixed rule ignores it.
+/// accumulator in place; the fixed rule ignores it. `eta_lane` is the
+/// 8-wide f32 batch used by the lane kernel's w side.
 trait StepK: Copy {
+    /// Whether the rule reads/writes per-coordinate accumulators —
+    /// lets the lane kernel skip the accumulator gather/scatter
+    /// entirely for the fixed rule (const-folded per monomorphization).
+    const USES_ACC: bool;
+
     fn eta(self, acc: &mut f32, g: f64) -> f64;
+
+    fn eta_lane(self, acc: &mut Lane, g: &Lane) -> Lane;
 }
 
 #[derive(Clone, Copy)]
 struct FixedStep(f64);
 
 impl StepK for FixedStep {
+    const USES_ACC: bool = false;
+
     #[inline(always)]
     fn eta(self, _acc: &mut f32, _g: f64) -> f64 {
         self.0
+    }
+
+    #[inline(always)]
+    fn eta_lane(self, _acc: &mut Lane, _g: &Lane) -> Lane {
+        [self.0 as f32; LANES]
     }
 }
 
@@ -143,6 +188,8 @@ impl StepK for FixedStep {
 struct AdaGradStep(f64);
 
 impl StepK for AdaGradStep {
+    const USES_ACC: bool = true;
+
     #[inline(always)]
     fn eta(self, acc: &mut f32, g: f64) -> f64 {
         // Accumulate in f64, store back f32 — same rounding as the
@@ -151,10 +198,77 @@ impl StepK for AdaGradStep {
         *acc = a as f32;
         self.0 / (ADAGRAD_EPS + a).sqrt()
     }
+
+    /// f32 lane batch: accumulate, √, divide — one 8-wide op each
+    /// (this is where the lane kernel wins most; the scalar path pays
+    /// a serial f64 sqrt + div per coordinate).
+    #[inline(always)]
+    fn eta_lane(self, acc: &mut Lane, g: &Lane) -> Lane {
+        let e0 = self.0 as f32;
+        let eps = ADAGRAD_EPS as f32;
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            let a = acc[k] + g[k] * g[k];
+            acc[k] = a;
+            out[k] = e0 / (eps + a).sqrt();
+        }
+        out
+    }
 }
 
-/// Sweep every entry of a packed block once, in storage order.
-/// Returns #updates.
+// ---------------------------------------------------------------------
+// Shared validation
+// ---------------------------------------------------------------------
+
+/// Validate, once per sweep, everything the unchecked inner loops rely
+/// on: the stripe-local views cover the block's index spaces, the row
+/// groups tile the logical entry numbering with in-bounds rows, the
+/// physical lane regions tile the (possibly sentinel-padded) storage,
+/// and every stored column — sentinels included, since the lane kernel
+/// gathers full-width — is within the stripe. `PackedBlocks::build`
+/// establishes these invariants, but `PackedBlock`'s fields are public
+/// — re-checking here keeps the sweeps sound for any safely
+/// constructed block. Cost is O(groups) + one vectorizable u32 max
+/// scan over `cols`, amortized over the ~20+ cycles each update costs.
+#[inline]
+fn check_packed_bounds(block: &PackedBlock, ctx: &PackedCtx, st: &PackedState) {
+    assert!(block.n_cols as usize <= st.w.len());
+    assert!(block.n_rows as usize <= st.alpha.len());
+    assert!(st.w_acc.len() == st.w.len());
+    assert!(st.a_acc.len() == st.alpha.len());
+    assert!(block.n_cols as usize <= ctx.inv_col.len());
+    assert!(block.n_cols as usize <= ctx.inv_col32.len());
+    assert!(block.n_rows as usize <= ctx.inv_row.len());
+    assert!(block.n_rows as usize <= ctx.y.len());
+    assert!(block.vals.len() == block.cols.len());
+    let mut next = 0u32;
+    let mut pnext = 0usize;
+    for g in &block.groups {
+        assert!(g.start == next && g.end >= g.start, "groups must tile 0..nnz");
+        assert!(g.li < block.n_rows, "row group out of stripe");
+        assert!(g.pad_start as usize == pnext, "lane regions must tile storage");
+        next = g.end;
+        pnext += g.padded_len();
+    }
+    // (`block.nnz()` is groups.last().end, so `next` equals it by
+    // construction — the independent coverage checks are the physical
+    // tiling below and, when built, the sampling side table.)
+    assert!(pnext == block.cols.len(), "lane regions must cover storage");
+    assert!(
+        block.entry_group.is_empty() || block.entry_group.len() == next as usize,
+        "entry_group side table must cover all logical entries"
+    );
+    if let Some(&max_col) = block.cols.iter().max() {
+        assert!(max_col < block.n_cols, "column out of stripe");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar packed kernel
+// ---------------------------------------------------------------------
+
+/// Sweep every real entry of a packed block once, in storage order,
+/// with the scalar f64 kernel. Returns #updates.
 pub fn sweep_packed(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
     match ctx.rule {
         StepRule::Fixed(eta) => dispatch_loss_reg(block, ctx, st, FixedStep(eta)),
@@ -162,7 +276,7 @@ pub fn sweep_packed(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) 
     }
 }
 
-/// Resolve (loss, reg) once per sweep into a monomorphized loop.
+/// Resolve (loss, reg) once per sweep into a monomorphized scalar loop.
 fn dispatch_loss_reg<S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
@@ -183,33 +297,49 @@ fn dispatch_loss_reg<S: StepK>(
     }
 }
 
-/// Validate, once per sweep, everything the unchecked inner loop
-/// relies on: the stripe-local views cover the block's index spaces,
-/// the row groups tile `0..nnz` with in-bounds rows, and every
-/// block-local column is within the stripe. `PackedBlocks::build`
-/// establishes these invariants, but `PackedBlock`'s fields are public
-/// — re-checking here keeps `sweep_packed` sound for any safely
-/// constructed block. Cost is O(groups) + one vectorizable u32 max
-/// scan over `cols`, amortized over the ~20+ cycles each update costs.
-#[inline]
-fn check_packed_bounds(block: &PackedBlock, ctx: &PackedCtx, st: &PackedState) {
-    assert!(block.n_cols as usize <= st.w.len());
-    assert!(block.n_rows as usize <= st.alpha.len());
-    assert!(st.w_acc.len() == st.w.len());
-    assert!(st.a_acc.len() == st.alpha.len());
-    assert!(block.n_cols as usize <= ctx.inv_col.len());
-    assert!(block.n_rows as usize <= ctx.inv_row.len());
-    assert!(block.n_rows as usize <= ctx.y.len());
-    assert!(block.vals.len() == block.cols.len());
-    let mut next = 0u32;
-    for g in &block.groups {
-        assert!(g.start == next && g.end >= g.start, "groups must tile 0..nnz");
-        assert!(g.li < block.n_rows, "row group out of stripe");
-        next = g.end;
-    }
-    assert!(next as usize == block.cols.len(), "groups must cover all entries");
-    if let Some(&max_col) = block.cols.iter().max() {
-        assert!(max_col < block.n_cols, "column out of stripe");
+/// One row group's entries swept with the scalar f64 update — the PR-1
+/// kernel body, shared verbatim by [`sweep_packed`] (every group) and
+/// [`sweep_lanes`] (groups shorter than `LANES`). `span` is a physical
+/// range of real entries; `ai`/`aa` are the row's running α and AdaGrad
+/// accumulator, stored back by the caller.
+///
+/// # Safety argument
+/// Caller runs `check_packed_bounds` first; `span` lies inside a
+/// group's real prefix, so every `cols[k]` is a validated in-stripe
+/// column.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sweep_group_scalar<L: LossK, R: RegK, S: StepK>(
+    cols: &[u32],
+    vals: &[f32],
+    span: std::ops::Range<usize>,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+    y: f64,
+    hr: f64,
+    ai: &mut f64,
+    aa: &mut f32,
+) {
+    let b = ctx.w_bound;
+    let lambda = ctx.lambda;
+    for k in span {
+        debug_assert!(k < cols.len());
+        unsafe {
+            let lj = *cols.get_unchecked(k) as usize;
+            let xm = *vals.get_unchecked(k) as f64; // x/m, pre-folded
+            debug_assert!(lj < st.w.len());
+            let wj = *st.w.get_unchecked(lj) as f64;
+            let gw = lambda * R::grad(wj) * *ctx.inv_col.get_unchecked(lj) - *ai * xm;
+            let ga = L::dual_grad(*ai, y) * hr - wj * xm;
+            let eta_w = step.eta(st.w_acc.get_unchecked_mut(lj), gw);
+            let eta_a = step.eta(aa, ga);
+            *st.w.get_unchecked_mut(lj) = (wj - eta_w * gw).clamp(-b, b) as f32;
+            // Round α through f32 like the reference path's
+            // store/reload, so both paths see the same value when
+            // a row has several entries.
+            *ai = L::project(*ai + eta_a * ga, y) as f32 as f64;
+        }
     }
 }
 
@@ -220,8 +350,6 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
     step: S,
 ) -> usize {
     check_packed_bounds(block, ctx, st);
-    let b = ctx.w_bound;
-    let lambda = ctx.lambda;
     let cols = &block.cols[..];
     let vals = &block.vals[..];
     for g in &block.groups {
@@ -236,22 +364,176 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
                 *st.a_acc.get_unchecked(li),
             )
         };
-        for k in g.start as usize..g.end as usize {
-            debug_assert!(k < cols.len());
-            unsafe {
-                let lj = *cols.get_unchecked(k) as usize;
-                let xm = *vals.get_unchecked(k) as f64; // x/m, pre-folded
-                debug_assert!(lj < st.w.len());
-                let wj = *st.w.get_unchecked(lj) as f64;
-                let gw = lambda * R::grad(wj) * *ctx.inv_col.get_unchecked(lj) - ai * xm;
-                let ga = L::dual_grad(ai, y) * hr - wj * xm;
-                let eta_w = step.eta(st.w_acc.get_unchecked_mut(lj), gw);
-                let eta_a = step.eta(&mut aa, ga);
-                *st.w.get_unchecked_mut(lj) = (wj - eta_w * gw).clamp(-b, b) as f32;
-                // Round α through f32 like the reference path's
-                // store/reload, so both paths see the same value when
-                // a row has several entries.
-                ai = L::project(ai + eta_a * ga, y) as f32 as f64;
+        let s = g.pad_start as usize;
+        sweep_group_scalar::<L, R, S>(
+            cols,
+            vals,
+            s..s + g.len(),
+            ctx,
+            st,
+            step,
+            y,
+            hr,
+            &mut ai,
+            &mut aa,
+        );
+        unsafe {
+            *st.alpha.get_unchecked_mut(li) = ai as f32;
+            *st.a_acc.get_unchecked_mut(li) = aa;
+        }
+    }
+    block.nnz()
+}
+
+// ---------------------------------------------------------------------
+// SIMD lane kernel
+// ---------------------------------------------------------------------
+
+/// Sweep every real entry of a lane-major packed block once, in storage
+/// order, batching the w side of the update [`LANES`] entries at a time
+/// (f32). Groups shorter than `LANES` run the scalar group loop.
+/// Returns #updates (sentinel padding excluded).
+pub fn sweep_lanes(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
+    match ctx.rule {
+        StepRule::Fixed(eta) => dispatch_lanes(block, ctx, st, FixedStep(eta)),
+        StepRule::AdaGrad(eta0) => dispatch_lanes(block, ctx, st, AdaGradStep(eta0)),
+    }
+}
+
+/// Resolve (loss, reg) once per sweep into a monomorphized lane loop.
+fn dispatch_lanes<S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    match (ctx.loss, ctx.reg) {
+        (Loss::Hinge, Regularizer::L2) => sweep_lanes_mono::<HingeK, L2K, S>(block, ctx, st, step),
+        (Loss::Hinge, Regularizer::L1) => sweep_lanes_mono::<HingeK, L1K, S>(block, ctx, st, step),
+        (Loss::Logistic, Regularizer::L2) => {
+            sweep_lanes_mono::<LogisticK, L2K, S>(block, ctx, st, step)
+        }
+        (Loss::Logistic, Regularizer::L1) => {
+            sweep_lanes_mono::<LogisticK, L1K, S>(block, ctx, st, step)
+        }
+        (Loss::Square, Regularizer::L2) => {
+            sweep_lanes_mono::<SquareK, L2K, S>(block, ctx, st, step)
+        }
+        (Loss::Square, Regularizer::L1) => {
+            sweep_lanes_mono::<SquareK, L1K, S>(block, ctx, st, step)
+        }
+    }
+}
+
+fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    check_packed_bounds(block, ctx, st);
+    let b32 = ctx.w_bound as f32;
+    let lam32 = ctx.lambda as f32;
+    let cols = &block.cols[..];
+    let vals = &block.vals[..];
+    for g in &block.groups {
+        let li = g.li as usize;
+        debug_assert!(li < st.alpha.len());
+        let (y, hr, mut ai, mut aa) = unsafe {
+            (
+                *ctx.y.get_unchecked(li),
+                *ctx.inv_row.get_unchecked(li),
+                *st.alpha.get_unchecked(li) as f64,
+                *st.a_acc.get_unchecked(li),
+            )
+        };
+        let len = g.len();
+        if len < LANES {
+            // Short group: the scalar kernel body (identical numerics
+            // to `sweep_packed`); full-width lanes would waste ≥ half
+            // their slots here.
+            let s = g.pad_start as usize;
+            sweep_group_scalar::<L, R, S>(
+                cols,
+                vals,
+                s..s + len,
+                ctx,
+                st,
+                step,
+                y,
+                hr,
+                &mut ai,
+                &mut aa,
+            );
+        } else {
+            let mut base = g.pad_start as usize;
+            let mut rem = len;
+            while rem > 0 {
+                let n = rem.min(LANES);
+                // Full-width loads. Sentinel lanes (k ≥ n, only in the
+                // last chunk) gather col 0 / value 0; everything they
+                // feed is computed speculatively and never stored.
+                let mut lj = [0usize; LANES];
+                let mut wv: Lane = [0.0; LANES];
+                let mut xv: Lane = [0.0; LANES];
+                let mut iv: Lane = [0.0; LANES];
+                for k in 0..LANES {
+                    unsafe {
+                        let c = *cols.get_unchecked(base + k) as usize;
+                        debug_assert!(c < st.w.len());
+                        lj[k] = c;
+                        wv[k] = *st.w.get_unchecked(c);
+                        xv[k] = *vals.get_unchecked(base + k);
+                        iv[k] = *ctx.inv_col32.get_unchecked(c);
+                    }
+                }
+                // α recurrence — scalar f64 over the real lanes only
+                // (all entries of the chunk update the same α_i, so
+                // this is inherently serial; the math matches
+                // `sweep_group_scalar` exactly, consuming the gathered
+                // w·x products). `av[k]` records α *before* entry k —
+                // the value the w gradient of lane k must see.
+                let mut av: Lane = [0.0; LANES];
+                for k in 0..n {
+                    av[k] = ai as f32;
+                    let ga = L::dual_grad(ai, y) * hr - wv[k] as f64 * (xv[k] as f64);
+                    let eta_a = step.eta(&mut aa, ga);
+                    ai = L::project(ai + eta_a * ga, y) as f32 as f64;
+                }
+                let tail = ai as f32;
+                for lane in av.iter_mut().skip(n) {
+                    *lane = tail;
+                }
+                // w side — branch-free full-width f32: ∇φ, gradient
+                // FMA, step rule, box clamp.
+                let rv = R::grad_lane(&wv);
+                let mut gw: Lane = [0.0; LANES];
+                for k in 0..LANES {
+                    gw[k] = lam32 * rv[k] * iv[k] - av[k] * xv[k];
+                }
+                let mut accv: Lane = [0.0; LANES];
+                if S::USES_ACC {
+                    for k in 0..LANES {
+                        accv[k] = unsafe { *st.w_acc.get_unchecked(lj[k]) };
+                    }
+                }
+                let etav = step.eta_lane(&mut accv, &gw);
+                let mut wn: Lane = [0.0; LANES];
+                for k in 0..LANES {
+                    wn[k] = (wv[k] - etav[k] * gw[k]).clamp(-b32, b32);
+                }
+                // Scatter the real lanes only: sentinels are never
+                // written through, so padding cannot perturb state.
+                for k in 0..n {
+                    unsafe {
+                        *st.w.get_unchecked_mut(lj[k]) = wn[k];
+                        if S::USES_ACC {
+                            *st.w_acc.get_unchecked_mut(lj[k]) = accv[k];
+                        }
+                    }
+                }
+                base += LANES;
+                rem -= n;
             }
         }
         unsafe {
@@ -259,13 +541,21 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
             *st.a_acc.get_unchecked_mut(li) = aa;
         }
     }
-    block.vals.len()
+    block.nnz()
 }
 
+// ---------------------------------------------------------------------
+// Subsampled sweep
+// ---------------------------------------------------------------------
+
 /// Subsampled sweep (`cluster.updates_per_block`): process the given
-/// flat entry indices, in order, one update each. Cold path — plain
-/// enum dispatch and checked indexing; numerics are identical to
-/// [`sweep_packed`] on the same entries.
+/// *logical* flat entry indices, in order, one update each. Cold path —
+/// plain enum dispatch and checked indexing; numerics are identical to
+/// [`sweep_packed`] on the same entries. Each sampled entry's row group
+/// comes from the `entry_group` side table when the engine built it
+/// (`PackedBlocks::with_sampling_tables` — one cold load instead of the
+/// old per-sample binary search), falling back to the binary search on
+/// lean blocks.
 pub fn sweep_packed_sampled(
     block: &PackedBlock,
     idxs: &[u32],
@@ -277,10 +567,11 @@ pub fn sweep_packed_sampled(
     // sweep's validation would defeat the point of subsampling).
     let b = ctx.w_bound;
     for &k in idxs {
-        let g = block.groups[block.group_of(k)];
+        let g = block.groups[block.group_of_cached(k)];
+        let kp = (g.pad_start + (k - g.start)) as usize;
         let li = g.li as usize;
-        let lj = block.cols[k as usize] as usize;
-        let xm = block.vals[k as usize] as f64;
+        let lj = block.cols[kp] as usize;
+        let xm = block.vals[kp] as f64;
         let y = ctx.y[li];
         let hr = ctx.inv_row[li];
         let wj = st.w[lj] as f64;
@@ -328,7 +619,7 @@ pub fn gradients(ctx: &SweepCtx, e: &Entry, wj: f64, ai: f64) -> (f64, f64) {
 
 // The two loops below are kept verbatim from the seed (unchecked
 // indexing, inline gradient expressions) so `bench_updates` compares
-// the packed kernel against the genuine old hot path, not a slowed
+// the packed kernels against the genuine old hot path, not a slowed
 // rewrite. `gradients()` above is the readable form of the same math.
 
 fn sweep_fixed(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta: f64) -> usize {
@@ -419,14 +710,17 @@ mod tests {
         }
     }
 
-    /// Hand-pack a single-block PackedBlock plus ctx tables from the
-    /// reference inputs (m = y.len()); entries must be (i, j)-sorted.
-    fn pack(
-        entries: &[Entry],
-        row_counts: &[u32],
-        col_counts: &[u32],
-        y: &[f32],
-    ) -> (PackedBlock, Vec<f64>, Vec<f64>, Vec<f64>) {
+    /// Everything `PackedCtx` borrows, hand-packed from the reference
+    /// inputs (m = y.len()); entries must be (i, j)-sorted.
+    struct Packed {
+        b: PackedBlock,
+        inv_col: Vec<f64>,
+        inv_col32: Vec<f32>,
+        inv_row: Vec<f64>,
+        y: Vec<f64>,
+    }
+
+    fn pack(entries: &[Entry], row_counts: &[u32], col_counts: &[u32], y: &[f32]) -> Packed {
         let m = y.len() as f64;
         let mut b = PackedBlock {
             n_rows: row_counts.len() as u32,
@@ -438,27 +732,31 @@ mod tests {
             if matches!(b.groups.last(), Some(g) if g.li == e.i) {
                 b.groups.last_mut().unwrap().end = pos + 1;
             } else {
-                b.groups.push(RowGroup { li: e.i, start: pos, end: pos + 1 });
+                b.groups.push(RowGroup { li: e.i, start: pos, end: pos + 1, pad_start: 0 });
             }
             b.cols.push(e.j);
             b.vals.push((e.x as f64 / m) as f32);
         }
+        b.finalize_lanes();
+        b.build_entry_group(); // exercise the sampled path's side table
         let inv_col: Vec<f64> = col_counts.iter().map(|&c| 1.0 / c as f64).collect();
+        let inv_col32: Vec<f32> = inv_col.iter().map(|&v| v as f32).collect();
         let inv_row: Vec<f64> = row_counts.iter().map(|&c| 1.0 / (m * c as f64)).collect();
         let yl: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-        (b, inv_col, inv_row, yl)
+        Packed { b, inv_col, inv_col32, inv_row, y: yl }
     }
 
-    fn packed_ctx<'a>(c: &SweepCtx, inv_col: &'a [f64], inv_row: &'a [f64], y: &'a [f64]) -> PackedCtx<'a> {
+    fn packed_ctx<'a>(c: &SweepCtx, p: &'a Packed) -> PackedCtx<'a> {
         PackedCtx {
             loss: c.loss,
             reg: c.reg,
             lambda: c.lambda,
             w_bound: c.w_bound,
             rule: c.rule,
-            inv_col,
-            inv_row,
-            y,
+            inv_col: &p.inv_col,
+            inv_col32: &p.inv_col32,
+            inv_row: &p.inv_row,
+            y: &p.y,
         }
     }
 
@@ -501,9 +799,9 @@ mod tests {
         let col_counts = [2u32];
         let y = [1.0f32, -1.0];
         let entries = [Entry { i: 0, j: 0, x: 2.0 }];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
         let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(0.5));
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let pc = packed_ctx(&c, &p);
         let mut w = [0.5f32];
         let mut wacc = [0f32];
         let mut alpha = [0.25f32];
@@ -514,7 +812,34 @@ mod tests {
             alpha: &mut alpha,
             a_acc: &mut aacc,
         };
-        let n = sweep_packed(&b, &pc, &mut st);
+        let n = sweep_packed(&p.b, &pc, &mut st);
+        assert_eq!(n, 1);
+        assert!((w[0] - 0.6).abs() < 1e-6, "w {}", w[0]);
+        assert!((alpha[0] - 0.125).abs() < 1e-6, "α {}", alpha[0]);
+    }
+
+    #[test]
+    fn lanes_single_update_matches_hand_computation() {
+        // A single-entry group is below LANES, so `sweep_lanes` takes
+        // the scalar fallback and must reproduce the exact values.
+        let row_counts = [2u32];
+        let col_counts = [2u32];
+        let y = [1.0f32, -1.0];
+        let entries = [Entry { i: 0, j: 0, x: 2.0 }];
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(0.5));
+        let pc = packed_ctx(&c, &p);
+        let mut w = [0.5f32];
+        let mut wacc = [0f32];
+        let mut alpha = [0.25f32];
+        let mut aacc = [0f32];
+        let mut st = PackedState {
+            w: &mut w,
+            w_acc: &mut wacc,
+            alpha: &mut alpha,
+            a_acc: &mut aacc,
+        };
+        let n = sweep_lanes(&p.b, &pc, &mut st);
         assert_eq!(n, 1);
         assert!((w[0] - 0.6).abs() < 1e-6, "w {}", w[0]);
         assert!((alpha[0] - 0.125).abs() < 1e-6, "α {}", alpha[0]);
@@ -543,9 +868,8 @@ mod tests {
                     c.reg = reg;
                     c.m = 3.0;
                     c.w_bound = loss.w_bound(c.lambda);
-                    let (b, inv_col, inv_row, yl) =
-                        pack(&entries, &row_counts, &col_counts, &y);
-                    let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+                    let p = pack(&entries, &row_counts, &col_counts, &y);
+                    let pc = packed_ctx(&c, &p);
 
                     let mut rw = [0.2f32, -0.1, 0.05];
                     let mut rwa = [0f32; 3];
@@ -575,7 +899,7 @@ mod tests {
                             alpha: &mut pa,
                             a_acc: &mut paa,
                         };
-                        sweep_packed(&b, &pc, &mut pst);
+                        sweep_packed(&p.b, &pc, &mut pst);
                     }
                     for k in 0..3 {
                         let dw = (rw[k] - pw[k]).abs() as f64;
@@ -599,6 +923,108 @@ mod tests {
     }
 
     #[test]
+    fn lanes_bitwise_equal_packed_when_all_groups_short() {
+        // Every group below LANES ⇒ sweep_lanes is the scalar kernel,
+        // bit for bit, including accumulators.
+        let row_counts = [2u32, 2];
+        let col_counts = [2u32, 2];
+        let y = [1.0f32, -1.0];
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.0 },
+            Entry { i: 0, j: 1, x: 0.5 },
+            Entry { i: 1, j: 0, x: -1.0 },
+            Entry { i: 1, j: 1, x: 2.0 },
+        ];
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(!p.b.has_lanes());
+        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+            let c = ctx(&row_counts, &col_counts, &y, rule);
+            let pc = packed_ctx(&c, &p);
+            let run = |lanes: bool| {
+                let mut w = [0.1f32, -0.2];
+                let mut wa = [0f32; 2];
+                let mut a = [0.05f32, -0.3];
+                let mut aa = [0f32; 2];
+                for _ in 0..4 {
+                    let mut st = PackedState {
+                        w: &mut w,
+                        w_acc: &mut wa,
+                        alpha: &mut a,
+                        a_acc: &mut aa,
+                    };
+                    if lanes {
+                        sweep_lanes(&p.b, &pc, &mut st);
+                    } else {
+                        sweep_packed(&p.b, &pc, &mut st);
+                    }
+                }
+                (w, a, wa, aa)
+            };
+            assert_eq!(run(true), run(false), "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn lanes_long_group_matches_packed_within_tolerance() {
+        // One 12-entry row group: 1 full chunk + a sentinel-padded
+        // ragged tail. The lane kernel computes the w side in f32, so
+        // agreement with the scalar kernel is tolerance-level.
+        let row_counts = [12u32];
+        let col_counts = [2u32; 12];
+        let y = [1.0f32];
+        let entries: Vec<Entry> = (0..12)
+            .map(|j| Entry { i: 0, j, x: 0.5 + 0.25 * j as f32 })
+            .collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        assert_eq!(p.b.padded_nnz(), 16);
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+            for reg in [Regularizer::L2, Regularizer::L1] {
+                for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+                    let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                    c.loss = loss;
+                    c.reg = reg;
+                    c.m = 1.0;
+                    c.w_bound = loss.w_bound(c.lambda);
+                    let pc = packed_ctx(&c, &p);
+                    let run = |lanes: bool| {
+                        let mut w = [0.01f32; 12];
+                        let mut wa = [0f32; 12];
+                        let mut a = [loss.alpha_init(1.0) as f32];
+                        let mut aa = [0f32];
+                        let mut st = PackedState {
+                            w: &mut w,
+                            w_acc: &mut wa,
+                            alpha: &mut a,
+                            a_acc: &mut aa,
+                        };
+                        if lanes {
+                            sweep_lanes(&p.b, &pc, &mut st);
+                        } else {
+                            sweep_packed(&p.b, &pc, &mut st);
+                        }
+                        (w, a)
+                    };
+                    let (lw, la) = run(true);
+                    let (sw, sa) = run(false);
+                    for k in 0..12 {
+                        let rel =
+                            (lw[k] - sw[k]).abs() as f64 / (sw[k].abs() as f64).max(1e-3);
+                        assert!(
+                            rel <= 1e-5,
+                            "{loss:?}/{reg:?}/{rule:?} w[{k}]: {} vs {}",
+                            lw[k],
+                            sw[k]
+                        );
+                    }
+                    let rel = (la[0] - sa[0]).abs() as f64 / (sa[0].abs() as f64).max(1e-3);
+                    assert!(rel <= 1e-5, "{loss:?}/{reg:?}/{rule:?} α: {} vs {}", la[0], sa[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn packed_sampled_matches_full_on_all_indices() {
         // Sampling every index once, in order, must equal a full sweep.
         let row_counts = [2u32, 2];
@@ -610,9 +1036,9 @@ mod tests {
             Entry { i: 1, j: 0, x: -1.0 },
             Entry { i: 1, j: 1, x: 2.0 },
         ];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
         let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let pc = packed_ctx(&c, &p);
         let run_full = || {
             let mut w = [0.1f32, -0.2];
             let mut wa = [0f32; 2];
@@ -620,7 +1046,7 @@ mod tests {
             let mut aa = [0f32; 2];
             let mut st =
                 PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
-            sweep_packed(&b, &pc, &mut st);
+            sweep_packed(&p.b, &pc, &mut st);
             (w, a, wa, aa)
         };
         let run_sampled = || {
@@ -630,10 +1056,62 @@ mod tests {
             let mut aa = [0f32; 2];
             let mut st =
                 PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
-            sweep_packed_sampled(&b, &[0, 1, 2, 3], &pc, &mut st);
+            sweep_packed_sampled(&p.b, &[0, 1, 2, 3], &pc, &mut st);
             (w, a, wa, aa)
         };
         assert_eq!(run_full(), run_sampled());
+    }
+
+    #[test]
+    fn packed_sampled_resolves_entries_across_padding() {
+        // A lane-padded block: logical indices past the first group
+        // must land on the right physical slots (side-table mapping),
+        // and sampling all of them in order must equal the full scalar
+        // sweep (both paths skip sentinels entirely).
+        let row_counts = [9u32, 2];
+        let col_counts = [2u32; 9];
+        let y = [1.0f32, -1.0];
+        let mut entries: Vec<Entry> =
+            (0..9).map(|j| Entry { i: 0, j, x: 1.0 + j as f32 }).collect();
+        entries.push(Entry { i: 1, j: 3, x: -2.0 });
+        entries.push(Entry { i: 1, j: 6, x: 4.0 });
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        assert_eq!(p.b.nnz(), 11);
+        assert_eq!(p.b.padded_nnz(), 16 + 2);
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
+        let pc = packed_ctx(&c, &p);
+        let idxs: Vec<u32> = (0..11).collect();
+        let run = |sampled: bool| {
+            let mut w = [0.1f32; 9];
+            let mut wa = [0f32; 9];
+            let mut a = [0.05f32, -0.3];
+            let mut aa = [0f32; 2];
+            let mut st =
+                PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+            if sampled {
+                sweep_packed_sampled(&p.b, &idxs, &pc, &mut st);
+            } else {
+                sweep_packed(&p.b, &pc, &mut st);
+            }
+            (w, a, wa, aa)
+        };
+        assert_eq!(run(true), run(false));
+        // Lean block (no side table): the binary-search fallback of the
+        // sampled path must be bitwise identical.
+        let mut lean = p.b.clone();
+        lean.entry_group.clear();
+        let run_lean = || {
+            let mut w = [0.1f32; 9];
+            let mut wa = [0f32; 9];
+            let mut a = [0.05f32, -0.3];
+            let mut aa = [0f32; 2];
+            let mut st =
+                PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+            sweep_packed_sampled(&lean, &idxs, &pc, &mut st);
+            (w, a, wa, aa)
+        };
+        assert_eq!(run_lean(), run(false));
     }
 
     #[test]
@@ -648,9 +1126,9 @@ mod tests {
             Entry { i: 0, j: 0, x: 1.5 },
             Entry { i: 1, j: 1, x: -0.5 },
         ];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
         let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.2));
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let pc = packed_ctx(&c, &p);
         let run = |order: [u32; 2]| {
             let mut w = [0.1f32, -0.2];
             let mut wa = [0f32; 2];
@@ -658,7 +1136,7 @@ mod tests {
             let mut aa = [0f32; 2];
             let mut st =
                 PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
-            sweep_packed_sampled(&b, &order, &pc, &mut st);
+            sweep_packed_sampled(&p.b, &order, &pc, &mut st);
             (w, a, wa, aa)
         };
         assert_eq!(run([0, 1]), run([1, 0]));
@@ -672,8 +1150,8 @@ mod tests {
         // Huge step to force projection.
         let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1e4));
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &p);
         let mut w = [0f32];
         let mut wacc = [0f32];
         let mut alpha = [0f32];
@@ -685,9 +1163,42 @@ mod tests {
                 alpha: &mut alpha,
                 a_acc: &mut aacc,
             };
-            sweep_packed(&b, &pc, &mut st);
+            sweep_packed(&p.b, &pc, &mut st);
             let bb = c.w_bound as f32;
             assert!((-bb..=bb).contains(&w[0]), "w {}", w[0]);
+            let beta = y[0] * alpha[0];
+            assert!((0.0..=1.0).contains(&beta), "β {beta}");
+        }
+    }
+
+    #[test]
+    fn lanes_projection_keeps_iterates_in_boxes() {
+        // Same invariant on the lane path, over a lane-eligible group.
+        // The lane clamp runs in f32, so allow one ulp of slack at the
+        // box boundary.
+        let row_counts = [10u32];
+        let col_counts = [1u32; 10];
+        let y = [1.0f32];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1e4));
+        let entries: Vec<Entry> =
+            (0..10).map(|j| Entry { i: 0, j, x: 1.0 + j as f32 }).collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        let pc = packed_ctx(&c, &p);
+        let mut w = [0f32; 10];
+        let mut wacc = [0f32; 10];
+        let mut alpha = [0f32];
+        let mut aacc = [0f32];
+        for _ in 0..20 {
+            let mut st = PackedState {
+                w: &mut w,
+                w_acc: &mut wacc,
+                alpha: &mut alpha,
+                a_acc: &mut aacc,
+            };
+            sweep_lanes(&p.b, &pc, &mut st);
+            let bb = c.w_bound as f32 * (1.0 + f32::EPSILON);
+            assert!(w.iter().all(|&x| (-bb..=bb).contains(&x)), "w {w:?}");
             let beta = y[0] * alpha[0];
             assert!((0.0..=1.0).contains(&beta), "β {beta}");
         }
@@ -700,8 +1211,8 @@ mod tests {
         let y = [1.0f32];
         let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.1));
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &p);
         let mut w = [0.3f32];
         let mut wacc = [0f32];
         let mut alpha = [0.1f32];
@@ -715,7 +1226,7 @@ mod tests {
                 alpha: &mut alpha,
                 a_acc: &mut aacc,
             };
-            sweep_packed(&b, &pc, &mut st);
+            sweep_packed(&p.b, &pc, &mut st);
             assert!(wacc[0] >= prev_w);
             assert!(aacc[0] >= prev_a);
             prev_w = wacc[0];
@@ -737,8 +1248,8 @@ mod tests {
             Entry { i: 1, j: 0, x: -1.0 },
             Entry { i: 1, j: 1, x: 2.0 },
         ];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &p);
         let run = || {
             let mut w = [0f32; 2];
             let mut wacc = [0f32; 2];
@@ -751,9 +1262,38 @@ mod tests {
                     alpha: &mut alpha,
                     a_acc: &mut aacc,
                 };
-                sweep_packed(&b, &pc, &mut st);
+                sweep_packed(&p.b, &pc, &mut st);
             }
             (w, alpha)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn lanes_deterministic() {
+        let row_counts = [9u32];
+        let col_counts = [2u32; 9];
+        let y = [1.0f32];
+        let c = ctx(&row_counts, &col_counts, &y, StepRule::AdaGrad(0.1));
+        let entries: Vec<Entry> =
+            (0..9).map(|j| Entry { i: 0, j, x: 0.5 * (j + 1) as f32 }).collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &p);
+        let run = || {
+            let mut w = [0f32; 9];
+            let mut wacc = [0f32; 9];
+            let mut alpha = [0f32];
+            let mut aacc = [0f32];
+            for _ in 0..5 {
+                let mut st = PackedState {
+                    w: &mut w,
+                    w_acc: &mut wacc,
+                    alpha: &mut alpha,
+                    a_acc: &mut aacc,
+                };
+                sweep_lanes(&p.b, &pc, &mut st);
+            }
+            (w, alpha, wacc, aacc)
         };
         assert_eq!(run(), run());
     }
@@ -766,8 +1306,8 @@ mod tests {
         let mut c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(1.0));
         c.loss = Loss::Square;
         let entries = [Entry { i: 0, j: 0, x: 1.0 }];
-        let (b, inv_col, inv_row, yl) = pack(&entries, &row_counts, &col_counts, &y);
-        let pc = packed_ctx(&c, &inv_col, &inv_row, &yl);
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        let pc = packed_ctx(&c, &p);
         let mut w = [0f32];
         let mut wacc = [0f32];
         let mut alpha = [0f32];
@@ -778,7 +1318,7 @@ mod tests {
             alpha: &mut alpha,
             a_acc: &mut aacc,
         };
-        sweep_packed(&b, &pc, &mut st);
+        sweep_packed(&p.b, &pc, &mut st);
         // g_α = (y − α)/m − wx/m = 3/1 − 0 = 3 → α = 3 (no clamp).
         assert!((alpha[0] - 3.0).abs() < 1e-6);
     }

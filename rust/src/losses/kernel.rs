@@ -1,4 +1,4 @@
-//! Compile-time kernel dispatch for the packed sweep (§Perf).
+//! Compile-time kernel dispatch for the packed sweeps (§Perf).
 //!
 //! The scalar hot loop (`coordinator::updates::sweep_packed`) used to
 //! pay an enum `match` on [`Loss`] and [`Regularizer`] for every
@@ -9,15 +9,34 @@
 //! folds the match away (hinge's `h'(α) = y` hoists to the row level,
 //! L2's `∇φ = 2w` fuses into the FMA, …).
 //!
-//! The impls delegate to the enum methods with a `const` discriminant —
-//! the numerical definitions live in exactly one place ([`Loss`] /
-//! [`Regularizer`]), so the monomorphized kernels are bit-identical to
-//! the enum-dispatched reference path by construction.
+//! The scalar impls delegate to the enum methods with a `const`
+//! discriminant — the numerical definitions live in exactly one place
+//! ([`Loss`] / [`Regularizer`]), so the monomorphized scalar kernels
+//! are bit-identical to the enum-dispatched reference path by
+//! construction.
+//!
+//! For the SIMD sweep (`coordinator::updates::sweep_lanes`) the traits
+//! additionally carry **lane-batched** methods over [`Lane`] =
+//! `[f32; LANES]` arrays. These are written as plain per-lane loops of
+//! independent f32 operations — the shape stable-Rust LLVM reliably
+//! auto-vectorizes to one 256-bit op per lane array, with no `std::simd`
+//! dependency. They compute in f32 (that's the whole point: 8 lanes per
+//! vector), so they are tolerance-equivalent, not bit-identical, to the
+//! f64 scalar methods.
 
 use super::{Loss, Regularizer};
+use crate::partition::omega::LANES;
+
+/// One SIMD-width batch of f32 values (8 × f32 = one 256-bit vector).
+pub type Lane = [f32; LANES];
 
 /// Loss selected at compile time. `dual_grad`/`project` match
 /// [`Loss::dual_utility_grad`] / [`Loss::project_alpha`] exactly.
+///
+/// No lane-batched methods: the α recurrence is sequential within a
+/// row group (every entry of a group updates the *same* α_i), so the
+/// lane kernel keeps the loss math scalar — see
+/// `coordinator::updates::sweep_lanes`.
 pub trait LossK: Copy + Send + Sync + 'static {
     const LOSS: Loss;
 
@@ -50,13 +69,27 @@ impl LossK for SquareK {
 }
 
 /// Regularizer selected at compile time. `grad` matches
-/// [`Regularizer::grad`] exactly.
+/// [`Regularizer::grad`] exactly; `grad_lane` is its 8-wide f32 batch
+/// (same subgradient definition, f32 precision).
 pub trait RegK: Copy + Send + Sync + 'static {
     const REG: Regularizer;
 
     #[inline(always)]
     fn grad(w: f64) -> f64 {
         Self::REG.grad(w)
+    }
+
+    /// Lane-batched ∇φ over 8 f32 weights. Default: per-lane delegation
+    /// to the f64 definition (correct but round-trips through f64);
+    /// the concrete impls below override with pure-f32 bodies that
+    /// vectorize to a single multiply / sign-select.
+    #[inline(always)]
+    fn grad_lane(w: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            out[k] = Self::REG.grad(w[k] as f64) as f32;
+        }
+        out
     }
 }
 
@@ -67,9 +100,35 @@ pub struct L2K;
 
 impl RegK for L1K {
     const REG: Regularizer = Regularizer::L1;
+
+    #[inline(always)]
+    fn grad_lane(w: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            // sign(w) with 0 at the kink — exact in f32, branch-free
+            // select after vectorization.
+            out[k] = if w[k] > 0.0 {
+                1.0
+            } else if w[k] < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+        }
+        out
+    }
 }
 impl RegK for L2K {
     const REG: Regularizer = Regularizer::L2;
+
+    #[inline(always)]
+    fn grad_lane(w: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            out[k] = 2.0 * w[k];
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +149,20 @@ mod tests {
             assert_eq!(L1K::grad(w), Regularizer::L1.grad(w));
             assert_eq!(L2K::grad(w), Regularizer::L2.grad(w));
         }
+    }
+
+    #[test]
+    fn grad_lane_matches_scalar_grad_per_lane() {
+        let w: Lane = [-1.5, -0.25, 0.0, 0.4, 1.0, -0.0, 3.25, -7.5];
+        let l1 = L1K::grad_lane(&w);
+        let l2 = L2K::grad_lane(&w);
+        for k in 0..LANES {
+            // These inputs and outputs are exactly representable in
+            // f32, so lane and scalar agree bitwise.
+            assert_eq!(l1[k] as f64, Regularizer::L1.grad(w[k] as f64), "l1 lane {k}");
+            assert_eq!(l2[k] as f64, Regularizer::L2.grad(w[k] as f64), "l2 lane {k}");
+        }
+        // -0.0 sits on the kink for L1 (sign convention: 0).
+        assert_eq!(l1[5], 0.0);
     }
 }

@@ -10,7 +10,7 @@
 pub mod omega;
 pub mod schedule;
 
-pub use omega::{Entry, OmegaBlocks, PackedBlock, PackedBlocks, RowGroup};
+pub use omega::{Entry, OmegaBlocks, PackedBlock, PackedBlocks, RowGroup, LANES};
 pub use schedule::RingSchedule;
 
 /// A contiguous partition of `[0, n)` into `p` blocks.
@@ -67,6 +67,42 @@ impl Partition {
         }
         bounds.push(n);
         Partition { bounds }
+    }
+
+    /// Round the interior block boundaries to the nearest multiple of
+    /// `lane`, keeping the 0/n endpoints. Every interior bound becomes
+    /// a `lane` multiple and every stripe keeps a width of at least
+    /// `lane` (the last stripe absorbs the ragged remainder), so a
+    /// lane-major packed block over the stripe ends on a chunk
+    /// boundary and no worker's w stripe is collapsed to zero by the
+    /// rounding. When `n < p·lane` there is no such alignment — the
+    /// partition is returned unchanged rather than emptying stripes.
+    /// Used for the w (column) stripes of [`Partition::balanced`],
+    /// whose data-dependent cuts are otherwise arbitrary; the weight
+    /// imbalance the rounding introduces is at most ~`lane` items per
+    /// boundary.
+    pub fn lane_aligned(mut self, lane: usize) -> Partition {
+        assert!(lane >= 1);
+        let n = self.n();
+        let p = self.p();
+        if n < p * lane {
+            return self;
+        }
+        let mut prev = 0usize;
+        for q in 1..p {
+            // Nearest lane multiple, kept between `prev + lane` (stripe
+            // q−1 stays at least one lane wide) and the largest lane
+            // multiple that still leaves `lane` items for each of the
+            // p−q stripes after this cut. lo ≤ hi holds inductively
+            // from n ≥ p·lane, and both ends are lane multiples, so
+            // the clamped bound always is too.
+            let lo = prev + lane;
+            let hi = (n - (p - q) * lane) / lane * lane;
+            let r = ((self.bounds[q] + lane / 2) / lane * lane).clamp(lo, hi);
+            self.bounds[q] = r;
+            prev = r;
+        }
+        self
     }
 
     pub fn p(&self) -> usize {
@@ -168,6 +204,68 @@ mod tests {
         p.validate().unwrap();
         assert_eq!(p.n(), 10);
         assert_eq!(p.p(), 3);
+    }
+
+    #[test]
+    fn lane_aligned_rounds_interior_bounds() {
+        let w = vec![1u64; 100];
+        let p = Partition::balanced(&w, 4).lane_aligned(8);
+        p.validate().unwrap();
+        assert_eq!(p.n(), 100);
+        assert_eq!(p.p(), 4);
+        for q in 0..3 {
+            assert_eq!(p.block_len(q) % 8, 0, "stripe {q}: {:?}", p.bounds);
+        }
+        // Last stripe absorbs the ragged remainder.
+        let total: usize = (0..4).map(|q| p.block_len(q)).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn lane_aligned_never_collapses_stripes() {
+        // Skewed cuts that nearest-rounding alone would collapse:
+        // balanced on a hot first item gives bounds like [0,1,...];
+        // the aligned partition must keep every stripe ≥ one lane.
+        let mut w = vec![1u64; 64];
+        w[0] = 1000;
+        let p = Partition::balanced(&w, 4).lane_aligned(8);
+        p.validate().unwrap();
+        for q in 0..4 {
+            assert!(p.block_len(q) >= 8, "stripe {q} collapsed: {:?}", p.bounds);
+        }
+        // Too narrow to align (n < p·lane): returned unchanged.
+        let narrow = Partition::balanced(&vec![1u64; 10], 3);
+        assert_eq!(narrow.clone().lane_aligned(8).bounds, narrow.bounds);
+    }
+
+    #[test]
+    fn prop_lane_aligned_keeps_cover_and_widths() {
+        prop::check("lane aligned partitions", 100, |g| {
+            let n = g.usize_in(1, 400);
+            let p_count = g.usize_in(1, 8);
+            let lane = *g.pick(&[4usize, 8, 16]);
+            let weights: Vec<u64> = (0..n).map(|_| g.usize_in(0, 20) as u64).collect();
+            let before = Partition::balanced(&weights, p_count);
+            let part = before.clone().lane_aligned(lane);
+            part.validate().map_err(|e| e)?;
+            prop::assert_that(part.p() == p_count, "block count")?;
+            prop::assert_that(part.n() == n, "n preserved")?;
+            if n < p_count * lane {
+                // Too narrow to align: must be untouched.
+                return prop::assert_that(part.bounds == before.bounds, "changed when narrow");
+            }
+            for q in 1..p_count {
+                let b = part.bounds[q];
+                prop::assert_that(b % lane == 0, format!("bound {b} not aligned to {lane}"))?;
+            }
+            for q in 0..p_count {
+                prop::assert_that(
+                    part.block_len(q) >= lane,
+                    format!("stripe {q} narrower than a lane: {:?}", part.bounds),
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

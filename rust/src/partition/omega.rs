@@ -1,4 +1,5 @@
-//! The p×p block decomposition of the nonzero set Ω, in packed form.
+//! The p×p block decomposition of the nonzero set Ω, in packed
+//! **lane-major** form.
 //!
 //! Ω^(q,r) = {(i,j) ∈ Ω : i ∈ I_q, j ∈ J_r}. The seed stored each block
 //! as a COO `Vec<Entry>` with 12-byte entries and *global* indices; the
@@ -12,8 +13,25 @@
 //!   pre-scaled to x/m), segmented into [`RowGroup`]s of consecutive
 //!   entries sharing a row. The sweep walks 8 bytes per nonzero instead
 //!   of 12 and loads row state once per group instead of once per entry.
+//! * **Lane-major padding** — a row group of `len ≥ LANES` entries is
+//!   stored as whole chunks of [`LANES`] (= 8) columns/values: its
+//!   ragged tail is padded with *sentinel* entries (`col = 0`,
+//!   `val = 0.0`) up to the next lane multiple, so the SIMD sweep
+//!   (`coordinator::updates::sweep_lanes`) runs branch-free full-width
+//!   arithmetic over every chunk. Within one row all columns are
+//!   distinct, so the 8 w-updates of a chunk are write-conflict-free —
+//!   the property the lane kernel exploits. Groups shorter than `LANES`
+//!   are stored tight (no padding) and swept scalar; padding them would
+//!   cost up to 8× storage on very sparse blocks for no speedup.
+//! * **Logical vs physical coordinates** — [`RowGroup::start`]/`end`
+//!   keep the *logical* (sentinel-free) entry numbering the sampling
+//!   path and the serializability argument are stated in; `pad_start`
+//!   locates the group's physical lane region in `cols`/`vals`.
+//!   Sampling over `[0, nnz())` therefore draws exactly the same
+//!   entries (and RNG stream) as the pre-lane layout.
 //! * **Precomputed reciprocals** — per column-stripe tables
-//!   `inv_col[r][lj] = 1/|Ω̄_j|` and per row-stripe tables
+//!   `inv_col[r][lj] = 1/|Ω̄_j|` (and their f32 mirror `inv_col32`,
+//!   consumed by the f32 lane kernel) and per row-stripe tables
 //!   `inv_row[q][li] = 1/(m·|Ω_i|)` turn every division in update (8)
 //!   into a multiply; folding `x/m` into the stored value removes the
 //!   remaining one. The inner loop has **zero divisions and zero offset
@@ -21,16 +39,77 @@
 //! * **Block-local indices** — `cols`/`li` are already relative to the
 //!   stripe, so the kernel indexes the travelling w block and resident
 //!   α block directly.
+//! * **Cold side table** — `entry_group` maps each logical entry to its
+//!   owning row group so the subsampled sweep does one array load per
+//!   sampled entry instead of a binary search over groups. It costs
+//!   4 bytes per nonzero (+50% on the 8-byte packed entries), so it is
+//!   only materialized via [`PackedBlocks::with_sampling_tables`] when
+//!   the `updates_per_block` configuration actually samples; full
+//!   sweeps leave it empty and the sampled path falls back to the
+//!   binary search.
+//!
+//! ## Sentinel-padding invariants
+//!
+//! Established by [`PackedBlock::finalize_lanes`] and re-checked by
+//! [`PackedBlocks::validate`] (tests) and `check_packed_bounds`
+//! (every sweep):
+//!
+//! 1. Physical group regions tile `[0, padded_nnz())`: group g occupies
+//!    `pad_start .. pad_start + lane_span(len)`, and the next group's
+//!    `pad_start` is exactly that end.
+//! 2. A region is padded iff `len ≥ LANES`, to the next multiple of
+//!    `LANES`; the first `len` slots are the real entries in their
+//!    original (row, col)-sorted order.
+//! 3. Sentinel slots carry `col = SENTINEL_COL` (a valid block-local
+//!    column, so speculative full-width gathers stay in bounds) and
+//!    `val = 0.0`. The lane kernel **never stores** lane results past a
+//!    chunk's real length, so sentinel columns are read-only: padding
+//!    cannot perturb any w, α, or accumulator state (property-tested in
+//!    `tests/lane_kernel.rs` by mutating sentinels and requiring
+//!    bit-identical output).
 //!
 //! Blocks keep the sampling metadata the update rule needs — the global
 //! |Ω_i| (row nnz) and |Ω̄_j| (column nnz) counts of Eq. (8) — computed
-//! once on the full matrix and shared. Entries appear in the same
-//! (row, col)-sorted order the COO layout used, so the sweep order (and
-//! with it the Lemma-2 serializability argument and the parallel ↔
+//! once on the full matrix and shared. Logical entries appear in the
+//! same (row, col)-sorted order the COO layout used, so the sweep order
+//! (and with it the Lemma-2 serializability argument and the parallel ↔
 //! replay bit-identity) is unchanged.
+//!
+//! ## Float-summation-order caveat
+//!
+//! The scalar packed kernel (`sweep_packed`) is numerically *identical*
+//! to the PR-1 kernel on this layout (same entries, same order, same
+//! f64 arithmetic). The lane kernel (`sweep_lanes`) evaluates the
+//! w-side gradient/step/clamp in 8-wide **f32** arithmetic and is
+//! therefore *tolerance-equivalent* (≤1e-5 relative after a sweep), not
+//! bit-identical, to the scalar path; bit-identity tests (threaded ≡
+//! replay) hold on either path because both engine executions dispatch
+//! to the same kernel, but cross-kernel comparisons must use
+//! tolerances. See `coordinator::updates` for the exact divergence
+//! points.
 
 use super::Partition;
 use crate::data::sparse::Csr;
+
+/// SIMD lane width of the value lanes: 8 × f32 = one 256-bit vector.
+/// The layout pads lane-eligible row groups to a multiple of this.
+pub const LANES: usize = 8;
+
+/// Block-local column id stored in sentinel (padding) slots. Any valid
+/// column works — sentinels are only ever *read* (speculatively, by the
+/// full-width lane gathers), never written through.
+pub const SENTINEL_COL: u32 = 0;
+
+/// Physical storage span of a row group with `len` real entries: padded
+/// to the next `LANES` multiple when lane-eligible, tight otherwise.
+#[inline]
+pub fn lane_span(len: usize) -> usize {
+    if len >= LANES {
+        len.div_ceil(LANES) * LANES
+    } else {
+        len
+    }
+}
 
 /// One nonzero entry in global coordinates. Retained as the unit of the
 /// scalar *reference* path (`coordinator::updates::sweep_block`), which
@@ -43,45 +122,171 @@ pub struct Entry {
 }
 
 /// A run of consecutive entries sharing one (block-local) row.
+///
+/// `start`/`end` are **logical** entry coordinates (no sentinels):
+/// group g's real entries are logical `[start, end)`. `pad_start` is
+/// the **physical** index of the group's first entry in `cols`/`vals`;
+/// the group physically occupies `pad_start .. pad_start +
+/// lane_span(len())`, with sentinel padding after the first `len()`
+/// slots when lane-eligible.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RowGroup {
     /// Block-local row id (i − row stripe offset).
     pub li: u32,
-    /// Entry range [start, end) into the block's `cols`/`vals`.
+    /// Logical entry range [start, end): real entries only.
     pub start: u32,
     pub end: u32,
+    /// Physical start of this group's (possibly padded) lane region.
+    pub pad_start: u32,
 }
 
-/// One Ω^(q,r) block in packed SoA form.
+impl RowGroup {
+    /// Number of real entries in the group.
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+
+    /// Physical storage span (real entries + sentinel padding).
+    #[inline]
+    pub fn padded_len(&self) -> usize {
+        lane_span(self.len())
+    }
+
+    /// Whether the lane kernel processes this group in LANES-wide
+    /// chunks (otherwise it falls back to the scalar loop).
+    #[inline]
+    pub fn lane_eligible(&self) -> bool {
+        self.len() >= LANES
+    }
+}
+
+/// One Ω^(q,r) block in packed, lane-major SoA form.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PackedBlock {
-    /// Non-empty row segments, ascending in `li`; ranges tile
-    /// `0..nnz()` exactly.
+    /// Non-empty row segments, ascending in `li`; logical ranges tile
+    /// `0..nnz()` and physical regions tile `0..padded_nnz()` exactly.
     pub groups: Vec<RowGroup>,
-    /// Block-local column id per entry, sorted within each group.
+    /// Block-local column id per physical slot, sorted within each
+    /// group's real prefix; sentinel slots hold [`SENTINEL_COL`].
     pub cols: Vec<u32>,
-    /// Pre-scaled value x_ij/m per entry (f32 — matches the parameter
-    /// precision; the kernel computes in f64).
+    /// Pre-scaled value x_ij/m per physical slot (f32 — matches the
+    /// parameter precision; the scalar kernel computes in f64).
+    /// Sentinel slots hold 0.0.
     pub vals: Vec<f32>,
     /// Row-stripe height (bound on `li`, exclusive).
     pub n_rows: u32,
     /// Column-stripe width (bound on `cols`, exclusive).
     pub n_cols: u32,
+    /// Cold side table for the subsampled sweep: owning group index per
+    /// *logical* entry (replaces the old per-sample binary search).
+    /// Empty unless built via [`PackedBlocks::with_sampling_tables`] —
+    /// it is pure overhead for full sweeps.
+    pub entry_group: Vec<u32>,
+    /// Number of lane-eligible groups (len ≥ LANES). The engines
+    /// dispatch to `sweep_lanes` iff this is nonzero.
+    pub lane_groups: u32,
 }
 
 impl PackedBlock {
+    /// Number of *real* entries (sentinel padding excluded).
     #[inline]
     pub fn nnz(&self) -> usize {
+        self.groups.last().map_or(0, |g| g.end as usize)
+    }
+
+    /// Physical storage slots, including sentinel padding.
+    #[inline]
+    pub fn padded_nnz(&self) -> usize {
         self.vals.len()
     }
 
-    /// Index of the [`RowGroup`] containing flat entry `k` (binary
-    /// search; used by the subsampled sweep path).
+    /// Whether any row group is lane-eligible — the engines' dispatch
+    /// predicate between `sweep_lanes` and scalar `sweep_packed`.
+    #[inline]
+    pub fn has_lanes(&self) -> bool {
+        self.lane_groups > 0
+    }
+
+    /// Index of the [`RowGroup`] containing *logical* entry `k` (binary
+    /// search; the hot sampled path uses the `entry_group` side table —
+    /// this stays as the table's independent cross-check).
     #[inline]
     pub fn group_of(&self, k: u32) -> usize {
         debug_assert!((k as usize) < self.nnz());
-        // Groups tile [0, nnz), so the first group with `end > k` owns k.
+        // Logical group ranges tile [0, nnz), so the first group with
+        // `end > k` owns k.
         self.groups.partition_point(|g| g.end <= k)
+    }
+
+    /// Index of the [`RowGroup`] containing *logical* entry `k`: the
+    /// cold side table when it has been built, the binary search
+    /// otherwise.
+    #[inline]
+    pub fn group_of_cached(&self, k: u32) -> usize {
+        if self.entry_group.is_empty() {
+            self.group_of(k)
+        } else {
+            self.entry_group[k as usize] as usize
+        }
+    }
+
+    /// Physical slot of *logical* entry `k`.
+    #[inline]
+    pub fn physical_of(&self, k: u32) -> usize {
+        let g = &self.groups[self.group_of_cached(k)];
+        (g.pad_start + (k - g.start)) as usize
+    }
+
+    /// Materialize the `entry_group` side table (idempotent).
+    pub fn build_entry_group(&mut self) {
+        if self.entry_group.len() == self.nnz() {
+            return;
+        }
+        self.entry_group = Vec::with_capacity(self.nnz());
+        for (gi, g) in self.groups.iter().enumerate() {
+            for _ in g.start..g.end {
+                self.entry_group.push(gi as u32);
+            }
+        }
+    }
+
+    /// Convert a tightly-built block (groups with logical ranges only,
+    /// `cols`/`vals` holding exactly the real entries in order) into
+    /// the lane-major layout: assign physical `pad_start` offsets,
+    /// insert sentinel slots after ragged tails of lane-eligible
+    /// groups, and count lane-eligible groups. Idempotent on a block
+    /// that carries no padding.
+    pub fn finalize_lanes(&mut self) {
+        let nnz = self.groups.last().map_or(0, |g| g.end) as usize;
+        debug_assert_eq!(nnz, self.cols.len(), "finalize_lanes expects tight storage");
+        self.lane_groups = self.groups.iter().filter(|g| g.lane_eligible()).count() as u32;
+        let padded: usize = self.groups.iter().map(|g| lane_span(g.len())).sum();
+        if padded == nnz {
+            // No sentinels anywhere: physical layout == logical layout.
+            for g in self.groups.iter_mut() {
+                g.pad_start = g.start;
+            }
+            return;
+        }
+        let mut cols = Vec::with_capacity(padded);
+        let mut vals = Vec::with_capacity(padded);
+        for g in self.groups.iter_mut() {
+            g.pad_start = cols.len() as u32;
+            cols.extend_from_slice(&self.cols[g.start as usize..g.end as usize]);
+            vals.extend_from_slice(&self.vals[g.start as usize..g.end as usize]);
+            for _ in g.len()..g.padded_len() {
+                cols.push(SENTINEL_COL);
+                vals.push(0.0);
+            }
+        }
+        self.cols = cols;
+        self.vals = vals;
     }
 }
 
@@ -99,6 +304,9 @@ pub struct PackedBlocks {
     /// 1/|Ω̄_j| per column stripe r, indexed by block-local column.
     /// 0.0 for empty columns (never read by the sweep: no entries).
     pub inv_col: Vec<Vec<f64>>,
+    /// f32 mirror of `inv_col`, gathered by the 8-wide f32 lane kernel
+    /// (half the bandwidth of the f64 table on the gather port).
+    pub inv_col32: Vec<Vec<f32>>,
     /// 1/(m·|Ω_i|) per row stripe q, indexed by block-local row.
     /// 0.0 for empty rows (never read by the sweep).
     pub inv_row: Vec<Vec<f64>>,
@@ -143,11 +351,14 @@ impl PackedBlocks {
                 if matches!(b.groups.last(), Some(g) if g.li == li) {
                     b.groups.last_mut().unwrap().end = pos + 1;
                 } else {
-                    b.groups.push(RowGroup { li, start: pos, end: pos + 1 });
+                    b.groups.push(RowGroup { li, start: pos, end: pos + 1, pad_start: 0 });
                 }
                 b.cols.push(idx[k] - col_part.bounds[r] as u32);
                 b.vals.push((val[k] as f64 * inv_m) as f32);
             }
+        }
+        for b in blocks.iter_mut() {
+            b.finalize_lanes();
         }
 
         let inv_col: Vec<Vec<f64>> = (0..p)
@@ -161,6 +372,8 @@ impl PackedBlocks {
                     .collect()
             })
             .collect();
+        let inv_col32: Vec<Vec<f32>> =
+            inv_col.iter().map(|t| t.iter().map(|&v| v as f32).collect()).collect();
         let inv_row: Vec<Vec<f64>> = (0..p)
             .map(|q| {
                 row_part
@@ -179,11 +392,24 @@ impl PackedBlocks {
             row_counts,
             col_counts,
             inv_col,
+            inv_col32,
             inv_row,
             m,
             row_part: row_part.clone(),
             col_part: col_part.clone(),
         }
+    }
+
+    /// Materialize the per-entry `entry_group` side tables on every
+    /// block, turning the subsampled sweep's group lookup into one cold
+    /// load. Costs 4 bytes per nonzero — call it only when
+    /// `updates_per_block` sampling is actually configured (the engines
+    /// do); full sweeps never read the tables.
+    pub fn with_sampling_tables(mut self) -> PackedBlocks {
+        for b in self.blocks.iter_mut() {
+            b.build_entry_group();
+        }
+        self
     }
 
     #[inline]
@@ -242,10 +468,13 @@ impl PackedBlocks {
     }
 
     /// Structural invariant check used by tests (and the safety
-    /// argument for the kernel's unchecked indexing): blocks cover Ω
-    /// exactly, groups tile each block's entry range with ascending
-    /// in-bounds local rows, columns are sorted and in-bounds, values
-    /// carry x/m, and the reciprocal tables match the counts.
+    /// argument for the kernels' unchecked indexing): blocks cover Ω
+    /// exactly, logical group ranges tile each block's entry numbering
+    /// with ascending in-bounds local rows, physical regions tile the
+    /// padded storage with sentinels only where the invariants allow
+    /// them, columns are sorted and in-bounds, values carry x/m, the
+    /// side tables are consistent, and the reciprocal tables match the
+    /// counts.
     pub fn validate(&self, x: &Csr) -> Result<(), String> {
         if self.total_nnz() != x.nnz() {
             return Err(format!("cover: {} != {}", self.total_nnz(), x.nnz()));
@@ -262,11 +491,18 @@ impl PackedBlocks {
                 {
                     return Err(format!("block ({q},{r}) stripe dims wrong"));
                 }
+                if b.vals.len() != b.cols.len() {
+                    return Err(format!("block ({q},{r}) cols/vals length mismatch"));
+                }
                 let mut next = 0u32;
+                let mut pnext = 0usize;
                 let mut prev_li: Option<u32> = None;
                 for g in &b.groups {
                     if g.start != next || g.end <= g.start {
                         return Err(format!("block ({q},{r}) groups don't tile entries"));
+                    }
+                    if g.pad_start as usize != pnext {
+                        return Err(format!("block ({q},{r}) padded regions don't tile"));
                     }
                     if let Some(pl) = prev_li {
                         if g.li <= pl {
@@ -276,29 +512,64 @@ impl PackedBlocks {
                     if g.li >= b.n_rows {
                         return Err(format!("block ({q},{r}) row {} out of stripe", g.li));
                     }
-                    for k in g.start..g.end {
-                        let lj = b.cols[k as usize];
+                    // Real prefix: in-bounds, strictly sorted columns.
+                    let ps = g.pad_start as usize;
+                    for k in ps..ps + g.len() {
+                        let lj = b.cols[k];
                         if lj >= b.n_cols {
                             return Err(format!("block ({q},{r}) col {lj} out of stripe"));
                         }
-                        if k > g.start && b.cols[k as usize - 1] >= lj {
+                        if k > ps && b.cols[k - 1] >= lj {
                             return Err(format!("block ({q},{r}) cols not sorted"));
+                        }
+                    }
+                    // Sentinel suffix: only on lane-eligible groups,
+                    // fixed col/val so it can never encode data.
+                    if g.padded_len() != g.len() && !g.lane_eligible() {
+                        return Err(format!("block ({q},{r}) short group padded"));
+                    }
+                    for k in ps + g.len()..ps + g.padded_len() {
+                        if b.cols[k] != SENTINEL_COL || b.vals[k] != 0.0 {
+                            return Err(format!("block ({q},{r}) bad sentinel at {k}"));
                         }
                     }
                     prev_li = Some(g.li);
                     next = g.end;
+                    pnext += g.padded_len();
                 }
                 if next as usize != b.nnz() {
                     return Err(format!("block ({q},{r}) groups cover {next} != {}", b.nnz()));
+                }
+                if pnext != b.padded_nnz() {
+                    return Err(format!(
+                        "block ({q},{r}) padded cover {pnext} != {}",
+                        b.padded_nnz()
+                    ));
+                }
+                // The sampling side table is optional; when present it
+                // must agree with the binary search everywhere.
+                if !b.entry_group.is_empty() {
+                    if b.entry_group.len() != b.nnz() {
+                        return Err(format!("block ({q},{r}) entry_group length"));
+                    }
+                    for k in 0..b.nnz() as u32 {
+                        if b.entry_group[k as usize] as usize != b.group_of(k) {
+                            return Err(format!("block ({q},{r}) entry_group[{k}] wrong"));
+                        }
+                    }
+                }
+                let lane_groups = b.groups.iter().filter(|g| g.lane_eligible()).count();
+                if b.lane_groups as usize != lane_groups {
+                    return Err(format!("block ({q},{r}) lane_groups count"));
                 }
                 // Cross-check content against the source matrix.
                 let expect = self.block_entries(x, q, r);
                 if expect.len() != b.nnz() {
                     return Err(format!("block ({q},{r}) entry count vs matrix"));
                 }
-                let mut k = 0usize;
                 for g in &b.groups {
-                    for e in &expect[g.start as usize..g.end as usize] {
+                    for (o, e) in expect[g.start as usize..g.end as usize].iter().enumerate() {
+                        let k = g.pad_start as usize + o;
                         let gi = self.row_part.bounds[q] + g.li as usize;
                         let gj = self.col_part.bounds[r] + b.cols[k] as usize;
                         if gi != e.i as usize || gj != e.j as usize {
@@ -310,7 +581,6 @@ impl PackedBlocks {
                         if b.vals[k] != (e.x as f64 * inv_m) as f32 {
                             return Err(format!("block ({q},{r}) entry {k}: value drift"));
                         }
-                        k += 1;
                     }
                 }
             }
@@ -321,6 +591,9 @@ impl PackedBlocks {
                 let want = if c == 0 { 0.0 } else { 1.0 / c as f64 };
                 if self.inv_col[r][lj] != want {
                     return Err(format!("inv_col[{r}][{lj}] wrong"));
+                }
+                if self.inv_col32[r][lj] != want as f32 {
+                    return Err(format!("inv_col32[{r}][{lj}] wrong"));
                 }
             }
         }
@@ -356,6 +629,18 @@ mod tests {
         )
     }
 
+    /// A matrix with one lane-eligible row (11 nonzeros → padded to 16)
+    /// and one short row, for the padding-geometry tests.
+    fn long_row_matrix() -> Csr {
+        Csr::from_rows(
+            16,
+            vec![
+                (0..11).map(|j| (j as u32, (j + 1) as f32)).collect(),
+                vec![(2, 9.0), (7, 10.0), (12, 11.0)],
+            ],
+        )
+    }
+
     #[test]
     fn build_places_entries_correctly() {
         let x = toy_matrix();
@@ -364,14 +649,17 @@ mod tests {
         let om = PackedBlocks::build(&x, &rp, &cp);
         om.validate(&x).unwrap();
         // Rows 0..2 are stripe 0; cols 0..1 are stripe 0.
-        // Ω^(0,0) = {(0,0,1.0), (1,1,3.0)} → local rows 0 and 1.
+        // Ω^(0,0) = {(0,0,1.0), (1,1,3.0)} → local rows 0 and 1. All
+        // groups are short, so physical == logical (pad_start = start).
         let b00 = om.block(0, 0);
         assert_eq!(b00.nnz(), 2);
+        assert_eq!(b00.padded_nnz(), 2);
+        assert!(!b00.has_lanes());
         assert_eq!(
             b00.groups,
             vec![
-                RowGroup { li: 0, start: 0, end: 1 },
-                RowGroup { li: 1, start: 1, end: 2 }
+                RowGroup { li: 0, start: 0, end: 1, pad_start: 0 },
+                RowGroup { li: 1, start: 1, end: 2, pad_start: 1 }
             ]
         );
         assert_eq!(b00.cols, vec![0, 1]);
@@ -379,7 +667,7 @@ mod tests {
         assert_eq!(b00.vals, vec![(1.0f64 / 5.0) as f32, (3.0f64 / 5.0) as f32]);
         // Ω^(0,1) = {(0,3,2.0)} → local row 0, local col 1.
         let b01 = om.block(0, 1);
-        assert_eq!(b01.groups, vec![RowGroup { li: 0, start: 0, end: 1 }]);
+        assert_eq!(b01.groups, vec![RowGroup { li: 0, start: 0, end: 1, pad_start: 0 }]);
         assert_eq!(b01.cols, vec![1]);
         assert_eq!(b01.vals, vec![(2.0f64 / 5.0) as f32]);
     }
@@ -396,8 +684,81 @@ mod tests {
         // inv_col[r][lj] = 1/|Ω̄_j|, inv_row[q][li] = 1/(m|Ω_i|).
         assert_eq!(om.inv_col[0], vec![0.5, 0.5]);
         assert_eq!(om.inv_col[1], vec![0.5, 0.5]);
+        assert_eq!(om.inv_col32[0], vec![0.5f32, 0.5]);
         assert_eq!(om.inv_row[0], vec![1.0 / 10.0, 1.0 / 5.0]);
         assert_eq!(om.inv_row[1], vec![1.0 / 10.0, 1.0 / 5.0, 1.0 / 10.0]);
+    }
+
+    #[test]
+    fn lane_span_rounds_only_eligible_lengths() {
+        assert_eq!(lane_span(0), 0);
+        assert_eq!(lane_span(1), 1);
+        assert_eq!(lane_span(LANES - 1), LANES - 1);
+        assert_eq!(lane_span(LANES), LANES);
+        assert_eq!(lane_span(LANES + 1), 2 * LANES);
+        assert_eq!(lane_span(3 * LANES), 3 * LANES);
+        assert_eq!(lane_span(3 * LANES + 5), 4 * LANES);
+    }
+
+    #[test]
+    fn long_groups_are_sentinel_padded() {
+        let x = long_row_matrix();
+        let rp = Partition::even(2, 1);
+        let cp = Partition::even(16, 1);
+        let om = PackedBlocks::build(&x, &rp, &cp);
+        om.validate(&x).unwrap();
+        let b = om.block(0, 0);
+        // Row 0 has 11 entries (lane-eligible, padded to 16); row 1 has
+        // 3 (tight).
+        assert_eq!(b.nnz(), 14);
+        assert_eq!(b.padded_nnz(), 16 + 3);
+        assert_eq!(b.lane_groups, 1);
+        assert!(b.has_lanes());
+        assert_eq!(
+            b.groups,
+            vec![
+                RowGroup { li: 0, start: 0, end: 11, pad_start: 0 },
+                RowGroup { li: 1, start: 11, end: 14, pad_start: 16 }
+            ]
+        );
+        // Sentinel slots sit at physical 11..16 with col 0 / val 0.
+        for k in 11..16 {
+            assert_eq!(b.cols[k], SENTINEL_COL, "slot {k}");
+            assert_eq!(b.vals[k], 0.0, "slot {k}");
+        }
+        // Real entries keep their order and values on both sides of
+        // the padding.
+        assert_eq!(&b.cols[..11], &(0..11).collect::<Vec<u32>>()[..]);
+        assert_eq!(&b.cols[16..], &[2, 7, 12]);
+        assert_eq!(b.vals[16], (9.0f64 / 2.0) as f32);
+    }
+
+    #[test]
+    fn entry_group_matches_group_of_and_physical_mapping() {
+        let x = long_row_matrix();
+        let rp = Partition::even(2, 1);
+        let cp = Partition::even(16, 1);
+        // Default build keeps the cold side table empty (it is pure
+        // overhead for full sweeps); the lookup falls back to the
+        // binary search and the physical mapping still works.
+        let lean = PackedBlocks::build(&x, &rp, &cp);
+        assert!(lean.block(0, 0).entry_group.is_empty());
+        assert_eq!(lean.block(0, 0).physical_of(11), 16);
+        let om = lean.with_sampling_tables();
+        om.validate(&x).unwrap();
+        let b = om.block(0, 0);
+        for k in 0..b.nnz() as u32 {
+            let gi = b.entry_group[k as usize] as usize;
+            assert_eq!(gi, b.group_of(k), "entry {k}");
+            assert_eq!(gi, b.group_of_cached(k), "entry {k} (cached)");
+            let g = &b.groups[gi];
+            let kp = b.physical_of(k);
+            assert!(kp >= g.pad_start as usize && kp < g.pad_start as usize + g.len());
+            // The physical slot is never a sentinel.
+            assert!(b.vals[kp] != 0.0 || b.cols[kp] != SENTINEL_COL || k == 0);
+        }
+        // Logical entry 11 (first of row 1) maps past the padding.
+        assert_eq!(b.physical_of(11), 16);
     }
 
     #[test]
@@ -413,11 +774,9 @@ mod tests {
                     assert!(b.groups[gk - 1].li < b.groups[gk].li, "block ({q},{r})");
                 }
                 for g in &b.groups {
-                    for k in (g.start + 1)..g.end {
-                        assert!(
-                            b.cols[k as usize - 1] < b.cols[k as usize],
-                            "block ({q},{r}) cols"
-                        );
+                    let ps = g.pad_start as usize;
+                    for k in ps + 1..ps + g.len() {
+                        assert!(b.cols[k - 1] < b.cols[k], "block ({q},{r}) cols");
                     }
                 }
             }
@@ -475,11 +834,13 @@ mod tests {
             let m = g.usize_in(2, 80);
             let d = g.usize_in(2, 60);
             let p = g.usize_in(1, 6.min(m).min(d));
+            // nnz_per_row spans both sides of LANES so the lane-padding
+            // invariants are exercised alongside the tight layout.
             let ds = SparseSpec {
                 name: "prop".into(),
                 m,
                 d,
-                nnz_per_row: g.f64_in(1.0, 6.0),
+                nnz_per_row: g.f64_in(1.0, 14.0),
                 zipf_s: g.f64_in(0.0, 1.2),
                 label_noise: 0.0,
                 pos_frac: 0.5,
@@ -488,7 +849,10 @@ mod tests {
             .generate();
             let rp = Partition::even(ds.m(), p);
             let cp = Partition::even(ds.d(), p);
+            // Validate both with and without the sampling side tables.
             let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            om.validate(&ds.x).map_err(|e| e)?;
+            let om = om.with_sampling_tables();
             om.validate(&ds.x).map_err(|e| e)?;
             prop::assert_that(om.epoch_imbalance() >= 0.99, "imbalance >= 1")
         });

@@ -37,3 +37,23 @@ pub mod tile_engine {
 pub use artifacts::{ArtifactEntry, Manifest};
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;
+
+#[cfg(all(test, not(feature = "xla")))]
+mod stub_tests {
+    use crate::data::{Csr, Dataset};
+
+    /// The gated stub must fail with the documented, actionable message
+    /// — `--mode tile` on a non-xla build reports how to enable the
+    /// path instead of a generic failure. Covered here (and at the CLI
+    /// layer) so the stub can't silently regress.
+    #[test]
+    fn tile_stub_reports_feature_gate_error() {
+        let cfg = crate::config::TrainConfig::default();
+        let x = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        let ds = Dataset::new("stub", x, vec![1.0, -1.0]);
+        let err = super::tile_engine::train(&cfg, &ds, None).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("tile mode requires the PJRT runtime"), "msg: {msg}");
+        assert!(msg.contains("--features xla"), "msg: {msg}");
+    }
+}

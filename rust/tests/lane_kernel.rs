@@ -1,0 +1,548 @@
+//! Property tests for the SIMD lane sweep (`sweep_lanes`) over the
+//! lane-major packed layout: on random sparse blocks × {Hinge,
+//! Logistic, Square} × {L1, L2} × {Fixed, AdaGrad}, one lane sweep must
+//! match the checked COO scalar oracle (`sweep_block`) within 1e-5
+//! relative error — including ragged-tail groups (|group| not a lane
+//! multiple) and sentinel-padded storage — and sentinel padding must
+//! never perturb any w/α/accumulator state (bitwise-tested by mutating
+//! the sentinels). Lane-aligned balanced stripes and the engines'
+//! size-based dispatch are exercised end to end.
+//!
+//! Tolerance rationale: the lane kernel's α recurrence is
+//! arithmetically identical to the scalar kernel's (sequential f64 over
+//! the same entries); only the w side runs in 8-wide f32. A single
+//! update therefore differs by ~f32 ulp (≈6e-8 relative) from the
+//! scalar path, which itself sits ≪1e-5 from the COO oracle
+//! (reciprocal-multiply and x/m-fold rounding) — one sweep stays well
+//! inside 1e-5. Bit-identity tests remain pinned to the scalar path
+//! (`tests/packed_kernel.rs`); the float-summation-order caveat is
+//! documented in `partition::omega`.
+
+use dso::config::{LossKind, PartitionKind, RegKind, StepKind, TrainConfig};
+use dso::coordinator::updates::{
+    sweep_block, sweep_lanes, sweep_packed, BlockState, PackedCtx, PackedState, StepRule,
+    SweepCtx,
+};
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+use dso::losses::{Loss, Regularizer};
+use dso::partition::{PackedBlock, PackedBlocks, Partition, LANES};
+use dso::util::prop;
+
+/// Dense-ish random dataset so row groups straddle LANES: with
+/// nnz_per_row up to ~3·LANES and p ≤ 2, blocks carry a mix of
+/// lane-eligible groups, ragged tails, and short scalar-fallback
+/// groups.
+fn random_dataset(g: &mut prop::Gen) -> Dataset {
+    SparseSpec {
+        name: "lane-prop".into(),
+        m: g.usize_in(20, 100),
+        d: g.usize_in(16, 64),
+        nnz_per_row: g.f64_in(4.0, 3.0 * LANES as f64),
+        zipf_s: g.f64_in(0.0, 1.0),
+        label_noise: g.f64_in(0.0, 0.1),
+        pos_frac: g.f64_in(0.2, 0.8),
+        seed: g.case_seed,
+    }
+    .generate()
+}
+
+fn fresh_state(
+    om: &PackedBlocks,
+    q: usize,
+    r: usize,
+    loss: Loss,
+    ds: &Dataset,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let w = vec![0.01f32; om.col_part.block_len(r)];
+    let w_acc = vec![0f32; w.len()];
+    let alpha: Vec<f32> = om
+        .row_part
+        .block(q)
+        .map(|i| loss.alpha_init(ds.y[i] as f64) as f32)
+        .collect();
+    let a_acc = vec![0f32; alpha.len()];
+    (w, w_acc, alpha, a_acc)
+}
+
+/// Run `sweeps` COO-oracle sweeps of block (q, r) and return the final
+/// stripe-local (w, α).
+#[allow(clippy::too_many_arguments)]
+fn oracle_trajectory(
+    ds: &Dataset,
+    om: &PackedBlocks,
+    q: usize,
+    r: usize,
+    loss: Loss,
+    reg: Regularizer,
+    lambda: f64,
+    rule: StepRule,
+    sweeps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let entries = om.block_entries(&ds.x, q, r);
+    let ctx = SweepCtx {
+        loss,
+        reg,
+        lambda,
+        m: ds.m() as f64,
+        row_counts: &om.row_counts,
+        col_counts: &om.col_counts,
+        y: &ds.y,
+        w_bound: loss.w_bound(lambda),
+        rule,
+    };
+    let (mut w, mut w_acc, mut alpha, mut a_acc) = fresh_state(om, q, r, loss, ds);
+    for _ in 0..sweeps {
+        let mut st = BlockState {
+            w: &mut w,
+            w_acc: &mut w_acc,
+            w_off: om.col_part.bounds[r],
+            alpha: &mut alpha,
+            a_acc: &mut a_acc,
+            a_off: om.row_part.bounds[q],
+        };
+        sweep_block(&entries, &ctx, &mut st);
+    }
+    (w, alpha)
+}
+
+/// Run `sweeps` sweeps of block (q, r) with the given packed kernel on
+/// a possibly-overridden block (for the sentinel-mutation tests) and
+/// return the full final state.
+#[allow(clippy::too_many_arguments)]
+fn packed_trajectory(
+    kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize,
+    block: &PackedBlock,
+    ds: &Dataset,
+    om: &PackedBlocks,
+    q: usize,
+    r: usize,
+    loss: Loss,
+    reg: Regularizer,
+    lambda: f64,
+    rule: StepRule,
+    sweeps: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let y_local = om.stripe_labels(&ds.y);
+    let ctx = PackedCtx {
+        loss,
+        reg,
+        lambda,
+        w_bound: loss.w_bound(lambda),
+        rule,
+        inv_col: &om.inv_col[r],
+        inv_col32: &om.inv_col32[r],
+        inv_row: &om.inv_row[q],
+        y: &y_local[q],
+    };
+    let (mut w, mut w_acc, mut alpha, mut a_acc) = fresh_state(om, q, r, loss, ds);
+    for _ in 0..sweeps {
+        let mut st = PackedState {
+            w: &mut w,
+            w_acc: &mut w_acc,
+            alpha: &mut alpha,
+            a_acc: &mut a_acc,
+        };
+        kernel(block, &ctx, &mut st);
+    }
+    (w, w_acc, alpha, a_acc)
+}
+
+#[test]
+fn prop_lanes_match_scalar_oracle() {
+    // The headline contract: one lane sweep agrees with the COO scalar
+    // oracle to ≤1e-5 relative error across random blocks and all
+    // loss/reg/rule draws.
+    prop::check("lane kernel vs scalar oracle", 40, |g| {
+        let ds = random_dataset(g);
+        let p = g.usize_in(1, 2.min(ds.m()).min(ds.d()));
+        let rp = Partition::even(ds.m(), p);
+        let cp = Partition::even(ds.d(), p);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        om.validate(&ds.x).map_err(|e| e)?;
+
+        let loss =
+            Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic, LossKind::Square]));
+        let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+        let eta = g.f64_in(0.05, 0.5);
+        let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+        let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+        let q = g.usize_in(0, p - 1);
+        let r = g.usize_in(0, p - 1);
+
+        let (rw, ra) = oracle_trajectory(&ds, &om, q, r, loss, reg, lambda, rule, 1);
+        let (lw, _, la, _) = packed_trajectory(
+            sweep_lanes,
+            om.block(q, r),
+            &ds,
+            &om,
+            q,
+            r,
+            loss,
+            reg,
+            lambda,
+            rule,
+            1,
+        );
+        for k in 0..rw.len() {
+            prop::assert_close(rw[k] as f64, lw[k] as f64, 1e-5, &format!("w[{k}]"))?;
+        }
+        for k in 0..ra.len() {
+            prop::assert_close(ra[k] as f64, la[k] as f64, 1e-5, &format!("alpha[{k}]"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lanes_match_oracle_all_combinations_with_ragged_tails() {
+    // Deterministic restatement across every loss × reg × rule, on a
+    // block whose row groups deliberately straddle LANES (lengths 1,
+    // LANES−1, LANES, LANES+3, 2·LANES+5 → full chunks, ragged tails,
+    // sentinel padding, and scalar-fallback groups all in one sweep).
+    let lens = [1usize, LANES - 1, LANES, LANES + 3, 2 * LANES + 5];
+    let d = 2 * LANES + 5;
+    let rows: Vec<Vec<(u32, f32)>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            (0..len).map(|j| (j as u32, 0.3 + 0.1 * (i + j) as f32)).collect()
+        })
+        .collect();
+    let x = dso::data::sparse::Csr::from_rows(d, rows);
+    let y: Vec<f32> = (0..lens.len()).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let ds = Dataset::new("ragged", x, y);
+    let rp = Partition::even(ds.m(), 1);
+    let cp = Partition::even(ds.d(), 1);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    om.validate(&ds.x).unwrap();
+    let b = om.block(0, 0);
+    assert!(b.has_lanes());
+    assert!(b.padded_nnz() > b.nnz(), "test must exercise sentinels");
+
+    for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+        for reg in [Regularizer::L2, Regularizer::L1] {
+            for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+                let (rw, ra) =
+                    oracle_trajectory(&ds, &om, 0, 0, loss, reg, 1e-3, rule, 1);
+                let (lw, _, la, _) = packed_trajectory(
+                    sweep_lanes,
+                    b,
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    reg,
+                    1e-3,
+                    rule,
+                    1,
+                );
+                for k in 0..rw.len() {
+                    let rel =
+                        (rw[k] - lw[k]).abs() as f64 / (rw[k].abs() as f64).max(1e-3);
+                    assert!(
+                        rel <= 1e-5,
+                        "{loss:?}/{reg:?}/{rule:?} w[{k}]: {} vs {}",
+                        rw[k],
+                        lw[k]
+                    );
+                }
+                for k in 0..ra.len() {
+                    let rel =
+                        (ra[k] - la[k]).abs() as f64 / (ra[k].abs() as f64).max(1e-3);
+                    assert!(
+                        rel <= 1e-5,
+                        "{loss:?}/{reg:?}/{rule:?} alpha[{k}]: {} vs {}",
+                        ra[k],
+                        la[k]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sentinel_padding_never_perturbs_state() {
+    // Sentinels are read-only by construction: rewriting every sentinel
+    // slot to a different (valid) column and an arbitrary value must
+    // leave the lane sweep's entire output — w, α, and both
+    // accumulators — bitwise unchanged.
+    prop::check("sentinel padding inert", 25, |g| {
+        let ds = random_dataset(g);
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        let b = om.block(0, 0);
+        if !b.has_lanes() {
+            return Ok(());
+        }
+        let mut mutated = b.clone();
+        let mut n_sentinels = 0usize;
+        for gi in 0..mutated.groups.len() {
+            let g = mutated.groups[gi];
+            let ps = g.pad_start as usize;
+            for k in ps + g.len()..ps + g.padded_len() {
+                mutated.cols[k] = mutated.n_cols - 1;
+                mutated.vals[k] = 7.5;
+                n_sentinels += 1;
+            }
+        }
+        let loss = Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic]));
+        let rule = StepRule::AdaGrad(g.f64_in(0.05, 0.5));
+        let run = |blk: &PackedBlock| {
+            packed_trajectory(
+                sweep_lanes,
+                blk,
+                &ds,
+                &om,
+                0,
+                0,
+                loss,
+                Regularizer::L2,
+                1e-3,
+                rule,
+                2,
+            )
+        };
+        prop::assert_that(
+            run(b) == run(&mutated),
+            format!("output depends on {n_sentinels} sentinel slots"),
+        )
+    });
+}
+
+#[test]
+fn sentinel_column_zero_is_never_written() {
+    // A lane-eligible row that skips column 0 entirely: the sentinels
+    // point at col 0, and the sweep must leave w[0] and its accumulator
+    // exactly at their initial values.
+    let len = LANES + 1; // one full chunk + ragged tail of 1 → 7 sentinels
+    let rows = vec![(0..len).map(|j| (j as u32 + 1, 1.0 + j as f32)).collect()];
+    let x = dso::data::sparse::Csr::from_rows(len + 1, rows);
+    let ds = Dataset::new("skip0", x, vec![1.0]);
+    let rp = Partition::even(1, 1);
+    let cp = Partition::even(len + 1, 1);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    let b = om.block(0, 0);
+    assert!(b.has_lanes());
+    assert_eq!(b.padded_nnz() - b.nnz(), LANES - 1);
+    let (w, w_acc, _, _) = packed_trajectory(
+        sweep_lanes,
+        b,
+        &ds,
+        &om,
+        0,
+        0,
+        Loss::Hinge,
+        Regularizer::L2,
+        1e-3,
+        StepRule::AdaGrad(0.3),
+        3,
+    );
+    assert_eq!(w[0], 0.01, "w[0] was touched by sentinel lanes");
+    assert_eq!(w_acc[0], 0.0, "w_acc[0] was touched by sentinel lanes");
+    // The real columns did move.
+    assert!(w[1..].iter().any(|&v| v != 0.01));
+}
+
+#[test]
+fn lanes_equal_scalar_on_blocks_without_lane_groups() {
+    // On a block with only short groups the lane kernel *is* the scalar
+    // kernel (same group loop) — bitwise, full state.
+    let ds = SparseSpec {
+        name: "short".into(),
+        m: 60,
+        d: 40,
+        nnz_per_row: 3.0,
+        zipf_s: 0.5,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 11,
+    }
+    .generate();
+    let rp = Partition::even(ds.m(), 2);
+    let cp = Partition::even(ds.d(), 2);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    for q in 0..2 {
+        for r in 0..2 {
+            let b = om.block(q, r);
+            if b.has_lanes() {
+                continue; // only interested in the fallback here
+            }
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let lanes = packed_trajectory(
+                    sweep_lanes,
+                    b,
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    Loss::Hinge,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                let scalar = packed_trajectory(
+                    sweep_packed,
+                    b,
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    Loss::Hinge,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                assert_eq!(lanes, scalar, "block ({q},{r}) {rule:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_padded_balanced_stripes_validate_and_match_oracle() {
+    // Balanced + lane_aligned column stripes: widths are lane
+    // multiples (except the last), the packed blocks over them
+    // validate, and the lane sweep still matches the oracle.
+    let ds = SparseSpec {
+        name: "balanced-lanes".into(),
+        m: 300,
+        d: 200,
+        nnz_per_row: 12.0,
+        zipf_s: 1.1,
+        label_noise: 0.02,
+        pos_frac: 0.5,
+        seed: 21,
+    }
+    .generate();
+    let p = 3;
+    let col_w: Vec<u64> = ds.x.col_counts().iter().map(|&c| c as u64).collect();
+    let cp = Partition::balanced(&col_w, p).lane_aligned(LANES);
+    for q in 0..p - 1 {
+        assert_eq!(cp.block_len(q) % LANES, 0, "stripe {q}: {:?}", cp.bounds);
+    }
+    let row_w: Vec<u64> = (0..ds.m()).map(|i| ds.x.row_nnz(i) as u64).collect();
+    let rp = Partition::balanced(&row_w, p);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    om.validate(&ds.x).unwrap();
+    for (q, r) in [(0, 0), (1, 2), (2, 1)] {
+        let (rw, ra) = oracle_trajectory(
+            &ds,
+            &om,
+            q,
+            r,
+            Loss::Hinge,
+            Regularizer::L2,
+            1e-3,
+            StepRule::AdaGrad(0.3),
+            1,
+        );
+        let (lw, _, la, _) = packed_trajectory(
+            sweep_lanes,
+            om.block(q, r),
+            &ds,
+            &om,
+            q,
+            r,
+            Loss::Hinge,
+            Regularizer::L2,
+            1e-3,
+            StepRule::AdaGrad(0.3),
+            1,
+        );
+        for k in 0..rw.len() {
+            let rel = (rw[k] - lw[k]).abs() as f64 / (rw[k].abs() as f64).max(1e-3);
+            assert!(rel <= 1e-5, "block ({q},{r}) w[{k}]: {} vs {}", rw[k], lw[k]);
+        }
+        for k in 0..ra.len() {
+            let rel = (ra[k] - la[k]).abs() as f64 / (ra[k].abs() as f64).max(1e-3);
+            assert!(rel <= 1e-5, "block ({q},{r}) alpha[{k}]: {} vs {}", ra[k], la[k]);
+        }
+    }
+}
+
+#[test]
+fn engine_lane_dispatch_threaded_equals_replay() {
+    // Dense-enough rows that the engines take the lane path on most
+    // blocks: the Lemma-2 bit-identity (threaded ≡ replay) must hold on
+    // the lane kernel exactly as on the scalar one, for even and
+    // lane-aligned balanced partitions, full and subsampled sweeps.
+    let ds = SparseSpec {
+        name: "lane-engine".into(),
+        m: 160,
+        d: 48,
+        nnz_per_row: 20.0,
+        zipf_s: 0.6,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed: 31,
+    }
+    .generate();
+    // Sanity: the default decomposition actually has lane-eligible
+    // groups, otherwise this test exercises nothing new.
+    let rp = Partition::even(ds.m(), 2);
+    let cp = Partition::even(ds.d(), 2);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp);
+    assert!((0..2).any(|q| (0..2).any(|r| om.block(q, r).has_lanes())));
+
+    for (partition, upb) in [
+        (PartitionKind::Even, 0usize),
+        (PartitionKind::Balanced, 0),
+        (PartitionKind::Even, 9),
+    ] {
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 3;
+        c.optim.eta0 = 0.3;
+        c.optim.step = StepKind::AdaGrad;
+        c.model.lambda = 1e-3;
+        c.cluster.machines = 2;
+        c.cluster.cores = 1;
+        c.cluster.partition = partition;
+        c.cluster.updates_per_block = upb;
+        c.monitor.every = 0;
+        let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+        let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+        assert_eq!(threaded.w, replayed.w, "{partition:?} upb {upb}");
+        assert_eq!(threaded.alpha, replayed.alpha, "{partition:?} upb {upb}");
+        assert_eq!(threaded.total_updates, replayed.total_updates);
+        assert!(threaded.final_gap >= -1e-6);
+    }
+}
+
+#[test]
+fn async_engine_runs_lane_path() {
+    // NOMAD-style async on dense rows: lane dispatch is exercised per
+    // block visit; invariants (feasibility, boxes, recovery) hold.
+    let ds = SparseSpec {
+        name: "lane-async".into(),
+        m: 200,
+        d: 64,
+        nnz_per_row: 18.0,
+        zipf_s: 0.5,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        seed: 41,
+    }
+    .generate();
+    let mut c = TrainConfig::default();
+    c.optim.epochs = 10;
+    c.optim.eta0 = 0.2;
+    c.model.lambda = 1e-3;
+    c.cluster.machines = 4;
+    c.cluster.cores = 1;
+    c.monitor.every = 0;
+    let r = dso::coordinator::train_dso_async(&c, &ds, None).unwrap();
+    assert!(r.final_primal.is_finite());
+    assert!(r.final_gap >= -1e-5);
+    let b = Loss::Hinge.w_bound(1e-3) as f32 * (1.0 + f32::EPSILON);
+    assert!(r.w.iter().all(|&x| (-b..=b).contains(&x)));
+    for (i, &a) in r.alpha.iter().enumerate() {
+        let beta = ds.y[i] as f64 * a as f64;
+        assert!((-1e-6..=1.0 + 1e-6).contains(&beta), "α_{i} infeasible: {beta}");
+    }
+}

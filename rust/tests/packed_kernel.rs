@@ -106,6 +106,7 @@ fn packed_trajectory(
         w_bound: loss.w_bound(lambda),
         rule,
         inv_col: &om.inv_col[r],
+        inv_col32: &om.inv_col32[r],
         inv_row: &om.inv_row[q],
         y: &y_local[q],
     };
@@ -254,6 +255,7 @@ fn prop_packed_disjoint_blocks_commute() {
                     w_bound: loss.w_bound(lambda),
                     rule,
                     inv_col: &om.inv_col[q],
+                    inv_col32: &om.inv_col32[q],
                     inv_row: &om.inv_row[q],
                     y: &y_local[q],
                 };

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
-# records BENCH_updates.json (the cross-PR perf trajectory).
+# records BENCH_updates.json and BENCH_lanes.json (the cross-PR perf
+# trajectory; plot with `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -17,15 +18,33 @@ cargo fmt --all -- --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --workspace --all-targets -- -D warnings
 
+echo "== lane kernel property suite present =="
+# The SIMD sweep's correctness story rests on tests/lane_kernel.rs; if
+# the suite is ever renamed, filtered out, or deleted, fail loudly
+# instead of letting `cargo test` pass without it.
+lane_tests="$(cargo test -q --test lane_kernel -- --list 2>/dev/null || true)"
+for required in prop_lanes_match_scalar_oracle prop_sentinel_padding_never_perturbs_state \
+    lanes_match_oracle_all_combinations_with_ragged_tails; do
+    if ! grep -q "$required" <<<"$lane_tests"; then
+        echo "ci.sh: lane kernel property test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
 echo "== cargo test -q =="
 cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
-    if [[ -f BENCH_updates.json ]]; then
-        echo "recorded BENCH_updates.json"
-    fi
+    for f in BENCH_updates.json BENCH_lanes.json; do
+        if [[ -f "$f" ]]; then
+            echo "recorded $f"
+        else
+            echo "ci.sh: bench smoke did not record $f" >&2
+            exit 1
+        fi
+    done
 fi
 
 echo "ci.sh: all green"

@@ -1,18 +1,33 @@
 #!/usr/bin/env python
-"""Render the paper-style figures from the CSVs under results/.
+"""Render the paper-style figures from the CSVs under results/, and the
+cross-PR benchmark trajectory from BENCH_*.json files.
 
-Usage: python scripts/plot_results.py [results_dir] [out_dir]
+Usage:
+    python scripts/plot_results.py [results_dir] [out_dir]
+    python scripts/plot_results.py --bench [path ...] [--out out_dir]
 
-Each experiment directory (fig2, fig3, fig4, fig5, ablation, sweeps)
-contains one history CSV per algorithm/setting with the columns
-epoch, virtual_s, wall_s, primal, dual, gap, test_error, updates,
-comm_bytes. This script draws the paper's two standard panels per
-experiment — objective vs. iterations and objective vs. time — plus
-test-error panels where recorded. Degrades gracefully (text summary)
-when matplotlib is unavailable.
+Default mode — each experiment directory (fig2, fig3, fig4, fig5,
+ablation, sweeps) contains one history CSV per algorithm/setting with
+the columns epoch, virtual_s, wall_s, primal, dual, gap, test_error,
+updates, comm_bytes. This script draws the paper's two standard panels
+per experiment — objective vs. iterations and objective vs. time — plus
+test-error panels where recorded.
+
+Bench mode (`--bench`) — each `path` is either a BENCH_<group>.json
+file (as written by the Rust bench harness under DSO_BENCH_JSON=1), or
+a directory scanned for them. A directory's immediate subdirectories
+are treated as one snapshot each (named by the subdirectory — the
+cross-PR convention is `bench_history/<pr-tag>/BENCH_*.json`); loose
+BENCH_*.json in the directory itself form the "current" snapshot. For
+every (group, benchmark) series the script prints units/sec across
+snapshots and, with matplotlib, plots one trajectory panel per group.
+
+Both modes degrade gracefully (text summary) when matplotlib is
+unavailable.
 """
 
 import csv
+import json
 import os
 import sys
 
@@ -71,17 +86,160 @@ def plot(exp, series, out_dir, plt):
     print(f"wrote {path}")
 
 
-def main():
-    results = sys.argv[1] if len(sys.argv) > 1 else "results"
-    out_dir = sys.argv[2] if len(sys.argv) > 2 else os.path.join(results, "plots")
+# ---------------------------------------------------------------------
+# Bench trajectory mode
+# ---------------------------------------------------------------------
+
+
+def load_bench_file(path):
+    """Parse one BENCH_<group>.json → (group, {name: units_per_sec})."""
+    with open(path) as f:
+        doc = json.load(f)
+    group = doc.get("group") or os.path.basename(path)[len("BENCH_") : -len(".json")]
+    rates = {}
+    for r in doc.get("results", []):
+        name = r.get("name")
+        ups = r.get("units_per_sec")
+        if ups is None:
+            median = r.get("median_s_per_iter") or 0.0
+            ups = (r.get("units_per_iter") or 1) / median if median else 0.0
+        if name:
+            rates[name] = float(ups)
+    return group, rates
+
+
+def bench_files_in(directory):
+    return sorted(
+        os.path.join(directory, fn)
+        for fn in os.listdir(directory)
+        if fn.startswith("BENCH_") and fn.endswith(".json")
+    )
+
+
+def natural_key(s):
+    """Sort embedded numbers numerically so pr10 follows pr2."""
+    import re
+
+    return [int(t) if t.isdigit() else t for t in re.split(r"(\d+)", s)]
+
+
+def collect_snapshots(paths):
+    """Return [(tag, [json paths])] in chronological presentation order:
+    historical subdir snapshots first (natural-sorted, so pr2 < pr10),
+    then any loose BENCH_*.json as the trailing "current" snapshot —
+    ratios and plots read oldest → newest."""
+    snapshots = []
+    current = []
+    for p in paths:
+        if os.path.isfile(p):
+            snapshots.append((os.path.basename(os.path.dirname(p)) or "current", [p]))
+            continue
+        if not os.path.isdir(p):
+            print(f"bench: skipping {p} (not found)")
+            continue
+        for sub in sorted(os.listdir(p), key=natural_key):
+            subdir = os.path.join(p, sub)
+            if os.path.isdir(subdir):
+                files = bench_files_in(subdir)
+                if files:
+                    snapshots.append((sub, files))
+        current.extend(bench_files_in(p))
+    if current:
+        snapshots.append(("current", current))
+    return snapshots
+
+
+def bench_mode(paths, out_dir, plt):
+    snapshots = collect_snapshots(paths or ["."])
+    if not snapshots:
+        print("bench: no BENCH_*.json found")
+        return 1
+    # One shared x-axis of snapshot tags, in collection order, so a
+    # series that is missing from some snapshots (added, renamed, or
+    # filtered between PRs) still lands on the right tick.
+    tags = []
+    # trajectory[group][bench_name] = {tag: units_per_sec}
+    trajectory = {}
+    for tag, files in snapshots:
+        if tag not in tags:
+            tags.append(tag)
+        for path in files:
+            group, rates = load_bench_file(path)
+            # Register the group even when it recorded no results (e.g.
+            # bench_runtime's non-xla stub) so a run-and-skipped group
+            # is visible rather than a silent gap.
+            trajectory.setdefault(group, {})
+            for name, ups in rates.items():
+                trajectory.setdefault(group, {}).setdefault(name, {})[tag] = ups
+
+    for group in sorted(trajectory):
+        print(f"\n== bench group: {group} (units/sec) ==")
+        if not trajectory[group]:
+            print("  (no results recorded — group ran but was skipped)")
+            continue
+        for name in sorted(trajectory[group]):
+            by_tag = trajectory[group][name]
+            pts = [(t, by_tag[t]) for t in tags if t in by_tag]
+            path_txt = "  ".join(f"{tag}:{ups:.3e}" for tag, ups in pts)
+            if len(pts) >= 2 and pts[0][1] > 0:
+                path_txt += f"  [{pts[-1][1] / pts[0][1]:.2f}x vs {pts[0][0]}]"
+            print(f"  {name:<40} {path_txt}")
+
+    if plt is None:
+        return 0
+    os.makedirs(out_dir, exist_ok=True)
+    for group, names in sorted(trajectory.items()):
+        if not names:
+            continue
+        fig, ax = plt.subplots(figsize=(8, 4.5))
+        for name, by_tag in sorted(names.items()):
+            xs = [i for i, t in enumerate(tags) if t in by_tag]
+            ys = [by_tag[tags[i]] for i in xs]
+            ax.plot(xs, ys, label=name, marker="o")
+        ax.set_xticks(range(len(tags)))
+        ax.set_xticklabels(tags, rotation=30, ha="right", fontsize=8)
+        ax.set_ylabel("units / second")
+        ax.set_yscale("log")
+        ax.set_title(f"bench trajectory: {group}")
+        ax.legend(fontsize=7)
+        fig.tight_layout()
+        path = os.path.join(out_dir, f"bench_{group}.png")
+        fig.savefig(path, dpi=120)
+        plt.close(fig)
+        print(f"wrote {path}")
+    return 0
+
+
+def import_matplotlib():
     try:
         import matplotlib
 
         matplotlib.use("Agg")
         import matplotlib.pyplot as plt
+
+        return plt
     except ImportError:
-        plt = None
         print("matplotlib not available — text summaries only")
+        return None
+
+
+def main():
+    args = sys.argv[1:]
+    if args and args[0] == "--bench":
+        rest = args[1:]
+        out_dir = "results/plots"
+        if "--out" in rest:
+            i = rest.index("--out")
+            if i + 1 >= len(rest):
+                print("usage: plot_results.py --bench [path ...] [--out out_dir]")
+                sys.exit(2)
+            out_dir = rest[i + 1]
+            rest = rest[:i] + rest[i + 2 :]
+        sys.exit(bench_mode(rest, out_dir, import_matplotlib()))
+
+    results = args[0] if len(args) > 0 else "results"
+    out_dir = args[1] if len(args) > 1 else os.path.join(results, "plots")
+    plt = import_matplotlib()
 
     if plt is not None:
         os.makedirs(out_dir, exist_ok=True)
