@@ -8,15 +8,22 @@
 //! * `lanes_*`  — the lane-major SIMD `sweep_lanes` production path
 //!                (8-wide f32 value lanes on the w side).
 //!
+//! * `affine_*` — square loss only: `sweep_lanes_affine`, the
+//!                closed-form affine-α fold (h'(α) = y − α composes,
+//!                so a chunk's α recurrence is 8 FMAs instead of 8
+//!                sequential gradient evaluations).
+//!
 //! Acceptance targets: packed ≥2× the reference, lanes ≥1.5× packed,
 //! both as median updates/sec on the same 64k-entry block. Run with
-//! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all three
-//! kernels) and `BENCH_lanes.json` (the scalar-vs-lane pair the CI
-//! smoke tracks) so the perf trajectory is recorded across PRs.
+//! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all kernels),
+//! `BENCH_lanes.json` (the scalar-vs-lane pair) and
+//! `BENCH_alpha_lanes.json` (the square-loss scalar-α-vs-affine-α
+//! pair) — the CI smoke tracks all three so the perf trajectory is
+//! recorded across PRs.
 
 use dso::coordinator::updates::{
-    sweep_block, sweep_lanes, sweep_packed, BlockState, PackedCtx, PackedState, StepRule,
-    SweepCtx,
+    sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
+    PackedState, StepRule, SweepCtx,
 };
 use dso::data::synth::SparseSpec;
 use dso::losses::{Loss, Regularizer};
@@ -28,6 +35,9 @@ fn main() {
     // Separate group for the scalar-vs-lane comparison: CI's quick
     // smoke records it as BENCH_lanes.json.
     let mut lane_runner = Runner::from_env("lanes");
+    // Separate group for the square-loss α-recurrence comparison
+    // (scalar-α lane kernel vs affine-α fold): BENCH_alpha_lanes.json.
+    let mut alpha_runner = Runner::from_env("alpha_lanes");
 
     // A realistic block: 64k entries over 4k rows x 2k cols (≈16 nnz
     // per row group — two full lane chunks on average).
@@ -53,6 +63,7 @@ fn main() {
     let block = omega.block(0, 0);
     let entries = omega.block_entries(&ds.x, 0, 0);
     let y_local = omega.stripe_labels(&ds.y);
+    let alpha_bias = omega.stripe_alpha_bias(&ds.y);
     let n = block.nnz();
     println!(
         "block: {n} entries ({} padded slots, {} lane-eligible groups)",
@@ -107,6 +118,7 @@ fn main() {
                 inv_col32: &omega.inv_col32[0],
                 inv_row: &omega.inv_row[0],
                 y: &y_local[0],
+                alpha_bias32: &alpha_bias[0],
             };
             let mut pw = vec![0.01f32; ds.d()];
             let mut pw_acc = vec![0f32; ds.d()];
@@ -144,6 +156,42 @@ fn main() {
                 }
             }
 
+            // --- Affine-α fold (square loss only) ---
+            if loss == Loss::Square {
+                let affine_name = format!("affine_sweep_{}_{rname}", loss.name());
+                let mut aw = vec![0.01f32; ds.d()];
+                let mut aw_acc = vec![0f32; ds.d()];
+                let mut aalpha = vec![0f32; ds.m()];
+                let mut aa_acc = vec![0f32; ds.m()];
+                runner.bench_units(&affine_name, n as u64, || {
+                    let mut st = PackedState {
+                        w: &mut aw,
+                        w_acc: &mut aw_acc,
+                        alpha: &mut aalpha,
+                        a_acc: &mut aa_acc,
+                    };
+                    sweep_lanes_affine(block, &pctx, &mut st)
+                });
+                // The α-recurrence pair (scalar-α lane kernel vs
+                // affine-α fold) gets its own tracked group.
+                for name in [&lanes_name, &affine_name] {
+                    if let Some(r) = runner.results.iter().find(|r| &r.name == name) {
+                        alpha_runner.results.push(r.clone());
+                    }
+                }
+                let median = |name: &str| {
+                    runner.results.iter().find(|r| r.name == name).map(|r| r.median())
+                };
+                if let (Some(lm), Some(am)) = (median(&lanes_name), median(&affine_name)) {
+                    println!(
+                        "    -> affine-α {:.1} M upd/s ({}/upd)  speedup vs scalar-α lanes {:.2}x",
+                        n as f64 / am / 1e6,
+                        human_time(am / n as f64),
+                        lm / am
+                    );
+                }
+            }
+
             // Look results up by name — a CLI bench filter may have
             // skipped any side, and results.last() would mispair.
             let median =
@@ -170,4 +218,5 @@ fn main() {
     }
     runner.finish("updates");
     lane_runner.finish("lanes");
+    alpha_runner.finish("alpha_lanes");
 }

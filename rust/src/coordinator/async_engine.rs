@@ -24,7 +24,9 @@
 //! in-flight blocks.
 
 use super::monitor::{Monitor, TrainResult};
-use super::updates::{sweep_lanes, sweep_packed, PackedCtx, PackedState, StepRule};
+use super::updates::{
+    sweep_lanes, sweep_lanes_affine, sweep_packed, PackedCtx, PackedState, StepRule,
+};
 use crate::config::{StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
@@ -69,6 +71,7 @@ pub fn train_dso_async(
     let col_part = Partition::even(train.d(), p);
     let omega = PackedBlocks::build(&train.x, &row_part, &col_part);
     let y_local = omega.stripe_labels(&train.y);
+    let alpha_bias = omega.stripe_alpha_bias(&train.y);
     let w_bound = loss.w_bound(cfg.model.lambda);
     let cost = CostModel::new(
         cfg.cluster.latency_us,
@@ -131,6 +134,7 @@ pub fn train_dso_async(
         let updates_total = &updates_total;
         let omega = &omega;
         let y_local = &y_local;
+        let alpha_bias = &alpha_bias;
         let mut handles = Vec::new();
         for (q, rx) in receivers.into_iter().enumerate() {
             let mut alpha = std::mem::take(&mut alpha_blocks[q]);
@@ -165,6 +169,7 @@ pub fn train_dso_async(
                         inv_col32: &omega.inv_col32[token.block_id],
                         inv_row: &omega.inv_row[q],
                         y: &y_local[q],
+                        alpha_bias32: &alpha_bias[q],
                     };
                     let mut st = PackedState {
                         w: &mut token.w,
@@ -172,11 +177,16 @@ pub fn train_dso_async(
                         alpha: &mut alpha,
                         a_acc: &mut a_acc,
                     };
-                    // Same size-based dispatch as the bulk-synchronous
-                    // engine: lane kernel iff the block has
-                    // lane-eligible row groups.
+                    // Same (size, loss)-based dispatch as the bulk-
+                    // synchronous engine: on lane-eligible blocks the
+                    // square loss takes the affine-α kernel, other
+                    // losses the plain lane kernel.
                     let n = if block.has_lanes() {
-                        sweep_lanes(block, &ctx, &mut st)
+                        if loss.affine_alpha() {
+                            sweep_lanes_affine(block, &ctx, &mut st)
+                        } else {
+                            sweep_lanes(block, &ctx, &mut st)
+                        }
                     } else {
                         sweep_packed(block, &ctx, &mut st)
                     };

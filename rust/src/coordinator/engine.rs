@@ -16,7 +16,8 @@
 
 use super::monitor::{Monitor, TrainResult};
 use super::updates::{
-    sweep_lanes, sweep_packed, sweep_packed_sampled, PackedCtx, PackedState, StepRule,
+    sweep_lanes, sweep_lanes_affine, sweep_packed, sweep_packed_sampled, PackedCtx,
+    PackedState, StepRule,
 };
 use crate::config::{ExecMode, StepKind, TrainConfig};
 use crate::data::Dataset;
@@ -57,6 +58,9 @@ pub struct DsoSetup {
     pub omega: PackedBlocks,
     /// Per row-stripe label tables (f64) for the packed kernel.
     pub y_local: Vec<Vec<f64>>,
+    /// Per row-stripe (y·1/(m|Ω_i|)) as f32 — the square loss's affine
+    /// α-bias precompute consumed by `sweep_lanes_affine`.
+    pub alpha_bias: Vec<Vec<f32>>,
     pub schedule: RingSchedule,
     pub p: usize,
     pub w_bound: f64,
@@ -77,6 +81,7 @@ impl DsoSetup {
             omega = omega.with_sampling_tables();
         }
         let y_local = omega.stripe_labels(&train.y);
+        let alpha_bias = omega.stripe_alpha_bias(&train.y);
         let cost = CostModel::new(
             cfg.cluster.latency_us,
             cfg.cluster.bandwidth_mbps,
@@ -86,6 +91,7 @@ impl DsoSetup {
             problem,
             omega,
             y_local,
+            alpha_bias,
             schedule: RingSchedule::new(p),
             p,
             w_bound: loss.w_bound(cfg.model.lambda),
@@ -350,6 +356,7 @@ fn visit_block(
         inv_col32: &setup.omega.inv_col32[slot.block_id],
         inv_row: &setup.omega.inv_row[q],
         y: &setup.y_local[q],
+        alpha_bias32: &setup.alpha_bias[q],
     };
     let mut st = PackedState {
         w: &mut slot.w,
@@ -357,13 +364,18 @@ fn visit_block(
         alpha: &mut slot.alpha,
         a_acc: &mut slot.a_acc,
     };
-    // Size-based dispatch: the SIMD lane kernel when the block has
-    // lane-eligible row groups, the scalar kernel for short-group
-    // blocks and the subsampled path.
+    // (Size, loss)-based dispatch: on blocks with lane-eligible row
+    // groups, losses with an affine dual (square) take the closed-form
+    // α kernel and the rest the plain SIMD lane kernel; short-group
+    // blocks and the subsampled path stay on the scalar kernels.
     if sampled {
         sweep_packed_sampled(block, &slot.scratch, &ctx, &mut st)
     } else if block.has_lanes() {
-        sweep_lanes(block, &ctx, &mut st)
+        if ctx.loss.affine_alpha() {
+            sweep_lanes_affine(block, &ctx, &mut st)
+        } else {
+            sweep_lanes(block, &ctx, &mut st)
+        }
     } else {
         sweep_packed(block, &ctx, &mut st)
     }

@@ -17,7 +17,31 @@
 //! either the epoch-level η_t = η₀/√t of Algorithm 1 or per-coordinate
 //! AdaGrad (App. B); Π_B is the w box, Π_A the dual feasible set.
 //!
-//! ## Three implementations
+//! ## Four implementations
+//!
+//! * [`sweep_lanes_affine`] — the square-loss specialization of the
+//!   lane kernel. For the square loss h'(α) = y − α is **affine in α**
+//!   with an identity projection ([`AffineLossK`]), so one saddle step
+//!   on α is the affine map α ← a·α + b with a = 1 − η·hr and
+//!   b = η·(y·hr − w_j·x) — and a chunk's 8 sequential steps *compose*
+//!   in closed form. The kernel evaluates the α-independent
+//!   coefficients in 8-wide f32 lanes (b's `y·hr` factor comes from
+//!   the `PackedBlocks::stripe_alpha_bias` precompute) and folds the
+//!   chunk into α_i with **one FMA per entry**
+//!   (`StepK::alpha_chunk_affine`) instead of 8 full
+//!   gradient/step/projection evaluations; AdaGrad keeps its serial η
+//!   but consumes the same precomputed coefficient lanes. The w side
+//!   is identical to [`sweep_lanes`]. Hinge/logistic
+//!   (whose per-entry projection is load-bearing) fall back to
+//!   `sweep_lanes` bit for bit, as do short groups and the sampled
+//!   path — the engines only route square-loss lane blocks here.
+//!
+//!   **Numerics**: tolerance-equivalent (≤1e-5 relative per sweep,
+//!   property-tested in `tests/alpha_lane.rs`), *not* bit-identical, to
+//!   the scalar α recurrence: the coefficients round `y·hr − w·x`
+//!   through f32, the running α is not rounded through f32 between
+//!   entries, and the fixed-step fold associates η differently
+//!   (a·α + η·c vs α + η·(c − hr·α)).
 //!
 //! * [`sweep_lanes`] — the SIMD production kernel over lane-major
 //!   [`PackedBlock`](crate::partition::omega::PackedBlock)s (§Perf).
@@ -73,7 +97,9 @@
 //! between the threaded engine and `run_replay`, which dispatch to the
 //! same kernel — is unaffected.
 
-use crate::losses::kernel::{HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK};
+use crate::losses::kernel::{
+    AffineLossK, HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK,
+};
 use crate::losses::{Loss, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
 use crate::partition::omega::{Entry, PackedBlock, LANES};
@@ -138,6 +164,11 @@ pub struct PackedCtx<'a> {
     pub inv_row: &'a [f64],
     /// Labels per block-local row.
     pub y: &'a [f64],
+    /// (y_i·1/(m·|Ω_i|)) as f32 per block-local row — the precomputed
+    /// chunk-invariant bias of the square loss's affine α recurrence
+    /// (`partition::omega::PackedBlocks::stripe_alpha_bias`), read
+    /// only by [`sweep_lanes_affine`].
+    pub alpha_bias32: &'a [f32],
 }
 
 /// Mutable stripe-local parameter views for the packed kernels. No
@@ -165,6 +196,29 @@ trait StepK: Copy {
     fn eta(self, acc: &mut f32, g: f64) -> f64;
 
     fn eta_lane(self, acc: &mut Lane, g: &Lane) -> Lane;
+
+    /// Fold one LANES-chunk of the **affine** α recurrence
+    /// ([`AffineLossK`] losses, i.e. square): `cv[k]` holds the
+    /// α-independent part of g_α at entry k (computed 8-wide by the
+    /// caller), `slope_hr = DUAL_SLOPE·hr` its chunk-invariant slope,
+    /// so g_α = cv[k] + slope_hr·α. Writes each real entry's
+    /// *pre-update* α — the value its w-side gradient must see — into
+    /// `av[..n]`, updates the row's AdaGrad accumulator `acc` when the
+    /// rule uses one, and returns α after the chunk.
+    ///
+    /// The fixed rule composes the whole step into α ← a·α + b_k (one
+    /// f64 FMA per entry — the chunk's entire serial dependency chain);
+    /// AdaGrad's η depends on g_α itself, so it keeps a short serial
+    /// loop but still consumes the precomputed coefficient lanes.
+    fn alpha_chunk_affine(
+        self,
+        acc: &mut f32,
+        ai: f64,
+        cv: &Lane,
+        n: usize,
+        slope_hr: f64,
+        av: &mut Lane,
+    ) -> f64;
 }
 
 #[derive(Clone, Copy)]
@@ -181,6 +235,32 @@ impl StepK for FixedStep {
     #[inline(always)]
     fn eta_lane(self, _acc: &mut Lane, _g: &Lane) -> Lane {
         [self.0 as f32; LANES]
+    }
+
+    /// Closed-form fold: with constant η the affine per-entry maps
+    /// compose, so the chunk is α ← a·α + b_k with a = 1 + η·slope_hr
+    /// hoisted out and b_k = η·cv[k]. The b lanes widen to f64 outside
+    /// the dependency chain; the chain itself is one FMA per entry.
+    #[inline(always)]
+    fn alpha_chunk_affine(
+        self,
+        _acc: &mut f32,
+        mut ai: f64,
+        cv: &Lane,
+        n: usize,
+        slope_hr: f64,
+        av: &mut Lane,
+    ) -> f64 {
+        let a = 1.0 + self.0 * slope_hr;
+        let mut bv = [0f64; LANES];
+        for k in 0..LANES {
+            bv[k] = self.0 * cv[k] as f64;
+        }
+        for k in 0..n {
+            av[k] = ai as f32;
+            ai = a * ai + bv[k];
+        }
+        ai
     }
 }
 
@@ -214,6 +294,30 @@ impl StepK for AdaGradStep {
         }
         out
     }
+
+    /// AdaGrad's η is a function of g_α, so the per-entry maps do not
+    /// compose into one affine map; the serial loop stays, but each
+    /// iteration is one FMA for g_α plus the accumulate/√/divide —
+    /// the dual-gradient/projection evaluations are already folded
+    /// into the precomputed `cv` lanes.
+    #[inline(always)]
+    fn alpha_chunk_affine(
+        self,
+        acc: &mut f32,
+        mut ai: f64,
+        cv: &Lane,
+        n: usize,
+        slope_hr: f64,
+        av: &mut Lane,
+    ) -> f64 {
+        for k in 0..n {
+            av[k] = ai as f32;
+            let ga = cv[k] as f64 + slope_hr * ai;
+            let eta = self.eta(acc, ga);
+            ai += eta * ga;
+        }
+        ai
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -240,6 +344,7 @@ fn check_packed_bounds(block: &PackedBlock, ctx: &PackedCtx, st: &PackedState) {
     assert!(block.n_cols as usize <= ctx.inv_col32.len());
     assert!(block.n_rows as usize <= ctx.inv_row.len());
     assert!(block.n_rows as usize <= ctx.y.len());
+    assert!(block.n_rows as usize <= ctx.alpha_bias32.len());
     assert!(block.vals.len() == block.cols.len());
     let mut next = 0u32;
     let mut pnext = 0usize;
@@ -425,6 +530,88 @@ fn dispatch_lanes<S: StepK>(
     }
 }
 
+/// Full-width gather of one LANES chunk starting at physical `base`:
+/// (column ids, w values, x/m values, 1/|Ω̄_j|). Sentinel lanes (past
+/// a chunk's real length) read col 0 / value 0 — everything they feed
+/// is computed speculatively and never stored. Shared by the plain and
+/// affine lane monos.
+///
+/// # Safety argument
+/// Caller runs `check_packed_bounds` first, so every stored column —
+/// sentinels included — is a validated in-stripe index and
+/// `base + LANES` lies within the group's physical lane region.
+#[inline(always)]
+fn gather_chunk(
+    cols: &[u32],
+    vals: &[f32],
+    base: usize,
+    ctx: &PackedCtx,
+    st: &PackedState,
+) -> ([usize; LANES], Lane, Lane, Lane) {
+    let mut lj = [0usize; LANES];
+    let mut wv: Lane = [0.0; LANES];
+    let mut xv: Lane = [0.0; LANES];
+    let mut iv: Lane = [0.0; LANES];
+    for k in 0..LANES {
+        unsafe {
+            let c = *cols.get_unchecked(base + k) as usize;
+            debug_assert!(c < st.w.len());
+            lj[k] = c;
+            wv[k] = *st.w.get_unchecked(c);
+            xv[k] = *vals.get_unchecked(base + k);
+            iv[k] = *ctx.inv_col32.get_unchecked(c);
+        }
+    }
+    (lj, wv, xv, iv)
+}
+
+/// The w side of one lane chunk — ∇φ, gradient FMA, step rule, box
+/// clamp, all branch-free full-width f32 — followed by the scatter of
+/// the first `n` (real) lanes only: sentinels are never written
+/// through, so padding cannot perturb state. `av[k]` is the α entry
+/// k's gradient must see (its row's pre-update α). Shared verbatim by
+/// [`sweep_lanes`] and [`sweep_lanes_affine`], whose chunks differ
+/// only in how the α recurrence between gather and w side is computed.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn w_side_chunk<R: RegK, S: StepK>(
+    step: S,
+    lj: &[usize; LANES],
+    wv: &Lane,
+    xv: &Lane,
+    iv: &Lane,
+    av: &Lane,
+    n: usize,
+    lam32: f32,
+    b32: f32,
+    st: &mut PackedState,
+) {
+    let rv = R::grad_lane(wv);
+    let mut gw: Lane = [0.0; LANES];
+    for k in 0..LANES {
+        gw[k] = lam32 * rv[k] * iv[k] - av[k] * xv[k];
+    }
+    let mut accv: Lane = [0.0; LANES];
+    if S::USES_ACC {
+        for k in 0..LANES {
+            accv[k] = unsafe { *st.w_acc.get_unchecked(lj[k]) };
+        }
+    }
+    let etav = step.eta_lane(&mut accv, &gw);
+    let mut wn: Lane = [0.0; LANES];
+    for k in 0..LANES {
+        wn[k] = (wv[k] - etav[k] * gw[k]).clamp(-b32, b32);
+    }
+    for k in 0..n {
+        unsafe {
+            *st.w.get_unchecked_mut(lj[k]) = wn[k];
+            if S::USES_ACC {
+                *st.w_acc.get_unchecked_mut(lj[k]) = accv[k];
+            }
+        }
+    }
+}
+
 fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
@@ -470,23 +657,7 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
             let mut rem = len;
             while rem > 0 {
                 let n = rem.min(LANES);
-                // Full-width loads. Sentinel lanes (k ≥ n, only in the
-                // last chunk) gather col 0 / value 0; everything they
-                // feed is computed speculatively and never stored.
-                let mut lj = [0usize; LANES];
-                let mut wv: Lane = [0.0; LANES];
-                let mut xv: Lane = [0.0; LANES];
-                let mut iv: Lane = [0.0; LANES];
-                for k in 0..LANES {
-                    unsafe {
-                        let c = *cols.get_unchecked(base + k) as usize;
-                        debug_assert!(c < st.w.len());
-                        lj[k] = c;
-                        wv[k] = *st.w.get_unchecked(c);
-                        xv[k] = *vals.get_unchecked(base + k);
-                        iv[k] = *ctx.inv_col32.get_unchecked(c);
-                    }
-                }
+                let (lj, wv, xv, iv) = gather_chunk(cols, vals, base, ctx, st);
                 // α recurrence — scalar f64 over the real lanes only
                 // (all entries of the chunk update the same α_i, so
                 // this is inherently serial; the math matches
@@ -504,34 +675,141 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
                 for lane in av.iter_mut().skip(n) {
                     *lane = tail;
                 }
-                // w side — branch-free full-width f32: ∇φ, gradient
-                // FMA, step rule, box clamp.
-                let rv = R::grad_lane(&wv);
-                let mut gw: Lane = [0.0; LANES];
+                w_side_chunk::<R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
+                base += LANES;
+                rem -= n;
+            }
+        }
+        unsafe {
+            *st.alpha.get_unchecked_mut(li) = ai as f32;
+            *st.a_acc.get_unchecked_mut(li) = aa;
+        }
+    }
+    block.nnz()
+}
+
+// ---------------------------------------------------------------------
+// Affine-α SIMD lane kernel (square loss)
+// ---------------------------------------------------------------------
+
+/// Sweep every real entry of a lane-major packed block once, in storage
+/// order, with the **closed-form affine α recurrence** for losses whose
+/// dual gradient is affine in α with an identity projection
+/// ([`AffineLossK`] — the square loss). The w side is identical to
+/// [`sweep_lanes`]; the α side of each chunk folds via
+/// [`StepK::alpha_chunk_affine`] instead of 8 sequential gradient
+/// evaluations. Tolerance-equivalent (≤1e-5 relative per sweep,
+/// property-tested in `tests/alpha_lane.rs`) to the scalar recurrence,
+/// not bit-identical — see the module docs for the exact divergence
+/// points.
+///
+/// Non-affine losses (hinge, logistic) delegate to [`sweep_lanes`] bit
+/// for bit, so calling this entry point is always correct; the engines
+/// nevertheless dispatch it only for `Loss::affine_alpha()` blocks to
+/// keep their routing explicit. Groups shorter than `LANES` run the
+/// scalar group loop (bit-identical to [`sweep_packed`]). Returns
+/// #updates (sentinel padding excluded).
+pub fn sweep_lanes_affine(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
+    match ctx.rule {
+        StepRule::Fixed(eta) => dispatch_lanes_affine(block, ctx, st, FixedStep(eta)),
+        StepRule::AdaGrad(eta0) => dispatch_lanes_affine(block, ctx, st, AdaGradStep(eta0)),
+    }
+}
+
+/// Resolve (loss, reg) once per sweep. Only the square loss has an
+/// affine dual; hinge/logistic degrade to the plain lane dispatch
+/// (their per-entry projection is load-bearing), bitwise identical to
+/// calling [`sweep_lanes`] directly.
+fn dispatch_lanes_affine<S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    match (ctx.loss, ctx.reg) {
+        (Loss::Square, Regularizer::L2) => {
+            sweep_affine_mono::<SquareK, L2K, S>(block, ctx, st, step)
+        }
+        (Loss::Square, Regularizer::L1) => {
+            sweep_affine_mono::<SquareK, L1K, S>(block, ctx, st, step)
+        }
+        _ => dispatch_lanes(block, ctx, st, step),
+    }
+}
+
+fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+    step: S,
+) -> usize {
+    check_packed_bounds(block, ctx, st);
+    let b32 = ctx.w_bound as f32;
+    let lam32 = ctx.lambda as f32;
+    let cols = &block.cols[..];
+    let vals = &block.vals[..];
+    for g in &block.groups {
+        let li = g.li as usize;
+        debug_assert!(li < st.alpha.len());
+        let (y, hr, mut ai, mut aa) = unsafe {
+            (
+                *ctx.y.get_unchecked(li),
+                *ctx.inv_row.get_unchecked(li),
+                *st.alpha.get_unchecked(li) as f64,
+                *st.a_acc.get_unchecked(li),
+            )
+        };
+        let len = g.len();
+        if len < LANES {
+            // Short group: scalar kernel body, bit-identical to
+            // `sweep_packed` (exactly as in `sweep_lanes`).
+            let s = g.pad_start as usize;
+            sweep_group_scalar::<L, R, S>(
+                cols,
+                vals,
+                s..s + len,
+                ctx,
+                st,
+                step,
+                y,
+                hr,
+                &mut ai,
+                &mut aa,
+            );
+        } else {
+            // Row-invariant affine pieces, hoisted once per group:
+            // g_α at entry k is cv[k] + slope_hr·α with
+            // cv[k] = bias·hr − w_k·x_k. The bias·hr factor comes from
+            // the `stripe_alpha_bias` precompute; the debug_assert
+            // pins the table to the trait definition it caches.
+            let bias_hr = unsafe { *ctx.alpha_bias32.get_unchecked(li) };
+            debug_assert_eq!(bias_hr, (L::dual_bias(y) * hr) as f32);
+            let slope_hr = L::DUAL_SLOPE * hr;
+            let mut base = g.pad_start as usize;
+            let mut rem = len;
+            while rem > 0 {
+                let n = rem.min(LANES);
+                let (lj, wv, xv, iv) = gather_chunk(cols, vals, base, ctx, st);
+                // Per-entry affine coefficients in 8-wide f32 — the
+                // α-independent part of g_α. This replaces the
+                // sequential dual-gradient evaluations of
+                // `sweep_lanes`; the serial remainder is the one-FMA-
+                // per-entry fold below.
+                let mut cv: Lane = [0.0; LANES];
                 for k in 0..LANES {
-                    gw[k] = lam32 * rv[k] * iv[k] - av[k] * xv[k];
+                    cv[k] = bias_hr - wv[k] * xv[k];
                 }
-                let mut accv: Lane = [0.0; LANES];
-                if S::USES_ACC {
-                    for k in 0..LANES {
-                        accv[k] = unsafe { *st.w_acc.get_unchecked(lj[k]) };
-                    }
+                // Fold the chunk's composed affine map into α_i. `av`
+                // receives each real entry's pre-update α (what its w
+                // gradient must see); tail lanes get the post-chunk α
+                // (they are sentinels — computed, never stored).
+                let mut av: Lane = [0.0; LANES];
+                ai = step.alpha_chunk_affine(&mut aa, ai, &cv, n, slope_hr, &mut av);
+                let tail = ai as f32;
+                for lane in av.iter_mut().skip(n) {
+                    *lane = tail;
                 }
-                let etav = step.eta_lane(&mut accv, &gw);
-                let mut wn: Lane = [0.0; LANES];
-                for k in 0..LANES {
-                    wn[k] = (wv[k] - etav[k] * gw[k]).clamp(-b32, b32);
-                }
-                // Scatter the real lanes only: sentinels are never
-                // written through, so padding cannot perturb state.
-                for k in 0..n {
-                    unsafe {
-                        *st.w.get_unchecked_mut(lj[k]) = wn[k];
-                        if S::USES_ACC {
-                            *st.w_acc.get_unchecked_mut(lj[k]) = accv[k];
-                        }
-                    }
-                }
+                w_side_chunk::<R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
                 base += LANES;
                 rem -= n;
             }
@@ -718,6 +996,7 @@ mod tests {
         inv_col32: Vec<f32>,
         inv_row: Vec<f64>,
         y: Vec<f64>,
+        alpha_bias32: Vec<f32>,
     }
 
     fn pack(entries: &[Entry], row_counts: &[u32], col_counts: &[u32], y: &[f32]) -> Packed {
@@ -743,7 +1022,10 @@ mod tests {
         let inv_col32: Vec<f32> = inv_col.iter().map(|&v| v as f32).collect();
         let inv_row: Vec<f64> = row_counts.iter().map(|&c| 1.0 / (m * c as f64)).collect();
         let yl: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-        Packed { b, inv_col, inv_col32, inv_row, y: yl }
+        // Same definition as `PackedBlocks::stripe_alpha_bias`.
+        let alpha_bias32: Vec<f32> =
+            inv_row.iter().zip(y).map(|(&hr, &yv)| (yv as f64 * hr) as f32).collect();
+        Packed { b, inv_col, inv_col32, inv_row, y: yl, alpha_bias32 }
     }
 
     fn packed_ctx<'a>(c: &SweepCtx, p: &'a Packed) -> PackedCtx<'a> {
@@ -757,6 +1039,7 @@ mod tests {
             inv_col32: &p.inv_col32,
             inv_row: &p.inv_row,
             y: &p.y,
+            alpha_bias32: &p.alpha_bias32,
         }
     }
 
@@ -1321,5 +1604,169 @@ mod tests {
         sweep_packed(&p.b, &pc, &mut st);
         // g_α = (y − α)/m − wx/m = 3/1 − 0 = 3 → α = 3 (no clamp).
         assert!((alpha[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn affine_falls_back_bitwise_on_short_groups_and_nonaffine_losses() {
+        // Two fallback contracts of `sweep_lanes_affine`: (a) on a
+        // block with only short groups it *is* the scalar kernel for
+        // any loss; (b) on lane-eligible blocks with a non-affine loss
+        // it *is* `sweep_lanes`. Both bitwise, full state.
+        let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize,
+                   blk: &PackedBlock,
+                   pc: &PackedCtx,
+                   nw: usize,
+                   na: usize| {
+            let mut w = vec![0.1f32; nw];
+            let mut wa = vec![0f32; nw];
+            let mut a = vec![0.05f32; na];
+            let mut aa = vec![0f32; na];
+            for _ in 0..3 {
+                let mut st = PackedState {
+                    w: &mut w,
+                    w_acc: &mut wa,
+                    alpha: &mut a,
+                    a_acc: &mut aa,
+                };
+                kernel(blk, pc, &mut st);
+            }
+            (w, a, wa, aa)
+        };
+        // (a) short groups, square loss.
+        let row_counts = [2u32, 2];
+        let col_counts = [2u32, 2];
+        let y = [1.0f32, -1.0];
+        let entries = [
+            Entry { i: 0, j: 0, x: 1.0 },
+            Entry { i: 0, j: 1, x: 0.5 },
+            Entry { i: 1, j: 0, x: -1.0 },
+            Entry { i: 1, j: 1, x: 2.0 },
+        ];
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(!p.b.has_lanes());
+        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+            let mut c = ctx(&row_counts, &col_counts, &y, rule);
+            c.loss = Loss::Square;
+            let pc = packed_ctx(&c, &p);
+            assert_eq!(
+                run(sweep_lanes_affine, &p.b, &pc, 2, 2),
+                run(sweep_packed, &p.b, &pc, 2, 2),
+                "short-group square {rule:?}"
+            );
+        }
+        // (b) lane-eligible block, hinge + logistic.
+        let row_counts = [12u32];
+        let col_counts = [2u32; 12];
+        let y = [1.0f32];
+        let entries: Vec<Entry> =
+            (0..12).map(|j| Entry { i: 0, j, x: 0.5 + 0.25 * j as f32 }).collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                c.loss = loss;
+                let pc = packed_ctx(&c, &p);
+                assert_eq!(
+                    run(sweep_lanes_affine, &p.b, &pc, 12, 1),
+                    run(sweep_lanes, &p.b, &pc, 12, 1),
+                    "lane-block {loss:?} {rule:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_long_group_matches_scalar_within_tolerance() {
+        // Square loss on a 12-entry row group (1 full chunk + ragged
+        // tail): the affine fold must agree with the scalar recurrence
+        // to ≤1e-5 relative per sweep, both reg and both step rules.
+        let row_counts = [12u32];
+        let col_counts = [2u32; 12];
+        let y = [2.0f32];
+        let entries: Vec<Entry> =
+            (0..12).map(|j| Entry { i: 0, j, x: 0.5 + 0.25 * j as f32 }).collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        for reg in [Regularizer::L2, Regularizer::L1] {
+            for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+                let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                c.loss = Loss::Square;
+                c.reg = reg;
+                c.m = 1.0;
+                c.w_bound = Loss::Square.w_bound(c.lambda);
+                let pc = packed_ctx(&c, &p);
+                let run = |affine: bool| {
+                    let mut w = [0.01f32; 12];
+                    let mut wa = [0f32; 12];
+                    let mut a = [0f32];
+                    let mut aa = [0f32];
+                    let mut st = PackedState {
+                        w: &mut w,
+                        w_acc: &mut wa,
+                        alpha: &mut a,
+                        a_acc: &mut aa,
+                    };
+                    if affine {
+                        sweep_lanes_affine(&p.b, &pc, &mut st);
+                    } else {
+                        sweep_packed(&p.b, &pc, &mut st);
+                    }
+                    (w, a)
+                };
+                let (aw, aa_) = run(true);
+                let (sw, sa) = run(false);
+                for k in 0..12 {
+                    let rel = (aw[k] - sw[k]).abs() as f64 / (sw[k].abs() as f64).max(1e-3);
+                    assert!(rel <= 1e-5, "{reg:?}/{rule:?} w[{k}]: {} vs {}", aw[k], sw[k]);
+                }
+                let rel = (aa_[0] - sa[0]).abs() as f64 / (sa[0].abs() as f64).max(1e-3);
+                assert!(rel <= 1e-5, "{reg:?}/{rule:?} α: {} vs {}", aa_[0], sa[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn affine_fixed_fold_composes_the_expected_map() {
+        // Validate the closed form itself: one full chunk of the square
+        // loss under a fixed step, against an independent f64 replay of
+        // α ← (1 − η·hr)·α + η·(y·hr − w_k·x_k) (w side frozen at the
+        // chunk's gathered values, exactly like the kernel).
+        let row_counts = [8u32];
+        let col_counts = [1u32; 8];
+        let y = [1.5f32];
+        let entries: Vec<Entry> =
+            (0..8).map(|j| Entry { i: 0, j, x: 1.0 + 0.5 * j as f32 }).collect();
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        let eta = 0.3;
+        let mut c = ctx(&row_counts, &col_counts, &y, StepRule::Fixed(eta));
+        c.loss = Loss::Square;
+        c.m = 1.0;
+        c.w_bound = Loss::Square.w_bound(c.lambda);
+        let pc = packed_ctx(&c, &p);
+        let w0 = 0.02f32;
+        let a0 = 0.4f32;
+        let mut w = [w0; 8];
+        let mut wa = [0f32; 8];
+        let mut a = [a0];
+        let mut aa = [0f32];
+        let mut st =
+            PackedState { w: &mut w, w_acc: &mut wa, alpha: &mut a, a_acc: &mut aa };
+        sweep_lanes_affine(&p.b, &pc, &mut st);
+        // Independent replay (hr = 1/(m·|Ω_0|) = 1/8).
+        let hr = 1.0 / 8.0;
+        let acoef = 1.0 - eta * hr;
+        let mut ai = a0 as f64;
+        for k in 0..8 {
+            let xm = p.b.vals[k] as f64; // x/m as stored
+            let b = eta * ((y[0] as f64 * hr) as f32 as f64 - (w0 as f64 * xm) as f32 as f64);
+            ai = acoef * ai + b;
+        }
+        assert!(
+            (a[0] as f64 - ai).abs() <= 1e-6 * ai.abs().max(1.0),
+            "α fold {} vs replay {ai}",
+            a[0]
+        );
     }
 }

@@ -36,9 +36,18 @@ pub type Lane = [f32; LANES];
 /// No lane-batched methods: the α recurrence is sequential within a
 /// row group (every entry of a group updates the *same* α_i), so the
 /// lane kernel keeps the loss math scalar — see
-/// `coordinator::updates::sweep_lanes`.
+/// `coordinator::updates::sweep_lanes`. Losses whose recurrence *does*
+/// have exploitable structure additionally implement [`AffineLossK`]
+/// and advertise it through [`LossK::AFFINE_ALPHA`].
 pub trait LossK: Copy + Send + Sync + 'static {
     const LOSS: Loss;
+
+    /// Whether this loss implements [`AffineLossK`] — i.e. h'(α, y) is
+    /// affine in α *and* the dual projection is the identity, so the α
+    /// recurrence of a lane chunk composes into a closed-form affine
+    /// map. The engines' runtime mirror is [`Loss::affine_alpha`];
+    /// `kernels_match_enum_dispatch` pins the two together.
+    const AFFINE_ALPHA: bool = false;
 
     #[inline(always)]
     fn dual_grad(alpha: f64, y: f64) -> f64 {
@@ -66,6 +75,51 @@ impl LossK for LogisticK {
 }
 impl LossK for SquareK {
     const LOSS: Loss = Loss::Square;
+    const AFFINE_ALPHA: bool = true;
+}
+
+/// Capability trait for losses whose α side of update (8) is an
+/// **affine map**: the dual gradient decomposes as
+///
+/// ```text
+///     h'(α, y) = dual_bias(y) + DUAL_SLOPE · α
+/// ```
+///
+/// with a constant slope, *and* the dual feasible set is all of ℝ
+/// (`project` is the identity), so one saddle step on α is
+///
+/// ```text
+///     α ← α + η·g_α = (1 + η·DUAL_SLOPE·hr)·α + η·(dual_bias(y)·hr − w·x)
+/// ```
+///
+/// (hr = 1/(m|Ω_i|)) — an affine map α ← a·α + b whose composition
+/// over a lane chunk has a closed form, exploited by
+/// `coordinator::updates::sweep_lanes_affine`: the α-independent
+/// coefficients
+/// are evaluated in 8-wide f32 lanes and the chunk folds into α with
+/// one FMA per entry, instead of 8 sequential gradient/projection
+/// evaluations.
+///
+/// Only the square loss qualifies: h'(α) = y − α (slope −1, bias y,
+/// α ∈ ℝ). Hinge and logistic have constant/transcendental duals whose
+/// per-entry *projection* is load-bearing, so they keep the sequential
+/// scalar recurrence of `sweep_lanes`.
+pub trait AffineLossK: LossK {
+    /// ∂h'/∂α — the constant slope of the affine dual gradient.
+    const DUAL_SLOPE: f64;
+
+    /// The α-independent part of h'(α, y).
+    fn dual_bias(y: f64) -> f64;
+}
+
+impl AffineLossK for SquareK {
+    const DUAL_SLOPE: f64 = -1.0;
+
+    /// Square loss: h'(α, y) = y − α.
+    #[inline(always)]
+    fn dual_bias(y: f64) -> f64 {
+        y
+    }
 }
 
 /// Regularizer selected at compile time. `grad` matches
@@ -148,6 +202,28 @@ mod tests {
         for &w in &[-1.5, 0.0, 0.4] {
             assert_eq!(L1K::grad(w), Regularizer::L1.grad(w));
             assert_eq!(L2K::grad(w), Regularizer::L2.grad(w));
+        }
+        // The compile-time capability flag and its runtime mirror must
+        // agree, or the engines would dispatch the wrong kernel.
+        assert_eq!(HingeK::AFFINE_ALPHA, Loss::Hinge.affine_alpha());
+        assert_eq!(LogisticK::AFFINE_ALPHA, Loss::Logistic.affine_alpha());
+        assert_eq!(SquareK::AFFINE_ALPHA, Loss::Square.affine_alpha());
+    }
+
+    /// The [`AffineLossK`] contract for the square loss: the bias/slope
+    /// decomposition reproduces h'(α, y) exactly, and the projection is
+    /// the identity (both bitwise — the affine kernel relies on them).
+    #[test]
+    fn square_affine_decomposition_matches_dual_grad() {
+        for &y in &[1.0, -1.0, 3.0, -0.25] {
+            for &a in &[-7.5, -1.0, -1e-3, 0.0, 0.4, 2.0, 100.0] {
+                assert_eq!(
+                    SquareK::dual_bias(y) + SquareK::DUAL_SLOPE * a,
+                    Loss::Square.dual_utility_grad(a, y),
+                    "y={y} α={a}"
+                );
+                assert_eq!(SquareK::project(a, y), a, "projection must be identity");
+            }
         }
     }
 

@@ -163,6 +163,19 @@ impl Loss {
         }
     }
 
+    /// Whether the α side of update (8) is an affine map for this loss
+    /// — h'(α) affine in α with an identity projection — so the lane
+    /// engines may dispatch the closed-form α kernel
+    /// (`coordinator::updates::sweep_lanes_affine`). Runtime mirror of
+    /// the compile-time `losses::kernel::LossK::AFFINE_ALPHA` /
+    /// [`losses::kernel::AffineLossK`](crate::losses::AffineLossK)
+    /// capability (tied together by test). True only for the square
+    /// loss: h'(α) = y − α, α ∈ ℝ.
+    #[inline]
+    pub fn affine_alpha(self) -> bool {
+        matches!(self, Loss::Square)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Loss::Hinge => "hinge",

@@ -6,7 +6,7 @@ pub mod loss;
 pub mod objective;
 pub mod regularizer;
 
-pub use kernel::{HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK};
+pub use kernel::{AffineLossK, HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK};
 pub use loss::Loss;
 pub use objective::Problem;
 pub use regularizer::Regularizer;

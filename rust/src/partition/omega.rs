@@ -430,6 +430,35 @@ impl PackedBlocks {
             .collect()
     }
 
+    /// Per row-stripe **affine-α bias coefficients** for the square
+    /// loss, in f32: `bias_hr[q][li] = (y_i · 1/(m·|Ω_i|)) as f32`.
+    ///
+    /// The square loss has h'(α, y) = y − α (affine in α with identity
+    /// projection — `losses::kernel::AffineLossK`), so the α side of
+    /// update (8) at entry (i, j) is α ← a·α + b with the α-independent
+    /// gradient part `b/η = y_i·hr − w_j·x_ij`. Its first term —
+    /// `dual_bias(y_i)·hr`, chunk-invariant *and* sweep-invariant — is
+    /// hoisted here, computed once per run next to the reciprocal
+    /// tables instead of once per lane chunk inside
+    /// `coordinator::updates::sweep_lanes_affine`. Like
+    /// [`PackedBlocks::stripe_labels`] it needs the label vector, so it
+    /// is a method rather than a `build` field; 0.0 for empty rows
+    /// (never read by any sweep). Cost is 4 bytes/row — the engines
+    /// build it unconditionally (it is dead weight only when a
+    /// non-square loss runs).
+    pub fn stripe_alpha_bias(&self, y: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(y.len(), self.row_part.n());
+        (0..self.p)
+            .map(|q| {
+                self.row_part
+                    .block(q)
+                    .enumerate()
+                    .map(|(li, i)| (y[i] as f64 * self.inv_row[q][li]) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
     /// Reconstruct a block's entries in global COO coordinates (the
     /// format the scalar reference path consumes). Values are exact:
     /// they are re-read from the source matrix, not un-scaled.
@@ -814,6 +843,30 @@ mod tests {
                 .map(|(q, r)| om.block_entries(&x, q, r).len())
                 .sum();
         assert_eq!(total, x.nnz());
+    }
+
+    #[test]
+    fn stripe_alpha_bias_is_label_times_inv_row() {
+        let x = toy_matrix();
+        let rp = Partition::even(5, 2);
+        let cp = Partition::even(4, 2);
+        let om = PackedBlocks::build(&x, &rp, &cp);
+        let y = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let bias = om.stripe_alpha_bias(&y);
+        assert_eq!(bias.len(), 2);
+        for q in 0..2 {
+            assert_eq!(bias[q].len(), rp.block_len(q));
+            for (li, i) in rp.block(q).enumerate() {
+                assert_eq!(
+                    bias[q][li],
+                    (y[i] as f64 * om.inv_row[q][li]) as f32,
+                    "stripe {q} row {li}"
+                );
+            }
+        }
+        // Spot value: row 0 has |Ω_0| = 2, m = 5 → bias = 1/(5·2).
+        assert_eq!(bias[0][0], (1.0f64 / 10.0) as f32);
+        assert_eq!(bias[0][1], (-1.0f64 / 5.0) as f32);
     }
 
     #[test]

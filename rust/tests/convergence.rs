@@ -81,14 +81,12 @@ fn logistic_dso_matches_bmrm() {
     assert!(rel.abs() < 0.05, "dso {} vs bmrm {}", d.final_primal, b.final_primal);
 }
 
-/// Ridge regression sanity: square loss + L2 on a small dense system
-/// has the closed form (2λm·I + XᵀX) w = Xᵀ y; DSO must approach it.
-#[test]
-fn square_loss_matches_closed_form_ridge() {
-    // Small dense problem.
-    let m = 60;
-    let d = 8;
-    let mut rng = dso::util::rng::Xoshiro256::new(9);
+/// Small dense ridge problem: every row carries all d features, so
+/// with p = 1 each row group has exactly d entries (lane-eligible when
+/// d ≥ LANES → the engine takes the affine-α path) while p = 4 splits
+/// rows into short groups (scalar path).
+fn dense_ridge_dataset(m: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = dso::util::rng::Xoshiro256::new(seed);
     let rows: Vec<Vec<(u32, f32)>> = (0..m)
         .map(|_| (0..d).map(|j| (j as u32, rng.normal() as f32)).collect())
         .collect();
@@ -104,10 +102,15 @@ fn square_loss_matches_closed_form_ridge() {
             (s + 0.05 * rng.normal()) as f32
         })
         .collect();
-    let ds = Dataset::new("ridge", x, y);
-    let lambda = 0.01;
+    Dataset::new("ridge", x, y)
+}
 
-    // Closed form via Gaussian elimination on (2λm I + XᵀX) w = Xᵀy.
+/// Closed-form ridge solution via Gaussian elimination on
+/// (2λm·I + XᵀX) w = Xᵀy — the normal equations of the primal
+/// (1/m)·Σ ½(xᵢᵀw − yᵢ)² + λ‖w‖².
+fn ridge_closed_form(ds: &Dataset, lambda: f64) -> Vec<f64> {
+    let m = ds.m();
+    let d = ds.d();
     let mut a = vec![vec![0f64; d + 1]; d];
     for i in 0..m {
         let (idx, val) = ds.x.row(i);
@@ -121,9 +124,10 @@ fn square_loss_matches_closed_form_ridge() {
     for j in 0..d {
         a[j][j] += 2.0 * lambda * m as f64;
     }
-    // Eliminate.
     for col in 0..d {
-        let piv = (col..d).max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap()).unwrap();
+        let piv = (col..d)
+            .max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap())
+            .unwrap();
         a.swap(col, piv);
         let pv = a[col][col];
         for r in 0..d {
@@ -135,7 +139,16 @@ fn square_loss_matches_closed_form_ridge() {
             }
         }
     }
-    let w_closed: Vec<f64> = (0..d).map(|j| a[j][d] / a[j][j]).collect();
+    (0..d).map(|j| a[j][d] / a[j][j]).collect()
+}
+
+/// Ridge regression sanity: square loss + L2 on a small dense system
+/// has the closed form (2λm·I + XᵀX) w = Xᵀ y; DSO must approach it.
+#[test]
+fn square_loss_matches_closed_form_ridge() {
+    let ds = dense_ridge_dataset(60, 8, 9);
+    let lambda = 0.01;
+    let w_closed = ridge_closed_form(&ds, lambda);
 
     let mut c = cfg(Algorithm::Dso, 400, lambda);
     c.model.loss = LossKind::Square;
@@ -146,6 +159,51 @@ fn square_loss_matches_closed_form_ridge() {
     let p_closed = p.primal(&ds, &w_closed_f32);
     let rel = (r.final_primal - p_closed) / p_closed.abs().max(1e-12);
     assert!(rel < 0.05, "dso {} vs closed form {p_closed} (rel {rel})", r.final_primal);
+}
+
+/// The same analytic target, reached on **both α recurrences**: p = 1
+/// makes every row group exactly d = 8 = LANES entries (lane-eligible,
+/// so the engine dispatches the affine-α square-loss kernel) while
+/// p = 4 splits rows into 2-entry groups (scalar kernel). Both must
+/// converge to the normal-equations optimum — the affine closed-form
+/// composition may differ from the scalar recurrence only at
+/// tolerance level, never in the fixed point.
+#[test]
+fn square_ridge_scalar_and_affine_paths_match_closed_form() {
+    let ds = dense_ridge_dataset(60, 8, 9);
+    let lambda = 0.01;
+    let w_closed = ridge_closed_form(&ds, lambda);
+    let p = Problem::new(Loss::Square, Regularizer::L2, lambda);
+    let w_closed_f32: Vec<f32> = w_closed.iter().map(|&v| v as f32).collect();
+    let p_closed = p.primal(&ds, &w_closed_f32);
+
+    let mut primals = Vec::new();
+    for (machines, want_lanes) in [(1usize, true), (4usize, false)] {
+        let mut c = cfg(Algorithm::Dso, 400, lambda);
+        c.model.loss = LossKind::Square;
+        c.optim.eta0 = 0.5;
+        c.cluster.machines = machines;
+        // Prove which kernel the run dispatches: with p = 1 the single
+        // block's groups are lane-eligible (affine path for square),
+        // with p = 4 every group is short (scalar path).
+        let setup = dso::coordinator::DsoSetup::new(&c, &ds);
+        let has_lanes = (0..setup.p)
+            .any(|q| (0..setup.p).any(|r| setup.omega.block(q, r).has_lanes()));
+        assert_eq!(has_lanes, want_lanes, "machines={machines}");
+        let r = dso::coordinator::train(&c, &ds, None).unwrap();
+        let rel = (r.final_primal - p_closed) / p_closed.abs().max(1e-12);
+        assert!(
+            rel < 0.05,
+            "machines={machines} (affine={want_lanes}): dso {} vs closed form {p_closed} \
+             (rel {rel})",
+            r.final_primal
+        );
+        primals.push(r.final_primal);
+    }
+    // Both paths land on the same optimum (they differ only in
+    // float-rounding of the trajectory, not in the problem solved).
+    let rel = (primals[0] - primals[1]).abs() / primals[1].abs().max(1e-12);
+    assert!(rel < 0.02, "affine {} vs scalar {} (rel {rel})", primals[0], primals[1]);
 }
 
 /// Theorem 1: duality gap ≲ C/√T. Check gap(T)·√T is bounded by a

@@ -124,6 +124,7 @@ fn packed_trajectory(
     sweeps: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let y_local = om.stripe_labels(&ds.y);
+    let alpha_bias = om.stripe_alpha_bias(&ds.y);
     let ctx = PackedCtx {
         loss,
         reg,
@@ -134,6 +135,7 @@ fn packed_trajectory(
         inv_col32: &om.inv_col32[r],
         inv_row: &om.inv_row[q],
         y: &y_local[q],
+        alpha_bias32: &alpha_bias[q],
     };
     let (mut w, mut w_acc, mut alpha, mut a_acc) = fresh_state(om, q, r, loss, ds);
     for _ in 0..sweeps {

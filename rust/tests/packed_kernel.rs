@@ -99,6 +99,7 @@ fn packed_trajectory(
     sweeps: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let y_local = om.stripe_labels(&ds.y);
+    let alpha_bias = om.stripe_alpha_bias(&ds.y);
     let ctx = PackedCtx {
         loss,
         reg,
@@ -109,6 +110,7 @@ fn packed_trajectory(
         inv_col32: &om.inv_col32[r],
         inv_row: &om.inv_row[q],
         y: &y_local[q],
+        alpha_bias32: &alpha_bias[q],
     };
     let block = om.block(q, r);
     let mut w = vec![0.01f32; om.col_part.block_len(r)];
@@ -231,6 +233,7 @@ fn prop_packed_disjoint_blocks_commute() {
         let cp = Partition::even(ds.d(), p);
         let om = PackedBlocks::build(&ds.x, &rp, &cp);
         let y_local = om.stripe_labels(&ds.y);
+        let alpha_bias = om.stripe_alpha_bias(&ds.y);
         let rule = StepRule::AdaGrad(0.3);
         let lambda = 1e-3;
         let loss = Loss::Hinge;
@@ -258,6 +261,7 @@ fn prop_packed_disjoint_blocks_commute() {
                     inv_col32: &om.inv_col32[q],
                     inv_row: &om.inv_row[q],
                     y: &y_local[q],
+                    alpha_bias32: &alpha_bias[q],
                 };
                 let mut st = if q == 0 {
                     PackedState {

@@ -89,6 +89,48 @@ fn serializable_with_dcd_warmstart() {
 }
 
 #[test]
+fn serializable_on_lane_dispatch_paths() {
+    // The sparse datasets above keep row groups short, so the sweeps
+    // above exercise Lemma 2 only through the scalar kernel. Dense rows
+    // (nnz_per_row ≫ LANES-free threshold) force the engines' lane
+    // dispatch: hinge/logistic take the SIMD lane kernel, square the
+    // affine-α kernel — the bit-identity must hold through every one,
+    // for full and subsampled sweeps and both step-rule families.
+    let ds = SparseSpec {
+        name: "ser-lanes".into(),
+        m: 180,
+        d: 60,
+        nnz_per_row: 18.0,
+        zipf_s: 0.6,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed: 9,
+    }
+    .generate();
+    // Prove the decomposition the engine builds actually has
+    // lane-eligible groups — otherwise this test would silently
+    // degenerate to the scalar coverage above.
+    let p = 3;
+    let rp = dso::partition::Partition::even(ds.m(), p);
+    let cp = dso::partition::Partition::even(ds.d(), p);
+    let om = dso::partition::PackedBlocks::build(&ds.x, &rp, &cp);
+    assert!(
+        (0..p).any(|q| (0..p).any(|r| om.block(q, r).has_lanes())),
+        "dataset not dense enough for the lane path"
+    );
+    for loss in [LossKind::Hinge, LossKind::Logistic, LossKind::Square] {
+        for (upb, step) in [(0usize, StepKind::AdaGrad), (7, StepKind::AdaGrad), (0, StepKind::Const)]
+        {
+            let mut c = cfg(p, 3);
+            c.model.loss = loss;
+            c.optim.step = step;
+            c.cluster.updates_per_block = upb;
+            assert_bitwise_equal(p, &c, &ds);
+        }
+    }
+}
+
+#[test]
 fn repeated_threaded_runs_identical() {
     // Determinism under real thread scheduling: 10 repetitions must
     // agree exactly (disjoint blocks ⇒ no data races by construction).

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
-# records BENCH_updates.json and BENCH_lanes.json (the cross-PR perf
-# trajectory; plot with `python scripts/plot_results.py --bench`).
+# records BENCH_updates.json, BENCH_lanes.json and BENCH_alpha_lanes.json
+# (the cross-PR perf trajectory; plot with
+# `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -31,13 +32,28 @@ for required in prop_lanes_match_scalar_oracle prop_sentinel_padding_never_pertu
     fi
 done
 
+echo "== affine α-lane differential suite present =="
+# Same guard for the square-loss affine-α path (tests/alpha_lane.rs):
+# its tolerance-equivalence story rests on the differential suite.
+alpha_tests="$(cargo test -q --test alpha_lane -- --list 2>/dev/null || true)"
+for required in prop_affine_matches_coo_oracle prop_affine_sentinel_mutation_inert \
+    affine_matches_oracle_ragged_and_short_groups \
+    affine_long_row_stays_within_tolerance \
+    affine_entry_point_is_bitwise_lane_kernel_for_nonaffine_losses \
+    engine_affine_dispatch_threaded_equals_replay; do
+    if ! grep -q "$required" <<<"$alpha_tests"; then
+        echo "ci.sh: affine α-lane test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
 echo "== cargo test -q =="
 cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
-    for f in BENCH_updates.json BENCH_lanes.json; do
+    for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else
