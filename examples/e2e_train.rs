@@ -1,6 +1,7 @@
 //! End-to-end validation driver (EXPERIMENTS.md §E2E).
 //!
-//! Exercises the full three-layer stack on a real small workload:
+//! Exercises the full three-layer stack on a real small workload
+//! through the `dso::api::Trainer` facade:
 //!   * generates the real-sim analog dataset (~5.8k × 2.1k sparse),
 //!   * trains linear SVM with DSO on a simulated 4-machine × 2-core
 //!     cluster for 150 epochs, logging the full convergence curve,
@@ -12,6 +13,7 @@
 //!
 //! Run: `cargo run --release --example e2e_train`
 
+use dso::api::Trainer;
 use dso::config::{Algorithm, ExecMode, TrainConfig};
 use dso::losses::{Loss, Problem, Regularizer};
 
@@ -32,7 +34,6 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut cfg = TrainConfig::default();
-    cfg.optim.algorithm = Algorithm::Dso;
     cfg.optim.epochs = 150;
     cfg.optim.eta0 = 0.1;
     cfg.model.lambda = lambda;
@@ -40,14 +41,17 @@ fn main() -> anyhow::Result<()> {
     cfg.cluster.cores = 2;
     cfg.monitor.every = 1;
 
-    let dso_r = dso::coordinator::train(&cfg, &train, Some(&test))?;
+    let dso_f = Trainer::new(cfg.clone()).algorithm(Algorithm::Dso).fit(&train, Some(&test))?;
+    let dso_r = &dso_f.result;
     dso_r.history.write_csv(&out.join("dso_realsim.csv"))?;
 
     // Reference optimum: BMRM run to tight gap + DCD solver.
     let mut bcfg = cfg.clone();
-    bcfg.optim.algorithm = Algorithm::Bmrm;
     bcfg.optim.epochs = 300;
-    let bmrm_r = dso::coordinator::train(&bcfg, &train, Some(&test))?;
+    let bmrm_r = Trainer::new(bcfg)
+        .algorithm(Algorithm::Bmrm)
+        .fit(&train, Some(&test))?
+        .into_result();
     bmrm_r.history.write_csv(&out.join("bmrm_realsim.csv"))?;
     let dcd = dso::optim::dcd::solve_hinge_l2(&train, lambda, 2000, 1e-10, 1);
     let problem = Problem::new(Loss::Hinge, Regularizer::L2, lambda);
@@ -69,11 +73,18 @@ fn main() -> anyhow::Result<()> {
     println!(
         "[e2e] duality gap {:.3e}; test error {:.4}; {:.1} MB communicated",
         dso_r.final_gap,
-        dso_r.history.col("test_error").unwrap().last().unwrap(),
+        dso_f.error(&test),
         dso_r.comm_bytes as f64 / 1e6
     );
     anyhow::ensure!(rel < 0.05, "DSO did not reach within 5% of the optimum");
     anyhow::ensure!(dso_r.final_gap >= -1e-6, "weak duality violated");
+
+    // Model persistence round trip on the real run.
+    let model_path = out.join("dso_realsim.model");
+    dso_f.save(&model_path)?;
+    let loaded = dso::api::Model::load(&model_path)?;
+    anyhow::ensure!(loaded.w == dso_f.w(), "model save/load changed w");
+    println!("[e2e] model round trip OK ({} weights)", loaded.w.len());
 
     // ---------- dense path: tile DSO through PJRT ----------
     match dso::runtime::Manifest::load_default() {
@@ -83,15 +94,17 @@ fn main() -> anyhow::Result<()> {
                 dso::data::registry::generate("ocr", 0.3, 7).map_err(anyhow::Error::msg)?;
             let (dtrain, dtest) = dense.split(0.2, 7);
             let mut tcfg = TrainConfig::default();
-            tcfg.optim.algorithm = Algorithm::Dso;
             tcfg.optim.epochs = 40;
             tcfg.optim.eta0 = 0.3;
             tcfg.model.lambda = lambda;
             tcfg.cluster.machines = 2;
             tcfg.cluster.cores = 2;
-            tcfg.cluster.mode = ExecMode::Tile;
             tcfg.monitor.every = 2;
-            let tile_r = dso::coordinator::train(&tcfg, &dtrain, Some(&dtest))?;
+            let tile_r = Trainer::new(tcfg)
+                .algorithm(Algorithm::Dso)
+                .mode(ExecMode::Tile)
+                .fit(&dtrain, Some(&dtest))?
+                .into_result();
             tile_r.history.write_csv(&out.join("dso_tile_ocr.csv"))?;
             let at_zero = Problem::new(Loss::Hinge, Regularizer::L2, lambda)
                 .primal(&dtrain, &vec![0.0; dtrain.d()]);

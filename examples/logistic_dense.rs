@@ -4,7 +4,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example logistic_dense`
 
-use dso::config::{Algorithm, ExecMode, LossKind, TrainConfig};
+use dso::api::Trainer;
+use dso::config::{ExecMode, LossKind, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
     let ds = dso::data::registry::generate("ocr", 0.4, 5).map_err(anyhow::Error::msg)?;
@@ -13,27 +14,27 @@ fn main() -> anyhow::Result<()> {
 
     let have_artifacts = dso::runtime::Manifest::load_default().is_ok();
     let mut cfg = TrainConfig::default();
-    cfg.optim.algorithm = Algorithm::Dso;
     cfg.model.loss = LossKind::Logistic;
     cfg.model.lambda = 1e-4;
     cfg.optim.epochs = 50;
     cfg.optim.eta0 = 0.3;
     cfg.cluster.machines = 2;
     cfg.cluster.cores = 2;
-    cfg.cluster.mode = if have_artifacts { ExecMode::Tile } else { ExecMode::Scalar };
     cfg.monitor.every = 5;
+    let mode = if have_artifacts { ExecMode::Tile } else { ExecMode::Scalar };
     println!(
         "mode: {}",
         if have_artifacts { "tile (Pallas kernel via PJRT)" } else { "scalar (run `make artifacts`)" }
     );
 
-    let r = dso::coordinator::train(&cfg, &train, Some(&test))?;
+    let fitted = Trainer::new(cfg).mode(mode).fit(&train, Some(&test))?;
+    let r = &fitted.result;
     println!("\n{}", r.history.render(20));
     println!(
         "final objective {:.6}, gap {:.3e}, test error {:.4}",
         r.final_primal,
         r.final_gap,
-        r.history.col("test_error").unwrap().last().unwrap()
+        fitted.error(&test)
     );
     Ok(())
 }

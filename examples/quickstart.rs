@@ -1,9 +1,13 @@
 //! Quickstart: train a linear SVM with DSO on a synthetic real-sim-like
-//! dataset, on a simulated 2-machine × 2-core cluster.
+//! dataset, on a simulated 2-machine × 2-core cluster, through the
+//! `dso::api::Trainer` facade — with live per-epoch streaming via an
+//! `EpochObserver` closure.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use dso::api::Trainer;
 use dso::config::{Algorithm, TrainConfig};
+use dso::coordinator::EvalRow;
 
 fn main() -> anyhow::Result<()> {
     // 1. A dataset from the Table 2 registry (scaled down; see
@@ -14,7 +18,6 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Configure DSO (Algorithm 1): hinge loss, L2, AdaGrad steps.
     let mut cfg = TrainConfig::default();
-    cfg.optim.algorithm = Algorithm::Dso;
     cfg.optim.epochs = 40;
     cfg.optim.eta0 = 0.1;
     cfg.model.lambda = 1e-4;
@@ -22,23 +25,44 @@ fn main() -> anyhow::Result<()> {
     cfg.cluster.cores = 2;
     cfg.monitor.every = 5;
 
-    // 3. Train.
-    let result = dso::coordinator::train(&cfg, &train, Some(&test))?;
+    // 3. Train through the facade, streaming each evaluation as it
+    //    happens (what `Monitor` used to keep internal until the end).
+    let mut on_epoch = |row: &EvalRow| {
+        println!(
+            "  epoch {:>3}: objective {:.6}  gap {:.3e}  test_err {:.4}",
+            row.epoch, row.primal, row.gap, row.test_error
+        );
+    };
+    let fitted = Trainer::new(cfg)
+        .algorithm(Algorithm::Dso)
+        .observer(&mut on_epoch)
+        .fit(&train, Some(&test))?;
 
-    // 4. Inspect: objective, duality gap (Theorem 1's measure), errors.
-    println!("\nepoch history:");
-    println!("{}", result.history.render(20));
+    // 4. Inspect the fitted artifact: objective, duality gap
+    //    (Theorem 1's measure), errors, predictions.
+    let result = &fitted.result;
     println!(
-        "final: objective={:.6}  duality gap={:.3e}  test error={:.4}",
+        "\nfinal: objective={:.6}  duality gap={:.3e}  test error={:.4}",
         result.final_primal,
         result.final_gap,
-        result.history.col("test_error").and_then(|c| c.last().copied()).unwrap_or(f64::NAN),
+        fitted.error(&test),
     );
     println!(
         "ran {} scalar saddle updates in {:.3}s simulated cluster time ({:.1} MB moved)",
         result.total_updates,
         result.total_virtual_s,
         result.comm_bytes as f64 / 1e6
+    );
+
+    // 5. Persist the model (libsvm-style text) and predict.
+    let model_path = std::env::temp_dir().join("quickstart.dso-model");
+    fitted.save(&model_path)?;
+    let margins = fitted.predict(&test.x)?;
+    println!(
+        "saved model to {} ({} weights); first test margin {:.4}",
+        model_path.display(),
+        fitted.w().len(),
+        margins.first().copied().unwrap_or(f64::NAN)
     );
     Ok(())
 }

@@ -4,6 +4,7 @@
 //!
 //! Run: `cargo run --release --example scaling [scale]`
 
+use dso::api::Trainer;
 use dso::config::{Algorithm, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -26,14 +27,16 @@ fn main() -> anyhow::Result<()> {
         let mut base = None;
         for machines in [1usize, 2, 4, 8] {
             let mut cfg = TrainConfig::default();
-            cfg.optim.algorithm = Algorithm::Dso;
             cfg.optim.epochs = 20;
             cfg.optim.eta0 = 0.1;
             cfg.model.lambda = 1e-4;
             cfg.cluster.machines = machines;
             cfg.cluster.cores = 4;
             cfg.monitor.every = 0;
-            let r = dso::coordinator::train(&cfg, &train, None)?;
+            let r = Trainer::new(cfg)
+                .algorithm(Algorithm::Dso)
+                .fit(&train, None)?
+                .into_result();
             let speedup = match base {
                 None => {
                     base = Some(r.total_virtual_s);

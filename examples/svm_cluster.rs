@@ -1,8 +1,10 @@
 //! Multi-machine comparison on the kdda analog (Figure 3 workload):
-//! DSO vs BMRM vs PSGD on a simulated 4-machine × 4-core cluster.
+//! DSO vs BMRM vs PSGD on a simulated 4-machine × 4-core cluster,
+//! all three routed through the same `dso::api::Trainer` facade.
 //!
 //! Run: `cargo run --release --example svm_cluster [scale]`
 
+use dso::api::Trainer;
 use dso::config::{Algorithm, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -20,7 +22,6 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for algo in [Algorithm::Dso, Algorithm::Bmrm, Algorithm::Psgd] {
         let mut cfg = TrainConfig::default();
-        cfg.optim.algorithm = algo;
         cfg.optim.epochs = 30;
         cfg.optim.eta0 = 0.1;
         cfg.optim.dcd_init = algo == Algorithm::Dso;
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         cfg.cluster.machines = 4;
         cfg.cluster.cores = 4;
         cfg.monitor.every = 1;
-        let r = dso::coordinator::train(&cfg, &train, Some(&test))?;
+        let r = Trainer::new(cfg).algorithm(algo).fit(&train, Some(&test))?.into_result();
         println!(
             "{:>5}: objective={:.6} gap={:>10.3e} virtual={:.3}s comm={:.2}MB",
             r.algorithm,

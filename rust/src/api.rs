@@ -1,0 +1,483 @@
+//! `dso::api` — the one solver facade.
+//!
+//! The paper describes one algorithm family — saddle-point sweeps over
+//! Ω-blocks — executed under different schedules (bulk-synchronous
+//! Algorithm 1, the §6 NOMAD-style async variant, the tile/PJRT path)
+//! next to three baselines. This module is the single entry point over
+//! all of them:
+//!
+//! ```no_run
+//! use dso::api::Trainer;
+//! use dso::config::TrainConfig;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let ds = dso::data::registry::generate("real-sim", 0.5, 42)
+//!     .map_err(anyhow::Error::msg)?;
+//! let (train, test) = ds.split(0.2, 42);
+//! let mut cfg = TrainConfig::default();
+//! cfg.optim.epochs = 40;
+//! let fitted = Trainer::new(cfg).fit(&train, Some(&test))?;
+//! println!("objective {:.6}", fitted.result.final_primal);
+//! let margins = fitted.predict(&test.x)?;
+//! fitted.save(std::path::Path::new("model.dso"))?;
+//! # let _ = margins;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Trainer`] owns the `Algorithm` × `ExecMode` routing (formerly
+//! split between `coordinator::train` and a `bail!` inside
+//! `train_dso`), streams per-epoch [`crate::coordinator::EvalRow`]s to
+//! an optional [`EpochObserver`], and reaches the Lemma-2 serial replay via
+//! [`Trainer::replay`]. [`Fitted`] carries the [`TrainResult`] plus
+//! the assembled `(w, α)` with `predict` and libsvm-style model
+//! persistence ([`Model`]).
+//!
+//! Deprecation map (old free function → facade call):
+//!
+//! | old | new |
+//! |---|---|
+//! | `coordinator::train(cfg, tr, te)` | `Trainer::new(cfg).fit(tr, te)` |
+//! | `coordinator::train_dso` | `Trainer::new(cfg).fit(..)` (algorithm = dso) |
+//! | `coordinator::run_replay` | `Trainer::new(cfg).replay(true).fit(..)` |
+//! | `coordinator::train_dso_async` | `.algorithm(Algorithm::DsoAsync)` |
+//! | `tile::train_dso_tile` | `.mode(ExecMode::Tile)` |
+//! | `baselines::{sgd,psgd,bmrm}::train_*` | `.algorithm(Algorithm::{Sgd,Psgd,Bmrm})` |
+
+use crate::config::{Algorithm, ExecMode, LossKind, RegKind, TrainConfig};
+use crate::coordinator::monitor::{EpochObserver, TrainResult};
+use crate::data::{Csr, Dataset};
+use anyhow::Result;
+use std::path::Path;
+
+/// Builder-style facade over every engine. Construct with the full
+/// [`TrainConfig`], override the routing knobs, then [`Trainer::fit`].
+pub struct Trainer<'a> {
+    cfg: TrainConfig,
+    replay: bool,
+    observer: Option<&'a mut dyn EpochObserver>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: TrainConfig) -> Trainer<'a> {
+        Trainer { cfg, replay: false, observer: None }
+    }
+
+    /// Select the solver (`optim.algorithm`).
+    pub fn algorithm(mut self, algo: Algorithm) -> Self {
+        self.cfg.optim.algorithm = algo;
+        self
+    }
+
+    /// Select the DSO execution mode (`cluster.mode`): scalar sweeps
+    /// or the tile/PJRT path.
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.cfg.cluster.mode = mode;
+        self
+    }
+
+    /// Run the Lemma-2 serial replay instead of the threaded engine:
+    /// one thread, the canonical (epoch, q, r) order, bit-identical
+    /// parameters. Only defined for the scalar DSO engine.
+    pub fn replay(mut self, yes: bool) -> Self {
+        self.replay = yes;
+        self
+    }
+
+    /// Stream every recorded per-epoch [`crate::coordinator::EvalRow`]
+    /// to `obs` as training runs (any `FnMut(&EvalRow)` closure works).
+    ///
+    /// Evaluation cadence follows the engine: most routes record every
+    /// `monitor.every` epochs, but `Algorithm::DsoAsync` has no epoch
+    /// barrier to evaluate at — it fires the observer once, with the
+    /// single end-of-run evaluation.
+    pub fn observer(mut self, obs: &'a mut dyn EpochObserver) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// The effective configuration (for inspection or further edits).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn config_mut(&mut self) -> &mut TrainConfig {
+        &mut self.cfg
+    }
+
+    /// Train on `train`; `test` enables the history's test-error
+    /// column. Returns the fitted artifact.
+    pub fn fit(self, train: &Dataset, test: Option<&Dataset>) -> Result<Fitted> {
+        let Trainer { cfg, replay, observer } = self;
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        if replay {
+            anyhow::ensure!(
+                cfg.optim.algorithm == Algorithm::Dso && cfg.cluster.mode == ExecMode::Scalar,
+                "replay is the Lemma-2 serial re-execution of the scalar DSO \
+                 engine; set algorithm = \"dso\" and mode = \"scalar\""
+            );
+        }
+        let result = match cfg.optim.algorithm {
+            Algorithm::Dso => match cfg.cluster.mode {
+                ExecMode::Tile => {
+                    crate::coordinator::tile::train_dso_tile_with(&cfg, train, test, observer)?
+                }
+                ExecMode::Scalar if replay => {
+                    crate::coordinator::engine::run_replay_with(&cfg, train, test, observer)?
+                }
+                ExecMode::Scalar => {
+                    crate::coordinator::engine::train_dso_with(&cfg, train, test, observer)?
+                }
+            },
+            Algorithm::DsoAsync => {
+                crate::coordinator::async_engine::train_dso_async_with(&cfg, train, test, observer)?
+            }
+            Algorithm::Sgd => crate::baselines::sgd::train_sgd_with(&cfg, train, test, observer)?,
+            Algorithm::Psgd => {
+                crate::baselines::psgd::train_psgd_with(&cfg, train, test, observer)?
+            }
+            Algorithm::Bmrm => {
+                crate::baselines::bmrm::train_bmrm_with(&cfg, train, test, observer)?
+            }
+        };
+        Ok(Fitted {
+            loss: cfg.model.loss,
+            reg: cfg.model.reg,
+            lambda: cfg.model.lambda,
+            result,
+        })
+    }
+}
+
+/// The artifact a [`Trainer`] run produces: the full [`TrainResult`]
+/// (history, final objective/gap, time axes) plus the assembled
+/// `(w, α)` with prediction and persistence.
+pub struct Fitted {
+    pub result: TrainResult,
+    loss: LossKind,
+    reg: RegKind,
+    lambda: f64,
+}
+
+impl Fitted {
+    /// The assembled primal weights.
+    pub fn w(&self) -> &[f32] {
+        &self.result.w
+    }
+
+    /// The dual variables where the solver maintains them (empty for
+    /// the primal-only baselines).
+    pub fn alpha(&self) -> &[f32] {
+        &self.result.alpha
+    }
+
+    /// Unwrap into the raw [`TrainResult`] (what the deprecated free
+    /// functions returned).
+    pub fn into_result(self) -> TrainResult {
+        self.result
+    }
+
+    /// Margins ⟨w, xᵢ⟩ for every row of `x`. Errors on a feature
+    /// dimension mismatch (e.g. data generated at a different scale).
+    pub fn predict(&self, x: &Csr) -> Result<Vec<f64>> {
+        self.model_ref().predict_into(x)
+    }
+
+    /// ±1 label predictions sign(⟨w, xᵢ⟩) for every row of `x`.
+    pub fn predict_labels(&self, x: &Csr) -> Result<Vec<f32>> {
+        self.model_ref().labels_into(x)
+    }
+
+    /// 0/1 error on a labeled dataset.
+    pub fn error(&self, ds: &Dataset) -> f64 {
+        self.model_ref().error_on(ds)
+    }
+
+    /// Detach a standalone, persistable linear model.
+    pub fn model(&self) -> Model {
+        Model {
+            algorithm: self.result.algorithm.clone(),
+            loss: self.loss,
+            reg: self.reg,
+            lambda: self.lambda,
+            w: self.result.w.clone(),
+        }
+    }
+
+    /// Save the model in the libsvm-style text format ([`Model::save`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.model_ref().save_to(path)
+    }
+
+    /// Borrow-free view used by predict/save without cloning w.
+    fn model_ref(&self) -> ModelView<'_> {
+        ModelView {
+            algorithm: &self.result.algorithm,
+            loss: self.loss,
+            reg: self.reg,
+            lambda: self.lambda,
+            w: &self.result.w,
+        }
+    }
+}
+
+/// A standalone linear model: the persisted subset of a [`Fitted`]
+/// (hyperparameters + w). Saved in a libsvm/liblinear-style plain-text
+/// format so models interoperate with scripts:
+///
+/// ```text
+/// dso-model v1
+/// algorithm dso
+/// loss hinge
+/// regularizer l2
+/// lambda 0.0001
+/// d 20958
+/// w
+/// <one ASCII float per line, shortest round-trip form>
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub algorithm: String,
+    pub loss: LossKind,
+    pub reg: RegKind,
+    pub lambda: f64,
+    pub w: Vec<f32>,
+}
+
+/// Internal borrowed twin of [`Model`] (predict/save without cloning).
+struct ModelView<'a> {
+    algorithm: &'a str,
+    loss: LossKind,
+    reg: RegKind,
+    lambda: f64,
+    w: &'a [f32],
+}
+
+impl ModelView<'_> {
+    /// ±1 sign map over the margins — the one place the decision
+    /// threshold lives (matches `Dataset::test_error`).
+    fn labels_into(&self, x: &Csr) -> Result<Vec<f32>> {
+        Ok(self
+            .predict_into(x)?
+            .iter()
+            .map(|&u| if u >= 0.0 { 1.0 } else { -1.0 })
+            .collect())
+    }
+
+    fn error_on(&self, ds: &Dataset) -> f64 {
+        ds.test_error(self.w)
+    }
+
+    fn predict_into(&self, x: &Csr) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            x.cols == self.w.len(),
+            "feature dimension mismatch: model d={}, data d={}",
+            self.w.len(),
+            x.cols
+        );
+        Ok((0..x.rows).map(|i| x.row_dot(i, self.w)).collect())
+    }
+
+    fn save_to(&self, path: &Path) -> Result<()> {
+        let mut out = String::new();
+        out.push_str("dso-model v1\n");
+        out.push_str(&format!("algorithm {}\n", self.algorithm));
+        out.push_str(&format!("loss {}\n", self.loss.name()));
+        out.push_str(&format!("regularizer {}\n", self.reg.name()));
+        // Rust float Display prints the shortest string that parses
+        // back to the identical value — the round trip is bit-exact.
+        out.push_str(&format!("lambda {}\n", self.lambda));
+        out.push_str(&format!("d {}\n", self.w.len()));
+        out.push_str("w\n");
+        for v in self.w {
+            out.push_str(&format!("{v}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+impl Model {
+    /// Margins ⟨w, xᵢ⟩ for every row of `x`. Errors on a feature
+    /// dimension mismatch.
+    pub fn predict(&self, x: &Csr) -> Result<Vec<f64>> {
+        self.view().predict_into(x)
+    }
+
+    /// ±1 label predictions for every row of `x`.
+    pub fn predict_labels(&self, x: &Csr) -> Result<Vec<f32>> {
+        self.view().labels_into(x)
+    }
+
+    /// 0/1 error on a labeled dataset.
+    pub fn error(&self, ds: &Dataset) -> f64 {
+        self.view().error_on(ds)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.view().save_to(path)
+    }
+
+    fn view(&self) -> ModelView<'_> {
+        ModelView {
+            algorithm: &self.algorithm,
+            loss: self.loss,
+            reg: self.reg,
+            lambda: self.lambda,
+            w: &self.w,
+        }
+    }
+
+    /// Load a model saved by [`Model::save`] / [`Fitted::save`].
+    pub fn load(path: &Path) -> Result<Model> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or_default();
+        anyhow::ensure!(
+            magic == "dso-model v1",
+            "{}: not a dso model file (bad magic '{magic}')",
+            path.display()
+        );
+        let mut algorithm: Option<String> = None;
+        let mut loss: Option<LossKind> = None;
+        let mut reg: Option<RegKind> = None;
+        let mut lambda: Option<f64> = None;
+        let mut d: Option<usize> = None;
+        for line in lines.by_ref() {
+            if line == "w" {
+                break;
+            }
+            let (key, val) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("malformed model header line '{line}'"))?;
+            match key {
+                "algorithm" => algorithm = Some(val.to_string()),
+                "loss" => loss = Some(LossKind::parse(val).map_err(anyhow::Error::msg)?),
+                "regularizer" => {
+                    reg = Some(RegKind::parse(val).map_err(anyhow::Error::msg)?)
+                }
+                "lambda" => {
+                    lambda = Some(
+                        val.parse()
+                            .map_err(|_| anyhow::anyhow!("bad lambda '{val}'"))?,
+                    )
+                }
+                "d" => {
+                    d = Some(
+                        val.parse()
+                            .map_err(|_| anyhow::anyhow!("bad dimension '{val}'"))?,
+                    )
+                }
+                other => anyhow::bail!("unknown model header key '{other}'"),
+            }
+        }
+        // Every header written by `save` is required back: a truncated
+        // or foreign file must fail loudly, not load with silently
+        // defaulted metadata.
+        let missing = |k: &'static str| move || anyhow::anyhow!("model header missing '{k}'");
+        let algorithm = algorithm.ok_or_else(missing("algorithm"))?;
+        let loss = loss.ok_or_else(missing("loss"))?;
+        let reg = reg.ok_or_else(missing("regularizer"))?;
+        let lambda = lambda.ok_or_else(missing("lambda"))?;
+        let d = d.ok_or_else(missing("d"))?;
+        // The header is untrusted: don't pre-allocate from a declared
+        // dimension a corrupt file could set to anything — cap the
+        // hint; the w.len() == d check below still enforces exactness.
+        let mut w = Vec::with_capacity(d.min(1 << 20));
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            w.push(
+                line.parse::<f32>()
+                    .map_err(|_| anyhow::anyhow!("bad weight '{line}'"))?,
+            );
+        }
+        anyhow::ensure!(
+            w.len() == d,
+            "model declares d={d} but carries {} weights",
+            w.len()
+        );
+        anyhow::ensure!(lambda > 0.0, "model lambda must be > 0, got {lambda}");
+        Ok(Model { algorithm, loss, reg, lambda, w })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_save_load_roundtrip_is_bit_exact() {
+        let model = Model {
+            algorithm: "dso".into(),
+            loss: LossKind::Logistic,
+            reg: RegKind::L1,
+            lambda: 1e-4,
+            w: vec![0.125, -3.5e-8, 1.0, f32::MIN_POSITIVE, -0.0, 0.333_333_34],
+        };
+        let path = std::env::temp_dir().join("dso-api-roundtrip.model");
+        model.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.algorithm, "dso");
+        assert_eq!(back.loss, LossKind::Logistic);
+        assert_eq!(back.reg, RegKind::L1);
+        assert_eq!(back.lambda, 1e-4);
+        assert_eq!(back.w.len(), model.w.len());
+        for (a, b) in model.w.iter().zip(&back.w) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("dso-api-garbage.model");
+        std::fs::write(&path, "not a model\n").unwrap();
+        assert!(Model::load(&path).is_err());
+        std::fs::write(&path, "dso-model v1\nloss hinge\nw\n0.5\n").unwrap();
+        // Missing 'd' header.
+        assert!(Model::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_requires_every_header_saved() {
+        // A truncated file must not load with silently defaulted
+        // metadata: drop each header line in turn and expect an error
+        // naming it.
+        let full = "dso-model v1\nalgorithm dso\nloss hinge\nregularizer l2\n\
+                    lambda 0.001\nd 1\nw\n0.5\n";
+        let path = std::env::temp_dir().join("dso-api-headers.model");
+        std::fs::write(&path, full).unwrap();
+        assert!(Model::load(&path).is_ok());
+        for key in ["algorithm", "loss", "regularizer", "lambda", "d"] {
+            let truncated: String = full
+                .lines()
+                .filter(|l| !l.starts_with(&format!("{key} ")))
+                .map(|l| format!("{l}\n"))
+                .collect();
+            std::fs::write(&path, truncated).unwrap();
+            let err = Model::load(&path).unwrap_err();
+            assert!(format!("{err}").contains(key), "{key}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn predict_labels_signs() {
+        let x = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        let model = Model {
+            algorithm: "dso".into(),
+            loss: LossKind::Hinge,
+            reg: RegKind::L2,
+            lambda: 1e-3,
+            w: vec![0.5, -0.5],
+        };
+        assert_eq!(model.predict(&x).unwrap(), vec![0.5, -0.5]);
+        assert_eq!(model.predict_labels(&x).unwrap(), vec![1.0, -1.0]);
+        // Dimension mismatch is an error, not a panic.
+        let wide = Csr::from_rows(3, vec![vec![(2, 1.0)]]);
+        assert!(model.predict(&wide).is_err());
+    }
+}

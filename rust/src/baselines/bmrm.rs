@@ -18,7 +18,7 @@
 //! parallel: measured wall time ÷ p + an allreduce of a d-vector.
 
 use crate::config::TrainConfig;
-use crate::coordinator::monitor::{Monitor, TrainResult};
+use crate::coordinator::monitor::{EpochObserver, Monitor, TrainResult};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::CostModel;
@@ -46,6 +46,17 @@ fn risk_and_subgrad(ds: &Dataset, loss: Loss, w: &[f32], rows: std::ops::Range<u
 }
 
 pub fn train_bmrm(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    train_bmrm_with(cfg, train, test, None)
+}
+
+/// [`train_bmrm`] with an optional per-epoch observer (the
+/// `dso::api::Trainer` facade's streaming hook).
+pub fn train_bmrm_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     let loss = Loss::from(cfg.model.loss);
     let reg = Regularizer::from(cfg.model.reg);
     if reg != Regularizer::L2 {
@@ -66,7 +77,7 @@ pub fn train_bmrm(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) ->
     let mut planes_a: Vec<Vec<f64>> = Vec::new();
     let mut planes_b: Vec<f64> = Vec::new();
     let mut gram: Vec<Vec<f64>> = Vec::new();
-    let mut monitor = Monitor::new(cfg.monitor.every);
+    let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut virtual_s = 0.0;
     let mut comm_bytes: u64 = 0;

@@ -10,7 +10,7 @@
 //! real threads so compute time is measured, not modeled.
 
 use crate::config::{StepKind, TrainConfig};
-use crate::coordinator::monitor::{Monitor, TrainResult};
+use crate::coordinator::monitor::{EpochObserver, Monitor, TrainResult};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::CostModel;
@@ -29,6 +29,17 @@ struct Shard {
 }
 
 pub fn train_psgd(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    train_psgd_with(cfg, train, test, None)
+}
+
+/// [`train_psgd`] with an optional per-epoch observer (the
+/// `dso::api::Trainer` facade's streaming hook).
+pub fn train_psgd_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     let loss = Loss::from(cfg.model.loss);
     let reg = Regularizer::from(cfg.model.reg);
     let problem = Problem::new(loss, reg, cfg.model.lambda);
@@ -50,7 +61,7 @@ pub fn train_psgd(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) ->
         .collect();
 
     let mut w = vec![0f32; d];
-    let mut monitor = Monitor::new(cfg.monitor.every);
+    let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut virtual_s = 0.0;
     let mut updates: u64 = 0;

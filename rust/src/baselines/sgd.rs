@@ -14,7 +14,7 @@
 //! O(|Ω_i|) and unbiased; AdaGrad tames the variance this introduces.
 
 use crate::config::{StepKind, TrainConfig};
-use crate::coordinator::monitor::{Monitor, TrainResult};
+use crate::coordinator::monitor::{EpochObserver, Monitor, TrainResult};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
@@ -23,6 +23,17 @@ use crate::util::timer::Stopwatch;
 use anyhow::Result;
 
 pub fn train_sgd(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    train_sgd_with(cfg, train, test, None)
+}
+
+/// [`train_sgd`] with an optional per-epoch observer (the
+/// `dso::api::Trainer` facade's streaming hook).
+pub fn train_sgd_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     let loss = Loss::from(cfg.model.loss);
     let reg = Regularizer::from(cfg.model.reg);
     let problem = Problem::new(loss, reg, cfg.model.lambda);
@@ -34,7 +45,7 @@ pub fn train_sgd(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> 
     let mut w = vec![0f32; d];
     let mut acc = vec![0f32; d]; // AdaGrad accumulators
     let mut rng = Xoshiro256::new(cfg.optim.seed);
-    let mut monitor = Monitor::new(cfg.monitor.every);
+    let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut virtual_s = 0.0;
     let mut updates: u64 = 0;

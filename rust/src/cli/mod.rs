@@ -4,13 +4,18 @@
 //! dso train  [--config run.toml] [--data NAME] [--algo dso|sgd|psgd|bmrm]
 //!            [--loss hinge|logistic|square] [--lambda X] [--epochs N]
 //!            [--machines M] [--cores C] [--mode scalar|tile] [--scale S]
-//!            [--eta0 X] [--dcd-init] [--out results/run.csv] [--path f.libsvm]
+//!            [--eta0 X] [--dcd-init] [--replay] [--out results/run.csv]
+//!            [--model-out model.dso] [--path f.libsvm]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
 //! dso stats  [--name NAME | --all] [--scale S]
 //! dso gen-data --name NAME --out FILE [--scale S] [--seed N]
 //! dso inspect-artifacts
 //! ```
+//!
+//! `train` drives the [`crate::api::Trainer`] facade: `--replay` runs
+//! the Lemma-2 serial replay of the scalar DSO engine, `--model-out`
+//! persists the fitted w in the libsvm-style model format.
 
 pub mod args;
 
@@ -103,7 +108,8 @@ pub fn load_dataset(cfg: &TrainConfig) -> Result<crate::data::Dataset> {
 fn cmd_train(args: &Args) -> Result<i32> {
     args.check_known(&[
         "config", "data", "path", "algo", "loss", "mode", "lambda", "epochs", "eta0",
-        "dcd-init", "seed", "machines", "cores", "scale", "data-seed", "out", "test-frac",
+        "dcd-init", "replay", "seed", "machines", "cores", "scale", "data-seed", "out",
+        "model-out", "test-frac",
     ])
     .map_err(anyhow::Error::msg)?;
     let mut cfg = build_train_config(args)?;
@@ -120,7 +126,10 @@ fn cmd_train(args: &Args) -> Result<i32> {
         train.nnz(),
         cfg.workers()
     );
-    let r = crate::coordinator::train(&cfg, &train, Some(&test))?;
+    let fitted = crate::api::Trainer::new(cfg.clone())
+        .replay(args.get_bool("replay"))
+        .fit(&train, Some(&test))?;
+    let r = &fitted.result;
     println!(
         "{}: objective={:.6} gap={:.3e} test_error={:.4} virtual={:.3}s wall={:.3}s updates={}",
         r.algorithm,
@@ -135,6 +144,11 @@ fn cmd_train(args: &Args) -> Result<i32> {
         let p = std::path::PathBuf::from(&cfg.monitor.out);
         r.history.write_csv(&p)?;
         println!("history -> {}", p.display());
+    }
+    if let Some(out) = args.get("model-out") {
+        let p = std::path::PathBuf::from(out);
+        fitted.save(&p)?;
+        println!("model -> {}", p.display());
     }
     Ok(0)
 }
@@ -245,6 +259,51 @@ mod tests {
     #[test]
     fn train_rejects_unknown_flag() {
         assert!(run(&["train", "--lamda", "0.1"]).is_err());
+    }
+
+    /// `--replay` reaches the Lemma-2 serial replay through the facade
+    /// (it used to be test-only).
+    #[test]
+    fn train_replay_runs() {
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--replay"
+            ])
+            .unwrap(),
+            0
+        );
+    }
+
+    /// `--replay` on a non-DSO algorithm is an actionable error, not a
+    /// silent fallback.
+    #[test]
+    fn train_replay_rejects_non_dso() {
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2", "--algo",
+            "sgd", "--replay",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("replay"), "{err}");
+    }
+
+    /// `--model-out` persists a loadable model whose w matches the run.
+    #[test]
+    fn train_model_out_roundtrips() {
+        let out = std::env::temp_dir().join("dso-cli-train.model");
+        let out_s = out.to_str().unwrap();
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "1", "--cores", "1", "--model-out", out_s
+            ])
+            .unwrap(),
+            0
+        );
+        let model = crate::api::Model::load(&out).unwrap();
+        assert!(model.w.iter().any(|&v| v != 0.0));
+        assert_eq!(model.algorithm, "dso");
+        std::fs::remove_file(&out).ok();
     }
 
     /// `--mode tile` on a build without the `xla` feature must surface

@@ -18,20 +18,27 @@
 //!   trajectory is no longer deterministic (it depends on scheduling),
 //!   but every invariant (feasibility, boxes, weak duality) holds.
 //!
+//! Setup (partitions, packed blocks, stripe tables, cost model, kernel
+//! plan) comes from the shared [`DsoSetup`] — the same constructor the
+//! sync and replay engines use, so `cluster.partition = "balanced"`
+//! is honored here too (this engine used to rebuild its own setup with
+//! hardcoded even partitions and silently ignore it). Kernel dispatch
+//! executes the precompiled [`super::plan::SweepPlan`].
+//! `cluster.updates_per_block` sampling is rejected with an actionable
+//! error: its deterministic draw stream is defined by the synchronous
+//! (epoch, worker, inner-iteration) schedule, which async does not
+//! have — matching the existing AdaGrad-only guard.
+//!
 //! Termination: the leader counts block-visits; an "epoch" is defined
 //! as p² visits (the same work volume as one synchronous epoch), and
 //! the run stops after the configured number of epochs, draining
 //! in-flight blocks.
 
-use super::monitor::{Monitor, TrainResult};
-use super::updates::{
-    sweep_lanes, sweep_lanes_affine, sweep_packed, PackedCtx, PackedState, StepRule,
-};
+use super::engine::DsoSetup;
+use super::monitor::{EpochObserver, Monitor, TrainResult};
+use super::updates::{PackedState, StepRule};
 use crate::config::{StepKind, TrainConfig};
 use crate::data::Dataset;
-use crate::losses::{Loss, Problem, Regularizer};
-use crate::net::CostModel;
-use crate::partition::{PackedBlocks, Partition};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -58,44 +65,58 @@ struct WorkerShared {
 }
 
 /// Train with asynchronous (NOMAD-style) DSO.
+///
+/// Deprecated shim: prefer
+/// `dso::api::Trainer::new(cfg).algorithm(Algorithm::DsoAsync)`.
 pub fn train_dso_async(
     cfg: &TrainConfig,
     train: &Dataset,
     test: Option<&Dataset>,
 ) -> Result<TrainResult> {
-    let p = cfg.workers().min(train.m()).min(train.d()).max(1);
-    let loss = Loss::from(cfg.model.loss);
-    let reg = Regularizer::from(cfg.model.reg);
-    let problem = Problem::new(loss, reg, cfg.model.lambda);
-    let row_part = Partition::even(train.m(), p);
-    let col_part = Partition::even(train.d(), p);
-    let omega = PackedBlocks::build(&train.x, &row_part, &col_part);
-    let y_local = omega.stripe_labels(&train.y);
-    let alpha_bias = omega.stripe_alpha_bias(&train.y);
-    let w_bound = loss.w_bound(cfg.model.lambda);
-    let cost = CostModel::new(
-        cfg.cluster.latency_us,
-        cfg.cluster.bandwidth_mbps,
-        cfg.cluster.cores.max(1),
-    );
+    train_dso_async_with(cfg, train, test, None)
+}
+
+/// [`train_dso_async`] with an optional per-epoch observer (async
+/// evaluates once, at the end of the run).
+pub fn train_dso_async_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     anyhow::ensure!(
         cfg.optim.step == StepKind::AdaGrad,
         "async DSO supports AdaGrad (state travels with blocks); \
          epoch-level η_t schedules need a global clock, which async lacks"
     );
+    anyhow::ensure!(
+        cfg.cluster.updates_per_block == 0,
+        "async DSO sweeps whole blocks: the deterministic updates_per_block \
+         sampling stream is defined by the synchronous (epoch, worker, \
+         inner-iteration) schedule, which async lacks; set \
+         cluster.updates_per_block = 0 or use algorithm = \"dso\""
+    );
+    let setup = DsoSetup::new(cfg, train);
+    // The guard above keeps the plan sampling-free, so the workers'
+    // (epoch, r) = (0, 0) sweep arguments below are inert.
+    debug_assert!(!setup.plan.any_sampled());
+    let p = setup.p;
+    let loss = setup.problem.loss;
     let rule = StepRule::AdaGrad(cfg.optim.eta0);
 
     // Initial state.
     let mut alpha_blocks: Vec<Vec<f32>> = (0..p)
         .map(|q| {
-            row_part
+            setup
+                .omega
+                .row_part
                 .block(q)
                 .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
                 .collect()
         })
         .collect();
     let mut a_acc_blocks: Vec<Vec<f32>> =
-        (0..p).map(|q| vec![0f32; row_part.block_len(q)]).collect();
+        (0..p).map(|q| vec![0f32; setup.omega.row_part.block_len(q)]).collect();
 
     let target_visits = (cfg.optim.epochs as u64) * (p as u64) * (p as u64);
     let mut receivers: Vec<Receiver<Token>> = Vec::with_capacity(p);
@@ -107,7 +128,7 @@ pub fn train_dso_async(
     }
     // Seed: block b starts at worker b.
     for b in 0..p {
-        let range = col_part.block(b);
+        let range = setup.omega.col_part.block(b);
         senders[b]
             .send(Token {
                 block_id: b,
@@ -126,22 +147,22 @@ pub fn train_dso_async(
     };
 
     let wall = Stopwatch::new();
-    let mut monitor = Monitor::new(0); // async: evaluate at the end only
+    let mut monitor = Monitor::observed(0, obs); // async: evaluate at the end only
     let updates_total = AtomicU64::new(0);
 
     std::thread::scope(|scope| {
         let shared = &shared;
         let updates_total = &updates_total;
-        let omega = &omega;
-        let y_local = &y_local;
-        let alpha_bias = &alpha_bias;
+        let setup = &setup;
         let mut handles = Vec::new();
         for (q, rx) in receivers.into_iter().enumerate() {
             let mut alpha = std::mem::take(&mut alpha_blocks[q]);
             let mut a_acc = std::mem::take(&mut a_acc_blocks[q]);
             let mut rng = Xoshiro256::new(cfg.optim.seed ^ (0xA5A5 + q as u64));
-            let lambda = cfg.model.lambda;
             handles.push(scope.spawn(move || {
+                // Sample-index scratch for the plan's sweep signature;
+                // never written (the sampled kernel is rejected above).
+                let mut scratch: Vec<u32> = Vec::new();
                 loop {
                     // Poll with timeout so we observe the stop flag.
                     let mut token = match rx.recv_timeout(std::time::Duration::from_millis(20)) {
@@ -158,38 +179,20 @@ pub fn train_dso_async(
                         shared.parked.lock().unwrap().push(token);
                         continue; // keep draining the queue
                     }
-                    let block = omega.block(q, token.block_id);
-                    let ctx = PackedCtx {
-                        loss,
-                        reg,
-                        lambda,
-                        w_bound,
-                        rule,
-                        inv_col: &omega.inv_col[token.block_id],
-                        inv_col32: &omega.inv_col32[token.block_id],
-                        inv_row: &omega.inv_row[q],
-                        y: &y_local[q],
-                        alpha_bias32: &alpha_bias[q],
-                    };
+                    let block = setup.omega.block(q, token.block_id);
+                    let ctx = setup.packed_ctx(q, token.block_id, rule);
                     let mut st = PackedState {
                         w: &mut token.w,
                         w_acc: &mut token.acc,
                         alpha: &mut alpha,
                         a_acc: &mut a_acc,
                     };
-                    // Same (size, loss)-based dispatch as the bulk-
-                    // synchronous engine: on lane-eligible blocks the
-                    // square loss takes the affine-α kernel, other
-                    // losses the plain lane kernel.
-                    let n = if block.has_lanes() {
-                        if loss.affine_alpha() {
-                            sweep_lanes_affine(block, &ctx, &mut st)
-                        } else {
-                            sweep_lanes(block, &ctx, &mut st)
-                        }
-                    } else {
-                        sweep_packed(block, &ctx, &mut st)
-                    };
+                    // Precompiled dispatch, same plan as the bulk-
+                    // synchronous engine; (epoch, r) = (0, 0) is inert
+                    // for full-sweep kernels.
+                    let n = setup
+                        .plan
+                        .sweep(block, q, token.block_id, 0, 0, &ctx, &mut st, &mut scratch);
                     updates_total.fetch_add(n as u64, Ordering::Relaxed);
                     token.hops += 1;
                     let visits = shared.visits.fetch_add(1, Ordering::AcqRel) + 1;
@@ -231,25 +234,25 @@ pub fn train_dso_async(
     for t in &parked {
         anyhow::ensure!(!seen[t.block_id], "duplicate block {}", t.block_id);
         seen[t.block_id] = true;
-        w[col_part.block(t.block_id)].copy_from_slice(&t.w);
+        w[setup.omega.col_part.block(t.block_id)].copy_from_slice(&t.w);
     }
     let mut alpha = vec![0f32; train.m()];
     for q in 0..p {
-        alpha[row_part.block(q)].copy_from_slice(&alpha_blocks[q]);
+        alpha[setup.omega.row_part.block(q)].copy_from_slice(&alpha_blocks[q]);
     }
 
     let updates = updates_total.load(Ordering::Relaxed);
     let comm_bytes = shared.bytes.load(Ordering::Relaxed);
     // Async has no per-worker barrier; virtual time ≈ wall of the run
     // plus the modeled per-hop latency amortized across p workers.
-    let hop_cost = cost.transfer_secs(0, cfg.cluster.cores, 16 + 8 * (train.d() / p));
+    let hop_cost = setup.cost.transfer_secs(0, cfg.cluster.cores, 16 + 8 * (train.d() / p));
     let virtual_s = wall.elapsed_secs()
         + hop_cost * (shared.visits.load(Ordering::Relaxed) as f64) / p as f64;
 
-    let final_primal = problem.primal(train, &w);
-    let final_gap = final_primal - problem.dual(train, &alpha);
+    let final_primal = setup.problem.primal(train, &w);
+    let final_gap = final_primal - setup.problem.dual(train, &alpha);
     monitor.record_saddle(
-        &problem,
+        &setup.problem,
         train,
         test,
         &w,
@@ -279,6 +282,7 @@ mod tests {
     use super::*;
     use crate::config::TrainConfig;
     use crate::data::synth::SparseSpec;
+    use crate::losses::{Loss, Problem, Regularizer};
 
     fn dataset(seed: u64) -> Dataset {
         SparseSpec {
@@ -378,5 +382,40 @@ mod tests {
         let at_zero = p.primal(&ds, &vec![0.0; ds.d()]);
         assert!(r.final_primal < at_zero);
         assert!(r.final_gap >= -1e-5);
+    }
+
+    #[test]
+    fn async_rejects_updates_per_block_sampling() {
+        // Actionable rejection, matching the AdaGrad-only guard: the
+        // deterministic sampling stream needs the sync schedule.
+        let ds = dataset(7);
+        let mut c = cfg(2, 2);
+        c.cluster.updates_per_block = 5;
+        let err = train_dso_async(&c, &ds, None).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("updates_per_block"), "msg: {msg}");
+        assert!(msg.contains("algorithm = \"dso\""), "msg: {msg}");
+    }
+
+    #[test]
+    fn async_honors_balanced_partition() {
+        // The old engine hardcoded Partition::even and silently ignored
+        // `cluster.partition = "balanced"`. Now setup is shared with the
+        // sync engine: on zipf-skewed data the balanced column stripes
+        // differ from even ones, and the run must still recover every
+        // block and produce a full-width w.
+        let ds = dataset(8);
+        let mut c = cfg(4, 3);
+        c.cluster.partition = crate::config::PartitionKind::Balanced;
+        let setup = DsoSetup::new(&c, &ds);
+        let even = crate::partition::Partition::even(ds.d(), setup.p);
+        assert_ne!(
+            setup.omega.col_part.bounds, even.bounds,
+            "balanced stripes should differ from even on skewed data"
+        );
+        let r = train_dso_async(&c, &ds, None).unwrap();
+        assert_eq!(r.w.len(), ds.d());
+        assert!(r.final_primal.is_finite());
+        assert!(r.total_updates > 0);
     }
 }

@@ -13,18 +13,20 @@
 //! produces bit-identical parameters whether executed on p threads or
 //! replayed serially ([`run_replay`]) — the serializability property of
 //! Lemma 2, enforced by test.
+//!
+//! Kernel selection lives in [`super::plan::SweepPlan`] (precompiled
+//! per block at setup time); this module only executes the plan. The
+//! preferred entry point is the `dso::api::Trainer` facade — the free
+//! functions here are kept as thin shims for existing callers.
 
-use super::monitor::{Monitor, TrainResult};
-use super::updates::{
-    sweep_lanes, sweep_lanes_affine, sweep_packed, sweep_packed_sampled, PackedCtx,
-    PackedState, StepRule,
-};
+use super::monitor::{EpochObserver, Monitor, TrainResult};
+use super::plan::SweepPlan;
+use super::updates::{PackedCtx, PackedState, StepRule};
 use crate::config::{ExecMode, StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::{CostModel, Router, VirtualClock};
 use crate::partition::{PackedBlocks, Partition, RingSchedule, LANES};
-use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
 
@@ -52,19 +54,25 @@ struct WorkerSlot {
     scratch: Vec<u32>,
 }
 
-/// Precomputed, immutable run setup shared by threads.
+/// Precomputed, immutable run setup shared by threads — the one
+/// constructor of partitions, packed blocks, stripe tables, the cost
+/// model, and the kernel dispatch plan, for the sync, replay, *and*
+/// async engines (the async engine used to rebuild its own drifting
+/// copy with hardcoded even partitions).
 pub struct DsoSetup {
     pub problem: Problem,
     pub omega: PackedBlocks,
     /// Per row-stripe label tables (f64) for the packed kernel.
     pub y_local: Vec<Vec<f64>>,
     /// Per row-stripe (y·1/(m|Ω_i|)) as f32 — the square loss's affine
-    /// α-bias precompute consumed by `sweep_lanes_affine`.
+    /// α-bias precompute consumed by the affine lane kernel.
     pub alpha_bias: Vec<Vec<f32>>,
     pub schedule: RingSchedule,
     pub p: usize,
     pub w_bound: f64,
     pub cost: CostModel,
+    /// Precompiled per-block kernel dispatch (PR 1–3 decision tree).
+    pub plan: SweepPlan,
 }
 
 impl DsoSetup {
@@ -73,7 +81,7 @@ impl DsoSetup {
         let loss = Loss::from(cfg.model.loss);
         let reg = Regularizer::from(cfg.model.reg);
         let problem = Problem::new(loss, reg, cfg.model.lambda);
-        let (row_part, col_part) = make_partitions(cfg, train, p);
+        let (row_part, col_part) = Self::make_partitions(cfg, train, p);
         let mut omega = PackedBlocks::build(&train.x, &row_part, &col_part);
         if cfg.cluster.updates_per_block > 0 {
             // Only the subsampled sweep reads the per-entry side
@@ -87,6 +95,8 @@ impl DsoSetup {
             cfg.cluster.bandwidth_mbps,
             cfg.cluster.cores.max(1),
         );
+        let plan =
+            SweepPlan::build(&omega, loss, cfg.cluster.updates_per_block, cfg.optim.seed);
         DsoSetup {
             problem,
             omega,
@@ -96,54 +106,110 @@ impl DsoSetup {
             p,
             w_bound: loss.w_bound(cfg.model.lambda),
             cost,
+            plan,
+        }
+    }
+
+    /// Build row/column partitions per the configured strategy: equal
+    /// index counts, or contiguous blocks balanced by nonzeros so that
+    /// |Ω^(q,r)| ≈ |Ω|/p² even on zipf-skewed data (Theorem 1's load
+    /// assumption).
+    pub fn make_partitions(
+        cfg: &TrainConfig,
+        train: &Dataset,
+        p: usize,
+    ) -> (Partition, Partition) {
+        match cfg.cluster.partition {
+            crate::config::PartitionKind::Even => {
+                (Partition::even(train.m(), p), Partition::even(train.d(), p))
+            }
+            crate::config::PartitionKind::Balanced => {
+                let row_w: Vec<u64> =
+                    (0..train.m()).map(|i| train.x.row_nnz(i) as u64).collect();
+                let col_w: Vec<u64> =
+                    train.x.col_counts().iter().map(|&c| c as u64).collect();
+                // Column (w) stripes are padded to a lane multiple so the
+                // lane-major packed blocks end on chunk boundaries; the
+                // cost is at most LANES/2 columns of imbalance per cut.
+                (
+                    Partition::balanced(&row_w, p),
+                    Partition::balanced(&col_w, p).lane_aligned(LANES),
+                )
+            }
+        }
+    }
+
+    /// The immutable per-sweep kernel context for worker `q` visiting
+    /// w block `block_id` — shared by the sync, replay, and async
+    /// engines so the table wiring can never drift between them again.
+    pub fn packed_ctx(&self, q: usize, block_id: usize, rule: StepRule) -> PackedCtx<'_> {
+        PackedCtx {
+            loss: self.problem.loss,
+            reg: self.problem.reg,
+            lambda: self.problem.lambda,
+            w_bound: self.w_bound,
+            rule,
+            inv_col: &self.omega.inv_col[block_id],
+            inv_col32: &self.omega.inv_col32[block_id],
+            inv_row: &self.omega.inv_row[q],
+            y: &self.y_local[q],
+            alpha_bias32: &self.alpha_bias[q],
         }
     }
 }
 
-/// Build row/column partitions per the configured strategy: equal
-/// index counts, or contiguous blocks balanced by nonzeros so that
-/// |Ω^(q,r)| ≈ |Ω|/p² even on zipf-skewed data (Theorem 1's load
-/// assumption).
+/// Free-function form of [`DsoSetup::make_partitions`], kept for
+/// existing callers (tests pin the balanced/lane-aligned behavior
+/// through this path).
 pub fn make_partitions(
     cfg: &TrainConfig,
     train: &Dataset,
     p: usize,
 ) -> (Partition, Partition) {
-    match cfg.cluster.partition {
-        crate::config::PartitionKind::Even => {
-            (Partition::even(train.m(), p), Partition::even(train.d(), p))
-        }
-        crate::config::PartitionKind::Balanced => {
-            let row_w: Vec<u64> =
-                (0..train.m()).map(|i| train.x.row_nnz(i) as u64).collect();
-            let col_w: Vec<u64> =
-                train.x.col_counts().iter().map(|&c| c as u64).collect();
-            // Column (w) stripes are padded to a lane multiple so the
-            // lane-major packed blocks end on chunk boundaries; the
-            // cost is at most LANES/2 columns of imbalance per cut.
-            (
-                Partition::balanced(&row_w, p),
-                Partition::balanced(&col_w, p).lane_aligned(LANES),
-            )
-        }
-    }
+    DsoSetup::make_partitions(cfg, train, p)
 }
 
 /// Train with DSO (Algorithm 1). `test` enables test-error columns.
+///
+/// Deprecated shim: prefer `dso::api::Trainer`, which owns the
+/// algorithm/mode routing and adds observer streaming.
 pub fn train_dso(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    train_dso_with(cfg, train, test, None)
+}
+
+/// [`train_dso`] with an optional per-epoch observer (the facade's
+/// streaming hook).
+pub fn train_dso_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     if cfg.cluster.mode == ExecMode::Tile {
         anyhow::bail!("tile mode is handled by coordinator::tile::train_dso_tile");
     }
     let setup = DsoSetup::new(cfg, train);
-    run_epochs(cfg, train, test, &setup, false)
+    run_epochs(cfg, train, test, &setup, false, obs)
 }
 
 /// Serial replay of the identical update sequence (Lemma 2): one
 /// thread, same per-(epoch, q, r) ordering. Produces bit-identical
 /// parameters to [`train_dso`]; used by tests and for debugging.
+///
+/// Deprecated shim: prefer `dso::api::Trainer::new(cfg).replay(true)`.
 pub fn run_replay(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    run_replay_with(cfg, train, test, None)
+}
+
+/// [`run_replay`] with an optional per-epoch observer.
+pub fn run_replay_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     let setup = DsoSetup::new(cfg, train);
-    run_epochs(cfg, train, test, &setup, true)
+    run_epochs(cfg, train, test, &setup, true, obs)
 }
 
 fn init_state(
@@ -215,10 +281,11 @@ fn run_epochs(
     test: Option<&Dataset>,
     setup: &DsoSetup,
     replay: bool,
+    obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
     let p = setup.p;
     let (mut slots, init_comm) = init_state(cfg, train, setup);
-    let mut monitor = Monitor::new(cfg.monitor.every);
+    let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut router: Router<WMsg> = Router::new(p, setup.cost);
     let stats = router.stats();
@@ -233,10 +300,9 @@ fn run_epochs(
         };
 
         if replay {
-            run_epoch_serial(cfg, setup, &mut slots, rule, epoch);
+            run_epoch_serial(setup, &mut slots, rule, epoch);
         } else {
-            endpoints =
-                run_epoch_threaded(cfg, setup, &mut slots, rule, epoch, endpoints);
+            endpoints = run_epoch_threaded(setup, &mut slots, rule, epoch, endpoints);
         }
 
         // Bulk synchronization barrier.
@@ -297,38 +363,11 @@ fn assemble(setup: &DsoSetup, slots: &[WorkerSlot]) -> (Vec<f32>, Vec<f32>) {
     (w, alpha)
 }
 
-/// Pick the entries a worker processes this inner iteration: the whole
-/// block (paper default, returns false) or a random sample of `k` flat
-/// entry indices (updates_per_block) written into `out`. The RNG mix
-/// and call sequence match the seed's COO sampling, and both the
-/// threaded and serial paths use the same function — Lemma-2
-/// bit-identity is preserved.
-fn select_indices(
-    nnz: usize,
-    k: usize,
-    seed: u64,
-    epoch: usize,
-    q: usize,
-    r: usize,
-    out: &mut Vec<u32>,
-) -> bool {
-    if k == 0 || k >= nnz {
-        return false;
-    }
-    let mix = seed
-        ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        ^ (q as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
-        ^ (r as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
-    let mut rng = Xoshiro256::new(mix);
-    out.clear();
-    out.extend((0..k).map(|_| rng.gen_index(nnz) as u32));
-    true
-}
-
-/// One block visit: full packed sweep or subsampled updates. Shared by
-/// the threaded and serial epoch loops (identical update sequence).
+/// One block visit: execute the precompiled plan for Ω^(q, block_id)
+/// (full packed/lane sweep or subsampled updates — the decision tree
+/// lives in [`SweepPlan`]). Shared by the threaded and serial epoch
+/// loops (identical update sequence).
 fn visit_block(
-    cfg: &TrainConfig,
     setup: &DsoSetup,
     slot: &mut WorkerSlot,
     rule: StepRule,
@@ -337,52 +376,19 @@ fn visit_block(
 ) -> usize {
     let q = slot.q;
     let block = setup.omega.block(q, slot.block_id);
-    let sampled = select_indices(
-        block.nnz(),
-        cfg.cluster.updates_per_block,
-        cfg.optim.seed,
-        epoch,
-        q,
-        r,
-        &mut slot.scratch,
-    );
-    let ctx = PackedCtx {
-        loss: setup.problem.loss,
-        reg: setup.problem.reg,
-        lambda: cfg.model.lambda,
-        w_bound: setup.w_bound,
-        rule,
-        inv_col: &setup.omega.inv_col[slot.block_id],
-        inv_col32: &setup.omega.inv_col32[slot.block_id],
-        inv_row: &setup.omega.inv_row[q],
-        y: &setup.y_local[q],
-        alpha_bias32: &setup.alpha_bias[q],
-    };
+    let ctx = setup.packed_ctx(q, slot.block_id, rule);
     let mut st = PackedState {
         w: &mut slot.w,
         w_acc: &mut slot.w_acc,
         alpha: &mut slot.alpha,
         a_acc: &mut slot.a_acc,
     };
-    // (Size, loss)-based dispatch: on blocks with lane-eligible row
-    // groups, losses with an affine dual (square) take the closed-form
-    // α kernel and the rest the plain SIMD lane kernel; short-group
-    // blocks and the subsampled path stay on the scalar kernels.
-    if sampled {
-        sweep_packed_sampled(block, &slot.scratch, &ctx, &mut st)
-    } else if block.has_lanes() {
-        if ctx.loss.affine_alpha() {
-            sweep_lanes_affine(block, &ctx, &mut st)
-        } else {
-            sweep_lanes(block, &ctx, &mut st)
-        }
-    } else {
-        sweep_packed(block, &ctx, &mut st)
-    }
+    setup
+        .plan
+        .sweep(block, q, slot.block_id, epoch, r, &ctx, &mut st, &mut slot.scratch)
 }
 
 fn run_epoch_threaded(
-    cfg: &TrainConfig,
     setup: &DsoSetup,
     slots: &mut Vec<WorkerSlot>,
     rule: StepRule,
@@ -404,7 +410,7 @@ fn run_epoch_threaded(
                         for r in 0..p {
                             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
                             let t0 = std::time::Instant::now();
-                            let n = visit_block(cfg, setup, &mut slot, rule, epoch, r);
+                            let n = visit_block(setup, &mut slot, rule, epoch, r);
                             slot.updates += n as u64;
                             slot.clock.add_compute(t0.elapsed().as_secs_f64());
 
@@ -446,7 +452,6 @@ fn run_epoch_threaded(
 /// serializes to. No network involved; comm costs are charged from the
 /// cost model directly.
 fn run_epoch_serial(
-    cfg: &TrainConfig,
     setup: &DsoSetup,
     slots: &mut [WorkerSlot],
     rule: StepRule,
@@ -458,7 +463,7 @@ fn run_epoch_serial(
         for slot in slots.iter_mut() {
             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(slot.q, r));
             let t0 = std::time::Instant::now();
-            let n = visit_block(cfg, setup, slot, rule, epoch, r);
+            let n = visit_block(setup, slot, rule, epoch, r);
             slot.updates += n as u64;
             slot.clock.add_compute(t0.elapsed().as_secs_f64());
         }

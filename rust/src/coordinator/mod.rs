@@ -3,32 +3,28 @@
 pub mod async_engine;
 pub mod engine;
 pub mod monitor;
+pub mod plan;
 pub mod tile;
 pub mod updates;
 
 pub use async_engine::train_dso_async;
 pub use engine::{run_replay, train_dso, DsoSetup};
-pub use monitor::{EvalRow, Monitor, TrainResult};
+pub use monitor::{EpochObserver, EvalRow, Monitor, TrainResult};
+pub use plan::{PlannedKernel, SweepPlan};
 
-use crate::config::{Algorithm, TrainConfig};
+use crate::config::TrainConfig;
 use crate::data::Dataset;
 use anyhow::Result;
 
 /// Train with the algorithm selected in the config — DSO or one of the
-/// paper's baselines. The one-stop entry point used by the CLI,
-/// examples, and experiment drivers.
+/// paper's baselines.
+///
+/// Deprecated shim: the `Algorithm` × `ExecMode` routing now lives in
+/// the [`crate::api::Trainer`] facade, which this delegates to. Prefer
+/// `Trainer::new(cfg.clone()).fit(train, test)` — it adds observer
+/// streaming, replay, and the `Fitted` artifact.
 pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
-    match cfg.optim.algorithm {
-        Algorithm::Dso => {
-            if cfg.cluster.mode == crate::config::ExecMode::Tile {
-                tile::train_dso_tile(cfg, train, test)
-            } else {
-                train_dso(cfg, train, test)
-            }
-        }
-        Algorithm::DsoAsync => async_engine::train_dso_async(cfg, train, test),
-        Algorithm::Sgd => crate::baselines::sgd::train_sgd(cfg, train, test),
-        Algorithm::Psgd => crate::baselines::psgd::train_psgd(cfg, train, test),
-        Algorithm::Bmrm => crate::baselines::bmrm::train_bmrm(cfg, train, test),
-    }
+    crate::api::Trainer::new(cfg.clone())
+        .fit(train, test)
+        .map(crate::api::Fitted::into_result)
 }

@@ -5,10 +5,27 @@
 //! duality gap where the algorithm maintains duals, test error, and
 //! both time axes ("number of iterations" and "time spent" — here
 //! simulated cluster time plus measured wall time).
+//!
+//! Rows can additionally be *streamed* to an [`EpochObserver`] as they
+//! are recorded (the `dso::api::Trainer` facade wires one through
+//! every engine), so callers see convergence live instead of only via
+//! the collected history table.
 
 use crate::data::Dataset;
 use crate::losses::Problem;
 use crate::util::csv::Table;
+
+/// Per-epoch callback: receives every [`EvalRow`] the moment the
+/// monitor records it. Implemented for any `FnMut(&EvalRow)` closure.
+pub trait EpochObserver {
+    fn on_epoch(&mut self, row: &EvalRow);
+}
+
+impl<F: FnMut(&EvalRow)> EpochObserver for F {
+    fn on_epoch(&mut self, row: &EvalRow) {
+        self(row)
+    }
+}
 
 pub const HISTORY_COLUMNS: [&str; 9] = [
     "epoch",
@@ -22,17 +39,26 @@ pub const HISTORY_COLUMNS: [&str; 9] = [
     "comm_bytes",
 ];
 
-/// Collects per-epoch evaluation rows.
-#[derive(Clone, Debug)]
-pub struct Monitor {
+/// Collects per-epoch evaluation rows, optionally streaming each row
+/// to an [`EpochObserver`] as it is recorded.
+pub struct Monitor<'a> {
     pub history: Table,
     /// Evaluate every `every` epochs (0 = only on demand).
     pub every: usize,
+    observer: Option<&'a mut dyn EpochObserver>,
 }
 
-impl Monitor {
-    pub fn new(every: usize) -> Monitor {
-        Monitor { history: Table::new(&HISTORY_COLUMNS), every }
+impl<'a> Monitor<'a> {
+    pub fn new(every: usize) -> Monitor<'a> {
+        Monitor { history: Table::new(&HISTORY_COLUMNS), every, observer: None }
+    }
+
+    /// A monitor that also streams every recorded row to `observer`.
+    pub fn observed(
+        every: usize,
+        observer: Option<&'a mut dyn EpochObserver>,
+    ) -> Monitor<'a> {
+        Monitor { history: Table::new(&HISTORY_COLUMNS), every, observer }
     }
 
     pub fn due(&self, epoch: usize) -> bool {
@@ -148,6 +174,9 @@ impl Monitor {
             r.updates as f64,
             r.comm_bytes as f64,
         ]);
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_epoch(&r);
+        }
     }
 
     pub fn last_primal(&self) -> Option<f64> {
@@ -248,5 +277,21 @@ mod tests {
         let m = Monitor::new(1);
         assert_eq!(m.history.columns.len(), HISTORY_COLUMNS.len());
         assert_eq!(m.history.columns[5], "gap");
+    }
+
+    #[test]
+    fn observer_streams_every_recorded_row() {
+        let (p, ds) = setup();
+        let mut seen: Vec<(usize, f64)> = Vec::new();
+        let mut obs = |row: &EvalRow| seen.push((row.epoch, row.primal));
+        let mut m = Monitor::observed(1, Some(&mut obs));
+        let w = vec![0.5f32, -0.5];
+        let alpha = vec![0.5f32, -0.5];
+        let r1 = m.record_saddle(&p, &ds, None, &w, &alpha, 1, 0.0, 0.0, 1, 0);
+        let r2 = m.record_primal(&p, &ds, None, &w, 2, 0.0, 0.0, 2, 0);
+        let rows = m.history.len();
+        drop(m); // release the observer's borrow of `seen`
+        assert_eq!(rows, 2);
+        assert_eq!(seen, vec![(1, r1.primal), (2, r2.primal)]);
     }
 }

@@ -1,0 +1,332 @@
+//! `SweepPlan` — the per-run, per-block precompiled kernel dispatch
+//! table.
+//!
+//! PRs 1–3 grew a `has_lanes()` / `affine_alpha()` / short-group /
+//! sampled decision tree that was copy-pasted into both the
+//! bulk-synchronous engine and the async worker loop, and was already
+//! drifting between them. The tree is *static per run*: which kernel a
+//! block takes depends only on the block's shape (`has_lanes`), the
+//! loss (`affine_alpha`), and the sampling configuration
+//! (`cluster.updates_per_block` vs the block's nnz) — none of which
+//! change between inner iterations. So the plan compiles the whole
+//! tree once, at setup time, into a `block → kernel` table; engines
+//! just call [`SweepPlan::sweep`].
+//!
+//! Dispatch rules (pinned by the unit tests below, matching PR 3):
+//!
+//! * `0 < updates_per_block < nnz` → [`PlannedKernel::Sampled`]
+//!   (scalar subsampled updates; the draw stream is the deterministic
+//!   `(seed, epoch, q, r)` mix, identical bit for bit to the PR 1–3
+//!   engines, so Lemma-2 replay identity is preserved).
+//! * otherwise, blocks with a lane-eligible row group take the SIMD
+//!   kernels: losses with an affine dual (square) the closed-form
+//!   α kernel [`PlannedKernel::LanesAffine`], the rest the plain lane
+//!   kernel [`PlannedKernel::Lanes`].
+//! * blocks with no lane-eligible group stay on the scalar
+//!   [`PlannedKernel::Packed`] kernel.
+//!
+//! Adding a solver variant (SPDC, mini-batch SDCA, …) means adding a
+//! kernel and one arm *here* — not a new branch tree per engine.
+
+use super::updates::{
+    sweep_lanes, sweep_lanes_affine, sweep_packed, sweep_packed_sampled, PackedCtx,
+    PackedState,
+};
+use crate::losses::Loss;
+use crate::partition::{PackedBlock, PackedBlocks};
+use crate::util::rng::Xoshiro256;
+
+/// The kernel a block is planned to run. One entry per (q, b) block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedKernel {
+    /// Scalar packed sweep (no lane-eligible row group).
+    Packed,
+    /// SIMD lane sweep (8-wide w side, scalar α recurrence).
+    Lanes,
+    /// Closed-form affine-α lane sweep (square loss only).
+    LanesAffine,
+    /// Subsampled scalar updates: `k` flat entry draws per visit.
+    Sampled {
+        /// `cluster.updates_per_block`, guaranteed `0 < k < nnz`.
+        k: usize,
+    },
+}
+
+/// Per-run precompiled dispatch table: `(q, b) → kernel`.
+///
+/// Built once by `DsoSetup` from `(PackedBlocks, Loss, sampling
+/// config)`; shared read-only by every worker thread.
+pub struct SweepPlan {
+    /// kernels[q * p + b] = kernel for block Ω^(q, b).
+    kernels: Vec<PlannedKernel>,
+    p: usize,
+    /// `optim.seed` — the sampled path's RNG mix base.
+    seed: u64,
+}
+
+impl SweepPlan {
+    /// Compile the dispatch table. `updates_per_block` is the sampling
+    /// configuration (0 = full sweeps, the paper default).
+    pub fn build(
+        omega: &PackedBlocks,
+        loss: Loss,
+        updates_per_block: usize,
+        seed: u64,
+    ) -> SweepPlan {
+        let p = omega.p;
+        let mut kernels = Vec::with_capacity(p * p);
+        for q in 0..p {
+            for b in 0..p {
+                kernels.push(plan_block(omega.block(q, b), loss, updates_per_block));
+            }
+        }
+        SweepPlan { kernels, p, seed }
+    }
+
+    /// The kernel planned for block Ω^(q, b).
+    #[inline]
+    pub fn kernel(&self, q: usize, b: usize) -> PlannedKernel {
+        self.kernels[q * self.p + b]
+    }
+
+    /// Whether any block is planned to run the subsampled kernel.
+    pub fn any_sampled(&self) -> bool {
+        self.kernels.iter().any(|k| matches!(k, PlannedKernel::Sampled { .. }))
+    }
+
+    /// Execute the planned kernel for block Ω^(q, b) once. `epoch`/`r`
+    /// feed the deterministic sampling stream (ignored by full-sweep
+    /// kernels); `scratch` is the caller's reusable sample-index buffer
+    /// (no per-iteration allocation). Returns #updates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep(
+        &self,
+        block: &PackedBlock,
+        q: usize,
+        b: usize,
+        epoch: usize,
+        r: usize,
+        ctx: &PackedCtx,
+        st: &mut PackedState,
+        scratch: &mut Vec<u32>,
+    ) -> usize {
+        match self.kernel(q, b) {
+            PlannedKernel::Sampled { k } => {
+                draw_indices(block.nnz(), k, self.seed, epoch, q, r, scratch);
+                sweep_packed_sampled(block, scratch, ctx, st)
+            }
+            PlannedKernel::LanesAffine => sweep_lanes_affine(block, ctx, st),
+            PlannedKernel::Lanes => sweep_lanes(block, ctx, st),
+            PlannedKernel::Packed => sweep_packed(block, ctx, st),
+        }
+    }
+}
+
+/// The decision tree, in one place (formerly duplicated across
+/// `engine.rs::visit_block` and the async worker loop).
+fn plan_block(block: &PackedBlock, loss: Loss, updates_per_block: usize) -> PlannedKernel {
+    if updates_per_block > 0 && updates_per_block < block.nnz() {
+        PlannedKernel::Sampled { k: updates_per_block }
+    } else if block.has_lanes() {
+        if loss.affine_alpha() {
+            PlannedKernel::LanesAffine
+        } else {
+            PlannedKernel::Lanes
+        }
+    } else {
+        PlannedKernel::Packed
+    }
+}
+
+/// Draw the `k` flat entry indices a worker processes this inner
+/// iteration into `out`. The RNG mix and call sequence match the
+/// seed's COO sampling, and both the threaded and serial paths use the
+/// same function — Lemma-2 bit-identity is preserved. Callers only
+/// reach this with `0 < k < nnz` (the plan's `Sampled` precondition).
+fn draw_indices(
+    nnz: usize,
+    k: usize,
+    seed: u64,
+    epoch: usize,
+    q: usize,
+    r: usize,
+    out: &mut Vec<u32>,
+) {
+    debug_assert!(k > 0 && k < nnz);
+    let mix = seed
+        ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (q as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ (r as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    let mut rng = Xoshiro256::new(mix);
+    out.clear();
+    out.extend((0..k).map(|_| rng.gen_index(nnz) as u32));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SparseSpec;
+    use crate::partition::{Partition, LANES};
+
+    /// A dataset whose Ω-blocks contain lane-eligible groups at p=2
+    /// (long rows) — the shape the lane kernels target.
+    fn long_row_blocks(p: usize) -> PackedBlocks {
+        let ds = SparseSpec {
+            name: "plan-long".into(),
+            m: 60,
+            d: 120,
+            nnz_per_row: 40.0,
+            zipf_s: 0.2,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 3,
+        }
+        .generate();
+        let omega = PackedBlocks::build(
+            &ds.x,
+            &Partition::even(ds.m(), p),
+            &Partition::even(ds.d(), p),
+        );
+        assert!(
+            (0..p).any(|q| (0..p).any(|b| omega.block(q, b).has_lanes())),
+            "fixture must contain lane-eligible blocks"
+        );
+        omega
+    }
+
+    /// A dataset whose Ω-blocks have only short groups at p=4 (few
+    /// entries per row per column stripe).
+    fn short_row_blocks(p: usize) -> PackedBlocks {
+        let ds = SparseSpec {
+            name: "plan-short".into(),
+            m: 80,
+            d: 64,
+            nnz_per_row: 4.0,
+            zipf_s: 0.7,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 5,
+        }
+        .generate();
+        let omega = PackedBlocks::build(
+            &ds.x,
+            &Partition::even(ds.m(), p),
+            &Partition::even(ds.d(), p),
+        );
+        assert!(
+            (0..p).all(|q| (0..p).all(|b| !omega.block(q, b).has_lanes())),
+            "fixture must have no lane-eligible block"
+        );
+        omega
+    }
+
+    #[test]
+    fn lane_blocks_take_lane_kernels_per_loss() {
+        // PR 3 rule: affine dual (square) → LanesAffine; hinge/logistic
+        // → Lanes; never Packed on a lane-eligible block.
+        let omega = long_row_blocks(2);
+        for (loss, want) in [
+            (Loss::Square, PlannedKernel::LanesAffine),
+            (Loss::Hinge, PlannedKernel::Lanes),
+            (Loss::Logistic, PlannedKernel::Lanes),
+        ] {
+            let plan = SweepPlan::build(&omega, loss, 0, 1);
+            for q in 0..2 {
+                for b in 0..2 {
+                    let k = plan.kernel(q, b);
+                    if omega.block(q, b).has_lanes() {
+                        assert_eq!(k, want, "loss {loss:?} block ({q},{b})");
+                    } else {
+                        assert_eq!(k, PlannedKernel::Packed, "loss {loss:?} block ({q},{b})");
+                    }
+                }
+            }
+            assert!(!plan.any_sampled());
+        }
+    }
+
+    #[test]
+    fn short_group_blocks_stay_scalar() {
+        let omega = short_row_blocks(4);
+        for loss in [Loss::Square, Loss::Hinge, Loss::Logistic] {
+            let plan = SweepPlan::build(&omega, loss, 0, 1);
+            for q in 0..4 {
+                for b in 0..4 {
+                    assert_eq!(plan.kernel(q, b), PlannedKernel::Packed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_overrides_lane_dispatch() {
+        // 0 < k < nnz forces the scalar subsampled kernel even on
+        // lane-eligible square-loss blocks (PR 2/3 rule: sampling draws
+        // logical indices; the lane layout is bypassed).
+        let omega = long_row_blocks(2);
+        let plan = SweepPlan::build(&omega, Loss::Square, 5, 1);
+        for q in 0..2 {
+            for b in 0..2 {
+                let nnz = omega.block(q, b).nnz();
+                let k = plan.kernel(q, b);
+                if nnz > 5 {
+                    assert_eq!(k, PlannedKernel::Sampled { k: 5 });
+                } else {
+                    assert_ne!(k, PlannedKernel::Sampled { k: 5 });
+                }
+            }
+        }
+        assert!(plan.any_sampled());
+    }
+
+    #[test]
+    fn oversized_sample_count_falls_back_to_full_sweep() {
+        // k >= nnz means a "sample" would cover the block: the engines
+        // have always fallen back to the full sweep (and its lane
+        // dispatch) in that case.
+        let omega = long_row_blocks(2);
+        let max_nnz = (0..2)
+            .flat_map(|q| (0..2).map(move |b| (q, b)))
+            .map(|(q, b)| omega.block(q, b).nnz())
+            .max()
+            .unwrap();
+        let plan = SweepPlan::build(&omega, Loss::Hinge, max_nnz, 1);
+        for q in 0..2 {
+            for b in 0..2 {
+                let block = omega.block(q, b);
+                let expect = if max_nnz < block.nnz() {
+                    // unreachable by construction, but keep the rule explicit
+                    PlannedKernel::Sampled { k: max_nnz }
+                } else if block.has_lanes() {
+                    PlannedKernel::Lanes
+                } else {
+                    PlannedKernel::Packed
+                };
+                assert_eq!(plan.kernel(q, b), expect);
+            }
+        }
+        assert!(!plan.any_sampled());
+    }
+
+    #[test]
+    fn lane_eligibility_matches_block_predicate() {
+        // The plan's Lanes/Packed split must agree with the PR 2
+        // predicate it precompiles, for both fixtures.
+        for omega in [long_row_blocks(2), short_row_blocks(4)] {
+            let p = omega.p;
+            let plan = SweepPlan::build(&omega, Loss::Hinge, 0, 9);
+            for q in 0..p {
+                for b in 0..p {
+                    let lanes = omega.block(q, b).has_lanes();
+                    assert_eq!(
+                        plan.kernel(q, b) == PlannedKernel::Lanes,
+                        lanes,
+                        "({q},{b}) lane_groups disagree"
+                    );
+                }
+            }
+        }
+        // And lane eligibility itself is the LANES threshold.
+        assert_eq!(LANES, 8);
+    }
+}

@@ -9,16 +9,29 @@
 //! Implemented in full once `runtime::artifacts` are built — see
 //! `train_dso_tile`.
 
-use super::monitor::TrainResult;
+use super::monitor::{EpochObserver, TrainResult};
 use crate::config::TrainConfig;
 use crate::data::Dataset;
 use anyhow::Result;
 
 /// Train DSO with tile-batched block updates through the PJRT runtime.
+///
+/// Deprecated shim: prefer
+/// `dso::api::Trainer::new(cfg).mode(ExecMode::Tile)`.
 pub fn train_dso_tile(
     cfg: &TrainConfig,
     train: &Dataset,
     test: Option<&Dataset>,
 ) -> Result<TrainResult> {
-    crate::runtime::tile_engine::train(cfg, train, test)
+    train_dso_tile_with(cfg, train, test, None)
+}
+
+/// [`train_dso_tile`] with an optional per-epoch observer.
+pub fn train_dso_tile_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
+    crate::runtime::tile_engine::train_with(cfg, train, test, obs)
 }

@@ -1,7 +1,9 @@
 //! The saddle-point update kernels — Eq. (8) plus AdaGrad and the
 //! App. B projections. This is DSO's hot path for sparse data: every
 //! worker calls one of the packed sweeps once per inner iteration on
-//! its active block Ω^(q, σ_r(q)).
+//! its active block Ω^(q, σ_r(q)). Which sweep a block takes is
+//! precompiled per run by [`super::plan::SweepPlan`]; the engines no
+//! longer carry the decision tree.
 //!
 //! Update for a sampled nonzero (i, j) with x = x_ij:
 //!
@@ -34,7 +36,8 @@
 //!   is identical to [`sweep_lanes`]. Hinge/logistic
 //!   (whose per-entry projection is load-bearing) fall back to
 //!   `sweep_lanes` bit for bit, as do short groups and the sampled
-//!   path — the engines only route square-loss lane blocks here.
+//!   path — the dispatch plan ([`super::plan::SweepPlan`]) only routes
+//!   square-loss lane blocks here.
 //!
 //!   **Numerics**: tolerance-equivalent (≤1e-5 relative per sweep,
 //!   property-tested in `tests/alpha_lane.rs`), *not* bit-identical, to
@@ -77,9 +80,9 @@
 //!   α_i and its AdaGrad accumulator, 1/(m|Ω_i|)) is loaded once per
 //!   row group instead of once per nonzero; α stays in a register
 //!   across the group (rounded through f32 after each update, exactly
-//!   as the store/reload of the reference path rounds it). The engines
-//!   use it for blocks with no lane-eligible group
-//!   (`PackedBlock::has_lanes`), and [`sweep_packed_sampled`] — the
+//!   as the store/reload of the reference path rounds it). The plan
+//!   routes blocks with no lane-eligible group
+//!   (`PackedBlock::has_lanes`) here, and [`sweep_packed_sampled`] — the
 //!   `updates_per_block` variant, which resolves each sampled entry's
 //!   row through the cold `entry_group` side table (one load, no
 //!   binary search) — for the subsampled path.
@@ -704,9 +707,9 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
 /// points.
 ///
 /// Non-affine losses (hinge, logistic) delegate to [`sweep_lanes`] bit
-/// for bit, so calling this entry point is always correct; the engines
-/// nevertheless dispatch it only for `Loss::affine_alpha()` blocks to
-/// keep their routing explicit. Groups shorter than `LANES` run the
+/// for bit, so calling this entry point is always correct; the dispatch
+/// plan nevertheless routes only `Loss::affine_alpha()` blocks here to
+/// keep the planned kernels explicit. Groups shorter than `LANES` run the
 /// scalar group loop (bit-identical to [`sweep_packed`]). Returns
 /// #updates (sentinel padding excluded).
 pub fn sweep_lanes_affine(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {

@@ -58,7 +58,7 @@ pub fn run_and_save(
     out_dir: &Path,
 ) -> Result<TrainResult> {
     let t0 = std::time::Instant::now();
-    let r = crate::coordinator::train(cfg, train, test)?;
+    let r = crate::api::Trainer::new(cfg.clone()).fit(train, test)?.into_result();
     let dir = out_dir.join(exp);
     std::fs::create_dir_all(&dir)?;
     r.history.write_csv(&dir.join(format!("{label}.csv")))?;

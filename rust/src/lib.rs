@@ -13,7 +13,15 @@
 //! * **L2/L1 (python/, build-time only)** — a JAX model plus a Pallas
 //!   tile-update kernel, AOT-lowered to HLO text and executed from Rust
 //!   through the PJRT CPU client (`runtime`).
+//!
+//! The one entry point for training is the [`api::Trainer`] facade
+//! (see DESIGN.md §Solver-API): it routes `Algorithm` × `ExecMode`
+//! over every engine, streams per-epoch rows to an observer, and
+//! returns a [`api::Fitted`] artifact with `predict` and model
+//! persistence. The per-engine free functions remain as thin
+//! deprecated shims.
 
+pub mod api;
 pub mod baselines;
 pub mod cli;
 pub mod config;

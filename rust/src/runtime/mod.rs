@@ -18,14 +18,23 @@ pub mod tile_engine;
 pub mod tile_engine {
     //! Stub tile engine used when the `xla` feature is disabled.
     use crate::config::TrainConfig;
-    use crate::coordinator::monitor::TrainResult;
+    use crate::coordinator::monitor::{EpochObserver, TrainResult};
     use crate::data::Dataset;
     use anyhow::Result;
 
     pub fn train(
+        cfg: &TrainConfig,
+        train: &Dataset,
+        test: Option<&Dataset>,
+    ) -> Result<TrainResult> {
+        train_with(cfg, train, test, None)
+    }
+
+    pub fn train_with(
         _cfg: &TrainConfig,
         _train: &Dataset,
         _test: Option<&Dataset>,
+        _obs: Option<&mut dyn EpochObserver>,
     ) -> Result<TrainResult> {
         anyhow::bail!(
             "tile mode requires the PJRT runtime; rebuild with \

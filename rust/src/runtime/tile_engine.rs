@@ -19,7 +19,7 @@
 use super::artifacts::Manifest;
 use super::pjrt::{lit_mat, lit_to_vec, lit_vec, PjrtRuntime};
 use crate::config::{StepKind, TrainConfig};
-use crate::coordinator::monitor::{Monitor, TrainResult};
+use crate::coordinator::monitor::{EpochObserver, Monitor, TrainResult};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
 use crate::net::{CostModel, VirtualClock};
@@ -42,6 +42,17 @@ struct BlockTiles {
 }
 
 pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
+    train_with(cfg, train, test, None)
+}
+
+/// [`train`] with an optional per-epoch observer (the facade's
+/// streaming hook).
+pub fn train_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     anyhow::ensure!(
         cfg.optim.step == StepKind::AdaGrad,
         "tile engine implements the paper's AdaGrad configuration (App. B); \
@@ -182,7 +193,7 @@ pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Resu
     let params_lit = lit_vec(&params);
 
     let mut clocks = vec![VirtualClock::new(); p];
-    let mut monitor = Monitor::new(cfg.monitor.every);
+    let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut updates: u64 = 0;
     let mut comm_bytes: u64 = 0;

@@ -1,0 +1,225 @@
+//! Facade pinning: every `Algorithm` × `ExecMode` route through
+//! `dso::api::Trainer` must (a) return the same history schema
+//! (`HISTORY_COLUMNS`) and (b) be bit-identical to the pre-refactor
+//! free functions on a pinned seed config — the API redesign moved the
+//! routing and the kernel dispatch, not the trajectories.
+
+use dso::api::{Model, Trainer};
+use dso::config::{Algorithm, ExecMode, TrainConfig};
+use dso::coordinator::monitor::HISTORY_COLUMNS;
+use dso::coordinator::{EvalRow, TrainResult};
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+
+fn dataset(seed: u64) -> Dataset {
+    SparseSpec {
+        name: "trainer-api".into(),
+        m: 300,
+        d: 80,
+        nnz_per_row: 6.0,
+        zipf_s: 0.7,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        seed,
+    }
+    .generate()
+}
+
+/// The pinned seed config the bit-identity assertions run under.
+fn base_cfg(algo: Algorithm, p: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = algo;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.2;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = p;
+    cfg.cluster.cores = 1;
+    cfg.monitor.every = 1;
+    cfg
+}
+
+fn fit(cfg: &TrainConfig) -> TrainResult {
+    Trainer::new(cfg.clone()).fit(&dataset(3), None).unwrap().into_result()
+}
+
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, label: &str) {
+    assert_eq!(a.w, b.w, "{label}: w moved");
+    assert_eq!(a.alpha, b.alpha, "{label}: alpha moved");
+    assert_eq!(a.total_updates, b.total_updates, "{label}: update count moved");
+    assert_eq!(a.algorithm, b.algorithm, "{label}: algorithm label moved");
+}
+
+#[test]
+fn trainer_dso_matches_free_function_bitwise() {
+    let ds = dataset(3);
+    let cfg = base_cfg(Algorithm::Dso, 3, 4);
+    let old = dso::coordinator::train_dso(&cfg, &ds, None).unwrap();
+    assert_bit_identical(&fit(&cfg), &old, "dso/scalar");
+}
+
+#[test]
+fn trainer_replay_matches_run_replay_bitwise() {
+    let ds = dataset(3);
+    let cfg = base_cfg(Algorithm::Dso, 3, 4);
+    let old = dso::coordinator::run_replay(&cfg, &ds, None).unwrap();
+    let new = Trainer::new(cfg).replay(true).fit(&ds, None).unwrap().into_result();
+    assert_bit_identical(&new, &old, "dso/replay");
+    // And replay itself is still Lemma-2-identical to the threaded run.
+    let threaded = fit(&base_cfg(Algorithm::Dso, 3, 4));
+    assert_eq!(new.w, threaded.w);
+    assert_eq!(new.alpha, threaded.alpha);
+}
+
+#[test]
+fn trainer_sampled_route_matches_free_function_bitwise() {
+    // The subsampled kernel's draw stream moved into SweepPlan; the
+    // sequence must not have changed.
+    let ds = dataset(3);
+    let mut cfg = base_cfg(Algorithm::Dso, 2, 3);
+    cfg.cluster.updates_per_block = 5;
+    let old = dso::coordinator::train_dso(&cfg, &ds, None).unwrap();
+    assert_bit_identical(&fit(&cfg), &old, "dso/sampled");
+    let replayed = Trainer::new(cfg).replay(true).fit(&ds, None).unwrap().into_result();
+    assert_eq!(old.w, replayed.w, "sampled replay identity");
+}
+
+#[test]
+fn trainer_async_single_worker_matches_free_function_bitwise() {
+    // Async trajectories depend on scheduling at p > 1; p = 1 is the
+    // deterministic pinning point (one worker, one circulating block).
+    let ds = dataset(3);
+    let cfg = base_cfg(Algorithm::DsoAsync, 1, 3);
+    let old = dso::coordinator::train_dso_async(&cfg, &ds, None).unwrap();
+    assert_bit_identical(&fit(&cfg), &old, "dso-async/p1");
+}
+
+#[test]
+fn trainer_baselines_match_free_functions_bitwise() {
+    let ds = dataset(3);
+    for (algo, label) in [
+        (Algorithm::Sgd, "sgd"),
+        (Algorithm::Psgd, "psgd"),
+        (Algorithm::Bmrm, "bmrm"),
+    ] {
+        let cfg = base_cfg(algo, 2, 4);
+        let old = match algo {
+            Algorithm::Sgd => dso::baselines::sgd::train_sgd(&cfg, &ds, None).unwrap(),
+            Algorithm::Psgd => dso::baselines::psgd::train_psgd(&cfg, &ds, None).unwrap(),
+            Algorithm::Bmrm => dso::baselines::bmrm::train_bmrm(&cfg, &ds, None).unwrap(),
+            _ => unreachable!(),
+        };
+        assert_bit_identical(&fit(&cfg), &old, label);
+    }
+}
+
+#[test]
+fn every_route_returns_the_same_history_schema() {
+    let ds = dataset(3);
+    let (train, test) = ds.split(0.25, 7);
+    for algo in [
+        Algorithm::Dso,
+        Algorithm::DsoAsync,
+        Algorithm::Sgd,
+        Algorithm::Psgd,
+        Algorithm::Bmrm,
+    ] {
+        let cfg = base_cfg(algo, 2, 3);
+        let r = Trainer::new(cfg)
+            .fit(&train, Some(&test))
+            .unwrap()
+            .into_result();
+        let want: Vec<String> = HISTORY_COLUMNS.iter().map(|s| s.to_string()).collect();
+        assert_eq!(r.history.columns, want, "{algo:?} history schema");
+        assert!(!r.history.rows.is_empty(), "{algo:?} recorded no rows");
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn trainer_tile_route_reports_the_stub_error() {
+    // Same actionable error through the facade as through the old
+    // coordinator::train routing.
+    let ds = dataset(3);
+    let cfg = base_cfg(Algorithm::Dso, 2, 2);
+    let new_err = Trainer::new(cfg.clone())
+        .mode(ExecMode::Tile)
+        .fit(&ds, None)
+        .unwrap_err();
+    let mut old_cfg = cfg;
+    old_cfg.cluster.mode = ExecMode::Tile;
+    let old_err = dso::coordinator::train(&old_cfg, &ds, None).unwrap_err();
+    for err in [&new_err, &old_err] {
+        let msg = format!("{err}");
+        assert!(msg.contains("tile mode requires the PJRT runtime"), "msg: {msg}");
+        assert!(msg.contains("--features xla"), "msg: {msg}");
+    }
+}
+
+#[test]
+fn replay_on_non_dso_routes_is_an_actionable_error() {
+    let ds = dataset(3);
+    for algo in [Algorithm::Sgd, Algorithm::DsoAsync, Algorithm::Bmrm] {
+        let err = Trainer::new(base_cfg(algo, 2, 2))
+            .replay(true)
+            .fit(&ds, None)
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("replay"), "{algo:?}: {msg}");
+        assert!(msg.contains("algorithm = \"dso\""), "{algo:?}: {msg}");
+    }
+}
+
+#[test]
+fn observer_streams_exactly_the_history_rows() {
+    let ds = dataset(5);
+    let (train, test) = ds.split(0.25, 7);
+    let cfg = base_cfg(Algorithm::Dso, 2, 5);
+    let mut streamed: Vec<EvalRow> = Vec::new();
+    let mut on_epoch = |row: &EvalRow| streamed.push(*row);
+    let r = Trainer::new(cfg)
+        .observer(&mut on_epoch)
+        .fit(&train, Some(&test))
+        .unwrap()
+        .into_result();
+    assert_eq!(streamed.len(), r.history.len(), "one callback per recorded row");
+    let primal = r.history.col("primal").unwrap();
+    let epochs = r.history.col("epoch").unwrap();
+    for (k, row) in streamed.iter().enumerate() {
+        assert_eq!(row.epoch as f64, epochs[k]);
+        assert_eq!(row.primal, primal[k]);
+        assert_eq!(row.gap, row.primal - row.dual);
+    }
+}
+
+#[test]
+fn fitted_predict_and_model_roundtrip_through_training() {
+    let ds = dataset(9);
+    let (train, test) = ds.split(0.25, 7);
+    let cfg = base_cfg(Algorithm::Dso, 2, 10);
+    let fitted = Trainer::new(cfg).fit(&train, Some(&test)).unwrap();
+
+    // predict() margins agree with the dataset's own error definition.
+    let margins = fitted.predict(&test.x).unwrap();
+    assert_eq!(margins.len(), test.m());
+    let labels = fitted.predict_labels(&test.x).unwrap();
+    let wrong = labels
+        .iter()
+        .zip(&test.y)
+        .filter(|(a, b)| (**a - **b).abs() > 1e-6)
+        .count();
+    let err = wrong as f64 / test.m() as f64;
+    assert!((err - fitted.error(&test)).abs() < 1e-12);
+
+    // Save/load round trip is bit-exact and predicts identically.
+    let path = std::env::temp_dir().join("dso-trainer-api.model");
+    fitted.save(&path).unwrap();
+    let model = Model::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(model.w.len(), fitted.w().len());
+    for (a, b) in fitted.w().iter().zip(&model.w) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(model.predict(&test.x).unwrap(), margins);
+    assert_eq!(model.algorithm, "dso");
+}

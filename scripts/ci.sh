@@ -19,6 +19,25 @@ cargo fmt --all -- --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --workspace --all-targets -- -D warnings
 
+echo "== kernel dispatch lives only in SweepPlan =="
+# PR 4 moved the has_lanes()/affine_alpha() kernel-selection tree out
+# of the engines into rust/src/coordinator/plan.rs. If dispatch logic
+# leaks back into an engine, fail loudly: it is exactly the
+# copy-paste drift this gate exists to prevent.
+if grep -n "has_lanes\|affine_alpha" \
+    rust/src/coordinator/engine.rs \
+    rust/src/coordinator/async_engine.rs \
+    rust/src/runtime/tile_engine.rs; then
+    echo "ci.sh: kernel selection leaked back into an engine;" \
+         "dispatch belongs in rust/src/coordinator/plan.rs" >&2
+    exit 1
+fi
+
+echo "== cargo build --examples =="
+# The five examples are the facade's public face; they must always
+# compile against the current dso::api::Trainer surface.
+cargo build --examples
+
 echo "== lane kernel property suite present =="
 # The SIMD sweep's correctness story rests on tests/lane_kernel.rs; if
 # the suite is ever renamed, filtered out, or deleted, fail loudly
