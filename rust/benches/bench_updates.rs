@@ -13,13 +13,18 @@
 //!                so a chunk's α recurrence is 8 FMAs instead of 8
 //!                sequential gradient evaluations).
 //!
+//! * `simd_*`   — the explicit-SIMD backend pair: the portable
+//!                (autovec) lane kernel vs the AVX2 gather/FMA backend
+//!                on the same block (portable-only where avx2+fma is
+//!                absent).
+//!
 //! Acceptance targets: packed ≥2× the reference, lanes ≥1.5× packed,
 //! both as median updates/sec on the same 64k-entry block. Run with
 //! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all kernels),
-//! `BENCH_lanes.json` (the scalar-vs-lane pair) and
-//! `BENCH_alpha_lanes.json` (the square-loss scalar-α-vs-affine-α
-//! pair) — the CI smoke tracks all three so the perf trajectory is
-//! recorded across PRs.
+//! `BENCH_lanes.json` (the scalar-vs-lane pair), `BENCH_alpha_lanes.json`
+//! (the square-loss scalar-α-vs-affine-α pair) and `BENCH_simd.json`
+//! (the portable-vs-AVX2 backend pair) — the CI smoke tracks all four
+//! so the perf trajectory is recorded across PRs.
 
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
@@ -27,7 +32,7 @@ use dso::coordinator::updates::{
 };
 use dso::data::synth::SparseSpec;
 use dso::losses::{Loss, Regularizer};
-use dso::partition::{PackedBlocks, Partition};
+use dso::partition::{PackedBlock, PackedBlocks, Partition};
 use dso::util::bench::{human_time, Runner};
 
 fn main() {
@@ -216,7 +221,104 @@ fn main() {
             }
         }
     }
+    // --- Explicit-SIMD backend pair (BENCH_simd.json) ---
+    // Portable vs AVX2 on the same standard 64k-entry block, one plain
+    // lane case (hinge/adagrad — gathers + η batch dominate) and one
+    // affine case (square/fixed — gathers + coefficient lanes). On
+    // hosts without avx2+fma only the portable side is recorded, so
+    // the artifact stays well-defined for the cross-PR trajectory.
+    let mut simd_runner = Runner::from_env("simd");
+    {
+        use dso::coordinator::updates::{sweep_lanes_affine_with, sweep_lanes_with};
+        use dso::simd::Portable;
+
+        for (loss, rname, rule, affine) in [
+            (Loss::Hinge, "adagrad", StepRule::AdaGrad(0.1), false),
+            (Loss::Square, "fixed", StepRule::Fixed(0.1), true),
+        ] {
+            let pctx = PackedCtx {
+                loss,
+                reg: Regularizer::L2,
+                lambda,
+                w_bound: loss.w_bound(lambda),
+                rule,
+                inv_col: &omega.inv_col[0],
+                inv_col32: &omega.inv_col32[0],
+                inv_row: &omega.inv_row[0],
+                y: &y_local[0],
+                alpha_bias32: &alpha_bias[0],
+            };
+            let kernel_p: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize = if affine {
+                sweep_lanes_affine_with::<Portable>
+            } else {
+                sweep_lanes_with::<Portable>
+            };
+            let portable_name = format!("simd_portable_{}_{rname}", loss.name());
+            let mut pw = vec![0.01f32; ds.d()];
+            let mut pw_acc = vec![0f32; ds.d()];
+            let mut palpha = vec![0f32; ds.m()];
+            let mut pa_acc = vec![0f32; ds.m()];
+            simd_runner.bench_units(&portable_name, n as u64, || {
+                let mut st = PackedState {
+                    w: &mut pw,
+                    w_acc: &mut pw_acc,
+                    alpha: &mut palpha,
+                    a_acc: &mut pa_acc,
+                };
+                kernel_p(block, &pctx, &mut st)
+            });
+
+            #[cfg(target_arch = "x86_64")]
+            {
+                if dso::simd::avx2_supported() {
+                    use dso::coordinator::updates::{sweep_lanes_affine_avx2, sweep_lanes_avx2};
+                    let avx2_name = format!("simd_avx2_{}_{rname}", loss.name());
+                    let mut aw = vec![0.01f32; ds.d()];
+                    let mut aw_acc = vec![0f32; ds.d()];
+                    let mut aalpha = vec![0f32; ds.m()];
+                    let mut aa_acc = vec![0f32; ds.m()];
+                    simd_runner.bench_units(&avx2_name, n as u64, || {
+                        let mut st = PackedState {
+                            w: &mut aw,
+                            w_acc: &mut aw_acc,
+                            alpha: &mut aalpha,
+                            a_acc: &mut aa_acc,
+                        };
+                        // SAFETY: inside the avx2_supported() guard;
+                        // the fused entry points are what the plan
+                        // dispatches in production, so this measures
+                        // the real kernel.
+                        unsafe {
+                            if affine {
+                                sweep_lanes_affine_avx2(block, &pctx, &mut st)
+                            } else {
+                                sweep_lanes_avx2(block, &pctx, &mut st)
+                            }
+                        }
+                    });
+                    let median = |name: &str| {
+                        simd_runner.results.iter().find(|r| r.name == name).map(|r| r.median())
+                    };
+                    if let (Some(pm), Some(am)) = (median(&portable_name), median(&avx2_name))
+                    {
+                        println!(
+                            "    -> avx2 {:.1} M upd/s ({}/upd)  speedup vs portable {:.2}x",
+                            n as f64 / am / 1e6,
+                            human_time(am / n as f64),
+                            pm / am
+                        );
+                    }
+                } else {
+                    println!("    -> avx2 backend unavailable on this host; portable only");
+                }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            println!("    -> avx2 backend unavailable (non-x86_64); portable only");
+        }
+    }
+
     runner.finish("updates");
     lane_runner.finish("lanes");
     alpha_runner.finish("alpha_lanes");
+    simd_runner.finish("simd");
 }

@@ -44,7 +44,7 @@
 //! | `tile::train_dso_tile` | `.mode(ExecMode::Tile)` |
 //! | `baselines::{sgd,psgd,bmrm}::train_*` | `.algorithm(Algorithm::{Sgd,Psgd,Bmrm})` |
 
-use crate::config::{Algorithm, ExecMode, LossKind, RegKind, TrainConfig};
+use crate::config::{Algorithm, ExecMode, LossKind, RegKind, SimdKind, TrainConfig};
 use crate::coordinator::monitor::{EpochObserver, TrainResult};
 use crate::data::{Csr, Dataset};
 use anyhow::Result;
@@ -73,6 +73,17 @@ impl<'a> Trainer<'a> {
     /// or the tile/PJRT path.
     pub fn mode(mut self, mode: ExecMode) -> Self {
         self.cfg.cluster.mode = mode;
+        self
+    }
+
+    /// Pin the SIMD kernel backend (`cluster.simd`, default
+    /// [`SimdKind::Auto`] = runtime detection). `Portable` forces the
+    /// autovec baseline — bit-identical to the pre-backend kernels —
+    /// for reproducibility; `Avx2` forces the gather/FMA backend and
+    /// fails validation on hosts without avx2+fma (never a silent
+    /// fallback). The CLI override is `--simd {auto,portable,avx2}`.
+    pub fn simd(mut self, kind: SimdKind) -> Self {
+        self.cfg.cluster.simd = kind;
         self
     }
 

@@ -3,7 +3,8 @@
 //! ```text
 //! dso train  [--config run.toml] [--data NAME] [--algo dso|sgd|psgd|bmrm]
 //!            [--loss hinge|logistic|square] [--lambda X] [--epochs N]
-//!            [--machines M] [--cores C] [--mode scalar|tile] [--scale S]
+//!            [--machines M] [--cores C] [--mode scalar|tile]
+//!            [--simd auto|portable|avx2] [--scale S]
 //!            [--eta0 X] [--dcd-init] [--replay] [--out results/run.csv]
 //!            [--model-out model.dso] [--path f.libsvm]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
@@ -15,7 +16,12 @@
 //!
 //! `train` drives the [`crate::api::Trainer`] facade: `--replay` runs
 //! the Lemma-2 serial replay of the scalar DSO engine, `--model-out`
-//! persists the fitted w in the libsvm-style model format.
+//! persists the fitted w in the libsvm-style model format, and
+//! `--simd` pins the SIMD kernel backend (`auto` = runtime detection;
+//! `portable` = the autovec baseline, bit-identical to the
+//! pre-backend kernels; `avx2` = force the gather/FMA backend —
+//! rejected, not silently degraded, on hosts without avx2+fma). The
+//! override exists for benchmarking and reproducibility.
 
 pub mod args;
 
@@ -79,6 +85,9 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("mode") {
         cfg.cluster.mode = crate::config::ExecMode::parse(v).map_err(anyhow::Error::msg)?;
     }
+    if let Some(v) = args.get("simd") {
+        cfg.cluster.simd = crate::config::SimdKind::parse(v).map_err(anyhow::Error::msg)?;
+    }
     cfg.model.lambda = args.get_f64("lambda", cfg.model.lambda).map_err(anyhow::Error::msg)?;
     cfg.optim.epochs = args.get_usize("epochs", cfg.optim.epochs).map_err(anyhow::Error::msg)?;
     cfg.optim.eta0 = args.get_f64("eta0", cfg.optim.eta0).map_err(anyhow::Error::msg)?;
@@ -107,7 +116,7 @@ pub fn load_dataset(cfg: &TrainConfig) -> Result<crate::data::Dataset> {
 
 fn cmd_train(args: &Args) -> Result<i32> {
     args.check_known(&[
-        "config", "data", "path", "algo", "loss", "mode", "lambda", "epochs", "eta0",
+        "config", "data", "path", "algo", "loss", "mode", "simd", "lambda", "epochs", "eta0",
         "dcd-init", "replay", "seed", "machines", "cores", "scale", "data-seed", "out",
         "model-out", "test-frac",
     ])
@@ -259,6 +268,37 @@ mod tests {
     #[test]
     fn train_rejects_unknown_flag() {
         assert!(run(&["train", "--lamda", "0.1"]).is_err());
+    }
+
+    /// `--simd portable` pins the backend through the CLI; a bogus
+    /// backend name is an actionable parse error.
+    #[test]
+    fn train_simd_override() {
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "1", "--cores", "1", "--simd", "portable"
+            ])
+            .unwrap(),
+            0
+        );
+        let err = run(&["train", "--data", "real-sim", "--simd", "avx512"]).unwrap_err();
+        assert!(format!("{err}").contains("simd backend"), "{err}");
+        // Forcing avx2 either runs (host supports it) or fails with
+        // the validate() message naming the fix — never silent.
+        let forced = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1",
+            "--machines", "1", "--cores", "1", "--simd", "avx2",
+        ]);
+        if dso_simd_supported() {
+            assert_eq!(forced.unwrap(), 0);
+        } else {
+            assert!(format!("{}", forced.unwrap_err()).contains("avx2"));
+        }
+    }
+
+    fn dso_simd_supported() -> bool {
+        crate::simd::avx2_supported()
     }
 
     /// `--replay` reaches the Lemma-2 serial replay through the facade

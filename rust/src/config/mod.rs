@@ -129,6 +129,42 @@ impl PartitionKind {
     }
 }
 
+/// Which SIMD kernel backend the scalar-mode sweeps use (DESIGN.md
+/// §SIMD-backend). Resolved once per run by `simd::resolve` and
+/// recorded in the sweep plan; the CLI override is `--simd`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdKind {
+    /// Runtime detection: AVX2+FMA when the CPU has them, else the
+    /// portable backend (the default).
+    Auto,
+    /// Force the autovectorized portable backend (bit-identical to the
+    /// pre-backend kernels — the reproducibility baseline).
+    Portable,
+    /// Force the AVX2 backend. Rejected by `validate()` on hosts
+    /// without avx2+fma, so a benchmark override can never silently
+    /// fall back.
+    Avx2,
+}
+
+impl SimdKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(SimdKind::Auto),
+            "portable" | "scalar" => Ok(SimdKind::Portable),
+            "avx2" => Ok(SimdKind::Avx2),
+            other => Err(format!("unknown simd backend '{other}' (auto|portable|avx2)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdKind::Auto => "auto",
+            SimdKind::Portable => "portable",
+            SimdKind::Avx2 => "avx2",
+        }
+    }
+}
+
 /// How DSO executes block updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -222,6 +258,8 @@ pub struct ClusterConfig {
     pub tile_iters: usize,
     /// Row/column partitioning strategy.
     pub partition: PartitionKind,
+    /// SIMD kernel backend request (auto = runtime detection).
+    pub simd: SimdKind,
 }
 
 impl Default for ClusterConfig {
@@ -235,6 +273,7 @@ impl Default for ClusterConfig {
             updates_per_block: 0,
             tile_iters: 8,
             partition: PartitionKind::Even,
+            simd: SimdKind::Auto,
         }
     }
 }
@@ -322,6 +361,9 @@ impl TrainConfig {
         if let Some(s) = doc.get_str("cluster.partition") {
             c.cluster.partition = PartitionKind::parse(s)?;
         }
+        if let Some(s) = doc.get_str("cluster.simd") {
+            c.cluster.simd = SimdKind::parse(s)?;
+        }
 
         c.monitor.every = usize_of("monitor.every", c.monitor.every);
         if let Some(s) = doc.get_str("monitor.out") {
@@ -350,6 +392,13 @@ impl TrainConfig {
         }
         if self.optim.epochs == 0 {
             return Err("epochs must be >= 1".into());
+        }
+        if self.cluster.simd == SimdKind::Avx2 && !crate::simd::avx2_supported() {
+            return Err(
+                "cluster.simd = \"avx2\" but this CPU does not support avx2+fma; \
+                 use simd = \"auto\" (runtime detection) or \"portable\""
+                    .into(),
+            );
         }
         if self.model.loss == LossKind::Square && self.model.reg == RegKind::L1 {
             // LASSO is supported by the losses module; the DSO projection
@@ -437,6 +486,26 @@ out = "results/x.csv"
         assert_eq!(StepKind::parse("invsqrt").unwrap(), StepKind::InvSqrt);
         assert_eq!(ExecMode::parse("tile").unwrap(), ExecMode::Tile);
         assert!(RegKind::parse("l3").is_err());
+        assert_eq!(SimdKind::parse("auto").unwrap(), SimdKind::Auto);
+        assert_eq!(SimdKind::parse("portable").unwrap(), SimdKind::Portable);
+        assert_eq!(SimdKind::parse("avx2").unwrap(), SimdKind::Avx2);
+        assert!(SimdKind::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn simd_kind_parses_from_toml_and_validates_against_host() {
+        let c = TrainConfig::from_toml("[cluster]\nsimd = \"portable\"\n").unwrap();
+        assert_eq!(c.cluster.simd, SimdKind::Portable);
+        assert_eq!(TrainConfig::default().cluster.simd, SimdKind::Auto);
+        // Forcing avx2 is valid exactly when the host supports it —
+        // never a silent fallback.
+        let forced = TrainConfig::from_toml("[cluster]\nsimd = \"avx2\"\n");
+        if crate::simd::avx2_supported() {
+            assert_eq!(forced.unwrap().cluster.simd, SimdKind::Avx2);
+        } else {
+            let err = forced.unwrap_err();
+            assert!(err.contains("avx2"), "{err}");
+        }
     }
 
     #[test]

@@ -65,8 +65,9 @@ pub struct DsoSetup {
     /// Per row-stripe label tables (f64) for the packed kernel.
     pub y_local: Vec<Vec<f64>>,
     /// Per row-stripe (y·1/(m|Ω_i|)) as f32 — the square loss's affine
-    /// α-bias precompute consumed by the affine lane kernel.
-    pub alpha_bias: Vec<Vec<f32>>,
+    /// α-bias precompute consumed by the affine lane kernel
+    /// (64-byte-aligned per the §Alignment contract).
+    pub alpha_bias: Vec<crate::simd::AVec<f32>>,
     pub schedule: RingSchedule,
     pub p: usize,
     pub w_bound: f64,
@@ -95,8 +96,20 @@ impl DsoSetup {
             cfg.cluster.bandwidth_mbps,
             cfg.cluster.cores.max(1),
         );
-        let plan =
-            SweepPlan::build(&omega, loss, cfg.cluster.updates_per_block, cfg.optim.seed);
+        // Resolve the SIMD backend once per run (the only
+        // feature-detection site in the engine stack) and record it in
+        // the plan's backend dimension. Validating callers have
+        // already rejected a forced-avx2 request on unsupported hosts;
+        // `resolve` panics rather than silently degrading for any
+        // caller that skipped validation.
+        let simd = crate::simd::resolve(cfg.cluster.simd);
+        let plan = SweepPlan::build(
+            &omega,
+            loss,
+            cfg.cluster.updates_per_block,
+            cfg.optim.seed,
+            simd,
+        );
         DsoSetup {
             problem,
             omega,
@@ -173,6 +186,7 @@ pub fn make_partitions(
 ///
 /// Deprecated shim: prefer `dso::api::Trainer`, which owns the
 /// algorithm/mode routing and adds observer streaming.
+#[deprecated(since = "0.1.0", note = "use dso::api::Trainer")]
 pub fn train_dso(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
     train_dso_with(cfg, train, test, None)
 }
@@ -197,6 +211,7 @@ pub fn train_dso_with(
 /// parameters to [`train_dso`]; used by tests and for debugging.
 ///
 /// Deprecated shim: prefer `dso::api::Trainer::new(cfg).replay(true)`.
+#[deprecated(since = "0.1.0", note = "use dso::api::Trainer::replay(true)")]
 pub fn run_replay(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
     run_replay_with(cfg, train, test, None)
 }
@@ -492,6 +507,9 @@ fn run_epoch_serial(
 }
 
 #[cfg(test)]
+// The shim entry points stay under test on purpose: these suites pin
+// them bit-for-bit against the facade (see tests/trainer_api.rs).
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::config::{Algorithm, StepKind, TrainConfig};
@@ -635,6 +653,43 @@ mod tests {
         // ≤ 5 updates × p inner iters × p workers × epochs.
         assert!(r.total_updates <= (5 * 2 * 2 * 2) as u64);
         assert!(r.total_updates > 0);
+    }
+
+    #[test]
+    fn setup_records_resolved_simd_backend() {
+        // The backend is resolved exactly once, in DsoSetup, and lives
+        // in the plan's backend dimension; engines never re-detect.
+        let ds = dataset(60, 40, 43);
+        let mut cfg = base_cfg(2, 1);
+        cfg.cluster.simd = crate::config::SimdKind::Portable;
+        let setup = DsoSetup::new(&cfg, &ds);
+        assert_eq!(setup.plan.simd(), crate::simd::SimdLevel::Portable);
+        cfg.cluster.simd = crate::config::SimdKind::Auto;
+        let setup = DsoSetup::new(&cfg, &ds);
+        assert_eq!(setup.plan.simd(), crate::simd::resolve(crate::config::SimdKind::Auto));
+    }
+
+    #[test]
+    fn forced_portable_backend_is_bit_identical_to_prior_kernels() {
+        // `--simd portable` pins the run to the pre-backend (PR 3)
+        // kernels; with auto resolving to portable (non-AVX2 host) the
+        // trajectories must be bitwise equal, and on any host the
+        // portable run must be deterministic and replay-identical.
+        let ds = dataset(150, 48, 47);
+        let mut cfg = base_cfg(2, 3);
+        cfg.cluster.simd = crate::config::SimdKind::Portable;
+        let a = train_dso(&cfg, &ds, None).unwrap();
+        let b = run_replay(&cfg, &ds, None).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.alpha, b.alpha);
+        if crate::simd::resolve(crate::config::SimdKind::Auto)
+            == crate::simd::SimdLevel::Portable
+        {
+            cfg.cluster.simd = crate::config::SimdKind::Auto;
+            let c = train_dso(&cfg, &ds, None).unwrap();
+            assert_eq!(a.w, c.w);
+            assert_eq!(a.alpha, c.alpha);
+        }
     }
 
     #[test]

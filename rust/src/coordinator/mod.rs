@@ -7,8 +7,14 @@ pub mod plan;
 pub mod tile;
 pub mod updates;
 
+// The deprecated shims stay re-exported (their callers get the
+// deprecation note, not a broken path); the allow silences the warning
+// on the re-export itself.
+#[allow(deprecated)]
 pub use async_engine::train_dso_async;
-pub use engine::{run_replay, train_dso, DsoSetup};
+pub use engine::DsoSetup;
+#[allow(deprecated)]
+pub use engine::{run_replay, train_dso};
 pub use monitor::{EpochObserver, EvalRow, Monitor, TrainResult};
 pub use plan::{PlannedKernel, SweepPlan};
 
@@ -23,6 +29,7 @@ use anyhow::Result;
 /// the [`crate::api::Trainer`] facade, which this delegates to. Prefer
 /// `Trainer::new(cfg.clone()).fit(train, test)` — it adds observer
 /// streaming, replay, and the `Fitted` artifact.
+#[deprecated(since = "0.1.0", note = "use dso::api::Trainer")]
 pub fn train(cfg: &TrainConfig, train: &Dataset, test: Option<&Dataset>) -> Result<TrainResult> {
     crate::api::Trainer::new(cfg.clone())
         .fit(train, test)

@@ -25,15 +25,28 @@
 //! * blocks with no lane-eligible group stay on the scalar
 //!   [`PlannedKernel::Packed`] kernel.
 //!
+//! Since PR 5 the table also carries a **backend dimension**
+//! (DESIGN.md §SIMD-backend): the [`SimdLevel`] resolved once per run
+//! by `simd::resolve` — runtime CPU-feature detection, or the
+//! `--simd` override — is recorded here, and [`SweepPlan::sweep`]
+//! dispatches the lane kernels' portable-autovec or AVX2
+//! monomorphization accordingly. Engines stay free of both the kernel
+//! decision tree *and* feature detection (`scripts/ci.sh` greps for
+//! either leaking back); the scalar kernels (`Packed`/`Sampled`) are
+//! backend-independent by construction.
+//!
 //! Adding a solver variant (SPDC, mini-batch SDCA, …) means adding a
 //! kernel and one arm *here* — not a new branch tree per engine.
 
+#[cfg(target_arch = "x86_64")]
+use super::updates::{sweep_lanes_affine_avx2, sweep_lanes_avx2};
 use super::updates::{
     sweep_lanes, sweep_lanes_affine, sweep_packed, sweep_packed_sampled, PackedCtx,
     PackedState,
 };
 use crate::losses::Loss;
 use crate::partition::{PackedBlock, PackedBlocks};
+use crate::simd::SimdLevel;
 use crate::util::rng::Xoshiro256;
 
 /// The kernel a block is planned to run. One entry per (q, b) block.
@@ -62,16 +75,22 @@ pub struct SweepPlan {
     p: usize,
     /// `optim.seed` — the sampled path's RNG mix base.
     seed: u64,
+    /// The SIMD backend the lane kernels run on — resolved once per
+    /// run (the plan table's backend dimension).
+    simd: SimdLevel,
 }
 
 impl SweepPlan {
     /// Compile the dispatch table. `updates_per_block` is the sampling
-    /// configuration (0 = full sweeps, the paper default).
+    /// configuration (0 = full sweeps, the paper default); `simd` is
+    /// the backend resolved by `simd::resolve` — the **only** place a
+    /// backend enters the engine stack.
     pub fn build(
         omega: &PackedBlocks,
         loss: Loss,
         updates_per_block: usize,
         seed: u64,
+        simd: SimdLevel,
     ) -> SweepPlan {
         let p = omega.p;
         let mut kernels = Vec::with_capacity(p * p);
@@ -80,7 +99,13 @@ impl SweepPlan {
                 kernels.push(plan_block(omega.block(q, b), loss, updates_per_block));
             }
         }
-        SweepPlan { kernels, p, seed }
+        SweepPlan { kernels, p, seed, simd }
+    }
+
+    /// The SIMD backend every lane sweep of this run executes with.
+    #[inline]
+    pub fn simd(&self) -> SimdLevel {
+        self.simd
     }
 
     /// The kernel planned for block Ω^(q, b).
@@ -115,8 +140,33 @@ impl SweepPlan {
                 draw_indices(block.nnz(), k, self.seed, epoch, q, r, scratch);
                 sweep_packed_sampled(block, scratch, ctx, st)
             }
-            PlannedKernel::LanesAffine => sweep_lanes_affine(block, ctx, st),
-            PlannedKernel::Lanes => sweep_lanes(block, ctx, st),
+            PlannedKernel::LanesAffine => match self.simd {
+                SimdLevel::Portable => sweep_lanes_affine(block, ctx, st),
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx2 => {
+                    // SAFETY: the Avx2 level only enters a plan through
+                    // `simd::resolve`, i.e. behind runtime avx2+fma
+                    // detection — the entry point's feature contract
+                    // holds for the whole run.
+                    unsafe { sweep_lanes_affine_avx2(block, ctx, st) }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                // Unreachable by construction (`resolve` never returns
+                // Avx2 off x86_64); degrade to portable rather than
+                // panic in a release build.
+                SimdLevel::Avx2 => sweep_lanes_affine(block, ctx, st),
+            },
+            PlannedKernel::Lanes => match self.simd {
+                SimdLevel::Portable => sweep_lanes(block, ctx, st),
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx2 => {
+                    // SAFETY: see the LanesAffine arm — Avx2 is only
+                    // planned behind runtime detection.
+                    unsafe { sweep_lanes_avx2(block, ctx, st) }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                SimdLevel::Avx2 => sweep_lanes(block, ctx, st),
+            },
             PlannedKernel::Packed => sweep_packed(block, ctx, st),
         }
     }
@@ -230,7 +280,7 @@ mod tests {
             (Loss::Hinge, PlannedKernel::Lanes),
             (Loss::Logistic, PlannedKernel::Lanes),
         ] {
-            let plan = SweepPlan::build(&omega, loss, 0, 1);
+            let plan = SweepPlan::build(&omega, loss, 0, 1, SimdLevel::Portable);
             for q in 0..2 {
                 for b in 0..2 {
                     let k = plan.kernel(q, b);
@@ -249,7 +299,7 @@ mod tests {
     fn short_group_blocks_stay_scalar() {
         let omega = short_row_blocks(4);
         for loss in [Loss::Square, Loss::Hinge, Loss::Logistic] {
-            let plan = SweepPlan::build(&omega, loss, 0, 1);
+            let plan = SweepPlan::build(&omega, loss, 0, 1, SimdLevel::Portable);
             for q in 0..4 {
                 for b in 0..4 {
                     assert_eq!(plan.kernel(q, b), PlannedKernel::Packed);
@@ -264,7 +314,7 @@ mod tests {
         // lane-eligible square-loss blocks (PR 2/3 rule: sampling draws
         // logical indices; the lane layout is bypassed).
         let omega = long_row_blocks(2);
-        let plan = SweepPlan::build(&omega, Loss::Square, 5, 1);
+        let plan = SweepPlan::build(&omega, Loss::Square, 5, 1, SimdLevel::Portable);
         for q in 0..2 {
             for b in 0..2 {
                 let nnz = omega.block(q, b).nnz();
@@ -290,7 +340,7 @@ mod tests {
             .map(|(q, b)| omega.block(q, b).nnz())
             .max()
             .unwrap();
-        let plan = SweepPlan::build(&omega, Loss::Hinge, max_nnz, 1);
+        let plan = SweepPlan::build(&omega, Loss::Hinge, max_nnz, 1, SimdLevel::Portable);
         for q in 0..2 {
             for b in 0..2 {
                 let block = omega.block(q, b);
@@ -309,12 +359,36 @@ mod tests {
     }
 
     #[test]
+    fn plan_records_the_backend_dimension() {
+        // The resolved SimdLevel is part of the plan — the one place
+        // the run's backend lives. The kernel table itself is
+        // backend-independent (same PlannedKernel per block either
+        // way); only sweep()'s lane dispatch differs.
+        let omega = long_row_blocks(2);
+        for level in [SimdLevel::Portable, crate::simd::resolve(crate::config::SimdKind::Auto)]
+        {
+            let plan = SweepPlan::build(&omega, Loss::Hinge, 0, 1, level);
+            assert_eq!(plan.simd(), level);
+            for q in 0..2 {
+                for b in 0..2 {
+                    assert_eq!(
+                        plan.kernel(q, b),
+                        SweepPlan::build(&omega, Loss::Hinge, 0, 1, SimdLevel::Portable)
+                            .kernel(q, b),
+                        "kernel table must not depend on the backend"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn lane_eligibility_matches_block_predicate() {
         // The plan's Lanes/Packed split must agree with the PR 2
         // predicate it precompiles, for both fixtures.
         for omega in [long_row_blocks(2), short_row_blocks(4)] {
             let p = omega.p;
-            let plan = SweepPlan::build(&omega, Loss::Hinge, 0, 9);
+            let plan = SweepPlan::build(&omega, Loss::Hinge, 0, 9, SimdLevel::Portable);
             for q in 0..p {
                 for b in 0..p {
                     let lanes = omega.block(q, b).has_lanes();

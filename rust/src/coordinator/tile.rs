@@ -18,6 +18,7 @@ use anyhow::Result;
 ///
 /// Deprecated shim: prefer
 /// `dso::api::Trainer::new(cfg).mode(ExecMode::Tile)`.
+#[deprecated(since = "0.1.0", note = "use dso::api::Trainer::mode(ExecMode::Tile)")]
 pub fn train_dso_tile(
     cfg: &TrainConfig,
     train: &Dataset,

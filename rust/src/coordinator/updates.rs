@@ -51,8 +51,8 @@
 //!   Within a row group every entry touches a *distinct* w column, so
 //!   the w side of the update is conflict-free and batches into
 //!   [`LANES`] (= 8) f32 value lanes: per chunk the kernel gathers 8
-//!   (w_j, x, 1/|Ω̄_j|) triples, evaluates ∇φ ([`RegK::grad_lane`]),
-//!   the gradient FMA, the step rule (`StepK::eta_lane` — AdaGrad's
+//!   (w_j, x, 1/|Ω̄_j|) triples, evaluates ∇φ ([`RegK::grad_lane_b`]),
+//!   the gradient FMA, the step rule (`StepK::eta_lane_b` — AdaGrad's
 //!   accumulate/√/divide becomes one 8-wide op each) and the box clamp
 //!   full-width branch-free (sentinel-padded lanes compute garbage that
 //!   is *never stored*), then scatters the first `len` lanes back. The
@@ -62,13 +62,25 @@
 //!   kernel's. Groups shorter than `LANES` fall back to the scalar
 //!   group loop (same code path as [`sweep_packed`]).
 //!
+//!   **Backends** (DESIGN.md §SIMD-backend): every lane-granular op —
+//!   the chunk gather included — goes through the
+//!   [`SimdBackend`](crate::simd::SimdBackend) the sweep was
+//!   monomorphized with. [`sweep_lanes`] is the
+//!   [`Portable`](crate::simd::Portable) (autovec, bit-identical to
+//!   PR 3) instantiation; [`sweep_lanes_with`] exposes the generic so
+//!   `SweepPlan` can dispatch the AVX2 gather/FMA backend selected
+//!   once per run by CPU detection — engines and kernels stay
+//!   dispatch-free.
+//!
 //!   **Numerics**: the w side computes in f32 (that is what buys the
 //!   8-wide vectors), so `sweep_lanes` is *tolerance-equivalent* to the
 //!   scalar kernel — ≤1e-5 relative after a sweep, property-tested in
-//!   `tests/lane_kernel.rs` — not bit-identical. Threaded ≡ replay
-//!   bit-identity is unaffected (both executions dispatch to the same
-//!   kernel); tests that pin exact trajectories stay on the scalar
-//!   path.
+//!   `tests/lane_kernel.rs` — not bit-identical. The AVX2 backend
+//!   additionally contracts multiply-adds into FMAs, so backends are
+//!   tolerance-equivalent (not bit-identical) to *each other*;
+//!   threaded ≡ replay bit-identity is unaffected *within* a backend
+//!   (both executions dispatch to the same planned kernel). Tests that
+//!   pin exact trajectories stay on the scalar or portable path.
 //!
 //! * [`sweep_packed`] — the scalar packed kernel. The `(Loss,
 //!   Regularizer, StepRule)` triple is dispatched **once per sweep**
@@ -106,6 +118,7 @@ use crate::losses::kernel::{
 use crate::losses::{Loss, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
 use crate::partition::omega::{Entry, PackedBlock, LANES};
+use crate::simd::{Portable, SimdBackend};
 
 /// Which step rule the sweep applies.
 #[derive(Clone, Copy, Debug)]
@@ -188,8 +201,10 @@ pub struct PackedState<'a> {
 // ---------------------------------------------------------------------
 
 /// Step rule resolved at compile time. `eta` may update the AdaGrad
-/// accumulator in place; the fixed rule ignores it. `eta_lane` is the
-/// 8-wide f32 batch used by the lane kernel's w side.
+/// accumulator in place; the fixed rule ignores it. `eta_lane_b` is
+/// the 8-wide f32 batch used by the lane kernel's w side, routed
+/// through the sweep's [`SimdBackend`] (AdaGrad's accumulate/√/divide
+/// is one backend op; the fixed rule is a splat on any backend).
 trait StepK: Copy {
     /// Whether the rule reads/writes per-coordinate accumulators —
     /// lets the lane kernel skip the accumulator gather/scatter
@@ -198,7 +213,7 @@ trait StepK: Copy {
 
     fn eta(self, acc: &mut f32, g: f64) -> f64;
 
-    fn eta_lane(self, acc: &mut Lane, g: &Lane) -> Lane;
+    fn eta_lane_b<B: SimdBackend>(self, acc: &mut Lane, g: &Lane) -> Lane;
 
     /// Fold one LANES-chunk of the **affine** α recurrence
     /// ([`AffineLossK`] losses, i.e. square): `cv[k]` holds the
@@ -236,7 +251,7 @@ impl StepK for FixedStep {
     }
 
     #[inline(always)]
-    fn eta_lane(self, _acc: &mut Lane, _g: &Lane) -> Lane {
+    fn eta_lane_b<B: SimdBackend>(self, _acc: &mut Lane, _g: &Lane) -> Lane {
         [self.0 as f32; LANES]
     }
 
@@ -282,20 +297,12 @@ impl StepK for AdaGradStep {
         self.0 / (ADAGRAD_EPS + a).sqrt()
     }
 
-    /// f32 lane batch: accumulate, √, divide — one 8-wide op each
-    /// (this is where the lane kernel wins most; the scalar path pays
-    /// a serial f64 sqrt + div per coordinate).
+    /// f32 lane batch: accumulate, √, divide — one 8-wide backend op
+    /// each (this is where the lane kernel wins most; the scalar path
+    /// pays a serial f64 sqrt + div per coordinate).
     #[inline(always)]
-    fn eta_lane(self, acc: &mut Lane, g: &Lane) -> Lane {
-        let e0 = self.0 as f32;
-        let eps = ADAGRAD_EPS as f32;
-        let mut out = [0f32; LANES];
-        for k in 0..LANES {
-            let a = acc[k] + g[k] * g[k];
-            acc[k] = a;
-            out[k] = e0 / (eps + a).sqrt();
-        }
-        out
+    fn eta_lane_b<B: SimdBackend>(self, acc: &mut Lane, g: &Lane) -> Lane {
+        B::adagrad_eta_lane(self.0 as f32, ADAGRAD_EPS as f32, acc, g)
     }
 
     /// AdaGrad's η is a function of g_α, so the per-entry maps do not
@@ -339,6 +346,17 @@ impl StepK for AdaGradStep {
 /// scan over `cols`, amortized over the ~20+ cycles each update costs.
 #[inline]
 fn check_packed_bounds(block: &PackedBlock, ctx: &PackedCtx, st: &PackedState) {
+    // The AVX2 backend's `_mm256_i32gather_ps` sign-extends i32 lane
+    // indices: stripe widths must fit in i32 so stored columns can
+    // never read as negative. (Real stripe widths are d/p — nowhere
+    // near this; the assert keeps the gather's safety argument local.)
+    assert!(block.n_cols <= i32::MAX as u32, "column stripe exceeds i32 gather range");
+    // §Alignment: lane storage and gather tables are AVec-backed
+    // (64-byte aligned) by construction; hand-assembled test blocks
+    // inherit this through the public AVec fields.
+    debug_assert!(crate::simd::is_aligned(&block.cols[..]));
+    debug_assert!(crate::simd::is_aligned(&block.vals[..]));
+    debug_assert!(crate::simd::is_aligned(ctx.inv_col32) || ctx.inv_col32.is_empty());
     assert!(block.n_cols as usize <= st.w.len());
     assert!(block.n_rows as usize <= st.alpha.len());
     assert!(st.w_acc.len() == st.w.len());
@@ -433,6 +451,9 @@ fn sweep_group_scalar<L: LossK, R: RegK, S: StepK>(
     let lambda = ctx.lambda;
     for k in span {
         debug_assert!(k < cols.len());
+        // SAFETY: `span` lies inside a group's real prefix and every
+        // stored column is validated in-stripe — `check_packed_bounds`
+        // ran first (see the function docs).
         unsafe {
             let lj = *cols.get_unchecked(k) as usize;
             let xm = *vals.get_unchecked(k) as f64; // x/m, pre-folded
@@ -464,6 +485,9 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
         let li = g.li as usize;
         debug_assert!(li < st.alpha.len());
         // Row-invariant state: loaded once per row group.
+        //
+        // SAFETY: g.li < n_rows <= len of every row-stripe table/view
+        // (`check_packed_bounds`).
         let (y, hr, mut ai, mut aa) = unsafe {
             (
                 *ctx.y.get_unchecked(li),
@@ -485,6 +509,7 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
             &mut ai,
             &mut aa,
         );
+        // SAFETY: same in-bounds argument as the load above.
         unsafe {
             *st.alpha.get_unchecked_mut(li) = ai as f32;
             *st.a_acc.get_unchecked_mut(li) = aa;
@@ -499,85 +524,72 @@ fn sweep_mono<L: LossK, R: RegK, S: StepK>(
 
 /// Sweep every real entry of a lane-major packed block once, in storage
 /// order, batching the w side of the update [`LANES`] entries at a time
-/// (f32). Groups shorter than `LANES` run the scalar group loop.
-/// Returns #updates (sentinel padding excluded).
+/// (f32) on the **portable** backend — bit-identical to the pre-backend
+/// (PR 2/3) kernel; the pinned suites run through here. Groups shorter
+/// than `LANES` run the scalar group loop. Returns #updates (sentinel
+/// padding excluded).
 pub fn sweep_lanes(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
+    sweep_lanes_with::<Portable>(block, ctx, st)
+}
+
+/// [`sweep_lanes`] monomorphized over an explicit [`SimdBackend`] —
+/// the entry point `SweepPlan` dispatches (backend chosen once per run
+/// by CPU-feature detection, recorded in the plan; see DESIGN.md
+/// §SIMD-backend). Callers selecting a non-portable backend must
+/// uphold its feature contract (`simd::resolve` / a test-side
+/// `is_x86_feature_detected!` guard).
+pub fn sweep_lanes_with<B: SimdBackend>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
     match ctx.rule {
-        StepRule::Fixed(eta) => dispatch_lanes(block, ctx, st, FixedStep(eta)),
-        StepRule::AdaGrad(eta0) => dispatch_lanes(block, ctx, st, AdaGradStep(eta0)),
+        StepRule::Fixed(eta) => dispatch_lanes::<B, _>(block, ctx, st, FixedStep(eta)),
+        StepRule::AdaGrad(eta0) => dispatch_lanes::<B, _>(block, ctx, st, AdaGradStep(eta0)),
     }
 }
 
 /// Resolve (loss, reg) once per sweep into a monomorphized lane loop.
-fn dispatch_lanes<S: StepK>(
+fn dispatch_lanes<B: SimdBackend, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
     st: &mut PackedState,
     step: S,
 ) -> usize {
     match (ctx.loss, ctx.reg) {
-        (Loss::Hinge, Regularizer::L2) => sweep_lanes_mono::<HingeK, L2K, S>(block, ctx, st, step),
-        (Loss::Hinge, Regularizer::L1) => sweep_lanes_mono::<HingeK, L1K, S>(block, ctx, st, step),
+        (Loss::Hinge, Regularizer::L2) => {
+            sweep_lanes_mono::<B, HingeK, L2K, S>(block, ctx, st, step)
+        }
+        (Loss::Hinge, Regularizer::L1) => {
+            sweep_lanes_mono::<B, HingeK, L1K, S>(block, ctx, st, step)
+        }
         (Loss::Logistic, Regularizer::L2) => {
-            sweep_lanes_mono::<LogisticK, L2K, S>(block, ctx, st, step)
+            sweep_lanes_mono::<B, LogisticK, L2K, S>(block, ctx, st, step)
         }
         (Loss::Logistic, Regularizer::L1) => {
-            sweep_lanes_mono::<LogisticK, L1K, S>(block, ctx, st, step)
+            sweep_lanes_mono::<B, LogisticK, L1K, S>(block, ctx, st, step)
         }
         (Loss::Square, Regularizer::L2) => {
-            sweep_lanes_mono::<SquareK, L2K, S>(block, ctx, st, step)
+            sweep_lanes_mono::<B, SquareK, L2K, S>(block, ctx, st, step)
         }
         (Loss::Square, Regularizer::L1) => {
-            sweep_lanes_mono::<SquareK, L1K, S>(block, ctx, st, step)
+            sweep_lanes_mono::<B, SquareK, L1K, S>(block, ctx, st, step)
         }
     }
-}
-
-/// Full-width gather of one LANES chunk starting at physical `base`:
-/// (column ids, w values, x/m values, 1/|Ω̄_j|). Sentinel lanes (past
-/// a chunk's real length) read col 0 / value 0 — everything they feed
-/// is computed speculatively and never stored. Shared by the plain and
-/// affine lane monos.
-///
-/// # Safety argument
-/// Caller runs `check_packed_bounds` first, so every stored column —
-/// sentinels included — is a validated in-stripe index and
-/// `base + LANES` lies within the group's physical lane region.
-#[inline(always)]
-fn gather_chunk(
-    cols: &[u32],
-    vals: &[f32],
-    base: usize,
-    ctx: &PackedCtx,
-    st: &PackedState,
-) -> ([usize; LANES], Lane, Lane, Lane) {
-    let mut lj = [0usize; LANES];
-    let mut wv: Lane = [0.0; LANES];
-    let mut xv: Lane = [0.0; LANES];
-    let mut iv: Lane = [0.0; LANES];
-    for k in 0..LANES {
-        unsafe {
-            let c = *cols.get_unchecked(base + k) as usize;
-            debug_assert!(c < st.w.len());
-            lj[k] = c;
-            wv[k] = *st.w.get_unchecked(c);
-            xv[k] = *vals.get_unchecked(base + k);
-            iv[k] = *ctx.inv_col32.get_unchecked(c);
-        }
-    }
-    (lj, wv, xv, iv)
 }
 
 /// The w side of one lane chunk — ∇φ, gradient FMA, step rule, box
-/// clamp, all branch-free full-width f32 — followed by the scatter of
-/// the first `n` (real) lanes only: sentinels are never written
-/// through, so padding cannot perturb state. `av[k]` is the α entry
-/// k's gradient must see (its row's pre-update α). Shared verbatim by
-/// [`sweep_lanes`] and [`sweep_lanes_affine`], whose chunks differ
-/// only in how the α recurrence between gather and w side is computed.
+/// clamp, all branch-free full-width f32 backend ops — followed by the
+/// explicit scatter of the first `n` (real) lanes only: sentinels are
+/// never written through, so padding cannot perturb state (per-lane
+/// stores; AVX2 has no scatter instruction and the partial write is
+/// the point). `av[k]` is the α entry k's gradient must see (its
+/// row's pre-update α). Shared verbatim by [`sweep_lanes_with`] and
+/// [`sweep_lanes_affine_with`], whose chunks differ only in how the α
+/// recurrence between gather and w side is computed.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn w_side_chunk<R: RegK, S: StepK>(
+fn w_side_chunk<B: SimdBackend, R: RegK, S: StepK>(
     step: S,
     lj: &[usize; LANES],
     wv: &Lane,
@@ -589,23 +601,20 @@ fn w_side_chunk<R: RegK, S: StepK>(
     b32: f32,
     st: &mut PackedState,
 ) {
-    let rv = R::grad_lane(wv);
-    let mut gw: Lane = [0.0; LANES];
-    for k in 0..LANES {
-        gw[k] = lam32 * rv[k] * iv[k] - av[k] * xv[k];
-    }
+    let rv = R::grad_lane_b::<B>(wv);
+    let gw = B::w_grad(lam32, &rv, iv, av, xv);
     let mut accv: Lane = [0.0; LANES];
     if S::USES_ACC {
-        for k in 0..LANES {
-            accv[k] = unsafe { *st.w_acc.get_unchecked(lj[k]) };
-        }
+        // SAFETY: `lj` holds the chunk's column ids, validated
+        // in-stripe by `check_packed_bounds` (w_acc.len() == w.len()).
+        accv = unsafe { B::gather_idx(st.w_acc, lj) };
     }
-    let etav = step.eta_lane(&mut accv, &gw);
-    let mut wn: Lane = [0.0; LANES];
-    for k in 0..LANES {
-        wn[k] = (wv[k] - etav[k] * gw[k]).clamp(-b32, b32);
-    }
+    let etav = step.eta_lane_b::<B>(&mut accv, &gw);
+    let wn = B::w_step_clamp(wv, &etav, &gw, b32);
     for k in 0..n {
+        // SAFETY: lj[k] is a validated in-stripe column
+        // (`check_packed_bounds`); k < n <= LANES real lanes only, so
+        // sentinels are never written through.
         unsafe {
             *st.w.get_unchecked_mut(lj[k]) = wn[k];
             if S::USES_ACC {
@@ -615,7 +624,7 @@ fn w_side_chunk<R: RegK, S: StepK>(
     }
 }
 
-fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
+fn sweep_lanes_mono<B: SimdBackend, L: LossK, R: RegK, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
     st: &mut PackedState,
@@ -629,6 +638,8 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
     for g in &block.groups {
         let li = g.li as usize;
         debug_assert!(li < st.alpha.len());
+        // SAFETY: g.li < n_rows <= len of every row-stripe table/view
+        // (`check_packed_bounds`).
         let (y, hr, mut ai, mut aa) = unsafe {
             (
                 *ctx.y.get_unchecked(li),
@@ -660,13 +671,21 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
             let mut rem = len;
             while rem > 0 {
                 let n = rem.min(LANES);
-                let (lj, wv, xv, iv) = gather_chunk(cols, vals, base, ctx, st);
+                // SAFETY: `base + LANES` stays within the group's
+                // physical lane region (regions of lane-eligible
+                // groups are padded to LANES multiples) and every
+                // stored column — sentinels included — is a validated
+                // in-stripe index (`check_packed_bounds`).
+                let (lj, wv, xv, iv) =
+                    unsafe { B::gather_chunk(cols, vals, base, st.w, ctx.inv_col32) };
                 // α recurrence — scalar f64 over the real lanes only
                 // (all entries of the chunk update the same α_i, so
                 // this is inherently serial; the math matches
                 // `sweep_group_scalar` exactly, consuming the gathered
-                // w·x products). `av[k]` records α *before* entry k —
-                // the value the w gradient of lane k must see.
+                // w·x products — hence bit-identical across backends
+                // given the same gathered bits). `av[k]` records α
+                // *before* entry k — the value the w gradient of lane
+                // k must see.
                 let mut av: Lane = [0.0; LANES];
                 for k in 0..n {
                     av[k] = ai as f32;
@@ -678,11 +697,12 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
                 for lane in av.iter_mut().skip(n) {
                     *lane = tail;
                 }
-                w_side_chunk::<R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
+                w_side_chunk::<B, R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
                 base += LANES;
                 rem -= n;
             }
         }
+        // SAFETY: same in-bounds argument as the row-state load above.
         unsafe {
             *st.alpha.get_unchecked_mut(li) = ai as f32;
             *st.a_acc.get_unchecked_mut(li) = aa;
@@ -713,17 +733,73 @@ fn sweep_lanes_mono<L: LossK, R: RegK, S: StepK>(
 /// scalar group loop (bit-identical to [`sweep_packed`]). Returns
 /// #updates (sentinel padding excluded).
 pub fn sweep_lanes_affine(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) -> usize {
+    sweep_lanes_affine_with::<Portable>(block, ctx, st)
+}
+
+/// [`sweep_lanes_affine`] monomorphized over an explicit
+/// [`SimdBackend`] — the entry point `SweepPlan` dispatches for
+/// square-loss lane blocks. Same backend contract as
+/// [`sweep_lanes_with`].
+pub fn sweep_lanes_affine_with<B: SimdBackend>(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
     match ctx.rule {
-        StepRule::Fixed(eta) => dispatch_lanes_affine(block, ctx, st, FixedStep(eta)),
-        StepRule::AdaGrad(eta0) => dispatch_lanes_affine(block, ctx, st, AdaGradStep(eta0)),
+        StepRule::Fixed(eta) => dispatch_lanes_affine::<B, _>(block, ctx, st, FixedStep(eta)),
+        StepRule::AdaGrad(eta0) => {
+            dispatch_lanes_affine::<B, _>(block, ctx, st, AdaGradStep(eta0))
+        }
     }
+}
+
+/// Whole-kernel AVX2 compilation units. A `#[target_feature]` function
+/// cannot be inlined into a feature-neutral caller, so if the feature
+/// boundary sat on each backend op the chunk pipeline would pay an
+/// opaque call per gather/∇φ/FMA/η/clamp with `Lane` values spilled
+/// between them. Placing the boundary at **sweep granularity** lets
+/// everything fuse: feature-neutral callees (the `#[inline(always)]`
+/// kernel bodies) inline *into* a target_feature caller, and the
+/// backend's same-feature intrinsic wrappers do too — the whole sweep
+/// compiles as one avx2+fma function. `SweepPlan` and the benches call
+/// these; the generic [`sweep_lanes_with`] stays the differential-test
+/// entry point (identical semantics — the intrinsics are explicit, so
+/// fusing changes codegen, not results).
+///
+/// # Safety
+/// The running CPU must support avx2+fma — guaranteed by
+/// `simd::resolve` (plan construction) or an explicit
+/// `simd::avx2_supported()` guard at the call site.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn sweep_lanes_avx2(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
+    sweep_lanes_with::<crate::simd::Avx2>(block, ctx, st)
+}
+
+/// [`sweep_lanes_avx2`]'s affine-α twin — see its docs for the
+/// fusion rationale.
+///
+/// # Safety
+/// Same contract as [`sweep_lanes_avx2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn sweep_lanes_affine_avx2(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
+    sweep_lanes_affine_with::<crate::simd::Avx2>(block, ctx, st)
 }
 
 /// Resolve (loss, reg) once per sweep. Only the square loss has an
 /// affine dual; hinge/logistic degrade to the plain lane dispatch
 /// (their per-entry projection is load-bearing), bitwise identical to
-/// calling [`sweep_lanes`] directly.
-fn dispatch_lanes_affine<S: StepK>(
+/// calling [`sweep_lanes_with`] directly on the same backend.
+fn dispatch_lanes_affine<B: SimdBackend, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
     st: &mut PackedState,
@@ -731,16 +807,16 @@ fn dispatch_lanes_affine<S: StepK>(
 ) -> usize {
     match (ctx.loss, ctx.reg) {
         (Loss::Square, Regularizer::L2) => {
-            sweep_affine_mono::<SquareK, L2K, S>(block, ctx, st, step)
+            sweep_affine_mono::<B, SquareK, L2K, S>(block, ctx, st, step)
         }
         (Loss::Square, Regularizer::L1) => {
-            sweep_affine_mono::<SquareK, L1K, S>(block, ctx, st, step)
+            sweep_affine_mono::<B, SquareK, L1K, S>(block, ctx, st, step)
         }
-        _ => dispatch_lanes(block, ctx, st, step),
+        _ => dispatch_lanes::<B, S>(block, ctx, st, step),
     }
 }
 
-fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
+fn sweep_affine_mono<B: SimdBackend, L: AffineLossK, R: RegK, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
     st: &mut PackedState,
@@ -754,6 +830,8 @@ fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
     for g in &block.groups {
         let li = g.li as usize;
         debug_assert!(li < st.alpha.len());
+        // SAFETY: g.li < n_rows <= len of every row-stripe table/view
+        // (`check_packed_bounds`).
         let (y, hr, mut ai, mut aa) = unsafe {
             (
                 *ctx.y.get_unchecked(li),
@@ -785,6 +863,9 @@ fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
             // cv[k] = bias·hr − w_k·x_k. The bias·hr factor comes from
             // the `stripe_alpha_bias` precompute; the debug_assert
             // pins the table to the trait definition it caches.
+            //
+            // SAFETY: li < n_rows <= alpha_bias32.len()
+            // (`check_packed_bounds`).
             let bias_hr = unsafe { *ctx.alpha_bias32.get_unchecked(li) };
             debug_assert_eq!(bias_hr, (L::dual_bias(y) * hr) as f32);
             let slope_hr = L::DUAL_SLOPE * hr;
@@ -792,16 +873,17 @@ fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
             let mut rem = len;
             while rem > 0 {
                 let n = rem.min(LANES);
-                let (lj, wv, xv, iv) = gather_chunk(cols, vals, base, ctx, st);
+                // SAFETY: same chunk argument as in `sweep_lanes_mono`
+                // — base + LANES within the group's padded lane
+                // region, all stored columns validated in-stripe.
+                let (lj, wv, xv, iv) =
+                    unsafe { B::gather_chunk(cols, vals, base, st.w, ctx.inv_col32) };
                 // Per-entry affine coefficients in 8-wide f32 — the
                 // α-independent part of g_α. This replaces the
                 // sequential dual-gradient evaluations of
                 // `sweep_lanes`; the serial remainder is the one-FMA-
                 // per-entry fold below.
-                let mut cv: Lane = [0.0; LANES];
-                for k in 0..LANES {
-                    cv[k] = bias_hr - wv[k] * xv[k];
-                }
+                let cv = B::affine_coeffs(bias_hr, &wv, &xv);
                 // Fold the chunk's composed affine map into α_i. `av`
                 // receives each real entry's pre-update α (what its w
                 // gradient must see); tail lanes get the post-chunk α
@@ -812,11 +894,12 @@ fn sweep_affine_mono<L: AffineLossK, R: RegK, S: StepK>(
                 for lane in av.iter_mut().skip(n) {
                     *lane = tail;
                 }
-                w_side_chunk::<R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
+                w_side_chunk::<B, R, S>(step, &lj, &wv, &xv, &iv, &av, n, lam32, b32, st);
                 base += LANES;
                 rem -= n;
             }
         }
+        // SAFETY: same in-bounds argument as the row-state load above.
         unsafe {
             *st.alpha.get_unchecked_mut(li) = ai as f32;
             *st.a_acc.get_unchecked_mut(li) = aa;
@@ -910,6 +993,8 @@ fn sweep_fixed(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta: f64)
         let jw = e.j as usize - st.w_off;
         let ia = e.i as usize - st.a_off;
         debug_assert!(jw < st.w.len() && ia < st.alpha.len());
+        // SAFETY: entry indices are in-bounds by construction (see the
+        // note above `sweep_adagrad`).
         unsafe {
             let wj = *st.w.get_unchecked(jw) as f64;
             let ai = *st.alpha.get_unchecked(ia) as f64;
@@ -938,6 +1023,8 @@ fn sweep_adagrad(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f
         let jw = e.j as usize - st.w_off;
         let ia = e.i as usize - st.a_off;
         debug_assert!(jw < st.w.len() && ia < st.alpha.len());
+        // SAFETY: entry indices are in-bounds by construction (see the
+        // note above this loop).
         unsafe {
             let wj = *st.w.get_unchecked(jw) as f64;
             let ai = *st.alpha.get_unchecked(ia) as f64;
@@ -992,11 +1079,13 @@ mod tests {
     }
 
     /// Everything `PackedCtx` borrows, hand-packed from the reference
-    /// inputs (m = y.len()); entries must be (i, j)-sorted.
+    /// inputs (m = y.len()); entries must be (i, j)-sorted. The
+    /// gather-table mirror uses `AVec` like the production build (the
+    /// kernels debug-assert its 64-byte alignment).
     struct Packed {
         b: PackedBlock,
         inv_col: Vec<f64>,
-        inv_col32: Vec<f32>,
+        inv_col32: crate::simd::AVec<f32>,
         inv_row: Vec<f64>,
         y: Vec<f64>,
         alpha_bias32: Vec<f32>,
@@ -1022,7 +1111,7 @@ mod tests {
         b.finalize_lanes();
         b.build_entry_group(); // exercise the sampled path's side table
         let inv_col: Vec<f64> = col_counts.iter().map(|&c| 1.0 / c as f64).collect();
-        let inv_col32: Vec<f32> = inv_col.iter().map(|&v| v as f32).collect();
+        let inv_col32: crate::simd::AVec<f32> = inv_col.iter().map(|&v| v as f32).collect();
         let inv_row: Vec<f64> = row_counts.iter().map(|&c| 1.0 / (m * c as f64)).collect();
         let yl: Vec<f64> = y.iter().map(|&v| v as f64).collect();
         // Same definition as `PackedBlocks::stripe_alpha_bias`.

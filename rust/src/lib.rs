@@ -33,6 +33,7 @@ pub mod net;
 pub mod optim;
 pub mod partition;
 pub mod runtime;
+pub mod simd;
 pub mod util;
 
 pub fn version() -> &'static str {

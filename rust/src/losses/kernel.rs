@@ -17,15 +17,20 @@
 //!
 //! For the SIMD sweep (`coordinator::updates::sweep_lanes`) the traits
 //! additionally carry **lane-batched** methods over [`Lane`] =
-//! `[f32; LANES]` arrays. These are written as plain per-lane loops of
-//! independent f32 operations — the shape stable-Rust LLVM reliably
-//! auto-vectorizes to one 256-bit op per lane array, with no `std::simd`
-//! dependency. They compute in f32 (that's the whole point: 8 lanes per
-//! vector), so they are tolerance-equivalent, not bit-identical, to the
-//! f64 scalar methods.
+//! `[f32; LANES]` arrays, routed through the
+//! [`SimdBackend`](crate::simd::SimdBackend) the sweep was
+//! monomorphized with ([`RegK::grad_lane_b`]): the
+//! [`Portable`](crate::simd::Portable) backend is the PR 2 per-lane
+//! loop (independent f32 ops — the shape stable-Rust LLVM reliably
+//! auto-vectorizes to one 256-bit op per lane array, bit-identical to
+//! the pre-backend kernels), the AVX2 backend issues the explicit
+//! intrinsics. Both compute in f32 (that's the whole point: 8 lanes
+//! per vector), so they are tolerance-equivalent, not bit-identical,
+//! to the f64 scalar methods.
 
 use super::{Loss, Regularizer};
 use crate::partition::omega::LANES;
+use crate::simd::{Portable, SimdBackend};
 
 /// One SIMD-width batch of f32 values (8 × f32 = one 256-bit vector).
 pub type Lane = [f32; LANES];
@@ -133,17 +138,26 @@ pub trait RegK: Copy + Send + Sync + 'static {
         Self::REG.grad(w)
     }
 
-    /// Lane-batched ∇φ over 8 f32 weights. Default: per-lane delegation
-    /// to the f64 definition (correct but round-trips through f64);
-    /// the concrete impls below override with pure-f32 bodies that
-    /// vectorize to a single multiply / sign-select.
+    /// Lane-batched ∇φ over 8 f32 weights, on the sweep's SIMD
+    /// backend. The concrete impls below route to the backend's
+    /// single-multiply (L2) / sign-select (L1) op; this default
+    /// delegates per lane to the f64 definition (correct but
+    /// round-trips through f64) so exotic future regularizers work
+    /// before they grow a backend op.
     #[inline(always)]
-    fn grad_lane(w: &Lane) -> Lane {
+    fn grad_lane_b<B: SimdBackend>(w: &Lane) -> Lane {
         let mut out = [0f32; LANES];
         for k in 0..LANES {
             out[k] = Self::REG.grad(w[k] as f64) as f32;
         }
         out
+    }
+
+    /// Portable-backend ∇φ lanes — the PR 2 entry point, kept so
+    /// existing differential tests keep reading naturally.
+    #[inline(always)]
+    fn grad_lane(w: &Lane) -> Lane {
+        Self::grad_lane_b::<Portable>(w)
     }
 }
 
@@ -155,33 +169,21 @@ pub struct L2K;
 impl RegK for L1K {
     const REG: Regularizer = Regularizer::L1;
 
+    /// sign(w) with 0 at the kink — exact in f32 on every backend
+    /// (portable: branch-free select after vectorization; AVX2:
+    /// compare + mask-select).
     #[inline(always)]
-    fn grad_lane(w: &Lane) -> Lane {
-        let mut out = [0f32; LANES];
-        for k in 0..LANES {
-            // sign(w) with 0 at the kink — exact in f32, branch-free
-            // select after vectorization.
-            out[k] = if w[k] > 0.0 {
-                1.0
-            } else if w[k] < 0.0 {
-                -1.0
-            } else {
-                0.0
-            };
-        }
-        out
+    fn grad_lane_b<B: SimdBackend>(w: &Lane) -> Lane {
+        B::l1_grad_lane(w)
     }
 }
 impl RegK for L2K {
     const REG: Regularizer = Regularizer::L2;
 
+    /// 2·w — exact in f32 on every backend.
     #[inline(always)]
-    fn grad_lane(w: &Lane) -> Lane {
-        let mut out = [0f32; LANES];
-        for k in 0..LANES {
-            out[k] = 2.0 * w[k];
-        }
-        out
+    fn grad_lane_b<B: SimdBackend>(w: &Lane) -> Lane {
+        B::l2_grad_lane(w)
     }
 }
 

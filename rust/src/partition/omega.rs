@@ -90,6 +90,7 @@
 
 use super::Partition;
 use crate::data::sparse::Csr;
+use crate::simd::aligned::{is_aligned, AVec};
 
 /// SIMD lane width of the value lanes: 8 × f32 = one 256-bit vector.
 /// The layout pads lane-eligible row groups to a multiple of this.
@@ -174,11 +175,13 @@ pub struct PackedBlock {
     pub groups: Vec<RowGroup>,
     /// Block-local column id per physical slot, sorted within each
     /// group's real prefix; sentinel slots hold [`SENTINEL_COL`].
-    pub cols: Vec<u32>,
+    /// 64-byte-aligned storage ([`AVec`]) — the §Alignment contract the
+    /// explicit-SIMD backend's vector loads rely on.
+    pub cols: AVec<u32>,
     /// Pre-scaled value x_ij/m per physical slot (f32 — matches the
     /// parameter precision; the scalar kernel computes in f64).
-    /// Sentinel slots hold 0.0.
-    pub vals: Vec<f32>,
+    /// Sentinel slots hold 0.0. 64-byte-aligned like `cols`.
+    pub vals: AVec<f32>,
     /// Row-stripe height (bound on `li`, exclusive).
     pub n_rows: u32,
     /// Column-stripe width (bound on `cols`, exclusive).
@@ -274,8 +277,8 @@ impl PackedBlock {
             }
             return;
         }
-        let mut cols = Vec::with_capacity(padded);
-        let mut vals = Vec::with_capacity(padded);
+        let mut cols = AVec::with_capacity(padded);
+        let mut vals = AVec::with_capacity(padded);
         for g in self.groups.iter_mut() {
             g.pad_start = cols.len() as u32;
             cols.extend_from_slice(&self.cols[g.start as usize..g.end as usize]);
@@ -306,7 +309,9 @@ pub struct PackedBlocks {
     pub inv_col: Vec<Vec<f64>>,
     /// f32 mirror of `inv_col`, gathered by the 8-wide f32 lane kernel
     /// (half the bandwidth of the f64 table on the gather port).
-    pub inv_col32: Vec<Vec<f32>>,
+    /// 64-byte-aligned per stripe — the AVX2 backend's
+    /// `_mm256_i32gather_ps` base.
+    pub inv_col32: Vec<AVec<f32>>,
     /// 1/(m·|Ω_i|) per row stripe q, indexed by block-local row.
     /// 0.0 for empty rows (never read by the sweep).
     pub inv_row: Vec<Vec<f64>>,
@@ -372,7 +377,7 @@ impl PackedBlocks {
                     .collect()
             })
             .collect();
-        let inv_col32: Vec<Vec<f32>> =
+        let inv_col32: Vec<AVec<f32>> =
             inv_col.iter().map(|t| t.iter().map(|&v| v as f32).collect()).collect();
         let inv_row: Vec<Vec<f64>> = (0..p)
             .map(|q| {
@@ -446,7 +451,7 @@ impl PackedBlocks {
     /// (never read by any sweep). Cost is 4 bytes/row — the engines
     /// build it unconditionally (it is dead weight only when a
     /// non-square loss runs).
-    pub fn stripe_alpha_bias(&self, y: &[f32]) -> Vec<Vec<f32>> {
+    pub fn stripe_alpha_bias(&self, y: &[f32]) -> Vec<AVec<f32>> {
         assert_eq!(y.len(), self.row_part.n());
         (0..self.p)
             .map(|q| {
@@ -522,6 +527,9 @@ impl PackedBlocks {
                 }
                 if b.vals.len() != b.cols.len() {
                     return Err(format!("block ({q},{r}) cols/vals length mismatch"));
+                }
+                if !is_aligned(&b.cols[..]) || !is_aligned(&b.vals[..]) {
+                    return Err(format!("block ({q},{r}) lane storage not 64B-aligned"));
                 }
                 let mut next = 0u32;
                 let mut pnext = 0usize;
@@ -615,6 +623,9 @@ impl PackedBlocks {
             }
         }
         for r in 0..self.p {
+            if !is_aligned(&self.inv_col32[r][..]) {
+                return Err(format!("inv_col32[{r}] not 64B-aligned"));
+            }
             for (lj, j) in self.col_part.block(r).enumerate() {
                 let c = self.col_counts[j];
                 let want = if c == 0 { 0.0 } else { 1.0 / c as f64 };
@@ -760,6 +771,40 @@ mod tests {
         assert_eq!(&b.cols[..11], &(0..11).collect::<Vec<u32>>()[..]);
         assert_eq!(&b.cols[16..], &[2, 7, 12]);
         assert_eq!(b.vals[16], (9.0f64 / 2.0) as f32);
+    }
+
+    #[test]
+    fn aligned_storage_after_build() {
+        // §Alignment regression guard: every block's lane storage
+        // (cols/vals — the arrays holding the lane regions) and every
+        // per-stripe gather table (inv_col32, stripe_alpha_bias) must
+        // start 64-byte aligned after `build`, on tight and padded
+        // layouts alike — the explicit-SIMD backend's base-address
+        // contract (simd::aligned).
+        for (x, m, d) in [(toy_matrix(), 5, 4), (long_row_matrix(), 2, 16)] {
+            let p = 2.min(m).min(d);
+            let rp = Partition::even(m, p);
+            let cp = Partition::even(d, p);
+            let om = PackedBlocks::build(&x, &rp, &cp);
+            for q in 0..p {
+                for r in 0..p {
+                    let b = om.block(q, r);
+                    assert!(is_aligned(&b.cols[..]), "block ({q},{r}) cols");
+                    assert!(is_aligned(&b.vals[..]), "block ({q},{r}) vals");
+                }
+            }
+            for r in 0..p {
+                assert!(is_aligned(&om.inv_col32[r][..]), "inv_col32[{r}]");
+            }
+            let y = vec![1.0f32; m];
+            let bias = om.stripe_alpha_bias(&y);
+            for q in 0..p {
+                assert!(is_aligned(&bias[q][..]), "stripe_alpha_bias[{q}]");
+            }
+            // validate() enforces the same contract (defense in depth
+            // for hand-assembled blocks in tests).
+            om.validate(&x).unwrap();
+        }
     }
 
     #[test]

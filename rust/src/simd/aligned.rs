@@ -1,0 +1,281 @@
+//! `AVec<T>` — a minimal 64-byte-aligned growable array for the kernel
+//! data plane.
+//!
+//! The explicit-SIMD backend (`simd::backend`) issues 256-bit loads and
+//! gathers against the packed-block storage (`partition::omega`: the
+//! `cols`/`vals` lane regions) and the per-stripe `inv_col32` /
+//! `stripe_alpha_bias` tables. `Vec<f32>`'s allocation is only
+//! 4-byte-aligned, so a table could start mid-cache-line and every
+//! vector touching its head would straddle two lines. `AVec` allocates
+//! at [`ALIGN`] = 64 bytes (one cache line, and ≥ the 32-byte AVX2
+//! vector width), which makes the *base* of every lane region and
+//! table cache-line aligned; in-loop chunk accesses still use
+//! unaligned-tolerant instructions because a chunk's physical offset
+//! inside the storage need not be a lane multiple (short groups are
+//! stored tight — see the layout invariants in `partition::omega`).
+//!
+//! Scope is deliberately tiny: `Copy` elements only (no drop glue to
+//! run), the handful of `Vec` operations the packed-block builders use
+//! (`push`, `extend_from_slice`, `with_capacity`, `collect`), and
+//! slice access through `Deref`/`DerefMut` so every consumer keeps
+//! reading plain `&[T]`.
+
+use std::alloc::{alloc, dealloc, Layout};
+use std::ptr::NonNull;
+
+/// Allocation alignment: one x86 cache line, ≥ 2× the 256-bit AVX2
+/// vector. Asserted (in debug builds) by the kernels' bounds check and
+/// pinned by unit tests in `partition::omega`.
+pub const ALIGN: usize = 64;
+
+/// A growable array whose buffer is always [`ALIGN`]-byte aligned.
+/// `T: Copy` keeps (de)allocation trivial — no element drop glue.
+pub struct AVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AVec owns its buffer exclusively (no interior sharing), so it
+// is Send/Sync exactly when a Vec<T> of the same element type would be.
+unsafe impl<T: Copy + Send> Send for AVec<T> {}
+// SAFETY: see the Send impl above — &AVec only hands out &[T].
+unsafe impl<T: Copy + Sync> Sync for AVec<T> {}
+
+impl<T: Copy> AVec<T> {
+    /// A dangling-but-aligned pointer for the empty state, so that even
+    /// a zero-length `AVec` reports an [`ALIGN`]-aligned base (the
+    /// alignment regression tests assert this unconditionally).
+    fn dangling() -> NonNull<T> {
+        let align = ALIGN.max(std::mem::align_of::<T>());
+        // SAFETY: `align` is nonzero, so the pointer is non-null; it is
+        // never dereferenced while cap == 0.
+        unsafe { NonNull::new_unchecked(align as *mut T) }
+    }
+
+    pub fn new() -> AVec<T> {
+        AVec { ptr: Self::dangling(), len: 0, cap: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> AVec<T> {
+        let mut v = AVec::new();
+        v.reserve_exact(cap);
+        v
+    }
+
+    fn layout(cap: usize) -> Layout {
+        let align = ALIGN.max(std::mem::align_of::<T>());
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), align)
+            .expect("AVec layout overflow")
+    }
+
+    /// Grow to exactly `cap` slots (no-op when already large enough).
+    fn reserve_exact(&mut self, cap: usize) {
+        if cap <= self.cap || std::mem::size_of::<T>() == 0 {
+            return;
+        }
+        let layout = Self::layout(cap);
+        // SAFETY: `layout` has nonzero size (cap > self.cap >= 0 and
+        // T is not a ZST on this path); on success the new buffer is
+        // valid for `cap` elements at ALIGN alignment.
+        let raw = unsafe { alloc(layout) } as *mut T;
+        let ptr = NonNull::new(raw).unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        // SAFETY: both buffers are valid for `self.len` elements
+        // (old cap >= len, new cap > old cap) and cannot overlap —
+        // the new one was just allocated.
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len) };
+        self.dealloc_buf();
+        self.ptr = ptr;
+        self.cap = cap;
+    }
+
+    fn dealloc_buf(&mut self) {
+        if self.cap > 0 && std::mem::size_of::<T>() > 0 {
+            // SAFETY: `ptr` was allocated by `reserve_exact` with this
+            // exact layout and has not been freed since.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+
+    pub fn push(&mut self, value: T) {
+        if self.len == self.cap {
+            self.reserve_exact((self.cap * 2).max(8));
+        }
+        // SAFETY: len < cap after the reserve, so the slot is in
+        // bounds of the allocation.
+        unsafe { self.ptr.as_ptr().add(self.len).write(value) };
+        self.len += 1;
+    }
+
+    pub fn extend_from_slice(&mut self, src: &[T]) {
+        let need = self.len + src.len();
+        if need > self.cap {
+            self.reserve_exact(need.max(self.cap * 2));
+        }
+        // SAFETY: the reserve guarantees `need <= cap`; `src` cannot
+        // alias the freshly (re)allocated tail because `&mut self`
+        // excludes borrows of self's buffer.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.as_ptr().add(self.len), src.len())
+        };
+        self.len = need;
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: the first `len` slots are initialized (push/extend
+        // only advance len over written slots).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: as in `as_slice`, plus `&mut self` gives exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Copy a plain slice into a fresh aligned vector.
+    pub fn from_slice(src: &[T]) -> AVec<T> {
+        let mut v = AVec::with_capacity(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+}
+
+impl<T: Copy> Drop for AVec<T> {
+    fn drop(&mut self) {
+        self.dealloc_buf();
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> Self {
+        AVec::new()
+    }
+}
+
+impl<T: Copy> std::ops::Deref for AVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy> std::ops::DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> Self {
+        AVec::from_slice(self)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Mixed comparisons so existing tests can keep writing
+/// `assert_eq!(block.cols, vec![..])`.
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for AVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq, const N: usize> PartialEq<[T; N]> for AVec<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+impl<T: Copy> FromIterator<T> for AVec<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        let it = iter.into_iter();
+        let mut v = AVec::with_capacity(it.size_hint().0);
+        for x in it {
+            v.push(x);
+        }
+        v
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a AVec<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+/// Whether a slice's base pointer is [`ALIGN`]-byte aligned — the
+/// assertion the packed-block builders and their regression tests use.
+pub fn is_aligned<T>(s: &[T]) -> bool {
+    (s.as_ptr() as usize) % ALIGN == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_grown_vectors_are_aligned() {
+        let mut v: AVec<f32> = AVec::new();
+        assert!(is_aligned(&v));
+        assert_eq!(v.len(), 0);
+        for i in 0..1000 {
+            v.push(i as f32);
+            assert!(is_aligned(&v), "misaligned after {} pushes", i + 1);
+        }
+        assert_eq!(v.len(), 1000);
+        assert_eq!(v[999], 999.0);
+    }
+
+    #[test]
+    fn behaves_like_vec() {
+        let mut v: AVec<u32> = AVec::new();
+        v.extend_from_slice(&[1, 2, 3]);
+        v.push(4);
+        v.extend_from_slice(&[5, 6]);
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(v.iter().max(), Some(&6));
+        v[0] = 9;
+        assert_eq!(&v[..2], &[9, 2]);
+        let w = v.clone();
+        assert_eq!(w, v);
+        assert!(is_aligned(&w));
+        v.clear();
+        assert!(v.is_empty());
+        assert_ne!(w, v);
+    }
+
+    #[test]
+    fn collect_and_from_slice_round_trip() {
+        let v: AVec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        assert!(is_aligned(&v));
+        assert_eq!(v.len(), 37);
+        let w = AVec::from_slice(&v);
+        assert_eq!(w, v);
+        // Debug formatting mirrors the slice (used in test failures).
+        assert_eq!(format!("{:?}", AVec::from_slice(&[1u32, 2])), "[1, 2]");
+    }
+
+    #[test]
+    fn with_capacity_preallocates_aligned() {
+        let v: AVec<u32> = AVec::with_capacity(123);
+        assert!(is_aligned(&v));
+        assert_eq!(v.len(), 0);
+    }
+}

@@ -1,0 +1,571 @@
+//! `SimdBackend` — the explicit-SIMD kernel backend abstraction.
+//!
+//! PR 2's lane kernel expressed the 8-wide w-side arithmetic as plain
+//! per-lane loops over `Lane = [f32; LANES]`, relying on LLVM
+//! autovectorization. That covers the arithmetic but not the **column
+//! gathers**: loading 8 `(w_j, 1/|Ω̄_j|)` pairs through block-local
+//! `u32` column ids compiles to 8 scalar loads per chunk — by PR 4 the
+//! dominant cost of the hot loop (the ROADMAP gather-intrinsics item).
+//!
+//! This trait factors every lane-granular operation of the sweep —
+//! chunk gather, ∇φ, gradient FMA, AdaGrad accumulate/√/divide, box
+//! clamp, the affine-α coefficient lanes — behind one monomorphization
+//! parameter, with two implementations:
+//!
+//! * [`Portable`] — the PR 2/3 per-lane loops, **bit-identical by
+//!   construction** to the pre-backend kernels (it is the same code,
+//!   moved). Compiles on every architecture; stable-Rust
+//!   autovectorizable.
+//! * [`Avx2`] (`x86_64` only) — `core::arch` intrinsics:
+//!   `_mm256_i32gather_ps` for the column gathers, 256-bit FMA for the
+//!   gradient/step pipeline, `_mm256_sqrt_ps`/`_mm256_div_ps` for the
+//!   AdaGrad η batch, min/max for the clamp. The scatter of the `wn`
+//!   lanes stays explicit per-lane stores in the shared kernel code
+//!   (AVX2 has no scatter instruction; only the first `len` lanes of a
+//!   chunk may be written).
+//!
+//! Which backend runs is decided **once per run** by
+//! `coordinator::plan::SweepPlan` from runtime CPU-feature detection
+//! ([`super::resolve`]) — kernels monomorphize over `B: SimdBackend`,
+//! so there is zero per-chunk (or even per-sweep) dispatch, and
+//! engines never touch feature detection (`scripts/ci.sh` greps them).
+//!
+//! ## Float-summation-order caveat, per backend
+//!
+//! [`Portable`] reproduces the PR 3 kernels bit for bit, so every
+//! pinned suite keeps passing unchanged. [`Avx2`] contracts
+//! multiply-adds into fused FMAs (single rounding where the portable
+//! path rounds twice), so it is *tolerance-equivalent* to the portable
+//! backend — ≤1e-5 relative per sweep against the COO oracle,
+//! property-tested in `tests/lane_kernel.rs`/`tests/alpha_lane.rs` —
+//! not bit-identical across backends. Threaded ≡ replay bit-identity
+//! holds *within* a backend (both executions run the same plan).
+//!
+//! # Safety
+//!
+//! This is an `unsafe trait`: an implementation asserts that its
+//! methods are sound to execute on the CPU the process is running on.
+//! [`Portable`] is unconditionally sound; [`Avx2`] requires AVX2+FMA,
+//! which every production path guarantees by construction — the only
+//! producers of an `Avx2`-monomorphized call are
+//! `SweepPlan`/[`super::resolve`] (behind `is_x86_feature_detected!`)
+//! and tests that perform the same guard.
+
+use crate::losses::kernel::Lane;
+use crate::partition::omega::LANES;
+
+/// Lane-granular kernel operations, monomorphized into the sweeps.
+///
+/// The two `unsafe fn`s carry the kernels' usual unchecked-indexing
+/// contract: the caller has validated (via `check_packed_bounds`) that
+/// `base + LANES` is within `cols`/`vals` and that every stored column
+/// id — sentinels included — indexes within `w` and `inv`.
+///
+/// # Safety
+///
+/// Implementations must be sound on the running CPU; see the module
+/// docs for how `Avx2` discharges this via runtime detection.
+pub unsafe trait SimdBackend: Copy + Send + Sync + 'static {
+    /// Backend tag recorded by `SweepPlan` and the benches.
+    const NAME: &'static str;
+
+    /// Full-width gather of one LANES chunk at physical `base`:
+    /// (column ids, w values, x/m values, 1/|Ω̄_j|).
+    ///
+    /// # Safety
+    /// `base + LANES <= cols.len() == vals.len()`, and every
+    /// `cols[base..base + LANES]` is `< w.len() <= inv.len()` (resp.
+    /// `<= w.len()`); both validated once per sweep by the caller.
+    unsafe fn gather_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES], Lane, Lane, Lane);
+
+    /// Gather 8 f32 by the chunk's precomputed column ids (the AdaGrad
+    /// w-accumulator load).
+    ///
+    /// # Safety
+    /// Every `lj[k] < src.len()` — the same validated column ids
+    /// returned by [`SimdBackend::gather_chunk`].
+    unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane;
+
+    /// The w gradient lanes: `gw[k] = lam·rv[k]·iv[k] − av[k]·xv[k]`.
+    fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane;
+
+    /// Step + box clamp: `wn[k] = clamp(wv[k] − etav[k]·gw[k], −b, b)`.
+    fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane;
+
+    /// Affine-α coefficient lanes: `cv[k] = bias − wv[k]·xv[k]`.
+    fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane;
+
+    /// ∇φ for L1: `sign(w)` with 0 at the kink.
+    fn l1_grad_lane(w: &Lane) -> Lane;
+
+    /// ∇φ for L2: `2·w`.
+    fn l2_grad_lane(w: &Lane) -> Lane;
+
+    /// AdaGrad η batch: `acc[k] += g[k]²; out[k] = e0/√(eps + acc[k])`.
+    fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane;
+}
+
+// ---------------------------------------------------------------------
+// Portable backend — the PR 2/3 per-lane loops, verbatim
+// ---------------------------------------------------------------------
+
+/// Autovectorized baseline backend. Bit-identical to the pre-backend
+/// (PR 3) kernels: these bodies are the exact loops that previously
+/// lived inline in `coordinator::updates` / `losses::kernel`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Portable;
+
+// SAFETY: plain per-lane Rust with no target-feature requirements —
+// sound on every CPU.
+unsafe impl SimdBackend for Portable {
+    const NAME: &'static str = "portable";
+
+    #[inline(always)]
+    unsafe fn gather_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES], Lane, Lane, Lane) {
+        let mut lj = [0usize; LANES];
+        let mut wv: Lane = [0.0; LANES];
+        let mut xv: Lane = [0.0; LANES];
+        let mut iv: Lane = [0.0; LANES];
+        for k in 0..LANES {
+            // SAFETY: the caller's contract — base + LANES in bounds of
+            // cols/vals, every stored column validated in-stripe.
+            unsafe {
+                let c = *cols.get_unchecked(base + k) as usize;
+                debug_assert!(c < w.len() && c < inv.len());
+                lj[k] = c;
+                wv[k] = *w.get_unchecked(c);
+                xv[k] = *vals.get_unchecked(base + k);
+                iv[k] = *inv.get_unchecked(c);
+            }
+        }
+        (lj, wv, xv, iv)
+    }
+
+    #[inline(always)]
+    unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane {
+        let mut out: Lane = [0.0; LANES];
+        for k in 0..LANES {
+            debug_assert!(lj[k] < src.len());
+            // SAFETY: caller guarantees lj[k] < src.len() (validated
+            // column ids from gather_chunk).
+            out[k] = unsafe { *src.get_unchecked(lj[k]) };
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane {
+        let mut gw: Lane = [0.0; LANES];
+        for k in 0..LANES {
+            gw[k] = lam * rv[k] * iv[k] - av[k] * xv[k];
+        }
+        gw
+    }
+
+    #[inline(always)]
+    fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane {
+        let mut wn: Lane = [0.0; LANES];
+        for k in 0..LANES {
+            wn[k] = (wv[k] - etav[k] * gw[k]).clamp(-b, b);
+        }
+        wn
+    }
+
+    #[inline(always)]
+    fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane {
+        let mut cv: Lane = [0.0; LANES];
+        for k in 0..LANES {
+            cv[k] = bias - wv[k] * xv[k];
+        }
+        cv
+    }
+
+    #[inline(always)]
+    fn l1_grad_lane(w: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            // sign(w) with 0 at the kink — exact in f32, branch-free
+            // select after vectorization.
+            out[k] = if w[k] > 0.0 {
+                1.0
+            } else if w[k] < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn l2_grad_lane(w: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            out[k] = 2.0 * w[k];
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
+        let mut out = [0f32; LANES];
+        for k in 0..LANES {
+            let a = acc[k] + g[k] * g[k];
+            acc[k] = a;
+            out[k] = e0 / (eps + a).sqrt();
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2/FMA backend (x86_64)
+// ---------------------------------------------------------------------
+
+/// Explicit AVX2 + FMA backend: hardware gathers for the column loads,
+/// fused multiply-adds for the arithmetic pipeline.
+///
+/// Every production `Avx2`-monomorphized call is produced behind
+/// `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+/// ([`super::resolve`], recorded in `SweepPlan`); tests perform the
+/// same guard. See the trait-level safety contract.
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Avx2;
+
+// SAFETY: all methods delegate to `#[target_feature(enable = "avx2",
+// enable = "fma")]` functions; the trait contract (module docs) makes
+// the caller guarantee those features are present before an Avx2
+// monomorphization executes.
+#[cfg(target_arch = "x86_64")]
+unsafe impl SimdBackend for Avx2 {
+    const NAME: &'static str = "avx2";
+
+    #[inline(always)]
+    unsafe fn gather_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES], Lane, Lane, Lane) {
+        // SAFETY: bounds per the trait contract; AVX2+FMA present per
+        // the backend-selection contract (module docs).
+        unsafe { avx2::gather_chunk(cols, vals, base, w, inv) }
+    }
+
+    #[inline(always)]
+    unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane {
+        // SAFETY: indices per the trait contract; features per the
+        // backend-selection contract.
+        unsafe { avx2::gather_idx(src, lj) }
+    }
+
+    #[inline(always)]
+    fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: pure lane arithmetic on stack arrays; AVX2+FMA
+        // present per the backend-selection contract.
+        unsafe { avx2::w_grad(lam, rv, iv, av, xv) }
+    }
+
+    #[inline(always)]
+    fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::w_step_clamp(wv, etav, gw, b) }
+    }
+
+    #[inline(always)]
+    fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::affine_coeffs(bias, wv, xv) }
+    }
+
+    #[inline(always)]
+    fn l1_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::l1_grad_lane(w) }
+    }
+
+    #[inline(always)]
+    fn l2_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::l2_grad_lane(w) }
+    }
+
+    #[inline(always)]
+    fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::adagrad_eta_lane(e0, eps, acc, g) }
+    }
+}
+
+/// The intrinsic bodies. `#[target_feature]` cannot be applied to
+/// trait methods, so the `SimdBackend for Avx2` impl wraps these free
+/// functions. All are `unsafe fn`: callers guarantee AVX2+FMA (and the
+/// gathers' index bounds).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Lane, LANES};
+    use core::arch::x86_64::*;
+
+    /// Round-trip helpers: `Lane` is only 4-byte aligned, so use
+    /// unaligned vector moves (same throughput as aligned on AVX2).
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn ld(l: &Lane) -> __m256 {
+        // SAFETY: `l` is a valid [f32; 8]; loadu has no alignment
+        // requirement.
+        unsafe { _mm256_loadu_ps(l.as_ptr()) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn st(v: __m256) -> Lane {
+        let mut out: Lane = [0.0; LANES];
+        // SAFETY: `out` is a valid 8-f32 destination; storeu has no
+        // alignment requirement.
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+        out
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gather_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES], Lane, Lane, Lane) {
+        debug_assert!(base + LANES <= cols.len() && base + LANES <= vals.len());
+        // SAFETY: (whole body) caller guarantees base + LANES within
+        // cols/vals and every stored column id < w.len() <= inv.len().
+        // Column ids fit i32 (checked against the stripe width by
+        // `check_packed_bounds`), so the sign-extending i32 gather
+        // indices are non-negative.
+        unsafe {
+            let idx = _mm256_loadu_si256(cols.as_ptr().add(base) as *const __m256i);
+            // Hardware gathers: 8 w values and 8 reciprocal-table
+            // values through one index vector each — this replaces the
+            // 8 + 8 scalar loads that dominated the autovec kernel.
+            let wv = _mm256_i32gather_ps::<4>(w.as_ptr(), idx);
+            let iv = _mm256_i32gather_ps::<4>(inv.as_ptr(), idx);
+            let xv = _mm256_loadu_ps(vals.as_ptr().add(base));
+            let mut lj = [0usize; LANES];
+            for (k, slot) in lj.iter_mut().enumerate() {
+                *slot = *cols.get_unchecked(base + k) as usize;
+            }
+            (lj, st(wv), st(xv), st(iv))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane {
+        debug_assert!(lj.iter().all(|&j| j < src.len()));
+        // SAFETY: caller guarantees every lj[k] < src.len(); ids were
+        // validated < i32::MAX with the stripe width.
+        unsafe {
+            let idx = _mm256_setr_epi32(
+                lj[0] as i32,
+                lj[1] as i32,
+                lj[2] as i32,
+                lj[3] as i32,
+                lj[4] as i32,
+                lj[5] as i32,
+                lj[6] as i32,
+                lj[7] as i32,
+            );
+            st(_mm256_i32gather_ps::<4>(src.as_ptr(), idx))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            // t = λ·∇φ·(1/|Ω̄_j|); gw = t − α·x  (fused: one rounding
+            // on the subtract-multiply, vs two on the portable path —
+            // the per-backend float-order caveat).
+            let t = _mm256_mul_ps(_mm256_mul_ps(_mm256_set1_ps(lam), ld(rv)), ld(iv));
+            st(_mm256_fnmadd_ps(ld(av), ld(xv), t))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wn = _mm256_fnmadd_ps(ld(etav), ld(gw), ld(wv));
+            st(_mm256_min_ps(_mm256_max_ps(wn, _mm256_set1_ps(-b)), _mm256_set1_ps(b)))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe { st(_mm256_fnmadd_ps(ld(wv), ld(xv), _mm256_set1_ps(bias))) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn l1_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wv = ld(w);
+            let zero = _mm256_setzero_ps();
+            // sign(w) with 0 at the kink (±0.0 compare equal to 0):
+            // mask-select +1 where w > 0, −1 where w < 0.
+            let pos =
+                _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_GT_OQ }>(wv, zero), _mm256_set1_ps(1.0));
+            let neg =
+                _mm256_and_ps(_mm256_cmp_ps::<{ _CMP_LT_OQ }>(wv, zero), _mm256_set1_ps(-1.0));
+            st(_mm256_or_ps(pos, neg))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn l2_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wv = ld(w);
+            // 2·w is exact in f32 (exponent bump), identical to the
+            // portable lane.
+            st(_mm256_add_ps(wv, wv))
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let gv = ld(g);
+            let a = _mm256_fmadd_ps(gv, gv, ld(acc));
+            *acc = st(a);
+            st(_mm256_div_ps(
+                _mm256_set1_ps(e0),
+                _mm256_sqrt_ps(_mm256_add_ps(_mm256_set1_ps(eps), a)),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: Lane = [-1.5, -0.25, 0.0, 0.4, 1.0, -0.0, 3.25, -7.5];
+
+    #[test]
+    fn portable_matches_the_former_inline_loops() {
+        // The backend is the moved PR 2/3 code; pin a few identities so
+        // a future edit can't silently drift the bit-exact baseline.
+        let rv = Portable::l2_grad_lane(&W);
+        for k in 0..LANES {
+            assert_eq!(rv[k], 2.0 * W[k]);
+        }
+        let gw = Portable::w_grad(0.5, &W, &W, &W, &W);
+        for k in 0..LANES {
+            assert_eq!(gw[k], 0.5 * W[k] * W[k] - W[k] * W[k]);
+        }
+        let mut acc: Lane = [1.0; LANES];
+        let eta = Portable::adagrad_eta_lane(0.1, 1e-8, &mut acc, &W);
+        for k in 0..LANES {
+            assert_eq!(acc[k], 1.0 + W[k] * W[k]);
+            assert_eq!(eta[k], 0.1 / (1e-8 + acc[k]).sqrt());
+        }
+    }
+
+    #[test]
+    fn portable_gathers_respect_indices() {
+        let cols: Vec<u32> = vec![3, 1, 4, 1, 5, 2, 6, 5];
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let w: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
+        let inv: Vec<f32> = (0..8).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        // SAFETY: all of cols[0..8] index within w/inv, base 0 + LANES
+        // == cols.len().
+        let (lj, wv, xv, iv) = unsafe { Portable::gather_chunk(&cols, &vals, 0, &w, &inv) };
+        for k in 0..LANES {
+            assert_eq!(lj[k], cols[k] as usize);
+            assert_eq!(wv[k], w[cols[k] as usize]);
+            assert_eq!(xv[k], vals[k]);
+            assert_eq!(iv[k], inv[cols[k] as usize]);
+        }
+        // SAFETY: lj entries validated above.
+        let acc = unsafe { Portable::gather_idx(&w, &lj) };
+        for k in 0..LANES {
+            assert_eq!(acc[k], w[lj[k]]);
+        }
+    }
+
+    /// AVX2 vs portable on every backend op — the fine-grained leg of
+    /// the differential story (the kernel-level legs live in
+    /// `tests/lane_kernel.rs` / `tests/alpha_lane.rs`). Gathers and
+    /// selects must agree bitwise; FMA-contracted arithmetic to ≤1 ulp
+    /// against the twice-rounded portable result.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_ops_match_portable() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            eprintln!("skipping: avx2+fma not available on this host");
+            return;
+        }
+        let x: Lane = [0.5, -1.25, 2.0, -0.75, 0.125, 3.5, -2.25, 1.0];
+        let close = |a: &Lane, b: &Lane, what: &str| {
+            for k in 0..LANES {
+                let rel = (a[k] - b[k]).abs() / b[k].abs().max(1e-6);
+                assert!(rel <= 1e-6, "{what}[{k}]: {} vs {}", a[k], b[k]);
+            }
+        };
+        assert_eq!(Avx2::l1_grad_lane(&W), Portable::l1_grad_lane(&W));
+        assert_eq!(Avx2::l2_grad_lane(&W), Portable::l2_grad_lane(&W));
+        close(
+            &Avx2::w_grad(0.3, &W, &x, &x, &W),
+            &Portable::w_grad(0.3, &W, &x, &x, &W),
+            "w_grad",
+        );
+        close(
+            &Avx2::w_step_clamp(&W, &x, &x, 2.5),
+            &Portable::w_step_clamp(&W, &x, &x, 2.5),
+            "w_step_clamp",
+        );
+        close(
+            &Avx2::affine_coeffs(0.7, &W, &x),
+            &Portable::affine_coeffs(0.7, &W, &x),
+            "affine_coeffs",
+        );
+        let mut acc_a: Lane = [0.5; LANES];
+        let mut acc_p: Lane = [0.5; LANES];
+        let ea = Avx2::adagrad_eta_lane(0.1, 1e-8, &mut acc_a, &x);
+        let ep = Portable::adagrad_eta_lane(0.1, 1e-8, &mut acc_p, &x);
+        close(&ea, &ep, "adagrad_eta");
+        close(&acc_a, &acc_p, "adagrad_acc");
+
+        let cols: Vec<u32> = vec![7, 0, 3, 3, 2, 6, 1, 5, 4, 4, 0, 7, 1, 2, 5, 6];
+        let vals: Vec<f32> = (0..16).map(|i| 0.25 * i as f32).collect();
+        let w: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+        let inv: Vec<f32> = (0..8).map(|i| 1.0 / (2.0 + i as f32)).collect();
+        for base in [0usize, 8] {
+            // SAFETY: cols[base..base+8] all < 8 == w.len() == inv.len().
+            let a = unsafe { Avx2::gather_chunk(&cols, &vals, base, &w, &inv) };
+            // SAFETY: as above.
+            let p = unsafe { Portable::gather_chunk(&cols, &vals, base, &w, &inv) };
+            assert_eq!(a.0, p.0);
+            assert_eq!(a.1, p.1, "gather w bitwise");
+            assert_eq!(a.2, p.2, "load x bitwise");
+            assert_eq!(a.3, p.3, "gather inv bitwise");
+            // SAFETY: index set validated above.
+            let (aa, pa) = unsafe { (Avx2::gather_idx(&w, &a.0), Portable::gather_idx(&w, &p.0)) };
+            assert_eq!(aa, pa, "gather_idx bitwise");
+        }
+    }
+}

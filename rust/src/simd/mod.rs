@@ -1,0 +1,139 @@
+//! Explicit-SIMD kernel backends (§Perf, DESIGN.md §SIMD-backend).
+//!
+//! Three pieces:
+//!
+//! * [`aligned::AVec`] — the 64-byte-aligned storage the packed-block
+//!   lane regions and per-stripe tables live in.
+//! * [`backend::SimdBackend`] — the lane-granular kernel operations
+//!   (chunk gather, gradient FMA, AdaGrad η batch, clamp, affine-α
+//!   coefficients) behind one monomorphization parameter, with the
+//!   [`backend::Portable`] autovec baseline and the x86_64
+//!   [`backend::Avx2`] gather/FMA implementation.
+//! * [`resolve`] — the one place runtime CPU-feature detection runs.
+//!   Engines never detect features (ci.sh greps them); the resolved
+//!   [`SimdLevel`] is recorded in `coordinator::plan::SweepPlan`, which
+//!   monomorphizes the sweeps per backend so there is zero per-chunk
+//!   dispatch.
+
+// `unsafe fn` bodies in this subtree are NOT implicit unsafe contexts:
+// every unsafe operation needs its own explicit block with a
+// `// SAFETY:` argument (scripts/ci.sh gates the comments).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod aligned;
+pub mod backend;
+
+pub use aligned::{is_aligned, AVec, ALIGN};
+#[cfg(target_arch = "x86_64")]
+pub use backend::Avx2;
+pub use backend::{Portable, SimdBackend};
+
+use crate::config::SimdKind;
+
+/// The backend a run executes with, resolved once at setup time and
+/// recorded in the sweep plan. (The *request* — auto/portable/avx2 —
+/// is [`crate::config::SimdKind`]; this is the answer.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Autovectorized per-lane loops; bit-identical to the PR 3
+    /// kernels on every architecture.
+    Portable,
+    /// AVX2 gathers + FMA pipeline (x86_64 with avx2+fma detected, or
+    /// forced via `--simd avx2` on such a host).
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Portable => backend::Portable::NAME,
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Whether the running CPU supports the AVX2 backend (AVX2 *and* FMA —
+/// the kernel pipeline uses both instruction sets).
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve the configured backend request against the running CPU.
+/// `Auto` picks AVX2 when supported and falls back to portable
+/// otherwise; explicit requests are honored exactly. A forced `Avx2`
+/// on an unsupported host **panics** with the same actionable message
+/// `TrainConfig::validate` reports: validating callers (the `Trainer`
+/// facade, the CLI) never reach the panic, and callers that skip
+/// validation (the deprecated free-function shims) still can never get
+/// a silent portable run out of an explicit avx2 request.
+pub fn resolve(kind: SimdKind) -> SimdLevel {
+    match kind {
+        SimdKind::Portable => SimdLevel::Portable,
+        SimdKind::Auto => {
+            if avx2_supported() {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Portable
+            }
+        }
+        SimdKind::Avx2 => {
+            assert!(
+                avx2_supported(),
+                "cluster.simd = \"avx2\" but this CPU does not support avx2+fma; \
+                 use simd = \"auto\" (runtime detection) or \"portable\""
+            );
+            SimdLevel::Avx2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_always_honored() {
+        assert_eq!(resolve(SimdKind::Portable), SimdLevel::Portable);
+    }
+
+    #[test]
+    fn auto_matches_detection() {
+        let want = if avx2_supported() { SimdLevel::Avx2 } else { SimdLevel::Portable };
+        assert_eq!(resolve(SimdKind::Auto), want);
+    }
+
+    #[test]
+    fn forced_avx2_never_degrades_silently() {
+        // An explicit avx2 request is honored exactly or refused
+        // loudly — the "--simd avx2" promise holds even for callers
+        // that skip TrainConfig::validate (the deprecated shims).
+        let got = std::panic::catch_unwind(|| resolve(SimdKind::Avx2));
+        if avx2_supported() {
+            assert_eq!(got.unwrap(), SimdLevel::Avx2);
+        } else {
+            assert!(got.is_err(), "forced avx2 must not fall back to portable");
+        }
+    }
+
+    #[test]
+    fn level_names_are_stable() {
+        // Recorded in benches/JSON artifacts — renaming breaks the
+        // cross-PR trajectory.
+        assert_eq!(SimdLevel::Portable.name(), "portable");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    #[test]
+    fn non_x86_never_reports_avx2() {
+        assert!(!avx2_supported());
+        assert_eq!(resolve(SimdKind::Auto), SimdLevel::Portable);
+    }
+}

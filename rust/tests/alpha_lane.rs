@@ -18,6 +18,11 @@
 //! false for them, and even a direct call degrades to `sweep_lanes`
 //! bit for bit (pinned below).
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{LossKind, PartitionKind, RegKind, StepKind, TrainConfig};
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
@@ -540,4 +545,180 @@ fn affine_path_reduces_square_objective() {
     let at_zero = setup.problem.primal(&ds, &vec![0.0; ds.d()]);
     assert!(r.final_primal < at_zero, "{} !< {at_zero}", r.final_primal);
     assert!(r.final_gap >= -1e-6, "weak duality violated: {}", r.final_gap);
+}
+
+// ---------------------------------------------------------------------
+// Explicit-SIMD backend differentials (PR 5): the AVX2 affine-α path
+// ---------------------------------------------------------------------
+// #[cfg]-gated to x86_64 + runtime detection; auto-skips elsewhere.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2_backend {
+    use super::*;
+    use dso::config::SimdKind;
+    use dso::coordinator::updates::{sweep_lanes_affine_with, sweep_lanes_with};
+    use dso::simd::{avx2_supported, Avx2};
+
+    fn guard() -> bool {
+        if avx2_supported() {
+            true
+        } else {
+            eprintln!("skipping avx2 affine test: host lacks avx2+fma");
+            false
+        }
+    }
+
+    #[test]
+    fn prop_avx2_affine_matches_portable_and_oracle() {
+        // AVX2 affine-α fold vs the portable fold and the COO oracle,
+        // on random ragged square-loss blocks × {L1, L2} × {Fixed,
+        // AdaGrad}: ≤1e-5 relative per sweep (FMA contraction in the
+        // coefficient lanes and w side is the only divergence — the α
+        // fold itself stays scalar f64 in `alpha_chunk_affine`).
+        if !guard() {
+            return;
+        }
+        prop::check("avx2 vs portable affine α", 40, |g| {
+            let ds = random_regression_dataset(g);
+            let p = g.usize_in(1, 2.min(ds.m()).min(ds.d()));
+            let rp = Partition::even(ds.m(), p);
+            let cp = Partition::even(ds.d(), p);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+            let eta = g.f64_in(0.05, 0.5);
+            let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+            let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+            let q = g.usize_in(0, p - 1);
+            let r = g.usize_in(0, p - 1);
+            let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize| {
+                packed_trajectory(
+                    kernel,
+                    om.block(q, r),
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    Loss::Square,
+                    reg,
+                    lambda,
+                    rule,
+                    1,
+                )
+            };
+            let (aw, _, aa, _) = run(sweep_lanes_affine_with::<Avx2>);
+            let (pw, _, pa, _) = run(sweep_lanes_affine);
+            for k in 0..aw.len() {
+                prop::assert_close(pw[k] as f64, aw[k] as f64, 1e-5, &format!("w[{k}]"))?;
+            }
+            for k in 0..aa.len() {
+                prop::assert_close(pa[k] as f64, aa[k] as f64, 1e-5, &format!("alpha[{k}]"))?;
+            }
+            let (rw, ra) = oracle_trajectory(&ds, &om, q, r, reg, lambda, rule, 1);
+            for k in 0..rw.len() {
+                prop::assert_close(rw[k] as f64, aw[k] as f64, 1e-5, &format!("oracle w[{k}]"))?;
+            }
+            for k in 0..ra.len() {
+                prop::assert_close(ra[k] as f64, aa[k] as f64, 1e-5, &format!("oracle a[{k}]"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn avx2_affine_entry_point_is_avx2_lane_kernel_for_nonaffine_losses() {
+        // The non-affine degrade contract holds per backend: calling
+        // the AVX2 affine entry point with hinge/logistic is bitwise
+        // the AVX2 plain lane kernel (same backend, same chunks).
+        if !guard() {
+            return;
+        }
+        let ds = SparseSpec {
+            name: "avx2-nonaffine".into(),
+            m: 40,
+            d: 32,
+            nnz_per_row: 12.0,
+            zipf_s: 0.3,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 81,
+        }
+        .generate();
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let affine = packed_trajectory(
+                    sweep_lanes_affine_with::<Avx2>,
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                let plain = packed_trajectory(
+                    sweep_lanes_with::<Avx2>,
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                assert_eq!(affine, plain, "{loss:?} {rule:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_avx2_affine_dispatch_threaded_equals_replay() {
+        // Lemma-2 bit-identity on the AVX2 affine path: square loss,
+        // dense rows (lane dispatch), `--simd avx2`, threaded vs
+        // serial replay bitwise equal.
+        if !guard() {
+            return;
+        }
+        let ds = {
+            let mut d = SparseSpec {
+                name: "avx2-affine-engine".into(),
+                m: 120,
+                d: 40,
+                nnz_per_row: 18.0,
+                zipf_s: 0.4,
+                label_noise: 0.0,
+                pos_frac: 0.5,
+                seed: 91,
+            }
+            .generate();
+            for (i, yv) in d.y.iter_mut().enumerate() {
+                *yv = ((i % 7) as f32 - 3.0) * 0.5;
+            }
+            d
+        };
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 3;
+        c.optim.eta0 = 0.2;
+        c.optim.step = StepKind::AdaGrad;
+        c.model.loss = LossKind::Square;
+        c.model.lambda = 1e-3;
+        c.cluster.machines = 2;
+        c.cluster.cores = 1;
+        c.cluster.simd = SimdKind::Avx2;
+        c.monitor.every = 0;
+        let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+        let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+        assert_eq!(threaded.w, replayed.w);
+        assert_eq!(threaded.alpha, replayed.alpha);
+        assert_eq!(threaded.total_updates, replayed.total_updates);
+    }
 }

@@ -4,6 +4,11 @@
 //! * Theorem 1's O(1/√T) gap shape: gap·√T stays bounded,
 //! * all four algorithms agree on the optimum of the same problem.
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{Algorithm, LossKind, TrainConfig};
 use dso::data::synth::SparseSpec;
 use dso::data::{Csr, Dataset};

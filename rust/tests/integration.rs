@@ -3,6 +3,11 @@
 //! the real PJRT runtime; failure injection (bad configs, corrupt
 //! artifacts, malformed data files) yields clean errors, not panics.
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{Algorithm, ExecMode, TrainConfig};
 use dso::data::synth::DenseSpec;
 use dso::losses::{Loss, Problem, Regularizer};

@@ -18,6 +18,11 @@
 //! (`tests/packed_kernel.rs`); the float-summation-order caveat is
 //! documented in `partition::omega`.
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{LossKind, PartitionKind, RegKind, StepKind, TrainConfig};
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_packed, BlockState, PackedCtx, PackedState, StepRule,
@@ -546,5 +551,335 @@ fn async_engine_runs_lane_path() {
     for (i, &a) in r.alpha.iter().enumerate() {
         let beta = ds.y[i] as f64 * a as f64;
         assert!((-1e-6..=1.0 + 1e-6).contains(&beta), "α_{i} infeasible: {beta}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Explicit-SIMD backend differentials (PR 5): AVX2 vs portable
+// ---------------------------------------------------------------------
+// #[cfg]-gated to x86_64 and guarded on runtime detection, so the
+// suite auto-skips (with a note) everywhere the AVX2 backend cannot
+// run. The portable backend needs no new coverage: it is bit-identical
+// to the pre-backend kernels by construction, which the whole existing
+// suite pins.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2_backend {
+    use super::*;
+    use dso::config::SimdKind;
+    use dso::coordinator::updates::sweep_lanes_with;
+    use dso::simd::{avx2_supported, Avx2};
+
+    fn guard() -> bool {
+        if avx2_supported() {
+            true
+        } else {
+            eprintln!("skipping avx2 backend test: host lacks avx2+fma");
+            false
+        }
+    }
+
+    #[test]
+    fn prop_avx2_matches_portable_and_oracle() {
+        // The backend contract: on random ragged/sentinel-padded
+        // blocks across every loss × reg × rule, one AVX2 sweep stays
+        // within 1e-5 relative of both the portable backend (FMA
+        // contraction is the only divergence) and the COO oracle.
+        if !guard() {
+            return;
+        }
+        prop::check("avx2 vs portable lane kernel", 40, |g| {
+            let ds = random_dataset(g);
+            let p = g.usize_in(1, 2.min(ds.m()).min(ds.d()));
+            let rp = Partition::even(ds.m(), p);
+            let cp = Partition::even(ds.d(), p);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            om.validate(&ds.x).map_err(|e| e)?;
+            let loss =
+                Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic, LossKind::Square]));
+            let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+            let eta = g.f64_in(0.05, 0.5);
+            let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+            let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+            let q = g.usize_in(0, p - 1);
+            let r = g.usize_in(0, p - 1);
+
+            let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize| {
+                packed_trajectory(
+                    kernel,
+                    om.block(q, r),
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    loss,
+                    reg,
+                    lambda,
+                    rule,
+                    1,
+                )
+            };
+            let (aw, _, aa, _) = run(sweep_lanes_with::<Avx2>);
+            let (pw, _, pa, _) = run(sweep_lanes);
+            for k in 0..aw.len() {
+                prop::assert_close(pw[k] as f64, aw[k] as f64, 1e-5, &format!("w[{k}]"))?;
+            }
+            for k in 0..aa.len() {
+                prop::assert_close(pa[k] as f64, aa[k] as f64, 1e-5, &format!("alpha[{k}]"))?;
+            }
+            let (rw, ra) = oracle_trajectory(&ds, &om, q, r, loss, reg, lambda, rule, 1);
+            for k in 0..rw.len() {
+                prop::assert_close(rw[k] as f64, aw[k] as f64, 1e-5, &format!("oracle w[{k}]"))?;
+            }
+            for k in 0..ra.len() {
+                prop::assert_close(ra[k] as f64, aa[k] as f64, 1e-5, &format!("oracle a[{k}]"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_avx2_sentinel_padding_inert() {
+        // The AVX2 gathers read sentinel slots speculatively
+        // (full-width `_mm256_i32gather_ps`), exactly like the
+        // portable loads: rewriting every sentinel must leave the
+        // output bitwise unchanged.
+        if !guard() {
+            return;
+        }
+        prop::check("avx2 sentinel padding inert", 20, |g| {
+            let ds = random_dataset(g);
+            let rp = Partition::even(ds.m(), 1);
+            let cp = Partition::even(ds.d(), 1);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            let b = om.block(0, 0);
+            if !b.has_lanes() {
+                return Ok(());
+            }
+            let mut mutated = b.clone();
+            for gi in 0..mutated.groups.len() {
+                let g = mutated.groups[gi];
+                let ps = g.pad_start as usize;
+                for k in ps + g.len()..ps + g.padded_len() {
+                    mutated.cols[k] = mutated.n_cols - 1;
+                    mutated.vals[k] = -3.25;
+                }
+            }
+            let loss = Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic]));
+            let rule = StepRule::AdaGrad(g.f64_in(0.05, 0.5));
+            let run = |blk: &PackedBlock| {
+                packed_trajectory(
+                    sweep_lanes_with::<Avx2>,
+                    blk,
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    2,
+                )
+            };
+            prop::assert_that(run(b) == run(&mutated), "avx2 output depends on sentinels")
+        });
+    }
+
+    #[test]
+    fn avx2_short_groups_fall_back_bitwise_to_scalar() {
+        // The backend only touches lane chunks; short-group blocks run
+        // the shared scalar loop, so the AVX2 instantiation must be
+        // bitwise the scalar kernel there — on any backend.
+        if !guard() {
+            return;
+        }
+        let ds = SparseSpec {
+            name: "avx2-short".into(),
+            m: 60,
+            d: 40,
+            nnz_per_row: 3.0,
+            zipf_s: 0.5,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 61,
+        }
+        .generate();
+        let rp = Partition::even(ds.m(), 2);
+        let cp = Partition::even(ds.d(), 2);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        for q in 0..2 {
+            for r in 0..2 {
+                let b = om.block(q, r);
+                if b.has_lanes() {
+                    continue;
+                }
+                for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                    let avx = packed_trajectory(
+                        sweep_lanes_with::<Avx2>,
+                        b,
+                        &ds,
+                        &om,
+                        q,
+                        r,
+                        Loss::Hinge,
+                        Regularizer::L2,
+                        1e-3,
+                        rule,
+                        3,
+                    );
+                    let scalar = packed_trajectory(
+                        sweep_packed,
+                        b,
+                        &ds,
+                        &om,
+                        q,
+                        r,
+                        Loss::Hinge,
+                        Regularizer::L2,
+                        1e-3,
+                        rule,
+                        3,
+                    );
+                    assert_eq!(avx, scalar, "block ({q},{r}) {rule:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_avx2_entry_points_match_generic_bitwise() {
+        // The `#[target_feature]` whole-sweep entry points the plan
+        // and benches use must be bitwise the generic Avx2
+        // monomorphization: fusing changes codegen, not results (the
+        // intrinsics are explicit either way).
+        if !guard() {
+            return;
+        }
+        use dso::coordinator::updates::{
+            sweep_lanes_affine_with, sweep_lanes_avx2, sweep_lanes_affine_avx2,
+        };
+        let ds = SparseSpec {
+            name: "avx2-fused".into(),
+            m: 50,
+            d: 40,
+            nnz_per_row: 14.0,
+            zipf_s: 0.4,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 101,
+        }
+        .generate();
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for loss in [Loss::Hinge, Loss::Square] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let generic = packed_trajectory(
+                    if loss == Loss::Square {
+                        sweep_lanes_affine_with::<Avx2>
+                    } else {
+                        sweep_lanes_with::<Avx2>
+                    },
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    2,
+                );
+                // Same trajectory through the fused entry point.
+                let y_local = om.stripe_labels(&ds.y);
+                let alpha_bias = om.stripe_alpha_bias(&ds.y);
+                let ctx = PackedCtx {
+                    loss,
+                    reg: Regularizer::L2,
+                    lambda: 1e-3,
+                    w_bound: loss.w_bound(1e-3),
+                    rule,
+                    inv_col: &om.inv_col[0],
+                    inv_col32: &om.inv_col32[0],
+                    inv_row: &om.inv_row[0],
+                    y: &y_local[0],
+                    alpha_bias32: &alpha_bias[0],
+                };
+                let mut w = vec![0.01f32; om.col_part.block_len(0)];
+                let mut w_acc = vec![0f32; w.len()];
+                let mut alpha: Vec<f32> = om
+                    .row_part
+                    .block(0)
+                    .map(|i| loss.alpha_init(ds.y[i] as f64) as f32)
+                    .collect();
+                let mut a_acc = vec![0f32; alpha.len()];
+                for _ in 0..2 {
+                    let mut st = PackedState {
+                        w: &mut w,
+                        w_acc: &mut w_acc,
+                        alpha: &mut alpha,
+                        a_acc: &mut a_acc,
+                    };
+                    // SAFETY: inside the guard() avx2+fma check.
+                    unsafe {
+                        if loss == Loss::Square {
+                            sweep_lanes_affine_avx2(om.block(0, 0), &ctx, &mut st);
+                        } else {
+                            sweep_lanes_avx2(om.block(0, 0), &ctx, &mut st);
+                        }
+                    }
+                }
+                assert_eq!(
+                    (w, w_acc, alpha, a_acc),
+                    generic,
+                    "{loss:?} {rule:?} fused != generic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_threaded_equals_replay_under_avx2() {
+        // Lemma-2 bit-identity holds *within* the AVX2 backend: the
+        // threaded engine and the serial replay dispatch the same
+        // planned kernels, so `--simd avx2` trajectories are exactly
+        // serializable too (even/balanced, all three losses).
+        if !guard() {
+            return;
+        }
+        let ds = SparseSpec {
+            name: "avx2-engine".into(),
+            m: 160,
+            d: 48,
+            nnz_per_row: 20.0,
+            zipf_s: 0.6,
+            label_noise: 0.05,
+            pos_frac: 0.5,
+            seed: 71,
+        }
+        .generate();
+        for loss in [LossKind::Hinge, LossKind::Logistic, LossKind::Square] {
+            for partition in [PartitionKind::Even, PartitionKind::Balanced] {
+                let mut c = TrainConfig::default();
+                c.optim.epochs = 3;
+                c.optim.eta0 = 0.3;
+                c.optim.step = StepKind::AdaGrad;
+                c.model.loss = loss;
+                c.model.lambda = 1e-3;
+                c.cluster.machines = 2;
+                c.cluster.cores = 1;
+                c.cluster.partition = partition;
+                c.cluster.simd = SimdKind::Avx2;
+                c.monitor.every = 0;
+                let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+                let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+                assert_eq!(threaded.w, replayed.w, "{loss:?}/{partition:?}");
+                assert_eq!(threaded.alpha, replayed.alpha, "{loss:?}/{partition:?}");
+                assert_eq!(threaded.total_updates, replayed.total_updates);
+            }
+        }
     }
 }

@@ -3,6 +3,11 @@
 //! results (weak duality, feasibility, projection boxes, replay
 //! equality, libsvm round-tripping of generated data).
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{LossKind, TrainConfig};
 use dso::data::synth::SparseSpec;
 use dso::losses::{Loss, Problem, Regularizer};

@@ -4,6 +4,11 @@
 //! distributed parameters bit-for-bit, for every worker count, loss,
 //! step rule, and sampling mode.
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::config::{LossKind, StepKind, TrainConfig};
 use dso::coordinator::{run_replay, train_dso};
 use dso::data::synth::SparseSpec;

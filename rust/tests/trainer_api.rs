@@ -4,6 +4,11 @@
 //! free functions on a pinned seed config — the API redesign moved the
 //! routing and the kernel dispatch, not the trajectories.
 
+// NOTE: this suite deliberately exercises the deprecated free-function
+// shims — it pins them bit-for-bit against the `dso::api::Trainer`
+// facade (DESIGN.md §Solver-API deprecation map).
+#![allow(deprecated)]
+
 use dso::api::{Model, Trainer};
 use dso::config::{Algorithm, ExecMode, TrainConfig};
 use dso::coordinator::monitor::HISTORY_COLUMNS;

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
-# records BENCH_updates.json, BENCH_lanes.json and BENCH_alpha_lanes.json
-# (the cross-PR perf trajectory; plot with
+# records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json
+# and BENCH_simd.json (the cross-PR perf trajectory; plot with
 # `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
@@ -16,22 +16,54 @@ fi
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
 
-echo "== cargo clippy -D warnings =="
-cargo clippy --workspace --all-targets -- -D warnings
+echo "== cargo clippy -D warnings -D deprecated =="
+# -D deprecated keeps the build warning-clean against the Trainer-era
+# shims: internal code must use the facade; only the suites that pin
+# shim-vs-facade bit-identity opt back in via #[allow(deprecated)].
+cargo clippy --workspace --all-targets -- -D warnings -D deprecated
 
-echo "== kernel dispatch lives only in SweepPlan =="
+echo "== kernel dispatch and feature detection live only in SweepPlan/setup =="
 # PR 4 moved the has_lanes()/affine_alpha() kernel-selection tree out
-# of the engines into rust/src/coordinator/plan.rs. If dispatch logic
-# leaks back into an engine, fail loudly: it is exactly the
-# copy-paste drift this gate exists to prevent.
-if grep -n "has_lanes\|affine_alpha" \
+# of the engines into rust/src/coordinator/plan.rs; PR 5 added the
+# SIMD-backend dimension, resolved once per run (is_x86_feature_detected
+# in rust/src/simd/, recorded by DsoSetup into the plan). If either
+# decision leaks back into an engine, fail loudly: it is exactly the
+# copy-paste drift these gates exist to prevent.
+if grep -n "has_lanes\|affine_alpha\|is_x86_feature_detected" \
     rust/src/coordinator/engine.rs \
     rust/src/coordinator/async_engine.rs \
     rust/src/runtime/tile_engine.rs; then
-    echo "ci.sh: kernel selection leaked back into an engine;" \
-         "dispatch belongs in rust/src/coordinator/plan.rs" >&2
+    echo "ci.sh: kernel/backend selection leaked back into an engine;" \
+         "dispatch belongs in rust/src/coordinator/plan.rs," \
+         "detection in rust/src/simd/" >&2
     exit 1
 fi
+
+echo "== every unsafe block in simd/ and updates.rs carries a SAFETY comment =="
+# The explicit-SIMD layer concentrates the repo's unsafe code; each
+# `unsafe {` block must be annotated with the argument that makes it
+# sound (a `// SAFETY:` line within the preceding few lines).
+unsafe_gate() {
+    awk '
+        /SAFETY:/ { cover = 7 }
+        # Only code lines count as unsafe blocks — a comment *about*
+        # unsafe blocks must not trip the gate.
+        /unsafe[[:space:]]*\{/ && $0 !~ /^[[:space:]]*\/\// {
+            if (cover <= 0) {
+                printf "%s:%d: unsafe block without a preceding // SAFETY: comment\n", FILENAME, FNR
+                bad = 1
+            }
+        }
+        { if (cover > 0) cover-- }
+        END { exit bad }
+    ' "$1"
+}
+for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs; do
+    if ! unsafe_gate "$f"; then
+        echo "ci.sh: annotate the unsafe block(s) above in $f" >&2
+        exit 1
+    fi
+done
 
 echo "== cargo build --examples =="
 # The five examples are the facade's public face; they must always
@@ -42,9 +74,18 @@ echo "== lane kernel property suite present =="
 # The SIMD sweep's correctness story rests on tests/lane_kernel.rs; if
 # the suite is ever renamed, filtered out, or deleted, fail loudly
 # instead of letting `cargo test` pass without it.
+lane_required=(prop_lanes_match_scalar_oracle prop_sentinel_padding_never_perturbs_state
+    lanes_match_oracle_all_combinations_with_ragged_tails)
+if [[ "$(uname -m)" == "x86_64" ]]; then
+    # The AVX2-vs-portable differential suite compiles on every x86_64
+    # build (it self-skips at runtime where avx2+fma is absent).
+    lane_required+=(prop_avx2_matches_portable_and_oracle
+        prop_avx2_sentinel_padding_inert
+        fused_avx2_entry_points_match_generic_bitwise
+        engine_threaded_equals_replay_under_avx2)
+fi
 lane_tests="$(cargo test -q --test lane_kernel -- --list 2>/dev/null || true)"
-for required in prop_lanes_match_scalar_oracle prop_sentinel_padding_never_perturbs_state \
-    lanes_match_oracle_all_combinations_with_ragged_tails; do
+for required in "${lane_required[@]}"; do
     if ! grep -q "$required" <<<"$lane_tests"; then
         echo "ci.sh: lane kernel property test '$required' missing/skipped" >&2
         exit 1
@@ -54,12 +95,17 @@ done
 echo "== affine α-lane differential suite present =="
 # Same guard for the square-loss affine-α path (tests/alpha_lane.rs):
 # its tolerance-equivalence story rests on the differential suite.
+alpha_required=(prop_affine_matches_coo_oracle prop_affine_sentinel_mutation_inert
+    affine_matches_oracle_ragged_and_short_groups
+    affine_long_row_stays_within_tolerance
+    affine_entry_point_is_bitwise_lane_kernel_for_nonaffine_losses
+    engine_affine_dispatch_threaded_equals_replay)
+if [[ "$(uname -m)" == "x86_64" ]]; then
+    alpha_required+=(prop_avx2_affine_matches_portable_and_oracle
+        engine_avx2_affine_dispatch_threaded_equals_replay)
+fi
 alpha_tests="$(cargo test -q --test alpha_lane -- --list 2>/dev/null || true)"
-for required in prop_affine_matches_coo_oracle prop_affine_sentinel_mutation_inert \
-    affine_matches_oracle_ragged_and_short_groups \
-    affine_long_row_stays_within_tolerance \
-    affine_entry_point_is_bitwise_lane_kernel_for_nonaffine_losses \
-    engine_affine_dispatch_threaded_equals_replay; do
+for required in "${alpha_required[@]}"; do
     if ! grep -q "$required" <<<"$alpha_tests"; then
         echo "ci.sh: affine α-lane test '$required' missing/skipped" >&2
         exit 1
@@ -72,7 +118,7 @@ cargo test -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
-    for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json; do
+    for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else

@@ -22,6 +22,12 @@ BENCH_*.json in the directory itself form the "current" snapshot. For
 every (group, benchmark) series the script prints units/sec across
 snapshots and, with matplotlib, plots one trajectory panel per group.
 
+The group set is open-ended and keyed by each file's own "group"
+field, so snapshots from different PRs may carry different groups
+(updates/lanes from PR 2, alpha_lanes from PR 3, simd from PR 5,
+runtime's empty non-xla stub, ...) in any directory order; series
+missing from a snapshot simply skip that tick.
+
 Both modes degrade gracefully (text summary) when matplotlib is
 unavailable.
 """
@@ -95,7 +101,11 @@ def load_bench_file(path):
     """Parse one BENCH_<group>.json → (group, {name: units_per_sec})."""
     with open(path) as f:
         doc = json.load(f)
-    group = doc.get("group") or os.path.basename(path)[len("BENCH_") : -len(".json")]
+    # Prefer the file's own group key; fall back to the filename stem
+    # only when it matches the BENCH_<group>.json convention.
+    base = os.path.basename(path)
+    stem = base[len("BENCH_") : -len(".json")] if base.startswith("BENCH_") else base
+    group = doc.get("group") or stem
     rates = {}
     for r in doc.get("results", []):
         name = r.get("name")
