@@ -18,13 +18,19 @@
 //!                on the same block (portable-only where avx2+fma is
 //!                absent).
 //!
+//! * `faults_*` — end-to-end async NOMAD runs, fault-free vs with an
+//!                injected straggler schedule: the cost of the
+//!                bounded-wait token flow when nothing fails, and the
+//!                degradation under stalls.
+//!
 //! Acceptance targets: packed ≥2× the reference, lanes ≥1.5× packed,
 //! both as median updates/sec on the same 64k-entry block. Run with
 //! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all kernels),
 //! `BENCH_lanes.json` (the scalar-vs-lane pair), `BENCH_alpha_lanes.json`
-//! (the square-loss scalar-α-vs-affine-α pair) and `BENCH_simd.json`
-//! (the portable-vs-AVX2 backend pair) — the CI smoke tracks all four
-//! so the perf trajectory is recorded across PRs.
+//! (the square-loss scalar-α-vs-affine-α pair), `BENCH_simd.json`
+//! (the portable-vs-AVX2 backend pair) and `BENCH_faults.json` (the
+//! clean-vs-straggler async pair) — the CI smoke tracks all five so
+//! the perf trajectory is recorded across PRs.
 
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
@@ -317,8 +323,66 @@ fn main() {
         }
     }
 
+    // --- Fault-tolerance overhead pair (BENCH_faults.json) ---
+    // Full async NOMAD runs on a small problem: fault-free vs with a
+    // deterministic straggler schedule (two 2 ms stalls). The clean
+    // side prices the bounded-wait token flow when nothing fails; the
+    // ratio shows how gracefully throughput degrades under stalls.
+    let mut fault_runner = Runner::from_env("faults");
+    {
+        use dso::api::Trainer;
+        use dso::config::{Algorithm, TrainConfig};
+
+        let small = SparseSpec {
+            name: "faults-bench".into(),
+            m: 400,
+            d: 100,
+            nnz_per_row: 8.0,
+            zipf_s: 0.7,
+            label_noise: 0.03,
+            pos_frac: 0.5,
+            seed: 9,
+        }
+        .generate();
+        let mut cfg = TrainConfig::default();
+        cfg.optim.epochs = 2;
+        cfg.optim.eta0 = 0.2;
+        cfg.model.lambda = 1e-3;
+        cfg.cluster.machines = 2;
+        cfg.cluster.cores = 1;
+        cfg.monitor.every = 0;
+        for (name, faults) in [
+            ("faults_async_clean", ""),
+            ("faults_async_straggler", "stall@0.0.1:2,stall@1.1.0:2"),
+        ] {
+            fault_runner.bench(name, || {
+                Trainer::new(cfg.clone())
+                    .algorithm(Algorithm::DsoAsync)
+                    .faults(faults)
+                    .fit(&small, None)
+                    .expect("bench async train run")
+                    .result
+                    .total_updates
+            });
+        }
+        let median = |name: &str| {
+            fault_runner.results.iter().find(|r| r.name == name).map(|r| r.median())
+        };
+        if let (Some(cm), Some(sm)) =
+            (median("faults_async_clean"), median("faults_async_straggler"))
+        {
+            println!(
+                "    -> clean {}/run  straggler {}/run  overhead {:.2}x",
+                human_time(cm),
+                human_time(sm),
+                sm / cm
+            );
+        }
+    }
+
     runner.finish("updates");
     lane_runner.finish("lanes");
     alpha_runner.finish("alpha_lanes");
     simd_runner.finish("simd");
+    fault_runner.finish("faults");
 }

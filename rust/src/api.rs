@@ -95,6 +95,40 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    /// Inject a deterministic fault schedule (`cluster.faults`), e.g.
+    /// `"die@2.0.2,stall@1.0.1:30"` or `"rand:seed=7,die=0.01"` — see
+    /// [`crate::net::FaultPlan::parse_with`] for the grammar. Death and
+    /// drop faults require `Algorithm::DsoAsync` (the sync ring can
+    /// only survive timing faults); [`Trainer::fit`] validates this.
+    pub fn faults(mut self, spec: &str) -> Self {
+        self.cfg.cluster.faults = spec.to_string();
+        self
+    }
+
+    /// Write an atomic checkpoint of the full optimizer state every `n`
+    /// epochs (`checkpoint.every`) to the configured path. Scalar sync
+    /// DSO only; pair with [`Trainer::checkpoint_path`].
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.cfg.checkpoint.every = n;
+        self
+    }
+
+    /// Where periodic checkpoints are written (`checkpoint.path`).
+    pub fn checkpoint_path(mut self, path: &str) -> Self {
+        self.cfg.checkpoint.path = path.to_string();
+        self
+    }
+
+    /// Resume from a checkpoint file (`checkpoint.resume`): training
+    /// restarts at the epoch after the snapshot and — the sampling
+    /// streams being stateless across epochs — finishes bit-identical
+    /// to the uninterrupted run. The engine refuses a checkpoint whose
+    /// fingerprint does not match this run's configuration.
+    pub fn resume(mut self, path: &str) -> Self {
+        self.cfg.checkpoint.resume = path.to_string();
+        self
+    }
+
     /// Stream every recorded per-epoch [`crate::coordinator::EvalRow`]
     /// to `obs` as training runs (any `FnMut(&EvalRow)` closure works).
     ///

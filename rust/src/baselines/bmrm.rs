@@ -180,6 +180,7 @@ pub fn train_bmrm_with(
         total_virtual_s: virtual_s,
         total_wall_s: wall.elapsed_secs(),
         comm_bytes,
+        failures: Vec::new(),
     })
 }
 

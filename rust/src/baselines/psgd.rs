@@ -183,6 +183,7 @@ pub fn train_psgd_with(
         total_virtual_s: virtual_s,
         total_wall_s: wall.elapsed_secs(),
         comm_bytes,
+        failures: Vec::new(),
     })
 }
 

@@ -114,6 +114,7 @@ pub fn train_sgd_with(
         total_virtual_s: virtual_s,
         total_wall_s: wall.elapsed_secs(),
         comm_bytes: 0,
+        failures: Vec::new(),
     })
 }
 

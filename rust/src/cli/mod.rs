@@ -7,6 +7,8 @@
 //!            [--simd auto|portable|avx2] [--scale S]
 //!            [--eta0 X] [--dcd-init] [--replay] [--out results/run.csv]
 //!            [--model-out model.dso] [--path f.libsvm]
+//!            [--faults SPEC] [--checkpoint-every N] [--checkpoint PATH]
+//!            [--resume PATH]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
 //! dso stats  [--name NAME | --all] [--scale S]
@@ -22,6 +24,17 @@
 //! pre-backend kernels; `avx2` = force the gather/FMA backend —
 //! rejected, not silently degraded, on hosts without avx2+fma). The
 //! override exists for benchmarking and reproducibility.
+//!
+//! Fault tolerance (DESIGN.md §Fault-tolerance): `--faults` injects a
+//! seeded fault schedule, e.g. `stall@1.0.1:30` (worker 1, epoch 0,
+//! iter 1 stalls 30 ms), `die@2.0.2`, `drop@0.1.0`, `delay@3.0.1:5`,
+//! or a sampled plan `rand:seed=7,die=0.01,stall=0.05`. Death and drop
+//! faults need `--algo dso-async`; the synchronous ring accepts only
+//! timing faults (stall/delay), which leave its trajectory
+//! bit-identical. `--checkpoint-every N` with `--checkpoint PATH`
+//! writes an atomic full-state snapshot every N epochs (scalar sync
+//! DSO), and `--resume PATH` continues a run from one — bit-identical
+//! to never having stopped.
 
 pub mod args;
 
@@ -101,6 +114,17 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("out") {
         cfg.monitor.out = v.to_string();
     }
+    if let Some(v) = args.get("faults") {
+        cfg.cluster.faults = v.to_string();
+    }
+    cfg.checkpoint.every =
+        args.get_usize("checkpoint-every", cfg.checkpoint.every).map_err(anyhow::Error::msg)?;
+    if let Some(v) = args.get("checkpoint") {
+        cfg.checkpoint.path = v.to_string();
+    }
+    if let Some(v) = args.get("resume") {
+        cfg.checkpoint.resume = v.to_string();
+    }
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
@@ -118,7 +142,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
     args.check_known(&[
         "config", "data", "path", "algo", "loss", "mode", "simd", "lambda", "epochs", "eta0",
         "dcd-init", "replay", "seed", "machines", "cores", "scale", "data-seed", "out",
-        "model-out", "test-frac",
+        "model-out", "test-frac", "faults", "checkpoint-every", "checkpoint", "resume",
     ])
     .map_err(anyhow::Error::msg)?;
     let mut cfg = build_train_config(args)?;
@@ -393,5 +417,69 @@ mod tests {
     fn exp_requires_name() {
         assert!(run(&["exp"]).is_err());
         assert!(run(&["exp", "nope"]).is_err());
+    }
+
+    /// `--faults`: timing faults pass validation on the sync engine;
+    /// death faults are routed to dso-async with an actionable error;
+    /// on `--algo dso-async` an injected death trains through.
+    #[test]
+    fn train_faults_flag() {
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--faults", "stall@0.0.1:5",
+            ])
+            .unwrap(),
+            0
+        );
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+            "--machines", "2", "--cores", "1", "--faults", "die@0.0.0",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("dso-async"), "{err}");
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--algo", "dso-async", "--faults",
+                "die@1.0.1",
+            ])
+            .unwrap(),
+            0
+        );
+    }
+
+    /// `--checkpoint-every`/`--checkpoint` write a snapshot the
+    /// `--resume` route accepts.
+    #[test]
+    fn train_checkpoint_then_resume() {
+        let ck = std::env::temp_dir().join("dso-cli-ck.txt");
+        let ck_s = ck.to_str().unwrap();
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--checkpoint-every", "1",
+                "--checkpoint", ck_s,
+            ])
+            .unwrap(),
+            0
+        );
+        assert!(ck.exists());
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "4",
+                "--machines", "2", "--cores", "1", "--resume", ck_s,
+            ])
+            .unwrap(),
+            0
+        );
+        // `--checkpoint-every` without a path is an actionable error.
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+            "--machines", "2", "--cores", "1", "--checkpoint-every", "1",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("checkpoint"), "{err}");
+        std::fs::remove_file(&ck).ok();
     }
 }

@@ -72,6 +72,14 @@ impl StepKind {
             other => Err(format!("unknown step schedule '{other}' (const|invsqrt|adagrad)")),
         }
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Const => "const",
+            StepKind::InvSqrt => "invsqrt",
+            StepKind::AdaGrad => "adagrad",
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -125,6 +133,13 @@ impl PartitionKind {
             "even" => Ok(PartitionKind::Even),
             "balanced" | "nnz" => Ok(PartitionKind::Balanced),
             other => Err(format!("unknown partition '{other}' (even|balanced)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionKind::Even => "even",
+            PartitionKind::Balanced => "balanced",
         }
     }
 }
@@ -260,6 +275,10 @@ pub struct ClusterConfig {
     pub partition: PartitionKind,
     /// SIMD kernel backend request (auto = runtime detection).
     pub simd: SimdKind,
+    /// Fault-injection plan ([`crate::net::FaultPlan`] grammar): either
+    /// explicit events (`"die@1.0.2,stall@0.1.0:20"`) or a sampled
+    /// schedule (`"rand:seed=7,die=0.01,stall=0.05"`). Empty = none.
+    pub faults: String,
 }
 
 impl Default for ClusterConfig {
@@ -274,6 +293,7 @@ impl Default for ClusterConfig {
             tile_iters: 8,
             partition: PartitionKind::Even,
             simd: SimdKind::Auto,
+            faults: String::new(),
         }
     }
 }
@@ -292,6 +312,20 @@ impl Default for MonitorConfig {
     }
 }
 
+/// Epoch-boundary checkpointing (sync DSO engine only — the other
+/// algorithms keep no cross-epoch saddle state worth snapshotting).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointConfig {
+    /// Write a checkpoint every `every` epochs (0 disables).
+    pub every: usize,
+    /// Where the checkpoint file goes (atomic write-temp-rename).
+    pub path: String,
+    /// Resume from this checkpoint before the first epoch (empty = cold
+    /// start). The run continues at the saved epoch + 1 and reproduces
+    /// the uninterrupted trajectory bit-identically.
+    pub resume: String,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct TrainConfig {
     pub data: DataConfig,
@@ -299,6 +333,7 @@ pub struct TrainConfig {
     pub optim: OptimConfig,
     pub cluster: ClusterConfig,
     pub monitor: MonitorConfig,
+    pub checkpoint: CheckpointConfig,
 }
 
 impl TrainConfig {
@@ -364,6 +399,17 @@ impl TrainConfig {
         if let Some(s) = doc.get_str("cluster.simd") {
             c.cluster.simd = SimdKind::parse(s)?;
         }
+        if let Some(s) = doc.get_str("cluster.faults") {
+            c.cluster.faults = s.to_string();
+        }
+
+        c.checkpoint.every = usize_of("checkpoint.every", c.checkpoint.every);
+        if let Some(s) = doc.get_str("checkpoint.path") {
+            c.checkpoint.path = s.to_string();
+        }
+        if let Some(s) = doc.get_str("checkpoint.resume") {
+            c.checkpoint.resume = s.to_string();
+        }
 
         c.monitor.every = usize_of("monitor.every", c.monitor.every);
         if let Some(s) = doc.get_str("monitor.out") {
@@ -404,6 +450,46 @@ impl TrainConfig {
             // LASSO is supported by the losses module; the DSO projection
             // boxes in App. B are for SVM/logistic. Allowed, but the w box
             // uses the L2 formula — warn via validation note (not fatal).
+        }
+        if !self.cluster.faults.is_empty() {
+            let dso = matches!(self.optim.algorithm, Algorithm::Dso | Algorithm::DsoAsync);
+            if !dso {
+                return Err(format!(
+                    "cluster.faults targets the DSO ring; algorithm \"{}\" has no \
+                     token flow to perturb (use dso or dso-async)",
+                    self.optim.algorithm.name()
+                ));
+            }
+            let plan = crate::net::FaultPlan::parse_with(
+                &self.cluster.faults,
+                self.workers().max(1),
+                self.optim.epochs,
+            )?;
+            if (plan.has_deaths() || plan.has_drops())
+                && self.optim.algorithm != Algorithm::DsoAsync
+            {
+                return Err(
+                    "fault plan injects worker death or message drops, which the \
+                     bulk-synchronous dso engine cannot survive (a lost ring token \
+                     deadlocks the epoch barrier); use algorithm = \"dso-async\", \
+                     or restrict the plan to stall/delay"
+                        .into(),
+                );
+            }
+        }
+        let checkpointing = self.checkpoint.every > 0 || !self.checkpoint.resume.is_empty();
+        if checkpointing {
+            if self.optim.algorithm != Algorithm::Dso || self.cluster.mode != ExecMode::Scalar {
+                return Err(
+                    "checkpointing is supported for the synchronous scalar DSO engine \
+                     (algorithm = \"dso\", mode = \"scalar\"), where epoch boundaries \
+                     hold the full saddle state"
+                        .into(),
+                );
+            }
+            if self.checkpoint.every > 0 && self.checkpoint.path.is_empty() {
+                return Err("checkpoint.every > 0 requires checkpoint.path".into());
+            }
         }
         Ok(())
     }
@@ -506,6 +592,49 @@ out = "results/x.csv"
             let err = forced.unwrap_err();
             assert!(err.contains("avx2"), "{err}");
         }
+    }
+
+    #[test]
+    fn faults_validated_per_engine() {
+        // Timing-only faults are fine on the sync engine.
+        let c = TrainConfig::from_toml("[cluster]\nfaults = \"stall@0.1.0:20,delay@1.0.1:5\"\n")
+            .unwrap();
+        assert_eq!(c.cluster.faults, "stall@0.1.0:20,delay@1.0.1:5");
+        // Death/drop faults need the async engine's recovery path.
+        let err = TrainConfig::from_toml("[cluster]\nfaults = \"die@0.1.0\"\n").unwrap_err();
+        assert!(err.contains("dso-async"), "{err}");
+        let c = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nfaults = \"die@0.1.0\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.optim.algorithm, Algorithm::DsoAsync);
+        // Non-DSO algorithms have no ring to fault.
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"sgd\"\n[cluster]\nfaults = \"stall@0.0.0\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("sgd"), "{err}");
+        // Malformed specs are rejected at validation, not at run time.
+        assert!(TrainConfig::from_toml("[cluster]\nfaults = \"zap@0.0.0\"\n").is_err());
+    }
+
+    #[test]
+    fn checkpoint_config_validated() {
+        let c = TrainConfig::from_toml("[checkpoint]\nevery = 2\npath = \"ck.txt\"\n").unwrap();
+        assert_eq!(c.checkpoint.every, 2);
+        assert_eq!(c.checkpoint.path, "ck.txt");
+        assert!(TrainConfig::from_toml("[checkpoint]\nevery = 2\n").is_err());
+        // Only the sync scalar DSO engine snapshots saddle state.
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[checkpoint]\nevery = 1\npath = \"ck.txt\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("dso"), "{err}");
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"sgd\"\n[checkpoint]\nresume = \"ck.txt\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("scalar"), "{err}");
     }
 
     #[test]

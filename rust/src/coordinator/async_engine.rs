@@ -18,16 +18,39 @@
 //!   trajectory is no longer deterministic (it depends on scheduling),
 //!   but every invariant (feasibility, boxes, weak duality) holds.
 //!
+//! # Fault tolerance
+//!
+//! The ring degrades gracefully instead of aborting (DESIGN.md
+//! §Fault-tolerance). Each block visit runs under `catch_unwind`; a
+//! worker that panics — or is killed by an injected
+//! [`WorkerFault::Die`] — executes the same death protocol:
+//! its row stripes (α block + AdaGrad state) are pushed to a shared
+//! orphan list that the next surviving worker to route a token adopts
+//! (and from then on sweeps Ω^(stripe, b) for every adopted stripe on
+//! every visit, so the dead worker's rows keep training), the token it
+//! held is re-routed to a survivor, and the failure is reported as a
+//! [`WorkerFailure`] through the `Monitor`/`EpochObserver` stream and
+//! `TrainResult::failures`. The dead worker's receiver then lives on
+//! as a "zombie drain": in-flight tokens addressed to it are forwarded
+//! to survivors until the run stops, so no block is ever lost. If every
+//! worker dies the run simply ends early with whatever progress was
+//! made. Sends to a gone receiver hand the token back
+//! ([`Endpoint::send`]) and the sender re-routes it; bounded-wait
+//! receives with exponential [`Backoff`] keep survivors responsive to
+//! the stop flag, and their cumulative wait feeds the history's
+//! `wait_s` staleness column.
+//!
 //! Setup (partitions, packed blocks, stripe tables, cost model, kernel
-//! plan) comes from the shared [`DsoSetup`] — the same constructor the
-//! sync and replay engines use, so `cluster.partition = "balanced"`
-//! is honored here too (this engine used to rebuild its own setup with
-//! hardcoded even partitions and silently ignore it). Kernel dispatch
-//! executes the precompiled [`super::plan::SweepPlan`].
+//! plan, fault plan) comes from the shared [`DsoSetup`] — the same
+//! constructor the sync and replay engines use, so
+//! `cluster.partition = "balanced"` is honored here too. Kernel
+//! dispatch executes the precompiled [`super::plan::SweepPlan`].
 //! `cluster.updates_per_block` sampling is rejected with an actionable
 //! error: its deterministic draw stream is defined by the synchronous
 //! (epoch, worker, inner-iteration) schedule, which async does not
-//! have — matching the existing AdaGrad-only guard.
+//! have — matching the existing AdaGrad-only guard. Fault-plan clocks
+//! are worker-local here: worker q's visit v maps to
+//! (epoch, iter) = (v / p, v mod p).
 //!
 //! Termination: the leader counts block-visits; an "epoch" is defined
 //! as p² visits (the same work volume as one synchronous epoch), and
@@ -35,16 +58,19 @@
 //! in-flight blocks.
 
 use super::engine::DsoSetup;
-use super::monitor::{EpochObserver, Monitor, TrainResult};
+use super::monitor::{EpochObserver, Monitor, TrainResult, WorkerFailure};
 use super::updates::{PackedState, StepRule};
 use crate::config::{StepKind, TrainConfig};
 use crate::data::Dataset;
+use crate::net::router::Endpoint;
+use crate::net::{lock_tolerant, Backoff, MsgFault, NetStats, Recv, Router, WorkerFault};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// A circulating w block.
 struct Token {
@@ -55,13 +81,287 @@ struct Token {
     hops: u64,
 }
 
+/// A row stripe — one worker's α block with its AdaGrad state. Stripes
+/// outlive their worker: on death they move through
+/// [`WorkerShared::orphans`] to a survivor.
+struct Stripe {
+    /// Home row-partition index (fixed; indexes `omega.row_part`,
+    /// `y_local`, `inv_row` regardless of which worker holds it).
+    q: usize,
+    alpha: Vec<f32>,
+    a_acc: Vec<f32>,
+}
+
 struct WorkerShared {
-    senders: Vec<Sender<Token>>,
     visits: AtomicU64,
     stop: AtomicBool,
     /// Final blocks parked here as workers drain.
     parked: Mutex<Vec<Token>>,
-    bytes: AtomicU64,
+    /// Liveness per worker; routing only targets live ones.
+    alive: Vec<AtomicBool>,
+    n_alive: AtomicUsize,
+    /// Row stripes of dead workers, awaiting adoption by a survivor.
+    orphans: Mutex<Vec<Stripe>>,
+    /// Cheap flag so survivors don't take the orphans lock per visit.
+    orphans_pending: AtomicBool,
+    failures: Mutex<Vec<WorkerFailure>>,
+}
+
+/// Everything a worker thread borrows, bundled to keep the spawn site
+/// readable.
+struct AsyncCtx<'a> {
+    setup: &'a DsoSetup,
+    shared: &'a WorkerShared,
+    updates_total: &'a AtomicU64,
+    stats: &'a NetStats,
+    rule: StepRule,
+    p: usize,
+    target_visits: u64,
+}
+
+/// Pick a live destination for a token: uniformly random among live
+/// workers other than `q` when possible, `q` itself only as a last
+/// resort (sole survivor), `None` when nobody is left.
+fn pick_alive(rng: &mut Xoshiro256, shared: &WorkerShared, q: usize, p: usize) -> Option<usize> {
+    if shared.n_alive.load(Ordering::Acquire) == 0 {
+        return None;
+    }
+    // Rejection sampling keeps the common (all-alive) case uniform over
+    // the p−1 others, NOMAD's routing rule.
+    for _ in 0..4 * p {
+        let c = rng.gen_index(p);
+        if c != q && shared.alive[c].load(Ordering::Acquire) {
+            return Some(c);
+        }
+    }
+    // Mostly-dead ring: deterministic scan from a random start.
+    let start = rng.gen_index(p);
+    let mut type_self = None;
+    for k in 0..p {
+        let c = (start + k) % p;
+        if shared.alive[c].load(Ordering::Acquire) {
+            if c != q {
+                return Some(c);
+            }
+            type_self = Some(c);
+        }
+    }
+    type_self
+}
+
+/// Forward a token to some live worker. A send can fail if the chosen
+/// receiver exited between the liveness check and the send — the
+/// payload comes back and we retry elsewhere; with nobody reachable
+/// the token parks (it is reassembled from `parked` at the end).
+fn route_token(
+    rng: &mut Xoshiro256,
+    shared: &WorkerShared,
+    ep: &Endpoint<Token>,
+    q: usize,
+    p: usize,
+    mut token: Token,
+) {
+    let bytes = 16 + 8 * token.w.len();
+    for _ in 0..2 * p + 2 {
+        let Some(dst) = pick_alive(rng, shared, q, p) else { break };
+        match ep.send(dst, token, bytes) {
+            Ok(()) => return,
+            Err(t) => token = t,
+        }
+    }
+    lock_tolerant(&shared.parked).push(token);
+}
+
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// The death protocol, shared by injected [`WorkerFault::Die`] and
+/// genuine panics: hand off stripes, report the failure, keep the held
+/// token moving, then drain in-flight arrivals until the run stops.
+#[allow(clippy::too_many_arguments)]
+fn die(
+    cx: &AsyncCtx<'_>,
+    ep: &Endpoint<Token>,
+    rng: &mut Xoshiro256,
+    q: usize,
+    epoch: usize,
+    iter: usize,
+    reason: &str,
+    stripes: Vec<Stripe>,
+    token: Token,
+) {
+    let shared = cx.shared;
+    shared.alive[q].store(false, Ordering::Release);
+    let survivors = shared.n_alive.fetch_sub(1, Ordering::AcqRel) - 1;
+    lock_tolerant(&shared.failures).push(WorkerFailure {
+        worker: q,
+        epoch,
+        iter,
+        reason: reason.to_string(),
+        stripes_reassigned: stripes.len(),
+    });
+    lock_tolerant(&shared.orphans).extend(stripes);
+    shared.orphans_pending.store(true, Ordering::Release);
+    if survivors == 0 {
+        // Nobody left to adopt or compute; end the run so the parked
+        // blocks reassemble with whatever progress was made.
+        shared.stop.store(true, Ordering::Release);
+    }
+    if shared.stop.load(Ordering::Acquire) {
+        lock_tolerant(&shared.parked).push(token);
+    } else {
+        route_token(rng, shared, ep, q, cx.p, token);
+    }
+    // Zombie drain: the receiver stays alive so in-flight sends to this
+    // worker are never lost; forward arrivals to survivors until stop,
+    // then park stragglers. The endpoint is returned (not dropped) by
+    // the caller, so even post-drain arrivals survive to the final
+    // sweep in `train_dso_async_with`.
+    let mut backoff = Backoff::new(1, 32);
+    loop {
+        match ep.recv_timeout(backoff.next()) {
+            Recv::Msg(d) => {
+                backoff.reset();
+                if shared.stop.load(Ordering::Acquire) {
+                    lock_tolerant(&shared.parked).push(d.payload);
+                } else {
+                    route_token(rng, shared, ep, q, cx.p, d.payload);
+                }
+            }
+            Recv::Timeout => {
+                if shared.stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+            Recv::Disconnected => break,
+        }
+    }
+}
+
+/// One worker thread: pop a token, sweep it against every owned stripe,
+/// route it onward. Returns the stripes it still owns and its endpoint
+/// (kept alive so the main thread can drain un-received tokens).
+fn worker_loop(
+    cx: &AsyncCtx<'_>,
+    ep: Endpoint<Token>,
+    mut stripes: Vec<Stripe>,
+    mut inbox: Option<Token>,
+    mut rng: Xoshiro256,
+) -> (Vec<Stripe>, Endpoint<Token>) {
+    let q = ep.id;
+    let p = cx.p;
+    let setup = cx.setup;
+    let shared = cx.shared;
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut backoff = Backoff::new(1, 32);
+    // Worker-local visit counter — the fault plan's async clock.
+    let mut v: u64 = 0;
+    loop {
+        // Adopt row stripes orphaned by a dead worker: first live
+        // worker through here takes them all and sweeps them on every
+        // subsequent visit.
+        if shared.orphans_pending.swap(false, Ordering::AcqRel) {
+            let mut orphans = lock_tolerant(&shared.orphans);
+            stripes.append(&mut orphans);
+        }
+        let mut token = match inbox.take() {
+            Some(t) => t,
+            None => match ep.recv_timeout(backoff.next()) {
+                Recv::Msg(d) => {
+                    backoff.reset();
+                    d.payload
+                }
+                Recv::Timeout => {
+                    if shared.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    continue;
+                }
+                // Unreachable in practice (every endpoint holds a
+                // sender to itself), but exit cleanly if it happens.
+                Recv::Disconnected => break,
+            },
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            lock_tolerant(&shared.parked).push(token);
+            continue; // keep draining the queue until it idles
+        }
+        let (fe, fi) = ((v / p as u64) as usize, (v % p as u64) as usize);
+        match setup.faults.worker_fault(q, fe, fi) {
+            Some(WorkerFault::Stall { millis }) => {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+            Some(WorkerFault::Die) => {
+                die(cx, &ep, &mut rng, q, fe, fi, "injected death", stripes, token);
+                return (Vec::new(), ep);
+            }
+            None => {}
+        }
+        // The visit runs under catch_unwind so a kernel panic demotes
+        // this worker to dead instead of aborting the run. A panic can
+        // leave the mid-sweep token/stripe torn; recovery hands both
+        // onward anyway — saddle-point SGD tolerates the perturbation.
+        let swept = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut n = 0usize;
+            for s in stripes.iter_mut() {
+                let block = setup.omega.block(s.q, token.block_id);
+                let ctx = setup.packed_ctx(s.q, token.block_id, cx.rule);
+                let mut st = PackedState {
+                    w: &mut token.w,
+                    w_acc: &mut token.acc,
+                    alpha: &mut s.alpha,
+                    a_acc: &mut s.a_acc,
+                };
+                // Precompiled dispatch, same plan as the sync engine;
+                // (epoch, r) = (0, 0) is inert for full-sweep kernels.
+                n += setup
+                    .plan
+                    .sweep(block, s.q, token.block_id, 0, 0, &ctx, &mut st, &mut scratch);
+            }
+            n
+        }));
+        let n = match swept {
+            Ok(n) => n,
+            Err(payload) => {
+                let reason = panic_reason(payload.as_ref());
+                die(cx, &ep, &mut rng, q, fe, fi, &reason, stripes, token);
+                return (Vec::new(), ep);
+            }
+        };
+        v += 1;
+        cx.updates_total.fetch_add(n as u64, Ordering::Relaxed);
+        token.hops += 1;
+        let visits = shared.visits.fetch_add(1, Ordering::AcqRel) + 1;
+        if visits >= cx.target_visits {
+            shared.stop.store(true, Ordering::Release);
+        }
+        match setup.faults.message_fault(q, fe, fi) {
+            Some(MsgFault::Delay { millis }) => {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+            Some(MsgFault::Drop) => {
+                // The first delivery attempt is lost in transit. The
+                // simulated transport is reliable-with-acknowledgement,
+                // so the sender notices, counts the drop, and the
+                // re-route below carries the token instead.
+                cx.stats.dropped_messages.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            lock_tolerant(&shared.parked).push(token);
+        } else {
+            route_token(&mut rng, shared, &ep, q, p, token);
+        }
+    }
+    (stripes, ep)
 }
 
 /// Train with asynchronous (NOMAD-style) DSO.
@@ -78,7 +378,8 @@ pub fn train_dso_async(
 }
 
 /// [`train_dso_async`] with an optional per-epoch observer (async
-/// evaluates once, at the end of the run).
+/// evaluates once, at the end of the run; worker failures stream
+/// through `EpochObserver::on_failure`).
 pub fn train_dso_async_with(
     cfg: &TrainConfig,
     train: &Dataset,
@@ -105,131 +406,102 @@ pub fn train_dso_async_with(
     let loss = setup.problem.loss;
     let rule = StepRule::AdaGrad(cfg.optim.eta0);
 
-    // Initial state.
-    let mut alpha_blocks: Vec<Vec<f32>> = (0..p)
-        .map(|q| {
-            setup
+    // Initial state: worker q starts with its own row stripe and its
+    // own w block already in its inbox (no channel round trip, so the
+    // endpoints can move straight into the worker threads).
+    let init_stripes: Vec<Stripe> = (0..p)
+        .map(|q| Stripe {
+            q,
+            alpha: setup
                 .omega
                 .row_part
                 .block(q)
                 .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
-                .collect()
+                .collect(),
+            a_acc: vec![0f32; setup.omega.row_part.block_len(q)],
         })
         .collect();
-    let mut a_acc_blocks: Vec<Vec<f32>> =
-        (0..p).map(|q| vec![0f32; setup.omega.row_part.block_len(q)]).collect();
+    let init_tokens: Vec<Token> = (0..p)
+        .map(|b| {
+            let len = setup.omega.col_part.block(b).len();
+            Token { block_id: b, w: vec![0f32; len], acc: vec![0f32; len], hops: 0 }
+        })
+        .collect();
 
-    let target_visits = (cfg.optim.epochs as u64) * (p as u64) * (p as u64);
-    let mut receivers: Vec<Receiver<Token>> = Vec::with_capacity(p);
-    let mut senders: Vec<Sender<Token>> = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = std::sync::mpsc::channel();
-        senders.push(tx);
-        receivers.push(rx);
-    }
-    // Seed: block b starts at worker b.
-    for b in 0..p {
-        let range = setup.omega.col_part.block(b);
-        senders[b]
-            .send(Token {
-                block_id: b,
-                w: vec![0f32; range.len()],
-                acc: vec![0f32; range.len()],
-                hops: 0,
-            })
-            .unwrap();
-    }
+    let mut router: Router<Token> = Router::new(p, setup.cost);
+    let stats = router.stats();
+    let endpoints = router.take_endpoints();
     let shared = WorkerShared {
-        senders,
         visits: AtomicU64::new(0),
         stop: AtomicBool::new(false),
         parked: Mutex::new(Vec::new()),
-        bytes: AtomicU64::new(0),
+        alive: (0..p).map(|_| AtomicBool::new(true)).collect(),
+        n_alive: AtomicUsize::new(p),
+        orphans: Mutex::new(Vec::new()),
+        orphans_pending: AtomicBool::new(false),
+        failures: Mutex::new(Vec::new()),
+    };
+    let updates_total = AtomicU64::new(0);
+    let cx = AsyncCtx {
+        setup: &setup,
+        shared: &shared,
+        updates_total: &updates_total,
+        stats: &stats,
+        rule,
+        p,
+        target_visits: (cfg.optim.epochs as u64) * (p as u64) * (p as u64),
     };
 
     let wall = Stopwatch::new();
     let mut monitor = Monitor::observed(0, obs); // async: evaluate at the end only
-    let updates_total = AtomicU64::new(0);
 
+    let mut stripe_pool: Vec<Stripe> = Vec::with_capacity(p);
+    let mut back_eps: Vec<Endpoint<Token>> = Vec::with_capacity(p);
+    let mut join_panics = 0usize;
     std::thread::scope(|scope| {
-        let shared = &shared;
-        let updates_total = &updates_total;
-        let setup = &setup;
-        let mut handles = Vec::new();
-        for (q, rx) in receivers.into_iter().enumerate() {
-            let mut alpha = std::mem::take(&mut alpha_blocks[q]);
-            let mut a_acc = std::mem::take(&mut a_acc_blocks[q]);
-            let mut rng = Xoshiro256::new(cfg.optim.seed ^ (0xA5A5 + q as u64));
-            handles.push(scope.spawn(move || {
-                // Sample-index scratch for the plan's sweep signature;
-                // never written (the sampled kernel is rejected above).
-                let mut scratch: Vec<u32> = Vec::new();
-                loop {
-                    // Poll with timeout so we observe the stop flag.
-                    let mut token = match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                        Ok(t) => t,
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                            if shared.stop.load(Ordering::Acquire) {
-                                break;
-                            }
-                            continue;
-                        }
-                        Err(_) => break,
-                    };
-                    if shared.stop.load(Ordering::Acquire) {
-                        shared.parked.lock().unwrap().push(token);
-                        continue; // keep draining the queue
-                    }
-                    let block = setup.omega.block(q, token.block_id);
-                    let ctx = setup.packed_ctx(q, token.block_id, rule);
-                    let mut st = PackedState {
-                        w: &mut token.w,
-                        w_acc: &mut token.acc,
-                        alpha: &mut alpha,
-                        a_acc: &mut a_acc,
-                    };
-                    // Precompiled dispatch, same plan as the bulk-
-                    // synchronous engine; (epoch, r) = (0, 0) is inert
-                    // for full-sweep kernels.
-                    let n = setup
-                        .plan
-                        .sweep(block, q, token.block_id, 0, 0, &ctx, &mut st, &mut scratch);
-                    updates_total.fetch_add(n as u64, Ordering::Relaxed);
-                    token.hops += 1;
-                    let visits = shared.visits.fetch_add(1, Ordering::AcqRel) + 1;
-                    if visits >= target_visits {
-                        shared.stop.store(true, Ordering::Release);
-                    }
-                    // NOMAD routing: uniformly random other worker.
-                    let mut dst = rng.gen_index(p);
-                    if p > 1 && dst == q {
-                        dst = (dst + 1 + rng.gen_index(p - 1)) % p;
-                    }
-                    shared
-                        .bytes
-                        .fetch_add((16 + 8 * token.w.len()) as u64, Ordering::Relaxed);
-                    if shared.stop.load(Ordering::Acquire) {
-                        shared.parked.lock().unwrap().push(token);
-                    } else {
-                        // Receiver may have exited already — then park.
-                        if let Err(e) = shared.senders[dst].send(token) {
-                            shared.parked.lock().unwrap().push(e.0);
-                        }
-                    }
-                }
-                (q, alpha, a_acc)
-            }));
-        }
+        let cx = &cx;
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .zip(init_stripes)
+            .zip(init_tokens)
+            .map(|((ep, stripe), token)| {
+                let rng = Xoshiro256::new(cfg.optim.seed ^ (0xA5A5 + ep.id as u64));
+                scope.spawn(move || worker_loop(cx, ep, vec![stripe], Some(token), rng))
+            })
+            .collect();
         for h in handles {
-            let (q, alpha, a_acc) = h.join().expect("async worker panicked");
-            alpha_blocks[q] = alpha;
-            a_acc_blocks[q] = a_acc;
+            match h.join() {
+                Ok((stripes, ep)) => {
+                    stripe_pool.extend(stripes);
+                    back_eps.push(ep);
+                }
+                // A panic outside the catch_unwind guard (engine bug,
+                // not a kernel fault) — its endpoint and stripes are
+                // gone; the completeness checks below turn that into a
+                // typed error instead of a process abort.
+                Err(_) => join_panics += 1,
+            }
         }
     });
+    anyhow::ensure!(
+        join_panics == 0,
+        "{join_panics} async worker thread(s) panicked outside the recovery guard"
+    );
 
-    // Reassemble.
+    // Tokens still queued at exited receivers (racy last-moment sends)
+    // were never lost because every endpoint outlived its worker; sweep
+    // them into the parked pool now.
+    let mut parked = shared.parked.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for ep in &back_eps {
+        while let Some(d) = ep.try_recv() {
+            parked.push(d.payload);
+        }
+    }
+    drop(back_eps);
+
+    // Reassemble w from the parked blocks — every block exactly once,
+    // deaths notwithstanding.
     let mut w = vec![0f32; train.d()];
-    let parked = shared.parked.into_inner().unwrap();
     anyhow::ensure!(parked.len() == p, "lost blocks: {} of {p} recovered", parked.len());
     let mut seen = vec![false; p];
     for t in &parked {
@@ -237,13 +509,32 @@ pub fn train_dso_async_with(
         seen[t.block_id] = true;
         w[setup.omega.col_part.block(t.block_id)].copy_from_slice(&t.w);
     }
+    // And α from the stripes: survivors returned theirs (own +
+    // adopted); stripes of workers that died with no survivor left to
+    // adopt are still in the orphan list.
+    let orphans = shared.orphans.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    stripe_pool.extend(orphans);
     let mut alpha = vec![0f32; train.m()];
-    for q in 0..p {
-        alpha[setup.omega.row_part.block(q)].copy_from_slice(&alpha_blocks[q]);
+    anyhow::ensure!(
+        stripe_pool.len() == p,
+        "lost row stripes: {} of {p} recovered",
+        stripe_pool.len()
+    );
+    let mut seen = vec![false; p];
+    for s in &stripe_pool {
+        anyhow::ensure!(!seen[s.q], "duplicate row stripe {}", s.q);
+        seen[s.q] = true;
+        alpha[setup.omega.row_part.block(s.q)].copy_from_slice(&s.alpha);
     }
 
+    let failures = shared.failures.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for f in &failures {
+        monitor.record_failure(f);
+    }
+    monitor.set_wait_secs(stats.total_wait_secs());
+
     let updates = updates_total.load(Ordering::Relaxed);
-    let comm_bytes = shared.bytes.load(Ordering::Relaxed);
+    let comm_bytes = stats.total_bytes();
     // Async has no per-worker barrier; virtual time ≈ wall of the run
     // plus the modeled per-hop latency amortized across p workers.
     let hop_cost = setup.cost.transfer_secs(0, cfg.cluster.cores, 16 + 8 * (train.d() / p));
@@ -275,6 +566,7 @@ pub fn train_dso_async_with(
         total_virtual_s: virtual_s,
         total_wall_s: wall.elapsed_secs(),
         comm_bytes,
+        failures,
     })
 }
 
@@ -333,6 +625,7 @@ mod tests {
             assert_eq!(r.w.len(), ds.d(), "p={p}");
             assert!(r.final_primal.is_finite(), "p={p}");
             assert!(r.total_updates > 0, "p={p}");
+            assert!(r.failures.is_empty(), "p={p}");
         }
     }
 
@@ -420,6 +713,53 @@ mod tests {
         let r = train_dso_async(&c, &ds, None).unwrap();
         assert_eq!(r.w.len(), ds.d());
         assert!(r.final_primal.is_finite());
+        assert!(r.total_updates > 0);
+    }
+
+    #[test]
+    fn async_survives_injected_worker_death() {
+        // Kill worker 2 on its third visit at p = 4 (the acceptance
+        // scenario): the run must complete, recover every block and
+        // stripe, and report exactly one failure.
+        let ds = dataset(9);
+        let mut c = cfg(4, 10);
+        c.cluster.faults = "die@2.0.2".into();
+        let r = train_dso_async(&c, &ds, None).unwrap();
+        assert_eq!(r.w.len(), ds.d());
+        assert_eq!(r.alpha.len(), ds.m());
+        assert_eq!(r.failures.len(), 1, "failures: {:?}", r.failures);
+        let f = &r.failures[0];
+        assert_eq!(f.worker, 2);
+        assert_eq!(f.reason, "injected death");
+        assert!(f.stripes_reassigned >= 1);
+        // The failure lands in the history's failures column too.
+        assert_eq!(r.history.col("failures").unwrap(), vec![1.0]);
+        assert!(r.final_primal.is_finite());
+    }
+
+    #[test]
+    fn async_survives_every_worker_dying() {
+        // Total annihilation: the run ends early with whatever progress
+        // exists, still recovering all state instead of hanging or
+        // aborting.
+        let ds = dataset(10);
+        let mut c = cfg(3, 50);
+        c.cluster.faults = "die@0.0.1,die@1.0.2,die@2.1.0".into();
+        let r = train_dso_async(&c, &ds, None).unwrap();
+        assert_eq!(r.failures.len(), 3);
+        assert_eq!(r.w.len(), ds.d());
+        assert_eq!(r.alpha.len(), ds.m());
+        assert!(r.final_primal.is_finite());
+    }
+
+    #[test]
+    fn async_drop_and_stall_faults_tolerated() {
+        let ds = dataset(11);
+        let mut c = cfg(4, 8);
+        c.cluster.faults = "drop@0.0.0,drop@1.1.0,stall@2.0.0:15,delay@3.0.1:5".into();
+        let r = train_dso_async(&c, &ds, None).unwrap();
+        assert!(r.failures.is_empty(), "timing/message faults are not failures");
+        assert_eq!(r.w.len(), ds.d());
         assert!(r.total_updates > 0);
     }
 }

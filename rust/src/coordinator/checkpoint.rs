@@ -1,0 +1,268 @@
+//! Epoch-boundary checkpointing for the DSO engine.
+//!
+//! After any epoch the blocks are home (worker q holds w block q), so
+//! the *entire* optimizer state is four dense vectors — w, its AdaGrad
+//! accumulators, α, and its accumulators — plus the epoch counter and
+//! the cumulative update count. The per-visit sampling streams are
+//! keyed `(seed, epoch, q, r)` and carry no state across epochs
+//! ([`super::plan::SweepPlan`]), so nothing else needs to survive a
+//! crash: resuming from a checkpoint at epoch k reproduces the
+//! uninterrupted run *bit-identically* (pinned by `tests/chaos.rs`).
+//!
+//! Persistence reuses the model-file contract ([`crate::api::Model`]):
+//! plain text, one float per line in Rust's shortest-round-trip
+//! `Display` form, so the save/load cycle is exact. Writes go through a
+//! temp file in the same directory followed by a rename, which is
+//! atomic on POSIX filesystems — a crash mid-write leaves either the
+//! previous checkpoint or none, never a torn one.
+//!
+//! A checkpoint is only valid against the run that wrote it, so the
+//! header carries a fingerprint of everything that shapes the update
+//! sequence (loss, seed, partitions, data shape, SIMD backend, …);
+//! [`Checkpoint::load`] hands it back and the engine refuses a
+//! mismatch rather than silently continuing a different optimization.
+
+use crate::config::TrainConfig;
+use anyhow::Result;
+use std::path::Path;
+
+/// Full optimizer state at an epoch boundary. `w`/`w_acc` have length
+/// d, `alpha`/`a_acc` length m; the engine re-splits them into worker
+/// stripes on resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// [`fingerprint`] of the writing run's configuration.
+    pub fingerprint: u64,
+    /// 1-based epoch this state is the *end* of; resume starts at +1.
+    pub epoch: usize,
+    /// Cumulative update count through `epoch`.
+    pub updates: u64,
+    pub w: Vec<f32>,
+    pub w_acc: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub a_acc: Vec<f32>,
+}
+
+const MAGIC: &str = "dso-checkpoint v1";
+
+/// FNV-1a over a field's raw bytes, with a label byte-string mixed in
+/// first so adjacent fields can't alias under concatenation.
+fn mix(mut h: u64, label: &str, bytes: &[u8]) -> u64 {
+    for &b in label.as_bytes().iter().chain(bytes) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of everything that determines the update sequence: model and
+/// optimizer hyperparameters, data shape, partition strategy, worker
+/// count, and the resolved SIMD backend (kernels differ bitwise across
+/// backends). Faults are deliberately excluded — in the sync engine
+/// they only perturb timing, so a run that crashed under injection may
+/// resume clean.
+pub fn fingerprint(
+    cfg: &TrainConfig,
+    m: usize,
+    d: usize,
+    nnz: usize,
+    p: usize,
+    simd: crate::simd::SimdLevel,
+) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, "loss", cfg.model.loss.name().as_bytes());
+    h = mix(h, "reg", cfg.model.reg.name().as_bytes());
+    h = mix(h, "lambda", &cfg.model.lambda.to_bits().to_le_bytes());
+    h = mix(h, "seed", &cfg.optim.seed.to_le_bytes());
+    h = mix(h, "step", cfg.optim.step.name().as_bytes());
+    h = mix(h, "eta0", &cfg.optim.eta0.to_bits().to_le_bytes());
+    h = mix(h, "dcd_init", &[cfg.optim.dcd_init as u8]);
+    h = mix(h, "partition", cfg.cluster.partition.name().as_bytes());
+    h = mix(h, "upb", &(cfg.cluster.updates_per_block as u64).to_le_bytes());
+    h = mix(h, "p", &(p as u64).to_le_bytes());
+    h = mix(h, "m", &(m as u64).to_le_bytes());
+    h = mix(h, "d", &(d as u64).to_le_bytes());
+    h = mix(h, "nnz", &(nnz as u64).to_le_bytes());
+    h = mix(h, "simd", simd.name().as_bytes());
+    h
+}
+
+impl Checkpoint {
+    /// Atomic save: write `<path>.tmp` in the same directory, then
+    /// rename over `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out = String::new();
+        out.push_str(MAGIC);
+        out.push('\n');
+        out.push_str(&format!("fingerprint {:016x}\n", self.fingerprint));
+        out.push_str(&format!("epoch {}\n", self.epoch));
+        out.push_str(&format!("updates {}\n", self.updates));
+        out.push_str(&format!("d {}\n", self.w.len()));
+        out.push_str(&format!("m {}\n", self.alpha.len()));
+        for (name, vec) in
+            [("w", &self.w), ("w_acc", &self.w_acc), ("alpha", &self.alpha), ("a_acc", &self.a_acc)]
+        {
+            out.push_str(name);
+            out.push('\n');
+            for v in vec.iter() {
+                // Shortest round-trip Display — parses back bit-exact.
+                out.push_str(&format!("{v}\n"));
+            }
+        }
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default()
+        ));
+        std::fs::write(&tmp, out)
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("committing checkpoint {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Checkpoint::save`]. The caller
+    /// (the engine's resume path) is responsible for comparing the
+    /// returned fingerprint against its own run's.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or_default();
+        anyhow::ensure!(
+            magic == MAGIC,
+            "{}: not a dso checkpoint (bad magic '{magic}')",
+            path.display()
+        );
+        let mut header = |key: &'static str| -> Result<String> {
+            let line = lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint truncated before '{key}'"))?;
+            let (k, v) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("malformed checkpoint header '{line}'"))?;
+            anyhow::ensure!(k == key, "expected checkpoint header '{key}', found '{k}'");
+            Ok(v.to_string())
+        };
+        let fingerprint = u64::from_str_radix(&header("fingerprint")?, 16)
+            .map_err(|_| anyhow::anyhow!("bad checkpoint fingerprint"))?;
+        let epoch: usize =
+            header("epoch")?.parse().map_err(|_| anyhow::anyhow!("bad checkpoint epoch"))?;
+        let updates: u64 =
+            header("updates")?.parse().map_err(|_| anyhow::anyhow!("bad checkpoint updates"))?;
+        let d: usize = header("d")?.parse().map_err(|_| anyhow::anyhow!("bad checkpoint d"))?;
+        let m: usize = header("m")?.parse().map_err(|_| anyhow::anyhow!("bad checkpoint m"))?;
+
+        let mut section = |name: &'static str, len: usize| -> Result<Vec<f32>> {
+            let marker = lines.next().unwrap_or_default();
+            anyhow::ensure!(marker == name, "expected section '{name}', found '{marker}'");
+            // The header is untrusted — cap the pre-allocation hint;
+            // the exact-length check below still holds.
+            let mut vec = Vec::with_capacity(len.min(1 << 22));
+            for _ in 0..len {
+                let line = lines
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint section '{name}' truncated"))?;
+                vec.push(
+                    line.parse::<f32>()
+                        .map_err(|_| anyhow::anyhow!("bad float '{line}' in '{name}'"))?,
+                );
+            }
+            Ok(vec)
+        };
+        let w = section("w", d)?;
+        let w_acc = section("w_acc", d)?;
+        let alpha = section("alpha", m)?;
+        let a_acc = section("a_acc", m)?;
+        anyhow::ensure!(
+            lines.all(|l| l.is_empty()),
+            "trailing garbage after checkpoint sections"
+        );
+        Ok(Checkpoint { fingerprint, epoch, updates, w, w_acc, alpha, a_acc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            fingerprint: 0xdead_beef_0123_4567,
+            epoch: 7,
+            updates: 4242,
+            // Exercise the Display round trip on awkward values.
+            w: vec![0.125, -3.5e-8, f32::MIN_POSITIVE, -0.0, 0.333_333_34],
+            w_acc: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            alpha: vec![-1.0, 1.0, 0.5],
+            a_acc: vec![0.0, 9.75, 1e-30],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let path = std::env::temp_dir().join("dso-ck-roundtrip.txt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        // Bitwise, not just PartialEq (−0.0 == 0.0 under PartialEq).
+        for (a, b) in ck.w.iter().zip(&back.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_file() {
+        let path = std::env::temp_dir().join("dso-ck-atomic.txt");
+        sample().save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_file_name("dso-ck-atomic.txt.tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic_and_truncation() {
+        let path = std::env::temp_dir().join("dso-ck-bad.txt");
+        std::fs::write(&path, "not a checkpoint\n").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // Truncated mid-section: declare 5 weights, carry 2.
+        std::fs::write(
+            &path,
+            "dso-checkpoint v1\nfingerprint 00000000000000ff\nepoch 1\nupdates 2\nd 5\nm 1\nw\n0.5\n0.25\n",
+        )
+        .unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_trailing_garbage() {
+        let path = std::env::temp_dir().join("dso-ck-trailing.txt");
+        let mut ck = sample();
+        ck.w = vec![1.0];
+        ck.w_acc = vec![0.0];
+        ck.alpha = vec![0.5];
+        ck.a_acc = vec![0.0];
+        ck.save(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("9.0\n");
+        std::fs::write(&path, text).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_run_identity() {
+        let cfg = TrainConfig::default();
+        let a = fingerprint(&cfg, 100, 50, 600, 4, crate::simd::SimdLevel::Portable);
+        let b = fingerprint(&cfg, 100, 50, 600, 4, crate::simd::SimdLevel::Portable);
+        assert_eq!(a, b, "fingerprint must be deterministic");
+        let mut seeded = cfg.clone();
+        seeded.optim.seed ^= 1;
+        assert_ne!(a, fingerprint(&seeded, 100, 50, 600, 4, crate::simd::SimdLevel::Portable));
+        assert_ne!(a, fingerprint(&cfg, 101, 50, 600, 4, crate::simd::SimdLevel::Portable));
+        assert_ne!(a, fingerprint(&cfg, 100, 50, 600, 2, crate::simd::SimdLevel::Portable));
+    }
+}

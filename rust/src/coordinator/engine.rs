@@ -19,16 +19,19 @@
 //! preferred entry point is the `dso::api::Trainer` facade — the free
 //! functions here are kept as thin shims for existing callers.
 
+use super::checkpoint::{self, Checkpoint};
 use super::monitor::{EpochObserver, Monitor, TrainResult};
 use super::plan::SweepPlan;
 use super::updates::{PackedCtx, PackedState, StepRule};
 use crate::config::{ExecMode, StepKind, TrainConfig};
 use crate::data::Dataset;
 use crate::losses::{Loss, Problem, Regularizer};
-use crate::net::{CostModel, Router, VirtualClock};
+use crate::net::{Backoff, CostModel, FaultPlan, MsgFault, Recv, Router, VirtualClock, WorkerFault};
 use crate::partition::{PackedBlocks, Partition, RingSchedule, LANES};
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
 
 /// Message carrying a w block (and its AdaGrad accumulators) around the
 /// ring.
@@ -74,6 +77,10 @@ pub struct DsoSetup {
     pub cost: CostModel,
     /// Precompiled per-block kernel dispatch (PR 1–3 decision tree).
     pub plan: SweepPlan,
+    /// Deterministic fault-injection plan (`cluster.faults`); empty on
+    /// normal runs. The sync engine honors timing faults (stall/delay)
+    /// and rejects death/drop; the async engine honors all of them.
+    pub faults: FaultPlan,
 }
 
 impl DsoSetup {
@@ -110,6 +117,10 @@ impl DsoSetup {
             cfg.optim.seed,
             simd,
         );
+        // `validate()` rejects malformed specs with a proper error on
+        // every API route before construction gets here.
+        let faults = FaultPlan::parse_with(&cfg.cluster.faults, p, cfg.optim.epochs)
+            .unwrap_or_else(|e| panic!("invalid cluster.faults (validate() catches this): {e}"));
         DsoSetup {
             problem,
             omega,
@@ -120,6 +131,7 @@ impl DsoSetup {
             w_bound: loss.w_bound(cfg.model.lambda),
             cost,
             plan,
+            faults,
         }
     }
 
@@ -203,6 +215,12 @@ pub fn train_dso_with(
         anyhow::bail!("tile mode is handled by coordinator::tile::train_dso_tile");
     }
     let setup = DsoSetup::new(cfg, train);
+    anyhow::ensure!(
+        !setup.faults.has_deaths() && !setup.faults.has_drops(),
+        "fault plan injects worker death or message drops, which the bulk-synchronous \
+         dso engine cannot survive (a lost ring token deadlocks the epoch barrier); \
+         use algorithm = \"dso-async\" for those, or restrict the plan to stall/delay"
+    );
     run_epochs(cfg, train, test, &setup, false, obs)
 }
 
@@ -307,7 +325,37 @@ fn run_epochs(
     let mut endpoints = if replay { Vec::new() } else { router.take_endpoints() };
     let mut virtual_now;
 
-    for epoch in 1..=cfg.optim.epochs {
+    // The fingerprint binds checkpoints to this exact update sequence.
+    let fp =
+        checkpoint::fingerprint(cfg, train.m(), train.d(), train.x.nnz(), p, setup.plan.simd());
+    let mut start_epoch = 1usize;
+    if !cfg.checkpoint.resume.is_empty() {
+        let ck = Checkpoint::load(std::path::Path::new(&cfg.checkpoint.resume))?;
+        anyhow::ensure!(
+            ck.fingerprint == fp,
+            "checkpoint {} was written by a different run (fingerprint {:016x}, this \
+             configuration {fp:016x}); refusing to resume a foreign optimization",
+            cfg.checkpoint.resume,
+            ck.fingerprint,
+        );
+        // After any epoch the blocks are home, so the snapshot splits
+        // back into worker stripes along the same partitions.
+        for slot in slots.iter_mut() {
+            let wr = setup.omega.col_part.block(slot.q);
+            let ar = setup.omega.row_part.block(slot.q);
+            slot.w.copy_from_slice(&ck.w[wr.clone()]);
+            slot.w_acc.copy_from_slice(&ck.w_acc[wr]);
+            slot.alpha.copy_from_slice(&ck.alpha[ar.clone()]);
+            slot.a_acc.copy_from_slice(&ck.a_acc[ar]);
+            slot.updates = 0;
+        }
+        // The split of the cumulative count across slots is arbitrary;
+        // only the sum is ever read.
+        slots[0].updates = ck.updates;
+        start_epoch = ck.epoch + 1;
+    }
+
+    for epoch in start_epoch..=cfg.optim.epochs {
         let rule = match cfg.optim.step {
             StepKind::Const => StepRule::Fixed(cfg.optim.eta0),
             StepKind::InvSqrt => StepRule::Fixed(cfg.optim.eta0 / (epoch as f64).sqrt()),
@@ -317,7 +365,7 @@ fn run_epochs(
         if replay {
             run_epoch_serial(setup, &mut slots, rule, epoch);
         } else {
-            endpoints = run_epoch_threaded(setup, &mut slots, rule, epoch, endpoints);
+            endpoints = run_epoch_threaded(setup, &mut slots, rule, epoch, endpoints)?;
         }
 
         // Bulk synchronization barrier.
@@ -330,6 +378,7 @@ fn run_epochs(
         if monitor.due(epoch) || epoch == cfg.optim.epochs {
             let (w, alpha) = assemble(setup, &slots);
             let updates: u64 = slots.iter().map(|s| s.updates).sum();
+            monitor.set_wait_secs(stats.total_wait_secs());
             monitor.record_saddle(
                 &setup.problem,
                 train,
@@ -342,6 +391,14 @@ fn run_epochs(
                 updates,
                 stats.total_bytes() + init_comm,
             );
+        }
+
+        if cfg.checkpoint.every > 0 && epoch % cfg.checkpoint.every == 0 {
+            let (w, alpha) = assemble(setup, &slots);
+            let (w_acc, a_acc) = assemble_acc(setup, &slots);
+            let updates: u64 = slots.iter().map(|s| s.updates).sum();
+            Checkpoint { fingerprint: fp, epoch, updates, w, w_acc, alpha, a_acc }
+                .save(std::path::Path::new(&cfg.checkpoint.path))?;
         }
     }
 
@@ -360,6 +417,9 @@ fn run_epochs(
         total_virtual_s: slots.iter().map(|s| s.clock.total()).fold(0.0, f64::max),
         total_wall_s: wall.elapsed_secs(),
         comm_bytes: stats.total_bytes() + init_comm,
+        // The sync engine reports unrecoverable failures as a typed
+        // error instead of degrading; a returned result saw none.
+        failures: Vec::new(),
     })
 }
 
@@ -376,6 +436,20 @@ fn assemble(setup: &DsoSetup, slots: &[WorkerSlot]) -> (Vec<f32>, Vec<f32>) {
         alpha[setup.omega.row_part.block(s.q)].copy_from_slice(&s.alpha);
     }
     (w, alpha)
+}
+
+/// [`assemble`]'s AdaGrad twin: the accumulator halves of the
+/// checkpointed state, split along the same partitions.
+fn assemble_acc(setup: &DsoSetup, slots: &[WorkerSlot]) -> (Vec<f32>, Vec<f32>) {
+    let d = setup.omega.col_part.n();
+    let m = setup.omega.row_part.n();
+    let mut w_acc = vec![0f32; d];
+    let mut a_acc = vec![0f32; m];
+    for s in slots {
+        w_acc[setup.omega.col_part.block(s.block_id)].copy_from_slice(&s.w_acc);
+        a_acc[setup.omega.row_part.block(s.q)].copy_from_slice(&s.a_acc);
+    }
+    (w_acc, a_acc)
 }
 
 /// One block visit: execute the precompiled plan for Ω^(q, block_id)
@@ -403,63 +477,127 @@ fn visit_block(
         .sweep(block, q, slot.block_id, epoch, r, &ctx, &mut st, &mut slot.scratch)
 }
 
+/// Drop guard that raises the shared abort flag if its thread unwinds,
+/// so ring peers blocked in a bounded-wait receive stop spinning
+/// instead of waiting for a message that will never come.
+struct AbortOnPanic<'a>(&'a AtomicBool);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
 fn run_epoch_threaded(
     setup: &DsoSetup,
     slots: &mut Vec<WorkerSlot>,
     rule: StepRule,
     epoch: usize,
     endpoints: Vec<crate::net::router::Endpoint<WMsg>>,
-) -> Vec<crate::net::router::Endpoint<WMsg>> {
+) -> Result<Vec<crate::net::router::Endpoint<WMsg>>> {
     let p = setup.p;
     let adagrad = matches!(rule, StepRule::AdaGrad(_));
     let taken: Vec<(WorkerSlot, crate::net::router::Endpoint<WMsg>)> =
         slots.drain(..).zip(endpoints).collect();
+    // Raised by any worker that fails; peers poll it between bounded
+    // ring waits, so one failure drains the whole epoch promptly
+    // instead of deadlocking the barrier.
+    let abort = AtomicBool::new(false);
 
-    let results: Vec<(WorkerSlot, crate::net::router::Endpoint<WMsg>)> =
+    let results: Vec<Result<(WorkerSlot, crate::net::router::Endpoint<WMsg>), String>> =
         std::thread::scope(|scope| {
             let handles: Vec<_> = taken
                 .into_iter()
                 .map(|(mut slot, ep)| {
+                    let abort = &abort;
                     scope.spawn(move || {
+                        let _guard = AbortOnPanic(abort);
                         let q = slot.q;
+                        let mut backoff = Backoff::new(1, 32);
                         for r in 0..p {
                             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
+                            // Injected stall: this worker is a straggler
+                            // here. Outside the timed section — virtual
+                            // compute stays that of the real kernel; the
+                            // slowdown shows up in peers' wait stats.
+                            if let Some(WorkerFault::Stall { millis }) =
+                                setup.faults.worker_fault(q, epoch - 1, r)
+                            {
+                                std::thread::sleep(Duration::from_millis(millis));
+                            }
                             let t0 = std::time::Instant::now();
                             let n = visit_block(setup, &mut slot, rule, epoch, r);
                             slot.updates += n as u64;
                             slot.clock.add_compute(t0.elapsed().as_secs_f64());
 
                             // Rotate the w block (with its AdaGrad state).
+                            if let Some(MsgFault::Delay { millis }) =
+                                setup.faults.message_fault(q, epoch - 1, r)
+                            {
+                                std::thread::sleep(Duration::from_millis(millis));
+                            }
                             let w = std::mem::take(&mut slot.w);
                             let acc = std::mem::take(&mut slot.w_acc);
                             let bytes =
                                 16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
-                            ep.send(
-                                setup.schedule.send_to(q),
-                                WMsg { block_id: slot.block_id, w, acc },
-                                bytes,
-                            );
-                            let d = ep.recv().expect("ring peer hung up");
+                            let dst = setup.schedule.send_to(q);
+                            let msg = WMsg { block_id: slot.block_id, w, acc };
+                            if ep.send(dst, msg, bytes).is_err() {
+                                abort.store(true, Ordering::Relaxed);
+                                return Err(format!(
+                                    "worker {q}: ring peer {dst} hung up (epoch {epoch}, iter {r})"
+                                ));
+                            }
+                            backoff.reset();
+                            let d = loop {
+                                if abort.load(Ordering::Relaxed) {
+                                    return Err(format!(
+                                        "worker {q}: epoch {epoch} aborted by a peer failure"
+                                    ));
+                                }
+                                match ep.recv_timeout(backoff.next()) {
+                                    Recv::Msg(d) => break d,
+                                    Recv::Timeout => {}
+                                    Recv::Disconnected => {
+                                        abort.store(true, Ordering::Relaxed);
+                                        return Err(format!(
+                                            "worker {q}: ring channel disconnected (epoch {epoch})"
+                                        ));
+                                    }
+                                }
+                            };
                             slot.clock.add_comm(d.comm_secs);
                             slot.block_id = d.payload.block_id;
                             slot.w = d.payload.w;
                             slot.w_acc = d.payload.acc;
                         }
-                        (slot, ep)
+                        Ok((slot, ep))
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err("worker thread panicked".into())))
+                .collect()
         });
 
     let mut eps = Vec::with_capacity(p);
-    for (slot, ep) in results {
-        slots.push(slot);
-        eps.push(ep);
+    let mut errors: Vec<String> = Vec::new();
+    for res in results {
+        match res {
+            Ok((slot, ep)) => {
+                slots.push(slot);
+                eps.push(ep);
+            }
+            Err(e) => errors.push(e),
+        }
     }
+    anyhow::ensure!(errors.is_empty(), "dso epoch {epoch} failed: {}", errors.join("; "));
     slots.sort_by_key(|s| s.q);
     eps.sort_by_key(|e| e.id);
-    eps
+    Ok(eps)
 }
 
 /// One epoch executed on a single thread in the canonical serial order
@@ -714,6 +852,32 @@ mod tests {
         let at_zero = p.primal(&ds, &vec![0.0; ds.d()]);
         assert!(r.final_primal < at_zero);
         assert!(r.final_gap >= -1e-6);
+    }
+
+    #[test]
+    fn sync_engine_rejects_death_and_drop_faults() {
+        let ds = dataset(60, 30, 53);
+        let mut cfg = base_cfg(2, 2);
+        cfg.cluster.faults = "die@0.0.0".into();
+        let err = train_dso(&cfg, &ds, None).unwrap_err().to_string();
+        assert!(err.contains("dso-async"), "{err}");
+        cfg.cluster.faults = "drop@0.0.0".into();
+        assert!(train_dso(&cfg, &ds, None).is_err());
+    }
+
+    #[test]
+    fn timing_faults_do_not_change_the_trajectory() {
+        // Stalls and delays are timing-only: the faulted threaded run
+        // stays bit-identical to the clean one (Lemma 2 serializability
+        // is about ordering, which the ring still enforces).
+        let ds = dataset(120, 40, 59);
+        let mut cfg = base_cfg(3, 2);
+        let clean = train_dso(&cfg, &ds, None).unwrap();
+        cfg.cluster.faults = "stall@1.0.1:30,delay@2.1.0:10".into();
+        let faulted = train_dso(&cfg, &ds, None).unwrap();
+        assert_eq!(clean.w, faulted.w);
+        assert_eq!(clean.alpha, faulted.alpha);
+        assert_eq!(clean.total_updates, faulted.total_updates);
     }
 
     #[test]

@@ -15,7 +15,10 @@ pub use async_engine::train_dso_async;
 pub use engine::DsoSetup;
 #[allow(deprecated)]
 pub use engine::{run_replay, train_dso};
-pub use monitor::{EpochObserver, EvalRow, Monitor, TrainResult};
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+pub use monitor::{EpochObserver, EvalRow, Monitor, TrainResult, WorkerFailure};
 pub use plan::{PlannedKernel, SweepPlan};
 
 use crate::config::TrainConfig;

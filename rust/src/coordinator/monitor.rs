@@ -19,6 +19,11 @@ use crate::util::csv::Table;
 /// monitor records it. Implemented for any `FnMut(&EvalRow)` closure.
 pub trait EpochObserver {
     fn on_epoch(&mut self, row: &EvalRow);
+
+    /// Called the moment a worker failure is recorded — the run is
+    /// degrading (stripes reassigned to survivors), not aborting.
+    /// Default: ignore, so `FnMut(&EvalRow)` closures stay observers.
+    fn on_failure(&mut self, _failure: &WorkerFailure) {}
 }
 
 impl<F: FnMut(&EvalRow)> EpochObserver for F {
@@ -27,7 +32,27 @@ impl<F: FnMut(&EvalRow)> EpochObserver for F {
     }
 }
 
-pub const HISTORY_COLUMNS: [&str; 9] = [
+/// A worker that died mid-run (injected fault or genuine panic). The
+/// fault-tolerant engines recover — the dead worker's w tokens and
+/// α row stripe are adopted by survivors — and report the event here
+/// instead of aborting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    /// Worker-local 0-based epoch at the failure (async: visits / p).
+    pub epoch: usize,
+    /// Inner iteration within that epoch (async: visits % p).
+    pub iter: usize,
+    /// The panic message (or injected-fault description).
+    pub reason: String,
+    /// Row stripes handed off to the surviving workers.
+    pub stripes_reassigned: usize,
+}
+
+// New columns append at the end: downstream positional readers
+// (`last_primal` = col 3, `last_gap` = col 5) and every existing CSV
+// consumer keep their indices.
+pub const HISTORY_COLUMNS: [&str; 11] = [
     "epoch",
     "virtual_s",
     "wall_s",
@@ -37,6 +62,8 @@ pub const HISTORY_COLUMNS: [&str; 9] = [
     "test_error",
     "updates",
     "comm_bytes",
+    "failures",
+    "wait_s",
 ];
 
 /// Collects per-epoch evaluation rows, optionally streaming each row
@@ -46,11 +73,15 @@ pub struct Monitor<'a> {
     /// Evaluate every `every` epochs (0 = only on demand).
     pub every: usize,
     observer: Option<&'a mut dyn EpochObserver>,
+    /// Worker failures recorded so far (the `failures` column).
+    failures: u64,
+    /// Cumulative bounded-wait receive time (the `wait_s` column).
+    wait_s: f64,
 }
 
 impl<'a> Monitor<'a> {
     pub fn new(every: usize) -> Monitor<'a> {
-        Monitor { history: Table::new(&HISTORY_COLUMNS), every, observer: None }
+        Self::observed(every, None)
     }
 
     /// A monitor that also streams every recorded row to `observer`.
@@ -58,7 +89,28 @@ impl<'a> Monitor<'a> {
         every: usize,
         observer: Option<&'a mut dyn EpochObserver>,
     ) -> Monitor<'a> {
-        Monitor { history: Table::new(&HISTORY_COLUMNS), every, observer }
+        Monitor {
+            history: Table::new(&HISTORY_COLUMNS),
+            every,
+            observer,
+            failures: 0,
+            wait_s: 0.0,
+        }
+    }
+
+    /// Record a worker failure: counts toward the `failures` column of
+    /// every subsequent row and streams to the observer immediately.
+    pub fn record_failure(&mut self, failure: &WorkerFailure) {
+        self.failures += 1;
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_failure(failure);
+        }
+    }
+
+    /// Update the cumulative straggler wait time reported in the
+    /// `wait_s` column (from `NetStats::total_wait_secs`).
+    pub fn set_wait_secs(&mut self, wait_s: f64) {
+        self.wait_s = wait_s;
     }
 
     pub fn due(&self, epoch: usize) -> bool {
@@ -93,6 +145,8 @@ impl<'a> Monitor<'a> {
             test_error,
             updates,
             comm_bytes,
+            failures: self.failures,
+            wait_s: self.wait_s,
         };
         self.push(row);
         row
@@ -124,6 +178,8 @@ impl<'a> Monitor<'a> {
             test_error,
             updates,
             comm_bytes,
+            failures: self.failures,
+            wait_s: self.wait_s,
         };
         self.push(row);
         row
@@ -157,6 +213,8 @@ impl<'a> Monitor<'a> {
             test_error,
             updates,
             comm_bytes,
+            failures: self.failures,
+            wait_s: self.wait_s,
         };
         self.push(row);
         row
@@ -173,6 +231,8 @@ impl<'a> Monitor<'a> {
             r.test_error,
             r.updates as f64,
             r.comm_bytes as f64,
+            r.failures as f64,
+            r.wait_s,
         ]);
         if let Some(obs) = self.observer.as_mut() {
             obs.on_epoch(&r);
@@ -199,6 +259,10 @@ pub struct EvalRow {
     pub test_error: f64,
     pub updates: u64,
     pub comm_bytes: u64,
+    /// Worker failures recorded up to this row.
+    pub failures: u64,
+    /// Cumulative bounded-wait receive time (straggler staleness).
+    pub wait_s: f64,
 }
 
 /// Final result of a training run (all solvers return this).
@@ -215,6 +279,8 @@ pub struct TrainResult {
     pub total_virtual_s: f64,
     pub total_wall_s: f64,
     pub comm_bytes: u64,
+    /// Worker failures the run recovered from (empty on a clean run).
+    pub failures: Vec<WorkerFailure>,
 }
 
 #[cfg(test)]
@@ -276,7 +342,52 @@ mod tests {
     fn history_columns_stable() {
         let m = Monitor::new(1);
         assert_eq!(m.history.columns.len(), HISTORY_COLUMNS.len());
+        // Positional readers (`last_primal`, `last_gap`) and existing
+        // CSV consumers rely on the original indices; the degradation
+        // columns append strictly at the end.
+        assert_eq!(m.history.columns[3], "primal");
         assert_eq!(m.history.columns[5], "gap");
+        assert_eq!(m.history.columns[9], "failures");
+        assert_eq!(m.history.columns[10], "wait_s");
+    }
+
+    #[test]
+    fn failures_and_waits_flow_into_rows_and_observer() {
+        let (p, ds) = setup();
+        struct Obs {
+            rows: usize,
+            failures: Vec<(usize, String)>,
+        }
+        impl EpochObserver for Obs {
+            fn on_epoch(&mut self, _row: &EvalRow) {
+                self.rows += 1;
+            }
+            fn on_failure(&mut self, f: &WorkerFailure) {
+                self.failures.push((f.worker, f.reason.clone()));
+            }
+        }
+        let mut obs = Obs { rows: 0, failures: Vec::new() };
+        let mut m = Monitor::observed(1, Some(&mut obs));
+        let w = vec![0.5f32, -0.5];
+        let alpha = vec![0.5f32, -0.5];
+        let r1 = m.record_saddle(&p, &ds, None, &w, &alpha, 1, 0.0, 0.0, 1, 0);
+        assert_eq!(r1.failures, 0);
+        m.record_failure(&WorkerFailure {
+            worker: 2,
+            epoch: 1,
+            iter: 0,
+            reason: "injected".into(),
+            stripes_reassigned: 1,
+        });
+        m.set_wait_secs(0.25);
+        let r2 = m.record_saddle(&p, &ds, None, &w, &alpha, 2, 0.0, 0.0, 2, 0);
+        assert_eq!(r2.failures, 1);
+        assert_eq!(r2.wait_s, 0.25);
+        assert_eq!(m.history.col("failures").unwrap(), &[0.0, 1.0]);
+        assert_eq!(m.history.col("wait_s").unwrap(), &[0.0, 0.25]);
+        drop(m);
+        assert_eq!(obs.rows, 2);
+        assert_eq!(obs.failures, vec![(2, "injected".into())]);
     }
 
     #[test]

@@ -185,6 +185,7 @@ mod tests {
             total_virtual_s: 1.5,
             total_wall_s: 2.0,
             comm_bytes: 0,
+            failures: Vec::new(),
         };
         let s = summary_table(&[("dso", &r)]);
         assert!(s.contains("dso"));

@@ -1,0 +1,420 @@
+//! Deterministic fault injection for the simulated cluster.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a dice roll: every fault is
+//! pinned to a `(worker, epoch, iter)` coordinate before the run
+//! starts, so a chaos run can be replayed exactly (the determinism
+//! contract in DESIGN.md §Fault-tolerance). The clock is engine-local:
+//!
+//! * **sync engine** — `epoch` is the 0-based training epoch and
+//!   `iter` the inner ring iteration `r ∈ [0, p)`;
+//! * **async engine** — each worker counts its own block visits `v`
+//!   and maps them to `epoch = v / p`, `iter = v % p` (p visits ≈ one
+//!   worker-epoch of work).
+//!
+//! Four fault kinds, split by what they act on:
+//!
+//! * compute faults ([`WorkerFault`]): `Stall` (the worker sleeps
+//!   before the visit — a straggler) and `Die` (the worker panics at
+//!   the visit — the async engine recovers, see `async_engine`);
+//! * message faults ([`MsgFault`]): `Delay` (the outgoing token is
+//!   held back) and `Drop` (the transport "loses" the message — the
+//!   async engine reroutes the token instead of losing the block).
+//!
+//! Plans come from three places, all reduced to the same schedule:
+//! the builder methods (tests), the `spec` grammar (config/CLI:
+//! `cluster.faults` / `--faults`), and [`FaultPlan::sampled`] (seeded
+//! rates expanded *up front* into pinned events — sampling happens
+//! once, at plan construction, never during the run).
+
+use crate::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A compute fault: acts on the worker before it sweeps a block visit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerFault {
+    /// Sleep this long before the visit (straggler injection).
+    Stall { millis: u64 },
+    /// Panic at the visit (worker death).
+    Die,
+}
+
+/// A message fault: acts on the token the worker sends after a visit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgFault {
+    /// The transport loses the message.
+    Drop,
+    /// The message is held back this long before sending.
+    Delay { millis: u64 },
+}
+
+type Key = (usize, usize, usize); // (worker, epoch, iter), all 0-based
+
+/// A deterministic schedule of injected faults (see module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    compute: BTreeMap<Key, WorkerFault>,
+    message: BTreeMap<Key, MsgFault>,
+}
+
+/// Per-(worker, visit) fault rates for [`FaultPlan::sampled`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRates {
+    pub stall: f64,
+    pub stall_ms: u64,
+    pub die: f64,
+    pub drop: f64,
+    pub delay: f64,
+    pub delay_ms: u64,
+}
+
+impl Default for FaultRates {
+    fn default() -> Self {
+        FaultRates { stall: 0.0, stall_ms: 10, die: 0.0, drop: 0.0, delay: 0.0, delay_ms: 5 }
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compute.is_empty() && self.message.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.compute.len() + self.message.len()
+    }
+
+    /// Whether any worker is scheduled to die.
+    pub fn has_deaths(&self) -> bool {
+        self.compute.values().any(|f| matches!(f, WorkerFault::Die))
+    }
+
+    /// Whether any message is scheduled to be dropped.
+    pub fn has_drops(&self) -> bool {
+        self.message.values().any(|f| matches!(f, MsgFault::Drop))
+    }
+
+    // --- builders (used by tests and FaultPlan::sampled) ---
+
+    pub fn stall(mut self, worker: usize, epoch: usize, iter: usize, millis: u64) -> Self {
+        self.compute.insert((worker, epoch, iter), WorkerFault::Stall { millis });
+        self
+    }
+
+    pub fn die(mut self, worker: usize, epoch: usize, iter: usize) -> Self {
+        self.compute.insert((worker, epoch, iter), WorkerFault::Die);
+        self
+    }
+
+    pub fn drop_msg(mut self, worker: usize, epoch: usize, iter: usize) -> Self {
+        self.message.insert((worker, epoch, iter), MsgFault::Drop);
+        self
+    }
+
+    pub fn delay_msg(mut self, worker: usize, epoch: usize, iter: usize, millis: u64) -> Self {
+        self.message.insert((worker, epoch, iter), MsgFault::Delay { millis });
+        self
+    }
+
+    // --- lookups (hot path: BTreeMap point query, empty plan is free) ---
+
+    /// The compute fault scheduled for `worker` at `(epoch, iter)`.
+    #[inline]
+    pub fn worker_fault(&self, worker: usize, epoch: usize, iter: usize) -> Option<WorkerFault> {
+        if self.compute.is_empty() {
+            return None;
+        }
+        self.compute.get(&(worker, epoch, iter)).copied()
+    }
+
+    /// The message fault scheduled for `worker`'s send at `(epoch, iter)`.
+    #[inline]
+    pub fn message_fault(&self, worker: usize, epoch: usize, iter: usize) -> Option<MsgFault> {
+        if self.message.is_empty() {
+            return None;
+        }
+        self.message.get(&(worker, epoch, iter)).copied()
+    }
+
+    /// Expand seeded rates into a pinned schedule over `p` workers ×
+    /// `epochs` × `p` inner iterations. Deterministic in `(seed, p,
+    /// epochs, rates)`; at most `p - 1` deaths are scheduled so the
+    /// ring always keeps a survivor to adopt the orphaned stripes.
+    pub fn sampled(seed: u64, p: usize, epochs: usize, rates: &FaultRates) -> FaultPlan {
+        let mut rng = Xoshiro256::new(seed ^ 0xFA17_7001);
+        let mut plan = FaultPlan::new();
+        let mut deaths = 0usize;
+        for w in 0..p {
+            for e in 0..epochs {
+                for r in 0..p {
+                    if rates.die > 0.0 && deaths + 1 < p && rng.bernoulli(rates.die) {
+                        plan = plan.die(w, e, r);
+                        deaths += 1;
+                    } else if rates.stall > 0.0 && rng.bernoulli(rates.stall) {
+                        plan = plan.stall(w, e, r, rates.stall_ms);
+                    }
+                    if rates.drop > 0.0 && rng.bernoulli(rates.drop) {
+                        plan = plan.drop_msg(w, e, r);
+                    } else if rates.delay > 0.0 && rng.bernoulli(rates.delay) {
+                        plan = plan.delay_msg(w, e, r, rates.delay_ms);
+                    }
+                }
+            }
+        }
+        plan
+    }
+
+    /// Parse an explicit-event spec. Grammar (comma-separated events):
+    ///
+    /// ```text
+    /// die@W.E.I        worker W dies at (epoch E, iter I)
+    /// stall@W.E.I:MS   worker W sleeps MS milliseconds first
+    /// drop@W.E.I       W's outgoing message at (E, I) is lost
+    /// delay@W.E.I:MS   ... delayed MS milliseconds
+    /// ```
+    ///
+    /// e.g. `die@1.2.0,stall@0.1.3:50`. The empty string is the empty
+    /// plan. For the `rand:` rate form use [`FaultPlan::parse_with`].
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for ev in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = ev
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{ev}': expected kind@worker.epoch.iter"))?;
+            let (coord, ms) = match rest.split_once(':') {
+                Some((c, ms)) => {
+                    let ms = ms
+                        .parse::<u64>()
+                        .map_err(|_| format!("fault '{ev}': bad milliseconds '{ms}'"))?;
+                    (c, Some(ms))
+                }
+                None => (rest, None),
+            };
+            let parts: Vec<&str> = coord.split('.').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "fault '{ev}': coordinate must be worker.epoch.iter (0-based)"
+                ));
+            }
+            let num = |s: &str| {
+                s.parse::<usize>().map_err(|_| format!("fault '{ev}': bad index '{s}'"))
+            };
+            let (w, e, i) = (num(parts[0])?, num(parts[1])?, num(parts[2])?);
+            plan = match (kind, ms) {
+                ("die", None) => plan.die(w, e, i),
+                ("drop", None) => plan.drop_msg(w, e, i),
+                ("stall", ms) => plan.stall(w, e, i, ms.unwrap_or(20)),
+                ("delay", ms) => plan.delay_msg(w, e, i, ms.unwrap_or(5)),
+                ("die" | "drop", Some(_)) => {
+                    return Err(format!("fault '{ev}': {kind} takes no duration"))
+                }
+                _ => {
+                    return Err(format!(
+                        "fault '{ev}': unknown kind '{kind}' (die|stall|drop|delay)"
+                    ))
+                }
+            };
+        }
+        Ok(plan)
+    }
+
+    /// Parse either the explicit-event grammar of [`FaultPlan::parse`]
+    /// or the seeded rate form
+    ///
+    /// ```text
+    /// rand:seed=7,die=0.01,stall=0.05,stall_ms=20,drop=0.01,delay=0.02,delay_ms=5
+    /// ```
+    ///
+    /// which needs the run shape (`p`, `epochs`) to expand into pinned
+    /// events via [`FaultPlan::sampled`].
+    pub fn parse_with(spec: &str, p: usize, epochs: usize) -> Result<FaultPlan, String> {
+        let Some(body) = spec.strip_prefix("rand:") else {
+            return Self::parse(spec);
+        };
+        let mut seed = 0u64;
+        let mut rates = FaultRates::default();
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("faults rand spec '{kv}': expected key=value"))?;
+            let f = || v.parse::<f64>().map_err(|_| format!("faults '{kv}': bad rate '{v}'"));
+            let u = || v.parse::<u64>().map_err(|_| format!("faults '{kv}': bad value '{v}'"));
+            match k {
+                "seed" => seed = u()?,
+                "stall" => rates.stall = f()?,
+                "stall_ms" => rates.stall_ms = u()?,
+                "die" => rates.die = f()?,
+                "drop" => rates.drop = f()?,
+                "delay" => rates.delay = f()?,
+                "delay_ms" => rates.delay_ms = u()?,
+                other => {
+                    return Err(format!(
+                        "faults rand spec: unknown key '{other}' \
+                         (seed|stall|stall_ms|die|drop|delay|delay_ms)"
+                    ))
+                }
+            }
+        }
+        for (name, r) in [
+            ("stall", rates.stall),
+            ("die", rates.die),
+            ("drop", rates.drop),
+            ("delay", rates.delay),
+        ] {
+            if !(0.0..=1.0).contains(&r) {
+                return Err(format!("faults rand spec: {name} rate {r} not in [0, 1]"));
+            }
+        }
+        Ok(Self::sampled(seed, p, epochs, &rates))
+    }
+
+    /// Canonical spec string: `parse(plan.spec())` round-trips, so a
+    /// sampled plan can be recorded and replayed as explicit events.
+    pub fn spec(&self) -> String {
+        let mut out = String::new();
+        let mut sep = "";
+        for (&(w, e, i), f) in &self.compute {
+            match f {
+                WorkerFault::Die => {
+                    let _ = write!(out, "{sep}die@{w}.{e}.{i}");
+                }
+                WorkerFault::Stall { millis } => {
+                    let _ = write!(out, "{sep}stall@{w}.{e}.{i}:{millis}");
+                }
+            }
+            sep = ",";
+        }
+        for (&(w, e, i), f) in &self.message {
+            match f {
+                MsgFault::Drop => {
+                    let _ = write!(out, "{sep}drop@{w}.{e}.{i}");
+                }
+                MsgFault::Delay { millis } => {
+                    let _ = write!(out, "{sep}delay@{w}.{e}.{i}:{millis}");
+                }
+            }
+            sep = ",";
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_has_no_faults() {
+        let p = FaultPlan::new();
+        assert!(p.is_empty());
+        assert_eq!(p.worker_fault(0, 0, 0), None);
+        assert_eq!(p.message_fault(3, 9, 2), None);
+        assert!(!p.has_deaths());
+        assert!(!p.has_drops());
+        assert_eq!(FaultPlan::parse("").unwrap(), p);
+    }
+
+    #[test]
+    fn builder_and_lookup() {
+        let p = FaultPlan::new()
+            .die(1, 2, 0)
+            .stall(0, 1, 3, 50)
+            .drop_msg(2, 0, 1)
+            .delay_msg(3, 4, 2, 7);
+        assert_eq!(p.worker_fault(1, 2, 0), Some(WorkerFault::Die));
+        assert_eq!(p.worker_fault(0, 1, 3), Some(WorkerFault::Stall { millis: 50 }));
+        assert_eq!(p.worker_fault(1, 2, 1), None);
+        assert_eq!(p.message_fault(2, 0, 1), Some(MsgFault::Drop));
+        assert_eq!(p.message_fault(3, 4, 2), Some(MsgFault::Delay { millis: 7 }));
+        assert!(p.has_deaths());
+        assert!(p.has_drops());
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn parse_explicit_events() {
+        let p = FaultPlan::parse("die@1.2.0, stall@0.1.3:50,delay@3.4.2:7,drop@2.0.1").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan::new()
+                .die(1, 2, 0)
+                .stall(0, 1, 3, 50)
+                .delay_msg(3, 4, 2, 7)
+                .drop_msg(2, 0, 1)
+        );
+        // Durations default when omitted.
+        let q = FaultPlan::parse("stall@0.0.0,delay@0.0.1").unwrap();
+        assert_eq!(q.worker_fault(0, 0, 0), Some(WorkerFault::Stall { millis: 20 }));
+        assert_eq!(q.message_fault(0, 0, 1), Some(MsgFault::Delay { millis: 5 }));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "die",            // no coordinate
+            "die@1.2",        // two indices
+            "die@1.2.0:10",   // die takes no duration
+            "drop@0.0.0:1",   // drop takes no duration
+            "zap@0.0.0",      // unknown kind
+            "stall@a.0.0:5",  // bad index
+            "stall@0.0.0:xx", // bad millis
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(err.contains(bad.split(',').next().unwrap()), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_including_sampled_plans() {
+        let p = FaultPlan::new().die(1, 2, 0).stall(0, 1, 3, 50).drop_msg(2, 0, 1);
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+
+        let rates =
+            FaultRates { stall: 0.1, die: 0.02, drop: 0.05, delay: 0.05, ..Default::default() };
+        let s = FaultPlan::sampled(9, 4, 6, &rates);
+        assert!(!s.is_empty());
+        assert_eq!(FaultPlan::parse(&s.spec()).unwrap(), s);
+    }
+
+    #[test]
+    fn sampled_is_deterministic_in_seed() {
+        let rates = FaultRates { stall: 0.2, die: 0.05, ..Default::default() };
+        let a = FaultPlan::sampled(7, 4, 10, &rates);
+        let b = FaultPlan::sampled(7, 4, 10, &rates);
+        let c = FaultPlan::sampled(8, 4, 10, &rates);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sampled_keeps_a_survivor() {
+        // Even at die = 1.0 the plan must leave at least one worker
+        // alive to adopt the orphaned stripes.
+        for p in [1usize, 2, 4, 8] {
+            let rates = FaultRates { die: 1.0, ..Default::default() };
+            let plan = FaultPlan::sampled(3, p, 5, &rates);
+            let dies = |w: usize| {
+                (0..5).any(|e| (0..p).any(|r| plan.worker_fault(w, e, r) == Some(WorkerFault::Die)))
+            };
+            let deaths = (0..p).filter(|&w| dies(w)).count();
+            assert!(deaths < p.max(1), "p={p}: {deaths} deaths");
+        }
+    }
+
+    #[test]
+    fn parse_with_expands_rand_specs() {
+        let a = FaultPlan::parse_with("rand:seed=7,stall=0.2,stall_ms=10,die=0.05", 4, 8).unwrap();
+        let b = FaultPlan::parse_with("rand:seed=7,stall=0.2,stall_ms=10,die=0.05", 4, 8).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Explicit grammar still works through parse_with.
+        let c = FaultPlan::parse_with("die@0.1.0", 4, 8).unwrap();
+        assert_eq!(c, FaultPlan::new().die(0, 1, 0));
+        // Bad keys/rates are actionable errors.
+        assert!(FaultPlan::parse_with("rand:zap=1", 2, 2).unwrap_err().contains("zap"));
+        assert!(FaultPlan::parse_with("rand:die=1.5", 2, 2).unwrap_err().contains("1.5"));
+    }
+}

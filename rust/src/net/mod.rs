@@ -17,10 +17,20 @@
 //! real network hardware (see DESIGN.md §substitutions).
 
 pub mod clock;
+pub mod faults;
 pub mod router;
 
 pub use clock::VirtualClock;
-pub use router::{NetStats, Router};
+pub use faults::{FaultPlan, FaultRates, MsgFault, WorkerFault};
+pub use router::{Backoff, NetStats, Recv, Router};
+
+/// Lock a mutex, tolerating poison: a peer that panicked while holding
+/// the lock must not cascade into every survivor (the engines recover
+/// from worker panics; the data under these locks stays consistent
+/// because workers push/pop whole tokens and stripes).
+pub fn lock_tolerant<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Cost model for simulated transfers.
 #[derive(Clone, Copy, Debug)]

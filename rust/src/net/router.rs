@@ -2,16 +2,26 @@
 //!
 //! A [`Router`] owns one mpsc channel per worker. Worker threads take
 //! their `Endpoint` (receiver + sender handles to everyone) before
-//! spawning. Sends are non-blocking; receives block until a message
-//! arrives — exactly the semantics DSO's ring rotation needs (worker q
-//! cannot start inner iteration r+1 before its next w block arrives).
-//! Every transfer is accounted in [`NetStats`] (messages, bytes,
-//! simulated seconds) so experiments can report communication volume.
+//! spawning. Sends are non-blocking; receives either block
+//! ([`Endpoint::recv`]) or wait a bounded interval
+//! ([`Endpoint::recv_timeout`]) — the bounded form is what the
+//! fault-tolerant engines use, so a stalled or dead peer degrades
+//! throughput instead of deadlocking the ring. Every transfer is
+//! accounted in [`NetStats`] (messages, bytes, simulated seconds,
+//! plus the degradation counters: dropped messages, bounded-wait
+//! time, timeouts) so experiments can report communication volume
+//! *and* straggler staleness.
+//!
+//! A send to a worker whose receiver is gone is **not** silently
+//! lost: [`Endpoint::send`] hands the payload back so the caller can
+//! route it into recovery (the async engine re-routes the token to a
+//! surviving worker), and the drop is counted.
 
 use super::CostModel;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// A routed message: payload plus simulated arrival metadata.
 pub struct Delivery<T> {
@@ -29,6 +39,14 @@ pub struct NetStats {
     pub bytes: AtomicU64,
     /// Total simulated comm microseconds (sum across links).
     pub sim_comm_us: AtomicU64,
+    /// Sends whose receiver was gone (dead worker / hung-up peer).
+    pub dropped_messages: AtomicU64,
+    /// Cumulative bounded-wait receive time spent without data, in
+    /// microseconds — the straggler staleness proxy the history's
+    /// `wait_s` column reports.
+    pub wait_us: AtomicU64,
+    /// Number of bounded-wait receives that timed out.
+    pub recv_timeouts: AtomicU64,
 }
 
 impl NetStats {
@@ -43,6 +61,56 @@ impl NetStats {
     pub fn total_sim_comm_secs(&self) -> f64 {
         self.sim_comm_us.load(Ordering::Relaxed) as f64 * 1e-6
     }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.dropped_messages.load(Ordering::Relaxed)
+    }
+
+    pub fn total_wait_secs(&self) -> f64 {
+        self.wait_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    pub fn total_timeouts(&self) -> u64 {
+        self.recv_timeouts.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a bounded-wait receive.
+pub enum Recv<T> {
+    Msg(Delivery<T>),
+    /// Nothing arrived within the wait bound (counted on [`NetStats`]).
+    Timeout,
+    /// Every sender handle is gone; no message can ever arrive.
+    Disconnected,
+}
+
+/// Exponential backoff for bounded-wait receive loops: start short so
+/// an idle worker notices a token quickly, grow toward `cap` so a
+/// starved worker does not spin, reset on every delivery.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    start_ms: u64,
+    cur_ms: u64,
+    cap_ms: u64,
+}
+
+impl Backoff {
+    pub fn new(start_ms: u64, cap_ms: u64) -> Backoff {
+        let start_ms = start_ms.max(1);
+        Backoff { start_ms, cur_ms: start_ms, cap_ms: cap_ms.max(start_ms) }
+    }
+
+    /// The next wait bound (doubles toward the cap).
+    pub fn next(&mut self) -> Duration {
+        let d = Duration::from_millis(self.cur_ms);
+        self.cur_ms = (self.cur_ms * 2).min(self.cap_ms);
+        d
+    }
+
+    /// Call after a successful receive.
+    pub fn reset(&mut self) {
+        self.cur_ms = self.start_ms;
+    }
 }
 
 /// One worker's handle onto the network.
@@ -56,21 +124,50 @@ pub struct Endpoint<T> {
 
 impl<T> Endpoint<T> {
     /// Send `payload` of logical size `bytes` to worker `to`.
-    pub fn send(&self, to: usize, payload: T, bytes: usize) {
+    ///
+    /// If `to`'s receiver is gone (dead or exited worker) the message
+    /// is not lost: the payload comes back as `Err` so the caller can
+    /// route it into recovery, and the drop is counted on [`NetStats`].
+    #[must_use = "a failed send hands the payload back for recovery — don't lose it"]
+    pub fn send(&self, to: usize, payload: T, bytes: usize) -> Result<(), T> {
         let comm_secs = self.cost.transfer_secs(self.id, to, bytes);
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        self.stats
-            .sim_comm_us
-            .fetch_add((comm_secs * 1e6) as u64, Ordering::Relaxed);
-        // Receiver gone (e.g. panic elsewhere) — drop silently; the
-        // engine surfaces the original panic via thread join.
-        let _ = self.txs[to].send(Delivery { from: self.id, payload, comm_secs, bytes });
+        match self.txs[to].send(Delivery { from: self.id, payload, comm_secs, bytes }) {
+            Ok(()) => {
+                self.stats.messages.fetch_add(1, Ordering::Relaxed);
+                self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                self.stats
+                    .sim_comm_us
+                    .fetch_add((comm_secs * 1e6) as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.stats.dropped_messages.fetch_add(1, Ordering::Relaxed);
+                Err(e.0.payload)
+            }
+        }
     }
 
     /// Blocking receive.
     pub fn recv(&self) -> Option<Delivery<T>> {
         self.rx.recv().ok()
+    }
+
+    /// Bounded-wait receive: wait at most `timeout` for a delivery.
+    /// Timeouts are accounted on [`NetStats`] (`recv_timeouts`, and
+    /// the elapsed bound on `wait_us`) — the straggler staleness the
+    /// history's `wait_s` column surfaces.
+    pub fn recv_timeout(&self, timeout: Duration) -> Recv<T> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(d) => Recv::Msg(d),
+            Err(RecvTimeoutError::Timeout) => {
+                self.stats.recv_timeouts.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .wait_us
+                    .fetch_add(timeout.as_micros() as u64, Ordering::Relaxed);
+                Recv::Timeout
+            }
+            Err(RecvTimeoutError::Disconnected) => Recv::Disconnected,
+        }
     }
 
     pub fn try_recv(&self) -> Option<Delivery<T>> {
@@ -128,7 +225,7 @@ mod tests {
         let mut eps = router.take_endpoints();
         let e1 = eps.pop().unwrap();
         let e0 = eps.pop().unwrap();
-        e0.send(1, vec![1.0, 2.0], 8);
+        e0.send(1, vec![1.0, 2.0], 8).unwrap();
         let d = e1.recv().unwrap();
         assert_eq!(d.from, 0);
         assert_eq!(d.payload, vec![1.0, 2.0]);
@@ -141,8 +238,8 @@ mod tests {
         let mut router: Router<u32> = Router::new(3, CostModel::new(100.0, 1.0, 1));
         let stats = router.stats();
         let eps = router.take_endpoints();
-        eps[0].send(1, 7, 1000);
-        eps[0].send(2, 8, 2000);
+        eps[0].send(1, 7, 1000).unwrap();
+        eps[0].send(2, 8, 2000).unwrap();
         eps[1].recv().unwrap();
         eps[2].recv().unwrap();
         assert_eq!(stats.total_messages(), 2);
@@ -155,7 +252,7 @@ mod tests {
         let mut router: Router<u32> = Router::new(4, CostModel::new(100.0, 1.0, 2));
         let stats = router.stats();
         let eps = router.take_endpoints();
-        eps[0].send(1, 1, 500); // same machine (cores_per_machine = 2)
+        eps[0].send(1, 1, 500).unwrap(); // same machine (cores_per_machine = 2)
         let d = eps[1].recv().unwrap();
         assert_eq!(d.comm_secs, 0.0);
         assert_eq!(stats.total_bytes(), 500);
@@ -166,7 +263,7 @@ mod tests {
         let mut router: Router<u32> = Router::new(2, CostModel::free());
         let eps = router.take_endpoints();
         for k in 0..10 {
-            eps[0].send(1, k, 4);
+            eps[0].send(1, k, 4).unwrap();
         }
         for k in 0..10 {
             assert_eq!(eps[1].recv().unwrap().payload, k);
@@ -186,7 +283,7 @@ mod tests {
                     let mut token = ep.id as u64;
                     for _ in 0..2 * p {
                         let to = (ep.id + p - 1) % p;
-                        ep.send(to, token, 8);
+                        ep.send(to, token, 8).unwrap();
                         token = ep.recv().unwrap().payload;
                     }
                     token
@@ -203,8 +300,56 @@ mod tests {
         let mut router: Router<u32> = Router::new(2, CostModel::free());
         let eps = router.take_endpoints();
         assert!(eps[1].try_recv().is_none());
-        eps[0].send(1, 5, 4);
+        eps[0].send(1, 5, 4).unwrap();
         // Message is in the channel immediately (sim time is virtual).
         assert_eq!(eps[1].try_recv().unwrap().payload, 5);
+    }
+
+    #[test]
+    fn send_to_dead_receiver_returns_payload_and_counts_drop() {
+        let mut router: Router<Vec<f32>> = Router::new(2, CostModel::free());
+        let stats = router.stats();
+        let mut eps = router.take_endpoints();
+        drop(eps.pop()); // worker 1 is gone
+        let e0 = eps.pop().unwrap();
+        let token = vec![1.0f32, 2.0];
+        let back = e0.send(1, token.clone(), 8).unwrap_err();
+        assert_eq!(back, token, "payload must come back for recovery");
+        assert_eq!(stats.total_dropped(), 1);
+        // Failed sends are not counted as delivered traffic.
+        assert_eq!(stats.total_messages(), 0);
+        assert_eq!(stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn recv_timeout_counts_waits_and_sees_messages() {
+        let mut router: Router<u32> = Router::new(2, CostModel::free());
+        let stats = router.stats();
+        let eps = router.take_endpoints();
+        match eps[1].recv_timeout(Duration::from_millis(1)) {
+            Recv::Timeout => {}
+            _ => panic!("empty queue must time out"),
+        }
+        assert_eq!(stats.total_timeouts(), 1);
+        assert!(stats.total_wait_secs() >= 0.9e-3);
+        eps[0].send(1, 5, 4).unwrap();
+        match eps[1].recv_timeout(Duration::from_millis(50)) {
+            Recv::Msg(d) => assert_eq!(d.payload, 5),
+            _ => panic!("queued message must be delivered"),
+        }
+        // Only genuine timeouts are counted, not deliveries.
+        assert_eq!(stats.total_timeouts(), 1);
+    }
+
+    #[test]
+    fn backoff_doubles_to_cap_and_resets() {
+        let mut b = Backoff::new(1, 8);
+        let waits: Vec<u64> = (0..5).map(|_| b.next().as_millis() as u64).collect();
+        assert_eq!(waits, vec![1, 2, 4, 8, 8]);
+        b.reset();
+        assert_eq!(b.next().as_millis(), 1);
+        // Degenerate bounds are clamped sane.
+        let mut z = Backoff::new(0, 0);
+        assert_eq!(z.next().as_millis(), 1);
     }
 }

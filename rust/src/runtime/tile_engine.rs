@@ -296,6 +296,7 @@ pub fn train_with(
         total_virtual_s: clocks.iter().map(|c| c.total()).fold(0.0, f64::max),
         total_wall_s: wall.elapsed_secs(),
         comm_bytes,
+        failures: Vec::new(),
     })
 }
 

@@ -1,0 +1,221 @@
+//! Chaos suite: seeded fault schedules against the async NOMAD ring
+//! and the sync engine's checkpoint/resume path.
+//!
+//! Every schedule here is deterministic — `FaultPlan` trigger points
+//! are exact `(worker, epoch, iter)` coordinates, so a failing run
+//! reproduces under `cargo test --test chaos`. The suite pins the
+//! ISSUE-6 acceptance gates: injected death at p = 4 completes and
+//! reports through the observer stream, crash-and-resume is
+//! bit-identical to the uninterrupted run, and timing faults never
+//! move the sync trajectory (Lemma 2).
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, LossKind, TrainConfig};
+use dso::coordinator::{EpochObserver, EvalRow, TrainResult, WorkerFailure};
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+
+fn dataset(seed: u64) -> Dataset {
+    SparseSpec {
+        name: "chaos".into(),
+        m: 240,
+        d: 60,
+        nnz_per_row: 6.0,
+        zipf_s: 0.7,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        seed,
+    }
+    .generate()
+}
+
+fn cfg(algo: Algorithm, p: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = algo;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.2;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = p;
+    cfg.cluster.cores = 1;
+    cfg.monitor.every = 1;
+    cfg
+}
+
+fn assert_recovered_shape(r: &TrainResult, ds: &Dataset, label: &str) {
+    assert_eq!(r.w.len(), ds.d(), "{label}: w not fully recovered");
+    assert_eq!(r.alpha.len(), ds.m(), "{label}: alpha not fully recovered");
+    assert!(r.final_primal.is_finite(), "{label}: non-finite objective");
+}
+
+/// Observer that records both streams — the per-epoch rows and the
+/// recovered worker failures (`on_failure` is the trait's optional
+/// second channel; the closure blanket impl never sees it).
+#[derive(Default)]
+struct Recorder {
+    rows: Vec<EvalRow>,
+    failures: Vec<WorkerFailure>,
+}
+
+impl EpochObserver for Recorder {
+    fn on_epoch(&mut self, row: &EvalRow) {
+        self.rows.push(*row);
+    }
+    fn on_failure(&mut self, f: &WorkerFailure) {
+        self.failures.push(f.clone());
+    }
+}
+
+#[test]
+fn chaos_async_death_is_recovered_and_reported() {
+    let ds = dataset(3);
+    let mut rec = Recorder::default();
+    let r = Trainer::new(cfg(Algorithm::DsoAsync, 4, 2))
+        .faults("die@2.0.2")
+        .observer(&mut rec)
+        .fit(&ds, None)
+        .unwrap()
+        .into_result();
+    assert_eq!(r.failures.len(), 1, "exactly the injected death");
+    let f = &r.failures[0];
+    assert_eq!(f.worker, 2);
+    assert_eq!(f.reason, "injected death");
+    assert!(f.stripes_reassigned >= 1, "dead worker's stripes must move");
+    // The same failure reaches the observer stream, before the final row.
+    assert_eq!(rec.failures, r.failures, "observer saw a different failure set");
+    let last = rec.rows.last().expect("async records one end-of-run row");
+    assert_eq!(last.failures, 1, "failure count missing from the history row");
+    assert_recovered_shape(&r, &ds, "die@2.0.2");
+}
+
+#[test]
+fn chaos_schedules_complete_across_losses_and_ring_sizes() {
+    let ds = dataset(3);
+    for loss in [LossKind::Hinge, LossKind::Logistic, LossKind::Square] {
+        for (p, faults) in [
+            (2usize, "die@1.0.1,stall@0.0.0:3"),
+            (4usize, "die@2.0.2,stall@0.0.1:3,delay@1.0.0:2"),
+        ] {
+            let mut c = cfg(Algorithm::DsoAsync, p, 3);
+            c.model.loss = loss;
+            let label = format!("{}/p{p}", loss.name());
+            let clean = Trainer::new(c.clone())
+                .fit(&ds, None)
+                .unwrap_or_else(|e| panic!("{label} clean: {e}"))
+                .into_result();
+            let r = Trainer::new(c)
+                .faults(faults)
+                .fit(&ds, None)
+                .unwrap_or_else(|e| panic!("{label}: {e}"))
+                .into_result();
+            assert_eq!(r.failures.len(), 1, "{label}: one death injected");
+            assert_recovered_shape(&r, &ds, &label);
+            // The degraded ring does the same total work (target visits
+            // count survivors' sweeps), so the objective must land in
+            // the same basin as the fault-free run — a lost stripe or a
+            // double-counted token would blow this band.
+            let rel = (r.final_primal - clean.final_primal).abs()
+                / clean.final_primal.abs().max(1e-12);
+            assert!(
+                rel < 0.5,
+                "{label}: faulted {} vs clean {} (rel {rel})",
+                r.final_primal,
+                clean.final_primal
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_checkpoint_resume_matches_uninterrupted_bitwise() {
+    let ds = dataset(3);
+    let ck = std::env::temp_dir().join("dso-chaos-resume.ck");
+    let ck_path = ck.to_str().unwrap();
+
+    let full = Trainer::new(cfg(Algorithm::Dso, 3, 8)).fit(&ds, None).unwrap().into_result();
+
+    // "Crash" after epoch 3: train to 3, snapshotting at the boundary.
+    Trainer::new(cfg(Algorithm::Dso, 3, 3))
+        .checkpoint_every(3)
+        .checkpoint_path(ck_path)
+        .fit(&ds, None)
+        .unwrap();
+    assert!(ck.exists(), "no checkpoint written at epoch 3");
+
+    // Resume a fresh process image and run out to epoch 8.
+    let resumed = Trainer::new(cfg(Algorithm::Dso, 3, 8))
+        .resume(ck_path)
+        .fit(&ds, None)
+        .unwrap()
+        .into_result();
+    std::fs::remove_file(&ck).ok();
+
+    assert_eq!(resumed.w, full.w, "resume moved w");
+    assert_eq!(resumed.alpha, full.alpha, "resume moved alpha");
+    assert_eq!(resumed.total_updates, full.total_updates, "resume moved the update count");
+}
+
+#[test]
+fn chaos_resume_refuses_foreign_checkpoint() {
+    let ds = dataset(3);
+    let ck = std::env::temp_dir().join("dso-chaos-foreign.ck");
+    let ck_path = ck.to_str().unwrap();
+    Trainer::new(cfg(Algorithm::Dso, 2, 2))
+        .checkpoint_every(2)
+        .checkpoint_path(ck_path)
+        .fit(&ds, None)
+        .unwrap();
+
+    // Same data, different seed => different update sequence; the
+    // fingerprint must reject rather than silently splice trajectories.
+    let mut foreign = cfg(Algorithm::Dso, 2, 4);
+    foreign.optim.seed = 8;
+    let err = Trainer::new(foreign).resume(ck_path).fit(&ds, None).unwrap_err();
+    assert!(format!("{err}").contains("refusing to resume"), "{err}");
+    std::fs::remove_file(&ck).ok();
+
+    // A missing checkpoint file is a load error, not a clean start.
+    let missing = std::env::temp_dir().join("dso-chaos-no-such.ck");
+    assert!(Trainer::new(cfg(Algorithm::Dso, 2, 2))
+        .resume(missing.to_str().unwrap())
+        .fit(&ds, None)
+        .is_err());
+}
+
+#[test]
+fn chaos_sync_timing_faults_preserve_bit_identity() {
+    // Stalls and delays perturb scheduling only; Lemma 2 says the sync
+    // trajectory is invariant to interleaving, so the faulted threaded
+    // run must match the fault-free serial replay bit for bit.
+    let ds = dataset(3);
+    let faulted = Trainer::new(cfg(Algorithm::Dso, 3, 3))
+        .faults("stall@0.1.0:5,delay@1.0.1:2")
+        .fit(&ds, None)
+        .unwrap()
+        .into_result();
+    let replay = Trainer::new(cfg(Algorithm::Dso, 3, 3))
+        .replay(true)
+        .fit(&ds, None)
+        .unwrap()
+        .into_result();
+    assert_eq!(faulted.w, replay.w, "stall/delay moved w");
+    assert_eq!(faulted.alpha, replay.alpha, "stall/delay moved alpha");
+    assert!(faulted.failures.is_empty(), "timing faults are not failures");
+}
+
+#[test]
+fn chaos_straggler_wait_time_surfaces_in_history() {
+    let ds = dataset(3);
+    let r = Trainer::new(cfg(Algorithm::DsoAsync, 4, 2))
+        .faults("stall@1.0.0:20,stall@3.0.1:10")
+        .fit(&ds, None)
+        .unwrap()
+        .into_result();
+    assert!(r.failures.is_empty(), "stalls must not kill workers");
+    let wait = r.history.col("wait_s").expect("wait_s column missing");
+    let last = *wait.last().unwrap();
+    // Every surviving worker exits through at least one bounded-wait
+    // timeout, so a stalled ring always accrues positive wait time.
+    assert!(last > 0.0 && last.is_finite(), "wait_s = {last}");
+    assert_recovered_shape(&r, &ds, "straggler");
+}

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
-# records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json
-# and BENCH_simd.json (the cross-PR perf trajectory; plot with
-# `python scripts/plot_results.py --bench`).
+# records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json,
+# BENCH_simd.json and BENCH_faults.json (the cross-PR perf trajectory;
+# plot with `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -112,13 +112,55 @@ for required in "${alpha_required[@]}"; do
     fi
 done
 
+echo "== chaos / fault-injection suite present =="
+# ISSUE 6's acceptance rests on tests/chaos.rs: injected death at p = 4
+# recovers and reports, crash-and-resume is bit-identical, timing
+# faults never move the sync trajectory. Same renamed/filtered-out
+# guard as the kernel suites above.
+chaos_required=(chaos_async_death_is_recovered_and_reported
+    chaos_checkpoint_resume_matches_uninterrupted_bitwise
+    chaos_sync_timing_faults_preserve_bit_identity
+    chaos_straggler_wait_time_surfaces_in_history)
+chaos_tests="$(cargo test -q --test chaos -- --list 2>/dev/null || true)"
+for required in "${chaos_required[@]}"; do
+    if ! grep -q "$required" <<<"$chaos_tests"; then
+        echo "ci.sh: chaos test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
+echo "== engine/net recovery paths never bare-unwrap a lock or join =="
+# Fault tolerance dies the day a poisoned mutex or a worker join can
+# panic the coordinator. Non-test code on the recovery paths must route
+# through net::lock_tolerant / PoisonError::into_inner / WorkerFailure
+# instead of .unwrap()/.expect() on lock, join, or into_inner results
+# (the *_or_else recovery forms do not trip this gate).
+unwrap_gate() {
+    awk '
+        /#\[cfg\(test\)\]/ { exit bad }
+        /\.lock\(\)\.unwrap\(\)|\.join\(\)\.unwrap\(\)|\.join\(\)\.expect\(|into_inner\(\)\.unwrap\(\)/ {
+            printf "%s:%d: bare unwrap on a lock/join in a recovery path\n", FILENAME, FNR
+            bad = 1
+        }
+        END { exit bad }
+    ' "$1"
+}
+for f in rust/src/coordinator/engine.rs rust/src/coordinator/async_engine.rs \
+    rust/src/net/router.rs rust/src/net/faults.rs rust/src/net/mod.rs; do
+    if ! unwrap_gate "$f"; then
+        echo "ci.sh: route the failure through lock_tolerant/WorkerFailure in $f" >&2
+        exit 1
+    fi
+done
+
 echo "== cargo test -q =="
 cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
-    for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json; do
+    for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json \
+        BENCH_faults.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else
