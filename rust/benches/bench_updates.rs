@@ -23,14 +23,21 @@
 //!                bounded-wait token flow when nothing fails, and the
 //!                degradation under stalls.
 //!
+//! * `transport_*` — end-to-end async ring runs across substrates: the
+//!                in-thread ring vs the multi-process Unix-socket ring
+//!                (`--mode dso-proc`), clean and with a straggler stall
+//!                — the price of real frames, checksums, and
+//!                process-level scheduling over shared memory.
+//!
 //! Acceptance targets: packed ≥2× the reference, lanes ≥1.5× packed,
 //! both as median updates/sec on the same 64k-entry block. Run with
 //! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all kernels),
 //! `BENCH_lanes.json` (the scalar-vs-lane pair), `BENCH_alpha_lanes.json`
 //! (the square-loss scalar-α-vs-affine-α pair), `BENCH_simd.json`
-//! (the portable-vs-AVX2 backend pair) and `BENCH_faults.json` (the
-//! clean-vs-straggler async pair) — the CI smoke tracks all five so
-//! the perf trajectory is recorded across PRs.
+//! (the portable-vs-AVX2 backend pair), `BENCH_faults.json` (the
+//! clean-vs-straggler async pair) and `BENCH_transport.json` (the
+//! thread-vs-process ring pair) — the CI smoke tracks all six so the
+//! perf trajectory is recorded across PRs.
 
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
@@ -380,9 +387,74 @@ fn main() {
         }
     }
 
+    // --- Transport substrate pair (BENCH_transport.json) ---
+    // The same async NOMAD run on both substrates: the in-thread ring
+    // (shared memory, simulated costing) vs the multi-process ring
+    // (real Unix-domain sockets: frames, checksums, delta encoding,
+    // heartbeats), plus the process ring under a straggler stall. The
+    // thread/process ratio prices the real transport; the stall case
+    // shows the supervisor's bounded-wait degradation.
+    let mut transport_runner = Runner::from_env("transport");
+    {
+        use dso::api::Trainer;
+        use dso::config::{Algorithm, ExecMode, TrainConfig};
+
+        let small = SparseSpec {
+            name: "transport-bench".into(),
+            m: 400,
+            d: 100,
+            nnz_per_row: 8.0,
+            zipf_s: 0.7,
+            label_noise: 0.03,
+            pos_frac: 0.5,
+            seed: 9,
+        }
+        .generate();
+        let mut cfg = TrainConfig::default();
+        cfg.optim.algorithm = Algorithm::DsoAsync;
+        cfg.optim.epochs = 2;
+        cfg.optim.eta0 = 0.2;
+        cfg.model.lambda = 1e-3;
+        cfg.cluster.machines = 2;
+        cfg.cluster.cores = 1;
+        cfg.monitor.every = 0;
+        cfg.cluster.heartbeat_ms = 25;
+        cfg.cluster.death_timeout_ms = 1000;
+        for (name, mode, faults) in [
+            ("transport_thread_ring", ExecMode::Scalar, ""),
+            ("transport_proc_ring", ExecMode::Proc, ""),
+            ("transport_proc_straggler", ExecMode::Proc, "stall@0.0.1:2,stall@1.1.0:2"),
+        ] {
+            transport_runner.bench(name, || {
+                Trainer::new(cfg.clone())
+                    .mode(mode)
+                    .worker_bin(env!("CARGO_BIN_EXE_dso"))
+                    .faults(faults)
+                    .fit(&small, None)
+                    .expect("bench transport train run")
+                    .result
+                    .total_updates
+            });
+        }
+        let median = |name: &str| {
+            transport_runner.results.iter().find(|r| r.name == name).map(|r| r.median())
+        };
+        if let (Some(tm), Some(pm)) =
+            (median("transport_thread_ring"), median("transport_proc_ring"))
+        {
+            println!(
+                "    -> thread {}/run  proc {}/run  socket overhead {:.2}x",
+                human_time(tm),
+                human_time(pm),
+                pm / tm
+            );
+        }
+    }
+
     runner.finish("updates");
     lane_runner.finish("lanes");
     alpha_runner.finish("alpha_lanes");
     simd_runner.finish("simd");
     fault_runner.finish("faults");
+    transport_runner.finish("transport");
 }

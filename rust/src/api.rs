@@ -69,10 +69,43 @@ impl<'a> Trainer<'a> {
         self
     }
 
-    /// Select the DSO execution mode (`cluster.mode`): scalar sweeps
-    /// or the tile/PJRT path.
+    /// Select the DSO execution mode (`cluster.mode`): scalar sweeps,
+    /// the tile/PJRT path, or the multi-process socket transport
+    /// (`ExecMode::Proc`, which requires `Algorithm::DsoAsync`).
     pub fn mode(mut self, mode: ExecMode) -> Self {
         self.cfg.cluster.mode = mode;
+        self
+    }
+
+    /// Worker heartbeat cadence for the multi-process transport
+    /// (`cluster.heartbeat_ms`): a silent link is probed at this
+    /// interval so the supervisor can tell slow from dead.
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.cfg.cluster.heartbeat_ms = ms;
+        self
+    }
+
+    /// How long a silent or disconnected worker gets before the
+    /// supervisor declares it dead and degrades the ring
+    /// (`cluster.death_timeout_ms`; must exceed the heartbeat).
+    pub fn death_timeout_ms(mut self, ms: u64) -> Self {
+        self.cfg.cluster.death_timeout_ms = ms;
+        self
+    }
+
+    /// Record the multi-process run's delivered-message schedule to
+    /// this path (`cluster.sched_out`), replayable bit-for-bit with
+    /// [`crate::net::replay_recorded_schedule`].
+    pub fn schedule_out(mut self, path: &str) -> Self {
+        self.cfg.cluster.sched_out = path.to_string();
+        self
+    }
+
+    /// Override the worker executable the supervisor spawns
+    /// (`cluster.worker_bin`; default: `$DSO_WORKER_BIN`, then the
+    /// current executable).
+    pub fn worker_bin(mut self, path: &str) -> Self {
+        self.cfg.cluster.worker_bin = path.to_string();
         self
     }
 
@@ -173,10 +206,21 @@ impl<'a> Trainer<'a> {
                 ExecMode::Scalar => {
                     crate::coordinator::engine::train_dso_with(&cfg, train, test, observer)?
                 }
+                // validate() rejects this combination; unreachable via
+                // fit(), kept as a typed error for direct construction.
+                ExecMode::Proc => anyhow::bail!(
+                    "mode = \"dso-proc\" is the multi-process async transport; \
+                     set algorithm = \"dso-async\""
+                ),
             },
-            Algorithm::DsoAsync => {
-                crate::coordinator::async_engine::train_dso_async_with(&cfg, train, test, observer)?
-            }
+            Algorithm::DsoAsync => match cfg.cluster.mode {
+                ExecMode::Proc => {
+                    crate::net::supervisor::train_dso_proc_with(&cfg, train, test, observer)?
+                }
+                _ => crate::coordinator::async_engine::train_dso_async_with(
+                    &cfg, train, test, observer,
+                )?,
+            },
             Algorithm::Sgd => crate::baselines::sgd::train_sgd_with(&cfg, train, test, observer)?,
             Algorithm::Psgd => {
                 crate::baselines::psgd::train_psgd_with(&cfg, train, test, observer)?

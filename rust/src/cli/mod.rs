@@ -3,12 +3,13 @@
 //! ```text
 //! dso train  [--config run.toml] [--data NAME] [--algo dso|sgd|psgd|bmrm]
 //!            [--loss hinge|logistic|square] [--lambda X] [--epochs N]
-//!            [--machines M] [--cores C] [--mode scalar|tile]
+//!            [--machines M] [--cores C] [--mode scalar|tile|dso-proc]
 //!            [--simd auto|portable|avx2] [--scale S]
 //!            [--eta0 X] [--dcd-init] [--replay] [--out results/run.csv]
 //!            [--model-out model.dso] [--path f.libsvm]
 //!            [--faults SPEC] [--checkpoint-every N] [--checkpoint PATH]
-//!            [--resume PATH]
+//!            [--resume PATH] [--heartbeat-ms N] [--death-timeout-ms N]
+//!            [--sched-out PATH] [--worker-bin PATH]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
 //! dso stats  [--name NAME | --all] [--scale S]
@@ -35,6 +36,17 @@
 //! writes an atomic full-state snapshot every N epochs (scalar sync
 //! DSO), and `--resume PATH` continues a run from one — bit-identical
 //! to never having stopped.
+//!
+//! Multi-process transport (DESIGN.md §Transport): `--mode dso-proc`
+//! runs one OS process per worker over Unix-domain sockets (implies
+//! `--algo dso-async` unless overridden). `--heartbeat-ms` and
+//! `--death-timeout-ms` tune death detection, `--sched-out PATH`
+//! records the delivered-message schedule for bit-exact serial replay,
+//! and `--worker-bin` overrides the spawned worker executable. The
+//! kill@/partition@ fault kinds are proc-only: a real SIGKILL and a
+//! real link partition at the same clock coordinates the thread ring
+//! uses. The supervisor respawns workers via the hidden `__dso-worker`
+//! subcommand — not part of the public surface.
 
 pub mod args;
 
@@ -53,6 +65,9 @@ pub fn main_entry(raw: Vec<String>) -> Result<i32> {
         "stats" => cmd_stats(&args),
         "gen-data" => cmd_gen_data(&args),
         "inspect-artifacts" => cmd_inspect_artifacts(),
+        // Hidden: the dso-proc supervisor spawns `dso __dso-worker
+        // --socket PATH --worker Q` for each ring member.
+        "__dso-worker" => cmd_worker(&args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(0)
@@ -125,8 +140,44 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("resume") {
         cfg.checkpoint.resume = v.to_string();
     }
+    cfg.cluster.heartbeat_ms =
+        args.get_u64("heartbeat-ms", cfg.cluster.heartbeat_ms).map_err(anyhow::Error::msg)?;
+    cfg.cluster.death_timeout_ms = args
+        .get_u64("death-timeout-ms", cfg.cluster.death_timeout_ms)
+        .map_err(anyhow::Error::msg)?;
+    if let Some(v) = args.get("sched-out") {
+        cfg.cluster.sched_out = v.to_string();
+    }
+    if let Some(v) = args.get("worker-bin") {
+        cfg.cluster.worker_bin = v.to_string();
+    }
+    // `--mode dso-proc` is only meaningful under the async algorithm;
+    // select it when the user didn't pick one explicitly.
+    if cfg.cluster.mode == crate::config::ExecMode::Proc
+        && args.get("algo").is_none()
+        && cfg.optim.algorithm == crate::config::Algorithm::Dso
+    {
+        cfg.optim.algorithm = crate::config::Algorithm::DsoAsync;
+    }
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
+}
+
+/// Entry point for the hidden `__dso-worker` subcommand. Everything the
+/// worker needs beyond its identity arrives over the socket (config,
+/// dataset, fingerprint), so the argument surface stays minimal.
+fn cmd_worker(args: &Args) -> Result<i32> {
+    args.check_known(&["socket", "worker"]).map_err(anyhow::Error::msg)?;
+    let socket = args
+        .get("socket")
+        .ok_or_else(|| anyhow::anyhow!("__dso-worker requires --socket"))?;
+    let worker: usize = args
+        .get("worker")
+        .ok_or_else(|| anyhow::anyhow!("__dso-worker requires --worker"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("__dso-worker: bad --worker (expected an index)"))?;
+    crate::net::supervisor::worker_main(std::path::Path::new(socket), worker)?;
+    Ok(0)
 }
 
 /// Load the dataset a config points at (registry or libsvm path).
@@ -143,6 +194,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         "config", "data", "path", "algo", "loss", "mode", "simd", "lambda", "epochs", "eta0",
         "dcd-init", "replay", "seed", "machines", "cores", "scale", "data-seed", "out",
         "model-out", "test-frac", "faults", "checkpoint-every", "checkpoint", "resume",
+        "heartbeat-ms", "death-timeout-ms", "sched-out", "worker-bin",
     ])
     .map_err(anyhow::Error::msg)?;
     let mut cfg = build_train_config(args)?;

@@ -187,6 +187,9 @@ pub enum ExecMode {
     Scalar,
     /// Tile-batched updates through the AOT Pallas kernel (dense data).
     Tile,
+    /// One OS process per worker over Unix-domain sockets — the real
+    /// transport (DESIGN.md §Transport). Requires `dso-async`.
+    Proc,
 }
 
 impl ExecMode {
@@ -194,7 +197,16 @@ impl ExecMode {
         match s {
             "scalar" => Ok(ExecMode::Scalar),
             "tile" => Ok(ExecMode::Tile),
-            other => Err(format!("unknown exec mode '{other}' (scalar|tile)")),
+            "dso-proc" | "proc" => Ok(ExecMode::Proc),
+            other => Err(format!("unknown exec mode '{other}' (scalar|tile|dso-proc)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Scalar => "scalar",
+            ExecMode::Tile => "tile",
+            ExecMode::Proc => "dso-proc",
         }
     }
 }
@@ -279,6 +291,20 @@ pub struct ClusterConfig {
     /// explicit events (`"die@1.0.2,stall@0.1.0:20"`) or a sampled
     /// schedule (`"rand:seed=7,die=0.01,stall=0.05"`). Empty = none.
     pub faults: String,
+    /// Process mode: idle-worker heartbeat period in milliseconds.
+    pub heartbeat_ms: u64,
+    /// Process mode: how long a silent worker may stay silent before
+    /// the supervisor declares it dead (and SIGKILLs a hung child).
+    /// Reconnects after a `partition@` fault must land inside this.
+    pub death_timeout_ms: u64,
+    /// Process mode: where the recorded message schedule is written
+    /// (empty = don't record). Feed back via `replay_recorded_schedule`
+    /// to re-execute the exact interleaving serially.
+    pub sched_out: String,
+    /// Process mode: path to the worker binary. Empty = `$DSO_WORKER_BIN`
+    /// if set, else the current executable (re-exec'd with the hidden
+    /// `__dso-worker` subcommand).
+    pub worker_bin: String,
 }
 
 impl Default for ClusterConfig {
@@ -294,6 +320,10 @@ impl Default for ClusterConfig {
             partition: PartitionKind::Even,
             simd: SimdKind::Auto,
             faults: String::new(),
+            heartbeat_ms: 50,
+            death_timeout_ms: 1500,
+            sched_out: String::new(),
+            worker_bin: String::new(),
         }
     }
 }
@@ -402,6 +432,20 @@ impl TrainConfig {
         if let Some(s) = doc.get_str("cluster.faults") {
             c.cluster.faults = s.to_string();
         }
+        c.cluster.heartbeat_ms = doc
+            .get_i64("cluster.heartbeat_ms")
+            .map(|v| v.max(0) as u64)
+            .unwrap_or(c.cluster.heartbeat_ms);
+        c.cluster.death_timeout_ms = doc
+            .get_i64("cluster.death_timeout_ms")
+            .map(|v| v.max(0) as u64)
+            .unwrap_or(c.cluster.death_timeout_ms);
+        if let Some(s) = doc.get_str("cluster.sched_out") {
+            c.cluster.sched_out = s.to_string();
+        }
+        if let Some(s) = doc.get_str("cluster.worker_bin") {
+            c.cluster.worker_bin = s.to_string();
+        }
 
         c.checkpoint.every = usize_of("checkpoint.every", c.checkpoint.every);
         if let Some(s) = doc.get_str("checkpoint.path") {
@@ -451,6 +495,29 @@ impl TrainConfig {
             // boxes in App. B are for SVM/logistic. Allowed, but the w box
             // uses the L2 formula — warn via validation note (not fatal).
         }
+        if self.cluster.mode == ExecMode::Proc {
+            if self.optim.algorithm != Algorithm::DsoAsync {
+                return Err(format!(
+                    "mode = \"dso-proc\" runs the asynchronous ring across worker \
+                     processes; set algorithm = \"dso-async\" (got \"{}\")",
+                    self.optim.algorithm.name()
+                ));
+            }
+            if self.cluster.heartbeat_ms == 0 || self.cluster.death_timeout_ms == 0 {
+                return Err(
+                    "mode = \"dso-proc\" needs cluster.heartbeat_ms > 0 and \
+                     cluster.death_timeout_ms > 0 (death detection is timeout-based)"
+                        .into(),
+                );
+            }
+            if self.cluster.death_timeout_ms <= self.cluster.heartbeat_ms {
+                return Err(format!(
+                    "cluster.death_timeout_ms ({}) must exceed cluster.heartbeat_ms \
+                     ({}) or every idle worker is declared dead between heartbeats",
+                    self.cluster.death_timeout_ms, self.cluster.heartbeat_ms
+                ));
+            }
+        }
         if !self.cluster.faults.is_empty() {
             let dso = matches!(self.optim.algorithm, Algorithm::Dso | Algorithm::DsoAsync);
             if !dso {
@@ -473,6 +540,15 @@ impl TrainConfig {
                      bulk-synchronous dso engine cannot survive (a lost ring token \
                      deadlocks the epoch barrier); use algorithm = \"dso-async\", \
                      or restrict the plan to stall/delay"
+                        .into(),
+                );
+            }
+            if (plan.has_kills() || plan.has_partitions()) && self.cluster.mode != ExecMode::Proc
+            {
+                return Err(
+                    "kill@ (real SIGKILL) and partition@ (link fault) only exist in \
+                     the multi-process transport; use mode = \"dso-proc\", or map to \
+                     die@/stall@ for the in-thread ring"
                         .into(),
                 );
             }
@@ -571,6 +647,11 @@ out = "results/x.csv"
         assert_eq!(Algorithm::parse("bmrm").unwrap(), Algorithm::Bmrm);
         assert_eq!(StepKind::parse("invsqrt").unwrap(), StepKind::InvSqrt);
         assert_eq!(ExecMode::parse("tile").unwrap(), ExecMode::Tile);
+        assert_eq!(ExecMode::parse("dso-proc").unwrap(), ExecMode::Proc);
+        assert_eq!(ExecMode::parse("proc").unwrap(), ExecMode::Proc);
+        for m in [ExecMode::Scalar, ExecMode::Tile, ExecMode::Proc] {
+            assert_eq!(ExecMode::parse(m.name()).unwrap(), m);
+        }
         assert!(RegKind::parse("l3").is_err());
         assert_eq!(SimdKind::parse("auto").unwrap(), SimdKind::Auto);
         assert_eq!(SimdKind::parse("portable").unwrap(), SimdKind::Portable);
@@ -616,6 +697,56 @@ out = "results/x.csv"
         assert!(err.contains("sgd"), "{err}");
         // Malformed specs are rejected at validation, not at run time.
         assert!(TrainConfig::from_toml("[cluster]\nfaults = \"zap@0.0.0\"\n").is_err());
+    }
+
+    #[test]
+    fn proc_mode_validated() {
+        // dso-proc needs the async engine's recovery machinery.
+        let err = TrainConfig::from_toml("[cluster]\nmode = \"dso-proc\"\n").unwrap_err();
+        assert!(err.contains("dso-async"), "{err}");
+        let c = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nmode = \"dso-proc\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.mode, ExecMode::Proc);
+        assert_eq!(c.cluster.heartbeat_ms, 50);
+        assert_eq!(c.cluster.death_timeout_ms, 1500);
+        // Timeout knobs parse and must be ordered sanely.
+        let c = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nmode = \"dso-proc\"\n\
+             heartbeat_ms = 20\ndeath_timeout_ms = 400\nsched_out = \"s.log\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.heartbeat_ms, 20);
+        assert_eq!(c.cluster.death_timeout_ms, 400);
+        assert_eq!(c.cluster.sched_out, "s.log");
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nmode = \"dso-proc\"\n\
+             heartbeat_ms = 100\ndeath_timeout_ms = 100\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("exceed"), "{err}");
+    }
+
+    #[test]
+    fn kill_and_partition_faults_need_proc_mode() {
+        // kill@ is a real SIGKILL — meaningless for OS threads.
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nfaults = \"kill@0.1.0\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("dso-proc"), "{err}");
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nfaults = \"partition@0.1.0:40\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("dso-proc"), "{err}");
+        let c = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"dso-async\"\n[cluster]\nmode = \"dso-proc\"\n\
+             faults = \"kill@0.1.0,partition@1.0.0:40\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.faults, "kill@0.1.0,partition@1.0.0:40");
     }
 
     #[test]

@@ -172,6 +172,31 @@ fn route_token(
     lock_tolerant(&shared.parked).push(token);
 }
 
+/// One (stripe, block) sweep — the unit of work every DSO transport
+/// executes. Factored out so the in-thread ring, the multi-process
+/// worker ([`crate::net::supervisor`]), and the recorded-schedule
+/// serial replayer all run the identical kernel path: Lemma-2 replay
+/// bit-identity depends on there being exactly one sweep entry point.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_stripe_block(
+    setup: &DsoSetup,
+    rule: StepRule,
+    q: usize,
+    block_id: usize,
+    w: &mut [f32],
+    w_acc: &mut [f32],
+    alpha: &mut [f32],
+    a_acc: &mut [f32],
+    scratch: &mut Vec<u32>,
+) -> usize {
+    let block = setup.omega.block(q, block_id);
+    let ctx = setup.packed_ctx(q, block_id, rule);
+    let mut st = PackedState { w, w_acc, alpha, a_acc };
+    // Precompiled dispatch, same plan as the sync engine;
+    // (epoch, r) = (0, 0) is inert for full-sweep kernels.
+    setup.plan.sweep(block, q, block_id, 0, 0, &ctx, &mut st, scratch)
+}
+
 fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
@@ -295,10 +320,15 @@ fn worker_loop(
         }
         let (fe, fi) = ((v / p as u64) as usize, (v % p as u64) as usize);
         match setup.faults.worker_fault(q, fe, fi) {
-            Some(WorkerFault::Stall { millis }) => {
+            // Kill (real SIGKILL) and Partition (link fault) belong to
+            // the multi-process transport and are rejected for this
+            // engine by config validation; if a plan carrying them is
+            // injected directly, degrade to the closest thread-ring
+            // analogue rather than ignoring the event.
+            Some(WorkerFault::Stall { millis }) | Some(WorkerFault::Partition { millis }) => {
                 std::thread::sleep(Duration::from_millis(millis));
             }
-            Some(WorkerFault::Die) => {
+            Some(WorkerFault::Die) | Some(WorkerFault::Kill) => {
                 die(cx, &ep, &mut rng, q, fe, fi, "injected death", stripes, token);
                 return (Vec::new(), ep);
             }
@@ -311,19 +341,17 @@ fn worker_loop(
         let swept = std::panic::catch_unwind(AssertUnwindSafe(|| {
             let mut n = 0usize;
             for s in stripes.iter_mut() {
-                let block = setup.omega.block(s.q, token.block_id);
-                let ctx = setup.packed_ctx(s.q, token.block_id, cx.rule);
-                let mut st = PackedState {
-                    w: &mut token.w,
-                    w_acc: &mut token.acc,
-                    alpha: &mut s.alpha,
-                    a_acc: &mut s.a_acc,
-                };
-                // Precompiled dispatch, same plan as the sync engine;
-                // (epoch, r) = (0, 0) is inert for full-sweep kernels.
-                n += setup
-                    .plan
-                    .sweep(block, s.q, token.block_id, 0, 0, &ctx, &mut st, &mut scratch);
+                n += sweep_stripe_block(
+                    setup,
+                    cx.rule,
+                    s.q,
+                    token.block_id,
+                    &mut token.w,
+                    &mut token.acc,
+                    &mut s.alpha,
+                    &mut s.a_acc,
+                    &mut scratch,
+                );
             }
             n
         }));

@@ -57,10 +57,12 @@ fn mix(mut h: u64, label: &str, bytes: &[u8]) -> u64 {
 
 /// Hash of everything that determines the update sequence: model and
 /// optimizer hyperparameters, data shape, partition strategy, worker
-/// count, and the resolved SIMD backend (kernels differ bitwise across
-/// backends). Faults are deliberately excluded — in the sync engine
-/// they only perturb timing, so a run that crashed under injection may
-/// resume clean.
+/// count, the resolved SIMD backend (kernels differ bitwise across
+/// backends), and the fault spec. Faults are part of run identity:
+/// under the async engines a death permanently reroutes stripes and
+/// tokens, and the multi-process transport replays recorded schedules
+/// against this fingerprint — resuming or replaying a faulted run
+/// under a different spec would silently diverge.
 pub fn fingerprint(
     cfg: &TrainConfig,
     m: usize,
@@ -84,6 +86,7 @@ pub fn fingerprint(
     h = mix(h, "d", &(d as u64).to_le_bytes());
     h = mix(h, "nnz", &(nnz as u64).to_le_bytes());
     h = mix(h, "simd", simd.name().as_bytes());
+    h = mix(h, "faults", cfg.cluster.faults.as_bytes());
     h
 }
 
@@ -264,5 +267,22 @@ mod tests {
         assert_ne!(a, fingerprint(&seeded, 100, 50, 600, 4, crate::simd::SimdLevel::Portable));
         assert_ne!(a, fingerprint(&cfg, 101, 50, 600, 4, crate::simd::SimdLevel::Portable));
         assert_ne!(a, fingerprint(&cfg, 100, 50, 600, 2, crate::simd::SimdLevel::Portable));
+    }
+
+    /// The fault spec is part of run identity: a checkpoint written
+    /// under injection must be refused by a fault-free resume (and
+    /// vice versa), because async deaths permanently reroute state.
+    #[test]
+    fn fingerprint_tracks_fault_spec() {
+        let clean = TrainConfig::default();
+        let mut faulted = clean.clone();
+        faulted.cluster.faults = "die@1.0.1".into();
+        let a = fingerprint(&clean, 100, 50, 600, 4, crate::simd::SimdLevel::Portable);
+        let b = fingerprint(&faulted, 100, 50, 600, 4, crate::simd::SimdLevel::Portable);
+        assert_ne!(a, b, "fault spec must change the fingerprint");
+        // Different specs are different runs too.
+        let mut other = clean.clone();
+        other.cluster.faults = "kill@1.0.1".into();
+        assert_ne!(b, fingerprint(&other, 100, 50, 600, 4, crate::simd::SimdLevel::Portable));
     }
 }

@@ -1,28 +1,50 @@
-//! Simulated cluster network.
+//! Cluster network: a simulated topology and a real one.
 //!
 //! The paper runs DSO on 4–8 machines over MPI; this environment is a
-//! single box, so the multi-machine topology is *simulated*: each
-//! worker is an OS thread, workers are grouped into "machines"
-//! (`machines × cores` as in the paper's "4 machines × 8 cores"), and
-//! every message carries a simulated transfer cost
+//! single box, so two substitutes coexist (DESIGN.md §substitutions,
+//! §Transport):
 //!
-//! ```text
-//!     T_c(bytes) = latency + bytes / bandwidth
-//! ```
+//! * **Simulated topology** ([`router`], [`clock`]) — each worker is an
+//!   OS thread, workers are grouped into "machines" (`machines × cores`
+//!   as in the paper's "4 machines × 8 cores"), and every message
+//!   carries a simulated transfer cost
 //!
-//! charged to the receiving worker's *virtual clock*. Intra-machine
-//! messages are free (shared memory), matching the hybrid MPI+threads
-//! setup of the paper. Experiments report virtual time, which exposes
-//! exactly the `|Ω|T_u/p + T_c` trade-off of Theorem 1 without needing
-//! real network hardware (see DESIGN.md §substitutions).
+//!   ```text
+//!       T_c(bytes) = latency + bytes / bandwidth
+//!   ```
+//!
+//!   charged to the receiving worker's *virtual clock*. Intra-machine
+//!   messages are free (shared memory), matching the paper's hybrid
+//!   MPI+threads setup. Experiments report virtual time, which exposes
+//!   exactly the `|Ω|T_u/p + T_c` trade-off of Theorem 1 without real
+//!   network hardware. This is the fast path and the differential
+//!   oracle for the real transport.
+//!
+//! * **Real transport** ([`wire`], [`transport`], [`supervisor`]) —
+//!   `--mode dso-proc` runs one OS process per worker over Unix-domain
+//!   sockets, with length-prefixed checksummed frames, delta-encoded
+//!   token exchange, sequenced retransmission, heartbeat-based death
+//!   detection, and a recorded schedule that replays serially to the
+//!   bit-identical result. Here nothing is modeled: virtual time *is*
+//!   wall time and `comm_bytes` counts bytes that actually crossed a
+//!   socket.
+//!
+//! [`faults`] speaks to both: the same `FaultPlan` clock coordinates
+//! drive simulated faults in the thread ring and real process kills,
+//! link partitions, and stalls in the process ring.
 
 pub mod clock;
 pub mod faults;
 pub mod router;
+pub mod supervisor;
+pub mod transport;
+pub mod wire;
 
 pub use clock::VirtualClock;
 pub use faults::{FaultPlan, FaultRates, MsgFault, WorkerFault};
 pub use router::{Backoff, NetStats, Recv, Router};
+pub use supervisor::{replay_recorded_schedule, train_dso_proc_with, Replayed, Schedule};
+pub use transport::{connect_with_backoff, ConnIn, FrameConn};
 
 /// Lock a mutex, tolerating poison: a peer that panicked while holding
 /// the lock must not cascade into every survivor (the engines recover

@@ -1,0 +1,1422 @@
+//! Multi-process DSO: a supervising coordinator and its worker
+//! processes, connected over Unix-domain sockets (DESIGN.md
+//! §Transport).
+//!
+//! Topology is a **star**: every worker dials the coordinator's
+//! listener, and the coordinator relays w-block tokens between workers
+//! — it is the single place that picks token destinations (NOMAD's
+//! uniform routing rule, one seeded RNG), holds the authoritative copy
+//! of every token and row stripe, and appends each completed visit to
+//! the recorded schedule. That centralization is what makes the
+//! recorded schedule a *serialization certificate*: the log order is
+//! consistent with both the per-token and the per-stripe orders of the
+//! real run, so [`replay_recorded_schedule`] re-executing the entries
+//! serially reproduces the reassembled (w, α) bit-for-bit (Lemma 2
+//! across the process boundary; pinned by `tests/transport_chaos.rs`).
+//!
+//! # Protocol
+//!
+//! Bootstrap: the worker dials with [`connect_with_backoff`], sends
+//! `Hello`, receives `Start` (config TOML + libsvm text + the run
+//! fingerprint), rebuilds [`DsoSetup`] deterministically, and replies
+//! `Ready` with its *independently recomputed* fingerprint — the
+//! supervisor refuses the ring on a mismatch, the same contract the
+//! checkpoint resume path enforces.
+//!
+//! Steady state: the supervisor `Deliver`s a token (full state — the
+//! baseline the answering delta refers to), the worker sweeps it
+//! against every row stripe it owns and returns a `Fwd` whose token is
+//! delta-encoded against the delivered baseline with its full updated
+//! stripe state piggybacked. The supervisor applies the delta to its
+//! authoritative copy, logs the visit, and routes the token onward.
+//! Sequenced frames (`Deliver`/`Adopt`/`Fwd`) are retained until acked
+//! and resent verbatim after a corrupt frame (`Nack`) or a reconnect,
+//! and each side applies a sequence number exactly once, in order — so
+//! delta baselines can never skew.
+//!
+//! # Failure model
+//!
+//! Worker death is detected at the socket: EOF (or a silent link) is
+//! given `death_timeout_ms` of grace for a reconnect (the `partition@`
+//! fault exercises exactly this path), after which the supervisor runs
+//! the death protocol: reap the child, reassign its row stripes to a
+//! surviving worker (`Adopt`), re-deliver its in-flight tokens from
+//! the authoritative copies ("state as of the last *logged* sweep" —
+//! a visit that died mid-sweep was never logged and leaves no trace),
+//! and report a [`WorkerFailure`]. `die@` makes the worker send `Bye`
+//! and exit; `kill@` makes it send `KillMe` so the supervisor delivers
+//! a real SIGKILL at a deterministic fault-clock coordinate. A hung
+//! worker (silent but connected past the death timeout) is SIGKILLed
+//! too. When every worker is gone the run ends early with whatever
+//! progress exists.
+//!
+//! Drain: at the visit target the supervisor broadcasts `Shutdown`,
+//! keeps applying (and logging) straggler `Fwd`s until every token is
+//! parked, then enforces the p-token / p-stripe invariants before
+//! reassembly — the same completeness checks as the in-thread ring.
+//!
+//! Socket I/O here must never `unwrap()`/`expect()` (scripts/ci.sh
+//! greps this file): a dying peer is an expected event that feeds the
+//! death protocol, not a coordinator panic.
+
+use super::transport::{connect_with_backoff, ConnIn, FrameConn};
+use super::wire::{self, Delta, Msg, StripeMsg};
+use super::{MsgFault, WorkerFault};
+use crate::config::{StepKind, TrainConfig};
+use crate::coordinator::async_engine::sweep_stripe_block;
+use crate::coordinator::checkpoint;
+use crate::coordinator::engine::DsoSetup;
+use crate::coordinator::monitor::{EpochObserver, Monitor, TrainResult, WorkerFailure};
+use crate::coordinator::updates::StepRule;
+use crate::data::{libsvm, Dataset};
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::io;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---- recorded schedule ---------------------------------------------
+
+const SCHED_MAGIC: &str = "dso-schedule v1";
+
+/// One logged visit: worker `worker` swept w block `block` against the
+/// listed row stripes (in sweep order), producing `updates` updates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScheduleEntry {
+    pub worker: u32,
+    pub block: u32,
+    pub updates: u64,
+    /// Row-stripe home indices, in the order they were swept.
+    pub stripes: Vec<u32>,
+}
+
+/// A parsed recorded schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub fingerprint: u64,
+    pub p: usize,
+    pub entries: Vec<ScheduleEntry>,
+    /// Death events in the log (informational; replay needs only the
+    /// per-visit stripe lists).
+    pub deaths: usize,
+}
+
+impl Schedule {
+    pub fn parse(text: &str) -> Result<Schedule> {
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or_default();
+        anyhow::ensure!(magic == SCHED_MAGIC, "not a recorded schedule (bad magic '{magic}')");
+        let mut fingerprint = None;
+        let mut p = None;
+        let mut entries = Vec::new();
+        let mut deaths = 0usize;
+        for line in lines {
+            let mut f = line.split_whitespace();
+            match f.next() {
+                None => {}
+                Some("fingerprint") => {
+                    let v = f.next().ok_or_else(|| anyhow::anyhow!("bare fingerprint line"))?;
+                    fingerprint = Some(
+                        u64::from_str_radix(v, 16)
+                            .map_err(|_| anyhow::anyhow!("bad schedule fingerprint '{v}'"))?,
+                    );
+                }
+                Some("p") => {
+                    let v = f.next().ok_or_else(|| anyhow::anyhow!("bare p line"))?;
+                    p = Some(v.parse().map_err(|_| anyhow::anyhow!("bad worker count '{v}'"))?);
+                }
+                Some("visit") => {
+                    let mut num = |what: &str| -> Result<u64> {
+                        f.next()
+                            .ok_or_else(|| anyhow::anyhow!("visit line missing {what}: '{line}'"))?
+                            .parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("bad {what} in '{line}'"))
+                    };
+                    let worker = num("worker")? as u32;
+                    let block = num("block")? as u32;
+                    let updates = num("updates")?;
+                    let stripes: Vec<u32> = f
+                        .map(|s| {
+                            s.parse::<u32>()
+                                .map_err(|_| anyhow::anyhow!("bad stripe id '{s}' in '{line}'"))
+                        })
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(!stripes.is_empty(), "visit with no stripes: '{line}'");
+                    entries.push(ScheduleEntry { worker, block, updates, stripes });
+                }
+                Some("death") => deaths += 1,
+                Some(k) => anyhow::bail!("unknown schedule record '{k}'"),
+            }
+        }
+        Ok(Schedule {
+            fingerprint: fingerprint.ok_or_else(|| anyhow::anyhow!("schedule missing fingerprint"))?,
+            p: p.ok_or_else(|| anyhow::anyhow!("schedule missing worker count"))?,
+            entries,
+            deaths,
+        })
+    }
+}
+
+/// Incremental schedule writer (the supervisor appends as Fwds land).
+struct SchedLog {
+    path: PathBuf,
+    buf: String,
+}
+
+impl SchedLog {
+    fn create(path: &str, fingerprint: u64, p: usize) -> SchedLog {
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{SCHED_MAGIC}");
+        let _ = writeln!(buf, "fingerprint {fingerprint:016x}");
+        let _ = writeln!(buf, "p {p}");
+        SchedLog { path: PathBuf::from(path), buf }
+    }
+
+    fn visit(&mut self, worker: usize, block: usize, updates: u64, stripes: &[u32]) {
+        let _ = write!(self.buf, "visit {worker} {block} {updates}");
+        for q in stripes {
+            let _ = write!(self.buf, " {q}");
+        }
+        self.buf.push('\n');
+    }
+
+    fn death(&mut self, worker: usize, epoch: usize, iter: usize, stripes: usize) {
+        let _ = writeln!(self.buf, "death {worker} {epoch} {iter} {stripes}");
+    }
+
+    fn commit(&self) -> Result<()> {
+        std::fs::write(&self.path, &self.buf)
+            .map_err(|e| anyhow::anyhow!("writing schedule {}: {e}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+// ---- serial replay -------------------------------------------------
+
+/// Result of serially re-executing a recorded schedule.
+pub struct Replayed {
+    pub w: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub total_updates: u64,
+    pub visits: usize,
+}
+
+/// Re-execute a recorded schedule serially: same `DsoSetup`, same
+/// initial state, entries applied in log order through the shared
+/// sweep entry point. Because every visit reads/writes only (token
+/// `block`, the listed stripes) and the log order is consistent with
+/// each token's and each stripe's own order in the real run, the
+/// result is bit-identical to the multi-process run's reassembled
+/// (w, α) — Lemma 2, pinned across the process boundary.
+pub fn replay_recorded_schedule(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    path: &Path,
+) -> Result<Replayed> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading schedule {}: {e}", path.display()))?;
+    let sched = Schedule::parse(&text)?;
+    let setup = DsoSetup::new(cfg, train);
+    let p = setup.p;
+    let fp =
+        checkpoint::fingerprint(cfg, train.m(), train.d(), train.x.nnz(), p, setup.plan.simd());
+    anyhow::ensure!(
+        sched.fingerprint == fp,
+        "schedule {} was recorded by a different run (fingerprint {:016x}, this \
+         configuration {fp:016x}); refusing to replay a foreign schedule",
+        path.display(),
+        sched.fingerprint,
+    );
+    anyhow::ensure!(sched.p == p, "schedule has p = {}, this run has p = {p}", sched.p);
+
+    let loss = setup.problem.loss;
+    let rule = StepRule::AdaGrad(cfg.optim.eta0);
+    let mut tokens: Vec<(Vec<f32>, Vec<f32>)> = (0..p)
+        .map(|b| {
+            let len = setup.omega.col_part.block(b).len();
+            (vec![0f32; len], vec![0f32; len])
+        })
+        .collect();
+    let mut stripes: Vec<(Vec<f32>, Vec<f32>)> = (0..p)
+        .map(|q| {
+            (
+                setup
+                    .omega
+                    .row_part
+                    .block(q)
+                    .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
+                    .collect(),
+                vec![0f32; setup.omega.row_part.block_len(q)],
+            )
+        })
+        .collect();
+
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut total = 0u64;
+    for (i, e) in sched.entries.iter().enumerate() {
+        let b = e.block as usize;
+        anyhow::ensure!(b < p, "visit {i}: block {b} out of range");
+        let (tw, tacc) = match tokens.get_mut(b) {
+            Some(t) => t,
+            None => anyhow::bail!("visit {i}: block {b} out of range"),
+        };
+        let mut n = 0u64;
+        for &q in &e.stripes {
+            let q = q as usize;
+            anyhow::ensure!(q < p, "visit {i}: stripe {q} out of range");
+            // Split-borrow: stripes[q] is disjoint from tokens[b].
+            let (alpha, a_acc) = match stripes.get_mut(q) {
+                Some(s) => s,
+                None => anyhow::bail!("visit {i}: stripe {q} out of range"),
+            };
+            n += sweep_stripe_block(&setup, rule, q, b, tw, tacc, alpha, a_acc, &mut scratch)
+                as u64;
+        }
+        // Update counts are deterministic given the state, so a count
+        // mismatch localizes a divergence to the exact visit.
+        anyhow::ensure!(
+            n == e.updates,
+            "replay diverged at visit {i} (worker {}, block {b}): swept {n} updates, \
+             the run recorded {}",
+            e.worker,
+            e.updates
+        );
+        total += n;
+    }
+
+    let mut w = vec![0f32; train.d()];
+    for (b, (tw, _)) in tokens.iter().enumerate() {
+        w[setup.omega.col_part.block(b)].copy_from_slice(tw);
+    }
+    let mut alpha = vec![0f32; train.m()];
+    for (q, (a, _)) in stripes.iter().enumerate() {
+        alpha[setup.omega.row_part.block(q)].copy_from_slice(a);
+    }
+    Ok(Replayed { w, alpha, total_updates: total, visits: sched.entries.len() })
+}
+
+// ---- supervisor ----------------------------------------------------
+
+/// Events the listener/reader threads feed the single-threaded relay
+/// loop (which alone owns the write halves and all ring state).
+enum Ev {
+    /// A (re)connection identified itself as `worker`.
+    Conn { worker: usize, stream: UnixStream },
+    In { worker: usize, msg: Msg },
+    /// A frame from `worker` failed its checksum — answer with a Nack.
+    Corrupt { worker: usize },
+    /// The worker's socket reached EOF (exit, crash, or link fault).
+    Gone { worker: usize },
+}
+
+fn reader_thread(
+    stream: UnixStream,
+    tx: Sender<Ev>,
+    recv_total: Arc<AtomicU64>,
+    hello_timeout: Duration,
+) {
+    let mut conn = FrameConn::new(stream);
+    // The first frame must identify the worker; a stray connection
+    // that never says Hello is dropped without an event.
+    if conn.set_recv_timeout(Some(hello_timeout)).is_err() {
+        return;
+    }
+    let worker = match conn.recv() {
+        Ok(ConnIn::Msg(Msg::Hello { worker })) => worker as usize,
+        _ => return,
+    };
+    let write_half = match conn.try_clone_stream() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    if conn.set_recv_timeout(None).is_err() {
+        return;
+    }
+    if tx.send(Ev::Conn { worker, stream: write_half }).is_err() {
+        return;
+    }
+    let mut prev = conn.recv_bytes;
+    let mut corrupt_streak = 0u32;
+    loop {
+        let ev = match conn.recv() {
+            Ok(ConnIn::Msg(m)) => {
+                corrupt_streak = 0;
+                Ev::In { worker, msg: m }
+            }
+            Ok(ConnIn::Corrupt) => {
+                corrupt_streak += 1;
+                if corrupt_streak > 8 {
+                    // Framing is lost (e.g. garbled length prefix);
+                    // treat the link as dead rather than nack forever.
+                    Ev::Gone { worker }
+                } else {
+                    Ev::Corrupt { worker }
+                }
+            }
+            Ok(ConnIn::Eof) | Ok(ConnIn::TimedOut) | Err(_) => Ev::Gone { worker },
+        };
+        recv_total.fetch_add(conn.recv_bytes - prev, Ordering::Relaxed);
+        prev = conn.recv_bytes;
+        let gone = matches!(ev, Ev::Gone { .. });
+        if tx.send(ev).is_err() || gone {
+            return;
+        }
+    }
+}
+
+fn listener_thread(
+    listener: UnixListener,
+    tx: Sender<Ev>,
+    recv_total: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    hello_timeout: Duration,
+) {
+    let _ = listener.set_nonblocking(true);
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // The accepted socket may inherit the listener's
+                // non-blocking flag; readers want blocking reads.
+                let _ = stream.set_nonblocking(false);
+                let tx = tx.clone();
+                let rt = Arc::clone(&recv_total);
+                std::thread::spawn(move || reader_thread(stream, tx, rt, hello_timeout));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Authoritative copy of one circulating w block.
+struct TokenSt {
+    w: Vec<f32>,
+    acc: Vec<f32>,
+    hops: u64,
+    /// Worker currently holding the token; `None` = parked.
+    holder: Option<usize>,
+}
+
+/// Authoritative copy of one row stripe (state as of the owner's last
+/// *logged* sweep — the piggyback on every `Fwd` keeps this current).
+struct StripeSt {
+    alpha: Vec<f32>,
+    a_acc: Vec<f32>,
+    owner: usize,
+}
+
+/// Supervisor-side per-worker state. The write half of the connection
+/// lives here (readers run on their own threads); `conn` survives
+/// reconnects via `replace_stream`, keeping unacked frames and byte
+/// counters across link faults.
+struct Peer {
+    conn: Option<FrameConn>,
+    child: Option<Child>,
+    alive: bool,
+    ready: bool,
+    last_seen: Instant,
+    /// Set at EOF; a reconnect clears it, the death timeout expires it.
+    gone_since: Option<Instant>,
+    /// Next coordinator→worker sequence number.
+    next_seq: u64,
+    /// Next expected worker→coordinator sequence number.
+    expect: u64,
+    /// Completed (logged) visits — the worker-local fault clock, as
+    /// observed from the supervisor side.
+    visits: u64,
+}
+
+impl Peer {
+    fn send(&mut self, msg: &Msg) {
+        // Write errors are survivable: the death timeout or reconnect
+        // protocol picks the peer up, and tracked frames stay queued.
+        if let Some(c) = self.conn.as_mut() {
+            let _ = c.send(msg);
+        }
+    }
+
+    fn send_tracked(&mut self, msg: &Msg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if let Some(c) = self.conn.as_mut() {
+            let _ = c.send_tracked(seq, msg);
+        }
+    }
+}
+
+/// Uniformly random live worker, preferring one other than `from`
+/// (NOMAD's routing rule); `from` itself only as the sole survivor.
+fn pick_live(rng: &mut Xoshiro256, peers: &[Peer], from: usize) -> Option<usize> {
+    let p = peers.len();
+    for _ in 0..4 * p {
+        let c = rng.gen_index(p);
+        if c != from && peers[c].alive {
+            return Some(c);
+        }
+    }
+    let start = rng.gen_index(p);
+    let mut fallback = None;
+    for k in 0..p {
+        let c = (start + k) % p;
+        if peers[c].alive {
+            if c != from {
+                return Some(c);
+            }
+            fallback = Some(c);
+        }
+    }
+    fallback
+}
+
+fn deliver(peers: &mut [Peer], tokens: &mut [TokenSt], block: usize, to: usize) {
+    let t = &mut tokens[block];
+    t.holder = Some(to);
+    // The sequence number is part of the encoded frame, so it must be
+    // read before encoding (send_tracked consumes the same counter).
+    let msg = Msg::Deliver {
+        seq: peers[to].next_seq,
+        block_id: block as u32,
+        hops: t.hops,
+        w: t.w.clone(),
+        acc: t.acc.clone(),
+    };
+    peers[to].send_tracked(&msg);
+}
+
+/// Everything the run produced besides the authoritative state.
+struct RingOutcome {
+    updates: u64,
+    visits: u64,
+    dropped: u64,
+    failures: Vec<WorkerFailure>,
+    wait_s: f64,
+}
+
+struct Ring<'a> {
+    cfg: &'a TrainConfig,
+    fp: u64,
+    p: usize,
+    target: u64,
+    death_timeout: Duration,
+    rng: Xoshiro256,
+    sched: Option<SchedLog>,
+    out: RingOutcome,
+    stop: bool,
+}
+
+impl Ring<'_> {
+    /// The death protocol: reap the child, reassign stripes to a
+    /// survivor, re-deliver held tokens from the authoritative copies,
+    /// record the failure. Safe to call twice (second call no-ops).
+    fn death(
+        &mut self,
+        peers: &mut [Peer],
+        tokens: &mut [TokenSt],
+        stripes: &mut [StripeSt],
+        worker: usize,
+        reason: &str,
+    ) {
+        if !peers[worker].alive {
+            return;
+        }
+        peers[worker].alive = false;
+        if let Some(ch) = peers[worker].child.as_mut() {
+            let _ = ch.kill();
+            let _ = ch.wait();
+        }
+        let wv = peers[worker].visits as usize;
+        let (epoch, iter) = (wv / self.p, wv % self.p);
+        let owned: Vec<usize> =
+            (0..self.p).filter(|&q| stripes[q].owner == worker).collect();
+        self.out.failures.push(WorkerFailure {
+            worker,
+            epoch,
+            iter,
+            reason: reason.to_string(),
+            stripes_reassigned: owned.len(),
+        });
+        if let Some(s) = self.sched.as_mut() {
+            s.death(worker, epoch, iter, owned.len());
+        }
+        let survivors = peers.iter().filter(|pr| pr.alive).count();
+        if survivors == 0 {
+            // Nobody left to adopt or compute: end the run, parking
+            // everything from the authoritative copies.
+            self.stop = true;
+            for t in tokens.iter_mut() {
+                if t.holder == Some(worker) {
+                    t.holder = None;
+                }
+            }
+            return;
+        }
+        // One random survivor adopts every orphaned stripe (mirrors
+        // the in-thread ring's "first survivor through takes all").
+        if !owned.is_empty() {
+            if let Some(adopter) = pick_live(&mut self.rng, peers, worker) {
+                let smsgs: Vec<StripeMsg> = owned
+                    .iter()
+                    .map(|&q| StripeMsg {
+                        q: q as u32,
+                        alpha: stripes[q].alpha.clone(),
+                        a_acc: stripes[q].a_acc.clone(),
+                    })
+                    .collect();
+                for &q in &owned {
+                    stripes[q].owner = adopter;
+                }
+                let seq = peers[adopter].next_seq;
+                peers[adopter].send_tracked(&Msg::Adopt { seq, stripes: smsgs });
+            }
+        }
+        // Tokens the dead worker held re-enter the ring from the state
+        // of their last completed sweep (a mid-sweep visit never
+        // logged, so authoritative == last logged).
+        for b in 0..tokens.len() {
+            if tokens[b].holder != Some(worker) {
+                continue;
+            }
+            if self.stop {
+                tokens[b].holder = None;
+            } else if let Some(dst) = pick_live(&mut self.rng, peers, worker) {
+                deliver(peers, tokens, b, dst);
+            } else {
+                tokens[b].holder = None;
+            }
+        }
+    }
+
+    fn begin_drain(&mut self, peers: &mut [Peer]) {
+        self.stop = true;
+        for pr in peers.iter_mut() {
+            if pr.alive {
+                pr.send(&Msg::Shutdown);
+            }
+        }
+    }
+
+    /// Process one completed visit (a deduplicated `Fwd`).
+    #[allow(clippy::too_many_arguments)]
+    fn apply_fwd(
+        &mut self,
+        peers: &mut [Peer],
+        tokens: &mut [TokenSt],
+        stripes: &mut [StripeSt],
+        worker: usize,
+        block_id: u32,
+        updates: u64,
+        dropped: bool,
+        dw: &Delta,
+        dacc: &Delta,
+        smsgs: &[StripeMsg],
+    ) -> Result<()> {
+        let b = block_id as usize;
+        anyhow::ensure!(b < tokens.len(), "Fwd for unknown block {b}");
+        anyhow::ensure!(
+            tokens[b].holder == Some(worker),
+            "Fwd for block {b} from worker {worker}, but the token is at {:?} — \
+             sequencing invariant broken",
+            tokens[b].holder
+        );
+        dw.apply(&mut tokens[b].w).map_err(|e| anyhow::anyhow!("block {b} w delta: {e}"))?;
+        dacc.apply(&mut tokens[b].acc)
+            .map_err(|e| anyhow::anyhow!("block {b} acc delta: {e}"))?;
+        tokens[b].hops += 1;
+        let mut sids: Vec<u32> = Vec::with_capacity(smsgs.len());
+        for sm in smsgs {
+            let q = sm.q as usize;
+            anyhow::ensure!(q < stripes.len(), "Fwd carries unknown stripe {q}");
+            anyhow::ensure!(
+                stripes[q].alpha.len() == sm.alpha.len()
+                    && stripes[q].a_acc.len() == sm.a_acc.len(),
+                "stripe {q} state has wrong length on the wire"
+            );
+            stripes[q].alpha.copy_from_slice(&sm.alpha);
+            stripes[q].a_acc.copy_from_slice(&sm.a_acc);
+            sids.push(sm.q);
+        }
+        self.out.updates += updates;
+        if dropped {
+            self.out.dropped += 1;
+        }
+        peers[worker].visits += 1;
+        self.out.visits += 1;
+        if let Some(s) = self.sched.as_mut() {
+            s.visit(worker, b, updates, &sids);
+        }
+        if !self.stop && self.out.visits >= self.target {
+            self.begin_drain(peers);
+        }
+        if self.stop {
+            tokens[b].holder = None;
+        } else if let Some(dst) = pick_live(&mut self.rng, peers, worker) {
+            deliver(peers, tokens, b, dst);
+        } else {
+            tokens[b].holder = None;
+        }
+        Ok(())
+    }
+
+    /// Handle a (re)connection that identified itself.
+    fn on_conn(&mut self, peers: &mut [Peer], train: &Dataset, worker: usize, stream: UnixStream) {
+        let pr = &mut peers[worker];
+        if !pr.alive {
+            // Declared dead (e.g. a partition that outlived the
+            // timeout); its state is already reassigned — refuse.
+            return;
+        }
+        pr.last_seen = Instant::now();
+        pr.gone_since = None;
+        match pr.conn.as_mut() {
+            Some(c) => {
+                // Reconnect after a link fault: same counters, same
+                // unacked queue — resend verbatim, dedup on the far
+                // side keeps delta baselines exact.
+                c.replace_stream(stream);
+                let _ = c.resend_all();
+            }
+            None => pr.conn = Some(FrameConn::new(stream)),
+        }
+        if !pr.ready {
+            pr.send(&Msg::Start {
+                fingerprint: self.fp,
+                heartbeat_ms: self.cfg.cluster.heartbeat_ms,
+                cfg_toml: wire::emit_config(self.cfg),
+                ds_name: train.name.clone(),
+                d: train.d() as u64,
+                libsvm: libsvm::emit(train),
+            });
+        } else if self.stop {
+            pr.send(&Msg::Shutdown);
+        }
+    }
+
+    /// Expire death timers: a disconnected worker past its grace, or a
+    /// connected-but-silent (hung) worker, dies here.
+    fn check_timeouts(
+        &mut self,
+        peers: &mut [Peer],
+        tokens: &mut [TokenSt],
+        stripes: &mut [StripeSt],
+    ) {
+        for w in 0..peers.len() {
+            if !peers[w].alive {
+                continue;
+            }
+            if let Some(gs) = peers[w].gone_since {
+                if gs.elapsed() > self.death_timeout {
+                    self.death(peers, tokens, stripes, w, "connection lost");
+                }
+            } else if peers[w].conn.is_some()
+                && peers[w].last_seen.elapsed() > self.death_timeout
+            {
+                // Connected but silent past every heartbeat: hung.
+                // SIGKILL closes its socket; death() reaps it.
+                self.death(peers, tokens, stripes, w, "unresponsive (killed)");
+            }
+        }
+    }
+}
+
+fn resolve_worker_bin(cfg: &TrainConfig) -> Result<PathBuf> {
+    if !cfg.cluster.worker_bin.is_empty() {
+        return Ok(PathBuf::from(&cfg.cluster.worker_bin));
+    }
+    if let Some(v) = std::env::var_os("DSO_WORKER_BIN") {
+        if !v.is_empty() {
+            return Ok(PathBuf::from(v));
+        }
+    }
+    std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving worker binary (current_exe): {e}"))
+}
+
+fn ring_socket_path() -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("dso-ring-{}-{n}.sock", std::process::id()))
+}
+
+/// Train with multi-process DSO (`--mode dso-proc`): the asynchronous
+/// ring with one OS process per worker over Unix-domain sockets. The
+/// in-thread ring (`dso-async` + scalar mode) is the fast path and the
+/// differential oracle; this is the deployment-shaped path with real
+/// process death, reconnects, and a recorded schedule.
+pub fn train_dso_proc_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
+    anyhow::ensure!(
+        cfg.optim.step == StepKind::AdaGrad,
+        "async DSO supports AdaGrad (state travels with blocks); \
+         epoch-level η_t schedules need a global clock, which async lacks"
+    );
+    anyhow::ensure!(
+        cfg.cluster.updates_per_block == 0,
+        "async DSO sweeps whole blocks: the deterministic updates_per_block \
+         sampling stream is defined by the synchronous (epoch, worker, \
+         inner-iteration) schedule, which async lacks; set \
+         cluster.updates_per_block = 0 or use algorithm = \"dso\""
+    );
+    anyhow::ensure!(
+        cfg.cluster.heartbeat_ms > 0 && cfg.cluster.death_timeout_ms > cfg.cluster.heartbeat_ms,
+        "dso-proc needs heartbeat_ms > 0 and death_timeout_ms > heartbeat_ms \
+         (death detection is timeout-based)"
+    );
+    let setup = DsoSetup::new(cfg, train);
+    let p = setup.p;
+    let loss = setup.problem.loss;
+    let fp =
+        checkpoint::fingerprint(cfg, train.m(), train.d(), train.x.nnz(), p, setup.plan.simd());
+    let death_timeout = Duration::from_millis(cfg.cluster.death_timeout_ms);
+    let heartbeat = Duration::from_millis(cfg.cluster.heartbeat_ms);
+
+    let mut tokens: Vec<TokenSt> = (0..p)
+        .map(|b| {
+            let len = setup.omega.col_part.block(b).len();
+            TokenSt { w: vec![0f32; len], acc: vec![0f32; len], hops: 0, holder: None }
+        })
+        .collect();
+    let mut stripes: Vec<StripeSt> = (0..p)
+        .map(|q| StripeSt {
+            alpha: setup
+                .omega
+                .row_part
+                .block(q)
+                .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
+                .collect(),
+            a_acc: vec![0f32; setup.omega.row_part.block_len(q)],
+            owner: q,
+        })
+        .collect();
+
+    let sock_path = ring_socket_path();
+    let _ = std::fs::remove_file(&sock_path);
+    let listener = UnixListener::bind(&sock_path)
+        .map_err(|e| anyhow::anyhow!("binding ring socket {}: {e}", sock_path.display()))?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let stop_accept = Arc::new(AtomicBool::new(false));
+    let recv_total = Arc::new(AtomicU64::new(0));
+    let listener_h = {
+        let tx = tx.clone();
+        let rt = Arc::clone(&recv_total);
+        let stop = Arc::clone(&stop_accept);
+        std::thread::spawn(move || listener_thread(listener, tx, rt, stop, death_timeout))
+    };
+    drop(tx);
+
+    let bin = resolve_worker_bin(cfg)?;
+    let now = Instant::now();
+    let mut peers: Vec<Peer> = Vec::with_capacity(p);
+    let mut spawn_err = None;
+    for q in 0..p {
+        let child = Command::new(&bin)
+            .arg("__dso-worker")
+            .arg("--socket")
+            .arg(&sock_path)
+            .arg("--worker")
+            .arg(q.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn();
+        match child {
+            Ok(c) => peers.push(Peer {
+                conn: None,
+                child: Some(c),
+                alive: true,
+                ready: false,
+                last_seen: now,
+                gone_since: None,
+                next_seq: 0,
+                expect: 0,
+                visits: 0,
+            }),
+            Err(e) => {
+                spawn_err =
+                    Some(anyhow::anyhow!("spawning worker {q} ({}): {e}", bin.display()));
+                break;
+            }
+        }
+    }
+
+    let wall = Stopwatch::new();
+    let mut ring = Ring {
+        cfg,
+        fp,
+        p,
+        target: (cfg.optim.epochs as u64) * (p as u64) * (p as u64),
+        death_timeout,
+        rng: Xoshiro256::new(cfg.optim.seed ^ 0xD150_50C7),
+        sched: if cfg.cluster.sched_out.is_empty() {
+            None
+        } else {
+            Some(SchedLog::create(&cfg.cluster.sched_out, fp, p))
+        },
+        out: RingOutcome {
+            updates: 0,
+            visits: 0,
+            dropped: 0,
+            failures: Vec::new(),
+            wait_s: 0.0,
+        },
+        stop: false,
+    };
+
+    let outcome = match spawn_err {
+        Some(e) => Err(e),
+        None => run_ring(&mut ring, &mut peers, &mut tokens, &mut stripes, train, &rx, heartbeat),
+    };
+
+    // Teardown happens on every path, including errors: stop the
+    // listener, reap every child, remove the socket file. Sent-byte
+    // counters are harvested here, before the write halves close.
+    stop_accept.store(true, Ordering::Release);
+    let mut sent_total = 0u64;
+    for pr in peers.iter_mut() {
+        if let Some(ch) = pr.child.as_mut() {
+            let _ = ch.kill();
+            let _ = ch.wait();
+        }
+        if let Some(c) = pr.conn.take() {
+            sent_total += c.sent_bytes; // closing the write half EOFs the reader
+        }
+    }
+    let _ = listener_h.join();
+    let _ = std::fs::remove_file(&sock_path);
+    outcome?;
+    if let Some(s) = ring.sched.as_ref() {
+        s.commit()?;
+    }
+
+    // The drain invariants: every block parked exactly once, every row
+    // stripe accounted for exactly once — deaths notwithstanding.
+    let parked = tokens.iter().filter(|t| t.holder.is_none()).count();
+    anyhow::ensure!(parked == p, "lost blocks: {parked} of {p} parked after drain");
+    anyhow::ensure!(stripes.len() == p, "lost row stripes: {} of {p}", stripes.len());
+    let mut w = vec![0f32; train.d()];
+    for (b, t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t.w.len() == setup.omega.col_part.block_len(b),
+            "block {b} has wrong length after drain"
+        );
+        w[setup.omega.col_part.block(b)].copy_from_slice(&t.w);
+    }
+    let mut alpha = vec![0f32; train.m()];
+    for (q, s) in stripes.iter().enumerate() {
+        anyhow::ensure!(
+            s.alpha.len() == setup.omega.row_part.block_len(q),
+            "stripe {q} has wrong length after drain"
+        );
+        alpha[setup.omega.row_part.block(q)].copy_from_slice(&s.alpha);
+    }
+
+    let mut monitor = Monitor::observed(0, obs);
+    for f in &ring.out.failures {
+        monitor.record_failure(f);
+    }
+    monitor.set_wait_secs(ring.out.wait_s);
+    let comm_bytes = recv_total.load(Ordering::Relaxed) + sent_total;
+    let updates = ring.out.updates;
+    // Real transport: virtual time IS wall time (no simulated costing).
+    let wall_s = wall.elapsed_secs();
+    let final_primal = setup.problem.primal(train, &w);
+    let final_gap = final_primal - setup.problem.dual(train, &alpha);
+    monitor.record_saddle(
+        &setup.problem,
+        train,
+        test,
+        &w,
+        &alpha,
+        cfg.optim.epochs,
+        wall_s,
+        wall_s,
+        updates,
+        comm_bytes,
+    );
+    Ok(TrainResult {
+        algorithm: "dso-proc".into(),
+        w,
+        alpha,
+        history: monitor.history,
+        final_primal,
+        final_gap,
+        total_updates: updates,
+        total_virtual_s: wall_s,
+        total_wall_s: wall_s,
+        comm_bytes,
+        failures: ring.out.failures.clone(),
+    })
+}
+
+/// The supervisor's event loop: handshake, initial delivery, relay
+/// until the visit target, drain.
+fn run_ring(
+    ring: &mut Ring<'_>,
+    peers: &mut [Peer],
+    tokens: &mut [TokenSt],
+    stripes: &mut [StripeSt],
+    train: &Dataset,
+    rx: &Receiver<Ev>,
+    heartbeat: Duration,
+) -> Result<()> {
+    let p = ring.p;
+    let tick = (heartbeat / 2).max(Duration::from_millis(5));
+
+    // Phase 1: handshake — every worker connected and fingerprint-
+    // verified before the first token moves.
+    let start_deadline = Instant::now() + Duration::from_secs(10).max(4 * ring.death_timeout);
+    while peers.iter().any(|pr| !pr.ready) {
+        anyhow::ensure!(
+            Instant::now() < start_deadline,
+            "worker handshake timed out ({} of {p} ready)",
+            peers.iter().filter(|pr| pr.ready).count()
+        );
+        // A child that exits before Ready never joined the ring —
+        // nothing to degrade, so that is a hard startup error.
+        for (q, pr) in peers.iter_mut().enumerate() {
+            if pr.ready {
+                continue;
+            }
+            if let Some(ch) = pr.child.as_mut() {
+                if let Ok(Some(status)) = ch.try_wait() {
+                    anyhow::bail!("worker {q} exited during handshake ({status})");
+                }
+            }
+        }
+        match rx.recv_timeout(tick) {
+            Ok(Ev::Conn { worker, stream }) if worker < p => {
+                ring.on_conn(peers, train, worker, stream);
+            }
+            Ok(Ev::In { worker, msg }) if worker < p => {
+                peers[worker].last_seen = Instant::now();
+                peers[worker].gone_since = None;
+                if let Msg::Ready { worker: w2, fingerprint } = msg {
+                    anyhow::ensure!(w2 as usize == worker, "Ready with mismatched worker id");
+                    anyhow::ensure!(
+                        fingerprint == ring.fp,
+                        "worker {worker} rebuilt a different optimization (its fingerprint \
+                         {fingerprint:016x}, coordinator {:016x}); refusing to start the ring",
+                        ring.fp
+                    );
+                    peers[worker].ready = true;
+                }
+            }
+            Ok(Ev::Corrupt { worker }) if worker < p => {
+                let seq = peers[worker].expect;
+                peers[worker].send(&Msg::Nack { seq });
+            }
+            Ok(Ev::Gone { worker }) if worker < p => {
+                peers[worker].gone_since = Some(Instant::now());
+            }
+            Ok(_) => {}  // out-of-range worker id: stray connection
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("listener thread died during handshake")
+            }
+        }
+    }
+
+    // Phase 2: initial delivery — worker q starts on its own block.
+    for q in 0..p {
+        deliver(peers, tokens, q, q);
+    }
+
+    // Phase 3: relay until the target, then drain stragglers.
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        if ring.stop {
+            if tokens.iter().all(|t| t.holder.is_none()) {
+                break;
+            }
+            let dl =
+                *drain_deadline.get_or_insert_with(|| Instant::now() + 3 * ring.death_timeout);
+            anyhow::ensure!(
+                Instant::now() < dl,
+                "drain stalled: {} of {p} tokens still in flight",
+                tokens.iter().filter(|t| t.holder.is_some()).count()
+            );
+        }
+        let t0 = Instant::now();
+        match rx.recv_timeout(tick) {
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                ring.out.wait_s += t0.elapsed().as_secs_f64();
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("listener thread died mid-run")
+            }
+            Ok(Ev::Conn { worker, stream }) if worker < p => {
+                ring.on_conn(peers, train, worker, stream);
+            }
+            Ok(Ev::Corrupt { worker }) if worker < p => {
+                peers[worker].last_seen = Instant::now();
+                let seq = peers[worker].expect;
+                peers[worker].send(&Msg::Nack { seq });
+            }
+            Ok(Ev::Gone { worker }) if worker < p => {
+                let holds = tokens.iter().any(|t| t.holder == Some(worker));
+                if ring.stop && !holds {
+                    // Clean exit during drain: everything it held is
+                    // already parked — not a failure.
+                    peers[worker].alive = false;
+                    if let Some(ch) = peers[worker].child.as_mut() {
+                        let _ = ch.wait();
+                    }
+                } else {
+                    // Crash or link fault: grace period for reconnect.
+                    peers[worker].gone_since = Some(Instant::now());
+                }
+            }
+            Ok(Ev::In { worker, msg }) if worker < p => {
+                peers[worker].last_seen = Instant::now();
+                // A message proves the link is back: an out-of-order
+                // Gone from the pre-reconnect reader must not leave a
+                // stale death timer running on a live peer.
+                peers[worker].gone_since = None;
+                if !peers[worker].alive {
+                    // Stale frames from a worker already declared dead
+                    // (its state was re-routed from the authoritative
+                    // copies); applying them would double-count.
+                    continue;
+                }
+                match msg {
+                    Msg::Fwd { seq, updates, dropped, block_id, dw, dacc, stripes: sm, .. } => {
+                        if seq != peers[worker].expect {
+                            if seq < peers[worker].expect {
+                                peers[worker].send(&Msg::Ack { seq });
+                            }
+                            // A gap means a corrupt frame was skipped;
+                            // the Nack already requested a resend.
+                            continue;
+                        }
+                        peers[worker].expect += 1;
+                        peers[worker].send(&Msg::Ack { seq });
+                        ring.apply_fwd(
+                            peers, tokens, stripes, worker, block_id, updates, dropped, &dw,
+                            &dacc, &sm,
+                        )?;
+                    }
+                    Msg::Ack { seq } => {
+                        if let Some(c) = peers[worker].conn.as_mut() {
+                            c.ack(seq);
+                        }
+                    }
+                    Msg::Nack { seq } => {
+                        if let Some(c) = peers[worker].conn.as_mut() {
+                            let _ = c.resend_from(seq);
+                        }
+                    }
+                    Msg::Heartbeat => {}
+                    Msg::Bye => {
+                        ring.death(peers, tokens, stripes, worker, "injected death");
+                    }
+                    Msg::KillMe => {
+                        // The worker reached a kill@ coordinate on its
+                        // own visit clock; the SIGKILL itself comes
+                        // from here (death() delivers it).
+                        ring.death(peers, tokens, stripes, worker, "injected kill (SIGKILL)");
+                    }
+                    _ => {}
+                }
+            }
+            Ok(_) => {}
+        }
+        ring.check_timeouts(peers, tokens, stripes);
+        if !ring.stop && peers.iter().all(|pr| !pr.alive) {
+            ring.stop = true;
+        }
+    }
+    Ok(())
+}
+
+// ---- worker process ------------------------------------------------
+
+/// Entry point for the hidden `__dso-worker` subcommand: dial the
+/// supervisor, rebuild the setup from the `Start` payload, then sweep
+/// tokens until `Shutdown` (or an injected fault ends us first).
+/// Everything a worker knows arrives over the socket — it reads no
+/// files and samples no RNG, which is what keeps a visit a pure
+/// function of (token, stripes) and the recorded schedule replayable.
+pub fn worker_main(socket: &Path, worker: usize) -> Result<()> {
+    let dial_deadline = Duration::from_secs(10);
+    let stream = connect_with_backoff(socket, dial_deadline)
+        .map_err(|e| anyhow::anyhow!("worker {worker}: dialing {}: {e}", socket.display()))?;
+    let mut conn = FrameConn::new(stream);
+    conn.send(&Msg::Hello { worker: worker as u32 })?;
+
+    // Await Start (bounded by the supervisor's handshake deadline on
+    // the other side; locally, by EOF if the supervisor aborts).
+    let start = loop {
+        match conn.recv()? {
+            ConnIn::Msg(m @ Msg::Start { .. }) => break m,
+            ConnIn::Msg(_) | ConnIn::TimedOut => {}
+            ConnIn::Corrupt => conn.send(&Msg::Nack { seq: 0 })?,
+            ConnIn::Eof => anyhow::bail!("worker {worker}: supervisor hung up before Start"),
+        }
+    };
+    let Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm: ls } = start else {
+        unreachable!("loop above only breaks on Start");
+    };
+    let cfg = TrainConfig::from_toml(&cfg_toml).map_err(anyhow::Error::msg)?;
+    let train = libsvm::parse(&ds_name, &ls, d as usize)?;
+    let setup = DsoSetup::new(&cfg, &train);
+    anyhow::ensure!(worker < setup.p, "worker id {worker} out of range (p = {})", setup.p);
+    let mut fpw = checkpoint::fingerprint(
+        &cfg,
+        train.m(),
+        train.d(),
+        train.x.nnz(),
+        setup.p,
+        setup.plan.simd(),
+    );
+    // Chaos hook for the refusal test: skew this worker's fingerprint
+    // so the supervisor must reject the handshake.
+    if std::env::var_os("DSO_PROC_FINGERPRINT_SKEW").is_some() {
+        fpw ^= 0xBAD;
+    }
+    conn.send(&Msg::Ready { worker: worker as u32, fingerprint: fpw })?;
+    let _ = fingerprint; // the supervisor, not the worker, arbitrates
+
+    let rule = StepRule::AdaGrad(cfg.optim.eta0);
+    let loss = setup.problem.loss;
+    let p = setup.p as u64;
+    // Own row stripe, derived deterministically — identical to the
+    // supervisor's authoritative initialization.
+    struct WStripe {
+        q: usize,
+        alpha: Vec<f32>,
+        a_acc: Vec<f32>,
+    }
+    let mut stripes = vec![WStripe {
+        q: worker,
+        alpha: setup
+            .omega
+            .row_part
+            .block(worker)
+            .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
+            .collect(),
+        a_acc: vec![0f32; setup.omega.row_part.block_len(worker)],
+    }];
+    let mut scratch: Vec<u32> = Vec::new();
+    let heartbeat = Duration::from_millis(heartbeat_ms.max(1));
+    conn.set_recv_timeout(Some(heartbeat))?;
+    let mut v: u64 = 0; // worker-local visit clock (fault coordinates)
+    let mut expect: u64 = 0; // next expected supervisor seq
+    let mut my_seq: u64 = 0; // next Fwd seq
+    let mut corrupt_streak = 0u32;
+    loop {
+        let m = match conn.recv() {
+            Ok(ConnIn::TimedOut) => {
+                let _ = conn.send(&Msg::Heartbeat);
+                continue;
+            }
+            Ok(ConnIn::Eof) => return Ok(()), // run over (or supervisor died)
+            Ok(ConnIn::Corrupt) => {
+                corrupt_streak += 1;
+                anyhow::ensure!(
+                    corrupt_streak <= 8,
+                    "worker {worker}: link lost framing (persistent corruption)"
+                );
+                let _ = conn.send(&Msg::Nack { seq: expect });
+                continue;
+            }
+            Ok(ConnIn::Msg(m)) => {
+                corrupt_streak = 0;
+                m
+            }
+            Err(e) => anyhow::bail!("worker {worker}: socket error: {e}"),
+        };
+        match m {
+            Msg::Shutdown => return Ok(()),
+            Msg::Ack { seq } => conn.ack(seq),
+            Msg::Nack { seq } => {
+                let _ = conn.resend_from(seq);
+            }
+            Msg::Adopt { seq, stripes: smsgs } => {
+                if seq != expect {
+                    if seq < expect {
+                        let _ = conn.send(&Msg::Ack { seq });
+                    } else {
+                        let _ = conn.send(&Msg::Nack { seq: expect });
+                    }
+                    continue;
+                }
+                expect += 1;
+                let _ = conn.send(&Msg::Ack { seq });
+                for sm in smsgs {
+                    stripes.push(WStripe {
+                        q: sm.q as usize,
+                        alpha: sm.alpha,
+                        a_acc: sm.a_acc,
+                    });
+                }
+            }
+            Msg::Deliver { seq, block_id, hops: _, w, acc } => {
+                if seq != expect {
+                    if seq < expect {
+                        let _ = conn.send(&Msg::Ack { seq });
+                    } else {
+                        let _ = conn.send(&Msg::Nack { seq: expect });
+                    }
+                    continue;
+                }
+                expect += 1;
+                let _ = conn.send(&Msg::Ack { seq });
+                // Injected faults fire at this worker-local visit
+                // coordinate, before the sweep — a killed visit is
+                // never logged.
+                let (fe, fi) = ((v / p) as usize, (v % p) as usize);
+                match setup.faults.worker_fault(worker, fe, fi) {
+                    Some(WorkerFault::Kill) => {
+                        // Ask the parent for a real SIGKILL (keeps the
+                        // fault clock deterministic — a self-abort
+                        // could race frames still in flight).
+                        let _ = conn.send(&Msg::KillMe);
+                        loop {
+                            std::thread::sleep(Duration::from_secs(3600));
+                        }
+                    }
+                    Some(WorkerFault::Die) => {
+                        let _ = conn.send(&Msg::Bye);
+                        return Ok(());
+                    }
+                    Some(WorkerFault::Partition { millis }) => {
+                        // Link fault: sever, wait, reconnect with
+                        // backoff, re-identify, resend unacked Fwds.
+                        if let Ok(s) = conn.try_clone_stream() {
+                            let _ = s.shutdown(std::net::Shutdown::Both);
+                        }
+                        std::thread::sleep(Duration::from_millis(millis));
+                        let s = connect_with_backoff(socket, dial_deadline).map_err(|e| {
+                            anyhow::anyhow!("worker {worker}: reconnect failed: {e}")
+                        })?;
+                        conn.replace_stream(s);
+                        conn.set_recv_timeout(Some(heartbeat))?;
+                        conn.send(&Msg::Hello { worker: worker as u32 })?;
+                        let _ = conn.resend_all();
+                    }
+                    Some(WorkerFault::Stall { millis }) => {
+                        std::thread::sleep(Duration::from_millis(millis));
+                    }
+                    None => {}
+                }
+                // Sweep on a working copy; the delivered arrays stay
+                // pristine as the delta baseline.
+                let mut tw = w.clone();
+                let mut tacc = acc.clone();
+                let mut n = 0u64;
+                for s in stripes.iter_mut() {
+                    n += sweep_stripe_block(
+                        &setup,
+                        rule,
+                        s.q,
+                        block_id as usize,
+                        &mut tw,
+                        &mut tacc,
+                        &mut s.alpha,
+                        &mut s.a_acc,
+                        &mut scratch,
+                    ) as u64;
+                }
+                let visit = v;
+                v += 1;
+                let mut dropped = false;
+                match setup.faults.message_fault(worker, fe, fi) {
+                    Some(MsgFault::Delay { millis }) => {
+                        std::thread::sleep(Duration::from_millis(millis));
+                    }
+                    Some(MsgFault::Drop) => dropped = true,
+                    None => {}
+                }
+                let fwd = Msg::Fwd {
+                    seq: my_seq,
+                    visit,
+                    updates: n,
+                    dropped,
+                    block_id,
+                    dw: Delta::encode(&w, &tw),
+                    dacc: Delta::encode(&acc, &tacc),
+                    stripes: stripes
+                        .iter()
+                        .map(|s| StripeMsg {
+                            q: s.q as u32,
+                            alpha: s.alpha.clone(),
+                            a_acc: s.a_acc.clone(),
+                        })
+                        .collect(),
+                };
+                let _ = conn.send_tracked(my_seq, &fwd);
+                my_seq += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_log_round_trips() {
+        let mut log = SchedLog::create("/dev/null", 0xabcd_ef01_2345_6789, 4);
+        log.visit(2, 1, 117, &[2]);
+        log.visit(0, 3, 94, &[0, 2]);
+        log.death(1, 0, 2, 1);
+        log.visit(3, 1, 88, &[3]);
+        let sched = Schedule::parse(&log.buf).unwrap();
+        assert_eq!(sched.fingerprint, 0xabcd_ef01_2345_6789);
+        assert_eq!(sched.p, 4);
+        assert_eq!(sched.deaths, 1);
+        assert_eq!(sched.entries.len(), 3);
+        assert_eq!(
+            sched.entries[1],
+            ScheduleEntry { worker: 0, block: 3, updates: 94, stripes: vec![0, 2] }
+        );
+    }
+
+    #[test]
+    fn schedule_parse_rejects_garbage() {
+        assert!(Schedule::parse("nonsense\n").is_err());
+        let ok = "dso-schedule v1\nfingerprint 00ff\np 2\nvisit 0 1 10 0\n";
+        assert!(Schedule::parse(ok).is_ok());
+        // Missing header fields.
+        assert!(Schedule::parse("dso-schedule v1\np 2\n").is_err());
+        assert!(Schedule::parse("dso-schedule v1\nfingerprint 00ff\n").is_err());
+        // Malformed records.
+        assert!(Schedule::parse("dso-schedule v1\nfingerprint 0\np 2\nvisit 0 1\n").is_err());
+        assert!(Schedule::parse("dso-schedule v1\nfingerprint 0\np 2\nvisit 0 1 10\n").is_err());
+        assert!(Schedule::parse("dso-schedule v1\nfingerprint 0\np 2\nzap 1\n").is_err());
+        assert!(Schedule::parse("dso-schedule v1\nfingerprint zz\np 2\n").is_err());
+    }
+
+    #[test]
+    fn worker_bin_resolution_prefers_config() {
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.worker_bin = "/opt/custom/dso".into();
+        assert_eq!(resolve_worker_bin(&cfg).unwrap(), PathBuf::from("/opt/custom/dso"));
+        // With no override, resolution lands on *some* executable path
+        // (current_exe in the test harness).
+        cfg.cluster.worker_bin.clear();
+        assert!(resolve_worker_bin(&cfg).is_ok());
+    }
+
+    #[test]
+    fn ring_socket_paths_are_unique() {
+        let a = ring_socket_path();
+        let b = ring_socket_path();
+        assert_ne!(a, b);
+        assert!(a.to_string_lossy().contains("dso-ring-"));
+    }
+}

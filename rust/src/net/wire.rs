@@ -1,0 +1,827 @@
+//! Wire format for the multi-process DSO transport (DESIGN.md
+//! §Transport).
+//!
+//! Framing: every message travels as
+//! `[u32 payload_len LE][u64 FNV-1a(payload) LE][payload]` — length-
+//! prefixed so the stream stays TCP-ready (no datagram boundaries are
+//! assumed even though the local transport is a Unix-domain socket),
+//! and checksummed so a torn or bit-flipped frame is *rejected* at the
+//! receiver and repaired by the Nack → resend protocol in
+//! [`super::transport`] instead of silently perturbing the saddle
+//! state.
+//!
+//! Payloads use a tagged binary codec with explicit little-endian
+//! byte order and floats carried as IEEE-754 bit patterns, so the
+//! exact `f32` state of w-stripe tokens crosses the process boundary
+//! bit-for-bit — the recorded-schedule replay (Lemma 2 pinning in
+//! [`super::supervisor`]) depends on this. Token arrays are
+//! delta-encoded against the copy both ends already hold ([`Delta`]):
+//! a `Deliver` ships the full block, and the `Fwd` that answers it
+//! sends only the entries the sweep changed when that is smaller.
+//!
+//! The worker bootstrap rides the same codec: [`emit_config`] writes
+//! the subset of [`TrainConfig`] a worker process needs to rebuild
+//! `DsoSetup` deterministically, and the dataset ships as libsvm text
+//! (`data::libsvm` round-trips labels and values exactly).
+
+use crate::config::TrainConfig;
+use std::io::{self, Read, Write};
+
+/// Upper bound on a frame payload. A length prefix above this is
+/// treated as corruption — it protects the receiver from unbounded
+/// allocation on a garbled header.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Frame header size: u32 length + u64 checksum.
+pub const FRAME_HEADER: usize = 12;
+
+/// 64-bit FNV-1a over the payload — the same hash family the
+/// checkpoint fingerprint uses; cheap, dependency-free, and plenty
+/// for torn-frame detection (cryptographic integrity is not the
+/// goal on a local socket).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Outcome of reading one frame off a stream.
+#[derive(Debug)]
+pub enum FrameIn {
+    /// A complete frame whose checksum verified.
+    Frame(Vec<u8>),
+    /// A complete frame whose checksum (or length prefix) did not
+    /// verify; `wire_bytes` is what was consumed. The connection
+    /// layer answers with a Nack so the sender retransmits.
+    Corrupt { wire_bytes: usize },
+    /// Clean end of stream (peer exited or closed the socket) — also
+    /// returned for a frame torn mid-transfer by a dying peer.
+    Eof,
+    /// No frame started within the socket's read timeout.
+    TimedOut,
+}
+
+enum Fill {
+    Full,
+    Eof,
+    TimedOut,
+}
+
+/// Read exactly `buf.len()` bytes. `at_start` marks a read at a frame
+/// boundary: only there does a timeout surface as `TimedOut` — once a
+/// frame has begun, the sender has already written the rest, so we
+/// keep waiting for it (a peer that dies mid-frame closes the socket
+/// and surfaces as `Eof` instead).
+fn fill(r: &mut impl Read, buf: &mut [u8], at_start: bool) -> io::Result<Fill> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Ok(Fill::Eof),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                if at_start && got == 0 {
+                    return Ok(Fill::TimedOut);
+                }
+                // Mid-frame timeout: the remainder is in flight.
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+fn u32_le(b: &[u8]) -> u32 {
+    let mut x = [0u8; 4];
+    x.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(x)
+}
+
+fn u64_le(b: &[u8]) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(x)
+}
+
+/// Write one frame (header + payload) and flush. Returns the bytes
+/// put on the wire.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<usize> {
+    let mut hdr = [0u8; FRAME_HEADER];
+    hdr[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[4..].copy_from_slice(&fnv1a(payload).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(FRAME_HEADER + payload.len())
+}
+
+/// Read one frame. Timeouts are only reported at a frame boundary;
+/// see [`fill`].
+pub fn read_frame(r: &mut impl Read) -> io::Result<FrameIn> {
+    let mut hdr = [0u8; FRAME_HEADER];
+    match fill(r, &mut hdr, true)? {
+        Fill::Eof => return Ok(FrameIn::Eof),
+        Fill::TimedOut => return Ok(FrameIn::TimedOut),
+        Fill::Full => {}
+    }
+    let len = u32_le(&hdr) as usize;
+    let want = u64_le(&hdr[4..]);
+    if len > MAX_FRAME {
+        // Garbled length: the stream has lost framing. Report it as
+        // corruption without consuming further — the connection layer
+        // treats repeated corruption as a dead link.
+        return Ok(FrameIn::Corrupt { wire_bytes: FRAME_HEADER });
+    }
+    let mut payload = vec![0u8; len];
+    match fill(r, &mut payload, false)? {
+        Fill::Full => {}
+        _ => return Ok(FrameIn::Eof),
+    }
+    if fnv1a(&payload) != want {
+        return Ok(FrameIn::Corrupt { wire_bytes: FRAME_HEADER + len });
+    }
+    Ok(FrameIn::Frame(payload))
+}
+
+/// Decode failure: checksum verified but the payload does not parse
+/// as a known message — protocol skew or corruption the checksum
+/// missed. The connection layer handles it like a corrupt frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeErr(pub String);
+
+impl std::fmt::Display for DecodeErr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeErr {}
+
+// ---- payload codec -------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(b: &mut Vec<u8>, v: bool) {
+    b.push(v as u8);
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    for &x in xs {
+        put_f32(b, x);
+    }
+}
+
+/// Bounds-checked payload reader.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeErr> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeErr(format!(
+                "truncated payload: wanted {n} at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeErr> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeErr> {
+        Ok(u32_le(self.take(4)?))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeErr> {
+        Ok(u64_le(self.take(8)?))
+    }
+
+    fn bool(&mut self) -> Result<bool, DecodeErr> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(DecodeErr(format!("bad bool byte {v}"))),
+        }
+    }
+
+    fn f32(&mut self) -> Result<f32, DecodeErr> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn str(&mut self) -> Result<String, DecodeErr> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| DecodeErr(format!("bad utf8: {e}")))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, DecodeErr> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 4 {
+            return Err(DecodeErr(format!("f32 vector length {n} out of range")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<(), DecodeErr> {
+        if self.pos != self.buf.len() {
+            return Err(DecodeErr(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- delta encoding ------------------------------------------------
+
+/// A delta-encoded `f32` array: either the full vector or the sparse
+/// set of entries whose *bit pattern* changed relative to a baseline
+/// both ends hold. Comparison is on bits, not values, so `-0.0` vs
+/// `0.0` and NaN payloads survive the round trip and replay stays
+/// bit-exact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Delta {
+    Full(Vec<f32>),
+    Sparse { len: u32, changes: Vec<(u32, f32)> },
+}
+
+impl Delta {
+    /// Encode `new` against `base`, picking whichever form is smaller
+    /// on the wire (sparse entries cost 8 bytes vs 4 for a dense one).
+    pub fn encode(base: &[f32], new: &[f32]) -> Delta {
+        if base.len() != new.len() {
+            return Delta::Full(new.to_vec());
+        }
+        let changes: Vec<(u32, f32)> = new
+            .iter()
+            .zip(base.iter())
+            .enumerate()
+            .filter(|(_, (n, b))| n.to_bits() != b.to_bits())
+            .map(|(i, (n, _))| (i as u32, *n))
+            .collect();
+        if 8 * changes.len() < 4 * new.len() {
+            Delta::Sparse { len: new.len() as u32, changes }
+        } else {
+            Delta::Full(new.to_vec())
+        }
+    }
+
+    /// Apply onto the baseline in place.
+    pub fn apply(&self, base: &mut Vec<f32>) -> Result<(), DecodeErr> {
+        match self {
+            Delta::Full(v) => {
+                base.clear();
+                base.extend_from_slice(v);
+                Ok(())
+            }
+            Delta::Sparse { len, changes } => {
+                if base.len() != *len as usize {
+                    return Err(DecodeErr(format!(
+                        "sparse delta for length {len} applied to baseline of {}",
+                        base.len()
+                    )));
+                }
+                for &(i, v) in changes {
+                    let i = i as usize;
+                    if i >= base.len() {
+                        return Err(DecodeErr(format!("delta index {i} out of range")));
+                    }
+                    base[i] = v;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn put(&self, b: &mut Vec<u8>) {
+        match self {
+            Delta::Full(v) => {
+                put_u8(b, 0);
+                put_f32s(b, v);
+            }
+            Delta::Sparse { len, changes } => {
+                put_u8(b, 1);
+                put_u32(b, *len);
+                put_u32(b, changes.len() as u32);
+                for &(i, v) in changes {
+                    put_u32(b, i);
+                    put_f32(b, v);
+                }
+            }
+        }
+    }
+
+    fn get(rd: &mut Rd<'_>) -> Result<Delta, DecodeErr> {
+        match rd.u8()? {
+            0 => Ok(Delta::Full(rd.f32s()?)),
+            1 => {
+                let len = rd.u32()?;
+                let n = rd.u32()? as usize;
+                if n > MAX_FRAME / 8 {
+                    return Err(DecodeErr(format!("delta change count {n} out of range")));
+                }
+                let mut changes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let i = rd.u32()?;
+                    let v = rd.f32()?;
+                    changes.push((i, v));
+                }
+                Ok(Delta::Sparse { len, changes })
+            }
+            t => Err(DecodeErr(format!("unknown delta tag {t}"))),
+        }
+    }
+}
+
+// ---- messages ------------------------------------------------------
+
+/// One row stripe's state on the wire (α block + its AdaGrad
+/// accumulator, keyed by home partition index `q`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StripeMsg {
+    pub q: u32,
+    pub alpha: Vec<f32>,
+    pub a_acc: Vec<f32>,
+}
+
+impl StripeMsg {
+    fn put(&self, b: &mut Vec<u8>) {
+        put_u32(b, self.q);
+        put_f32s(b, &self.alpha);
+        put_f32s(b, &self.a_acc);
+    }
+
+    fn get(rd: &mut Rd<'_>) -> Result<StripeMsg, DecodeErr> {
+        Ok(StripeMsg { q: rd.u32()?, alpha: rd.f32s()?, a_acc: rd.f32s()? })
+    }
+}
+
+fn put_stripes(b: &mut Vec<u8>, stripes: &[StripeMsg]) {
+    put_u32(b, stripes.len() as u32);
+    for s in stripes {
+        s.put(b);
+    }
+}
+
+fn get_stripes(rd: &mut Rd<'_>) -> Result<Vec<StripeMsg>, DecodeErr> {
+    let n = rd.u32()? as usize;
+    if n > 1 << 20 {
+        return Err(DecodeErr(format!("stripe count {n} out of range")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(StripeMsg::get(rd)?);
+    }
+    Ok(out)
+}
+
+const T_HELLO: u8 = 1;
+const T_START: u8 = 2;
+const T_READY: u8 = 3;
+const T_DELIVER: u8 = 4;
+const T_ADOPT: u8 = 5;
+const T_FWD: u8 = 6;
+const T_ACK: u8 = 7;
+const T_NACK: u8 = 8;
+const T_HEARTBEAT: u8 = 9;
+const T_BYE: u8 = 10;
+const T_KILLME: u8 = 11;
+const T_SHUTDOWN: u8 = 12;
+
+/// Protocol messages. Coordinator → worker: `Start`, `Deliver`,
+/// `Adopt`, `Ack` (of `Fwd` seqs), `Nack`, `Shutdown`. Worker →
+/// coordinator: `Hello`, `Ready`, `Fwd`, `Ack` (of coordinator seqs),
+/// `Nack`, `Heartbeat`, `Bye` (graceful injected death), `KillMe`
+/// (requests a real SIGKILL at a `kill@` fault coordinate, so the
+/// worker-local fault clock stays deterministic while the signal
+/// itself comes from the supervising parent).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// First frame on every (re)connection.
+    Hello { worker: u32 },
+    /// Bootstrap: everything a worker needs to rebuild `DsoSetup`
+    /// deterministically, plus the run fingerprint it must echo.
+    Start {
+        fingerprint: u64,
+        heartbeat_ms: u64,
+        cfg_toml: String,
+        ds_name: String,
+        d: u64,
+        libsvm: String,
+    },
+    /// Handshake reply: the worker's independently recomputed
+    /// fingerprint. A mismatch aborts the run (foreign worker).
+    Ready { worker: u32, fingerprint: u64 },
+    /// A w-block token delivered for one visit (always full state —
+    /// the delivered copy is the baseline the `Fwd` delta refers to).
+    Deliver { seq: u64, block_id: u32, hops: u64, w: Vec<f32>, acc: Vec<f32> },
+    /// Orphaned stripes reassigned to this worker after a peer death.
+    Adopt { seq: u64, stripes: Vec<StripeMsg> },
+    /// A completed visit: the token comes back delta-encoded against
+    /// the delivered baseline, with the sender's updated stripe state
+    /// piggybacked so the coordinator's authoritative copy is always
+    /// exactly "state as of the last completed sweep".
+    Fwd {
+        seq: u64,
+        visit: u64,
+        updates: u64,
+        dropped: bool,
+        block_id: u32,
+        dw: Delta,
+        dacc: Delta,
+        stripes: Vec<StripeMsg>,
+    },
+    Ack { seq: u64 },
+    /// Request retransmission of every unacked frame from `seq` on.
+    Nack { seq: u64 },
+    Heartbeat,
+    Bye,
+    KillMe,
+    Shutdown,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Msg::Hello { worker } => {
+                put_u8(&mut b, T_HELLO);
+                put_u32(&mut b, *worker);
+            }
+            Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm } => {
+                put_u8(&mut b, T_START);
+                put_u64(&mut b, *fingerprint);
+                put_u64(&mut b, *heartbeat_ms);
+                put_str(&mut b, cfg_toml);
+                put_str(&mut b, ds_name);
+                put_u64(&mut b, *d);
+                put_str(&mut b, libsvm);
+            }
+            Msg::Ready { worker, fingerprint } => {
+                put_u8(&mut b, T_READY);
+                put_u32(&mut b, *worker);
+                put_u64(&mut b, *fingerprint);
+            }
+            Msg::Deliver { seq, block_id, hops, w, acc } => {
+                put_u8(&mut b, T_DELIVER);
+                put_u64(&mut b, *seq);
+                put_u32(&mut b, *block_id);
+                put_u64(&mut b, *hops);
+                put_f32s(&mut b, w);
+                put_f32s(&mut b, acc);
+            }
+            Msg::Adopt { seq, stripes } => {
+                put_u8(&mut b, T_ADOPT);
+                put_u64(&mut b, *seq);
+                put_stripes(&mut b, stripes);
+            }
+            Msg::Fwd { seq, visit, updates, dropped, block_id, dw, dacc, stripes } => {
+                put_u8(&mut b, T_FWD);
+                put_u64(&mut b, *seq);
+                put_u64(&mut b, *visit);
+                put_u64(&mut b, *updates);
+                put_bool(&mut b, *dropped);
+                put_u32(&mut b, *block_id);
+                dw.put(&mut b);
+                dacc.put(&mut b);
+                put_stripes(&mut b, stripes);
+            }
+            Msg::Ack { seq } => {
+                put_u8(&mut b, T_ACK);
+                put_u64(&mut b, *seq);
+            }
+            Msg::Nack { seq } => {
+                put_u8(&mut b, T_NACK);
+                put_u64(&mut b, *seq);
+            }
+            Msg::Heartbeat => put_u8(&mut b, T_HEARTBEAT),
+            Msg::Bye => put_u8(&mut b, T_BYE),
+            Msg::KillMe => put_u8(&mut b, T_KILLME),
+            Msg::Shutdown => put_u8(&mut b, T_SHUTDOWN),
+        }
+        b
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Msg, DecodeErr> {
+        let mut rd = Rd::new(payload);
+        let msg = match rd.u8()? {
+            T_HELLO => Msg::Hello { worker: rd.u32()? },
+            T_START => Msg::Start {
+                fingerprint: rd.u64()?,
+                heartbeat_ms: rd.u64()?,
+                cfg_toml: rd.str()?,
+                ds_name: rd.str()?,
+                d: rd.u64()?,
+                libsvm: rd.str()?,
+            },
+            T_READY => Msg::Ready { worker: rd.u32()?, fingerprint: rd.u64()? },
+            T_DELIVER => Msg::Deliver {
+                seq: rd.u64()?,
+                block_id: rd.u32()?,
+                hops: rd.u64()?,
+                w: rd.f32s()?,
+                acc: rd.f32s()?,
+            },
+            T_ADOPT => Msg::Adopt { seq: rd.u64()?, stripes: get_stripes(&mut rd)? },
+            T_FWD => Msg::Fwd {
+                seq: rd.u64()?,
+                visit: rd.u64()?,
+                updates: rd.u64()?,
+                dropped: rd.bool()?,
+                block_id: rd.u32()?,
+                dw: Delta::get(&mut rd)?,
+                dacc: Delta::get(&mut rd)?,
+                stripes: get_stripes(&mut rd)?,
+            },
+            T_ACK => Msg::Ack { seq: rd.u64()? },
+            T_NACK => Msg::Nack { seq: rd.u64()? },
+            T_HEARTBEAT => Msg::Heartbeat,
+            T_BYE => Msg::Bye,
+            T_KILLME => Msg::KillMe,
+            T_SHUTDOWN => Msg::Shutdown,
+            t => return Err(DecodeErr(format!("unknown message tag {t}"))),
+        };
+        rd.done()?;
+        Ok(msg)
+    }
+}
+
+// ---- config shipping -----------------------------------------------
+
+fn toml_quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Emit the subset of [`TrainConfig`] a worker process needs to
+/// rebuild `DsoSetup` (model, optimizer, cluster) as TOML that
+/// `TrainConfig::from_toml` round-trips. `f64` values use the `{:?}`
+/// shortest-round-trip form, so the worker sees bit-identical
+/// hyperparameters and the fingerprint handshake can be strict.
+pub fn emit_config(cfg: &TrainConfig) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "[model]");
+    let _ = writeln!(s, "loss = {}", toml_quote(cfg.model.loss.name()));
+    let _ = writeln!(s, "regularizer = {}", toml_quote(cfg.model.reg.name()));
+    let _ = writeln!(s, "lambda = {:?}", cfg.model.lambda);
+    let _ = writeln!(s, "[optim]");
+    let _ = writeln!(s, "algorithm = {}", toml_quote(cfg.optim.algorithm.name()));
+    let _ = writeln!(s, "step = {}", toml_quote(cfg.optim.step.name()));
+    let _ = writeln!(s, "eta0 = {:?}", cfg.optim.eta0);
+    let _ = writeln!(s, "epochs = {}", cfg.optim.epochs);
+    let _ = writeln!(s, "dcd_init = {}", cfg.optim.dcd_init);
+    let _ = writeln!(s, "seed = {}", cfg.optim.seed);
+    let _ = writeln!(s, "[cluster]");
+    let _ = writeln!(s, "machines = {}", cfg.cluster.machines);
+    let _ = writeln!(s, "cores = {}", cfg.cluster.cores);
+    let _ = writeln!(s, "latency_us = {:?}", cfg.cluster.latency_us);
+    let _ = writeln!(s, "bandwidth_mbps = {:?}", cfg.cluster.bandwidth_mbps);
+    let _ = writeln!(s, "mode = {}", toml_quote(cfg.cluster.mode.name()));
+    let _ = writeln!(s, "updates_per_block = {}", cfg.cluster.updates_per_block);
+    let _ = writeln!(s, "tile_iters = {}", cfg.cluster.tile_iters);
+    let _ = writeln!(s, "partition = {}", toml_quote(cfg.cluster.partition.name()));
+    let _ = writeln!(s, "simd = {}", toml_quote(cfg.cluster.simd.name()));
+    let _ = writeln!(s, "heartbeat_ms = {}", cfg.cluster.heartbeat_ms);
+    let _ = writeln!(s, "death_timeout_ms = {}", cfg.cluster.death_timeout_ms);
+    if !cfg.cluster.faults.is_empty() {
+        let _ = writeln!(s, "faults = {}", toml_quote(&cfg.cluster.faults));
+    }
+    let _ = writeln!(s, "[monitor]");
+    let _ = writeln!(s, "every = 0");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips() {
+        let payload = b"hello frame".to_vec();
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, &payload).unwrap();
+        assert_eq!(n, buf.len());
+        let mut rd = Cursor::new(buf);
+        match read_frame(&mut rd).unwrap() {
+            FrameIn::Frame(p) => assert_eq!(p, payload),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // The stream is now empty: a second read is a clean EOF.
+        assert!(matches!(read_frame(&mut rd).unwrap(), FrameIn::Eof));
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected_not_delivered() {
+        let payload = b"checksums matter".to_vec();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        // Flip one payload bit past the header.
+        buf[FRAME_HEADER + 3] ^= 0x40;
+        let mut rd = Cursor::new(buf);
+        match read_frame(&mut rd).unwrap() {
+            FrameIn::Corrupt { wire_bytes } => {
+                assert_eq!(wire_bytes, FRAME_HEADER + payload.len())
+            }
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbled_length_prefix_is_corruption() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"x").unwrap();
+        buf[3] = 0xff; // length now far above MAX_FRAME
+        let mut rd = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut rd).unwrap(), FrameIn::Corrupt { .. }));
+    }
+
+    #[test]
+    fn torn_frame_is_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"truncate me please").unwrap();
+        buf.truncate(buf.len() - 5);
+        let mut rd = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut rd).unwrap(), FrameIn::Eof));
+    }
+
+    #[test]
+    fn msg_codec_round_trips_every_variant() {
+        let weird = f32::from_bits(0x7fc0_1234); // NaN with payload
+        let msgs = vec![
+            Msg::Hello { worker: 3 },
+            Msg::Start {
+                fingerprint: 0xdead_beef_cafe_f00d,
+                heartbeat_ms: 50,
+                cfg_toml: "[model]\nloss = \"hinge\"\n".into(),
+                ds_name: "synth".into(),
+                d: 60,
+                libsvm: "+1 1:0.5 7:-0.25\n-1 2:1\n".into(),
+            },
+            Msg::Ready { worker: 3, fingerprint: 42 },
+            Msg::Deliver {
+                seq: 9,
+                block_id: 2,
+                hops: 17,
+                w: vec![0.0, -0.0, 1.5, weird],
+                acc: vec![0.25; 4],
+            },
+            Msg::Adopt {
+                seq: 4,
+                stripes: vec![StripeMsg {
+                    q: 1,
+                    alpha: vec![0.5, -1.0],
+                    a_acc: vec![0.0, 2.0],
+                }],
+            },
+            Msg::Fwd {
+                seq: 11,
+                visit: 6,
+                updates: 321,
+                dropped: true,
+                block_id: 0,
+                dw: Delta::Sparse { len: 8, changes: vec![(1, 0.5), (7, weird)] },
+                dacc: Delta::Full(vec![1.0, 2.0, 3.0]),
+                stripes: vec![StripeMsg { q: 0, alpha: vec![1.0], a_acc: vec![0.5] }],
+            },
+            Msg::Ack { seq: 7 },
+            Msg::Nack { seq: 2 },
+            Msg::Heartbeat,
+            Msg::Bye,
+            Msg::KillMe,
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            let dec = Msg::decode(&enc).unwrap();
+            // Bit-level equality for the float payloads: PartialEq on
+            // f32 treats NaN != NaN, so compare the re-encoding.
+            assert_eq!(dec.encode(), enc, "round trip changed bytes for {m:?}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_bytes_and_bad_tags() {
+        let mut enc = Msg::Ack { seq: 1 }.encode();
+        enc.push(0);
+        assert!(Msg::decode(&enc).is_err(), "trailing byte accepted");
+        assert!(Msg::decode(&[200u8, 0, 0]).is_err(), "unknown tag accepted");
+        assert!(Msg::decode(&[]).is_err(), "empty payload accepted");
+    }
+
+    #[test]
+    fn delta_picks_sparse_for_small_changes_and_is_bit_exact() {
+        let base: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let mut new = base.clone();
+        new[3] = -0.0; // bit change only (base[3] = 1.5 → sign matters anyway)
+        new[40] = f32::from_bits(0x7fc0_0042); // NaN payload
+        let d = Delta::encode(&base, &new);
+        assert!(matches!(d, Delta::Sparse { .. }), "2/64 changes must go sparse");
+        let mut applied = base.clone();
+        d.apply(&mut applied).unwrap();
+        let bits =
+            |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&applied), bits(&new), "delta apply not bit-exact");
+    }
+
+    #[test]
+    fn delta_falls_back_to_full_when_dense_or_resized() {
+        let base = vec![0.0f32; 8];
+        let new: Vec<f32> = (0..8).map(|i| i as f32 + 1.0).collect();
+        assert!(matches!(Delta::encode(&base, &new), Delta::Full(_)));
+        // Length mismatch (first send / post-adoption) is always full.
+        assert!(matches!(Delta::encode(&[], &new), Delta::Full(_)));
+        // Applying full replaces the baseline outright.
+        let mut b = vec![9.0f32; 3];
+        Delta::Full(new.clone()).apply(&mut b).unwrap();
+        assert_eq!(b, new);
+        // Sparse onto a wrong-length baseline is rejected.
+        let d = Delta::Sparse { len: 8, changes: vec![(0, 1.0)] };
+        assert!(d.apply(&mut vec![0.0f32; 4]).is_err());
+    }
+
+    #[test]
+    fn emitted_config_round_trips_through_from_toml() {
+        let mut cfg = TrainConfig::default();
+        cfg.optim.algorithm = crate::config::Algorithm::DsoAsync;
+        cfg.optim.epochs = 3;
+        cfg.optim.eta0 = 0.2;
+        cfg.optim.seed = 7;
+        cfg.model.lambda = 1e-3;
+        cfg.cluster.machines = 4;
+        cfg.cluster.cores = 1;
+        cfg.cluster.faults = "stall@0.0.1:5".into();
+        let text = emit_config(&cfg);
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.model.loss, cfg.model.loss);
+        assert_eq!(back.model.lambda.to_bits(), cfg.model.lambda.to_bits());
+        assert_eq!(back.optim.algorithm, cfg.optim.algorithm);
+        assert_eq!(back.optim.eta0.to_bits(), cfg.optim.eta0.to_bits());
+        assert_eq!(back.optim.seed, cfg.optim.seed);
+        assert_eq!(back.cluster.machines, cfg.cluster.machines);
+        assert_eq!(back.cluster.partition, cfg.cluster.partition);
+        assert_eq!(back.cluster.faults, cfg.cluster.faults);
+        assert_eq!(back.monitor.every, 0, "workers never self-evaluate");
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_offsets() {
+        // FNV-1a of the empty string is the offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // And of "a" (one multiply step) — regression-pins the prime.
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

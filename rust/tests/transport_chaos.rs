@@ -1,0 +1,237 @@
+//! Transport chaos suite: the multi-process DSO ring (`--mode
+//! dso-proc`) under real process kills, injected deaths, link
+//! partitions, and stragglers — plus the recorded-schedule replay that
+//! pins Lemma 2 across the process boundary.
+//!
+//! Every test spawns real worker processes over a Unix-domain socket,
+//! using this crate's own `dso` binary (`CARGO_BIN_EXE_dso`) as the
+//! worker executable. Runs are serialized behind one mutex: process
+//! spawn + socket churn from concurrent rings makes timeouts flaky,
+//! and the fingerprint-skew test mutates the process environment.
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, ExecMode, TrainConfig};
+use dso::coordinator::TrainResult;
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+use std::sync::Mutex;
+
+/// All proc-mode tests run one at a time (see module docs).
+static PROC_LOCK: Mutex<()> = Mutex::new(());
+
+fn dataset(seed: u64) -> Dataset {
+    SparseSpec {
+        name: "transport-chaos".into(),
+        m: 240,
+        d: 60,
+        nnz_per_row: 6.0,
+        zipf_s: 0.7,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        seed,
+    }
+    .generate()
+}
+
+fn cfg(p: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = Algorithm::DsoAsync;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.2;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = p;
+    cfg.cluster.cores = 1;
+    cfg.cluster.mode = ExecMode::Proc;
+    // Tight enough that death tests finish fast, loose enough that a
+    // loaded CI box doesn't false-positive the hung-worker detector.
+    cfg.cluster.heartbeat_ms = 25;
+    cfg.cluster.death_timeout_ms = 1000;
+    cfg
+}
+
+fn run(cfg: TrainConfig, ds: &Dataset) -> anyhow::Result<TrainResult> {
+    Ok(Trainer::new(cfg)
+        .worker_bin(env!("CARGO_BIN_EXE_dso"))
+        .fit(ds, None)?
+        .into_result())
+}
+
+fn assert_recovered_shape(r: &TrainResult, ds: &Dataset, label: &str) {
+    assert_eq!(r.algorithm, "dso-proc", "{label}: wrong engine routed");
+    assert_eq!(r.w.len(), ds.d(), "{label}: w not fully recovered");
+    assert_eq!(r.alpha.len(), ds.m(), "{label}: alpha not fully recovered");
+    assert!(r.final_primal.is_finite(), "{label}: non-finite objective");
+}
+
+/// The clean multi-process run is a working solver: it converges into
+/// the same basin as the in-thread async ring (the differential
+/// oracle), moves real bytes, and reports wall-clock time axes.
+#[test]
+fn proc_clean_run_matches_thread_ring_band() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    let r = run(cfg(4, 2), &ds).expect("clean proc run");
+    assert_recovered_shape(&r, &ds, "clean");
+    assert!(r.failures.is_empty(), "clean run reported failures: {:?}", r.failures);
+    assert!(r.comm_bytes > 0, "real transport must count real bytes");
+    assert!(r.total_updates > 0);
+    // Real transport: virtual time IS wall time.
+    assert_eq!(r.total_virtual_s, r.total_wall_s);
+
+    let mut thread_cfg = cfg(4, 2);
+    thread_cfg.cluster.mode = ExecMode::Scalar;
+    let oracle =
+        Trainer::new(thread_cfg).fit(&ds, None).expect("thread ring").into_result();
+    let rel =
+        (r.final_primal - oracle.final_primal).abs() / oracle.final_primal.abs().max(1e-12);
+    assert!(
+        rel < 0.5,
+        "proc {} vs thread async {} (rel {rel})",
+        r.final_primal,
+        oracle.final_primal
+    );
+}
+
+/// `kill@w.e.i` delivers a real SIGKILL at the fault-clock coordinate;
+/// the degraded ring still converges inside the objective band of the
+/// fault-free run (the ISSUE-7 acceptance gate).
+#[test]
+fn proc_sigkill_degrades_and_converges_in_band() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    let clean = run(cfg(4, 2), &ds).expect("fault-free proc run");
+
+    let mut faulted_cfg = cfg(4, 2);
+    faulted_cfg.cluster.faults = "kill@1.0.2".into();
+    let r = run(faulted_cfg, &ds).expect("SIGKILLed proc run");
+    assert_recovered_shape(&r, &ds, "kill@1.0.2");
+    assert_eq!(r.failures.len(), 1, "exactly the injected kill: {:?}", r.failures);
+    let f = &r.failures[0];
+    assert_eq!(f.worker, 1);
+    assert!(f.reason.contains("injected kill"), "reason: {}", f.reason);
+    assert!(f.stripes_reassigned >= 1, "dead worker's stripes must move");
+    // The failure surfaces in the history row too.
+    assert_eq!(r.history.col("failures").unwrap(), vec![1.0]);
+
+    let rel =
+        (r.final_primal - clean.final_primal).abs() / clean.final_primal.abs().max(1e-12);
+    assert!(
+        rel < 0.5,
+        "killed {} vs clean {} (rel {rel})",
+        r.final_primal,
+        clean.final_primal
+    );
+}
+
+/// `die@` exits the worker gracefully (Bye); the supervisor reassigns
+/// its stripes and the run completes with the same reason string the
+/// thread ring reports.
+#[test]
+fn proc_injected_death_recovers_gracefully() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    let mut c = cfg(4, 2);
+    c.cluster.faults = "die@2.0.1".into();
+    let r = run(c, &ds).expect("die@ proc run");
+    assert_recovered_shape(&r, &ds, "die@2.0.1");
+    assert_eq!(r.failures.len(), 1);
+    assert_eq!(r.failures[0].worker, 2);
+    assert_eq!(r.failures[0].reason, "injected death");
+}
+
+/// `partition@w.e.i:ms` severs the link, waits, reconnects with
+/// backoff, and resends unacked frames — inside the death timeout this
+/// is a survivable fault: zero failures, full completion. A stall
+/// (straggler) under the timeout is equally survivable.
+#[test]
+fn proc_partition_reconnects_and_stragglers_survive() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    let mut c = cfg(3, 2);
+    c.cluster.faults = "partition@0.0.1:80,stall@1.0.0:60".into();
+    let r = run(c, &ds).expect("partition proc run");
+    assert_recovered_shape(&r, &ds, "partition+stall");
+    assert!(
+        r.failures.is_empty(),
+        "a sub-timeout partition must not kill the worker: {:?}",
+        r.failures
+    );
+    // The supervisor accrues bounded-wait time while the ring idles.
+    let wait = r.history.col("wait_s").expect("wait_s column missing");
+    assert!(wait.last().unwrap().is_finite());
+}
+
+/// The tentpole guarantee: a *faulted* multi-process run's recorded
+/// schedule, re-executed serially, reproduces the reassembled (w, α)
+/// bit for bit — Lemma-2 serializability certified across real
+/// sockets, real SIGKILL, and ring degradation.
+#[test]
+fn proc_recorded_schedule_replays_bit_identically() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    let sched = std::env::temp_dir().join("dso-transport-replay.sched");
+    let mut c = cfg(4, 2);
+    c.cluster.faults = "die@2.0.1".into();
+    c.cluster.sched_out = sched.to_string_lossy().into_owned();
+    let r = run(c.clone(), &ds).expect("recorded proc run");
+    assert_eq!(r.failures.len(), 1);
+
+    let text = std::fs::read_to_string(&sched).expect("schedule written");
+    let parsed = dso::net::Schedule::parse(&text).expect("schedule parses");
+    assert_eq!(parsed.p, 4);
+    assert_eq!(parsed.deaths, 1, "the injected death must be in the log");
+    assert_eq!(
+        parsed.entries.iter().map(|e| e.updates).sum::<u64>(),
+        r.total_updates,
+        "log must account for every update"
+    );
+
+    let replayed = dso::net::replay_recorded_schedule(&c, &ds, &sched).expect("replay");
+    assert_eq!(replayed.total_updates, r.total_updates, "replay update count differs");
+    assert_eq!(replayed.w.len(), r.w.len());
+    for (i, (a, b)) in r.w.iter().zip(&replayed.w).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "w[{i}]: run {a} vs replay {b}");
+    }
+    for (i, (a, b)) in r.alpha.iter().zip(&replayed.alpha).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "alpha[{i}]: run {a} vs replay {b}");
+    }
+
+    // A foreign configuration must be refused, not replayed wrong.
+    let mut foreign = c.clone();
+    foreign.optim.seed ^= 1;
+    let err = dso::net::replay_recorded_schedule(&foreign, &ds, &sched).unwrap_err();
+    assert!(format!("{err}").contains("refusing"), "{err}");
+    std::fs::remove_file(&sched).ok();
+}
+
+/// A worker whose independently recomputed fingerprint disagrees with
+/// the coordinator's must be refused at the handshake — the same
+/// contract the checkpoint resume path enforces.
+#[test]
+fn proc_refuses_fingerprint_skewed_worker() {
+    let _g = PROC_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let ds = dataset(3);
+    std::env::set_var("DSO_PROC_FINGERPRINT_SKEW", "1");
+    let result = run(cfg(2, 1), &ds);
+    std::env::remove_var("DSO_PROC_FINGERPRINT_SKEW");
+    let err = result.expect_err("skewed fingerprint must refuse the ring");
+    assert!(format!("{err}").contains("refusing"), "{err}");
+}
+
+/// Mode routing and validation: dso-proc requires the async algorithm,
+/// and the proc-only fault kinds are rejected on the thread ring.
+#[test]
+fn proc_mode_validation_is_actionable() {
+    let ds = dataset(3);
+    let mut c = cfg(2, 1);
+    c.optim.algorithm = Algorithm::Dso;
+    let err = Trainer::new(c).fit(&ds, None).unwrap_err();
+    assert!(format!("{err}").contains("dso-async"), "{err}");
+
+    let mut c = cfg(2, 1);
+    c.cluster.mode = ExecMode::Scalar;
+    c.cluster.faults = "kill@0.0.0".into();
+    let err = Trainer::new(c).fit(&ds, None).unwrap_err();
+    assert!(format!("{err}").contains("dso-proc"), "{err}");
+}

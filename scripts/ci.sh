@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
 # records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json,
-# BENCH_simd.json and BENCH_faults.json (the cross-PR perf trajectory;
-# plot with `python scripts/plot_results.py --bench`).
+# BENCH_simd.json, BENCH_faults.json and BENCH_transport.json (the
+# cross-PR perf trajectory; plot with
+# `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -129,6 +130,49 @@ for required in "${chaos_required[@]}"; do
     fi
 done
 
+echo "== transport chaos suite present =="
+# ISSUE 7's acceptance rests on tests/transport_chaos.rs: the
+# multi-process ring survives a real SIGKILL inside the objective band,
+# a recorded schedule replays serially to bit-identical (w, α), and a
+# fingerprint-skewed worker is refused at the handshake.
+transport_required=(proc_clean_run_matches_thread_ring_band
+    proc_sigkill_degrades_and_converges_in_band
+    proc_injected_death_recovers_gracefully
+    proc_partition_reconnects_and_stragglers_survive
+    proc_recorded_schedule_replays_bit_identically
+    proc_refuses_fingerprint_skewed_worker
+    proc_mode_validation_is_actionable)
+transport_tests="$(cargo test -q --test transport_chaos -- --list 2>/dev/null || true)"
+for required in "${transport_required[@]}"; do
+    if ! grep -q "$required" <<<"$transport_tests"; then
+        echo "ci.sh: transport chaos test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
+echo "== socket paths never bare-unwrap at all =="
+# The real-transport layer must degrade, not panic: a corrupt frame, a
+# dead peer, or a half-closed socket is routine input there. Non-test
+# code in wire framing, FrameConn, and the supervisor must surface
+# every failure as a Result/event (`let _ =` is the idiom for sends
+# whose failure the reconnect path already covers).
+socket_unwrap_gate() {
+    awk '
+        /#\[cfg\(test\)\]/ { exit bad }
+        /\.unwrap\(\)|\.expect\(/ {
+            printf "%s:%d: bare unwrap/expect on a transport path\n", FILENAME, FNR
+            bad = 1
+        }
+        END { exit bad }
+    ' "$1"
+}
+for f in rust/src/net/transport.rs rust/src/net/supervisor.rs; do
+    if ! socket_unwrap_gate "$f"; then
+        echo "ci.sh: surface the failure as a Result/event in $f" >&2
+        exit 1
+    fi
+done
+
 echo "== engine/net recovery paths never bare-unwrap a lock or join =="
 # Fault tolerance dies the day a poisoned mutex or a worker join can
 # panic the coordinator. Non-test code on the recovery paths must route
@@ -160,7 +204,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
     for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json \
-        BENCH_faults.json; do
+        BENCH_faults.json BENCH_transport.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else

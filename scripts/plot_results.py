@@ -9,9 +9,12 @@ Usage:
 Default mode — each experiment directory (fig2, fig3, fig4, fig5,
 ablation, sweeps) contains one history CSV per algorithm/setting with
 the columns epoch, virtual_s, wall_s, primal, dual, gap, test_error,
-updates, comm_bytes. This script draws the paper's two standard panels
-per experiment — objective vs. iterations and objective vs. time — plus
-test-error panels where recorded.
+updates, comm_bytes, failures, wait_s. This script draws the paper's
+two standard panels per experiment — objective vs. iterations and
+objective vs. time. When any series recorded worker failures or
+bounded-wait time (the fault-tolerance columns the async and
+multi-process engines fill in), a second row of panels charts them —
+so a chaos run's degradation is visible next to its convergence.
 
 Bench mode (`--bench`) — each `path` is either a BENCH_<group>.json
 file (as written by the Rust bench harness under DSO_BENCH_JSON=1), or
@@ -60,31 +63,69 @@ def series_in(exp_dir):
     return out
 
 
+def fault_columns_recorded(series):
+    """True when any series carries a nonzero failures or wait_s value
+    (NaN-safe: older CSVs without the columns simply don't chart)."""
+    for cols in series.values():
+        for key in ("failures", "wait_s"):
+            if any(v > 0 for v in cols.get(key, []) if v == v):
+                return True
+    return False
+
+
 def text_summary(exp, series):
     print(f"\n== {exp} ==")
     for label, cols in series.items():
         if not cols.get("primal"):
             continue
-        print(
+        line = (
             f"  {label:<24} epochs={len(cols['primal']):>4} "
             f"objective {cols['primal'][0]:.4f} -> {cols['primal'][-1]:.4f}  "
             f"gap -> {cols['gap'][-1]:.3e}"
         )
+        failures = [v for v in cols.get("failures", []) if v == v]
+        wait = [v for v in cols.get("wait_s", []) if v == v]
+        if failures and failures[-1] > 0:
+            line += f"  failures={int(failures[-1])}"
+        if wait and wait[-1] > 0:
+            line += f"  wait={wait[-1]:.3f}s"
+        print(line)
 
 
 def plot(exp, series, out_dir, plt):
-    fig, axes = plt.subplots(1, 2, figsize=(11, 4))
+    with_faults = fault_columns_recorded(series)
+    if with_faults:
+        fig, all_axes = plt.subplots(2, 2, figsize=(11, 8))
+        axes, fault_axes = all_axes[0], all_axes[1]
+    else:
+        fig, axes = plt.subplots(1, 2, figsize=(11, 4))
+        fault_axes = None
     for label, cols in series.items():
         if not cols.get("primal"):
             continue
         axes[0].plot(cols["epoch"], cols["primal"], label=label, marker=".")
         axes[1].plot(cols["virtual_s"], cols["primal"], label=label, marker=".")
+        if fault_axes is not None:
+            if cols.get("failures"):
+                fault_axes[0].plot(
+                    cols["epoch"], cols["failures"], label=label, marker="."
+                )
+            if cols.get("wait_s"):
+                fault_axes[1].plot(
+                    cols["epoch"], cols["wait_s"], label=label, marker="."
+                )
     axes[0].set_xlabel("iterations (epochs)")
     axes[1].set_xlabel("simulated cluster seconds")
     for ax in axes:
         ax.set_ylabel("objective value")
         ax.legend(fontsize=8)
         ax.set_title(exp)
+    if fault_axes is not None:
+        fault_axes[0].set_ylabel("cumulative worker failures")
+        fault_axes[1].set_ylabel("bounded-wait seconds")
+        for ax in fault_axes:
+            ax.set_xlabel("iterations (epochs)")
+            ax.legend(fontsize=8)
     fig.tight_layout()
     path = os.path.join(out_dir, f"{exp.replace('/', '_')}.png")
     fig.savefig(path, dpi=120)
