@@ -1,0 +1,163 @@
+//! Microbench: out-of-core sweep throughput (DESIGN.md §Out-of-core).
+//!
+//! Three variants of the same lane sweep over the standard 64k-entry
+//! block (4k rows × 2k cols, ≈16 nnz/row, p = 1):
+//!
+//! * `outofcore_resident_sweep`    — the in-memory baseline: the block
+//!   built by `PackedBlocks::build`, every table an owned `AVec`.
+//! * `outofcore_mapped_cold_sweep` — a fresh `cache::open` + mmap per
+//!   iteration, sweeping straight off the mapping with no advice: the
+//!   open/validate overhead plus demand page faults. (The OS page cache
+//!   stays warm across iterations — a container bench cannot drop it —
+//!   so the fault cost here is soft faults, a lower bound on true cold.)
+//! * `outofcore_mapped_prefetched_sweep` — one long-lived mapping, the
+//!   production shape: `CacheHandle::prefetch` posts `madvise(WILLNEED)`
+//!   for the block's cols/vals window before each sweep, exactly as the
+//!   engines do one slot ahead along the sweep schedule.
+//!
+//! Acceptance target: mapped-prefetched within 10% of resident on this
+//! block. Run with `DSO_BENCH_JSON=1` to record `BENCH_outofcore.json`
+//! (tracked by the CI smoke alongside the other bench artifacts).
+
+use dso::coordinator::updates::{sweep_lanes, PackedCtx, PackedState, StepRule};
+use dso::data::cache;
+use dso::data::synth::SparseSpec;
+use dso::losses::{Loss, Regularizer};
+use dso::partition::{PackedBlocks, Partition};
+use dso::util::bench::{human_time, Runner};
+
+fn main() {
+    let mut runner = Runner::from_env("outofcore");
+
+    let ds = SparseSpec {
+        name: "outofcore-bench".into(),
+        m: 4000,
+        d: 2000,
+        nnz_per_row: 16.0,
+        zipf_s: 0.8,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 1,
+    }
+    .generate();
+
+    let rp = Partition::even(ds.m(), 1);
+    let cp = Partition::even(ds.d(), 1);
+    let omega = PackedBlocks::build(&ds.x, &rp, &cp);
+    let alpha_bias: Vec<dso::data::BlockStore<f32>> =
+        omega.stripe_alpha_bias(&ds.y).into_iter().map(Into::into).collect();
+    let y_local = omega.stripe_labels(&ds.y);
+    let n = omega.block(0, 0).nnz();
+    println!("block: {n} entries, resident vs mapped-cold vs mapped-prefetched");
+
+    let dir = std::env::temp_dir().join("dso-bench-outofcore");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = cache::cache_path(&dir, &ds.name);
+    cache::pack(&path, &omega, &alpha_bias, &ds.y, 0).expect("pack bench cache");
+    let file_len = std::fs::metadata(&path).expect("cache stat").len();
+    println!("cache: {path:?} ({file_len} bytes)");
+
+    let lambda = 1e-4;
+    fn make_ctx<'a>(
+        om: &'a PackedBlocks,
+        bias: &'a [dso::data::BlockStore<f32>],
+        y: &'a [f64],
+        lambda: f64,
+    ) -> PackedCtx<'a> {
+        PackedCtx {
+            loss: Loss::Hinge,
+            reg: Regularizer::L2,
+            lambda,
+            w_bound: Loss::Hinge.w_bound(lambda),
+            rule: StepRule::AdaGrad(0.1),
+            inv_col: &om.inv_col[0],
+            inv_col32: &om.inv_col32[0],
+            inv_row: &om.inv_row[0],
+            y,
+            alpha_bias32: &bias[0],
+        }
+    }
+
+    // --- Resident baseline ---
+    {
+        let pctx = make_ctx(&omega, &alpha_bias, &y_local[0], lambda);
+        let block = omega.block(0, 0);
+        let mut w = vec![0.01f32; ds.d()];
+        let mut w_acc = vec![0f32; ds.d()];
+        let mut alpha = vec![0f32; ds.m()];
+        let mut a_acc = vec![0f32; ds.m()];
+        runner.bench_units("outofcore_resident_sweep", n as u64, || {
+            let mut st = PackedState {
+                w: &mut w,
+                w_acc: &mut w_acc,
+                alpha: &mut alpha,
+                a_acc: &mut a_acc,
+            };
+            sweep_lanes(block, &pctx, &mut st)
+        });
+    }
+
+    // --- Mapped, cold: fresh open + mapping each iteration ---
+    {
+        let mut w = vec![0.01f32; ds.d()];
+        let mut w_acc = vec![0f32; ds.d()];
+        let mut alpha = vec![0f32; ds.m()];
+        let mut a_acc = vec![0f32; ds.m()];
+        runner.bench_units("outofcore_mapped_cold_sweep", n as u64, || {
+            let opened = cache::open(&path).expect("open bench cache");
+            let pctx = make_ctx(&opened.omega, &opened.alpha_bias, &y_local[0], lambda);
+            let mut st = PackedState {
+                w: &mut w,
+                w_acc: &mut w_acc,
+                alpha: &mut alpha,
+                a_acc: &mut a_acc,
+            };
+            sweep_lanes(opened.omega.block(0, 0), &pctx, &mut st)
+        });
+    }
+
+    // --- Mapped, prefetched: long-lived mapping + WILLNEED ahead ---
+    {
+        let opened = cache::open(&path).expect("open bench cache");
+        let pctx = make_ctx(&opened.omega, &opened.alpha_bias, &y_local[0], lambda);
+        let block = opened.omega.block(0, 0);
+        let handle = opened.handle.clone();
+        let mut w = vec![0.01f32; ds.d()];
+        let mut w_acc = vec![0f32; ds.d()];
+        let mut alpha = vec![0f32; ds.m()];
+        let mut a_acc = vec![0f32; ds.m()];
+        runner.bench_units("outofcore_mapped_prefetched_sweep", n as u64, || {
+            handle.prefetch(0, 0);
+            let mut st = PackedState {
+                w: &mut w,
+                w_acc: &mut w_acc,
+                alpha: &mut alpha,
+                a_acc: &mut a_acc,
+            };
+            sweep_lanes(block, &pctx, &mut st)
+        });
+    }
+
+    let median = |name: &str| runner.results.iter().find(|r| r.name == name).map(|r| r.median());
+    if let (Some(rm), Some(cm), Some(pm)) = (
+        median("outofcore_resident_sweep"),
+        median("outofcore_mapped_cold_sweep"),
+        median("outofcore_mapped_prefetched_sweep"),
+    ) {
+        println!(
+            "    -> resident {:.1} M upd/s ({}/upd)  mapped-cold {:.1} M upd/s  mapped-prefetched {:.1} M upd/s",
+            n as f64 / rm / 1e6,
+            human_time(rm / n as f64),
+            n as f64 / cm / 1e6,
+            n as f64 / pm / 1e6,
+        );
+        println!(
+            "    -> prefetched/resident {:.3}x (target ≤1.10x)  cold/resident {:.2}x",
+            pm / rm,
+            cm / rm
+        );
+    }
+
+    runner.finish("outofcore");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,6 +3,12 @@
 //! Runs the experiment driver once at bench scale, reports wall time,
 //! and leaves the CSV series under results/bench-figures/. Scale via
 //! DSO_BENCH_SCALE / DSO_BENCH_EPOCHS_MUL.
+//!
+//! kdda-size problems are the paper's out-of-core regime: to iterate
+//! on this figure without re-packing blocks every run, do a one-time
+//! `dso train --data kdda-sim --cache build --cache-dir CACHE`, then
+//! rerun with `--cache use` — the mapped run is bit-identical to the
+//! resident one (DESIGN.md §Out-of-core), so the series is unchanged.
 
 use dso::exp::{self, ExpOptions};
 use std::time::Instant;

@@ -3,6 +3,14 @@
 //! Runs the experiment driver once at bench scale, reports wall time,
 //! and leaves the CSV series under results/bench-figures/. Scale via
 //! DSO_BENCH_SCALE / DSO_BENCH_EPOCHS_MUL.
+//!
+//! The ocr stand-in is dense, so its packed blocks are the largest of
+//! the figure set: a one-time `--cache build --cache-dir CACHE`
+//! followed by `--cache use` reruns keeps iteration on this figure
+//! out-of-core without changing the series (mapped fits are
+//! bit-identical to resident — DESIGN.md §Out-of-core). Note the tile
+//! path (`--mode tile`) never reads packed sparse blocks, so the cache
+//! applies to the scalar engines only.
 
 use dso::exp::{self, ExpOptions};
 use std::time::Instant;

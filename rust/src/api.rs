@@ -109,6 +109,24 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    /// Out-of-core packed-block cache policy (`cluster.cache`, default
+    /// [`crate::config::CacheMode::Off`]): `Build` packs the training
+    /// blocks and writes a fingerprinted `.dsoblk` file under the cache
+    /// dir, `Use` mmaps that file and trains with the payload
+    /// demand-paged (bit-identical to the resident run), `Auto` picks
+    /// whichever applies. Pair with [`Trainer::cache_dir`].
+    pub fn cache(mut self, mode: crate::config::CacheMode) -> Self {
+        self.cfg.cluster.cache = mode;
+        self
+    }
+
+    /// Directory holding `.dsoblk` cache files (`cluster.cache_dir`;
+    /// required whenever the cache mode is not `Off`).
+    pub fn cache_dir(mut self, path: &str) -> Self {
+        self.cfg.cluster.cache_dir = path.to_string();
+        self
+    }
+
     /// Pin the SIMD kernel backend (`cluster.simd`, default
     /// [`SimdKind::Auto`] = runtime detection). `Portable` forces the
     /// autovec baseline — bit-identical to the pre-backend kernels —

@@ -10,6 +10,7 @@
 //!            [--faults SPEC] [--checkpoint-every N] [--checkpoint PATH]
 //!            [--resume PATH] [--heartbeat-ms N] [--death-timeout-ms N]
 //!            [--sched-out PATH] [--worker-bin PATH]
+//!            [--cache off|build|use|auto] [--cache-dir DIR]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
 //! dso stats  [--name NAME | --all] [--scale S]
@@ -47,6 +48,13 @@
 //! real link partition at the same clock coordinates the thread ring
 //! uses. The supervisor respawns workers via the hidden `__dso-worker`
 //! subcommand — not part of the public surface.
+//!
+//! Out-of-core (DESIGN.md §Out-of-core): `--cache build --cache-dir D`
+//! packs the training blocks once and writes a fingerprinted `.dsoblk`
+//! cache under `D`; `--cache use` mmaps that file and trains with the
+//! block payload demand-paged (bit-identical to the resident run, and
+//! refused if the cache was packed under a different configuration).
+//! `--cache auto` uses a matching cache when present, else builds one.
 
 pub mod args;
 
@@ -151,6 +159,12 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("worker-bin") {
         cfg.cluster.worker_bin = v.to_string();
     }
+    if let Some(v) = args.get("cache") {
+        cfg.cluster.cache = crate::config::CacheMode::parse(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get("cache-dir") {
+        cfg.cluster.cache_dir = v.to_string();
+    }
     // `--mode dso-proc` is only meaningful under the async algorithm;
     // select it when the user didn't pick one explicitly.
     if cfg.cluster.mode == crate::config::ExecMode::Proc
@@ -194,7 +208,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         "config", "data", "path", "algo", "loss", "mode", "simd", "lambda", "epochs", "eta0",
         "dcd-init", "replay", "seed", "machines", "cores", "scale", "data-seed", "out",
         "model-out", "test-frac", "faults", "checkpoint-every", "checkpoint", "resume",
-        "heartbeat-ms", "death-timeout-ms", "sched-out", "worker-bin",
+        "heartbeat-ms", "death-timeout-ms", "sched-out", "worker-bin", "cache", "cache-dir",
     ])
     .map_err(anyhow::Error::msg)?;
     let mut cfg = build_train_config(args)?;
@@ -499,6 +513,52 @@ mod tests {
             .unwrap(),
             0
         );
+    }
+
+    /// `--cache build` leaves a `.dsoblk` behind that `--cache use`
+    /// trains from; `--cache use` against an empty dir is an error.
+    #[test]
+    fn train_cache_build_then_use() {
+        let dir = std::env::temp_dir().join("dso-cli-cache");
+        std::fs::remove_dir_all(&dir).ok();
+        let dir_s = dir.to_str().unwrap();
+        // No cache yet: `use` must refuse rather than silently repack.
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1",
+            "--machines", "2", "--cores", "1", "--cache", "use", "--cache-dir", dir_s,
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("cache"), "{err}");
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--cache", "build", "--cache-dir", dir_s,
+            ])
+            .unwrap(),
+            0
+        );
+        let packed: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map_or(false, |x| x == "dsoblk"))
+            .collect();
+        assert_eq!(packed.len(), 1, "expected exactly one .dsoblk cache file");
+        assert_eq!(
+            run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "2",
+                "--machines", "2", "--cores", "1", "--cache", "use", "--cache-dir", dir_s,
+            ])
+            .unwrap(),
+            0
+        );
+        // `--cache use` without a dir is a validation error.
+        let err = run(&[
+            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1",
+            "--machines", "2", "--cores", "1", "--cache", "use",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("cache_dir"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// `--checkpoint-every`/`--checkpoint` write a snapshot the

@@ -180,6 +180,45 @@ impl SimdKind {
     }
 }
 
+/// Out-of-core packed-block cache policy (DESIGN.md §Out-of-core).
+/// Controls whether `PackedBlocks` are serialized to / mmap'd from a
+/// `.dsoblk` file under `cluster.cache_dir`; the CLI override is
+/// `--cache`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    /// No cache: pack in memory every run (the default).
+    Off,
+    /// Pack in memory, write the cache file, then train from the
+    /// resident tables (a warm-up run that leaves a cache behind).
+    Build,
+    /// Require the cache file: mmap it and train out-of-core, refusing
+    /// to start if it is missing or carries a foreign fingerprint.
+    Use,
+    /// `Use` when a fingerprint-matching cache exists, else `Build`.
+    Auto,
+}
+
+impl CacheMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "off" | "none" => Ok(CacheMode::Off),
+            "build" | "pack" => Ok(CacheMode::Build),
+            "use" | "mmap" => Ok(CacheMode::Use),
+            "auto" => Ok(CacheMode::Auto),
+            other => Err(format!("unknown cache mode '{other}' (off|build|use|auto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheMode::Off => "off",
+            CacheMode::Build => "build",
+            CacheMode::Use => "use",
+            CacheMode::Auto => "auto",
+        }
+    }
+}
+
 /// How DSO executes block updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -305,6 +344,11 @@ pub struct ClusterConfig {
     /// if set, else the current executable (re-exec'd with the hidden
     /// `__dso-worker` subcommand).
     pub worker_bin: String,
+    /// Out-of-core packed-block cache policy (off|build|use|auto).
+    pub cache: CacheMode,
+    /// Directory holding `.dsoblk` cache files. Required (nonempty)
+    /// whenever `cache != off`.
+    pub cache_dir: String,
 }
 
 impl Default for ClusterConfig {
@@ -324,6 +368,8 @@ impl Default for ClusterConfig {
             death_timeout_ms: 1500,
             sched_out: String::new(),
             worker_bin: String::new(),
+            cache: CacheMode::Off,
+            cache_dir: String::new(),
         }
     }
 }
@@ -446,6 +492,12 @@ impl TrainConfig {
         if let Some(s) = doc.get_str("cluster.worker_bin") {
             c.cluster.worker_bin = s.to_string();
         }
+        if let Some(s) = doc.get_str("cluster.cache") {
+            c.cluster.cache = CacheMode::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("cluster.cache_dir") {
+            c.cluster.cache_dir = s.to_string();
+        }
 
         c.checkpoint.every = usize_of("checkpoint.every", c.checkpoint.every);
         if let Some(s) = doc.get_str("checkpoint.path") {
@@ -549,6 +601,30 @@ impl TrainConfig {
                     "kill@ (real SIGKILL) and partition@ (link fault) only exist in \
                      the multi-process transport; use mode = \"dso-proc\", or map to \
                      die@/stall@ for the in-thread ring"
+                        .into(),
+                );
+            }
+        }
+        if self.cluster.cache != CacheMode::Off {
+            if self.cluster.cache_dir.is_empty() {
+                return Err(format!(
+                    "cluster.cache = \"{}\" requires cluster.cache_dir (where the \
+                     .dsoblk files live)",
+                    self.cluster.cache.name()
+                ));
+            }
+            if !matches!(self.optim.algorithm, Algorithm::Dso | Algorithm::DsoAsync) {
+                return Err(format!(
+                    "the packed-block cache serves the DSO sweep engines; algorithm \
+                     \"{}\" never packs blocks (use dso or dso-async, or cache = \"off\")",
+                    self.optim.algorithm.name()
+                ));
+            }
+            if self.cluster.mode == ExecMode::Tile {
+                return Err(
+                    "mode = \"tile\" batches dense sub-tiles and does not read the \
+                     packed sparse blocks the cache stores; use mode = \"scalar\" or \
+                     \"dso-proc\", or cache = \"off\""
                         .into(),
                 );
             }
@@ -766,6 +842,40 @@ out = "results/x.csv"
         )
         .unwrap_err();
         assert!(err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn cache_config_validated() {
+        // Every mode name round-trips, plus the aliases.
+        for m in [CacheMode::Off, CacheMode::Build, CacheMode::Use, CacheMode::Auto] {
+            assert_eq!(CacheMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(CacheMode::parse("mmap").unwrap(), CacheMode::Use);
+        assert_eq!(CacheMode::parse("pack").unwrap(), CacheMode::Build);
+        assert!(CacheMode::parse("sometimes").is_err());
+        // cache != off requires a cache_dir.
+        let err = TrainConfig::from_toml("[cluster]\ncache = \"use\"\n").unwrap_err();
+        assert!(err.contains("cache_dir"), "{err}");
+        let c = TrainConfig::from_toml(
+            "[cluster]\ncache = \"auto\"\ncache_dir = \"/tmp/dso-cache\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.cache, CacheMode::Auto);
+        assert_eq!(c.cluster.cache_dir, "/tmp/dso-cache");
+        // Only the DSO engines pack blocks.
+        let err = TrainConfig::from_toml(
+            "[optim]\nalgorithm = \"sgd\"\n[cluster]\ncache = \"build\"\ncache_dir = \"c\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("sgd"), "{err}");
+        // The tile engine reads dense sub-tiles, not packed blocks.
+        let err = TrainConfig::from_toml(
+            "[cluster]\nmode = \"tile\"\ncache = \"use\"\ncache_dir = \"c\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("tile"), "{err}");
+        // Defaults stay off.
+        assert_eq!(TrainConfig::default().cluster.cache, CacheMode::Off);
     }
 
     #[test]

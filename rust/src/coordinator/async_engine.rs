@@ -318,6 +318,13 @@ fn worker_loop(
             lock_tolerant(&shared.parked).push(token);
             continue; // keep draining the queue until it idles
         }
+        // Out-of-core: the token names the block this visit sweeps —
+        // page its payload in for every stripe before the kernel runs.
+        // (Async has no ring schedule to look ahead along; the token's
+        // own block is the best prediction available.)
+        for s in stripes.iter() {
+            setup.prefetch(s.q, token.block_id);
+        }
         let (fe, fi) = ((v / p as u64) as usize, (v % p as u64) as usize);
         match setup.faults.worker_fault(q, fe, fi) {
             // Kill (real SIGKILL) and Partition (link fault) belong to
@@ -426,7 +433,7 @@ pub fn train_dso_async_with(
          inner-iteration) schedule, which async lacks; set \
          cluster.updates_per_block = 0 or use algorithm = \"dso\""
     );
-    let setup = DsoSetup::new(cfg, train);
+    let setup = DsoSetup::with_cache(cfg, train)?;
     // The guard above keeps the plan sampling-free, so the workers'
     // (epoch, r) = (0, 0) sweep arguments below are inert.
     debug_assert!(!setup.plan.any_sampled());

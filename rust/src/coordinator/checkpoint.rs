@@ -11,10 +11,13 @@
 //!
 //! Persistence reuses the model-file contract ([`crate::api::Model`]):
 //! plain text, one float per line in Rust's shortest-round-trip
-//! `Display` form, so the save/load cycle is exact. Writes go through a
-//! temp file in the same directory followed by a rename, which is
-//! atomic on POSIX filesystems — a crash mid-write leaves either the
-//! previous checkpoint or none, never a torn one.
+//! `Display` form, so the save/load cycle is exact. Writes go through
+//! [`crate::util::fsio::write_atomic_durable`] — a pid-suffixed temp
+//! file in the same directory, fsynced before an atomic rename and a
+//! parent-directory fsync after — so a crash (or power cut) mid-write
+//! leaves either the previous checkpoint or the new one, never a torn
+//! or empty-after-reboot file, and two concurrent runs pointed at the
+//! same path cannot clobber each other's in-flight temp file.
 //!
 //! A checkpoint is only valid against the run that wrote it, so the
 //! header carries a fingerprint of everything that shapes the update
@@ -91,8 +94,9 @@ pub fn fingerprint(
 }
 
 impl Checkpoint {
-    /// Atomic save: write `<path>.tmp` in the same directory, then
-    /// rename over `path`.
+    /// Atomic, crash-durable save: write `<path>.<pid>.tmp` in the same
+    /// directory, fsync it, rename over `path`, fsync the directory
+    /// (see `util::fsio`).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut out = String::new();
         out.push_str(MAGIC);
@@ -112,14 +116,8 @@ impl Checkpoint {
                 out.push_str(&format!("{v}\n"));
             }
         }
-        let tmp = path.with_file_name(format!(
-            "{}.tmp",
-            path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default()
-        ));
-        std::fs::write(&tmp, out)
-            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| anyhow::anyhow!("committing checkpoint {}: {e}", path.display()))?;
+        crate::util::fsio::write_atomic_durable(path, out.as_bytes())
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))?;
         Ok(())
     }
 
@@ -220,7 +218,16 @@ mod tests {
         let path = std::env::temp_dir().join("dso-ck-atomic.txt");
         sample().save(&path).unwrap();
         assert!(path.exists());
-        assert!(!path.with_file_name("dso-ck-atomic.txt.tmp").exists());
+        // The temp name is pid-suffixed now — scan the directory for
+        // any `dso-ck-atomic.txt*.tmp` leftover rather than probing
+        // one fixed name.
+        for entry in std::fs::read_dir(std::env::temp_dir()).unwrap() {
+            let n = entry.unwrap().file_name().to_string_lossy().to_string();
+            assert!(
+                !(n.starts_with("dso-ck-atomic.txt") && n.ends_with(".tmp")),
+                "leftover checkpoint temp file {n}"
+            );
+        }
         std::fs::remove_file(&path).ok();
     }
 

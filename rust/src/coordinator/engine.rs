@@ -69,8 +69,9 @@ pub struct DsoSetup {
     pub y_local: Vec<Vec<f64>>,
     /// Per row-stripe (y·1/(m|Ω_i|)) as f32 — the square loss's affine
     /// α-bias precompute consumed by the affine lane kernel
-    /// (64-byte-aligned per the §Alignment contract).
-    pub alpha_bias: Vec<crate::simd::AVec<f32>>,
+    /// (64-byte-aligned per the §Alignment contract; resident or a
+    /// cache-file view, see [`crate::data::cache`]).
+    pub alpha_bias: Vec<crate::data::cache::BlockStore<f32>>,
     pub schedule: RingSchedule,
     pub p: usize,
     pub w_bound: f64,
@@ -81,6 +82,10 @@ pub struct DsoSetup {
     /// normal runs. The sync engine honors timing faults (stall/delay)
     /// and rejects death/drop; the async engine honors all of them.
     pub faults: FaultPlan,
+    /// Out-of-core prefetch handle: inert on resident runs, advises
+    /// the kernel about the next block's payload on cache-backed runs
+    /// ([`crate::data::cache::CacheHandle`]).
+    pub cache: crate::data::cache::CacheHandle,
 }
 
 impl DsoSetup {
@@ -97,7 +102,8 @@ impl DsoSetup {
             omega = omega.with_sampling_tables();
         }
         let y_local = omega.stripe_labels(&train.y);
-        let alpha_bias = omega.stripe_alpha_bias(&train.y);
+        let alpha_bias: Vec<crate::data::cache::BlockStore<f32>> =
+            omega.stripe_alpha_bias(&train.y).into_iter().map(Into::into).collect();
         let cost = CostModel::new(
             cfg.cluster.latency_us,
             cfg.cluster.bandwidth_mbps,
@@ -132,7 +138,152 @@ impl DsoSetup {
             cost,
             plan,
             faults,
+            cache: Default::default(),
         }
+    }
+
+    /// [`DsoSetup::new`] with the `cluster.cache` policy applied
+    /// (DESIGN.md §Out-of-core): `Build` packs in memory and leaves a
+    /// fingerprinted `.dsoblk` behind, `Use` mmaps an existing cache
+    /// (refusing a missing file or a foreign fingerprint), `Auto`
+    /// picks whichever applies. `Off` (or an empty cache_dir, for
+    /// direct callers that skipped `validate()`) is exactly `new`.
+    pub fn with_cache(cfg: &TrainConfig, train: &Dataset) -> Result<DsoSetup> {
+        use crate::config::CacheMode;
+        if cfg.cluster.cache == CacheMode::Off || cfg.cluster.cache_dir.is_empty() {
+            return Ok(Self::new(cfg, train));
+        }
+        let dir = std::path::Path::new(&cfg.cluster.cache_dir);
+        let path = crate::data::cache::cache_path(dir, &train.name);
+        match cfg.cluster.cache {
+            CacheMode::Off => unreachable!("handled above"),
+            CacheMode::Build => {
+                let setup = Self::new(cfg, train);
+                setup.pack_to(cfg, train, &path)?;
+                Ok(setup)
+            }
+            CacheMode::Use => {
+                let opened = crate::data::cache::open(&path)?;
+                // The fingerprint hashes the cache's own geometry, so a
+                // same-named cache of a *different* dataset would pass
+                // it — compare against the supplied dataset explicitly.
+                if (opened.m, opened.d, opened.nnz)
+                    != (train.m(), train.d(), train.x.nnz())
+                {
+                    anyhow::bail!(
+                        "cache {} was packed from a different dataset \
+                         ({}x{}, {} nnz; this run {}x{}, {} nnz); refusing to use it",
+                        path.display(),
+                        opened.m,
+                        opened.d,
+                        opened.nnz,
+                        train.m(),
+                        train.d(),
+                        train.x.nnz()
+                    );
+                }
+                let fp = Self::cache_fingerprint(cfg, opened.m, opened.d, opened.nnz);
+                opened.require_fingerprint(fp, &path)?;
+                Ok(Self::from_cache(cfg, opened))
+            }
+            CacheMode::Auto => {
+                if path.exists() {
+                    // A stale or foreign cache under auto falls through
+                    // to a rebuild instead of refusing the run.
+                    if let Ok(opened) = crate::data::cache::open(&path) {
+                        let fp =
+                            Self::cache_fingerprint(cfg, opened.m, opened.d, opened.nnz);
+                        if opened.config_fp == fp
+                            && (opened.m, opened.d, opened.nnz)
+                                == (train.m(), train.d(), train.x.nnz())
+                        {
+                            return Ok(Self::from_cache(cfg, opened));
+                        }
+                    }
+                }
+                let setup = Self::new(cfg, train);
+                setup.pack_to(cfg, train, &path)?;
+                Ok(setup)
+            }
+        }
+    }
+
+    /// Build a setup from an opened cache file: the packed blocks and
+    /// α-bias tables come from the mapped arena (demand-paged), while
+    /// the run machinery (problem, cost model, sweep plan, fault plan)
+    /// is rebuilt from the configuration exactly as [`DsoSetup::new`]
+    /// does — so a cache-backed run executes the identical update
+    /// sequence.
+    pub fn from_cache(cfg: &TrainConfig, opened: crate::data::cache::OpenedCache) -> DsoSetup {
+        let loss = Loss::from(cfg.model.loss);
+        let reg = Regularizer::from(cfg.model.reg);
+        let problem = Problem::new(loss, reg, cfg.model.lambda);
+        let crate::data::cache::OpenedCache { p, y, omega, alpha_bias, handle, .. } = opened;
+        let y_local = omega.stripe_labels(&y);
+        let cost = CostModel::new(
+            cfg.cluster.latency_us,
+            cfg.cluster.bandwidth_mbps,
+            cfg.cluster.cores.max(1),
+        );
+        let simd = crate::simd::resolve(cfg.cluster.simd);
+        let plan = SweepPlan::build(
+            &omega,
+            loss,
+            cfg.cluster.updates_per_block,
+            cfg.optim.seed,
+            simd,
+        );
+        let faults = FaultPlan::parse_with(&cfg.cluster.faults, p, cfg.optim.epochs)
+            .unwrap_or_else(|e| panic!("invalid cluster.faults (validate() catches this): {e}"));
+        DsoSetup {
+            problem,
+            omega,
+            y_local,
+            alpha_bias,
+            schedule: RingSchedule::new(p),
+            p,
+            w_bound: loss.w_bound(cfg.model.lambda),
+            cost,
+            plan,
+            faults,
+            cache: handle,
+        }
+    }
+
+    /// The fingerprint a cache for this configuration must carry —
+    /// the checkpoint/handshake fingerprint over the same fields, with
+    /// p and the SIMD backend derived the way `new` derives them.
+    fn cache_fingerprint(cfg: &TrainConfig, m: usize, d: usize, nnz: usize) -> u64 {
+        let p = cfg.workers().min(m).min(d).max(1);
+        let simd = crate::simd::resolve(cfg.cluster.simd);
+        checkpoint::fingerprint(cfg, m, d, nnz, p, simd)
+    }
+
+    /// Serialize this setup's packed tables to `path` (atomic +
+    /// durable), stamped with this configuration's fingerprint.
+    fn pack_to(
+        &self,
+        cfg: &TrainConfig,
+        train: &Dataset,
+        path: &std::path::Path,
+    ) -> Result<()> {
+        let fp = checkpoint::fingerprint(
+            cfg,
+            train.m(),
+            train.d(),
+            train.x.nnz(),
+            self.p,
+            self.plan.simd(),
+        );
+        crate::data::cache::pack(path, &self.omega, &self.alpha_bias, &train.y, fp)
+    }
+
+    /// Advise the OS that worker `q`'s visit of w block `block_id` is
+    /// imminent (madvise(WILLNEED) on the block's cols/vals regions).
+    /// Inert on resident runs.
+    #[inline]
+    pub fn prefetch(&self, q: usize, block_id: usize) {
+        self.cache.prefetch(q, block_id);
     }
 
     /// Build row/column partitions per the configured strategy: equal
@@ -214,7 +365,7 @@ pub fn train_dso_with(
     if cfg.cluster.mode == ExecMode::Tile {
         anyhow::bail!("tile mode is handled by coordinator::tile::train_dso_tile");
     }
-    let setup = DsoSetup::new(cfg, train);
+    let setup = DsoSetup::with_cache(cfg, train)?;
     anyhow::ensure!(
         !setup.faults.has_deaths() && !setup.faults.has_drops(),
         "fault plan injects worker death or message drops, which the bulk-synchronous \
@@ -241,7 +392,7 @@ pub fn run_replay_with(
     test: Option<&Dataset>,
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
-    let setup = DsoSetup::new(cfg, train);
+    let setup = DsoSetup::with_cache(cfg, train)?;
     run_epochs(cfg, train, test, &setup, true, obs)
 }
 
@@ -516,8 +667,16 @@ fn run_epoch_threaded(
                         let _guard = AbortOnPanic(abort);
                         let q = slot.q;
                         let mut backoff = Backoff::new(1, 32);
+                        // Out-of-core: fault in this epoch's first block
+                        // before the sweep touches it.
+                        setup.prefetch(q, slot.block_id);
                         for r in 0..p {
                             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(q, r));
+                            // Schedule-driven prefetch: while this block
+                            // sweeps, the next one along the ring pages in.
+                            if r + 1 < p {
+                                setup.prefetch(q, setup.schedule.owned_block(q, r + 1));
+                            }
                             // Injected stall: this worker is a straggler
                             // here. Outside the timed section — virtual
                             // compute stays that of the real kernel; the
@@ -615,6 +774,10 @@ fn run_epoch_serial(
     for r in 0..p {
         for slot in slots.iter_mut() {
             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(slot.q, r));
+            // Schedule-driven prefetch, same order as the threaded loop.
+            if r + 1 < p {
+                setup.prefetch(slot.q, setup.schedule.owned_block(slot.q, r + 1));
+            }
             let t0 = std::time::Instant::now();
             let n = visit_block(setup, slot, rule, epoch, r);
             slot.updates += n as u64;

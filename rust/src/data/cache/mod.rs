@@ -1,0 +1,791 @@
+//! Out-of-core packed-block cache: pack once, mmap thereafter.
+//!
+//! The paper's headline datasets (kdda, ocr, webspam-t — Table 2) do
+//! not fit comfortably in RAM next to the optimizer state, and packing
+//! `PackedBlocks` from text is itself a multi-pass job. This module
+//! serializes the packed form — lane-major `cols`/`vals` chunks, the
+//! `inv_col`/`inv_col32`/`inv_row` reciprocal tables, the
+//! `stripe_alpha_bias` coefficients, labels, and the optional
+//! `entry_group` sampling side tables — into one versioned,
+//! fingerprinted file, and reopens it as an mmap-backed arena so a
+//! later run demand-pages exactly the blocks it sweeps instead of
+//! re-parsing and re-packing the dataset.
+//!
+//! ## File format (`DSOBLK1`, little-endian)
+//!
+//! ```text
+//! header   magic[8] version:u32 flags:u32 config_fp:u64 content_hash:u64
+//!          m:u64 d:u64 nnz:u64 p:u64 n_sections:u64          (72 bytes)
+//! table    n_sections × { kind:u32 index:u32 off:u64 len:u64 } (24 B each)
+//! payload  sections, every `off` a 64-byte multiple
+//! ```
+//!
+//! Section kinds (index = stripe r/q or block q·p+r):
+//! row/col bounds (u64), row/col counts (u32), labels y (f32),
+//! `inv_col` (f64), `inv_col32` (f32, **mapped**), `inv_row` (f64),
+//! `alpha_bias` (f32, **mapped**), per-block `groups` (4×u32 per
+//! `RowGroup`), `cols` (u32, **mapped**), `vals` (f32, **mapped**),
+//! and optional `entry_group` (u32).
+//!
+//! **Alignment-on-mmap:** every section offset is a 64-byte multiple
+//! and `mmap` places the file at a page boundary (4096 = 64·64), so a
+//! mapped table's base address satisfies the `AVec` ALIGN=64 contract
+//! from the SIMD layer with zero copies — `simd::aligned::is_aligned`
+//! holds on every `BlockStore::Mapped` view (pinned by
+//! `tests/outofcore.rs`).
+//!
+//! **Integrity contract:** `config_fp` is the same run fingerprint the
+//! checkpoint/handshake layers use (`coordinator::checkpoint::
+//! fingerprint`); [`OpenedCache::require_fingerprint`] refuses a cache
+//! packed under a different configuration exactly like a foreign
+//! checkpoint. `content_hash` (FNV-1a) covers the *eagerly read*
+//! sections — bounds, counts, labels, f64 tables, group geometry, side
+//! tables — so corruption there is caught at open. The mapped payloads
+//! (`cols`/`vals`/`inv_col32`/`alpha_bias`) are deliberately excluded:
+//! hashing them would fault the whole file in and defeat demand
+//! paging. Their geometry is fully validated at open, and every sweep
+//! re-runs `check_packed_bounds` over the mapped slices, so corrupt
+//! payload bytes surface as a bounds panic, not silent divergence.
+//!
+//! **Prefetch coupling:** the DSO schedule is known per (worker,
+//! epoch, r) (`RingSchedule::owned_block`), so [`CacheHandle::
+//! prefetch`] lets the engines `madvise(WILLNEED)` the next block's
+//! `cols`/`vals` regions while the current block sweeps — each
+//! worker's resident set stays ~one block plus readahead.
+
+pub mod mmap;
+mod store;
+
+pub use store::BlockStore;
+
+use crate::partition::omega::{lane_span, PackedBlock, PackedBlocks, RowGroup};
+use crate::partition::Partition;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+#[cfg(unix)]
+use std::sync::Arc;
+
+#[cfg(unix)]
+use mmap::MapArena;
+
+const MAGIC: &[u8; 8] = b"DSOBLK1\0";
+const VERSION: u32 = 1;
+/// Header flag bit: `entry_group` sampling side tables are present.
+const FLAG_ENTRY_GROUP: u32 = 1;
+const HEADER_LEN: usize = 72;
+const TABLE_ENTRY_LEN: usize = 24;
+const SECTION_ALIGN: usize = 64;
+
+const K_ROW_BOUNDS: u32 = 1;
+const K_COL_BOUNDS: u32 = 2;
+const K_ROW_COUNTS: u32 = 3;
+const K_COL_COUNTS: u32 = 4;
+const K_Y: u32 = 5;
+const K_INV_COL: u32 = 6;
+const K_INV_COL32: u32 = 7;
+const K_INV_ROW: u32 = 8;
+const K_ALPHA_BIAS: u32 = 9;
+const K_GROUPS: u32 = 10;
+const K_COLS: u32 = 11;
+const K_VALS: u32 = 12;
+const K_ENTRY_GROUP: u32 = 13;
+
+/// Element size by section kind, for the `len % elem` geometry check.
+fn elem_size(kind: u32) -> usize {
+    match kind {
+        K_ROW_BOUNDS | K_COL_BOUNDS => 8,
+        K_INV_COL | K_INV_ROW => 8,
+        K_GROUPS => 16,
+        _ => 4,
+    }
+}
+
+/// Which kinds the open path reads eagerly (and `content_hash` covers).
+/// The complement — the mapped payload kinds — stays demand-paged.
+fn is_eager(kind: u32) -> bool {
+    !matches!(kind, K_INV_COL32 | K_ALPHA_BIAS | K_COLS | K_VALS)
+}
+
+/// FNV-1a, local to the cache layer (the checkpoint layer has its own
+/// private copy; sharing it would couple the format to an unrelated
+/// module's internals).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    let mut x = [0u8; 4];
+    x.copy_from_slice(&b[off..off + 4]);
+    u32::from_le_bytes(x)
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(x)
+}
+
+fn read_u32s(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn read_u64s(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
+fn read_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn read_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
+fn bytes_of_u32s(xs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        put_u32(&mut out, x);
+    }
+    out
+}
+
+fn bytes_of_f32s(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_of_f64s(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_of_usizes(xs: &[usize]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        put_u64(&mut out, x as u64);
+    }
+    out
+}
+
+fn align_up(off: usize) -> usize {
+    off.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+/// Canonical cache file path for a dataset inside `dir`: the dataset
+/// name with path separators neutralized, plus the `.dsoblk` suffix.
+pub fn cache_path(dir: &Path, dataset: &str) -> PathBuf {
+    let safe: String = dataset
+        .chars()
+        .map(|c| if c == '/' || c == '\\' || c == ':' || c.is_whitespace() { '_' } else { c })
+        .collect();
+    dir.join(format!("{safe}.dsoblk"))
+}
+
+/// Serialize packed blocks (+ labels and the per-stripe α-bias tables)
+/// into the cache file at `path`, atomically and durably.
+pub fn pack(
+    path: &Path,
+    omega: &PackedBlocks,
+    alpha_bias: &[BlockStore<f32>],
+    y: &[f32],
+    config_fp: u64,
+) -> Result<()> {
+    let p = omega.p;
+    anyhow::ensure!(alpha_bias.len() == p, "alpha_bias stripes != p");
+    anyhow::ensure!(y.len() == omega.row_part.n(), "labels != rows");
+    let with_tables = omega.blocks.iter().any(|b| !b.entry_group.is_empty());
+    let flags = if with_tables { FLAG_ENTRY_GROUP } else { 0 };
+
+    // (kind, index, payload bytes) in file order. Per block, `cols` is
+    // immediately followed by `vals` so one prefetch window covers the
+    // whole sweep working set of the block.
+    let mut secs: Vec<(u32, u32, Vec<u8>)> = Vec::new();
+    secs.push((K_ROW_BOUNDS, 0, bytes_of_usizes(&omega.row_part.bounds)));
+    secs.push((K_COL_BOUNDS, 0, bytes_of_usizes(&omega.col_part.bounds)));
+    secs.push((K_ROW_COUNTS, 0, bytes_of_u32s(&omega.row_counts)));
+    secs.push((K_COL_COUNTS, 0, bytes_of_u32s(&omega.col_counts)));
+    secs.push((K_Y, 0, bytes_of_f32s(y)));
+    for r in 0..p {
+        secs.push((K_INV_COL, r as u32, bytes_of_f64s(&omega.inv_col[r])));
+        secs.push((K_INV_COL32, r as u32, bytes_of_f32s(&omega.inv_col32[r])));
+    }
+    for q in 0..p {
+        secs.push((K_INV_ROW, q as u32, bytes_of_f64s(&omega.inv_row[q])));
+        secs.push((K_ALPHA_BIAS, q as u32, bytes_of_f32s(&alpha_bias[q])));
+    }
+    for qr in 0..p * p {
+        let b = &omega.blocks[qr];
+        let mut gbytes = Vec::with_capacity(b.groups.len() * 16);
+        for g in &b.groups {
+            put_u32(&mut gbytes, g.li);
+            put_u32(&mut gbytes, g.start);
+            put_u32(&mut gbytes, g.end);
+            put_u32(&mut gbytes, g.pad_start);
+        }
+        secs.push((K_GROUPS, qr as u32, gbytes));
+        secs.push((K_COLS, qr as u32, bytes_of_u32s(&b.cols)));
+        secs.push((K_VALS, qr as u32, bytes_of_f32s(&b.vals)));
+        if with_tables {
+            secs.push((K_ENTRY_GROUP, qr as u32, bytes_of_u32s(&b.entry_group)));
+        }
+    }
+
+    // Assign 64-byte-aligned offsets and hash the eager sections
+    // (framing + bytes) exactly as `open` will recompute it.
+    let table_end = HEADER_LEN + secs.len() * TABLE_ENTRY_LEN;
+    let mut off = align_up(table_end);
+    let mut offs = Vec::with_capacity(secs.len());
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for (kind, index, bytes) in &secs {
+        offs.push(off);
+        off = align_up(off + bytes.len());
+        if is_eager(*kind) {
+            hash = fnv1a(hash, &kind.to_le_bytes());
+            hash = fnv1a(hash, &index.to_le_bytes());
+            hash = fnv1a(hash, &(bytes.len() as u64).to_le_bytes());
+            hash = fnv1a(hash, bytes);
+        }
+    }
+    let file_len = off;
+
+    let mut out = Vec::with_capacity(file_len);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, flags);
+    put_u64(&mut out, config_fp);
+    put_u64(&mut out, hash);
+    put_u64(&mut out, omega.row_part.n() as u64);
+    put_u64(&mut out, omega.col_part.n() as u64);
+    put_u64(&mut out, omega.total_nnz() as u64);
+    put_u64(&mut out, p as u64);
+    put_u64(&mut out, secs.len() as u64);
+    debug_assert_eq!(out.len(), HEADER_LEN);
+    for ((kind, index, bytes), &o) in secs.iter().zip(&offs) {
+        put_u32(&mut out, *kind);
+        put_u32(&mut out, *index);
+        put_u64(&mut out, o as u64);
+        put_u64(&mut out, bytes.len() as u64);
+    }
+    for ((_, _, bytes), &o) in secs.iter().zip(&offs) {
+        out.resize(o, 0);
+        out.extend_from_slice(bytes);
+    }
+    out.resize(file_len, 0);
+
+    if let Some(parent) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| anyhow::anyhow!("creating cache dir {}: {e}", parent.display()))?;
+    }
+    crate::util::fsio::write_atomic_durable(path, &out)
+        .map_err(|e| anyhow::anyhow!("writing cache {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// The backing bytes of an opened cache: an mmap arena on unix, a fully
+/// resident buffer elsewhere (or wherever mapping is unavailable).
+enum Payload {
+    #[cfg(unix)]
+    Map(Arc<MapArena>),
+    #[cfg_attr(unix, allow(dead_code))]
+    Buf(Vec<u8>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            #[cfg(unix)]
+            Payload::Map(a) => a.len(),
+            Payload::Buf(b) => b.len(),
+        }
+    }
+
+    /// Borrow `[off, off + len)`. Callers validate the range against
+    /// `len()` first (the section geometry checks in `open`).
+    fn bytes(&self, off: usize, len: usize) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Payload::Map(a) => {
+                assert!(off + len <= a.len(), "section range outside arena");
+                if len == 0 {
+                    return &[];
+                }
+                // SAFETY: the assert above keeps [off, off+len) inside
+                // the live read-only mapping; u8 has alignment 1; the
+                // borrow is tied to &self, which owns the Arc keeping
+                // the mapping alive.
+                unsafe { std::slice::from_raw_parts(a.base().add(off), len) }
+            }
+            Payload::Buf(b) => &b[off..off + len],
+        }
+    }
+
+    /// A `BlockStore<u32>` over `[off, off + bytes)`: a zero-copy
+    /// mapped view when the payload is an arena, a decoded resident
+    /// table otherwise.
+    fn store_u32(&self, off: usize, bytes: usize) -> BlockStore<u32> {
+        match self {
+            #[cfg(unix)]
+            Payload::Map(a) => BlockStore::mapped(Arc::clone(a), off, bytes / 4),
+            Payload::Buf(_) => read_u32s(self.bytes(off, bytes)).into_iter().collect(),
+        }
+    }
+
+    fn store_f32(&self, off: usize, bytes: usize) -> BlockStore<f32> {
+        match self {
+            #[cfg(unix)]
+            Payload::Map(a) => BlockStore::mapped(Arc::clone(a), off, bytes / 4),
+            Payload::Buf(_) => read_f32s(self.bytes(off, bytes)).into_iter().collect(),
+        }
+    }
+}
+
+/// Schedule-driven prefetch driver over the mapped arena. Cheap to
+/// clone and share; a default handle (resident run, or non-unix build)
+/// makes every `prefetch` a no-op.
+#[derive(Clone, Debug, Default)]
+pub struct CacheHandle {
+    #[cfg(unix)]
+    inner: Option<Arc<Prefetcher>>,
+}
+
+#[cfg(unix)]
+#[derive(Debug)]
+struct Prefetcher {
+    arena: Arc<MapArena>,
+    p: usize,
+    /// Per block q·p+r: byte ranges of the `cols` and `vals` sections.
+    regions: Vec<[(usize, usize); 2]>,
+}
+
+impl CacheHandle {
+    /// Advise the kernel that block Ω^(q,r) will be swept soon. Purely
+    /// advisory (never fails, never blocks); no-op on resident runs.
+    pub fn prefetch(&self, q: usize, r: usize) {
+        #[cfg(unix)]
+        if let Some(pf) = &self.inner {
+            if q < pf.p && r < pf.p {
+                for &(off, len) in &pf.regions[q * pf.p + r] {
+                    pf.arena.advise_willneed(off, len);
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = (q, r);
+        }
+    }
+
+    /// Whether this handle actually drives an mmap arena (true only
+    /// for caches opened via [`open`] on unix).
+    pub fn is_active(&self) -> bool {
+        #[cfg(unix)]
+        {
+            self.inner.is_some()
+        }
+        #[cfg(not(unix))]
+        {
+            false
+        }
+    }
+}
+
+/// Everything `open` reconstructs from a cache file. `omega`'s hot
+/// tables (`cols`/`vals`/`inv_col32`) and `alpha_bias` are mmap views;
+/// the rest is resident (small, and read eagerly for validation).
+pub struct OpenedCache {
+    pub config_fp: u64,
+    pub m: usize,
+    pub d: usize,
+    pub nnz: usize,
+    pub p: usize,
+    pub y: Vec<f32>,
+    pub omega: PackedBlocks,
+    pub alpha_bias: Vec<BlockStore<f32>>,
+    pub handle: CacheHandle,
+}
+
+impl OpenedCache {
+    /// Refuse a cache packed under a different configuration — the same
+    /// contract (and message shape) as checkpoint resume and the proc
+    /// handshake.
+    pub fn require_fingerprint(&self, expected: u64, path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            self.config_fp == expected,
+            "cache {} was packed by a different run (fingerprint {:016x}, this configuration \
+             {expected:016x}); refusing to train from a foreign cache",
+            path.display(),
+            self.config_fp,
+        );
+        Ok(())
+    }
+}
+
+struct Sec {
+    kind: u32,
+    index: u32,
+    off: usize,
+    len: usize,
+}
+
+/// Open a cache file: validate header, geometry, and content hash, and
+/// reconstruct [`PackedBlocks`] with the hot tables as mmap views.
+pub fn open(path: &Path) -> Result<OpenedCache> {
+    #[cfg(unix)]
+    let payload = Payload::Map(Arc::new(
+        MapArena::map(path).map_err(|e| anyhow::anyhow!("mapping cache {}: {e}", path.display()))?,
+    ));
+    #[cfg(not(unix))]
+    let payload = Payload::Buf(
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("reading cache {}: {e}", path.display()))?,
+    );
+    let file_len = payload.len();
+    let ctx = |msg: String| anyhow::anyhow!("cache {}: {msg}", path.display());
+
+    anyhow::ensure!(file_len >= HEADER_LEN, ctx("truncated header".into()));
+    let header = payload.bytes(0, HEADER_LEN);
+    anyhow::ensure!(&header[..8] == MAGIC, ctx("not a dso block cache (bad magic)".into()));
+    let version = u32_at(header, 8);
+    anyhow::ensure!(version == VERSION, ctx(format!("unsupported cache version {version}")));
+    let flags = u32_at(header, 12);
+    let config_fp = u64_at(header, 16);
+    let content_hash = u64_at(header, 24);
+    let m = u64_at(header, 32) as usize;
+    let d = u64_at(header, 40) as usize;
+    let nnz = u64_at(header, 48) as usize;
+    let p = u64_at(header, 56) as usize;
+    let n_sections = u64_at(header, 64) as usize;
+    anyhow::ensure!(p >= 1 && p <= 1 << 12, ctx(format!("implausible p = {p}")));
+    anyhow::ensure!(
+        m <= 1 << 40 && d <= 1 << 40 && nnz <= 1 << 48,
+        ctx("implausible dimensions".into())
+    );
+    let table_end = HEADER_LEN
+        .checked_add(n_sections.checked_mul(TABLE_ENTRY_LEN).unwrap_or(usize::MAX))
+        .unwrap_or(usize::MAX);
+    anyhow::ensure!(table_end <= file_len, ctx("section table truncated".into()));
+
+    // Parse + geometry-check the section table, recomputing the
+    // content hash over the eager sections as we go.
+    let mut secs = Vec::with_capacity(n_sections);
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for s in 0..n_sections {
+        let e = payload.bytes(HEADER_LEN + s * TABLE_ENTRY_LEN, TABLE_ENTRY_LEN);
+        let kind = u32_at(e, 0);
+        let index = u32_at(e, 4);
+        let off = u64_at(e, 8) as usize;
+        let len = u64_at(e, 16) as usize;
+        anyhow::ensure!(
+            off % SECTION_ALIGN == 0,
+            ctx(format!("section {s} offset {off} not 64-byte aligned"))
+        );
+        anyhow::ensure!(
+            off >= table_end && off.checked_add(len).is_some_and(|end| end <= file_len),
+            ctx(format!("section {s} range {off}+{len} outside file"))
+        );
+        anyhow::ensure!(
+            len % elem_size(kind) == 0,
+            ctx(format!("section {s} length {len} not a multiple of its element size"))
+        );
+        if is_eager(kind) {
+            hash = fnv1a(hash, &kind.to_le_bytes());
+            hash = fnv1a(hash, &index.to_le_bytes());
+            hash = fnv1a(hash, &(len as u64).to_le_bytes());
+            hash = fnv1a(hash, payload.bytes(off, len));
+        }
+        secs.push(Sec { kind, index, off, len });
+    }
+    anyhow::ensure!(
+        hash == content_hash,
+        ctx(format!("content hash mismatch ({hash:016x} != {content_hash:016x}) — corrupt file"))
+    );
+
+    let find = |kind: u32, index: usize| -> Result<&Sec> {
+        secs.iter()
+            .find(|s| s.kind == kind && s.index as usize == index)
+            .ok_or_else(|| ctx(format!("missing section kind {kind} index {index}")))
+    };
+    let eager = |s: &Sec| payload.bytes(s.off, s.len);
+
+    // Partitions: monotone bounds from 0 to m/d, exactly p+1 entries.
+    let decode_bounds = |kind: u32, n: usize, what: &str| -> Result<Partition> {
+        let s = find(kind, 0)?;
+        let raw = read_u64s(eager(s));
+        anyhow::ensure!(raw.len() == p + 1, ctx(format!("{what} bounds: {} != p+1", raw.len())));
+        let bounds: Vec<usize> = raw.iter().map(|&v| v as usize).collect();
+        anyhow::ensure!(
+            bounds[0] == 0 && bounds[p] == n && bounds.windows(2).all(|w| w[0] <= w[1]),
+            ctx(format!("{what} bounds not a monotone cover of [0, {n})"))
+        );
+        Ok(Partition { bounds })
+    };
+    let row_part = decode_bounds(K_ROW_BOUNDS, m, "row")?;
+    let col_part = decode_bounds(K_COL_BOUNDS, d, "col")?;
+
+    let row_counts = read_u32s(eager(find(K_ROW_COUNTS, 0)?));
+    let col_counts = read_u32s(eager(find(K_COL_COUNTS, 0)?));
+    let y = read_f32s(eager(find(K_Y, 0)?));
+    anyhow::ensure!(row_counts.len() == m, ctx("row_counts length".into()));
+    anyhow::ensure!(col_counts.len() == d, ctx("col_counts length".into()));
+    anyhow::ensure!(y.len() == m, ctx("label section length".into()));
+
+    let mut inv_col = Vec::with_capacity(p);
+    let mut inv_col32 = Vec::with_capacity(p);
+    for r in 0..p {
+        let want = col_part.block_len(r);
+        let f64s = read_f64s(eager(find(K_INV_COL, r)?));
+        anyhow::ensure!(f64s.len() == want, ctx(format!("inv_col[{r}] length")));
+        inv_col.push(f64s);
+        let s32 = find(K_INV_COL32, r)?;
+        anyhow::ensure!(s32.len / 4 == want, ctx(format!("inv_col32[{r}] length")));
+        inv_col32.push(payload.store_f32(s32.off, s32.len));
+    }
+    let mut inv_row = Vec::with_capacity(p);
+    let mut alpha_bias = Vec::with_capacity(p);
+    for q in 0..p {
+        let want = row_part.block_len(q);
+        let f64s = read_f64s(eager(find(K_INV_ROW, q)?));
+        anyhow::ensure!(f64s.len() == want, ctx(format!("inv_row[{q}] length")));
+        inv_row.push(f64s);
+        let sb = find(K_ALPHA_BIAS, q)?;
+        anyhow::ensure!(sb.len / 4 == want, ctx(format!("alpha_bias[{q}] length")));
+        alpha_bias.push(payload.store_f32(sb.off, sb.len));
+    }
+
+    let with_tables = flags & FLAG_ENTRY_GROUP != 0;
+    let mut blocks = Vec::with_capacity(p * p);
+    #[cfg(unix)]
+    let mut regions: Vec<[(usize, usize); 2]> = Vec::with_capacity(p * p);
+    let mut total_nnz = 0usize;
+    for qr in 0..p * p {
+        let (q, r) = (qr / p, qr % p);
+        let n_rows = row_part.block_len(q) as u32;
+        let n_cols = col_part.block_len(r) as u32;
+        let gsec = find(K_GROUPS, qr)?;
+        let gb = eager(gsec);
+        let n_groups = gsec.len / 16;
+        let mut groups = Vec::with_capacity(n_groups);
+        let (mut next, mut pnext, mut padded, mut lane_groups) = (0u32, 0u32, 0usize, 0u32);
+        let mut prev_li: Option<u32> = None;
+        for gi in 0..n_groups {
+            let g = RowGroup {
+                li: u32_at(gb, gi * 16),
+                start: u32_at(gb, gi * 16 + 4),
+                end: u32_at(gb, gi * 16 + 8),
+                pad_start: u32_at(gb, gi * 16 + 12),
+            };
+            anyhow::ensure!(
+                g.start == next && g.end > g.start && g.pad_start == pnext,
+                ctx(format!("block ({q},{r}) group {gi} does not tile the block"))
+            );
+            anyhow::ensure!(
+                g.li < n_rows && prev_li.map_or(true, |pl| g.li > pl),
+                ctx(format!("block ({q},{r}) group {gi} row id out of order or stripe"))
+            );
+            let span = lane_span(g.len());
+            anyhow::ensure!(
+                (pnext as usize).checked_add(span).is_some_and(|v| v <= u32::MAX as usize),
+                ctx(format!("block ({q},{r}) physical layout overflows u32"))
+            );
+            if g.lane_eligible() {
+                lane_groups += 1;
+            }
+            next = g.end;
+            pnext += span as u32;
+            padded += span;
+            prev_li = Some(g.li);
+            groups.push(g);
+        }
+        let block_nnz = next as usize;
+        total_nnz += block_nnz;
+        let csec = find(K_COLS, qr)?;
+        let vsec = find(K_VALS, qr)?;
+        anyhow::ensure!(
+            csec.len / 4 == padded && vsec.len / 4 == padded,
+            ctx(format!("block ({q},{r}) cols/vals length != padded nnz {padded}"))
+        );
+        let entry_group = if with_tables {
+            let esec = find(K_ENTRY_GROUP, qr)?;
+            let table = read_u32s(eager(esec));
+            anyhow::ensure!(
+                table.len() == block_nnz && table.iter().all(|&gi| (gi as usize) < groups.len()),
+                ctx(format!("block ({q},{r}) entry_group table inconsistent"))
+            );
+            table
+        } else {
+            Vec::new()
+        };
+        #[cfg(unix)]
+        regions.push([(csec.off, csec.len), (vsec.off, vsec.len)]);
+        blocks.push(PackedBlock {
+            groups,
+            cols: payload.store_u32(csec.off, csec.len),
+            vals: payload.store_f32(vsec.off, vsec.len),
+            n_rows,
+            n_cols,
+            entry_group,
+            lane_groups,
+        });
+    }
+    anyhow::ensure!(
+        total_nnz == nnz,
+        ctx(format!("blocks cover {total_nnz} nonzeros, header says {nnz}"))
+    );
+
+    let handle = match &payload {
+        #[cfg(unix)]
+        Payload::Map(arena) => CacheHandle {
+            inner: Some(Arc::new(Prefetcher { arena: Arc::clone(arena), p, regions })),
+        },
+        Payload::Buf(_) => CacheHandle::default(),
+    };
+
+    let omega = PackedBlocks {
+        p,
+        blocks,
+        row_counts,
+        col_counts,
+        inv_col,
+        inv_col32,
+        inv_row,
+        m,
+        row_part,
+        col_part,
+    };
+    Ok(OpenedCache { config_fp, m, d, nnz, p, y, omega, alpha_bias, handle })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SparseSpec;
+
+    fn toy() -> (crate::data::Dataset, PackedBlocks, Vec<BlockStore<f32>>) {
+        let ds = SparseSpec {
+            name: "cache-toy".into(),
+            m: 60,
+            d: 40,
+            nnz_per_row: 10.0,
+            zipf_s: 0.7,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 7,
+        }
+        .generate();
+        let rp = Partition::even(ds.m(), 3);
+        let cp = Partition::even(ds.d(), 3);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp).with_sampling_tables();
+        let bias: Vec<BlockStore<f32>> =
+            om.stripe_alpha_bias(&ds.y).into_iter().map(Into::into).collect();
+        (ds, om, bias)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dso-cache-mod-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn pack_open_round_trips_all_tables() {
+        let (ds, om, bias) = toy();
+        let path = tmp("roundtrip.dsoblk");
+        pack(&path, &om, &bias, &ds.y, 0xABCD).unwrap();
+        let opened = open(&path).unwrap();
+        assert_eq!(opened.config_fp, 0xABCD);
+        assert_eq!((opened.m, opened.d, opened.p), (ds.m(), ds.d(), 3));
+        assert_eq!(opened.nnz, om.total_nnz());
+        assert_eq!(opened.y, ds.y);
+        assert_eq!(opened.omega.row_part, om.row_part);
+        assert_eq!(opened.omega.col_part, om.col_part);
+        assert_eq!(opened.omega.row_counts, om.row_counts);
+        assert_eq!(opened.omega.col_counts, om.col_counts);
+        assert_eq!(opened.omega.inv_col, om.inv_col);
+        assert_eq!(opened.omega.inv_row, om.inv_row);
+        for r in 0..3 {
+            assert_eq!(opened.omega.inv_col32[r], om.inv_col32[r]);
+            assert_eq!(opened.alpha_bias[r], bias[r]);
+        }
+        for qr in 0..9 {
+            assert_eq!(opened.omega.blocks[qr], om.blocks[qr], "block {qr}");
+        }
+        // The reconstructed blocks pass the full structural validator
+        // against the original matrix.
+        opened.omega.validate(&ds.x).unwrap();
+        // On unix the hot tables really are mapped and the prefetch
+        // handle is live.
+        #[cfg(unix)]
+        {
+            assert!(opened.omega.blocks[0].cols.is_mapped());
+            assert!(opened.handle.is_active());
+            opened.handle.prefetch(0, 2);
+            opened.handle.prefetch(9, 9); // out of range: no-op
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_refusal_names_both_prints() {
+        let (ds, om, bias) = toy();
+        let path = tmp("foreign.dsoblk");
+        pack(&path, &om, &bias, &ds.y, 0x1111).unwrap();
+        let opened = open(&path).unwrap();
+        opened.require_fingerprint(0x1111, &path).unwrap();
+        let err = opened.require_fingerprint(0x2222, &path).unwrap_err().to_string();
+        assert!(err.contains("different run") && err.contains("0000000000001111"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_eager_bytes_and_bad_magic_are_refused() {
+        let (ds, om, bias) = toy();
+        let path = tmp("corrupt.dsoblk");
+        pack(&path, &om, &bias, &ds.y, 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte in the first payload section (row bounds —
+        // eager, so hash-covered; the trailing bytes of the file can be
+        // alignment padding, which is rightly *not* covered).
+        let n = u64_at(&bytes, 64) as usize;
+        let first_payload = align_up(HEADER_LEN + n * TABLE_ENTRY_LEN);
+        bytes[first_payload] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path).unwrap_err().to_string();
+        assert!(err.contains("hash"), "{err}");
+        bytes[first_payload] ^= 0xFF; // restore
+        // Bad magic.
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(open(&path).unwrap_err().to_string().contains("magic"));
+        // Truncation.
+        std::fs::write(&path, &bytes[..40]).unwrap();
+        assert!(open(&path).unwrap_err().to_string().contains("truncated"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_path_neutralizes_separators() {
+        let p = cache_path(Path::new("/tmp/caches"), "data/set name");
+        assert_eq!(p, Path::new("/tmp/caches").join("data_set_name.dsoblk"));
+    }
+}

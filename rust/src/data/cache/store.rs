@@ -1,0 +1,273 @@
+//! `BlockStore<T>` — the storage cell behind every packed-block table.
+//!
+//! `partition::omega` historically stored its lane regions and
+//! reciprocal tables in `AVec<T>` (64-byte-aligned owned buffers). Out
+//! -of-core training needs the same tables to be *views into an mmap'd
+//! cache file* instead, without the sweep kernels or `PackedCtx`
+//! noticing. `BlockStore` is that seam: a two-arm enum (`Resident`
+//! owned `AVec`, `Mapped` view into a shared [`MapArena`]) that derefs
+//! to `&[T]` exactly like `AVec` does, so every existing consumer —
+//! kernels, validators, tests comparing against `Vec<T>` — keeps
+//! compiling unchanged.
+//!
+//! Builders (`PackedBlocks::build`, `finalize_lanes`) only ever create
+//! the `Resident` arm; the `Mapped` arm is created exclusively by
+//! `data::cache::open`, which validates the section geometry (64-byte
+//! offset, in-bounds, length a multiple of the element size) before a
+//! view is ever constructed. Mutating a `Mapped` store is a programmer
+//! error and panics.
+
+#[cfg(unix)]
+use std::sync::Arc;
+
+use crate::simd::AVec;
+
+#[cfg(unix)]
+use super::mmap::MapArena;
+
+/// Aligned table storage: owned (`Resident`) or an mmap view (`Mapped`).
+pub enum BlockStore<T: Copy> {
+    Resident(AVec<T>),
+    #[cfg(unix)]
+    Mapped {
+        /// Keeps the mapping alive for the lifetime of the view.
+        arena: Arc<MapArena>,
+        /// Byte offset of the section inside the arena (64-byte multiple).
+        off: usize,
+        /// Length in *elements* of `T`.
+        len: usize,
+    },
+}
+
+impl<T: Copy> BlockStore<T> {
+    /// Construct a mapped view. Callers (only `data::cache::open`) must
+    /// have validated that `off` is `ALIGN`-aligned and that
+    /// `off + len * size_of::<T>() <= arena.len()`; this re-checks both
+    /// so an unvalidated call cannot create an out-of-bounds view.
+    #[cfg(unix)]
+    pub(crate) fn mapped(arena: Arc<MapArena>, off: usize, len: usize) -> BlockStore<T> {
+        assert_eq!(off % crate::simd::aligned::ALIGN, 0, "mapped section offset not 64-byte aligned");
+        assert!(
+            off + len * std::mem::size_of::<T>() <= arena.len(),
+            "mapped section overruns the arena"
+        );
+        assert!(std::mem::align_of::<T>() <= crate::simd::aligned::ALIGN);
+        BlockStore::Mapped { arena, off, len }
+    }
+
+    /// True when backed by the mmap arena (used by the bit-identity and
+    /// alignment tests to assert a cache run really is out-of-core).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            BlockStore::Resident(_) => false,
+            #[cfg(unix)]
+            BlockStore::Mapped { .. } => true,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            BlockStore::Resident(v) => v,
+            #[cfg(unix)]
+            BlockStore::Mapped { arena, off, len } => {
+                if *len == 0 {
+                    return &[];
+                }
+                // SAFETY: `mapped()` checked that [off, off + len·size)
+                // lies inside the arena and that off satisfies T's
+                // alignment (64 ≥ align_of::<T>() for the POD element
+                // types used here); the Arc keeps the mapping alive for
+                // the returned borrow's lifetime (tied to &self); the
+                // mapping is PROT_READ and never mutated, and T is
+                // Copy/POD so any byte pattern is a valid value for the
+                // u32/f32/f64 instantiations this crate creates.
+                unsafe { std::slice::from_raw_parts(arena.base().add(*off) as *const T, *len) }
+            }
+        }
+    }
+
+    /// Mutable view for builders and the sentinel-mutation test
+    /// harnesses. Panics on `Mapped`: the cache file is PROT_READ and
+    /// immutable by construction; no builder ever sees that arm.
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        match self {
+            BlockStore::Resident(v) => v.as_mut_slice(),
+            #[cfg(unix)]
+            BlockStore::Mapped { .. } => panic!("mapped block storage is immutable"),
+        }
+    }
+
+    /// Builder-path append. Panics on `Mapped`: the cache file is
+    /// immutable by construction and no builder ever sees that arm.
+    pub fn push(&mut self, value: T) {
+        match self {
+            BlockStore::Resident(v) => v.push(value),
+            #[cfg(unix)]
+            BlockStore::Mapped { .. } => panic!("mapped block storage is immutable"),
+        }
+    }
+
+    /// Builder-path bulk append. Same `Mapped` panic as [`push`].
+    pub fn extend_from_slice(&mut self, src: &[T]) {
+        match self {
+            BlockStore::Resident(v) => v.extend_from_slice(src),
+            #[cfg(unix)]
+            BlockStore::Mapped { .. } => panic!("mapped block storage is immutable"),
+        }
+    }
+}
+
+impl<T: Copy> std::ops::Deref for BlockStore<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy> std::ops::DerefMut for BlockStore<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Copy> Default for BlockStore<T> {
+    fn default() -> Self {
+        BlockStore::Resident(AVec::new())
+    }
+}
+
+impl<T: Copy> From<AVec<T>> for BlockStore<T> {
+    fn from(v: AVec<T>) -> Self {
+        BlockStore::Resident(v)
+    }
+}
+
+impl<T: Copy> Clone for BlockStore<T> {
+    fn clone(&self) -> Self {
+        match self {
+            BlockStore::Resident(v) => BlockStore::Resident(v.clone()),
+            // Cloning a view shares the arena — cheap, and keeps a
+            // cloned PackedBlocks out-of-core instead of faulting the
+            // whole file in.
+            #[cfg(unix)]
+            BlockStore::Mapped { arena, off, len } => {
+                BlockStore::Mapped { arena: Arc::clone(arena), off: *off, len: *len }
+            }
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for BlockStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for BlockStore<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Mixed comparisons mirroring `AVec`'s, so the omega tests keep
+/// writing `assert_eq!(block.cols, vec![..])`.
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for BlockStore<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq, const N: usize> PartialEq<[T; N]> for BlockStore<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+impl<T: Copy> FromIterator<T> for BlockStore<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        BlockStore::Resident(iter.into_iter().collect())
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a BlockStore<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::aligned::is_aligned;
+
+    #[test]
+    fn resident_store_behaves_like_avec() {
+        let mut s: BlockStore<u32> = BlockStore::default();
+        assert!(!s.is_mapped());
+        s.push(1);
+        s.extend_from_slice(&[2, 3]);
+        assert_eq!(s, vec![1, 2, 3]);
+        assert_eq!(s, [1u32, 2, 3]);
+        assert_eq!(s.len(), 3);
+        assert!(is_aligned(&s[..]));
+        let t = s.clone();
+        assert_eq!(t, s);
+        let u: BlockStore<u32> = (1..=3).collect();
+        assert_eq!(u, s);
+        assert_eq!(format!("{:?}", u), "[1, 2, 3]");
+        assert_eq!(u.iter().sum::<u32>(), 6);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_store_views_the_arena_aligned() {
+        let dir = std::env::temp_dir().join("dso-blockstore-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.bin");
+        // 64 bytes of padding, then 4 f32 values at offset 64.
+        let mut bytes = vec![0u8; 64];
+        for v in [1.5f32, -2.0, 0.25, 8.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let arena = Arc::new(MapArena::map(&path).unwrap());
+        let s: BlockStore<f32> = BlockStore::mapped(Arc::clone(&arena), 64, 4);
+        assert!(s.is_mapped());
+        assert_eq!(s, vec![1.5f32, -2.0, 0.25, 8.0]);
+        assert!(is_aligned(&s[..]));
+        let t = s.clone();
+        drop(arena);
+        drop(s);
+        // The clone's Arc keeps the mapping alive.
+        assert_eq!(t[3], 8.0);
+        let empty: BlockStore<u32> = BlockStore::mapped(t.clone_arena(), 0, 0);
+        assert_eq!(empty.len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    #[should_panic(expected = "immutable")]
+    fn mapped_store_rejects_mutation() {
+        let dir = std::env::temp_dir().join("dso-blockstore-immut");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.bin");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let arena = Arc::new(MapArena::map(&path).unwrap());
+        let mut s: BlockStore<u32> = BlockStore::mapped(arena, 0, 4);
+        std::fs::remove_dir_all(&dir).ok();
+        s.push(7);
+    }
+
+    #[cfg(unix)]
+    impl<T: Copy> BlockStore<T> {
+        fn clone_arena(&self) -> Arc<MapArena> {
+            match self {
+                BlockStore::Mapped { arena, .. } => Arc::clone(arena),
+                BlockStore::Resident(_) => unreachable!(),
+            }
+        }
+    }
+}

@@ -54,7 +54,16 @@ pub fn parse(name: &str, text: &str, min_dim: usize) -> Result<Dataset, LibsvmEr
             continue;
         }
         let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts.next().unwrap();
+        // The trim + is_empty skip above makes an empty token stream
+        // unreachable for ASCII whitespace, but `trim` and
+        // `split_ascii_whitespace` disagree on non-ASCII whitespace
+        // (e.g. U+00A0) — never panic on data, report the line instead.
+        let Some(label_tok) = parts.next() else {
+            return Err(LibsvmError::Parse {
+                line: lineno + 1,
+                msg: "no label token on non-empty line".into(),
+            });
+        };
         let label: f32 = label_tok.parse().map_err(|_| LibsvmError::Parse {
             line: lineno + 1,
             msg: format!("bad label '{label_tok}'"),
@@ -73,6 +82,16 @@ pub fn parse(name: &str, text: &str, min_dim: usize) -> Result<Dataset, LibsvmEr
                 return Err(LibsvmError::Parse {
                     line: lineno + 1,
                     msg: "libsvm indices are 1-based; found 0".into(),
+                });
+            }
+            // Same hardening on the out-of-range side: `(idx - 1) as
+            // u32` below would silently truncate, and the SIMD gather
+            // path additionally requires column ids ≤ i32::MAX (signed
+            // 32-bit gather indices). Refuse with the line number.
+            if idx - 1 > i32::MAX as usize {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: format!("index {idx} out of range (max {})", i32::MAX as i64 + 1),
                 });
             }
             let val: f32 = val_s.parse().map_err(|_| LibsvmError::Parse {
@@ -164,6 +183,33 @@ mod tests {
     #[test]
     fn parse_rejects_zero_index() {
         assert!(parse("t", "1 0:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn parse_handles_whitespace_only_line() {
+        // ASCII whitespace-only lines are skipped, not parsed as rows —
+        // and must never panic.
+        let ds = parse("t", "1 1:1\n \t \n-1 2:1\n", 0).unwrap();
+        assert_eq!(ds.m(), 2);
+        // Non-ASCII whitespace (U+00A0) survives `trim`'s skip but
+        // yields no ASCII tokens: reported as a parse error with the
+        // line number, not a panic.
+        let err = parse("t", "1 1:1\n\u{a0}\u{a0}\n", 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2") && msg.contains("label"), "{msg}");
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_index_with_line() {
+        // Indices past i32::MAX would truncate in the u32 narrowing and
+        // break the SIMD gather bound; refused, naming the line.
+        let text = format!("1 1:1\n1 {}:1\n", (i32::MAX as i64) + 2);
+        let err = parse("t", &text, 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2") && msg.contains("out of range"), "{msg}");
+        // The largest admissible index still parses.
+        let ok = parse("t", &format!("1 {}:1\n", (i32::MAX as i64) + 1), 0);
+        assert!(ok.is_ok());
     }
 
     #[test]

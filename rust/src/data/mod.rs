@@ -1,11 +1,13 @@
 //! Data substrate: sparse matrix storage, LIBSVM interchange, synthetic
 //! dataset generators, and the Table 2 dataset registry.
 
+pub mod cache;
 pub mod dataset;
 pub mod libsvm;
 pub mod registry;
 pub mod sparse;
 pub mod synth;
 
+pub use cache::{BlockStore, CacheHandle};
 pub use dataset::{Dataset, DatasetStats};
 pub use sparse::{Csc, Csr};

@@ -504,6 +504,10 @@ struct RingOutcome {
 struct Ring<'a> {
     cfg: &'a TrainConfig,
     fp: u64,
+    /// Out-of-core handoff: nonempty = path of the packed `.dsoblk`
+    /// cache workers mmap instead of receiving the shard as libsvm
+    /// text over the socket.
+    cache_file: String,
     p: usize,
     target: u64,
     death_timeout: Duration,
@@ -687,13 +691,19 @@ impl Ring<'_> {
             None => pr.conn = Some(FrameConn::new(stream)),
         }
         if !pr.ready {
+            // With a packed cache on disk, hand the worker its path
+            // instead of serializing the whole shard into the frame —
+            // the dataset never crosses the socket.
+            let libsvm =
+                if self.cache_file.is_empty() { libsvm::emit(train) } else { String::new() };
             pr.send(&Msg::Start {
                 fingerprint: self.fp,
                 heartbeat_ms: self.cfg.cluster.heartbeat_ms,
                 cfg_toml: wire::emit_config(self.cfg),
                 ds_name: train.name.clone(),
                 d: train.d() as u64,
-                libsvm: libsvm::emit(train),
+                libsvm,
+                cache_path: self.cache_file.clone(),
             });
         } else if self.stop {
             pr.send(&Msg::Shutdown);
@@ -774,11 +784,25 @@ pub fn train_dso_proc_with(
         "dso-proc needs heartbeat_ms > 0 and death_timeout_ms > heartbeat_ms \
          (death detection is timeout-based)"
     );
-    let setup = DsoSetup::new(cfg, train);
+    let setup = DsoSetup::with_cache(cfg, train)?;
     let p = setup.p;
     let loss = setup.problem.loss;
     let fp =
         checkpoint::fingerprint(cfg, train.m(), train.d(), train.x.nnz(), p, setup.plan.simd());
+    // Workers get the cache path (and no embedded shard) whenever a
+    // packed file exists for this run — `with_cache` just built or
+    // validated it for Build/Use/Auto.
+    let cache_file = if cfg.cluster.cache != crate::config::CacheMode::Off
+        && !cfg.cluster.cache_dir.is_empty()
+    {
+        let path = crate::data::cache::cache_path(
+            std::path::Path::new(&cfg.cluster.cache_dir),
+            &train.name,
+        );
+        if path.exists() { path.to_string_lossy().into_owned() } else { String::new() }
+    } else {
+        String::new()
+    };
     let death_timeout = Duration::from_millis(cfg.cluster.death_timeout_ms);
     let heartbeat = Duration::from_millis(cfg.cluster.heartbeat_ms);
 
@@ -855,6 +879,7 @@ pub fn train_dso_proc_with(
     let mut ring = Ring {
         cfg,
         fp,
+        cache_file,
         p,
         target: (cfg.optim.epochs as u64) * (p as u64) * (p as u64),
         death_timeout,
@@ -1165,18 +1190,41 @@ pub fn worker_main(socket: &Path, worker: usize) -> Result<()> {
             ConnIn::Eof => anyhow::bail!("worker {worker}: supervisor hung up before Start"),
         }
     };
-    let Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm: ls } = start else {
+    let Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm: ls, cache_path } =
+        start
+    else {
         unreachable!("loop above only breaks on Start");
     };
     let cfg = TrainConfig::from_toml(&cfg_toml).map_err(anyhow::Error::msg)?;
-    let train = libsvm::parse(&ds_name, &ls, d as usize)?;
-    let setup = DsoSetup::new(&cfg, &train);
+    // Out-of-core handoff: a nonempty cache path replaces the embedded
+    // libsvm shard — the worker mmaps the same fingerprinted `.dsoblk`
+    // the supervisor packed/validated, demand-paging the block payload
+    // instead of re-parsing and re-packing text. The fingerprint check
+    // below still runs on the worker's own recomputation, so a cache
+    // swapped underneath the handshake is refused the same way a
+    // foreign worker is.
+    let (setup, y, nnz) = if cache_path.is_empty() {
+        let train = libsvm::parse(&ds_name, &ls, d as usize)?;
+        let nnz = train.x.nnz();
+        let y = train.y.clone();
+        (DsoSetup::new(&cfg, &train), y, nnz)
+    } else {
+        let path = Path::new(&cache_path);
+        let opened = crate::data::cache::open(path)?;
+        let pw = cfg.workers().min(opened.m).min(opened.d).max(1);
+        let simd = crate::simd::resolve(cfg.cluster.simd);
+        let fpc = checkpoint::fingerprint(&cfg, opened.m, opened.d, opened.nnz, pw, simd);
+        opened.require_fingerprint(fpc, path)?;
+        let nnz = opened.nnz;
+        let y = opened.y.clone();
+        (DsoSetup::from_cache(&cfg, opened), y, nnz)
+    };
     anyhow::ensure!(worker < setup.p, "worker id {worker} out of range (p = {})", setup.p);
     let mut fpw = checkpoint::fingerprint(
         &cfg,
-        train.m(),
-        train.d(),
-        train.x.nnz(),
+        setup.omega.row_part.n(),
+        setup.omega.col_part.n(),
+        nnz,
         setup.p,
         setup.plan.simd(),
     );
@@ -1204,7 +1252,7 @@ pub fn worker_main(socket: &Path, worker: usize) -> Result<()> {
             .omega
             .row_part
             .block(worker)
-            .map(|i| loss.alpha_init(train.y[i] as f64) as f32)
+            .map(|i| loss.alpha_init(y[i] as f64) as f32)
             .collect(),
         a_acc: vec![0f32; setup.omega.row_part.block_len(worker)],
     }];
@@ -1273,6 +1321,11 @@ pub fn worker_main(socket: &Path, worker: usize) -> Result<()> {
                 }
                 expect += 1;
                 let _ = conn.send(&Msg::Ack { seq });
+                // Out-of-core: page in the delivered block's payload
+                // for every stripe this worker owns before the sweep.
+                for s in stripes.iter() {
+                    setup.prefetch(s.q, block_id as usize);
+                }
                 // Injected faults fire at this worker-local visit
                 // coordinate, before the sweep — a killed visit is
                 // never logged.

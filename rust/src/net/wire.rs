@@ -449,6 +449,10 @@ pub enum Msg {
         ds_name: String,
         d: u64,
         libsvm: String,
+        /// Out-of-core handoff: when nonempty, the worker mmaps this
+        /// `.dsoblk` cache instead of parsing `libsvm` (which is then
+        /// empty — the shard never crosses the socket).
+        cache_path: String,
     },
     /// Handshake reply: the worker's independently recomputed
     /// fingerprint. A mismatch aborts the run (foreign worker).
@@ -489,7 +493,7 @@ impl Msg {
                 put_u8(&mut b, T_HELLO);
                 put_u32(&mut b, *worker);
             }
-            Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm } => {
+            Msg::Start { fingerprint, heartbeat_ms, cfg_toml, ds_name, d, libsvm, cache_path } => {
                 put_u8(&mut b, T_START);
                 put_u64(&mut b, *fingerprint);
                 put_u64(&mut b, *heartbeat_ms);
@@ -497,6 +501,7 @@ impl Msg {
                 put_str(&mut b, ds_name);
                 put_u64(&mut b, *d);
                 put_str(&mut b, libsvm);
+                put_str(&mut b, cache_path);
             }
             Msg::Ready { worker, fingerprint } => {
                 put_u8(&mut b, T_READY);
@@ -554,6 +559,7 @@ impl Msg {
                 ds_name: rd.str()?,
                 d: rd.u64()?,
                 libsvm: rd.str()?,
+                cache_path: rd.str()?,
             },
             T_READY => Msg::Ready { worker: rd.u32()?, fingerprint: rd.u64()? },
             T_DELIVER => Msg::Deliver {
@@ -710,6 +716,7 @@ mod tests {
                 ds_name: "synth".into(),
                 d: 60,
                 libsvm: "+1 1:0.5 7:-0.25\n-1 2:1\n".into(),
+                cache_path: "/tmp/dso-cache/synth.dsoblk".into(),
             },
             Msg::Ready { worker: 3, fingerprint: 42 },
             Msg::Deliver {

@@ -94,11 +94,21 @@ impl Partition {
             // q−1 stays at least one lane wide) and the largest lane
             // multiple that still leaves `lane` items for each of the
             // p−q stripes after this cut. lo ≤ hi holds inductively
-            // from n ≥ p·lane, and both ends are lane multiples, so
-            // the clamped bound always is too.
+            // from n ≥ p·lane (prev is a lane multiple ≤ the previous
+            // hi, so prev + lane ≤ (n − (p−q)·lane)/lane·lane by the
+            // floor identity), and both ends are lane multiples, so the
+            // clamped bound always is too. The explicit min/max order
+            // (rather than `clamp`, which panics when lo > hi) plus the
+            // final `.min(n)` keeps even an adversarial, non-monotone
+            // `bounds` input from ever producing a boundary past n —
+            // the out-of-core packer trusts these bounds to index
+            // stripe tables (property-tested below with hand-built
+            // hostile partitions).
             let lo = prev + lane;
             let hi = (n - (p - q) * lane) / lane * lane;
-            let r = ((self.bounds[q] + lane / 2) / lane * lane).clamp(lo, hi);
+            let want = (self.bounds[q].min(n) + lane / 2) / lane * lane;
+            let r = want.min(hi).max(lo).min(n);
+            debug_assert!(lo <= hi && r <= n, "lane_aligned window broken: lo={lo} hi={hi} n={n}");
             self.bounds[q] = r;
             prev = r;
         }
@@ -256,6 +266,54 @@ mod tests {
             }
             for q in 1..p_count {
                 let b = part.bounds[q];
+                prop::assert_that(b % lane == 0, format!("bound {b} not aligned to {lane}"))?;
+            }
+            for q in 0..p_count {
+                prop::assert_that(
+                    part.block_len(q) >= lane,
+                    format!("stripe {q} narrower than a lane: {:?}", part.bounds),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lane_aligned_adversarial_bounds_stay_in_range() {
+        // The balanced() constructor always emits monotone cuts, but
+        // lane_aligned must hold its invariants for *any* bounds a
+        // caller could hand-build (hostile skews, repeated cuts, cuts
+        // pinned at 0 or n): no boundary past n, every interior bound a
+        // lane multiple, every stripe at least one lane wide when the
+        // width budget allows. This is the clamp audit's regression
+        // net for the out-of-core packer, which indexes stripe tables
+        // straight off these bounds.
+        prop::check("lane aligned adversarial", 200, |g| {
+            let n = g.usize_in(1, 400);
+            let p_count = g.usize_in(1, 8);
+            let lane = *g.pick(&[4usize, 8, 16]);
+            let mut cuts: Vec<usize> = (0..p_count - 1)
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0,        // pinned at the left edge
+                    1 => n,        // pinned at the right edge
+                    _ => g.usize_in(0, n),
+                })
+                .collect();
+            cuts.sort_unstable();
+            let mut bounds = vec![0usize];
+            bounds.extend(cuts);
+            bounds.push(n);
+            let before = Partition { bounds };
+            let part = before.clone().lane_aligned(lane);
+            part.validate().map_err(|e| e)?;
+            prop::assert_that(part.p() == p_count, "block count")?;
+            prop::assert_that(part.n() == n, "n preserved")?;
+            if n < p_count * lane {
+                return prop::assert_that(part.bounds == before.bounds, "changed when narrow");
+            }
+            for q in 1..p_count {
+                let b = part.bounds[q];
+                prop::assert_that(b <= n, format!("bound {b} past n={n}"))?;
                 prop::assert_that(b % lane == 0, format!("bound {b} not aligned to {lane}"))?;
             }
             for q in 0..p_count {

@@ -89,6 +89,7 @@
 //! points.
 
 use super::Partition;
+use crate::data::cache::BlockStore;
 use crate::data::sparse::Csr;
 use crate::simd::aligned::{is_aligned, AVec};
 
@@ -175,13 +176,15 @@ pub struct PackedBlock {
     pub groups: Vec<RowGroup>,
     /// Block-local column id per physical slot, sorted within each
     /// group's real prefix; sentinel slots hold [`SENTINEL_COL`].
-    /// 64-byte-aligned storage ([`AVec`]) — the §Alignment contract the
-    /// explicit-SIMD backend's vector loads rely on.
-    pub cols: AVec<u32>,
+    /// 64-byte-aligned storage ([`BlockStore`]: an owned [`AVec`] after
+    /// `build`, or an mmap view after `data::cache::open` — both honor
+    /// the §Alignment contract the explicit-SIMD backend's vector loads
+    /// rely on).
+    pub cols: BlockStore<u32>,
     /// Pre-scaled value x_ij/m per physical slot (f32 — matches the
     /// parameter precision; the scalar kernel computes in f64).
     /// Sentinel slots hold 0.0. 64-byte-aligned like `cols`.
-    pub vals: AVec<f32>,
+    pub vals: BlockStore<f32>,
     /// Row-stripe height (bound on `li`, exclusive).
     pub n_rows: u32,
     /// Column-stripe width (bound on `cols`, exclusive).
@@ -288,8 +291,8 @@ impl PackedBlock {
                 vals.push(0.0);
             }
         }
-        self.cols = cols;
-        self.vals = vals;
+        self.cols = cols.into();
+        self.vals = vals.into();
     }
 }
 
@@ -310,8 +313,9 @@ pub struct PackedBlocks {
     /// f32 mirror of `inv_col`, gathered by the 8-wide f32 lane kernel
     /// (half the bandwidth of the f64 table on the gather port).
     /// 64-byte-aligned per stripe — the AVX2 backend's
-    /// `_mm256_i32gather_ps` base.
-    pub inv_col32: Vec<AVec<f32>>,
+    /// `_mm256_i32gather_ps` base. [`BlockStore`] so an out-of-core run
+    /// maps the table instead of owning it.
+    pub inv_col32: Vec<BlockStore<f32>>,
     /// 1/(m·|Ω_i|) per row stripe q, indexed by block-local row.
     /// 0.0 for empty rows (never read by the sweep).
     pub inv_row: Vec<Vec<f64>>,
@@ -377,7 +381,7 @@ impl PackedBlocks {
                     .collect()
             })
             .collect();
-        let inv_col32: Vec<AVec<f32>> =
+        let inv_col32: Vec<BlockStore<f32>> =
             inv_col.iter().map(|t| t.iter().map(|&v| v as f32).collect()).collect();
         let inv_row: Vec<Vec<f64>> = (0..p)
             .map(|q| {

@@ -1,0 +1,77 @@
+//! Crash-durable atomic file publication, shared by the checkpoint
+//! writer and the packed-block cache packer.
+//!
+//! `rename`-over-the-target gives *atomicity* (readers see the old file
+//! or the new file, never a torn one) but not *durability*: after a
+//! power cut the filesystem may have persisted the rename without the
+//! temp file's data blocks, leaving a complete-looking name pointing at
+//! garbage. The contract here is the full POSIX sequence:
+//!
+//! 1. write `<name>.<pid>.tmp` in the target's directory — the pid
+//!    suffix keeps two concurrent runs pointed at the same path from
+//!    clobbering each other's in-flight temp file (the final `rename`
+//!    stays last-writer-wins, which is the intended semantics);
+//! 2. `fsync` the temp file, so its data is on disk *before* any name
+//!    points at it;
+//! 3. `rename` over the target;
+//! 4. `fsync` the parent directory, so the rename itself (a directory
+//!    mutation) survives a crash. Best-effort on platforms where a
+//!    directory cannot be opened or synced (the write is still atomic
+//!    and the data blocks are durable either way).
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write `bytes` to `path` atomically and durably (see module docs).
+pub fn write_atomic_durable(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let name = path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default();
+    let tmp = path.with_file_name(format!("{name}.{}.tmp", std::process::id()));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(df) = std::fs::File::open(dir) {
+            let _ = df.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publishes_atomically_and_cleans_temp() {
+        let dir = std::env::temp_dir().join("dso-fsio-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("target.bin");
+        write_atomic_durable(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic_durable(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // No `*.tmp` (pid-suffixed or otherwise) left behind.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let n = entry.unwrap().file_name().to_string_lossy().to_string();
+            assert!(!n.ends_with(".tmp"), "leftover temp file {n}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_rename_removes_temp() {
+        // Renaming into a path whose parent does not exist fails; the
+        // temp file must not survive the failure.
+        let dir = std::env::temp_dir().join("dso-fsio-fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("no-such-subdir").join("t.bin");
+        // File::create on the temp (same missing dir) already fails.
+        assert!(write_atomic_durable(&path, b"x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod fsio;
 pub mod json;
 pub mod logger;
 pub mod prop;

@@ -1,0 +1,262 @@
+//! Out-of-core cache integration (DESIGN.md §Out-of-core).
+//!
+//! The contract under test: a `--cache use` run — packed blocks and
+//! α-bias tables mmap'd from a `.dsoblk` file, payload demand-paged,
+//! prefetch driven by the sweep schedule — produces **bit-identical**
+//! `(w, α)` to the all-resident run, on both the synchronous scalar
+//! engine and the asynchronous ring; a cache packed under a different
+//! configuration is refused the same way a foreign checkpoint is; and
+//! the pack/open round trip preserves every table, including the
+//! 64-byte alignment the lane kernels require.
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, CacheMode, TrainConfig};
+use dso::coordinator::DsoSetup;
+use dso::data::cache;
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+use dso::partition::{PackedBlocks, Partition};
+use dso::simd::is_aligned;
+use std::path::PathBuf;
+
+fn dataset(m: usize, d: usize, seed: u64) -> Dataset {
+    SparseSpec {
+        name: "outofcore-test".into(),
+        m,
+        d,
+        nnz_per_row: 8.0,
+        zipf_s: 0.8,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed,
+    }
+    .generate()
+}
+
+fn base_cfg(p: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.algorithm = Algorithm::Dso;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.5;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = p;
+    cfg.cluster.cores = 1;
+    cfg.monitor.every = 0;
+    cfg
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dso-outofcore-{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// pack → open preserves every table bit-for-bit: partitions, counts,
+/// reciprocal tables, α-bias, labels, every block's group/cols/vals
+/// regions, and the sampling side tables — with the mapped f32/u32
+/// tables landing on 64-byte boundaries (the §Alignment contract holds
+/// for views into the file, not just owned buffers).
+#[test]
+fn cache_roundtrip_preserves_every_table() {
+    let ds = dataset(120, 72, 3);
+    let p = 3;
+    let rp = Partition::even(ds.m(), p);
+    let cp = Partition::even(ds.d(), p);
+    let om = PackedBlocks::build(&ds.x, &rp, &cp).with_sampling_tables();
+    let bias: Vec<dso::data::BlockStore<f32>> =
+        om.stripe_alpha_bias(&ds.y).into_iter().map(Into::into).collect();
+    let dir = temp_dir("roundtrip");
+    let path = cache::cache_path(&dir, &ds.name);
+    cache::pack(&path, &om, &bias, &ds.y, 0xA11C_E55E).unwrap();
+    let opened = cache::open(&path).unwrap();
+    assert_eq!(opened.config_fp, 0xA11C_E55E);
+    assert_eq!((opened.m, opened.d, opened.p), (ds.m(), ds.d(), p));
+    assert_bits_eq(&opened.y, &ds.y, "y");
+    assert_eq!(opened.omega.row_part.bounds, om.row_part.bounds);
+    assert_eq!(opened.omega.col_part.bounds, om.col_part.bounds);
+    assert_eq!(opened.omega.row_counts, om.row_counts);
+    assert_eq!(opened.omega.col_counts, om.col_counts);
+    for r in 0..p {
+        assert_eq!(opened.omega.inv_col[r], om.inv_col[r], "inv_col[{r}]");
+        assert_eq!(opened.omega.inv_col32[r], om.inv_col32[r], "inv_col32[{r}]");
+        assert!(is_aligned(&opened.omega.inv_col32[r][..]), "inv_col32[{r}] alignment");
+    }
+    for q in 0..p {
+        assert_eq!(opened.omega.inv_row[q], om.inv_row[q], "inv_row[{q}]");
+        assert_eq!(opened.alpha_bias[q], bias[q], "alpha_bias[{q}]");
+        assert!(is_aligned(&opened.alpha_bias[q][..]), "alpha_bias[{q}] alignment");
+    }
+    for (i, (a, b)) in opened.omega.blocks.iter().zip(&om.blocks).enumerate() {
+        assert_eq!(a.groups, b.groups, "block {i} groups");
+        assert_eq!(a.cols, b.cols, "block {i} cols");
+        assert_eq!(a.vals, b.vals, "block {i} vals");
+        assert_eq!(a.entry_group, b.entry_group, "block {i} entry_group");
+        assert_eq!(a.lane_groups, b.lane_groups, "block {i} lane_groups");
+        assert_eq!(a.n_rows, b.n_rows, "block {i} n_rows");
+        assert!(is_aligned(&a.cols[..]), "block {i} cols alignment");
+        assert!(is_aligned(&a.vals[..]), "block {i} vals alignment");
+    }
+    // The reconstruction passes the same structural validation the
+    // builder output does.
+    opened.omega.validate(&ds.x).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--cache use` is bit-identical to the resident run on the threaded
+/// synchronous engine, and the setup it trains from really is mapped.
+#[test]
+fn mapped_fit_matches_resident_bitwise_sync() {
+    let ds = dataset(160, 64, 11);
+    let cfg = base_cfg(2, 4);
+    let dir = temp_dir("sync");
+    let dir_s = dir.to_str().unwrap();
+
+    let resident = Trainer::new(cfg.clone()).fit(&ds, None).unwrap();
+    // Build mode trains resident too (it packs, then runs in memory).
+    let built = Trainer::new(cfg.clone())
+        .cache(CacheMode::Build)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    assert_bits_eq(&resident.result.w, &built.result.w, "build w");
+    assert_bits_eq(&resident.result.alpha, &built.result.alpha, "build alpha");
+
+    // The `use` setup is genuinely out-of-core on unix (resident
+    // fallback elsewhere), and its packed geometry is validated.
+    let mut cfg_use = cfg.clone();
+    cfg_use.cluster.cache = CacheMode::Use;
+    cfg_use.cluster.cache_dir = dir_s.to_string();
+    let setup = DsoSetup::with_cache(&cfg_use, &ds).unwrap();
+    #[cfg(unix)]
+    {
+        assert!(setup.omega.blocks.iter().all(|b| b.cols.is_mapped() && b.vals.is_mapped()));
+        assert!(setup.alpha_bias.iter().all(|s| s.is_mapped()));
+        assert!(setup.cache.is_active(), "prefetch handle inert on a mapped run");
+    }
+    assert_eq!(setup.p, 2);
+
+    let mapped = Trainer::new(cfg_use).fit(&ds, None).unwrap();
+    assert_bits_eq(&resident.result.w, &mapped.result.w, "mapped w");
+    assert_bits_eq(&resident.result.alpha, &mapped.result.alpha, "mapped alpha");
+    assert_eq!(resident.result.total_updates, mapped.result.total_updates);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same bit-identity on the asynchronous ring. p = 1 pins the async
+/// visit order (a single worker drains its own queue deterministically),
+/// so the mapped/resident comparison is exact rather than statistical.
+#[test]
+fn mapped_fit_matches_resident_bitwise_async() {
+    let ds = dataset(120, 48, 13);
+    let mut cfg = base_cfg(1, 3);
+    cfg.optim.algorithm = Algorithm::DsoAsync;
+    let dir = temp_dir("async");
+    let dir_s = dir.to_str().unwrap();
+
+    let resident = Trainer::new(cfg.clone()).fit(&ds, None).unwrap();
+    Trainer::new(cfg.clone())
+        .cache(CacheMode::Build)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    let mapped = Trainer::new(cfg.clone())
+        .cache(CacheMode::Use)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    assert_bits_eq(&resident.result.w, &mapped.result.w, "async mapped w");
+    assert_bits_eq(&resident.result.alpha, &mapped.result.alpha, "async mapped alpha");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A cache packed under a different configuration (here: a different
+/// optimizer seed, which changes the sampling streams) is refused with
+/// both fingerprints named — the same contract as checkpoint resume
+/// and the proc-worker handshake.
+#[test]
+fn foreign_fingerprint_cache_is_refused() {
+    let ds = dataset(100, 40, 17);
+    let cfg = base_cfg(2, 2);
+    let dir = temp_dir("foreign");
+    let dir_s = dir.to_str().unwrap();
+    Trainer::new(cfg.clone())
+        .cache(CacheMode::Build)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    let mut foreign = cfg.clone();
+    foreign.optim.seed = cfg.optim.seed + 1;
+    let err = Trainer::new(foreign)
+        .cache(CacheMode::Use)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .err()
+        .expect("foreign-fingerprint cache must be refused");
+    let msg = format!("{err}");
+    assert!(msg.contains("different run"), "{msg}");
+    // `use` against a missing cache is an error, not a silent rebuild.
+    std::fs::remove_dir_all(&dir).ok();
+    let err = Trainer::new(cfg)
+        .cache(CacheMode::Use)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .err()
+        .expect("use mode with no cache on disk must error");
+    assert!(!format!("{err}").is_empty());
+}
+
+/// Auto mode: first run packs (file appears), second run reuses the
+/// same bytes (no rewrite) and stays bit-identical; a fingerprint
+/// mismatch under auto falls back to a rebuild instead of refusing.
+#[test]
+fn auto_cache_builds_then_reuses() {
+    let ds = dataset(110, 44, 19);
+    let cfg = base_cfg(2, 3);
+    let dir = temp_dir("auto");
+    let dir_s = dir.to_str().unwrap();
+    let path = cache::cache_path(&dir, &ds.name);
+
+    let first = Trainer::new(cfg.clone())
+        .cache(CacheMode::Auto)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    assert!(path.exists(), "auto's first run must leave a cache behind");
+    let bytes_after_build = std::fs::read(&path).unwrap();
+
+    let second = Trainer::new(cfg.clone())
+        .cache(CacheMode::Auto)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    assert_bits_eq(&first.result.w, &second.result.w, "auto reuse w");
+    assert_bits_eq(&first.result.alpha, &second.result.alpha, "auto reuse alpha");
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        bytes_after_build,
+        "auto reuse must not rewrite the cache"
+    );
+
+    // A config change makes the cache foreign; auto rebuilds in place.
+    let mut other = cfg.clone();
+    other.optim.seed = cfg.optim.seed + 1;
+    Trainer::new(other)
+        .cache(CacheMode::Auto)
+        .cache_dir(dir_s)
+        .fit(&ds, None)
+        .unwrap();
+    assert_ne!(
+        std::fs::read(&path).unwrap(),
+        bytes_after_build,
+        "a foreign cache under auto must be repacked"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

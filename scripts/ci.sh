@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
 # records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json,
-# BENCH_simd.json, BENCH_faults.json and BENCH_transport.json (the
-# cross-PR perf trajectory; plot with
+# BENCH_simd.json, BENCH_faults.json, BENCH_transport.json and
+# BENCH_outofcore.json (the cross-PR perf trajectory; plot with
 # `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
@@ -59,7 +59,7 @@ unsafe_gate() {
         END { exit bad }
     ' "$1"
 }
-for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs; do
+for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs rust/src/data/cache/*.rs; do
     if ! unsafe_gate "$f"; then
         echo "ci.sh: annotate the unsafe block(s) above in $f" >&2
         exit 1
@@ -150,6 +150,37 @@ for required in "${transport_required[@]}"; do
     fi
 done
 
+echo "== out-of-core cache suite present =="
+# ISSUE 8's acceptance rests on tests/outofcore.rs: the .dsoblk
+# pack/open round trip preserves every table (alignment included), a
+# `--cache use` fit is bit-identical to the resident fit on both
+# engines, a foreign-fingerprint cache is refused, and auto reuses
+# without rewriting.
+outofcore_required=(cache_roundtrip_preserves_every_table
+    mapped_fit_matches_resident_bitwise_sync
+    mapped_fit_matches_resident_bitwise_async
+    foreign_fingerprint_cache_is_refused
+    auto_cache_builds_then_reuses)
+outofcore_tests="$(cargo test -q --test outofcore -- --list 2>/dev/null || true)"
+for required in "${outofcore_required[@]}"; do
+    if ! grep -q "$required" <<<"$outofcore_tests"; then
+        echo "ci.sh: out-of-core test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
+echo "== mmap/madvise syscalls confined to data/cache/mmap.rs =="
+# The arena is the single owner of every mapping: engines, kernels and
+# transport see mapped tables only through BlockStore's slice surface.
+# Comment lines are exempt (doc text may *describe* the mmap design).
+if grep -rn "\bmmap(\|\bmunmap(\|\bmadvise(" rust/src --include="*.rs" \
+    | grep -v "^rust/src/data/cache/" \
+    | grep -v ":[[:space:]]*//"; then
+    echo "ci.sh: raw mapping syscalls outside rust/src/data/cache/;" \
+         "go through BlockStore / CacheHandle instead" >&2
+    exit 1
+fi
+
 echo "== socket paths never bare-unwrap at all =="
 # The real-transport layer must degrade, not panic: a corrupt frame, a
 # dead peer, or a half-closed socket is routine input there. Non-test
@@ -203,8 +234,9 @@ cargo test -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
+    DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_outofcore
     for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json \
-        BENCH_faults.json BENCH_transport.json; do
+        BENCH_faults.json BENCH_transport.json BENCH_outofcore.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else
