@@ -1,0 +1,101 @@
+//! Serving round trip: train → save → serve → predict over the wire →
+//! warm-start retrain (`Trainer::fit_from`) → hot reload → predict with
+//! the updated model → stats → shutdown.
+//!
+//! This is the client side of `dso serve` (DESIGN.md §Serving), driven
+//! in-process: the server runs on a thread, the client speaks the same
+//! framed transport (`FrameConn`) the multi-process trainer uses.
+//!
+//! Run: `cargo run --release --example serve_roundtrip`
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, TrainConfig};
+use dso::data::{libsvm, Dataset};
+use dso::net::transport::{connect_with_backoff, ConnIn, FrameConn};
+use dso::net::wire::Msg;
+use dso::serve::{NullServeObserver, ServeOptions, Server};
+use std::time::Duration;
+
+fn recv_msg(conn: &mut FrameConn) -> anyhow::Result<Msg> {
+    loop {
+        match conn.recv()? {
+            ConnIn::Msg(m) => return Ok(m),
+            ConnIn::TimedOut => continue,
+            other => anyhow::bail!("connection dropped mid-reply: {other:?}"),
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. Train a small model and persist it.
+    let ds = dso::data::registry::generate("real-sim", 0.1, 42).map_err(anyhow::Error::msg)?;
+    let (train, test) = ds.split(0.2, 42);
+    let mut cfg = TrainConfig::default();
+    cfg.optim.epochs = 10;
+    cfg.optim.eta0 = 0.1;
+    cfg.model.lambda = 1e-4;
+    cfg.cluster.machines = 2;
+    cfg.cluster.cores = 2;
+    let fitted = Trainer::new(cfg.clone()).algorithm(Algorithm::Dso).fit(&train, Some(&test))?;
+    let dir = std::env::temp_dir().join("dso-serve-roundtrip");
+    std::fs::create_dir_all(&dir)?;
+    let model_v1 = dir.join("model-v1.dso");
+    fitted.save(&model_v1)?;
+    println!("trained v1: d={} test_err={:.4}", fitted.w().len(), fitted.error(&test));
+
+    // 2. Stand the server up on a background thread.
+    let socket = dir.join("serve.sock");
+    let mut server = Server::bind(&ServeOptions::new(&model_v1, &socket))?;
+    println!("serving on {} (backend {})", socket.display(), server.backend());
+    let handle = std::thread::spawn(move || server.run(&mut NullServeObserver));
+
+    // 3. Dial it and score the first 16 test rows. The batch is plain
+    //    libsvm text — what any non-Rust client would send.
+    let mut conn = FrameConn::new(connect_with_backoff(&socket, Duration::from_secs(5))?);
+    conn.set_recv_timeout(Some(Duration::from_millis(200)))?;
+    let rows: Vec<usize> = (0..16.min(test.m())).collect();
+    let batch = libsvm::emit(&Dataset::new(
+        "batch",
+        test.x.select_rows(&rows),
+        rows.iter().map(|&i| test.y[i]).collect(),
+    ));
+    conn.send(&Msg::Predict { id: 1, batch: batch.clone() })?;
+    let Msg::Scores { scores: v1, .. } = recv_msg(&mut conn)? else {
+        anyhow::bail!("expected Scores for request 1");
+    };
+    // The server's batched SIMD kernel reproduces the local scalar
+    // predict bit-for-bit (pinned in rust/tests/serve.rs).
+    let local = fitted.predict(&test.x.select_rows(&rows))?;
+    assert_eq!(v1, local, "wire scores must match local predict exactly");
+    println!("request 1: {} scores, first margin {:+.4}", v1.len(), v1[0]);
+
+    // 4. Warm-start retrain from the fitted prior (same data, more
+    //    epochs — appended rows/features work the same way), save v2.
+    let mut cfg2 = cfg;
+    cfg2.optim.epochs = 30;
+    let refit = Trainer::new(cfg2).algorithm(Algorithm::Dso).fit_from(&fitted, &train, Some(&test))?;
+    let model_v2 = dir.join("model-v2.dso");
+    refit.save(&model_v2)?;
+    println!("warm-start retrained v2: test_err={:.4}", refit.error(&test));
+
+    // 5. Hot reload, then score the same batch with the new weights.
+    conn.send(&Msg::Reload { path: model_v2.display().to_string() })?;
+    anyhow::ensure!(matches!(recv_msg(&mut conn)?, Msg::Ack { .. }), "reload not acked");
+    conn.send(&Msg::Predict { id: 2, batch })?;
+    let Msg::Scores { scores: v2, .. } = recv_msg(&mut conn)? else {
+        anyhow::bail!("expected Scores for request 2");
+    };
+    assert_eq!(v2, refit.predict(&test.x.select_rows(&rows))?);
+    println!("request 2 (reloaded): first margin {:+.4} (was {:+.4})", v2[0], v1[0]);
+
+    // 6. Counters, then a clean shutdown.
+    conn.send(&Msg::StatsReq)?;
+    if let Msg::StatsReply { served, rows, reloads, backend, .. } = recv_msg(&mut conn)? {
+        println!("server stats: served={served} rows={rows} reloads={reloads} backend={backend}");
+    }
+    conn.send(&Msg::Shutdown)?;
+    anyhow::ensure!(matches!(recv_msg(&mut conn)?, Msg::Bye), "no Bye on shutdown");
+    handle.join().expect("server thread")?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Serving microbenches (DESIGN.md §Serving):
+//!
+//! * `predict_*` — batched sparse inference vs the old per-row scalar
+//!   loop on the same request batch: `predict_scalar_row_dot` (one
+//!   `Csr::row_dot` per row — exactly what `Fitted::predict` did before
+//!   the serve subsystem), `predict_batched_portable` (lane-major
+//!   packed layout, portable fold) and `predict_batched_avx2` (hardware
+//!   gathers, where avx2+fma is present). The packing cost is measured
+//!   separately (`predict_pack`) — a server packs each request batch
+//!   once and scores it once, so the honest comparison is pack+fold vs
+//!   the scalar loop; both are recorded.
+//!
+//! * `steprule_*` — the adaptive rule (η₀/√(1+Σg²), arXiv:1802.05811)
+//!   vs AdaGrad on the standard 64k-entry lane sweep: same accumulator
+//!   traffic, ε floor swapped for the unit offset.
+//!
+//! Run with `DSO_BENCH_JSON=1` to record `BENCH_predict.json` and
+//! `BENCH_steprule.json` (tracked by the CI smoke for the cross-PR
+//! perf trajectory).
+
+use dso::coordinator::updates::{sweep_lanes, PackedCtx, PackedState, StepRule};
+use dso::data::synth::SparseSpec;
+use dso::losses::{Loss, Regularizer};
+use dso::partition::{PackedBlocks, Partition};
+use dso::serve::{predict_batch, PackedRequests};
+use dso::simd::SimdLevel;
+use dso::util::bench::{human_time, Runner};
+
+fn main() {
+    // A serving-shaped batch: 4k request rows over a 2k-feature model,
+    // ≈16 nnz per row (two full lane chunks on average).
+    let ds = SparseSpec {
+        name: "predict-bench".into(),
+        m: 4000,
+        d: 2000,
+        nnz_per_row: 16.0,
+        zipf_s: 0.8,
+        label_noise: 0.0,
+        pos_frac: 0.5,
+        seed: 1,
+    }
+    .generate();
+    let d = ds.d();
+    let w: Vec<f32> = (0..d).map(|j| ((j * 7) % 13) as f32 * 0.05 - 0.3).collect();
+    let nnz = ds.nnz() as u64;
+
+    let mut runner = Runner::from_env("predict");
+    println!("batch: {} rows, {} nnz, d = {d}", ds.m(), nnz);
+
+    // --- The old scalar predict: one storage-order row_dot per row ---
+    runner.bench_units("predict_scalar_row_dot", nnz, || {
+        let mut s = 0.0f64;
+        for i in 0..ds.m() {
+            s += ds.x.row_dot(i, &w);
+        }
+        s
+    });
+
+    // --- Request packing (per-batch server cost) ---
+    runner.bench_units("predict_pack", nnz, || {
+        PackedRequests::pack(&ds.x, d).expect("bench batch packs").nnz()
+    });
+
+    // --- Batched kernel, portable fold ---
+    let packed = PackedRequests::pack(&ds.x, d).expect("bench batch packs");
+    let mut out = Vec::new();
+    runner.bench_units("predict_batched_portable", nnz, || {
+        predict_batch(&packed, &w, SimdLevel::Portable, &mut out);
+        out.len()
+    });
+
+    // --- Batched kernel, AVX2 gathers (where available) ---
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dso::simd::avx2_supported() {
+            let mut aout = Vec::new();
+            runner.bench_units("predict_batched_avx2", nnz, || {
+                predict_batch(&packed, &w, SimdLevel::Avx2, &mut aout);
+                aout.len()
+            });
+        } else {
+            println!("    -> avx2 backend unavailable on this host; portable only");
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    println!("    -> avx2 backend unavailable (non-x86_64); portable only");
+
+    let median = |name: &str| runner.results.iter().find(|r| r.name == name).map(|r| r.median());
+    if let (Some(sm), Some(bm)) = (median("predict_scalar_row_dot"), median("predict_batched_portable")) {
+        println!(
+            "    -> scalar {:.1} M nnz/s ({}/batch)  batched-portable {:.1} M nnz/s ({}/batch)  speedup {:.2}x",
+            nnz as f64 / sm / 1e6,
+            human_time(sm),
+            nnz as f64 / bm / 1e6,
+            human_time(bm),
+            sm / bm
+        );
+    }
+    if let (Some(sm), Some(am)) = (median("predict_scalar_row_dot"), median("predict_batched_avx2")) {
+        println!(
+            "    -> batched-avx2 {:.1} M nnz/s ({}/batch)  speedup vs scalar {:.2}x",
+            nnz as f64 / am / 1e6,
+            human_time(am),
+            sm / am
+        );
+    }
+
+    // --- Step-rule pair: AdaGrad vs the adaptive unit-offset rule ---
+    let mut rule_runner = Runner::from_env("steprule");
+    {
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let omega = PackedBlocks::build(&ds.x, &rp, &cp);
+        let block = omega.block(0, 0);
+        let y_local = omega.stripe_labels(&ds.y);
+        let alpha_bias = omega.stripe_alpha_bias(&ds.y);
+        let n = block.nnz() as u64;
+        let lambda = 1e-4;
+        for (name, rule) in [
+            ("steprule_adagrad_hinge", StepRule::AdaGrad(0.1)),
+            ("steprule_adaptive_hinge", StepRule::Adaptive(0.1)),
+        ] {
+            let ctx = PackedCtx {
+                loss: Loss::Hinge,
+                reg: Regularizer::L2,
+                lambda,
+                w_bound: Loss::Hinge.w_bound(lambda),
+                rule,
+                inv_col: &omega.inv_col[0],
+                inv_col32: &omega.inv_col32[0],
+                inv_row: &omega.inv_row[0],
+                y: &y_local[0],
+                alpha_bias32: &alpha_bias[0],
+            };
+            let mut sw = vec![0.01f32; ds.d()];
+            let mut sw_acc = vec![0f32; ds.d()];
+            let mut salpha = vec![0f32; ds.m()];
+            let mut sa_acc = vec![0f32; ds.m()];
+            rule_runner.bench_units(name, n, || {
+                let mut st = PackedState {
+                    w: &mut sw,
+                    w_acc: &mut sw_acc,
+                    alpha: &mut salpha,
+                    a_acc: &mut sa_acc,
+                };
+                sweep_lanes(block, &ctx, &mut st)
+            });
+        }
+        let median =
+            |name: &str| rule_runner.results.iter().find(|r| r.name == name).map(|r| r.median());
+        if let (Some(gm), Some(am)) =
+            (median("steprule_adagrad_hinge"), median("steprule_adaptive_hinge"))
+        {
+            println!(
+                "    -> adagrad {:.1} M upd/s  adaptive {:.1} M upd/s  ratio {:.2}x",
+                n as f64 / gm / 1e6,
+                n as f64 / am / 1e6,
+                gm / am
+            );
+        }
+    }
+
+    runner.finish("predict");
+    rule_runner.finish("steprule");
+}

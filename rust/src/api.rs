@@ -254,6 +254,64 @@ impl<'a> Trainer<'a> {
             result,
         })
     }
+
+    /// Warm-start retraining (DESIGN.md §Serving): train on `train`
+    /// with the optimizer seeded from `prior`'s assembled `(w, α)`
+    /// instead of the cold initialization. Supported for the scalar
+    /// DSO engine (threaded, or the Lemma-2 replay via
+    /// [`Trainer::replay`]).
+    ///
+    /// Reconciliation when `train` is wider than the prior (appended
+    /// rows and/or features): the prior occupies the leading
+    /// coordinates, appended features start at `w = 0`, appended rows
+    /// at the loss's feasible cold-start dual (`alpha_init`), and
+    /// every step-rule accumulator starts fresh — exactly what those
+    /// coordinates would get in a cold fit. Data *narrower* than the
+    /// prior is refused (dropping learned coordinates would silently
+    /// change the objective).
+    ///
+    /// With `optim.epochs = 0` — allowed here, though the cold-fit
+    /// validator pins `epochs >= 1` — no sweeps run and the returned
+    /// [`Fitted`] carries the prior's parameters bit-identically
+    /// (pinned by tests/warmstart.rs): the "just re-wrap the model
+    /// against new data" degenerate case.
+    ///
+    /// Checkpoint lineage: the run's fingerprint additionally mixes in
+    /// a provenance hash of the seeding `(w, α)` bit patterns, so warm
+    /// checkpoints are never resumable by cold runs (or by warm runs
+    /// off a different prior) and vice versa.
+    pub fn fit_from(self, prior: &Fitted, train: &Dataset, test: Option<&Dataset>) -> Result<Fitted> {
+        let Trainer { cfg, replay, observer } = self;
+        // Validate a copy with the epochs floor applied; the engine
+        // gets the real value (its epoch loop is simply empty at 0).
+        let mut vcfg = cfg.clone();
+        vcfg.optim.epochs = cfg.optim.epochs.max(1);
+        vcfg.validate().map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            cfg.optim.algorithm == Algorithm::Dso && cfg.cluster.mode == ExecMode::Scalar,
+            "fit_from warm-starts the scalar DSO engine; set algorithm = \"dso\" \
+             and mode = \"scalar\" (use .replay(true) for the serial replay)"
+        );
+        let ws = crate::coordinator::engine::WarmStart {
+            provenance: crate::coordinator::checkpoint::warm_provenance(
+                &prior.result.w,
+                &prior.result.alpha,
+            ),
+            w: prior.result.w.clone(),
+            alpha: prior.result.alpha.clone(),
+        };
+        let result = if replay {
+            crate::coordinator::engine::run_replay_warm_with(&cfg, train, test, Some(&ws), observer)?
+        } else {
+            crate::coordinator::engine::train_dso_warm_with(&cfg, train, test, Some(&ws), observer)?
+        };
+        Ok(Fitted {
+            loss: cfg.model.loss,
+            reg: cfg.model.reg,
+            lambda: cfg.model.lambda,
+            result,
+        })
+    }
 }
 
 /// The artifact a [`Trainer`] run produces: the full [`TrainResult`]
@@ -382,7 +440,22 @@ impl ModelView<'_> {
             self.w.len(),
             x.cols
         );
-        Ok((0..x.rows).map(|i| x.row_dot(i, self.w)).collect())
+        // Batched predict (DESIGN.md §Serving): pack the rows into the
+        // lane-major layout once, then score through the resolved SIMD
+        // backend. The fold is an f64 storage-order recurrence on
+        // every backend, so this returns bit-identical scores to the
+        // old per-row `row_dot` loop regardless of which backend the
+        // host resolves (pinned by tests/serve.rs).
+        let packed =
+            crate::serve::PackedRequests::pack(x, self.w.len()).map_err(anyhow::Error::msg)?;
+        let mut out = Vec::new();
+        crate::serve::predict_batch(
+            &packed,
+            self.w,
+            crate::simd::resolve(SimdKind::Auto),
+            &mut out,
+        );
+        Ok(out)
     }
 
     fn save_to(&self, path: &Path) -> Result<()> {
@@ -436,10 +509,17 @@ impl Model {
     }
 
     /// Load a model saved by [`Model::save`] / [`Fitted::save`].
+    ///
+    /// Hardened to the same standard as the libsvm ingest
+    /// (`data::libsvm::parse`): every refusal names the 1-based line
+    /// it tripped on, and non-finite weights (NaN/±Inf — which would
+    /// silently poison every margin a server computes) are refused at
+    /// load time rather than discovered per request.
     pub fn load(path: &Path) -> Result<Model> {
         let text = std::fs::read_to_string(path)?;
-        let mut lines = text.lines();
-        let magic = lines.next().unwrap_or_default();
+        // 1-based line numbers, matching the libsvm parser's errors.
+        let mut lines = text.lines().enumerate().map(|(i, l)| (i + 1, l));
+        let (_, magic) = lines.next().unwrap_or((1, ""));
         anyhow::ensure!(
             magic == "dso-model v1",
             "{}: not a dso model file (bad magic '{magic}')",
@@ -450,32 +530,41 @@ impl Model {
         let mut reg: Option<RegKind> = None;
         let mut lambda: Option<f64> = None;
         let mut d: Option<usize> = None;
-        for line in lines.by_ref() {
+        let at = |ln: usize| format!("{}: line {ln}", path.display());
+        for (ln, line) in lines.by_ref() {
             if line == "w" {
                 break;
             }
             let (key, val) = line
                 .split_once(' ')
-                .ok_or_else(|| anyhow::anyhow!("malformed model header line '{line}'"))?;
+                .ok_or_else(|| anyhow::anyhow!("{}: malformed model header '{line}'", at(ln)))?;
             match key {
                 "algorithm" => algorithm = Some(val.to_string()),
-                "loss" => loss = Some(LossKind::parse(val).map_err(anyhow::Error::msg)?),
+                "loss" => {
+                    loss = Some(
+                        LossKind::parse(val)
+                            .map_err(|e| anyhow::anyhow!("{}: {e}", at(ln)))?,
+                    )
+                }
                 "regularizer" => {
-                    reg = Some(RegKind::parse(val).map_err(anyhow::Error::msg)?)
+                    reg = Some(
+                        RegKind::parse(val)
+                            .map_err(|e| anyhow::anyhow!("{}: {e}", at(ln)))?,
+                    )
                 }
                 "lambda" => {
                     lambda = Some(
                         val.parse()
-                            .map_err(|_| anyhow::anyhow!("bad lambda '{val}'"))?,
+                            .map_err(|_| anyhow::anyhow!("{}: bad lambda '{val}'", at(ln)))?,
                     )
                 }
                 "d" => {
                     d = Some(
                         val.parse()
-                            .map_err(|_| anyhow::anyhow!("bad dimension '{val}'"))?,
+                            .map_err(|_| anyhow::anyhow!("{}: bad dimension '{val}'", at(ln)))?,
                     )
                 }
-                other => anyhow::bail!("unknown model header key '{other}'"),
+                other => anyhow::bail!("{}: unknown model header key '{other}'", at(ln)),
             }
         }
         // Every header written by `save` is required back: a truncated
@@ -491,21 +580,32 @@ impl Model {
         // dimension a corrupt file could set to anything — cap the
         // hint; the w.len() == d check below still enforces exactness.
         let mut w = Vec::with_capacity(d.min(1 << 20));
-        for line in lines {
+        for (ln, line) in lines {
             if line.is_empty() {
                 continue;
             }
-            w.push(
-                line.parse::<f32>()
-                    .map_err(|_| anyhow::anyhow!("bad weight '{line}'"))?,
+            let v: f32 = line
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{}: bad weight '{line}'", at(ln)))?;
+            anyhow::ensure!(
+                v.is_finite(),
+                "{}: non-finite weight '{line}' (a NaN/Inf coordinate would poison \
+                 every score; refusing the model)",
+                at(ln)
             );
+            w.push(v);
         }
         anyhow::ensure!(
             w.len() == d,
-            "model declares d={d} but carries {} weights",
+            "{}: model declares d={d} but carries {} weights",
+            path.display(),
             w.len()
         );
-        anyhow::ensure!(lambda > 0.0, "model lambda must be > 0, got {lambda}");
+        anyhow::ensure!(
+            lambda > 0.0 && lambda.is_finite(),
+            "{}: model lambda must be finite and > 0, got {lambda}",
+            path.display()
+        );
         Ok(Model { algorithm, loss, reg, lambda, w })
     }
 }

@@ -67,7 +67,13 @@ pub fn train_psgd_with(
     let mut virtual_s = 0.0;
     let mut updates: u64 = 0;
     let mut comm_bytes: u64 = 0;
-    let adagrad = cfg.optim.step == StepKind::AdaGrad;
+    // Same accumulator-rule unification as `sgd`: Some(offset) selects
+    // the adaptive denominators, None the scalar schedules.
+    let acc_eps = match cfg.optim.step {
+        StepKind::AdaGrad => Some(ADAGRAD_EPS),
+        StepKind::Adaptive => Some(1.0),
+        _ => None,
+    };
     let eta0 = cfg.optim.eta0;
     let lambda = cfg.model.lambda;
 
@@ -75,7 +81,7 @@ pub fn train_psgd_with(
         let eta_t = match cfg.optim.step {
             StepKind::Const => eta0,
             StepKind::InvSqrt => eta0 / (epoch as f64).sqrt(),
-            StepKind::AdaGrad => eta0,
+            StepKind::AdaGrad | StepKind::Adaptive => eta0,
         };
 
         // Parallel local passes.
@@ -109,10 +115,10 @@ pub fn train_psgd_with(
                                     let g = lg * val[k] as f64
                                         + lambda * reg.grad(wj) * mf
                                             / col_counts[j].max(1) as f64;
-                                    let eta = if adagrad {
+                                    let eta = if let Some(eps) = acc_eps {
                                         let a = acc[j] as f64 + g * g;
                                         acc[j] = a as f32;
-                                        eta0 / (ADAGRAD_EPS + a).sqrt()
+                                        eta0 / (eps + a).sqrt()
                                     } else {
                                         eta_t
                                     };

@@ -50,13 +50,19 @@ pub fn train_sgd_with(
     let wall = Stopwatch::new();
     let mut virtual_s = 0.0;
     let mut updates: u64 = 0;
-    let adagrad = cfg.optim.step == StepKind::AdaGrad;
+    // Accumulator rules share one loop; they differ only in the offset
+    // inside the root (AdaGrad's ε floor, Adaptive's unit offset).
+    let acc_eps = match cfg.optim.step {
+        StepKind::AdaGrad => Some(ADAGRAD_EPS),
+        StepKind::Adaptive => Some(1.0),
+        _ => None,
+    };
 
     for epoch in 1..=cfg.optim.epochs {
         let eta_t = match cfg.optim.step {
             StepKind::Const => cfg.optim.eta0,
             StepKind::InvSqrt => cfg.optim.eta0 / (epoch as f64).sqrt(),
-            StepKind::AdaGrad => cfg.optim.eta0,
+            StepKind::AdaGrad | StepKind::Adaptive => cfg.optim.eta0,
         };
         let t0 = std::time::Instant::now();
         for _ in 0..m {
@@ -74,10 +80,10 @@ pub fn train_sgd_with(
                 // Loss part + sparse-unbiased regularizer part.
                 let g = lg * val[k] as f64
                     + cfg.model.lambda * reg.grad(wj) * mf / col_counts[j].max(1) as f64;
-                let eta = if adagrad {
+                let eta = if let Some(eps) = acc_eps {
                     let a = acc[j] as f64 + g * g;
                     acc[j] = a as f32;
-                    cfg.optim.eta0 / (ADAGRAD_EPS + a).sqrt()
+                    cfg.optim.eta0 / (eps + a).sqrt()
                 } else {
                     eta_t
                 };

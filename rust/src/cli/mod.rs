@@ -13,6 +13,8 @@
 //!            [--cache off|build|use|auto] [--cache-dir DIR]
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
+//! dso serve  --model model.dso --socket /tmp/dso-serve.sock
+//!            [--simd auto|portable|avx2]
 //! dso stats  [--name NAME | --all] [--scale S]
 //! dso gen-data --name NAME --out FILE [--scale S] [--seed N]
 //! dso inspect-artifacts
@@ -55,6 +57,14 @@
 //! block payload demand-paged (bit-identical to the resident run, and
 //! refused if the cache was packed under a different configuration).
 //! `--cache auto` uses a matching cache when present, else builds one.
+//!
+//! Serving (DESIGN.md §Serving): `serve` loads a `--model` file and
+//! answers libsvm-formatted predict requests over the framed transport
+//! on `--socket` until a client sends `Shutdown`. The SIMD backend is
+//! resolved once at startup (`--simd`, same semantics as training) and
+//! reported in the stats; `Reload` hot-swaps the model — e.g. after a
+//! `Trainer::fit_from` warm-start retrain — without dropping the
+//! socket. See `examples/serve_roundtrip.rs` for the client side.
 
 pub mod args;
 
@@ -69,6 +79,7 @@ pub fn main_entry(raw: Vec<String>) -> Result<i32> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "exp" => cmd_exp(&args),
         "stats" => cmd_stats(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -91,6 +102,7 @@ pub fn usage() -> String {
     "dso — Distributed Stochastic Optimization of the Regularized Risk\n\
      commands:\n\
      \x20 train               train a model (DSO or a baseline)\n\
+     \x20 serve               serve a saved model over a Unix socket\n\
      \x20 exp <name>          reproduce a paper table/figure (or 'all')\n\
      \x20 stats               dataset summary (Table 2)\n\
      \x20 gen-data            export a synthetic dataset to libsvm\n\
@@ -249,6 +261,54 @@ fn cmd_train(args: &Args) -> Result<i32> {
         fitted.save(&p)?;
         println!("model -> {}", p.display());
     }
+    Ok(0)
+}
+
+/// `dso serve`: stand up the model server (DESIGN.md §Serving) and
+/// block until a client sends `Shutdown`. Per-request stats stream to
+/// the log; the final counters print on exit.
+fn cmd_serve(args: &Args) -> Result<i32> {
+    args.check_known(&["model", "socket", "simd"]).map_err(anyhow::Error::msg)?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --model <path to a saved model>"))?;
+    let socket = args
+        .get("socket")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --socket <unix socket path>"))?;
+    let mut opts = crate::serve::ServeOptions::new(model, socket);
+    if let Some(v) = args.get("simd") {
+        opts.simd = crate::config::SimdKind::parse(v).map_err(anyhow::Error::msg)?;
+    }
+    let mut server = crate::serve::Server::bind(&opts)?;
+    crate::log_info!(
+        "serving {} (d={}, backend={}) on {}",
+        model,
+        server.model_dim(),
+        server.backend(),
+        socket
+    );
+    let mut obs = |stat: &crate::serve::RequestStat| {
+        crate::log_info!(
+            "predict #{}: {} rows ({} nnz) in {:.3} ms [{}]",
+            stat.id,
+            stat.rows,
+            stat.nnz,
+            stat.latency_s * 1e3,
+            stat.backend
+        );
+    };
+    server.run(&mut obs)?;
+    let st = server.stats();
+    println!(
+        "served={} rows={} errors={} reloads={} mean_latency={:.3}ms rows/s={:.0} backend={}",
+        st.served,
+        st.rows,
+        st.errors,
+        st.reloads,
+        st.mean_latency_s() * 1e3,
+        st.rows_per_sec(),
+        st.backend
+    );
     Ok(0)
 }
 
@@ -477,6 +537,19 @@ mod tests {
         .unwrap();
         assert_eq!(run(&["train", "--config", cfg_path.to_str().unwrap()]).unwrap(), 0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `serve` refuses to start without its two required flags, and
+    /// refuses an unloadable model before binding anything.
+    #[test]
+    fn serve_requires_model_and_socket() {
+        assert!(run(&["serve"]).is_err());
+        assert!(run(&["serve", "--model", "/nonexistent.model"]).is_err());
+        let err = run(&[
+            "serve", "--model", "/nonexistent.model", "--socket", "/tmp/dso-cli-serve.sock",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("loading model"), "{err}");
     }
 
     #[test]

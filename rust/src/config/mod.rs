@@ -61,6 +61,10 @@ pub enum StepKind {
     Const,
     InvSqrt,
     AdaGrad,
+    /// Per-coordinate η₀/√(1+Σg²) (Cutkosky & Busa-Fekete,
+    /// arXiv:1802.05811): AdaGrad's accumulated statistic with a unit
+    /// offset instead of the ε floor, bounding the rate by η₀.
+    Adaptive,
 }
 
 impl StepKind {
@@ -69,7 +73,10 @@ impl StepKind {
             "const" | "constant" => Ok(StepKind::Const),
             "invsqrt" | "inv_sqrt" => Ok(StepKind::InvSqrt),
             "adagrad" => Ok(StepKind::AdaGrad),
-            other => Err(format!("unknown step schedule '{other}' (const|invsqrt|adagrad)")),
+            "adaptive" => Ok(StepKind::Adaptive),
+            other => Err(format!(
+                "unknown step schedule '{other}' (const|invsqrt|adagrad|adaptive)"
+            )),
         }
     }
 
@@ -78,6 +85,7 @@ impl StepKind {
             StepKind::Const => "const",
             StepKind::InvSqrt => "invsqrt",
             StepKind::AdaGrad => "adagrad",
+            StepKind::Adaptive => "adaptive",
         }
     }
 }

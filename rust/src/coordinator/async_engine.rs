@@ -422,9 +422,10 @@ pub fn train_dso_async_with(
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
     anyhow::ensure!(
-        cfg.optim.step == StepKind::AdaGrad,
-        "async DSO supports AdaGrad (state travels with blocks); \
-         epoch-level η_t schedules need a global clock, which async lacks"
+        matches!(cfg.optim.step, StepKind::AdaGrad | StepKind::Adaptive),
+        "async DSO supports the accumulator rules (adagrad, adaptive — \
+         state travels with blocks); epoch-level η_t schedules need a \
+         global clock, which async lacks"
     );
     anyhow::ensure!(
         cfg.cluster.updates_per_block == 0,
@@ -439,7 +440,10 @@ pub fn train_dso_async_with(
     debug_assert!(!setup.plan.any_sampled());
     let p = setup.p;
     let loss = setup.problem.loss;
-    let rule = StepRule::AdaGrad(cfg.optim.eta0);
+    let rule = match cfg.optim.step {
+        StepKind::Adaptive => StepRule::Adaptive(cfg.optim.eta0),
+        _ => StepRule::AdaGrad(cfg.optim.eta0),
+    };
 
     // Initial state: worker q starts with its own row stripe and its
     // own w block already in its inbox (no channel round trip, so the

@@ -93,6 +93,35 @@ pub fn fingerprint(
     h
 }
 
+/// Extend a run fingerprint with warm-start lineage. A warm run
+/// (`Trainer::fit_from`) optimizes a different trajectory than the
+/// cold run of the identical configuration — its initial state is the
+/// prior, not zeros — so their checkpoints must not be interchangeable.
+/// Mixing the prior's [`warm_provenance`] hash under a dedicated label
+/// separates warm from cold *and* warm runs off different priors.
+pub fn with_provenance(fp: u64, provenance: u64) -> u64 {
+    mix(fp, "warm", &provenance.to_le_bytes())
+}
+
+/// Provenance hash of a warm-start prior: FNV-1a over the exact bit
+/// patterns of the seeding `(w, α)` (little-endian, labeled per
+/// field). Bit patterns — not values — so `-0.0` and `0.0` priors,
+/// which produce different downstream trajectories under the sweep
+/// kernels' f32 arithmetic, fingerprint differently too.
+pub fn warm_provenance(w: &[f32], alpha: &[f32]) -> u64 {
+    let pack = |v: &[f32]| -> Vec<u8> {
+        let mut b = Vec::with_capacity(4 * v.len());
+        for x in v {
+            b.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        b
+    };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, "w", &pack(w));
+    h = mix(h, "alpha", &pack(alpha));
+    h
+}
+
 impl Checkpoint {
     /// Atomic, crash-durable save: write `<path>.<pid>.tmp` in the same
     /// directory, fsync it, rename over `path`, fsync the directory

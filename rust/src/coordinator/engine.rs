@@ -362,9 +362,40 @@ pub fn train_dso_with(
     test: Option<&Dataset>,
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
+    train_dso_warm_with(cfg, train, test, None, obs)
+}
+
+/// Prior state seeding a warm-start run (`api::Trainer::fit_from`):
+/// the source model's assembled `(w, α)` plus a provenance hash that
+/// [`run_epochs`] mixes into the checkpoint fingerprint, so a warm
+/// run's checkpoints are never resumable by the cold run of the same
+/// configuration (or by a warm run off a different prior).
+///
+/// Widening is the supported direction: the prior may be *shorter*
+/// than the dataset's `d`/`m` (appended features / appended rows);
+/// the tail keeps the cold-start initialization (`w = 0`,
+/// `α = loss.alpha_init(y)`) and fresh zero step-rule accumulators —
+/// exactly what a cold run would give those coordinates. A prior
+/// *longer* than the dataset is refused: silently dropping learned
+/// coordinates would change the objective out from under the caller.
+pub struct WarmStart {
+    pub w: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub provenance: u64,
+}
+
+/// [`train_dso_with`] seeded from a [`WarmStart`] prior.
+pub fn train_dso_warm_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    warm: Option<&WarmStart>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
     if cfg.cluster.mode == ExecMode::Tile {
         anyhow::bail!("tile mode is handled by coordinator::tile::train_dso_tile");
     }
+    check_warm(warm, train)?;
     let setup = DsoSetup::with_cache(cfg, train)?;
     anyhow::ensure!(
         !setup.faults.has_deaths() && !setup.faults.has_drops(),
@@ -372,7 +403,23 @@ pub fn train_dso_with(
          dso engine cannot survive (a lost ring token deadlocks the epoch barrier); \
          use algorithm = \"dso-async\" for those, or restrict the plan to stall/delay"
     );
-    run_epochs(cfg, train, test, &setup, false, obs)
+    run_epochs(cfg, train, test, &setup, false, warm, obs)
+}
+
+/// Refuse priors the dataset cannot hold (see [`WarmStart`]).
+fn check_warm(warm: Option<&WarmStart>, train: &Dataset) -> Result<()> {
+    if let Some(ws) = warm {
+        anyhow::ensure!(
+            ws.w.len() <= train.d() && ws.alpha.len() <= train.m(),
+            "warm-start prior carries d={} m={} but the dataset has d={} m={}; \
+             fit_from can widen (appended rows/features) but never shrink",
+            ws.w.len(),
+            ws.alpha.len(),
+            train.d(),
+            train.m(),
+        );
+    }
+    Ok(())
 }
 
 /// Serial replay of the identical update sequence (Lemma 2): one
@@ -392,14 +439,29 @@ pub fn run_replay_with(
     test: Option<&Dataset>,
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
+    run_replay_warm_with(cfg, train, test, None, obs)
+}
+
+/// [`run_replay_with`] seeded from a [`WarmStart`] prior — warm runs
+/// keep the Lemma-2 property (threaded ≡ serial replay bit-identical),
+/// since the seed only changes the initial state, not the schedule.
+pub fn run_replay_warm_with(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: Option<&Dataset>,
+    warm: Option<&WarmStart>,
+    obs: Option<&mut dyn EpochObserver>,
+) -> Result<TrainResult> {
+    check_warm(warm, train)?;
     let setup = DsoSetup::with_cache(cfg, train)?;
-    run_epochs(cfg, train, test, &setup, true, obs)
+    run_epochs(cfg, train, test, &setup, true, warm, obs)
 }
 
 fn init_state(
     cfg: &TrainConfig,
     train: &Dataset,
     setup: &DsoSetup,
+    warm: Option<&WarmStart>,
 ) -> (Vec<WorkerSlot>, u64) {
     let p = setup.p;
     let loss = setup.problem.loss;
@@ -411,7 +473,10 @@ fn init_state(
     let mut w_full = vec![0f32; train.d()];
     let mut alpha_full: Vec<f32> =
         (0..train.m()).map(|i| loss.alpha_init(train.y[i] as f64) as f32).collect();
-    if cfg.optim.dcd_init {
+    // A warm-start prior supersedes the DCD warm start: the prior IS
+    // the initialization, and rerunning DCD over it would clobber the
+    // seeded α stripes.
+    if cfg.optim.dcd_init && warm.is_none() {
         let mut w_sum = vec![0f64; train.d()];
         for q in 0..p {
             let rows: Vec<usize> = setup.omega.row_part.block(q).collect();
@@ -441,6 +506,14 @@ fn init_state(
         }
     }
 
+    // Warm start (`fit_from`): the prior overwrites the prefix; any
+    // appended coordinates keep the cold-start values set above, and
+    // every step-rule accumulator starts fresh at zero.
+    if let Some(ws) = warm {
+        w_full[..ws.w.len()].copy_from_slice(&ws.w);
+        alpha_full[..ws.alpha.len()].copy_from_slice(&ws.alpha);
+    }
+
     for q in 0..p {
         let wr = setup.omega.col_part.block(q);
         let ar = setup.omega.row_part.block(q);
@@ -465,10 +538,11 @@ fn run_epochs(
     test: Option<&Dataset>,
     setup: &DsoSetup,
     replay: bool,
+    warm: Option<&WarmStart>,
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
     let p = setup.p;
-    let (mut slots, init_comm) = init_state(cfg, train, setup);
+    let (mut slots, init_comm) = init_state(cfg, train, setup, warm);
     let mut monitor = Monitor::observed(cfg.monitor.every, obs);
     let wall = Stopwatch::new();
     let mut router: Router<WMsg> = Router::new(p, setup.cost);
@@ -476,9 +550,16 @@ fn run_epochs(
     let mut endpoints = if replay { Vec::new() } else { router.take_endpoints() };
     let mut virtual_now;
 
-    // The fingerprint binds checkpoints to this exact update sequence.
+    // The fingerprint binds checkpoints to this exact update sequence;
+    // a warm-start run additionally mixes in its prior's provenance,
+    // so warm and cold runs of the same configuration — or warm runs
+    // off different priors — never exchange checkpoints.
     let fp =
         checkpoint::fingerprint(cfg, train.m(), train.d(), train.x.nnz(), p, setup.plan.simd());
+    let fp = match warm {
+        Some(ws) => checkpoint::with_provenance(fp, ws.provenance),
+        None => fp,
+    };
     let mut start_epoch = 1usize;
     if !cfg.checkpoint.resume.is_empty() {
         let ck = Checkpoint::load(std::path::Path::new(&cfg.checkpoint.resume))?;
@@ -511,6 +592,7 @@ fn run_epochs(
             StepKind::Const => StepRule::Fixed(cfg.optim.eta0),
             StepKind::InvSqrt => StepRule::Fixed(cfg.optim.eta0 / (epoch as f64).sqrt()),
             StepKind::AdaGrad => StepRule::AdaGrad(cfg.optim.eta0),
+            StepKind::Adaptive => StepRule::Adaptive(cfg.optim.eta0),
         };
 
         if replay {
@@ -649,7 +731,9 @@ fn run_epoch_threaded(
     endpoints: Vec<crate::net::router::Endpoint<WMsg>>,
 ) -> Result<Vec<crate::net::router::Endpoint<WMsg>>> {
     let p = setup.p;
-    let adagrad = matches!(rule, StepRule::AdaGrad(_));
+    // Accumulator-carrying rules (AdaGrad, Adaptive) ship their state
+    // with the rotating block; fixed steps pay only for w.
+    let ship_acc = rule.uses_acc();
     let taken: Vec<(WorkerSlot, crate::net::router::Endpoint<WMsg>)> =
         slots.drain(..).zip(endpoints).collect();
     // Raised by any worker that fails; peers poll it between bounded
@@ -700,7 +784,7 @@ fn run_epoch_threaded(
                             let w = std::mem::take(&mut slot.w);
                             let acc = std::mem::take(&mut slot.w_acc);
                             let bytes =
-                                16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+                                16 + 4 * w.len() + if ship_acc { 4 * acc.len() } else { 0 };
                             let dst = setup.schedule.send_to(q);
                             let msg = WMsg { block_id: slot.block_id, w, acc };
                             if ep.send(dst, msg, bytes).is_err() {
@@ -770,7 +854,7 @@ fn run_epoch_serial(
     epoch: usize,
 ) {
     let p = setup.p;
-    let adagrad = matches!(rule, StepRule::AdaGrad(_));
+    let ship_acc = rule.uses_acc();
     for r in 0..p {
         for slot in slots.iter_mut() {
             debug_assert_eq!(slot.block_id, setup.schedule.owned_block(slot.q, r));
@@ -789,14 +873,14 @@ fn run_epoch_serial(
             let dst = setup.schedule.send_to(slot.q);
             let w = std::mem::take(&mut slot.w);
             let acc = std::mem::take(&mut slot.w_acc);
-            let bytes = 16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+            let bytes = 16 + 4 * w.len() + if ship_acc { 4 * acc.len() } else { 0 };
             let secs = setup.cost.transfer_secs(slot.q, dst, bytes);
             moved.push((dst, slot.block_id, w, acc));
             let _ = secs;
         }
         for (dst, block_id, w, acc) in moved {
             let src = setup.schedule.recv_from(dst);
-            let bytes = 16 + 4 * w.len() + if adagrad { 4 * acc.len() } else { 0 };
+            let bytes = 16 + 4 * w.len() + if ship_acc { 4 * acc.len() } else { 0 };
             let secs = setup.cost.transfer_secs(src, dst, bytes);
             let slot = &mut slots[dst];
             slot.block_id = block_id;

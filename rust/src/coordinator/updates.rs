@@ -127,6 +127,20 @@ pub enum StepRule {
     Fixed(f64),
     /// AdaGrad with η₀; accumulators supplied per sweep.
     AdaGrad(f64),
+    /// Per-coordinate adaptive rate η₀/√(1+Σg²) in the spirit of
+    /// Cutkosky & Busa-Fekete (arXiv:1802.05811): same accumulated
+    /// second-moment statistic as AdaGrad, but the unit offset bounds
+    /// η by η₀ from the first step — no ε floor and no early-step
+    /// blow-up on sparse coordinates whose first gradient is tiny.
+    Adaptive(f64),
+}
+
+impl StepRule {
+    /// Whether the rule carries per-coordinate accumulator state (and
+    /// therefore must ship it with the rotating w block).
+    pub fn uses_acc(&self) -> bool {
+        matches!(self, StepRule::AdaGrad(_) | StepRule::Adaptive(_))
+    }
 }
 
 /// Immutable per-sweep context (problem constants and global count
@@ -330,6 +344,51 @@ impl StepK for AdaGradStep {
     }
 }
 
+/// η₀/√(1+Σg²) — [`StepRule::Adaptive`]. Structurally AdaGrad with the
+/// ε floor replaced by a unit offset *inside* the root, so it reuses
+/// AdaGrad's backend lane op with `eps = 1.0` verbatim: the backend
+/// computes η₀/√(eps + acc'), which for eps = 1 is exactly this rule.
+#[derive(Clone, Copy)]
+struct AdaptiveStep(f64);
+
+impl StepK for AdaptiveStep {
+    const USES_ACC: bool = true;
+
+    #[inline(always)]
+    fn eta(self, acc: &mut f32, g: f64) -> f64 {
+        // Same f64-accumulate / f32-store rounding as AdaGradStep.
+        let a = *acc as f64 + g * g;
+        *acc = a as f32;
+        self.0 / (1.0 + a).sqrt()
+    }
+
+    #[inline(always)]
+    fn eta_lane_b<B: SimdBackend>(self, acc: &mut Lane, g: &Lane) -> Lane {
+        B::adagrad_eta_lane(self.0 as f32, 1.0f32, acc, g)
+    }
+
+    /// η depends on g_α (like AdaGrad), so the serial per-entry loop
+    /// stays; the coefficient lanes are still precomputed 8-wide.
+    #[inline(always)]
+    fn alpha_chunk_affine(
+        self,
+        acc: &mut f32,
+        mut ai: f64,
+        cv: &Lane,
+        n: usize,
+        slope_hr: f64,
+        av: &mut Lane,
+    ) -> f64 {
+        for k in 0..n {
+            av[k] = ai as f32;
+            let ga = cv[k] as f64 + slope_hr * ai;
+            let eta = self.eta(acc, ga);
+            ai += eta * ga;
+        }
+        ai
+    }
+}
+
 // ---------------------------------------------------------------------
 // Shared validation
 // ---------------------------------------------------------------------
@@ -399,6 +458,7 @@ pub fn sweep_packed(block: &PackedBlock, ctx: &PackedCtx, st: &mut PackedState) 
     match ctx.rule {
         StepRule::Fixed(eta) => dispatch_loss_reg(block, ctx, st, FixedStep(eta)),
         StepRule::AdaGrad(eta0) => dispatch_loss_reg(block, ctx, st, AdaGradStep(eta0)),
+        StepRule::Adaptive(eta0) => dispatch_loss_reg(block, ctx, st, AdaptiveStep(eta0)),
     }
 }
 
@@ -546,6 +606,7 @@ pub fn sweep_lanes_with<B: SimdBackend>(
     match ctx.rule {
         StepRule::Fixed(eta) => dispatch_lanes::<B, _>(block, ctx, st, FixedStep(eta)),
         StepRule::AdaGrad(eta0) => dispatch_lanes::<B, _>(block, ctx, st, AdaGradStep(eta0)),
+        StepRule::Adaptive(eta0) => dispatch_lanes::<B, _>(block, ctx, st, AdaptiveStep(eta0)),
     }
 }
 
@@ -750,6 +811,9 @@ pub fn sweep_lanes_affine_with<B: SimdBackend>(
         StepRule::AdaGrad(eta0) => {
             dispatch_lanes_affine::<B, _>(block, ctx, st, AdaGradStep(eta0))
         }
+        StepRule::Adaptive(eta0) => {
+            dispatch_lanes_affine::<B, _>(block, ctx, st, AdaptiveStep(eta0))
+        }
     }
 }
 
@@ -948,6 +1012,10 @@ pub fn sweep_packed_sampled(
                 AdaGradStep(eta0).eta(&mut st.w_acc[lj], gw),
                 AdaGradStep(eta0).eta(&mut st.a_acc[li], ga),
             ),
+            StepRule::Adaptive(eta0) => (
+                AdaptiveStep(eta0).eta(&mut st.w_acc[lj], gw),
+                AdaptiveStep(eta0).eta(&mut st.a_acc[li], ga),
+            ),
         };
         st.w[lj] = (wj - eta_w * gw).clamp(-b, b) as f32;
         st.alpha[li] = ctx.loss.project_alpha(ai + eta_a * ga, y) as f32;
@@ -965,6 +1033,7 @@ pub fn sweep_block(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState) -> us
     match ctx.rule {
         StepRule::Fixed(eta) => sweep_fixed(entries, ctx, st, eta),
         StepRule::AdaGrad(eta0) => sweep_adagrad(entries, ctx, st, eta0),
+        StepRule::Adaptive(eta0) => sweep_adaptive(entries, ctx, st, eta0),
     }
 }
 
@@ -1044,6 +1113,45 @@ fn sweep_adagrad(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f
             let aa = *st.a_acc.get_unchecked(ia) as f64 + ga * ga;
             *st.a_acc.get_unchecked_mut(ia) = aa as f32;
             let eta_a = eta0 / (ADAGRAD_EPS + aa).sqrt();
+
+            *st.w.get_unchecked_mut(jw) = (wj - eta_w * gw).clamp(-b, b) as f32;
+            *st.alpha.get_unchecked_mut(ia) =
+                ctx.loss.project_alpha(ai + eta_a * ga, y) as f32;
+        }
+    }
+    entries.len()
+}
+
+/// [`sweep_adagrad`] with the [`StepRule::Adaptive`] rate
+/// η₀/√(1+Σg²): same accumulator discipline, unit offset in place of
+/// the ε floor. Reference oracle for `AdaptiveStep`'s packed kernels.
+fn sweep_adaptive(entries: &[Entry], ctx: &SweepCtx, st: &mut BlockState, eta0: f64) -> usize {
+    let b = ctx.w_bound;
+    for e in entries {
+        let jw = e.j as usize - st.w_off;
+        let ia = e.i as usize - st.a_off;
+        debug_assert!(jw < st.w.len() && ia < st.alpha.len());
+        // SAFETY: entry indices are in-bounds by construction (see the
+        // note above `sweep_adagrad`'s loop).
+        unsafe {
+            let wj = *st.w.get_unchecked(jw) as f64;
+            let ai = *st.alpha.get_unchecked(ia) as f64;
+            let x = e.x as f64;
+            let y = *ctx.y.get_unchecked(e.i as usize) as f64;
+            let gw = ctx.lambda * ctx.reg.grad(wj)
+                / *ctx.col_counts.get_unchecked(e.j as usize) as f64
+                - ai * x / ctx.m;
+            let ga = ctx.loss.dual_utility_grad(ai, y)
+                / (ctx.m * *ctx.row_counts.get_unchecked(e.i as usize) as f64)
+                - wj * x / ctx.m;
+
+            let wa = *st.w_acc.get_unchecked(jw) as f64 + gw * gw;
+            *st.w_acc.get_unchecked_mut(jw) = wa as f32;
+            let eta_w = eta0 / (1.0 + wa).sqrt();
+
+            let aa = *st.a_acc.get_unchecked(ia) as f64 + ga * ga;
+            *st.a_acc.get_unchecked_mut(ia) = aa as f32;
+            let eta_a = eta0 / (1.0 + aa).sqrt();
 
             *st.w.get_unchecked_mut(jw) = (wj - eta_w * gw).clamp(-b, b) as f32;
             *st.alpha.get_unchecked_mut(ia) =
@@ -1237,7 +1345,7 @@ mod tests {
         ];
         for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
             for reg in [Regularizer::L2, Regularizer::L1] {
-                for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3), StepRule::Adaptive(0.3)] {
                     let mut c = ctx(&row_counts, &col_counts, &y, rule);
                     c.loss = loss;
                     c.reg = reg;
@@ -1312,7 +1420,7 @@ mod tests {
         ];
         let p = pack(&entries, &row_counts, &col_counts, &y);
         assert!(!p.b.has_lanes());
-        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3), StepRule::Adaptive(0.3)] {
             let c = ctx(&row_counts, &col_counts, &y, rule);
             let pc = packed_ctx(&c, &p);
             let run = |lanes: bool| {
@@ -1355,7 +1463,7 @@ mod tests {
         assert_eq!(p.b.padded_nnz(), 16);
         for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
             for reg in [Regularizer::L2, Regularizer::L1] {
-                for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+                for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2), StepRule::Adaptive(0.2)] {
                     let mut c = ctx(&row_counts, &col_counts, &y, rule);
                     c.loss = loss;
                     c.reg = reg;
@@ -1736,7 +1844,7 @@ mod tests {
         ];
         let p = pack(&entries, &row_counts, &col_counts, &y);
         assert!(!p.b.has_lanes());
-        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+        for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3), StepRule::Adaptive(0.3)] {
             let mut c = ctx(&row_counts, &col_counts, &y, rule);
             c.loss = Loss::Square;
             let pc = packed_ctx(&c, &p);
@@ -1755,7 +1863,7 @@ mod tests {
         let p = pack(&entries, &row_counts, &col_counts, &y);
         assert!(p.b.has_lanes());
         for loss in [Loss::Hinge, Loss::Logistic] {
-            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3), StepRule::Adaptive(0.3)] {
                 let mut c = ctx(&row_counts, &col_counts, &y, rule);
                 c.loss = loss;
                 let pc = packed_ctx(&c, &p);
@@ -1781,7 +1889,7 @@ mod tests {
         let p = pack(&entries, &row_counts, &col_counts, &y);
         assert!(p.b.has_lanes());
         for reg in [Regularizer::L2, Regularizer::L1] {
-            for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2)] {
+            for rule in [StepRule::Fixed(0.2), StepRule::AdaGrad(0.2), StepRule::Adaptive(0.2)] {
                 let mut c = ctx(&row_counts, &col_counts, &y, rule);
                 c.loss = Loss::Square;
                 c.reg = reg;

@@ -39,6 +39,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     // Step-size rules.
     for (label, step, eta0) in [
         ("step=adagrad (paper)", StepKind::AdaGrad, 0.1),
+        ("step=adaptive (1802.05811)", StepKind::Adaptive, 0.1),
         ("step=invsqrt (thm 1)", StepKind::InvSqrt, 1.0),
         ("step=const", StepKind::Const, 0.05),
     ] {

@@ -19,7 +19,10 @@
 //! over every engine, streams per-epoch rows to an observer, and
 //! returns a [`api::Fitted`] artifact with `predict` and model
 //! persistence. The per-engine free functions remain as thin
-//! deprecated shims.
+//! deprecated shims. Persisted models are served back by the
+//! [`serve`] subsystem (DESIGN.md §Serving): batched SIMD inference
+//! over the training kernels' packed layout, warm-start retraining
+//! via [`api::Trainer::fit_from`], and the `dso serve` model server.
 
 pub mod api;
 pub mod baselines;
@@ -33,6 +36,7 @@ pub mod net;
 pub mod optim;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod simd;
 pub mod util;
 

@@ -237,7 +237,10 @@ pub fn replay_recorded_schedule(
     anyhow::ensure!(sched.p == p, "schedule has p = {}, this run has p = {p}", sched.p);
 
     let loss = setup.problem.loss;
-    let rule = StepRule::AdaGrad(cfg.optim.eta0);
+    let rule = match cfg.optim.step {
+        StepKind::Adaptive => StepRule::Adaptive(cfg.optim.eta0),
+        _ => StepRule::AdaGrad(cfg.optim.eta0),
+    };
     let mut tokens: Vec<(Vec<f32>, Vec<f32>)> = (0..p)
         .map(|b| {
             let len = setup.omega.col_part.block(b).len();
@@ -768,9 +771,10 @@ pub fn train_dso_proc_with(
     obs: Option<&mut dyn EpochObserver>,
 ) -> Result<TrainResult> {
     anyhow::ensure!(
-        cfg.optim.step == StepKind::AdaGrad,
-        "async DSO supports AdaGrad (state travels with blocks); \
-         epoch-level η_t schedules need a global clock, which async lacks"
+        matches!(cfg.optim.step, StepKind::AdaGrad | StepKind::Adaptive),
+        "async DSO supports the accumulator rules (adagrad, adaptive — \
+         state travels with blocks); epoch-level η_t schedules need a \
+         global clock, which async lacks"
     );
     anyhow::ensure!(
         cfg.cluster.updates_per_block == 0,
@@ -1236,7 +1240,10 @@ pub fn worker_main(socket: &Path, worker: usize) -> Result<()> {
     conn.send(&Msg::Ready { worker: worker as u32, fingerprint: fpw })?;
     let _ = fingerprint; // the supervisor, not the worker, arbitrates
 
-    let rule = StepRule::AdaGrad(cfg.optim.eta0);
+    let rule = match cfg.optim.step {
+        StepKind::Adaptive => StepRule::Adaptive(cfg.optim.eta0),
+        _ => StepRule::AdaGrad(cfg.optim.eta0),
+    };
     let loss = setup.problem.loss;
     let p = setup.p as u64;
     // Own row stripe, derived deterministically — identical to the

@@ -196,6 +196,17 @@ fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
     }
 }
 
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    put_u64(b, v.to_bits());
+}
+
+fn put_f64s(b: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(b, xs.len() as u32);
+    for &x in xs {
+        put_f64(b, x);
+    }
+}
+
 /// Bounds-checked payload reader.
 struct Rd<'a> {
     buf: &'a [u8],
@@ -258,6 +269,22 @@ impl<'a> Rd<'a> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn f64(&mut self) -> Result<f64, DecodeErr> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, DecodeErr> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 8 {
+            return Err(DecodeErr(format!("f64 vector length {n} out of range")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
         }
         Ok(out)
     }
@@ -428,6 +455,13 @@ const T_HEARTBEAT: u8 = 9;
 const T_BYE: u8 = 10;
 const T_KILLME: u8 = 11;
 const T_SHUTDOWN: u8 = 12;
+// Serving protocol (rust/src/serve) — rides the same framed transport.
+const T_PREDICT: u8 = 13;
+const T_SCORES: u8 = 14;
+const T_RELOAD: u8 = 15;
+const T_STATS: u8 = 16;
+const T_STATS_REPLY: u8 = 17;
+const T_SERVE_ERR: u8 = 18;
 
 /// Protocol messages. Coordinator → worker: `Start`, `Deliver`,
 /// `Adopt`, `Ack` (of `Fwd` seqs), `Nack`, `Shutdown`. Worker →
@@ -483,6 +517,37 @@ pub enum Msg {
     Bye,
     KillMe,
     Shutdown,
+    /// Serving: a batch of libsvm-formatted rows to score (labels, when
+    /// present, are parsed and ignored). `id` is an opaque client token
+    /// echoed on the reply so pipelined requests pair up.
+    Predict { id: u64, batch: String },
+    /// Serving reply: one f64 score per parsed request row, in row
+    /// order. Scores cross the wire as IEEE-754 bit patterns (the same
+    /// contract as the f32 token state), so client-side values are
+    /// bit-identical to the server's fold.
+    Scores { id: u64, scores: Vec<f64> },
+    /// Serving: hot-swap the model from `path` (typically after a
+    /// warm-start retrain). Acked on success, `ServeError` otherwise —
+    /// the previous model keeps serving on failure.
+    Reload { path: String },
+    /// Serving: request the per-instance counters.
+    StatsReq,
+    /// Serving reply: per-instance request counters plus the backend
+    /// recorded at startup and the current model dimension.
+    StatsReply {
+        served: u64,
+        rows: u64,
+        errors: u64,
+        reloads: u64,
+        total_latency_us: u64,
+        max_latency_us: u64,
+        backend: String,
+        d: u64,
+    },
+    /// Serving reply: a request-scoped failure (parse error, dimension
+    /// mismatch, unreadable model). The connection stays up; `id`
+    /// echoes the failing request (0 for `Reload`).
+    ServeError { id: u64, message: String },
 }
 
 impl Msg {
@@ -544,6 +609,46 @@ impl Msg {
             Msg::Bye => put_u8(&mut b, T_BYE),
             Msg::KillMe => put_u8(&mut b, T_KILLME),
             Msg::Shutdown => put_u8(&mut b, T_SHUTDOWN),
+            Msg::Predict { id, batch } => {
+                put_u8(&mut b, T_PREDICT);
+                put_u64(&mut b, *id);
+                put_str(&mut b, batch);
+            }
+            Msg::Scores { id, scores } => {
+                put_u8(&mut b, T_SCORES);
+                put_u64(&mut b, *id);
+                put_f64s(&mut b, scores);
+            }
+            Msg::Reload { path } => {
+                put_u8(&mut b, T_RELOAD);
+                put_str(&mut b, path);
+            }
+            Msg::StatsReq => put_u8(&mut b, T_STATS),
+            Msg::StatsReply {
+                served,
+                rows,
+                errors,
+                reloads,
+                total_latency_us,
+                max_latency_us,
+                backend,
+                d,
+            } => {
+                put_u8(&mut b, T_STATS_REPLY);
+                put_u64(&mut b, *served);
+                put_u64(&mut b, *rows);
+                put_u64(&mut b, *errors);
+                put_u64(&mut b, *reloads);
+                put_u64(&mut b, *total_latency_us);
+                put_u64(&mut b, *max_latency_us);
+                put_str(&mut b, backend);
+                put_u64(&mut b, *d);
+            }
+            Msg::ServeError { id, message } => {
+                put_u8(&mut b, T_SERVE_ERR);
+                put_u64(&mut b, *id);
+                put_str(&mut b, message);
+            }
         }
         b
     }
@@ -586,6 +691,21 @@ impl Msg {
             T_BYE => Msg::Bye,
             T_KILLME => Msg::KillMe,
             T_SHUTDOWN => Msg::Shutdown,
+            T_PREDICT => Msg::Predict { id: rd.u64()?, batch: rd.str()? },
+            T_SCORES => Msg::Scores { id: rd.u64()?, scores: rd.f64s()? },
+            T_RELOAD => Msg::Reload { path: rd.str()? },
+            T_STATS => Msg::StatsReq,
+            T_STATS_REPLY => Msg::StatsReply {
+                served: rd.u64()?,
+                rows: rd.u64()?,
+                errors: rd.u64()?,
+                reloads: rd.u64()?,
+                total_latency_us: rd.u64()?,
+                max_latency_us: rd.u64()?,
+                backend: rd.str()?,
+                d: rd.u64()?,
+            },
+            T_SERVE_ERR => Msg::ServeError { id: rd.u64()?, message: rd.str()? },
             t => return Err(DecodeErr(format!("unknown message tag {t}"))),
         };
         rd.done()?;
@@ -750,6 +870,24 @@ mod tests {
             Msg::Bye,
             Msg::KillMe,
             Msg::Shutdown,
+            Msg::Predict { id: 99, batch: "+1 1:0.5 3:-2\n0 2:1.25\n".into() },
+            Msg::Scores {
+                id: 99,
+                scores: vec![0.0, -0.0, 1.5e-300, f64::from_bits(0x7ff8_0000_0000_0042)],
+            },
+            Msg::Reload { path: "/tmp/retrained-model.txt".into() },
+            Msg::StatsReq,
+            Msg::StatsReply {
+                served: 12,
+                rows: 480,
+                errors: 1,
+                reloads: 2,
+                total_latency_us: 3456,
+                max_latency_us: 789,
+                backend: "avx2".into(),
+                d: 60,
+            },
+            Msg::ServeError { id: 99, message: "line 2: bad value 'x'".into() },
         ];
         for m in msgs {
             let enc = m.encode();

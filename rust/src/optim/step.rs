@@ -66,12 +66,40 @@ impl AdaGrad {
     }
 }
 
-/// Unified stepper used by the scalar update loop: either a shared
-/// scalar η_t or AdaGrad per-coordinate state.
+/// Per-coordinate adaptive state η_j = η₀ / √(1 + Σ g²) — the
+/// Cutkosky & Busa-Fekete (arXiv:1802.05811) style rate: AdaGrad's
+/// accumulated second-moment statistic with a unit offset inside the
+/// root instead of the ε floor, so the step is bounded by η₀ from the
+/// very first update (no 1/√ε blow-up on fresh sparse coordinates).
+/// Accumulators travel with their coordinates exactly like AdaGrad's.
+#[derive(Clone, Debug)]
+pub struct Adaptive {
+    pub eta0: f64,
+    pub accum: Vec<f32>,
+}
+
+impl Adaptive {
+    pub fn new(n: usize, eta0: f64) -> Adaptive {
+        assert!(eta0 > 0.0);
+        Adaptive { eta0, accum: vec![0.0; n] }
+    }
+
+    /// Accumulate g² for coordinate `j` and return the step size.
+    #[inline]
+    pub fn step(&mut self, j: usize, g: f64) -> f64 {
+        let a = self.accum[j] as f64 + g * g;
+        self.accum[j] = a as f32;
+        self.eta0 / (1.0 + a).sqrt()
+    }
+}
+
+/// Unified stepper used by the scalar update loop: a shared scalar
+/// η_t, or per-coordinate AdaGrad/Adaptive state.
 #[derive(Clone, Debug)]
 pub enum Stepper {
     Scalar(Schedule),
     AdaGrad(AdaGrad),
+    Adaptive(Adaptive),
 }
 
 impl Stepper {
@@ -80,16 +108,19 @@ impl Stepper {
             StepKind::Const => Stepper::Scalar(Schedule::Const { eta0 }),
             StepKind::InvSqrt => Stepper::Scalar(Schedule::InvSqrt { eta0 }),
             StepKind::AdaGrad => Stepper::AdaGrad(AdaGrad::new(n, eta0)),
+            StepKind::Adaptive => Stepper::Adaptive(Adaptive::new(n, eta0)),
         }
     }
 
     /// Step size for coordinate `j` with incoming gradient `g` at epoch
-    /// `t` (1-based). AdaGrad accumulates; scalar schedules ignore j, g.
+    /// `t` (1-based). The accumulator rules accumulate; scalar
+    /// schedules ignore j, g.
     #[inline]
     pub fn step(&mut self, j: usize, g: f64, epoch: usize) -> f64 {
         match self {
             Stepper::Scalar(s) => s.eta(epoch),
             Stepper::AdaGrad(a) => a.step(j, g),
+            Stepper::Adaptive(a) => a.step(j, g),
         }
     }
 }
@@ -145,6 +176,19 @@ mod tests {
         let e = a.step(0, 0.0);
         assert!(e > 1e3); // 1/sqrt(eps)
         assert_eq!(a.accum[0], 0.0);
+    }
+
+    #[test]
+    fn adaptive_is_bounded_by_eta0_and_decreasing() {
+        let mut a = Adaptive::new(2, 0.5);
+        // First step: 0.5/√(1+g²) ≤ 0.5 — never the 1/√ε blow-up.
+        let e1 = a.step(0, 0.0);
+        assert!((e1 - 0.5).abs() < 1e-12);
+        let e2 = a.step(0, 1.0);
+        let e3 = a.step(0, 1.0);
+        assert!(e2 > e3);
+        assert!((e2 - 0.5 / 2f64.sqrt()).abs() < 1e-9);
+        assert_eq!(a.accum[1], 0.0);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Request batch packing — the serving twin of the training
+//! `PackedBlocks` layout.
+//!
+//! A predict batch is packed row-major into the same lane-major SoA
+//! shape the sweep kernels consume: one [`RowGroup`] per request row
+//! (`li` = request index), column ids and feature values in §Alignment
+//! 64-byte-aligned [`AVec`] storage, lane-eligible groups padded to
+//! `LANES` multiples with read-only sentinel slots (`col =
+//! SENTINEL_COL`, `val = 0.0`). Two deliberate differences from the
+//! training layout:
+//!
+//! * Column ids are **global** (no column stripes — serving gathers
+//!   against the full w), and values are the **raw** features, not the
+//!   sweep's pre-scaled x/m: the batched fold must reproduce
+//!   `Csr::row_dot` bit for bit.
+//! * Empty request rows keep their (zero-length) group, so the packer
+//!   emits exactly one group — and the kernel exactly one score — per
+//!   request, in request order.
+
+use crate::data::sparse::Csr;
+use crate::partition::omega::{lane_span, RowGroup, LANES, SENTINEL_COL};
+use crate::simd::AVec;
+
+/// A batch of predict requests in lane-major packed form.
+#[derive(Clone, Debug)]
+pub struct PackedRequests {
+    /// One group per request row, ascending `li` = 0..n_requests.
+    pub groups: Vec<RowGroup>,
+    /// Global column id per physical slot; sentinel slots hold
+    /// [`SENTINEL_COL`]. 64-byte-aligned ([`AVec`]).
+    pub cols: AVec<u32>,
+    /// Raw feature value per physical slot (NOT x/m-scaled — serving
+    /// reproduces `Csr::row_dot`); sentinel slots hold 0.0.
+    pub vals: AVec<f32>,
+    /// Model dimension every column id was validated against.
+    pub d: usize,
+}
+
+impl PackedRequests {
+    /// Number of request rows (== number of scores produced).
+    #[inline]
+    pub fn n_requests(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of real entries (sentinel padding excluded).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.groups.last().map_or(0, |g| g.end as usize)
+    }
+
+    /// Physical storage slots, including sentinel padding.
+    #[inline]
+    pub fn padded_nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Pack the rows of a CSR matrix against a model of dimension `d`.
+    ///
+    /// Refuses batches whose features don't fit the model: every
+    /// column id must be `< d` (the serving-side dimension-mismatch
+    /// contract — a request for feature j ≥ d has no weight to gather),
+    /// and `d` must fit the AVX2 gather's sign-extending i32 indices.
+    /// `x.cols <= d` is allowed: libsvm omits trailing zero features,
+    /// so a request batch routinely parses narrower than the model.
+    pub fn pack(x: &Csr, d: usize) -> Result<PackedRequests, String> {
+        if d > i32::MAX as usize {
+            return Err(format!(
+                "model dimension {d} exceeds the SIMD gather index range ({})",
+                i32::MAX
+            ));
+        }
+        if x.cols > d {
+            return Err(format!(
+                "request batch uses {} features but the model has {d}; \
+                 retrain with the widened data (Trainer::fit_from) or fix the request",
+                x.cols
+            ));
+        }
+        let mut groups = Vec::with_capacity(x.rows);
+        let padded: usize = (0..x.rows).map(|i| lane_span(x.row_nnz(i))).sum();
+        let mut cols = AVec::with_capacity(padded);
+        let mut vals = AVec::with_capacity(padded);
+        let mut logical = 0u32;
+        for i in 0..x.rows {
+            let (idx, val) = x.row(i);
+            let g = RowGroup {
+                li: i as u32,
+                start: logical,
+                end: logical + idx.len() as u32,
+                pad_start: cols.len() as u32,
+            };
+            // Storage order inside the row is preserved verbatim from
+            // the CSR row — the fold's f64 accumulation order (hence
+            // bitwise identity with row_dot) depends on it.
+            cols.extend_from_slice(idx);
+            vals.extend_from_slice(val);
+            for _ in idx.len()..g.padded_len() {
+                cols.push(SENTINEL_COL);
+                vals.push(0.0);
+            }
+            logical = g.end;
+            groups.push(g);
+        }
+        Ok(PackedRequests { groups, cols, vals, d })
+    }
+
+    /// Structural invariants, mirroring `PackedBlocks::validate`:
+    /// groups tile the logical and physical ranges in request order,
+    /// every real column id is `< d`, sentinel slots are inert, and
+    /// the lane storage honors the §Alignment contract. O(padded_nnz);
+    /// used by tests and debug assertions, not the request hot path
+    /// (the kernel re-checks the cheap bounds itself).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut logical = 0u32;
+        let mut physical = 0usize;
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.li as usize != i {
+                return Err(format!("group {i} carries li {}", g.li));
+            }
+            if g.start != logical || g.end < g.start {
+                return Err(format!("group {i} logical range not tiled"));
+            }
+            if g.pad_start as usize != physical {
+                return Err(format!("group {i} physical region not tiled"));
+            }
+            for k in 0..g.padded_len() {
+                let kp = g.pad_start as usize + k;
+                if k < g.len() {
+                    if self.cols[kp] as usize >= self.d {
+                        return Err(format!(
+                            "request {i} feature {} out of model range {}",
+                            self.cols[kp], self.d
+                        ));
+                    }
+                } else if self.cols[kp] != SENTINEL_COL || self.vals[kp] != 0.0 {
+                    return Err(format!("request {i} sentinel slot {kp} not inert"));
+                }
+            }
+            logical = g.end;
+            physical += g.padded_len();
+        }
+        if physical != self.padded_nnz() || self.cols.len() != self.vals.len() {
+            return Err("physical regions do not tile storage".into());
+        }
+        if !crate::simd::is_aligned(&self.cols[..]) || !crate::simd::is_aligned(&self.vals[..]) {
+            return Err("packed request storage violates the §Alignment contract".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> Csr {
+        // Rows: lane-eligible (10 entries → padded to 16), short (2),
+        // empty (0), exactly one lane (8).
+        let rows: Vec<Vec<(u32, f32)>> = vec![
+            (0..10).map(|j| (j as u32, 0.5 + j as f32)).collect(),
+            vec![(3, -1.0), (7, 2.0)],
+            vec![],
+            (2..10).map(|j| (j as u32, j as f32)).collect(),
+        ];
+        Csr::from_rows(12, rows)
+    }
+
+    #[test]
+    fn pack_tiles_groups_and_pads_ragged_tails() {
+        let x = batch();
+        let p = PackedRequests::pack(&x, 12).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.n_requests(), 4);
+        assert_eq!(p.nnz(), x.nnz());
+        // 10 → 16, 2 → 2, 0 → 0, 8 → 8.
+        assert_eq!(p.padded_nnz(), 16 + 2 + 8);
+        assert_eq!(p.groups[0].padded_len(), 2 * LANES);
+        assert!(p.groups[0].lane_eligible());
+        assert!(!p.groups[1].lane_eligible());
+        assert!(p.groups[2].is_empty());
+        // Sentinels after row 0's real prefix are inert.
+        for kp in 10..16 {
+            assert_eq!(p.cols[kp], SENTINEL_COL);
+            assert_eq!(p.vals[kp], 0.0);
+        }
+    }
+
+    #[test]
+    fn pack_widens_but_never_narrows() {
+        let x = batch();
+        // Widening to a bigger model dimension is routine (libsvm
+        // omits trailing features).
+        assert!(PackedRequests::pack(&x, 40).is_ok());
+        // A model narrower than the batch is a dimension mismatch.
+        let err = PackedRequests::pack(&x, 8).unwrap_err();
+        assert!(err.contains("12 features but the model has 8"), "{err}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Per-request serving metrics, streamed through an observer layer
+//! that mirrors the training side's `EpochObserver`.
+//!
+//! The server records one [`RequestStat`] per answered predict batch
+//! and folds it into its cumulative [`ServeStats`]; an optional
+//! [`ServeObserver`] sees each stat the moment it is recorded (the
+//! `dso serve` CLI wires a stderr logger through here, tests wire
+//! closures). Counters are also exported over the wire on demand as
+//! `Msg::StatsReply`.
+
+use crate::net::wire::Msg;
+
+/// One answered predict request, as seen by the observer.
+#[derive(Clone, Debug)]
+pub struct RequestStat {
+    /// Caller-chosen request id, echoed from `Msg::Predict`.
+    pub id: u64,
+    /// Rows (individual examples) scored in the batch.
+    pub rows: usize,
+    /// Real non-zeros scored (sentinel padding excluded).
+    pub nnz: usize,
+    /// Wall-clock seconds from frame decode to scores encoded.
+    pub latency_s: f64,
+    /// SIMD backend the scores ran on ("portable" / "avx2") —
+    /// resolved once per server instance, recorded per request so a
+    /// mixed-fleet log stays attributable.
+    pub backend: &'static str,
+}
+
+/// Live callback for serving events. Implemented for any
+/// `FnMut(&RequestStat)` closure, exactly like `EpochObserver` is for
+/// `FnMut(&EvalRow)`.
+pub trait ServeObserver {
+    fn on_request(&mut self, stat: &RequestStat);
+
+    /// Called after a successful hot model reload. Default: ignore, so
+    /// closures stay observers.
+    fn on_reload(&mut self, _path: &str, _d: usize) {}
+}
+
+impl<F: FnMut(&RequestStat)> ServeObserver for F {
+    fn on_request(&mut self, stat: &RequestStat) {
+        self(stat)
+    }
+}
+
+/// Observer that drops everything (headless servers).
+pub struct NullServeObserver;
+
+impl ServeObserver for NullServeObserver {
+    fn on_request(&mut self, _stat: &RequestStat) {}
+}
+
+/// Cumulative serving counters for one server instance.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Predict batches answered with scores.
+    pub served: u64,
+    /// Total rows scored across all batches.
+    pub rows: u64,
+    /// Requests refused with `Msg::ServeError` (parse failures,
+    /// dimension mismatches, failed reloads).
+    pub errors: u64,
+    /// Successful hot model reloads.
+    pub reloads: u64,
+    /// Sum of per-request latencies, seconds.
+    pub total_latency_s: f64,
+    /// Worst single-request latency, seconds.
+    pub max_latency_s: f64,
+    /// Backend every batch ran on ("portable" / "avx2").
+    pub backend: &'static str,
+}
+
+impl ServeStats {
+    pub fn new(backend: &'static str) -> ServeStats {
+        ServeStats { backend, ..ServeStats::default() }
+    }
+
+    /// Fold one answered request into the counters.
+    pub fn record(&mut self, stat: &RequestStat) {
+        self.served += 1;
+        self.rows += stat.rows as u64;
+        self.total_latency_s += stat.latency_s;
+        if stat.latency_s > self.max_latency_s {
+            self.max_latency_s = stat.latency_s;
+        }
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn record_reload(&mut self) {
+        self.reloads += 1;
+    }
+
+    /// Mean per-request latency in seconds (0 before any request).
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_latency_s / self.served as f64
+        }
+    }
+
+    /// Rows scored per second of cumulative serving latency (the
+    /// kernel-side throughput; 0 before any request).
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.total_latency_s <= 0.0 {
+            0.0
+        } else {
+            self.rows as f64 / self.total_latency_s
+        }
+    }
+
+    /// Export as the wire reply (latencies in integer microseconds —
+    /// saturating, not wrapping, on absurd values).
+    pub fn to_reply(&self, d: usize) -> Msg {
+        let us = |s: f64| (s * 1e6).clamp(0.0, u64::MAX as f64) as u64;
+        Msg::StatsReply {
+            served: self.served,
+            rows: self.rows,
+            errors: self.errors,
+            reloads: self.reloads,
+            total_latency_us: us(self.total_latency_s),
+            max_latency_us: us(self.max_latency_s),
+            backend: self.backend.to_string(),
+            d: d as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_fold_requests_and_export() {
+        let mut st = ServeStats::new("portable");
+        let mut seen = 0usize;
+        {
+            let mut obs = |stat: &RequestStat| seen += stat.rows;
+            for (rows, lat) in [(4usize, 0.002f64), (1, 0.010), (7, 0.001)] {
+                let stat = RequestStat {
+                    id: 9,
+                    rows,
+                    nnz: rows * 3,
+                    latency_s: lat,
+                    backend: "portable",
+                };
+                ServeObserver::on_request(&mut obs, &stat);
+                st.record(&stat);
+            }
+        }
+        st.record_error();
+        st.record_reload();
+        assert_eq!(seen, 12);
+        assert_eq!((st.served, st.rows, st.errors, st.reloads), (3, 12, 1, 1));
+        assert!((st.max_latency_s - 0.010).abs() < 1e-12);
+        assert!((st.mean_latency_s() - 0.013 / 3.0).abs() < 1e-12);
+        assert!(st.rows_per_sec() > 0.0);
+        match st.to_reply(42) {
+            Msg::StatsReply { served, rows, max_latency_us, backend, d, .. } => {
+                assert_eq!((served, rows, d), (3, 12, 42));
+                assert_eq!(max_latency_us, 10_000);
+                assert_eq!(backend, "portable");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+}

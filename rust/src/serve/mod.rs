@@ -1,0 +1,40 @@
+//! Serving subsystem (DESIGN.md §Serving): batched SIMD sparse
+//! inference, request metrics, and a model server over the framed
+//! transport.
+//!
+//! The paper's premise is that *training* at scale is the bottleneck;
+//! the ROADMAP's north star — serving heavy traffic from millions of
+//! users — needs the other half. This module is that half:
+//!
+//! * [`batch::PackedRequests`] — predict requests packed into the same
+//!   lane-major, sentinel-padded SoA layout as the training
+//!   `PackedBlocks` (§Alignment `AVec` storage, `LANES`-wide chunks,
+//!   read-only sentinel slots), so inference reuses the gather
+//!   machinery the sweep kernels built.
+//! * [`predict`] — the batched dot-product kernel, monomorphized over
+//!   `simd::SimdBackend` exactly like the sweeps: the portable backend
+//!   is bit-identical to the old scalar `Csr::row_dot` loop (pinned by
+//!   test — `Fitted::predict`'s API and values are unchanged), the
+//!   AVX2 backend replaces each chunk's 8 scalar indexed loads with a
+//!   hardware gather. The backend is resolved **once per server
+//!   instance** by `simd::resolve` and recorded in the stats — no
+//!   feature detection inside this module (ci.sh greps it, same as the
+//!   engines).
+//! * [`metrics`] — per-request latency/throughput counters streamed
+//!   through an observer, mirroring the training side's
+//!   `EpochObserver` layer.
+//! * [`server`] — `dso serve`: loads a `Model`, answers
+//!   libsvm-formatted [`crate::net::wire::Msg::Predict`] requests over
+//!   the existing length-prefixed checksummed framing (`FrameConn`),
+//!   supports hot model reload after a warm-start retrain
+//!   (`Trainer::fit_from`), and reports its counters on demand.
+
+pub mod batch;
+pub mod metrics;
+pub mod predict;
+pub mod server;
+
+pub use batch::PackedRequests;
+pub use metrics::{NullServeObserver, RequestStat, ServeObserver, ServeStats};
+pub use predict::{predict_batch, predict_batch_with};
+pub use server::{serve, ServeOptions, Server};

@@ -1,0 +1,186 @@
+//! The batched sparse predict kernel.
+//!
+//! One score per request group: `s_i = Σ_k val[k]·w[col[k]]`, folded
+//! in f64 in storage order — the exact recurrence of the old scalar
+//! `Csr::row_dot` loop, which makes the portable path **bit-identical**
+//! to the pre-serve `Fitted::predict` (pinned in `tests/serve.rs`).
+//! Lane-eligible groups run `LANES`-wide chunks through
+//! [`SimdBackend::predict_fold_chunk`] (hardware gathers on AVX2);
+//! short groups take the scalar fold, exactly like the sweep kernels.
+//! Because the fold itself is f64 storage-order on every backend (see
+//! the backend-op docs), AVX2 and portable scores are bit-identical —
+//! the differential suite still asserts the weaker ≤1e-6 contract so a
+//! future vectorized fold has room to trade exactness for speed.
+//!
+//! Backend selection follows the engine rule: callers resolve a
+//! [`SimdLevel`] once (per server instance / per `Trainer` facade
+//! call) via `simd::resolve` and pass it down — this module performs
+//! no feature detection (ci.sh greps it, like the engines).
+
+use super::batch::PackedRequests;
+use crate::partition::omega::LANES;
+use crate::simd::{Portable, SimdBackend, SimdLevel};
+
+/// Score every request in the batch against `w`, appending one f64
+/// score per request (in request order) to `out` after clearing it.
+///
+/// # Panics
+/// If `w.len() != reqs.d` (the packer validated every column id
+/// against `reqs.d`) or the packed storage is inconsistent — both are
+/// caller bugs, not data errors: the server validates requests at
+/// parse/pack time and replies `ServeError` there.
+pub fn predict_batch(reqs: &PackedRequests, w: &[f32], level: SimdLevel, out: &mut Vec<f64>) {
+    match level {
+        SimdLevel::Portable => predict_batch_with::<Portable>(reqs, w, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 level is only ever produced by
+        // `simd::resolve` (which verified avx2+fma on this CPU) or by
+        // tests performing the same guard.
+        SimdLevel::Avx2 => unsafe { predict_batch_avx2(reqs, w, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Avx2 => unreachable!("simd::resolve never yields Avx2 off x86_64"),
+    }
+}
+
+/// Cheap per-batch bounds validation — the serving analogue of the
+/// sweeps' `check_packed_bounds`: after it passes, the chunk loop's
+/// unchecked gathers are sound. O(padded_nnz) over the column table
+/// only (predict itself is O(padded_nnz) with two more streams, so
+/// the scan is a small constant factor, and it is what lets the hot
+/// fold drop per-entry bounds checks).
+fn check_request_bounds(reqs: &PackedRequests, w: &[f32]) {
+    assert_eq!(
+        w.len(),
+        reqs.d,
+        "predict: model has {} weights but the batch was packed against d = {}",
+        w.len(),
+        reqs.d
+    );
+    assert_eq!(reqs.cols.len(), reqs.vals.len(), "packed request storage torn");
+    let n = w.len() as u32;
+    // Sentinels included: the full-width chunk gathers read them.
+    assert!(
+        reqs.cols.iter().all(|&c| c < n.max(1)) && reqs.d <= i32::MAX as usize,
+        "packed request column out of model range"
+    );
+    for g in &reqs.groups {
+        assert!(
+            g.pad_start as usize + g.padded_len() <= reqs.cols.len(),
+            "request group region out of storage range"
+        );
+    }
+    debug_assert!(crate::simd::is_aligned(&reqs.cols[..]));
+    debug_assert!(crate::simd::is_aligned(&reqs.vals[..]));
+}
+
+/// [`predict_batch`] monomorphized over an explicit [`SimdBackend`] —
+/// the differential-test entry point, exactly like `sweep_lanes_with`.
+pub fn predict_batch_with<B: SimdBackend>(reqs: &PackedRequests, w: &[f32], out: &mut Vec<f64>) {
+    check_request_bounds(reqs, w);
+    out.clear();
+    out.reserve(reqs.groups.len());
+    let cols = &reqs.cols[..];
+    let vals = &reqs.vals[..];
+    for g in &reqs.groups {
+        let len = g.len();
+        let mut s = 0.0f64;
+        if len < LANES {
+            // Short request: the scalar fold (identical numerics —
+            // full-width lanes would waste ≥ half their slots).
+            let b = g.pad_start as usize;
+            for k in b..b + len {
+                s += vals[k] as f64 * w[cols[k] as usize] as f64;
+            }
+        } else {
+            let mut base = g.pad_start as usize;
+            let mut rem = len;
+            while rem > 0 {
+                let n = rem.min(LANES);
+                // SAFETY: `base + LANES` stays within the group's
+                // physical lane region (lane-eligible groups are
+                // padded to LANES multiples) and every stored column —
+                // sentinels included — is < w.len(); both validated by
+                // `check_request_bounds` above. n <= LANES.
+                unsafe { B::predict_fold_chunk(cols, vals, base, n, w, &mut s) };
+                base += LANES;
+                rem -= n;
+            }
+        }
+        out.push(s);
+    }
+}
+
+/// Whole-batch AVX2 compilation unit — the same sweep-granularity
+/// `#[target_feature]` boundary the training kernels use
+/// (`sweep_lanes_avx2`): the chunk fold and the backend's intrinsic
+/// wrappers all inline into one avx2+fma function instead of paying an
+/// opaque call per chunk.
+///
+/// # Safety
+/// The running CPU must support avx2+fma — guaranteed by
+/// `simd::resolve` (server startup / facade) or an explicit
+/// `simd::avx2_supported()` guard at the call site.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn predict_batch_avx2(reqs: &PackedRequests, w: &[f32], out: &mut Vec<f64>) {
+    predict_batch_with::<crate::simd::Avx2>(reqs, w, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Csr;
+
+    fn batch_and_w() -> (Csr, Vec<f32>) {
+        let rows: Vec<Vec<(u32, f32)>> = (0..7)
+            .map(|i| {
+                (0..(3 * i) % 11)
+                    .map(|j| ((j * 2 + i) as u32 % 12, 0.25 * (i + j) as f32 - 1.0))
+                    .collect()
+            })
+            .collect();
+        let x = Csr::from_rows(12, rows);
+        let w: Vec<f32> = (0..12).map(|j| ((j * 7) % 5) as f32 * 0.3 - 0.6).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn portable_batch_is_bitwise_row_dot() {
+        let (x, w) = batch_and_w();
+        let p = PackedRequests::pack(&x, w.len()).unwrap();
+        let mut got = Vec::new();
+        predict_batch(&p, &w, SimdLevel::Portable, &mut got);
+        assert_eq!(got.len(), x.rows);
+        for i in 0..x.rows {
+            assert_eq!(got[i].to_bits(), x.row_dot(i, &w).to_bits(), "row {i}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_batch_matches_portable() {
+        if !crate::simd::avx2_supported() {
+            eprintln!("skipping: avx2+fma not available on this host");
+            return;
+        }
+        let (x, w) = batch_and_w();
+        let p = PackedRequests::pack(&x, w.len()).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        predict_batch(&p, &w, SimdLevel::Portable, &mut a);
+        predict_batch(&p, &w, SimdLevel::Avx2, &mut b);
+        // The f64 storage-order fold makes the backends bit-identical
+        // today; ≤1e-6 per score is the documented contract.
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() <= 1e-6 * a[i].abs().max(1.0), "row {i}");
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "row {i} fold should be bitwise");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "model has")]
+    fn dimension_mismatch_is_a_caller_bug() {
+        let (x, w) = batch_and_w();
+        let p = PackedRequests::pack(&x, w.len()).unwrap();
+        predict_batch(&p, &w[..8], SimdLevel::Portable, &mut Vec::new());
+    }
+}

@@ -1,0 +1,244 @@
+//! The model server behind `dso serve`.
+//!
+//! Loads a persisted [`Model`], binds a Unix socket, and answers
+//! libsvm-formatted predict requests over the exact framed transport
+//! the multi-process trainer speaks (`FrameConn`: length-prefixed,
+//! FNV-checksummed, `Msg`-encoded — nothing serving-specific below the
+//! message layer). The protocol is four request kinds:
+//!
+//! * `Predict { id, batch }` — `batch` is libsvm text (labels
+//!   mandatory per the format, ignored for scoring). Replies
+//!   `Scores { id, scores }` with one f64 margin per request line, or
+//!   `ServeError { id, message }` carrying the parser's line-numbered
+//!   message / the packer's dimension-mismatch message. A bad batch
+//!   never tears down the connection.
+//! * `Reload { path }` — hot-swaps the model after e.g. a warm-start
+//!   retrain (`Trainer::fit_from`). Replies `Ack { seq: reload# }` on
+//!   success; on failure replies `ServeError` and **keeps serving the
+//!   old model**.
+//! * `StatsReq` — replies `StatsReply` with the cumulative counters
+//!   ([`ServeStats`]), including which SIMD backend this instance
+//!   resolved at startup.
+//! * `Shutdown` — replies `Bye` and stops the server.
+//!
+//! Corrupt frames are counted and answered with `ServeError` (the
+//! serving analogue of the trainer's `Nack`); unknown training-side
+//! messages are ignored. Connections are served one at a time in
+//! accept order — the benchmark target is kernel throughput on one
+//! socket, not connection fan-out.
+//!
+//! The SIMD backend is resolved **once**, at [`Server::bind`], via
+//! `simd::resolve` — the same single feature-detection site the
+//! engines use — then recorded in the stats and stamped on every
+//! [`RequestStat`]. This module contains no feature detection and no
+//! bare `unwrap`/`expect` on the socket paths (both gated by ci.sh).
+
+use super::batch::PackedRequests;
+use super::metrics::{RequestStat, ServeObserver, ServeStats};
+use super::predict::predict_batch;
+use crate::api::Model;
+use crate::config::SimdKind;
+use crate::net::transport::{ConnIn, FrameConn};
+use crate::net::wire::Msg;
+use crate::simd::{self, SimdLevel};
+use anyhow::{Context, Result};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// How a [`Server`] is stood up.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Model file to serve ([`Model::load`] format).
+    pub model_path: PathBuf,
+    /// Unix socket to listen on (a stale file there is replaced).
+    pub socket_path: PathBuf,
+    /// SIMD backend policy: `Auto` detects, `Portable`/`Avx2` force —
+    /// identical semantics to training's `cluster.simd`.
+    pub simd: SimdKind,
+    /// Per-read timeout on an open connection; bounds how long a
+    /// silent client can hold the (serial) accept loop.
+    pub recv_timeout: Duration,
+}
+
+impl ServeOptions {
+    pub fn new(model_path: impl Into<PathBuf>, socket_path: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            model_path: model_path.into(),
+            socket_path: socket_path.into(),
+            simd: SimdKind::Auto,
+            recv_timeout: Duration::from_millis(500),
+        }
+    }
+}
+
+/// A bound, model-loaded server ready to [`run`](Server::run).
+pub struct Server {
+    model: Model,
+    level: SimdLevel,
+    stats: ServeStats,
+    listener: UnixListener,
+    socket_path: PathBuf,
+    recv_timeout: Duration,
+    /// Reused score buffer — one allocation per server, not per batch.
+    scores: Vec<f64>,
+}
+
+impl Server {
+    /// Load the model, resolve the SIMD backend (once — recorded for
+    /// the lifetime of the instance), and bind the socket.
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        let model = Model::load(&opts.model_path)
+            .with_context(|| format!("loading model {}", opts.model_path.display()))?;
+        let level = simd::resolve(opts.simd);
+        if opts.socket_path.exists() {
+            std::fs::remove_file(&opts.socket_path)
+                .with_context(|| format!("removing stale socket {}", opts.socket_path.display()))?;
+        }
+        let listener = UnixListener::bind(&opts.socket_path)
+            .with_context(|| format!("binding {}", opts.socket_path.display()))?;
+        Ok(Server {
+            model,
+            level,
+            stats: ServeStats::new(level.name()),
+            listener,
+            socket_path: opts.socket_path.clone(),
+            recv_timeout: opts.recv_timeout,
+            scores: Vec::new(),
+        })
+    }
+
+    /// The socket clients should dial.
+    pub fn socket_path(&self) -> &Path {
+        &self.socket_path
+    }
+
+    /// The backend every batch on this instance runs on.
+    pub fn backend(&self) -> &'static str {
+        self.stats.backend
+    }
+
+    /// Feature dimension of the currently served model.
+    pub fn model_dim(&self) -> usize {
+        self.model.w.len()
+    }
+
+    /// Cumulative counters so far.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Accept and serve connections until a client sends `Shutdown`.
+    /// Per-connection I/O errors (e.g. a client resetting mid-frame)
+    /// end that connection, not the server.
+    pub fn run(&mut self, obs: &mut dyn ServeObserver) -> Result<()> {
+        loop {
+            let (stream, _) = self.listener.accept().context("accepting serve connection")?;
+            match self.handle_conn(stream, obs) {
+                Ok(true) => return Ok(()),
+                Ok(false) => {}
+                // A torn connection is the client's problem; keep
+                // accepting.
+                Err(_) => self.stats.record_error(),
+            }
+        }
+    }
+
+    /// Serve one connection to EOF. Returns `Ok(true)` iff the client
+    /// requested shutdown.
+    fn handle_conn(&mut self, stream: UnixStream, obs: &mut dyn ServeObserver) -> Result<bool> {
+        let mut conn = FrameConn::new(stream);
+        conn.set_recv_timeout(Some(self.recv_timeout))
+            .context("setting serve read timeout")?;
+        loop {
+            match conn.recv().context("receiving serve frame")? {
+                ConnIn::Msg(Msg::Predict { id, batch }) => {
+                    self.answer_predict(&mut conn, obs, id, &batch)?;
+                }
+                ConnIn::Msg(Msg::Reload { path }) => {
+                    match Model::load(Path::new(&path)) {
+                        Ok(m) => {
+                            self.model = m;
+                            self.stats.record_reload();
+                            obs.on_reload(&path, self.model.w.len());
+                            conn.send(&Msg::Ack { seq: self.stats.reloads })
+                                .context("acking reload")?;
+                        }
+                        Err(e) => {
+                            // The old model keeps serving.
+                            self.stats.record_error();
+                            conn.send(&Msg::ServeError { id: 0, message: format!("reload: {e:#}") })
+                                .context("refusing reload")?;
+                        }
+                    }
+                }
+                ConnIn::Msg(Msg::StatsReq) => {
+                    let reply = self.stats.to_reply(self.model.w.len());
+                    conn.send(&reply).context("sending stats")?;
+                }
+                ConnIn::Msg(Msg::Shutdown) => {
+                    conn.send(&Msg::Bye).context("sending bye")?;
+                    return Ok(true);
+                }
+                // Training-side traffic on a serving socket: tolerated
+                // and ignored, like the trainer ignores late acks.
+                ConnIn::Msg(_) => {}
+                ConnIn::Corrupt => {
+                    self.stats.record_error();
+                    conn.send(&Msg::ServeError { id: 0, message: "corrupt frame".into() })
+                        .context("reporting corrupt frame")?;
+                }
+                ConnIn::TimedOut => {}
+                ConnIn::Eof => return Ok(false),
+            }
+        }
+    }
+
+    /// Parse → pack → score one predict batch, replying `Scores` or a
+    /// `ServeError` that names the offending line / dimension.
+    fn answer_predict(
+        &mut self,
+        conn: &mut FrameConn,
+        obs: &mut dyn ServeObserver,
+        id: u64,
+        batch: &str,
+    ) -> Result<()> {
+        let start = Instant::now();
+        let ds = match crate::data::libsvm::parse("request", batch, 0) {
+            Ok(ds) => ds,
+            Err(e) => {
+                self.stats.record_error();
+                conn.send(&Msg::ServeError { id, message: e.to_string() })
+                    .context("refusing unparseable batch")?;
+                return Ok(());
+            }
+        };
+        let packed = match PackedRequests::pack(&ds.x, self.model.w.len()) {
+            Ok(p) => p,
+            Err(message) => {
+                self.stats.record_error();
+                conn.send(&Msg::ServeError { id, message })
+                    .context("refusing mismatched batch")?;
+                return Ok(());
+            }
+        };
+        predict_batch(&packed, &self.model.w, self.level, &mut self.scores);
+        conn.send(&Msg::Scores { id, scores: self.scores.clone() })
+            .context("sending scores")?;
+        let stat = RequestStat {
+            id,
+            rows: packed.n_requests(),
+            nnz: packed.nnz(),
+            latency_s: start.elapsed().as_secs_f64(),
+            backend: self.stats.backend,
+        };
+        self.stats.record(&stat);
+        obs.on_request(&stat);
+        Ok(())
+    }
+}
+
+/// Convenience: bind and run in one call (what `dso serve` does).
+pub fn serve(opts: &ServeOptions, obs: &mut dyn ServeObserver) -> Result<()> {
+    Server::bind(opts)?.run(obs)
+}

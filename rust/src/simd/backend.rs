@@ -109,6 +109,32 @@ pub unsafe trait SimdBackend: Copy + Send + Sync + 'static {
 
     /// AdaGrad η batch: `acc[k] += g[k]²; out[k] = e0/√(eps + acc[k])`.
     fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane;
+
+    /// Batched-predict fold (the serving kernel's one lane op): gather
+    /// the chunk's w values through its column ids, multiply by the
+    /// stored feature values, and fold the first `n` *real* lanes into
+    /// `acc` — widening each f32·f32 product to f64 (exact: a product
+    /// of two f32s is representable in f64) and accumulating in storage
+    /// order, exactly `Csr::row_dot`'s recurrence. Sentinel lanes
+    /// (`k >= n`) may be gathered speculatively but are never folded,
+    /// so padding cannot perturb a score. Because the fold is f64 in
+    /// storage order on every backend and the gather moves bits, this
+    /// op — unlike the FMA-contracted training pipeline — is
+    /// **bit-identical across backends**; AVX2's win is the hardware
+    /// gather replacing 8 scalar indexed loads.
+    ///
+    /// # Safety
+    /// `base + LANES <= cols.len() == vals.len()`, `n <= LANES`, and
+    /// every `cols[base..base + LANES]` — sentinels included — is
+    /// `< w.len()`; validated once per batch by `serve::predict`.
+    unsafe fn predict_fold_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        n: usize,
+        w: &[f32],
+        acc: &mut f64,
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -228,6 +254,27 @@ unsafe impl SimdBackend for Portable {
         }
         out
     }
+
+    #[inline(always)]
+    unsafe fn predict_fold_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        n: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        debug_assert!(n <= LANES && base + LANES <= cols.len() && base + LANES <= vals.len());
+        for k in 0..n {
+            // SAFETY: the caller's contract — base + LANES in bounds of
+            // cols/vals, every stored column id < w.len().
+            unsafe {
+                let c = *cols.get_unchecked(base + k) as usize;
+                debug_assert!(c < w.len());
+                *acc += *vals.get_unchecked(base + k) as f64 * *w.get_unchecked(c) as f64;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -308,6 +355,20 @@ unsafe impl SimdBackend for Avx2 {
     fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
         // SAFETY: as in `w_grad`.
         unsafe { avx2::adagrad_eta_lane(e0, eps, acc, g) }
+    }
+
+    #[inline(always)]
+    unsafe fn predict_fold_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        n: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        // SAFETY: bounds per the trait contract; AVX2+FMA present per
+        // the backend-selection contract.
+        unsafe { avx2::predict_fold_chunk(cols, vals, base, n, w, acc) }
     }
 }
 
@@ -457,6 +518,36 @@ mod avx2 {
             ))
         }
     }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn predict_fold_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        n: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        debug_assert!(n <= LANES && base + LANES <= cols.len() && base + LANES <= vals.len());
+        // SAFETY: (whole body) caller guarantees base + LANES within
+        // cols/vals and every stored column id — sentinels included —
+        // < w.len(); ids fit i32 (serve's packer refuses d > i32::MAX),
+        // so the sign-extending i32 gather indices are non-negative.
+        unsafe {
+            let idx = _mm256_loadu_si256(cols.as_ptr().add(base) as *const __m256i);
+            // One hardware gather replaces the chunk's 8 scalar indexed
+            // w loads; the speculative sentinel lanes read w[0] (valid)
+            // and are discarded by the bounded fold below.
+            let wv = st(_mm256_i32gather_ps::<4>(w.as_ptr(), idx));
+            let xv = st(_mm256_loadu_ps(vals.as_ptr().add(base)));
+            // The fold stays scalar f64 in storage order — bit-identical
+            // to the portable backend and to `Csr::row_dot` (see the
+            // trait docs); the gather is the memory-bound win.
+            for k in 0..n {
+                *acc += xv[k] as f64 * wv[k] as f64;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -504,6 +595,24 @@ mod tests {
         let acc = unsafe { Portable::gather_idx(&w, &lj) };
         for k in 0..LANES {
             assert_eq!(acc[k], w[lj[k]]);
+        }
+    }
+
+    #[test]
+    fn portable_predict_fold_is_row_dot_order() {
+        let cols: Vec<u32> = vec![3, 1, 4, 1, 5, 2, 6, 5];
+        let vals: Vec<f32> = (0..8).map(|i| 0.5 + i as f32).collect();
+        let w: Vec<f32> = (0..8).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        for n in [0usize, 3, 8] {
+            let mut acc = 0.25f64;
+            // SAFETY: cols[0..8] all < 8 == w.len(), base 0 + LANES ==
+            // cols.len(), n <= LANES.
+            unsafe { Portable::predict_fold_chunk(&cols, &vals, 0, n, &w, &mut acc) };
+            let mut want = 0.25f64;
+            for k in 0..n {
+                want += vals[k] as f64 * w[cols[k] as usize] as f64;
+            }
+            assert_eq!(acc, want, "n = {n} fold must be storage-order f64");
         }
     }
 
@@ -566,6 +675,17 @@ mod tests {
             // SAFETY: index set validated above.
             let (aa, pa) = unsafe { (Avx2::gather_idx(&w, &a.0), Portable::gather_idx(&w, &p.0)) };
             assert_eq!(aa, pa, "gather_idx bitwise");
+            for n in [0usize, 5, 8] {
+                let (mut fa, mut fp) = (1.5f64, 1.5f64);
+                // SAFETY: same bounds as the gathers above; n <= LANES.
+                unsafe {
+                    Avx2::predict_fold_chunk(&cols, &vals, base, n, &w, &mut fa);
+                    Portable::predict_fold_chunk(&cols, &vals, base, n, &w, &mut fp);
+                }
+                // The predict fold is f64 storage-order on both
+                // backends, so — unlike the FMA pipeline — bitwise.
+                assert_eq!(fa, fp, "predict_fold bitwise (base {base}, n {n})");
+            }
         }
     }
 }

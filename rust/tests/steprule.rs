@@ -1,0 +1,117 @@
+//! The adaptive step rule (η = η₀/√(1+Σg²), arXiv:1802.05811) as a
+//! first-class `StepRule` arm: convergence on the synthetic problem,
+//! Lemma-2 bit-identity with its accumulators shipped around the ring,
+//! an objective band against AdaGrad, and acceptance across the async
+//! engine and the SGD baselines. The packed-vs-COO-oracle differential
+//! coverage lives with the kernels (`coordinator::updates` tests, which
+//! parametrize every rule including `Adaptive`).
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, StepKind, TrainConfig};
+use dso::data::synth::SparseSpec;
+use dso::data::Dataset;
+
+fn dataset(seed: u64) -> Dataset {
+    SparseSpec {
+        name: "steprule".into(),
+        m: 300,
+        d: 80,
+        nnz_per_row: 6.0,
+        zipf_s: 0.7,
+        label_noise: 0.03,
+        pos_frac: 0.5,
+        seed,
+    }
+    .generate()
+}
+
+fn cfg(step: StepKind, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.step = step;
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.2;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = 2;
+    cfg.cluster.cores = 1;
+    cfg.monitor.every = 1;
+    cfg
+}
+
+#[test]
+fn adaptive_rule_converges_on_synthetic() {
+    let ds = dataset(3);
+    let (train, test) = ds.split(0.2, 7);
+    let r = Trainer::new(cfg(StepKind::Adaptive, 30))
+        .fit(&train, Some(&test))
+        .unwrap()
+        .into_result();
+    let primal = r.history.col("primal").unwrap();
+    assert!(primal.len() >= 2);
+    let (first, last) = (primal[0], *primal.last().unwrap());
+    assert!(last.is_finite() && last < first, "objective must decrease: {first} -> {last}");
+    assert!(r.final_gap.is_finite() && r.final_gap >= -1e-9, "gap stays a gap");
+    let err = r.history.col("test_error").and_then(|c| c.last().copied()).unwrap();
+    assert!(err < 0.45, "adaptive rule should beat coin-flipping, got {err}");
+}
+
+#[test]
+fn adaptive_threaded_equals_replay_bitwise() {
+    // The unit-offset accumulators are state: Lemma 2 only survives if
+    // they travel with the rotating blocks exactly like AdaGrad's.
+    let ds = dataset(3);
+    let c = cfg(StepKind::Adaptive, 4);
+    let threaded = Trainer::new(c.clone()).fit(&ds, None).unwrap().into_result();
+    let replayed = Trainer::new(c).replay(true).fit(&ds, None).unwrap().into_result();
+    assert_eq!(threaded.w, replayed.w, "threaded and serial replay diverged");
+    assert_eq!(threaded.alpha, replayed.alpha);
+    assert_eq!(threaded.total_updates, replayed.total_updates);
+}
+
+#[test]
+fn adaptive_tracks_adagrad_objective_band() {
+    let ds = dataset(5);
+    let adaptive = Trainer::new(cfg(StepKind::Adaptive, 40)).fit(&ds, None).unwrap().into_result();
+    let adagrad = Trainer::new(cfg(StepKind::AdaGrad, 40)).fit(&ds, None).unwrap().into_result();
+    let (ap, gp) = (adaptive.final_primal, adagrad.final_primal);
+    assert!(ap.is_finite() && gp.is_finite());
+    // Same accumulator discipline, ε floor vs unit offset: after 40
+    // epochs on a small convex problem the two land close together.
+    assert!(
+        (ap - gp).abs() <= 0.25 * gp.abs().max(1e-9),
+        "adaptive {ap} strayed from adagrad {gp}"
+    );
+}
+
+#[test]
+fn async_and_baselines_accept_adaptive() {
+    let ds = dataset(9);
+    // Async NOMAD ships the accumulator state with the blocks, so the
+    // adaptive rule is admissible there too.
+    for p in [1usize, 2] {
+        let mut c = cfg(StepKind::Adaptive, 3);
+        c.optim.algorithm = Algorithm::DsoAsync;
+        c.cluster.machines = p;
+        let r = Trainer::new(c).fit(&ds, None).unwrap().into_result();
+        assert!(r.total_updates > 0 && r.final_primal.is_finite(), "async p={p}");
+    }
+    // And the serial/parallel SGD baselines take it as a schedule.
+    for algo in [Algorithm::Sgd, Algorithm::Psgd] {
+        let mut c = cfg(StepKind::Adaptive, 5);
+        c.optim.algorithm = algo;
+        let r = Trainer::new(c).fit(&ds, None).unwrap().into_result();
+        assert!(r.final_primal.is_finite(), "{algo:?} under the adaptive schedule");
+    }
+}
+
+#[test]
+fn adaptive_parses_and_ships_accumulators() {
+    assert_eq!(StepKind::parse("adaptive").unwrap(), StepKind::Adaptive);
+    assert_eq!(StepKind::Adaptive.name(), "adaptive");
+    let err = StepKind::parse("bogus").unwrap_err();
+    assert!(err.contains("adaptive"), "the error must advertise the new arm: {err}");
+    use dso::coordinator::updates::StepRule;
+    assert!(StepRule::Adaptive(0.1).uses_acc(), "adaptive state must ride the ring");
+    assert!(StepRule::AdaGrad(0.1).uses_acc());
+    assert!(!StepRule::Fixed(0.1).uses_acc());
+}

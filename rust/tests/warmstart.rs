@@ -1,0 +1,165 @@
+//! Warm-start semantics (`Trainer::fit_from`, DESIGN.md §Serving):
+//!
+//! * a 0-epoch warm fit is **bit-identical** to the prior — seeding is
+//!   a pure state copy, with the DCD initializer superseded,
+//! * the warm threaded run and the warm serial replay agree bitwise
+//!   (Lemma 2 holds with a non-zero initial state),
+//! * retraining on appended rows/features from a prior lands in the
+//!   same objective band as a cold fit of the widened data,
+//! * a prior wider than the data is refused with an actionable error,
+//! * warm lineage separates checkpoint fingerprints: a warm run's
+//!   checkpoint can never seed a cold resume (and vice versa).
+
+use dso::api::Trainer;
+use dso::config::{Algorithm, TrainConfig};
+use dso::coordinator::checkpoint::{warm_provenance, with_provenance};
+use dso::data::synth::SparseSpec;
+use dso::data::{Csr, Dataset};
+
+fn base() -> Dataset {
+    SparseSpec {
+        name: "warm-base".into(),
+        m: 260,
+        d: 60,
+        nnz_per_row: 6.0,
+        zipf_s: 0.7,
+        label_noise: 0.05,
+        pos_frac: 0.5,
+        seed: 11,
+    }
+    .generate()
+}
+
+/// `base` plus `extra_rows` appended rows touching `extra_d` new
+/// feature columns — the serving-loop growth case `fit_from` exists
+/// for.
+fn widened(base: &Dataset, extra_rows: usize, extra_d: usize) -> Dataset {
+    let d = base.d() + extra_d;
+    let mut rows: Vec<Vec<(u32, f32)>> = (0..base.m())
+        .map(|i| {
+            let (c, v) = base.x.row(i);
+            c.iter().copied().zip(v.iter().copied()).collect()
+        })
+        .collect();
+    let mut y = base.y.clone();
+    for r in 0..extra_rows {
+        let mut row: Vec<(u32, f32)> = (0..5)
+            .map(|k| (((r * 7 + k * 13) % d) as u32, 0.3 * (k as f32 + 1.0) - 0.6))
+            .collect();
+        row.sort_by_key(|e| e.0);
+        row.dedup_by_key(|e| e.0);
+        rows.push(row);
+        y.push(if r % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    Dataset::new("warm-widened", Csr::from_rows(d, rows), y)
+}
+
+fn cfg(epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.optim.epochs = epochs;
+    cfg.optim.eta0 = 0.2;
+    cfg.optim.seed = 7;
+    cfg.model.lambda = 1e-3;
+    cfg.cluster.machines = 2;
+    cfg.cluster.cores = 1;
+    cfg.monitor.every = 0;
+    cfg
+}
+
+#[test]
+fn zero_epoch_fit_from_is_bit_identical_to_prior() {
+    let ds = base();
+    let prior = Trainer::new(cfg(8)).fit(&ds, None).unwrap();
+    // epochs = 0 is the degenerate warm fit: seed, run nothing, return.
+    // (Plain `fit` rejects epochs = 0 at validation; `fit_from` admits
+    // it precisely for this state-copy identity.)
+    let mut c0 = cfg(0);
+    // The DCD initializer must be superseded by the prior, not added.
+    c0.optim.dcd_init = true;
+    let warm = Trainer::new(c0.clone()).fit_from(&prior, &ds, None).unwrap();
+    assert_eq!(warm.result.w.len(), prior.result.w.len());
+    for (a, b) in warm.result.w.iter().zip(&prior.result.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "w must be the prior, bit for bit");
+    }
+    for (a, b) in warm.result.alpha.iter().zip(&prior.result.alpha) {
+        assert_eq!(a.to_bits(), b.to_bits(), "alpha must be the prior, bit for bit");
+    }
+    // Same through the serial replay route.
+    let replayed = Trainer::new(c0).replay(true).fit_from(&prior, &ds, None).unwrap();
+    assert_eq!(replayed.result.w, prior.result.w);
+    assert_eq!(replayed.result.alpha, prior.result.alpha);
+}
+
+#[test]
+fn warm_threaded_equals_warm_replay_bitwise() {
+    let ds = base();
+    let wide = widened(&ds, 40, 20);
+    let prior = Trainer::new(cfg(10)).fit(&ds, None).unwrap();
+    let threaded = Trainer::new(cfg(4)).fit_from(&prior, &wide, None).unwrap();
+    let replayed = Trainer::new(cfg(4)).replay(true).fit_from(&prior, &wide, None).unwrap();
+    assert_eq!(threaded.result.w, replayed.result.w, "Lemma 2 must survive warm seeding");
+    assert_eq!(threaded.result.alpha, replayed.result.alpha);
+    assert_eq!(threaded.result.total_updates, replayed.result.total_updates);
+}
+
+#[test]
+fn appended_rows_warm_start_stays_in_cold_objective_band() {
+    let ds = base();
+    let wide = widened(&ds, 40, 20);
+    let prior = Trainer::new(cfg(30)).fit(&ds, None).unwrap();
+    let warm = Trainer::new(cfg(20)).fit_from(&prior, &wide, None).unwrap();
+    let cold = Trainer::new(cfg(40)).fit(&wide, None).unwrap();
+    let (wp, cp) = (warm.result.final_primal, cold.result.final_primal);
+    assert!(wp.is_finite() && cp.is_finite());
+    // Both runs optimize the same convex objective; after this many
+    // epochs they must agree to a few percent even though the warm run
+    // spent half the epochs on the widened data.
+    assert!(
+        (wp - cp).abs() <= 0.05 * cp.abs().max(1e-9),
+        "warm {wp} vs cold {cp} drifted out of the 5% band"
+    );
+}
+
+#[test]
+fn shrinking_prior_is_refused() {
+    let ds = base();
+    let wide = widened(&ds, 40, 20);
+    let prior = Trainer::new(cfg(4)).fit(&wide, None).unwrap();
+    let err = Trainer::new(cfg(4)).fit_from(&prior, &ds, None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("never shrink"), "msg: {msg}");
+}
+
+#[test]
+fn fit_from_requires_the_scalar_dso_engine() {
+    let ds = base();
+    let prior = Trainer::new(cfg(4)).fit(&ds, None).unwrap();
+    let mut c = cfg(4);
+    c.optim.algorithm = Algorithm::Sgd;
+    let err = Trainer::new(c).fit_from(&prior, &ds, None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fit_from") && msg.contains("algorithm = \"dso\""), "msg: {msg}");
+}
+
+#[test]
+fn warm_provenance_separates_checkpoint_lineage() {
+    let w = vec![0.5f32, -1.25, 0.0];
+    let a = vec![0.125f32, 2.0];
+    let p = warm_provenance(&w, &a);
+    // Deterministic, and sensitive to every coordinate's bit pattern.
+    assert_eq!(p, warm_provenance(&w, &a));
+    let mut w2 = w.clone();
+    w2[2] = -0.0; // same value under ==, different bits, different run
+    assert_ne!(p, warm_provenance(&w2, &a));
+    let mut a2 = a.clone();
+    a2[0] = 0.25;
+    assert_ne!(p, warm_provenance(&w, &a2));
+    // Swapping a coordinate between the labeled fields must not alias.
+    assert_ne!(warm_provenance(&[1.0], &[]), warm_provenance(&[], &[1.0]));
+    // Warm lineage moves the run fingerprint: a warm checkpoint can
+    // never be mistaken for the cold run's, nor for a warm run off a
+    // different prior.
+    let fp = 0x1234_5678_9abc_def0u64;
+    assert_ne!(with_provenance(fp, p), fp);
+    assert_ne!(with_provenance(fp, p), with_provenance(fp, warm_provenance(&w2, &a)));
+}

@@ -40,6 +40,17 @@ if grep -n "has_lanes\|affine_alpha\|is_x86_feature_detected" \
     exit 1
 fi
 
+echo "== serving layer performs no feature detection =="
+# The server resolves its SIMD backend exactly once, in Server::bind,
+# through simd::resolve — the same single detection site the engines
+# use. Detection leaking into the serve modules (or the api facade's
+# predict path) would fork the backend decision per batch.
+if grep -n "is_x86_feature_detected" rust/src/serve/*.rs rust/src/api.rs; then
+    echo "ci.sh: feature detection leaked into the serving layer;" \
+         "resolve a SimdLevel once via rust/src/simd/ and pass it down" >&2
+    exit 1
+fi
+
 echo "== every unsafe block in simd/ and updates.rs carries a SAFETY comment =="
 # The explicit-SIMD layer concentrates the repo's unsafe code; each
 # `unsafe {` block must be annotated with the argument that makes it
@@ -59,7 +70,8 @@ unsafe_gate() {
         END { exit bad }
     ' "$1"
 }
-for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs rust/src/data/cache/*.rs; do
+for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs rust/src/data/cache/*.rs \
+    rust/src/serve/*.rs; do
     if ! unsafe_gate "$f"; then
         echo "ci.sh: annotate the unsafe block(s) above in $f" >&2
         exit 1
@@ -67,7 +79,7 @@ for f in rust/src/simd/*.rs rust/src/coordinator/updates.rs rust/src/data/cache/
 done
 
 echo "== cargo build --examples =="
-# The five examples are the facade's public face; they must always
+# The six examples are the facade's public face; they must always
 # compile against the current dso::api::Trainer surface.
 cargo build --examples
 
@@ -169,6 +181,58 @@ for required in "${outofcore_required[@]}"; do
     fi
 done
 
+echo "== serving suite present =="
+# ISSUE 9's acceptance rests on tests/serve.rs: the batched kernel is
+# bit-identical to the old scalar predict, Auto routing moves no bits,
+# and the end-to-end server round trip (predict → warm-start reload →
+# stats → shutdown) holds over the framed transport.
+serve_required=(batched_predict_is_bitwise_identical_to_scalar_predict
+    auto_backend_matches_portable_bitwise
+    server_roundtrip_predict_reload_stats_shutdown)
+if [[ "$(uname -m)" == "x86_64" ]]; then
+    serve_required+=(avx2_batch_predict_stays_within_tolerance)
+fi
+serve_tests="$(cargo test -q --test serve -- --list 2>/dev/null || true)"
+for required in "${serve_required[@]}"; do
+    if ! grep -q "$required" <<<"$serve_tests"; then
+        echo "ci.sh: serving test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
+echo "== warm-start suite present =="
+# fit_from's contract: 0-epoch bit-identity with the prior, Lemma-2
+# bit-identity warm, the appended-rows objective band, shrink refusal,
+# and provenance-separated checkpoint lineage.
+warmstart_required=(zero_epoch_fit_from_is_bit_identical_to_prior
+    warm_threaded_equals_warm_replay_bitwise
+    appended_rows_warm_start_stays_in_cold_objective_band
+    shrinking_prior_is_refused
+    warm_provenance_separates_checkpoint_lineage)
+warmstart_tests="$(cargo test -q --test warmstart -- --list 2>/dev/null || true)"
+for required in "${warmstart_required[@]}"; do
+    if ! grep -q "$required" <<<"$warmstart_tests"; then
+        echo "ci.sh: warm-start test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
+echo "== step-rule suite present =="
+# The adaptive rule's acceptance: convergence, accumulator shipping
+# (threaded ≡ replay), the AdaGrad objective band, and admissibility
+# across the async engine and baselines.
+steprule_required=(adaptive_rule_converges_on_synthetic
+    adaptive_threaded_equals_replay_bitwise
+    adaptive_tracks_adagrad_objective_band
+    async_and_baselines_accept_adaptive)
+steprule_tests="$(cargo test -q --test steprule -- --list 2>/dev/null || true)"
+for required in "${steprule_required[@]}"; do
+    if ! grep -q "$required" <<<"$steprule_tests"; then
+        echo "ci.sh: step-rule test '$required' missing/skipped" >&2
+        exit 1
+    fi
+done
+
 echo "== mmap/madvise syscalls confined to data/cache/mmap.rs =="
 # The arena is the single owner of every mapping: engines, kernels and
 # transport see mapped tables only through BlockStore's slice surface.
@@ -197,7 +261,7 @@ socket_unwrap_gate() {
         END { exit bad }
     ' "$1"
 }
-for f in rust/src/net/transport.rs rust/src/net/supervisor.rs; do
+for f in rust/src/net/transport.rs rust/src/net/supervisor.rs rust/src/serve/server.rs; do
     if ! socket_unwrap_gate "$f"; then
         echo "ci.sh: surface the failure as a Result/event in $f" >&2
         exit 1
@@ -235,8 +299,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (quick mode) =="
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_updates
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_outofcore
+    DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_predict
     for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json \
-        BENCH_faults.json BENCH_transport.json BENCH_outofcore.json; do
+        BENCH_faults.json BENCH_transport.json BENCH_outofcore.json \
+        BENCH_predict.json BENCH_steprule.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else

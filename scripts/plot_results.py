@@ -139,7 +139,8 @@ def plot(exp, series, out_dir, plt):
 
 
 def load_bench_file(path):
-    """Parse one BENCH_<group>.json → (group, {name: units_per_sec})."""
+    """Parse one BENCH_<group>.json →
+    (group, {name: units_per_sec}, {name: median_s_per_iter})."""
     with open(path) as f:
         doc = json.load(f)
     # Prefer the file's own group key; fall back to the filename stem
@@ -148,6 +149,7 @@ def load_bench_file(path):
     stem = base[len("BENCH_") : -len(".json")] if base.startswith("BENCH_") else base
     group = doc.get("group") or stem
     rates = {}
+    latencies = {}
     for r in doc.get("results", []):
         name = r.get("name")
         ups = r.get("units_per_sec")
@@ -156,7 +158,8 @@ def load_bench_file(path):
             ups = (r.get("units_per_iter") or 1) / median if median else 0.0
         if name:
             rates[name] = float(ups)
-    return group, rates
+            latencies[name] = float(r.get("median_s_per_iter") or 0.0)
+    return group, rates, latencies
 
 
 def bench_files_in(directory):
@@ -211,17 +214,24 @@ def bench_mode(paths, out_dir, plt):
     tags = []
     # trajectory[group][bench_name] = {tag: units_per_sec}
     trajectory = {}
+    # latency[group][bench_name] = {tag: median_s_per_iter} — the
+    # serving panel charts the predict group's per-batch latency, the
+    # quantity a model server actually budgets.
+    latency = {}
     for tag, files in snapshots:
         if tag not in tags:
             tags.append(tag)
         for path in files:
-            group, rates = load_bench_file(path)
+            group, rates, lats = load_bench_file(path)
             # Register the group even when it recorded no results (e.g.
             # bench_runtime's non-xla stub) so a run-and-skipped group
             # is visible rather than a silent gap.
             trajectory.setdefault(group, {})
             for name, ups in rates.items():
                 trajectory.setdefault(group, {}).setdefault(name, {})[tag] = ups
+            for name, lat in lats.items():
+                if lat > 0:
+                    latency.setdefault(group, {}).setdefault(name, {})[tag] = lat
 
     for group in sorted(trajectory):
         print(f"\n== bench group: {group} (units/sec) ==")
@@ -235,6 +245,12 @@ def bench_mode(paths, out_dir, plt):
             if len(pts) >= 2 and pts[0][1] > 0:
                 path_txt += f"  [{pts[-1][1] / pts[0][1]:.2f}x vs {pts[0][0]}]"
             print(f"  {name:<40} {path_txt}")
+        if group == "predict" and latency.get("predict"):
+            print("  -- median batch latency (ms, lower is better) --")
+            for name in sorted(latency["predict"]):
+                by_tag = latency["predict"][name]
+                pts = [(t, by_tag[t] * 1e3) for t in tags if t in by_tag]
+                print(f"  {name:<40} " + "  ".join(f"{t}:{v:.3f}" for t, v in pts))
 
     if plt is None:
         return 0
@@ -255,6 +271,27 @@ def bench_mode(paths, out_dir, plt):
         ax.legend(fontsize=7)
         fig.tight_layout()
         path = os.path.join(out_dir, f"bench_{group}.png")
+        fig.savefig(path, dpi=120)
+        plt.close(fig)
+        print(f"wrote {path}")
+
+    # Dedicated predict-latency panel: median seconds per batch for the
+    # serving kernels (scalar loop vs batched portable vs batched AVX2),
+    # across snapshots — lower is better, unlike the units/sec panels.
+    if "predict" in latency and latency["predict"]:
+        fig, ax = plt.subplots(figsize=(8, 4.5))
+        for name, by_tag in sorted(latency["predict"].items()):
+            xs = [i for i, t in enumerate(tags) if t in by_tag]
+            ys = [by_tag[tags[i]] * 1e3 for i in xs]
+            ax.plot(xs, ys, label=name, marker="o")
+        ax.set_xticks(range(len(tags)))
+        ax.set_xticklabels(tags, rotation=30, ha="right", fontsize=8)
+        ax.set_ylabel("median batch latency (ms)")
+        ax.set_yscale("log")
+        ax.set_title("serving: predict latency per batch (lower is better)")
+        ax.legend(fontsize=7)
+        fig.tight_layout()
+        path = os.path.join(out_dir, "bench_predict_latency.png")
         fig.savefig(path, dpi=120)
         plt.close(fig)
         print(f"wrote {path}")
