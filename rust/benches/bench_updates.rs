@@ -13,10 +13,17 @@
 //!                so a chunk's α recurrence is 8 FMAs instead of 8
 //!                sequential gradient evaluations).
 //!
-//! * `simd_*`   — the explicit-SIMD backend pair: the portable
+//! * `simd_*`   — the explicit-SIMD backend set: the portable
 //!                (autovec) lane kernel vs the AVX2 gather/FMA backend
-//!                on the same block (portable-only where avx2+fma is
-//!                absent).
+//!                vs the AVX-512 paired 16-wide backend on the same
+//!                block (hardware entries recorded only where the host
+//!                supports them).
+//!
+//! * `autotune_*` — the measured `--simd auto` selection: the
+//!                per-backend probe throughput on the synthetic
+//!                autotune workload, plus an `autotune_resolve_<name>`
+//!                marker naming the backend this host's memoized
+//!                resolution chose.
 //!
 //! * `faults_*` — end-to-end async NOMAD runs, fault-free vs with an
 //!                injected straggler schedule: the cost of the
@@ -34,10 +41,11 @@
 //! `DSO_BENCH_JSON=1` to record `BENCH_updates.json` (all kernels),
 //! `BENCH_lanes.json` (the scalar-vs-lane pair), `BENCH_alpha_lanes.json`
 //! (the square-loss scalar-α-vs-affine-α pair), `BENCH_simd.json`
-//! (the portable-vs-AVX2 backend pair), `BENCH_faults.json` (the
+//! (the portable/AVX2/AVX-512 backend set), `BENCH_autotune.json`
+//! (the measured-auto probe), `BENCH_faults.json` (the
 //! clean-vs-straggler async pair) and `BENCH_transport.json` (the
-//! thread-vs-process ring pair) — the CI smoke tracks all six so the
-//! perf trajectory is recorded across PRs.
+//! thread-vs-process ring pair) — the CI smoke tracks all of them so
+//! the perf trajectory is recorded across PRs.
 
 use dso::coordinator::updates::{
     sweep_block, sweep_lanes, sweep_lanes_affine, sweep_packed, BlockState, PackedCtx,
@@ -324,10 +332,80 @@ fn main() {
                 } else {
                     println!("    -> avx2 backend unavailable on this host; portable only");
                 }
+                if dso::simd::avx512_supported() {
+                    use dso::coordinator::updates::{
+                        sweep_lanes_affine_avx512, sweep_lanes_avx512,
+                    };
+                    let avx512_name = format!("simd_avx512_{}_{rname}", loss.name());
+                    let mut zw = vec![0.01f32; ds.d()];
+                    let mut zw_acc = vec![0f32; ds.d()];
+                    let mut zalpha = vec![0f32; ds.m()];
+                    let mut za_acc = vec![0f32; ds.m()];
+                    simd_runner.bench_units(&avx512_name, n as u64, || {
+                        let mut st = PackedState {
+                            w: &mut zw,
+                            w_acc: &mut zw_acc,
+                            alpha: &mut zalpha,
+                            a_acc: &mut za_acc,
+                        };
+                        // SAFETY: inside the avx512_supported() guard;
+                        // the fused entry points are what the plan
+                        // dispatches in production.
+                        unsafe {
+                            if affine {
+                                sweep_lanes_affine_avx512(block, &pctx, &mut st)
+                            } else {
+                                sweep_lanes_avx512(block, &pctx, &mut st)
+                            }
+                        }
+                    });
+                    let median = |name: &str| {
+                        simd_runner.results.iter().find(|r| r.name == name).map(|r| r.median())
+                    };
+                    if let (Some(pm), Some(zm)) =
+                        (median(&portable_name), median(&avx512_name))
+                    {
+                        println!(
+                            "    -> avx512 {:.1} M upd/s ({}/upd)  speedup vs portable {:.2}x",
+                            n as f64 / zm / 1e6,
+                            human_time(zm / n as f64),
+                            pm / zm
+                        );
+                    }
+                } else {
+                    println!("    -> avx512 backend unavailable on this host");
+                }
             }
             #[cfg(not(target_arch = "x86_64"))]
-            println!("    -> avx2 backend unavailable (non-x86_64); portable only");
+            println!("    -> avx2/avx512 backends unavailable (non-x86_64); portable only");
         }
+    }
+
+    // --- Measured-auto probe (BENCH_autotune.json) ---
+    // What `--simd auto` measures: each supported backend's throughput
+    // on the synthetic probe workload (one `autotune_<name>` entry per
+    // backend), plus an `autotune_resolve_<name>` marker recording
+    // which backend this host's memoized auto resolution chose — so
+    // the artifact answers both "how fast was each backend here" and
+    // "which one won".
+    let mut autotune_runner = Runner::from_env("autotune");
+    {
+        use dso::simd::autotune::{auto_report, ProbeWorkload};
+
+        let levels = dso::simd::supported_levels();
+        for &level in &levels {
+            let mut wl = ProbeWorkload::standard();
+            let units = wl.run(level) as u64; // warmup; also the per-rep unit count
+            let name = format!("autotune_{}", level.name());
+            autotune_runner.bench_units(&name, units, || wl.run(level));
+        }
+        let report = auto_report();
+        println!(
+            "    -> measured auto winner on this host: {}",
+            report.chosen.name()
+        );
+        let marker = format!("autotune_resolve_{}", report.chosen.name());
+        autotune_runner.bench_units(&marker, 1, || 1usize);
     }
 
     // --- Fault-tolerance overhead pair (BENCH_faults.json) ---
@@ -455,6 +533,7 @@ fn main() {
     lane_runner.finish("lanes");
     alpha_runner.finish("alpha_lanes");
     simd_runner.finish("simd");
+    autotune_runner.finish("autotune");
     fault_runner.finish("faults");
     transport_runner.finish("transport");
 }

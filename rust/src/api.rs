@@ -128,11 +128,15 @@ impl<'a> Trainer<'a> {
     }
 
     /// Pin the SIMD kernel backend (`cluster.simd`, default
-    /// [`SimdKind::Auto`] = runtime detection). `Portable` forces the
-    /// autovec baseline — bit-identical to the pre-backend kernels —
-    /// for reproducibility; `Avx2` forces the gather/FMA backend and
-    /// fails validation on hosts without avx2+fma (never a silent
-    /// fallback). The CLI override is `--simd {auto,portable,avx2}`.
+    /// [`SimdKind::Auto`] = *measured* selection: setup times every
+    /// host-supported backend for a few milliseconds on this run's own
+    /// packed blocks and keeps the observed winner — recorded on the
+    /// sweep plan). `Portable` forces the autovec baseline —
+    /// bit-identical to the pre-backend kernels — for reproducibility;
+    /// `Avx2` / `Avx512` force the gather/FMA resp. paired 16-wide
+    /// backend and fail validation on hosts missing their features
+    /// (never a silent fallback). The CLI override is
+    /// `--simd {auto,portable,avx2,avx512}`.
     pub fn simd(mut self, kind: SimdKind) -> Self {
         self.cfg.cluster.simd = kind;
         self

@@ -4,7 +4,7 @@
 //! dso train  [--config run.toml] [--data NAME] [--algo dso|sgd|psgd|bmrm]
 //!            [--loss hinge|logistic|square] [--lambda X] [--epochs N]
 //!            [--machines M] [--cores C] [--mode scalar|tile|dso-proc]
-//!            [--simd auto|portable|avx2] [--scale S]
+//!            [--simd auto|portable|avx2|avx512] [--scale S]
 //!            [--eta0 X] [--dcd-init] [--replay] [--out results/run.csv]
 //!            [--model-out model.dso] [--path f.libsvm]
 //!            [--faults SPEC] [--checkpoint-every N] [--checkpoint PATH]
@@ -14,7 +14,7 @@
 //! dso exp    <table1|table2|fig2|fig3|fig4|fig5|serial-sweep|parallel-sweep|all>
 //!            [--scale S] [--epochs-mul M] [--out DIR] [--seed N]
 //! dso serve  --model model.dso --socket /tmp/dso-serve.sock
-//!            [--simd auto|portable|avx2]
+//!            [--simd auto|portable|avx2|avx512]
 //! dso stats  [--name NAME | --all] [--scale S]
 //! dso gen-data --name NAME --out FILE [--scale S] [--seed N]
 //! dso inspect-artifacts
@@ -23,11 +23,14 @@
 //! `train` drives the [`crate::api::Trainer`] facade: `--replay` runs
 //! the Lemma-2 serial replay of the scalar DSO engine, `--model-out`
 //! persists the fitted w in the libsvm-style model format, and
-//! `--simd` pins the SIMD kernel backend (`auto` = runtime detection;
-//! `portable` = the autovec baseline, bit-identical to the
-//! pre-backend kernels; `avx2` = force the gather/FMA backend —
-//! rejected, not silently degraded, on hosts without avx2+fma). The
-//! override exists for benchmarking and reproducibility.
+//! `--simd` pins the SIMD kernel backend (`auto` = *measured*
+//! selection: every host-supported backend is micro-benchmarked for a
+//! few milliseconds at setup and the observed winner runs; `portable`
+//! = the autovec baseline, bit-identical to the pre-backend kernels;
+//! `avx2` = force the gather/FMA backend; `avx512` = force the paired
+//! 16-wide backend — either force is rejected, not silently degraded,
+//! on hosts missing its features: avx2+fma resp. avx512f+avx2+fma).
+//! The override exists for benchmarking and reproducibility.
 //!
 //! Fault tolerance (DESIGN.md §Fault-tolerance): `--faults` injects a
 //! seeded fault schedule, e.g. `stall@1.0.1:30` (worker 1, epoch 0,
@@ -287,6 +290,17 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         server.backend(),
         socket
     );
+    if let Some(report) = server.autotune_report() {
+        for m in &report.measured {
+            crate::log_info!(
+                "simd auto: {} measured {:.0} entries/s over {} reps{}",
+                m.level.name(),
+                m.units_per_sec,
+                m.reps,
+                if m.level == report.chosen { " (chosen)" } else { "" }
+            );
+        }
+    }
     let mut obs = |stat: &crate::serve::RequestStat| {
         crate::log_info!(
             "predict #{}: {} rows ({} nnz) in {:.3} ms [{}]",
@@ -421,7 +435,8 @@ mod tests {
     }
 
     /// `--simd portable` pins the backend through the CLI; a bogus
-    /// backend name is an actionable parse error.
+    /// backend name is an actionable parse error; forced hardware
+    /// backends run or refuse loudly, never silently degrade.
     #[test]
     fn train_simd_override() {
         assert_eq!(
@@ -432,23 +447,25 @@ mod tests {
             .unwrap(),
             0
         );
-        let err = run(&["train", "--data", "real-sim", "--simd", "avx512"]).unwrap_err();
+        let err = run(&["train", "--data", "real-sim", "--simd", "neon"]).unwrap_err();
         assert!(format!("{err}").contains("simd backend"), "{err}");
-        // Forcing avx2 either runs (host supports it) or fails with
-        // the validate() message naming the fix — never silent.
-        let forced = run(&[
-            "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1",
-            "--machines", "1", "--cores", "1", "--simd", "avx2",
-        ]);
-        if dso_simd_supported() {
-            assert_eq!(forced.unwrap(), 0);
-        } else {
-            assert!(format!("{}", forced.unwrap_err()).contains("avx2"));
+        // Forcing a hardware backend either runs (host supports it) or
+        // fails with the validate() message naming the fix — never
+        // silent.
+        for (flag, supported) in [
+            ("avx2", crate::simd::avx2_supported()),
+            ("avx512", crate::simd::avx512_supported()),
+        ] {
+            let forced = run(&[
+                "train", "--data", "real-sim", "--scale", "0.05", "--epochs", "1",
+                "--machines", "1", "--cores", "1", "--simd", flag,
+            ]);
+            if supported {
+                assert_eq!(forced.unwrap(), 0, "--simd {flag}");
+            } else {
+                assert!(format!("{}", forced.unwrap_err()).contains(flag), "--simd {flag}");
+            }
         }
-    }
-
-    fn dso_simd_supported() -> bool {
-        crate::simd::avx2_supported()
     }
 
     /// `--replay` reaches the Lemma-2 serial replay through the facade

@@ -157,8 +157,9 @@ impl PartitionKind {
 /// recorded in the sweep plan; the CLI override is `--simd`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdKind {
-    /// Runtime detection: AVX2+FMA when the CPU has them, else the
-    /// portable backend (the default).
+    /// Measured selection (the default): the micro-autotune times every
+    /// host-supported backend for a few milliseconds at setup and keeps
+    /// the observed winner — not a feature-flag guess.
     Auto,
     /// Force the autovectorized portable backend (bit-identical to the
     /// pre-backend kernels — the reproducibility baseline).
@@ -167,6 +168,10 @@ pub enum SimdKind {
     /// without avx2+fma, so a benchmark override can never silently
     /// fall back.
     Avx2,
+    /// Force the AVX-512 paired-chunk backend. Rejected by `validate()`
+    /// on hosts without avx512f+avx2+fma — same no-silent-fallback
+    /// contract as `avx2`.
+    Avx512,
 }
 
 impl SimdKind {
@@ -175,7 +180,10 @@ impl SimdKind {
             "auto" => Ok(SimdKind::Auto),
             "portable" | "scalar" => Ok(SimdKind::Portable),
             "avx2" => Ok(SimdKind::Avx2),
-            other => Err(format!("unknown simd backend '{other}' (auto|portable|avx2)")),
+            "avx512" => Ok(SimdKind::Avx512),
+            other => {
+                Err(format!("unknown simd backend '{other}' (auto|portable|avx2|avx512)"))
+            }
         }
     }
 
@@ -184,6 +192,7 @@ impl SimdKind {
             SimdKind::Auto => "auto",
             SimdKind::Portable => "portable",
             SimdKind::Avx2 => "avx2",
+            SimdKind::Avx512 => "avx512",
         }
     }
 }
@@ -543,12 +552,17 @@ impl TrainConfig {
         if self.optim.epochs == 0 {
             return Err("epochs must be >= 1".into());
         }
-        if self.cluster.simd == SimdKind::Avx2 && !crate::simd::avx2_supported() {
-            return Err(
-                "cluster.simd = \"avx2\" but this CPU does not support avx2+fma; \
-                 use simd = \"auto\" (runtime detection) or \"portable\""
-                    .into(),
-            );
+        // Forced backends validate against the host with the same
+        // message `simd::resolve` panics with — the kind list and the
+        // host-supported menu both come from the simd module, so
+        // adding a backend can't leave this check stale.
+        let forced_unsupported = match self.cluster.simd {
+            SimdKind::Avx2 => !crate::simd::avx2_supported(),
+            SimdKind::Avx512 => !crate::simd::avx512_supported(),
+            SimdKind::Auto | SimdKind::Portable => false,
+        };
+        if forced_unsupported {
+            return Err(crate::simd::forced_unsupported_msg(self.cluster.simd));
         }
         if self.model.loss == LossKind::Square && self.model.reg == RegKind::L1 {
             // LASSO is supported by the losses module; the DSO projection
@@ -740,7 +754,15 @@ out = "results/x.csv"
         assert_eq!(SimdKind::parse("auto").unwrap(), SimdKind::Auto);
         assert_eq!(SimdKind::parse("portable").unwrap(), SimdKind::Portable);
         assert_eq!(SimdKind::parse("avx2").unwrap(), SimdKind::Avx2);
-        assert!(SimdKind::parse("avx512").is_err());
+        assert_eq!(SimdKind::parse("avx512").unwrap(), SimdKind::Avx512);
+        // name() and parse() are a round trip for every kind — the
+        // supervisor pins a measured winner by emitting name() into the
+        // worker config, so this is a wire-compat invariant.
+        for k in [SimdKind::Auto, SimdKind::Portable, SimdKind::Avx2, SimdKind::Avx512] {
+            assert_eq!(SimdKind::parse(k.name()).unwrap(), k);
+        }
+        let err = SimdKind::parse("sse9").unwrap_err();
+        assert!(err.contains("avx512") && err.contains("portable"), "{err}");
     }
 
     #[test]
@@ -748,14 +770,23 @@ out = "results/x.csv"
         let c = TrainConfig::from_toml("[cluster]\nsimd = \"portable\"\n").unwrap();
         assert_eq!(c.cluster.simd, SimdKind::Portable);
         assert_eq!(TrainConfig::default().cluster.simd, SimdKind::Auto);
-        // Forcing avx2 is valid exactly when the host supports it —
-        // never a silent fallback.
+        // Forcing a backend is valid exactly when the host supports it
+        // — never a silent fallback. The refusal enumerates the
+        // host-supported menu (simd::forced_unsupported_msg).
         let forced = TrainConfig::from_toml("[cluster]\nsimd = \"avx2\"\n");
         if crate::simd::avx2_supported() {
             assert_eq!(forced.unwrap().cluster.simd, SimdKind::Avx2);
         } else {
             let err = forced.unwrap_err();
-            assert!(err.contains("avx2"), "{err}");
+            assert!(err.contains("avx2") && err.contains("portable"), "{err}");
+        }
+        let forced512 = TrainConfig::from_toml("[cluster]\nsimd = \"avx512\"\n");
+        if crate::simd::avx512_supported() {
+            assert_eq!(forced512.unwrap().cluster.simd, SimdKind::Avx512);
+        } else {
+            let err = forced512.unwrap_err();
+            assert!(err.contains("avx512f+avx2+fma"), "{err}");
+            assert!(err.contains("supported on this host"), "{err}");
         }
     }
 

@@ -109,20 +109,44 @@ impl DsoSetup {
             cfg.cluster.bandwidth_mbps,
             cfg.cluster.cores.max(1),
         );
-        // Resolve the SIMD backend once per run (the only
-        // feature-detection site in the engine stack) and record it in
-        // the plan's backend dimension. Validating callers have
-        // already rejected a forced-avx2 request on unsupported hosts;
+        // Resolve the SIMD backend once per run and record it in the
+        // plan's backend dimension. Validating callers have already
+        // rejected a forced-level request on unsupported hosts;
         // `resolve` panics rather than silently degrading for any
-        // caller that skipped validation.
-        let simd = crate::simd::resolve(cfg.cluster.simd);
+        // caller that skipped validation. For `auto`, the resolution
+        // is a *measurement*: if this is the process's first `auto`
+        // resolution, the micro-autotune times every supported backend
+        // on a deterministic sample of this run's own packed blocks
+        // (`plan::autotune_levels`); the memoized report keeps every
+        // later resolution — fingerprints included — in agreement.
+        let rule = Self::step_rule_for(cfg);
+        let w_bound = loss.w_bound(cfg.model.lambda);
+        let (simd, report) = if cfg.cluster.simd == crate::config::SimdKind::Auto {
+            let report = crate::simd::autotune::auto_report_with(|levels| {
+                crate::coordinator::plan::autotune_levels(
+                    &omega,
+                    &y_local,
+                    &alpha_bias,
+                    loss,
+                    reg,
+                    cfg.model.lambda,
+                    w_bound,
+                    rule,
+                    levels,
+                )
+            });
+            (report.chosen, Some(report.clone()))
+        } else {
+            (crate::simd::resolve(cfg.cluster.simd), None)
+        };
         let plan = SweepPlan::build(
             &omega,
             loss,
             cfg.cluster.updates_per_block,
             cfg.optim.seed,
             simd,
-        );
+        )
+        .with_autotune(report);
         // `validate()` rejects malformed specs with a proper error on
         // every API route before construction gets here.
         let faults = FaultPlan::parse_with(&cfg.cluster.faults, p, cfg.optim.epochs)
@@ -134,7 +158,7 @@ impl DsoSetup {
             alpha_bias,
             schedule: RingSchedule::new(p),
             p,
-            w_bound: loss.w_bound(cfg.model.lambda),
+            w_bound,
             cost,
             plan,
             faults,
@@ -225,14 +249,38 @@ impl DsoSetup {
             cfg.cluster.bandwidth_mbps,
             cfg.cluster.cores.max(1),
         );
-        let simd = crate::simd::resolve(cfg.cluster.simd);
+        // Same measured-`auto` resolution as `new` (in the `Use` path
+        // the cache fingerprint has already resolved `auto` once, so
+        // this returns the memoized report — the fingerprint and the
+        // plan can never disagree within a process).
+        let rule = Self::step_rule_for(cfg);
+        let w_bound = loss.w_bound(cfg.model.lambda);
+        let (simd, report) = if cfg.cluster.simd == crate::config::SimdKind::Auto {
+            let report = crate::simd::autotune::auto_report_with(|levels| {
+                crate::coordinator::plan::autotune_levels(
+                    &omega,
+                    &y_local,
+                    &alpha_bias,
+                    loss,
+                    reg,
+                    cfg.model.lambda,
+                    w_bound,
+                    rule,
+                    levels,
+                )
+            });
+            (report.chosen, Some(report.clone()))
+        } else {
+            (crate::simd::resolve(cfg.cluster.simd), None)
+        };
         let plan = SweepPlan::build(
             &omega,
             loss,
             cfg.cluster.updates_per_block,
             cfg.optim.seed,
             simd,
-        );
+        )
+        .with_autotune(report);
         let faults = FaultPlan::parse_with(&cfg.cluster.faults, p, cfg.optim.epochs)
             .unwrap_or_else(|e| panic!("invalid cluster.faults (validate() catches this): {e}"));
         DsoSetup {
@@ -242,11 +290,23 @@ impl DsoSetup {
             alpha_bias,
             schedule: RingSchedule::new(p),
             p,
-            w_bound: loss.w_bound(cfg.model.lambda),
+            w_bound,
             cost,
             plan,
             faults,
             cache: handle,
+        }
+    }
+
+    /// The epoch-1 step rule — what the autotune probe sweeps with.
+    /// Kernel monomorphization depends only on the rule *kind* (fixed
+    /// vs accumulator-carrying), not the epoch-dependent η value, so
+    /// the first epoch's rule is representative for timing.
+    fn step_rule_for(cfg: &TrainConfig) -> StepRule {
+        match cfg.optim.step {
+            StepKind::Const | StepKind::InvSqrt => StepRule::Fixed(cfg.optim.eta0),
+            StepKind::AdaGrad => StepRule::AdaGrad(cfg.optim.eta0),
+            StepKind::Adaptive => StepRule::Adaptive(cfg.optim.eta0),
         }
     }
 

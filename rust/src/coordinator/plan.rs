@@ -27,27 +27,42 @@
 //!
 //! Since PR 5 the table also carries a **backend dimension**
 //! (DESIGN.md §SIMD-backend): the [`SimdLevel`] resolved once per run
-//! by `simd::resolve` — runtime CPU-feature detection, or the
+//! by `simd::resolve` — a measured `--simd auto` winner, or the
 //! `--simd` override — is recorded here, and [`SweepPlan::sweep`]
-//! dispatches the lane kernels' portable-autovec or AVX2
+//! dispatches the lane kernels' portable-autovec, AVX2, or AVX-512
 //! monomorphization accordingly. Engines stay free of both the kernel
 //! decision tree *and* feature detection (`scripts/ci.sh` greps for
 //! either leaking back); the scalar kernels (`Packed`/`Sampled`) are
 //! backend-independent by construction.
 //!
+//! When the run resolved its backend by measurement
+//! (`cluster.simd = "auto"`), the plan additionally records the
+//! [`AutotuneReport`] — winner plus per-backend throughputs — so the
+//! selection is observable (`BENCH_autotune.json`, the supervisor's
+//! worker-config pinning) instead of vanishing into a resolved enum.
+//! [`autotune_levels`] is the probe that produced it: it times the
+//! real sweep entry points on a deterministic sample of the run's own
+//! packed blocks (largest lane-eligible blocks first). It lives here —
+//! not in the engines — because it needs the block-shape predicate and
+//! the per-backend entry points that `ci.sh` bans from engine code.
+//!
 //! Adding a solver variant (SPDC, mini-batch SDCA, …) means adding a
 //! kernel and one arm *here* — not a new branch tree per engine.
 
 #[cfg(target_arch = "x86_64")]
-use super::updates::{sweep_lanes_affine_avx2, sweep_lanes_avx2};
+use super::updates::{
+    sweep_lanes_affine_avx2, sweep_lanes_affine_avx512, sweep_lanes_avx2, sweep_lanes_avx512,
+};
 use super::updates::{
     sweep_lanes, sweep_lanes_affine, sweep_packed, sweep_packed_sampled, PackedCtx,
-    PackedState,
+    PackedState, StepRule,
 };
-use crate::losses::Loss;
+use crate::losses::{Loss, Regularizer};
 use crate::partition::{PackedBlock, PackedBlocks};
+use crate::simd::autotune::{self, AutotuneReport, Measurement};
 use crate::simd::SimdLevel;
 use crate::util::rng::Xoshiro256;
+use std::time::Duration;
 
 /// The kernel a block is planned to run. One entry per (q, b) block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,6 +93,10 @@ pub struct SweepPlan {
     /// The SIMD backend the lane kernels run on — resolved once per
     /// run (the plan table's backend dimension).
     simd: SimdLevel,
+    /// The measurement that picked `simd`, when the run resolved its
+    /// backend via `--simd auto` (None for forced levels — they never
+    /// measure).
+    autotune: Option<AutotuneReport>,
 }
 
 impl SweepPlan {
@@ -99,13 +118,26 @@ impl SweepPlan {
                 kernels.push(plan_block(omega.block(q, b), loss, updates_per_block));
             }
         }
-        SweepPlan { kernels, p, seed, simd }
+        SweepPlan { kernels, p, seed, simd, autotune: None }
+    }
+
+    /// Attach the autotune report that selected this plan's backend
+    /// (`--simd auto` runs; forced levels pass `None`).
+    pub fn with_autotune(mut self, report: Option<AutotuneReport>) -> SweepPlan {
+        self.autotune = report;
+        self
     }
 
     /// The SIMD backend every lane sweep of this run executes with.
     #[inline]
     pub fn simd(&self) -> SimdLevel {
         self.simd
+    }
+
+    /// The measured per-backend throughputs behind a `--simd auto`
+    /// selection, if this run measured (None under a forced level).
+    pub fn autotune(&self) -> Option<&AutotuneReport> {
+        self.autotune.as_ref()
     }
 
     /// The kernel planned for block Ω^(q, b).
@@ -150,11 +182,18 @@ impl SweepPlan {
                     // holds for the whole run.
                     unsafe { sweep_lanes_affine_avx2(block, ctx, st) }
                 }
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx512 => {
+                    // SAFETY: as for Avx2 — the Avx512 level only
+                    // enters a plan behind runtime avx512f+avx2+fma
+                    // detection (`simd::resolve`).
+                    unsafe { sweep_lanes_affine_avx512(block, ctx, st) }
+                }
                 #[cfg(not(target_arch = "x86_64"))]
                 // Unreachable by construction (`resolve` never returns
-                // Avx2 off x86_64); degrade to portable rather than
-                // panic in a release build.
-                SimdLevel::Avx2 => sweep_lanes_affine(block, ctx, st),
+                // an x86 level off x86_64); degrade to portable rather
+                // than panic in a release build.
+                SimdLevel::Avx2 | SimdLevel::Avx512 => sweep_lanes_affine(block, ctx, st),
             },
             PlannedKernel::Lanes => match self.simd {
                 SimdLevel::Portable => sweep_lanes(block, ctx, st),
@@ -164,8 +203,13 @@ impl SweepPlan {
                     // planned behind runtime detection.
                     unsafe { sweep_lanes_avx2(block, ctx, st) }
                 }
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx512 => {
+                    // SAFETY: see the LanesAffine arm.
+                    unsafe { sweep_lanes_avx512(block, ctx, st) }
+                }
                 #[cfg(not(target_arch = "x86_64"))]
-                SimdLevel::Avx2 => sweep_lanes(block, ctx, st),
+                SimdLevel::Avx2 | SimdLevel::Avx512 => sweep_lanes(block, ctx, st),
             },
             PlannedKernel::Packed => sweep_packed(block, ctx, st),
         }
@@ -186,6 +230,116 @@ fn plan_block(block: &PackedBlock, loss: Loss, updates_per_block: usize) -> Plan
     } else {
         PlannedKernel::Packed
     }
+}
+
+/// How many blocks the real-block probe sweeps per rep, and its
+/// per-backend timing budget. A couple of the largest lane blocks is
+/// enough signal — the point is to measure the run's own gather
+/// locality and chunk mix, not to survey the dataset.
+const PROBE_BLOCKS: usize = 3;
+const PROBE_BUDGET: Duration = Duration::from_millis(2);
+
+/// Measure every candidate backend on a deterministic sample of the
+/// run's **real packed blocks** — the probe `DsoSetup` injects into
+/// [`crate::simd::autotune::auto_report_with`] when resolving
+/// `--simd auto`. The sample is the (up to) [`PROBE_BLOCKS`] largest
+/// lane-eligible blocks, ties broken by (q, b) — a pure function of the
+/// partition, so the same run always times the same work (the wall
+/// clock enters only through the measured durations, never the
+/// sample or any fingerprint). Each rep sweeps the sampled blocks once
+/// through the *production* entry points (the affine entry, which
+/// degrades internally to the plain lane sweep for non-affine losses),
+/// against zero-initialized scratch parameter state — the run's actual
+/// iterates are never touched.
+///
+/// Returns one [`Measurement`] per level, or an empty vec when no
+/// block is lane-eligible (nothing SIMD-dispatched to measure —
+/// `report_from` then falls back to the widest supported level).
+///
+/// `y_local` / `alpha_bias` are the per-row-stripe label and α-bias
+/// tables exactly as `DsoSetup` holds them.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_levels<Y, A>(
+    omega: &PackedBlocks,
+    y_local: &[Y],
+    alpha_bias: &[A],
+    loss: Loss,
+    reg: Regularizer,
+    lambda: f64,
+    w_bound: f64,
+    rule: StepRule,
+    levels: &[SimdLevel],
+) -> Vec<Measurement>
+where
+    Y: std::ops::Deref<Target = [f64]>,
+    A: std::ops::Deref<Target = [f32]>,
+{
+    let p = omega.p;
+    let mut picks: Vec<(usize, usize)> = (0..p)
+        .flat_map(|q| (0..p).map(move |b| (q, b)))
+        .filter(|&(q, b)| omega.block(q, b).has_lanes())
+        .collect();
+    if picks.is_empty() {
+        return Vec::new();
+    }
+    picks.sort_by_key(|&(q, b)| (std::cmp::Reverse(omega.block(q, b).nnz()), q, b));
+    picks.truncate(PROBE_BLOCKS);
+    // Scratch parameter state per sampled block, zero-initialized and
+    // reused across reps and levels (clamped by the kernels, so it
+    // stays representable; only throughput leaves the probe).
+    let mut states: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> = picks
+        .iter()
+        .map(|&(q, b)| {
+            let nw = omega.inv_col[b].len().max(omega.block(q, b).n_cols as usize);
+            let na = y_local[q].len().max(omega.block(q, b).n_rows as usize);
+            (vec![0.0; nw], vec![0.0; nw], vec![0.0; na], vec![0.0; na])
+        })
+        .collect();
+    autotune::measure(levels, PROBE_BUDGET, |level| {
+        let mut units = 0usize;
+        for (s, &(q, b)) in states.iter_mut().zip(&picks) {
+            let block = omega.block(q, b);
+            let ctx = PackedCtx {
+                loss,
+                reg,
+                lambda,
+                w_bound,
+                rule,
+                inv_col: &omega.inv_col[b],
+                inv_col32: &omega.inv_col32[b],
+                inv_row: &omega.inv_row[q],
+                y: &y_local[q],
+                alpha_bias32: &alpha_bias[q],
+            };
+            let mut st = PackedState {
+                w: &mut s.0,
+                w_acc: &mut s.1,
+                alpha: &mut s.2,
+                a_acc: &mut s.3,
+            };
+            units += match level {
+                SimdLevel::Portable => sweep_lanes_affine(block, &ctx, &mut st),
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx2 => {
+                    // SAFETY: `levels` comes from
+                    // `simd::supported_levels()` — Avx2 appears only
+                    // behind runtime avx2+fma detection.
+                    unsafe { sweep_lanes_affine_avx2(block, &ctx, &mut st) }
+                }
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx512 => {
+                    // SAFETY: as above — Avx512 appears in `levels`
+                    // only behind runtime avx512f+avx2+fma detection.
+                    unsafe { sweep_lanes_affine_avx512(block, &ctx, &mut st) }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                SimdLevel::Avx2 | SimdLevel::Avx512 => {
+                    unreachable!("supported_levels never yields {level:?} off x86_64")
+                }
+            };
+        }
+        units
+    })
 }
 
 /// Draw the `k` flat entry indices a worker processes this inner
@@ -380,6 +534,78 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn plan_records_the_autotune_report() {
+        // A measured `auto` run attaches its report; forced levels
+        // leave it None. The accessor is what the supervisor/bench
+        // emission read.
+        let omega = long_row_blocks(2);
+        let plan = SweepPlan::build(&omega, Loss::Hinge, 0, 1, SimdLevel::Portable);
+        assert!(plan.autotune().is_none(), "forced levels never measure");
+        let report = autotune::report_from(
+            &[SimdLevel::Portable],
+            vec![Measurement { level: SimdLevel::Portable, units_per_sec: 1.0e9, reps: 3 }],
+        );
+        let plan = plan.with_autotune(Some(report));
+        let got = plan.autotune().expect("report attached");
+        assert_eq!(got.chosen, SimdLevel::Portable);
+        assert_eq!(got.measured.len(), 1);
+    }
+
+    /// Per-stripe label / α-bias tables shaped like `DsoSetup`'s, for
+    /// driving the probe without a full setup.
+    fn probe_tables(omega: &PackedBlocks) -> (Vec<Vec<f64>>, Vec<Vec<f32>>) {
+        let y: Vec<Vec<f64>> =
+            omega.inv_row.iter().map(|r| vec![1.0f64; r.len()]).collect();
+        let ab: Vec<Vec<f32>> =
+            omega.inv_row.iter().map(|r| r.iter().map(|&hr| hr as f32).collect()).collect();
+        (y, ab)
+    }
+
+    #[test]
+    fn real_block_probe_measures_each_level_on_lane_blocks() {
+        let omega = long_row_blocks(2);
+        let (y, ab) = probe_tables(&omega);
+        for loss in [Loss::Square, Loss::Hinge] {
+            let ms = autotune_levels(
+                &omega,
+                &y,
+                &ab,
+                loss,
+                Regularizer::L2,
+                0.1,
+                loss.w_bound(0.1),
+                StepRule::AdaGrad(0.1),
+                &[SimdLevel::Portable],
+            );
+            assert_eq!(ms.len(), 1, "{loss:?}: one measurement per candidate level");
+            assert_eq!(ms[0].level, SimdLevel::Portable);
+            assert!(ms[0].units_per_sec > 0.0, "{loss:?}: probe must process entries");
+            assert!(ms[0].reps >= 3, "{loss:?}: at least MIN_REPS timed reps");
+        }
+    }
+
+    #[test]
+    fn real_block_probe_is_empty_without_lane_blocks() {
+        // No lane-eligible work ⇒ nothing SIMD-dispatched to measure;
+        // the autotune then falls back to the widest supported level
+        // (flag order), pinned in simd::autotune.
+        let omega = short_row_blocks(4);
+        let (y, ab) = probe_tables(&omega);
+        let ms = autotune_levels(
+            &omega,
+            &y,
+            &ab,
+            Loss::Hinge,
+            Regularizer::L2,
+            0.1,
+            Loss::Hinge.w_bound(0.1),
+            StepRule::Fixed(0.1),
+            &[SimdLevel::Portable],
+        );
+        assert!(ms.is_empty());
     }
 
     #[test]

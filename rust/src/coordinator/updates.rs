@@ -113,11 +113,12 @@
 //! same kernel — is unaffected.
 
 use crate::losses::kernel::{
-    AffineLossK, HingeK, L1K, L2K, Lane, LogisticK, LossK, RegK, SquareK,
+    AffineLossK, HingeK, L1K, L2K, Lane, Lane2, LogisticK, LossK, RegK, SquareK, LANES2,
 };
 use crate::losses::{Loss, Regularizer};
 use crate::optim::step::ADAGRAD_EPS;
 use crate::partition::omega::{Entry, PackedBlock, LANES};
+use crate::simd::backend::{join_lanes, split_lanes};
 use crate::simd::{Portable, SimdBackend};
 
 /// Which step rule the sweep applies.
@@ -229,6 +230,13 @@ trait StepK: Copy {
 
     fn eta_lane_b<B: SimdBackend>(self, acc: &mut Lane, g: &Lane) -> Lane;
 
+    /// [`StepK::eta_lane_b`] over a fused chunk pair (the 16-wide path
+    /// of `PAIRED` backends). Per-lane math is identical to two 8-wide
+    /// calls — 512-bit FMA/√/÷ round per lane exactly like their
+    /// 256-bit forms — so the pair path stays value-identical to the
+    /// chunk-at-a-time path it fuses.
+    fn eta_lane2_b<B: SimdBackend>(self, acc: &mut Lane2, g: &Lane2) -> Lane2;
+
     /// Fold one LANES-chunk of the **affine** α recurrence
     /// ([`AffineLossK`] losses, i.e. square): `cv[k]` holds the
     /// α-independent part of g_α at entry k (computed 8-wide by the
@@ -267,6 +275,11 @@ impl StepK for FixedStep {
     #[inline(always)]
     fn eta_lane_b<B: SimdBackend>(self, _acc: &mut Lane, _g: &Lane) -> Lane {
         [self.0 as f32; LANES]
+    }
+
+    #[inline(always)]
+    fn eta_lane2_b<B: SimdBackend>(self, _acc: &mut Lane2, _g: &Lane2) -> Lane2 {
+        [self.0 as f32; LANES2]
     }
 
     /// Closed-form fold: with constant η the affine per-entry maps
@@ -319,6 +332,11 @@ impl StepK for AdaGradStep {
         B::adagrad_eta_lane(self.0 as f32, ADAGRAD_EPS as f32, acc, g)
     }
 
+    #[inline(always)]
+    fn eta_lane2_b<B: SimdBackend>(self, acc: &mut Lane2, g: &Lane2) -> Lane2 {
+        B::adagrad_eta_lane2(self.0 as f32, ADAGRAD_EPS as f32, acc, g)
+    }
+
     /// AdaGrad's η is a function of g_α, so the per-entry maps do not
     /// compose into one affine map; the serial loop stays, but each
     /// iteration is one FMA for g_α plus the accumulate/√/divide —
@@ -365,6 +383,11 @@ impl StepK for AdaptiveStep {
     #[inline(always)]
     fn eta_lane_b<B: SimdBackend>(self, acc: &mut Lane, g: &Lane) -> Lane {
         B::adagrad_eta_lane(self.0 as f32, 1.0f32, acc, g)
+    }
+
+    #[inline(always)]
+    fn eta_lane2_b<B: SimdBackend>(self, acc: &mut Lane2, g: &Lane2) -> Lane2 {
+        B::adagrad_eta_lane2(self.0 as f32, 1.0f32, acc, g)
     }
 
     /// η depends on g_α (like AdaGrad), so the serial per-entry loop
@@ -685,6 +708,47 @@ fn w_side_chunk<B: SimdBackend, R: RegK, S: StepK>(
     }
 }
 
+/// [`w_side_chunk`] over a fused chunk pair — the 16-wide path of
+/// `PAIRED` backends. No `n` parameter: the pair path only runs when
+/// the next [`LANES2`] physical slots are all real entries (see the
+/// pair loops), so the writeback is full-width — which is what lets
+/// AVX-512 use its native scatter instead of the per-lane stores the
+/// partial 8-wide writeback needs.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn w_side_chunk2<B: SimdBackend, R: RegK, S: StepK>(
+    step: S,
+    lj: &[usize; LANES2],
+    wv: &Lane2,
+    xv: &Lane2,
+    iv: &Lane2,
+    av: &Lane2,
+    lam32: f32,
+    b32: f32,
+    st: &mut PackedState,
+) {
+    let rv = R::grad_lane2_b::<B>(wv);
+    let gw = B::w_grad2(lam32, &rv, iv, av, xv);
+    let mut accv: Lane2 = [0.0; LANES2];
+    if S::USES_ACC {
+        // SAFETY: `lj` holds the pair's column ids, validated in-stripe
+        // by `check_packed_bounds` (w_acc.len() == w.len()).
+        accv = unsafe { B::gather_idx2(st.w_acc, lj) };
+    }
+    let etav = step.eta_lane2_b::<B>(&mut accv, &gw);
+    let wn = B::w_step_clamp2(wv, &etav, &gw, b32);
+    // SAFETY: every lj[k] is a validated in-stripe column, all 16 lanes
+    // are real entries (the pair path never sees sentinels), and the
+    // pair's ids are pairwise distinct — one row group is one CSR row —
+    // so the full-width scatter is conflict-free.
+    unsafe {
+        B::scatter2(st.w, lj, &wn);
+        if S::USES_ACC {
+            B::scatter2(st.w_acc, lj, &accv);
+        }
+    }
+}
+
 fn sweep_lanes_mono<B: SimdBackend, L: LossK, R: RegK, S: StepK>(
     block: &PackedBlock,
     ctx: &PackedCtx,
@@ -730,6 +794,39 @@ fn sweep_lanes_mono<B: SimdBackend, L: LossK, R: RegK, S: StepK>(
         } else {
             let mut base = g.pad_start as usize;
             let mut rem = len;
+            if B::PAIRED {
+                // Fused chunk pairs (16-wide) while ≥ LANES2 real
+                // entries remain, i.e. while both chunks of the pair
+                // are full — the padded tail (and any odd trailing
+                // chunk) drops to the 8-wide loop below. Gathering the
+                // pair's two chunks *before* the first chunk's
+                // writeback is value-identical to the sequential 8+8
+                // order because the 16 entries belong to one row group
+                // (one CSR row) and therefore touch 16 distinct
+                // columns; per-lane 512-bit FMA rounds exactly like
+                // 256-bit, so the fusion changes codegen, not results.
+                while rem >= LANES2 {
+                    // SAFETY: rem >= LANES2 real entries remain, so
+                    // `base + LANES2` stays within the group's
+                    // physical lane region and every slot of the pair
+                    // is a real entry with a validated in-stripe
+                    // column (`check_packed_bounds`).
+                    let (lj, wv, xv, iv) =
+                        unsafe { B::gather_chunk2(cols, vals, base, st.w, ctx.inv_col32) };
+                    // α recurrence — scalar f64 over the 16 lanes,
+                    // identical math (and order) to two 8-wide chunks.
+                    let mut av: Lane2 = [0.0; LANES2];
+                    for k in 0..LANES2 {
+                        av[k] = ai as f32;
+                        let ga = L::dual_grad(ai, y) * hr - wv[k] as f64 * (xv[k] as f64);
+                        let eta_a = step.eta(&mut aa, ga);
+                        ai = L::project(ai + eta_a * ga, y) as f32 as f64;
+                    }
+                    w_side_chunk2::<B, R, S>(step, &lj, &wv, &xv, &iv, &av, lam32, b32, st);
+                    base += LANES2;
+                    rem -= LANES2;
+                }
+            }
             while rem > 0 {
                 let n = rem.min(LANES);
                 // SAFETY: `base + LANES` stays within the group's
@@ -859,6 +956,40 @@ pub unsafe fn sweep_lanes_affine_avx2(
     sweep_lanes_affine_with::<crate::simd::Avx2>(block, ctx, st)
 }
 
+/// [`sweep_lanes_avx2`]'s AVX-512 sibling: the paired 16-wide chunk
+/// pipeline (512-bit gather/FMA/scatter, 8-wide avx2 epilogue for odd
+/// trailing chunks and ragged tails) fused into one
+/// avx512f+avx2+fma compilation unit — the same sweep-granularity
+/// feature boundary, for the same reason (see [`sweep_lanes_avx2`]).
+///
+/// # Safety
+/// The running CPU must support avx512f+avx2+fma — guaranteed by
+/// `simd::resolve` (plan construction) or an explicit
+/// `simd::avx512_supported()` guard at the call site.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+pub unsafe fn sweep_lanes_avx512(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
+    sweep_lanes_with::<crate::simd::Avx512>(block, ctx, st)
+}
+
+/// [`sweep_lanes_avx512`]'s affine-α twin.
+///
+/// # Safety
+/// Same contract as [`sweep_lanes_avx512`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+pub unsafe fn sweep_lanes_affine_avx512(
+    block: &PackedBlock,
+    ctx: &PackedCtx,
+    st: &mut PackedState,
+) -> usize {
+    sweep_lanes_affine_with::<crate::simd::Avx512>(block, ctx, st)
+}
+
 /// Resolve (loss, reg) once per sweep. Only the square loss has an
 /// affine dual; hinge/logistic degrade to the plain lane dispatch
 /// (their per-entry projection is load-bearing), bitwise identical to
@@ -935,6 +1066,34 @@ fn sweep_affine_mono<B: SimdBackend, L: AffineLossK, R: RegK, S: StepK>(
             let slope_hr = L::DUAL_SLOPE * hr;
             let mut base = g.pad_start as usize;
             let mut rem = len;
+            if B::PAIRED {
+                // Fused chunk pairs — same contract and argument as in
+                // `sweep_lanes_mono`: both chunks full, 16 distinct
+                // columns, gather-before-writeback value-identical to
+                // the sequential 8+8 order. The affine coefficients
+                // come out 16-wide; the α fold itself is a serial
+                // dependency chain either way, so it stays the 8-wide
+                // `alpha_chunk_affine` fed by the split halves —
+                // bitwise the same recurrence the unpaired loop runs.
+                while rem >= LANES2 {
+                    // SAFETY: rem >= LANES2 ⇒ the next LANES2 physical
+                    // slots are all real entries inside the group's
+                    // lane region, columns validated in-stripe
+                    // (`check_packed_bounds`).
+                    let (lj, wv, xv, iv) =
+                        unsafe { B::gather_chunk2(cols, vals, base, st.w, ctx.inv_col32) };
+                    let cv = B::affine_coeffs2(bias_hr, &wv, &xv);
+                    let (clo, chi) = split_lanes(&cv);
+                    let mut alo: Lane = [0.0; LANES];
+                    let mut ahi: Lane = [0.0; LANES];
+                    ai = step.alpha_chunk_affine(&mut aa, ai, &clo, LANES, slope_hr, &mut alo);
+                    ai = step.alpha_chunk_affine(&mut aa, ai, &chi, LANES, slope_hr, &mut ahi);
+                    let av = join_lanes(&alo, &ahi);
+                    w_side_chunk2::<B, R, S>(step, &lj, &wv, &xv, &iv, &av, lam32, b32, st);
+                    base += LANES2;
+                    rem -= LANES2;
+                }
+            }
             while rem > 0 {
                 let n = rem.min(LANES);
                 // SAFETY: same chunk argument as in `sweep_lanes_mono`
@@ -1968,5 +2127,220 @@ mod tests {
             "α fold {} vs replay {ai}",
             a[0]
         );
+    }
+
+    /// A `PAIRED` backend whose every op is `Portable`'s, with the
+    /// pair ops inherited from the trait's composed defaults. Driving
+    /// the sweeps through it exercises the 16-wide loop structure
+    /// (pairing condition, α recurrence over 16, full-width scatter)
+    /// with arithmetic that is definitionally two 8-wide chunks —
+    /// so sweeps must be **bitwise** identical to plain `Portable`,
+    /// on any host. This is the architecture-independent pin of the
+    /// pair plumbing that the runtime-guarded AVX-512 suites then
+    /// instantiate with real 512-bit ops.
+    #[derive(Clone, Copy, Debug, Default)]
+    struct PairedPortable;
+
+    // SAFETY: every op delegates to `Portable` (safe scalar lane
+    // loops — no CPU-feature contract) and the pair defaults compose
+    // those same ops; `PAIRED` changes which sweep loop runs, never
+    // what any op requires.
+    unsafe impl SimdBackend for PairedPortable {
+        const NAME: &'static str = "paired-portable";
+        const PAIRED: bool = true;
+
+        #[inline(always)]
+        unsafe fn gather_chunk(
+            cols: &[u32],
+            vals: &[f32],
+            base: usize,
+            w: &[f32],
+            inv: &[f32],
+        ) -> ([usize; LANES], Lane, Lane, Lane) {
+            // SAFETY: forwarded contract.
+            unsafe { Portable::gather_chunk(cols, vals, base, w, inv) }
+        }
+
+        #[inline(always)]
+        unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane {
+            // SAFETY: forwarded contract.
+            unsafe { Portable::gather_idx(src, lj) }
+        }
+
+        #[inline(always)]
+        fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane {
+            Portable::w_grad(lam, rv, iv, av, xv)
+        }
+
+        #[inline(always)]
+        fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane {
+            Portable::w_step_clamp(wv, etav, gw, b)
+        }
+
+        #[inline(always)]
+        fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane {
+            Portable::affine_coeffs(bias, wv, xv)
+        }
+
+        #[inline(always)]
+        fn l1_grad_lane(w: &Lane) -> Lane {
+            Portable::l1_grad_lane(w)
+        }
+
+        #[inline(always)]
+        fn l2_grad_lane(w: &Lane) -> Lane {
+            Portable::l2_grad_lane(w)
+        }
+
+        #[inline(always)]
+        fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
+            Portable::adagrad_eta_lane(e0, eps, acc, g)
+        }
+
+        #[inline(always)]
+        unsafe fn predict_fold_chunk(
+            cols: &[u32],
+            vals: &[f32],
+            base: usize,
+            n: usize,
+            w: &[f32],
+            acc: &mut f64,
+        ) {
+            // SAFETY: forwarded contract.
+            unsafe { Portable::predict_fold_chunk(cols, vals, base, n, w, acc) }
+        }
+    }
+
+    /// Blocks that exercise every pair-loop boundary: a 20-entry group
+    /// (1 pair + ragged 4-entry tail), a 24-entry group (1 pair + 1
+    /// full odd chunk — the epilogue that pairing cannot absorb), and
+    /// a short group (scalar fallback).
+    fn pair_boundary_block() -> (Packed, [u32; 3], Vec<u32>, [f32; 3]) {
+        let row_counts = [20u32, 24, 2];
+        let col_counts = vec![3u32; 24];
+        let y = [1.0f32, -1.0, 1.0];
+        let mut entries: Vec<Entry> = Vec::new();
+        for j in 0..20 {
+            entries.push(Entry { i: 0, j, x: 0.3 + 0.11 * j as f32 });
+        }
+        for j in 0..24 {
+            entries.push(Entry { i: 1, j, x: -0.8 + 0.07 * j as f32 });
+        }
+        entries.push(Entry { i: 2, j: 5, x: 1.4 });
+        entries.push(Entry { i: 2, j: 11, x: -0.6 });
+        let p = pack(&entries, &row_counts, &col_counts, &y);
+        assert!(p.b.has_lanes());
+        (p, row_counts, col_counts, y)
+    }
+
+    #[test]
+    fn paired_portable_sweeps_bitwise_equal_portable() {
+        let (p, row_counts, col_counts, y) = pair_boundary_block();
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+            for reg in [Regularizer::L2, Regularizer::L1] {
+                for rule in
+                    [StepRule::Fixed(0.25), StepRule::AdaGrad(0.25), StepRule::Adaptive(0.25)]
+                {
+                    let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                    c.loss = loss;
+                    c.reg = reg;
+                    c.m = 3.0;
+                    c.w_bound = loss.w_bound(c.lambda);
+                    let pc = packed_ctx(&c, &p);
+                    let run = |paired: bool, affine: bool| {
+                        let mut w = vec![0.02f32; 24];
+                        let mut wa = vec![0f32; 24];
+                        let mut a: Vec<f32> =
+                            y.iter().map(|&v| loss.alpha_init(v as f64) as f32).collect();
+                        let mut aa = vec![0f32; 3];
+                        for _ in 0..3 {
+                            let mut st = PackedState {
+                                w: &mut w,
+                                w_acc: &mut wa,
+                                alpha: &mut a,
+                                a_acc: &mut aa,
+                            };
+                            match (paired, affine) {
+                                (true, false) => {
+                                    sweep_lanes_with::<PairedPortable>(&p.b, &pc, &mut st)
+                                }
+                                (false, false) => sweep_lanes(&p.b, &pc, &mut st),
+                                (true, true) => {
+                                    sweep_lanes_affine_with::<PairedPortable>(&p.b, &pc, &mut st)
+                                }
+                                (false, true) => sweep_lanes_affine(&p.b, &pc, &mut st),
+                            };
+                        }
+                        (w, a, wa, aa)
+                    };
+                    assert_eq!(
+                        run(true, false),
+                        run(false, false),
+                        "plain sweep {loss:?}/{reg:?}/{rule:?}"
+                    );
+                    assert_eq!(
+                        run(true, true),
+                        run(false, true),
+                        "affine sweep {loss:?}/{reg:?}/{rule:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Runtime-guarded: the real AVX-512 pipeline on the same
+    /// boundary-heavy block, against the portable oracle (tolerance —
+    /// FMA contraction) and against its own fused wrapper (bitwise —
+    /// the `#[target_feature]` boundary must change codegen only).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_sweeps_match_portable_and_fused_wrapper() {
+        if !crate::simd::avx512_supported() {
+            return;
+        }
+        let (p, row_counts, col_counts, y) = pair_boundary_block();
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+            for rule in [StepRule::Fixed(0.25), StepRule::AdaGrad(0.25), StepRule::Adaptive(0.25)]
+            {
+                let mut c = ctx(&row_counts, &col_counts, &y, rule);
+                c.loss = loss;
+                c.m = 3.0;
+                c.w_bound = loss.w_bound(c.lambda);
+                let pc = packed_ctx(&c, &p);
+                let run = |mode: u8| {
+                    let mut w = vec![0.02f32; 24];
+                    let mut wa = vec![0f32; 24];
+                    let mut a: Vec<f32> =
+                        y.iter().map(|&v| loss.alpha_init(v as f64) as f32).collect();
+                    let mut aa = vec![0f32; 3];
+                    for _ in 0..3 {
+                        let mut st = PackedState {
+                            w: &mut w,
+                            w_acc: &mut wa,
+                            alpha: &mut a,
+                            a_acc: &mut aa,
+                        };
+                        match mode {
+                            0 => sweep_lanes(&p.b, &pc, &mut st),
+                            1 => sweep_lanes_with::<crate::simd::Avx512>(&p.b, &pc, &mut st),
+                            // SAFETY: avx512_supported() checked above.
+                            _ => unsafe { sweep_lanes_avx512(&p.b, &pc, &mut st) },
+                        };
+                    }
+                    (w, a)
+                };
+                let (pw, pa) = run(0);
+                let (vw, va) = run(1);
+                for k in 0..24 {
+                    let rel = (vw[k] - pw[k]).abs() as f64 / (pw[k].abs() as f64).max(1e-3);
+                    assert!(rel <= 1e-5, "{loss:?}/{rule:?} w[{k}]: {} vs {}", vw[k], pw[k]);
+                }
+                for k in 0..3 {
+                    let rel = (va[k] - pa[k]).abs() as f64 / (pa[k].abs() as f64).max(1e-3);
+                    assert!(rel <= 1e-5, "{loss:?}/{rule:?} α[{k}]: {} vs {}", va[k], pa[k]);
+                }
+                assert_eq!(run(1), run(2), "fused wrapper must be bitwise {loss:?}/{rule:?}");
+            }
+        }
     }
 }

@@ -35,6 +35,15 @@ use crate::simd::{Portable, SimdBackend};
 /// One SIMD-width batch of f32 values (8 × f32 = one 256-bit vector).
 pub type Lane = [f32; LANES];
 
+/// Two adjacent lane chunks fused into one step (16 × f32 = one
+/// 512-bit vector). The lane-major block layout is unchanged — a
+/// `Lane2` is always the concatenation of two *adjacent* 8-wide chunks
+/// of the same row group, so backends without 512-bit registers
+/// process it as two [`Lane`] halves (the trait defaults) and AVX-512
+/// processes it as one register.
+pub const LANES2: usize = 2 * LANES;
+pub type Lane2 = [f32; LANES2];
+
 /// Loss selected at compile time. `dual_grad`/`project` match
 /// [`Loss::dual_utility_grad`] / [`Loss::project_alpha`] exactly.
 ///
@@ -153,6 +162,20 @@ pub trait RegK: Copy + Send + Sync + 'static {
         out
     }
 
+    /// Paired-chunk ∇φ over 16 f32 weights — the fused step of a
+    /// [`SimdBackend::PAIRED`] backend. The default splits into two
+    /// 8-wide calls (exactly what a non-paired backend would have
+    /// computed); the concrete impls below route to the backend's
+    /// single 512-bit op instead.
+    #[inline(always)]
+    fn grad_lane2_b<B: SimdBackend>(w: &Lane2) -> Lane2 {
+        let mut out = [0f32; LANES2];
+        for k in 0..LANES2 {
+            out[k] = Self::REG.grad(w[k] as f64) as f32;
+        }
+        out
+    }
+
     /// Portable-backend ∇φ lanes — the PR 2 entry point, kept so
     /// existing differential tests keep reading naturally.
     #[inline(always)]
@@ -176,6 +199,11 @@ impl RegK for L1K {
     fn grad_lane_b<B: SimdBackend>(w: &Lane) -> Lane {
         B::l1_grad_lane(w)
     }
+
+    #[inline(always)]
+    fn grad_lane2_b<B: SimdBackend>(w: &Lane2) -> Lane2 {
+        B::l1_grad_lane2(w)
+    }
 }
 impl RegK for L2K {
     const REG: Regularizer = Regularizer::L2;
@@ -184,6 +212,11 @@ impl RegK for L2K {
     #[inline(always)]
     fn grad_lane_b<B: SimdBackend>(w: &Lane) -> Lane {
         B::l2_grad_lane(w)
+    }
+
+    #[inline(always)]
+    fn grad_lane2_b<B: SimdBackend>(w: &Lane2) -> Lane2 {
+        B::l2_grad_lane2(w)
     }
 }
 
@@ -242,5 +275,28 @@ mod tests {
         }
         // -0.0 sits on the kink for L1 (sign convention: 0).
         assert_eq!(l1[5], 0.0);
+    }
+
+    /// The paired-chunk reg gradient is definitionally two adjacent
+    /// 8-wide chunks: the default (and every backend's pair op, pinned
+    /// in `simd::backend`) must match the lane op half-by-half bitwise.
+    #[test]
+    fn grad_lane2_is_two_lane_halves_bitwise() {
+        let w2: Lane2 = [
+            -1.5, -0.25, 0.0, 0.4, 1.0, -0.0, 3.25, -7.5, //
+            2.0, -3.0, 0.125, -0.5, 9.0, -0.0, 0.0, 1e-3,
+        ];
+        let (mut lo, mut hi) = ([0f32; LANES], [0f32; LANES]);
+        lo.copy_from_slice(&w2[..LANES]);
+        hi.copy_from_slice(&w2[LANES..]);
+        for (pair, a, b) in [
+            (L1K::grad_lane2_b::<Portable>(&w2), L1K::grad_lane(&lo), L1K::grad_lane(&hi)),
+            (L2K::grad_lane2_b::<Portable>(&w2), L2K::grad_lane(&lo), L2K::grad_lane(&hi)),
+        ] {
+            for k in 0..LANES {
+                assert_eq!(pair[k].to_bits(), a[k].to_bits(), "lo lane {k}");
+                assert_eq!(pair[LANES + k].to_bits(), b[k].to_bits(), "hi lane {k}");
+            }
+        }
     }
 }

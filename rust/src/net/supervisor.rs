@@ -511,6 +511,12 @@ struct Ring<'a> {
     /// cache workers mmap instead of receiving the shard as libsvm
     /// text over the socket.
     cache_file: String,
+    /// The config TOML workers bootstrap from, with the supervisor's
+    /// resolved SIMD backend pinned as a forced kind. Under measured
+    /// `auto`, each worker process would otherwise run its own
+    /// micro-autotune and a borderline host could crown a different
+    /// winner than the supervisor — failing the fingerprint handshake.
+    start_toml: String,
     p: usize,
     target: u64,
     death_timeout: Duration,
@@ -702,7 +708,7 @@ impl Ring<'_> {
             pr.send(&Msg::Start {
                 fingerprint: self.fp,
                 heartbeat_ms: self.cfg.cluster.heartbeat_ms,
-                cfg_toml: wire::emit_config(self.cfg),
+                cfg_toml: self.start_toml.clone(),
                 ds_name: train.name.clone(),
                 d: train.d() as u64,
                 libsvm,
@@ -879,11 +885,22 @@ pub fn train_dso_proc_with(
         }
     }
 
+    // Workers inherit the supervisor's backend verdict as a *forced*
+    // kind: a measured `auto` winner must not be re-measured per
+    // process (the fingerprint covers the backend name). Workers
+    // validate the pinned kind like any explicit request, so a
+    // heterogeneous host that can't run it refuses loudly.
+    let start_toml = {
+        let mut pinned = cfg.clone();
+        pinned.cluster.simd = setup.plan.simd().as_kind();
+        wire::emit_config(&pinned)
+    };
     let wall = Stopwatch::new();
     let mut ring = Ring {
         cfg,
         fp,
         cache_file,
+        start_toml,
         p,
         target: (cfg.optim.epochs as u64) * (p as u64) * (p as u64),
         death_timeout,

@@ -21,9 +21,10 @@ pub struct RequestStat {
     pub nnz: usize,
     /// Wall-clock seconds from frame decode to scores encoded.
     pub latency_s: f64,
-    /// SIMD backend the scores ran on ("portable" / "avx2") —
-    /// resolved once per server instance, recorded per request so a
-    /// mixed-fleet log stays attributable.
+    /// SIMD backend the scores ran on ("portable" / "avx2" /
+    /// "avx512") — resolved once per server instance (measured, under
+    /// `--simd auto`), recorded per request so a mixed-fleet log stays
+    /// attributable.
     pub backend: &'static str,
 }
 
@@ -67,7 +68,7 @@ pub struct ServeStats {
     pub total_latency_s: f64,
     /// Worst single-request latency, seconds.
     pub max_latency_s: f64,
-    /// Backend every batch ran on ("portable" / "avx2").
+    /// Backend every batch ran on ("portable" / "avx2" / "avx512").
     pub backend: &'static str,
 }
 

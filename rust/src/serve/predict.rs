@@ -7,9 +7,12 @@
 //! Lane-eligible groups run `LANES`-wide chunks through
 //! [`SimdBackend::predict_fold_chunk`] (hardware gathers on AVX2);
 //! short groups take the scalar fold, exactly like the sweep kernels.
-//! Because the fold itself is f64 storage-order on every backend (see
-//! the backend-op docs), AVX2 and portable scores are bit-identical —
-//! the differential suite still asserts the weaker ≤1e-6 contract so a
+//! Paired backends (`Avx512`) additionally drain full 16-entry pairs
+//! through [`SimdBackend::predict_fold_chunk2`] — one 512-bit gather
+//! per pair — before the 8-wide loop takes the remainder. Because the
+//! fold itself is f64 storage-order on every backend (see the
+//! backend-op docs), all backends' scores are bit-identical — the
+//! differential suite still asserts the weaker ≤1e-6 contract so a
 //! future vectorized fold has room to trade exactness for speed.
 //!
 //! Backend selection follows the engine rule: callers resolve a
@@ -18,6 +21,7 @@
 //! no feature detection (ci.sh greps it, like the engines).
 
 use super::batch::PackedRequests;
+use crate::losses::kernel::LANES2;
 use crate::partition::omega::LANES;
 use crate::simd::{Portable, SimdBackend, SimdLevel};
 
@@ -37,8 +41,15 @@ pub fn predict_batch(reqs: &PackedRequests, w: &[f32], level: SimdLevel, out: &m
         // `simd::resolve` (which verified avx2+fma on this CPU) or by
         // tests performing the same guard.
         SimdLevel::Avx2 => unsafe { predict_batch_avx2(reqs, w, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx512 level is only ever produced by
+        // `simd::resolve` (which verified avx512f+avx2+fma) or by tests
+        // performing the same guard.
+        SimdLevel::Avx512 => unsafe { predict_batch_avx512(reqs, w, out) },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdLevel::Avx2 => unreachable!("simd::resolve never yields Avx2 off x86_64"),
+        SimdLevel::Avx2 | SimdLevel::Avx512 => {
+            unreachable!("simd::resolve never yields x86 backends off x86_64")
+        }
     }
 }
 
@@ -94,6 +105,21 @@ pub fn predict_batch_with<B: SimdBackend>(reqs: &PackedRequests, w: &[f32], out:
         } else {
             let mut base = g.pad_start as usize;
             let mut rem = len;
+            if B::PAIRED {
+                // Full 16-entry pairs: no sentinel can appear before
+                // the last `len % LANES` padding slots, so `rem >=
+                // LANES2` guarantees 16 real entries — the no-`n` pair
+                // fold is exact. The fold is the same serial f64
+                // storage-order recurrence, so scores stay bitwise.
+                while rem >= LANES2 {
+                    // SAFETY: `base + LANES2 <= pad_start +
+                    // padded_len` (checked above) and every stored
+                    // column is < w.len() per `check_request_bounds`.
+                    unsafe { B::predict_fold_chunk2(cols, vals, base, w, &mut s) };
+                    base += LANES2;
+                    rem -= LANES2;
+                }
+            }
             while rem > 0 {
                 let n = rem.min(LANES);
                 // SAFETY: `base + LANES` stays within the group's
@@ -124,6 +150,20 @@ pub fn predict_batch_with<B: SimdBackend>(reqs: &PackedRequests, w: &[f32], out:
 #[target_feature(enable = "avx2", enable = "fma")]
 pub unsafe fn predict_batch_avx2(reqs: &PackedRequests, w: &[f32], out: &mut Vec<f64>) {
     predict_batch_with::<crate::simd::Avx2>(reqs, w, out)
+}
+
+/// Whole-batch AVX-512 compilation unit — `predict_batch_avx2`'s twin
+/// for the paired backend: 512-bit pair gathers and the 256-bit
+/// epilogue all inline into one avx512f+avx2+fma function.
+///
+/// # Safety
+/// The running CPU must support avx512f+avx2+fma — guaranteed by
+/// `simd::resolve` or an explicit `simd::avx512_supported()` guard at
+/// the call site.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+pub unsafe fn predict_batch_avx512(reqs: &PackedRequests, w: &[f32], out: &mut Vec<f64>) {
+    predict_batch_with::<crate::simd::Avx512>(reqs, w, out)
 }
 
 #[cfg(test)]
@@ -182,5 +222,130 @@ mod tests {
         let (x, w) = batch_and_w();
         let p = PackedRequests::pack(&x, w.len()).unwrap();
         predict_batch(&p, &w[..8], SimdLevel::Portable, &mut Vec::new());
+    }
+
+    /// Rows spanning every pair-loop regime: short (<8), single-chunk,
+    /// one pair + ragged tail, two pairs + odd full chunk, empty.
+    fn long_batch_and_w() -> (Csr, Vec<f32>) {
+        let d = 64u32;
+        let rows: Vec<Vec<(u32, f32)>> = [0usize, 3, 8, 15, 16, 20, 24, 33, 40]
+            .iter()
+            .map(|&len| {
+                (0..len)
+                    .map(|j| (((j * 7 + len) as u32) % d, 0.125 * (j as f32) - 0.7))
+                    .collect()
+            })
+            .collect();
+        let x = Csr::from_rows(d as usize, rows);
+        let w: Vec<f32> = (0..d).map(|j| ((j * 13) % 9) as f32 * 0.21 - 0.8).collect();
+        (x, w)
+    }
+
+    /// `Portable` with the pair loop switched on: every op forwards to
+    /// `Portable`, so any score difference vs plain `Portable` can only
+    /// come from the pair-loop *logic* (boundaries, epilogue handoff) —
+    /// pinned bitwise on every architecture, no AVX-512 host needed.
+    #[derive(Clone, Copy)]
+    struct PairedFold;
+    // SAFETY: pure delegation to `Portable`, which is sound everywhere.
+    unsafe impl SimdBackend for PairedFold {
+        const NAME: &'static str = "paired-fold";
+        const PAIRED: bool = true;
+        unsafe fn gather_chunk(
+            cols: &[u32],
+            vals: &[f32],
+            base: usize,
+            w: &[f32],
+            inv: &[f32],
+        ) -> ([usize; LANES], crate::losses::kernel::Lane, crate::losses::kernel::Lane, crate::losses::kernel::Lane)
+        {
+            // SAFETY: forwarded caller contract.
+            unsafe { Portable::gather_chunk(cols, vals, base, w, inv) }
+        }
+        unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> crate::losses::kernel::Lane {
+            // SAFETY: forwarded caller contract.
+            unsafe { Portable::gather_idx(src, lj) }
+        }
+        fn w_grad(
+            lam: f32,
+            rv: &crate::losses::kernel::Lane,
+            iv: &crate::losses::kernel::Lane,
+            av: &crate::losses::kernel::Lane,
+            xv: &crate::losses::kernel::Lane,
+        ) -> crate::losses::kernel::Lane {
+            Portable::w_grad(lam, rv, iv, av, xv)
+        }
+        fn w_step_clamp(
+            wv: &crate::losses::kernel::Lane,
+            etav: &crate::losses::kernel::Lane,
+            gw: &crate::losses::kernel::Lane,
+            b: f32,
+        ) -> crate::losses::kernel::Lane {
+            Portable::w_step_clamp(wv, etav, gw, b)
+        }
+        fn affine_coeffs(
+            bias: f32,
+            wv: &crate::losses::kernel::Lane,
+            xv: &crate::losses::kernel::Lane,
+        ) -> crate::losses::kernel::Lane {
+            Portable::affine_coeffs(bias, wv, xv)
+        }
+        fn l1_grad_lane(w: &crate::losses::kernel::Lane) -> crate::losses::kernel::Lane {
+            Portable::l1_grad_lane(w)
+        }
+        fn l2_grad_lane(w: &crate::losses::kernel::Lane) -> crate::losses::kernel::Lane {
+            Portable::l2_grad_lane(w)
+        }
+        fn adagrad_eta_lane(
+            e0: f32,
+            eps: f32,
+            acc: &mut crate::losses::kernel::Lane,
+            g: &crate::losses::kernel::Lane,
+        ) -> crate::losses::kernel::Lane {
+            Portable::adagrad_eta_lane(e0, eps, acc, g)
+        }
+        unsafe fn predict_fold_chunk(
+            cols: &[u32],
+            vals: &[f32],
+            base: usize,
+            n: usize,
+            w: &[f32],
+            acc: &mut f64,
+        ) {
+            // SAFETY: forwarded caller contract.
+            unsafe { Portable::predict_fold_chunk(cols, vals, base, n, w, acc) }
+        }
+    }
+
+    #[test]
+    fn pair_loop_is_bitwise_row_dot_at_every_boundary() {
+        let (x, w) = long_batch_and_w();
+        let p = PackedRequests::pack(&x, w.len()).unwrap();
+        let (mut plain, mut paired) = (Vec::new(), Vec::new());
+        predict_batch_with::<Portable>(&p, &w, &mut plain);
+        predict_batch_with::<PairedFold>(&p, &w, &mut paired);
+        assert_eq!(plain.len(), x.rows);
+        for i in 0..x.rows {
+            assert_eq!(plain[i].to_bits(), x.row_dot(i, &w).to_bits(), "row {i}");
+            assert_eq!(plain[i].to_bits(), paired[i].to_bits(), "row {i} pair loop");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_batch_matches_portable() {
+        if !crate::simd::avx512_supported() {
+            eprintln!("skipping: avx512f+avx2+fma not available on this host");
+            return;
+        }
+        let (x, w) = long_batch_and_w();
+        let p = PackedRequests::pack(&x, w.len()).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        predict_batch(&p, &w, SimdLevel::Portable, &mut a);
+        predict_batch(&p, &w, SimdLevel::Avx512, &mut b);
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() <= 1e-6 * a[i].abs().max(1.0), "row {i}");
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "row {i} fold should be bitwise");
+        }
     }
 }

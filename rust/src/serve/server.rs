@@ -30,8 +30,13 @@
 //! The SIMD backend is resolved **once**, at [`Server::bind`], via
 //! `simd::resolve` — the same single feature-detection site the
 //! engines use — then recorded in the stats and stamped on every
-//! [`RequestStat`]. This module contains no feature detection and no
-//! bare `unwrap`/`expect` on the socket paths (both gated by ci.sh).
+//! [`RequestStat`]. Under `--simd auto` that resolution is the
+//! measured micro-autotune (`simd::autotune`): every host-supported
+//! backend is timed for a few milliseconds on the synthetic probe
+//! workload and the observed winner serves; the full report (winner +
+//! per-backend throughputs) is kept on the instance for the CLI to
+//! log. This module contains no feature detection and no bare
+//! `unwrap`/`expect` on the socket paths (both gated by ci.sh).
 
 use super::batch::PackedRequests;
 use super::metrics::{RequestStat, ServeObserver, ServeStats};
@@ -53,8 +58,10 @@ pub struct ServeOptions {
     pub model_path: PathBuf,
     /// Unix socket to listen on (a stale file there is replaced).
     pub socket_path: PathBuf,
-    /// SIMD backend policy: `Auto` detects, `Portable`/`Avx2` force —
-    /// identical semantics to training's `cluster.simd`.
+    /// SIMD backend policy: `Auto` measures every supported backend
+    /// and serves on the winner; `Portable`/`Avx2`/`Avx512` force —
+    /// identical semantics to training's `cluster.simd`, including the
+    /// no-silent-fallback refusal of an unsupported forced level.
     pub simd: SimdKind,
     /// Per-read timeout on an open connection; bounds how long a
     /// silent client can hold the (serial) accept loop.
@@ -76,6 +83,10 @@ impl ServeOptions {
 pub struct Server {
     model: Model,
     level: SimdLevel,
+    /// The measured selection report when the instance was bound with
+    /// `SimdKind::Auto`; `None` under a forced level (forcing obeys,
+    /// it never measures).
+    autotune: Option<&'static crate::simd::autotune::AutotuneReport>,
     stats: ServeStats,
     listener: UnixListener,
     socket_path: PathBuf,
@@ -86,11 +97,17 @@ pub struct Server {
 
 impl Server {
     /// Load the model, resolve the SIMD backend (once — recorded for
-    /// the lifetime of the instance), and bind the socket.
+    /// the lifetime of the instance; `Auto` = measured autotune), and
+    /// bind the socket.
     pub fn bind(opts: &ServeOptions) -> Result<Server> {
         let model = Model::load(&opts.model_path)
             .with_context(|| format!("loading model {}", opts.model_path.display()))?;
-        let level = simd::resolve(opts.simd);
+        let (level, autotune) = if opts.simd == SimdKind::Auto {
+            let report = crate::simd::autotune::auto_report();
+            (report.chosen, Some(report))
+        } else {
+            (simd::resolve(opts.simd), None)
+        };
         if opts.socket_path.exists() {
             std::fs::remove_file(&opts.socket_path)
                 .with_context(|| format!("removing stale socket {}", opts.socket_path.display()))?;
@@ -100,6 +117,7 @@ impl Server {
         Ok(Server {
             model,
             level,
+            autotune,
             stats: ServeStats::new(level.name()),
             listener,
             socket_path: opts.socket_path.clone(),
@@ -116,6 +134,14 @@ impl Server {
     /// The backend every batch on this instance runs on.
     pub fn backend(&self) -> &'static str {
         self.stats.backend
+    }
+
+    /// The measured selection report, when this instance was bound
+    /// with `--simd auto` (`None` under a forced level). `chosen`
+    /// always equals [`Server::backend`]'s level; the per-backend
+    /// throughputs are what the CLI logs at startup.
+    pub fn autotune_report(&self) -> Option<&crate::simd::autotune::AutotuneReport> {
+        self.autotune
     }
 
     /// Feature dimension of the currently served model.

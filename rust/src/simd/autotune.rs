@@ -1,0 +1,401 @@
+//! Measured `--simd auto` — the setup-time micro-autotune.
+//!
+//! PR 5 resolved `Auto` by CPU feature flags: widest detected backend
+//! wins. Flags are a proxy, and a wrong one on real silicon — 512-bit
+//! gathers/scatters on some parts downclock or split into µops such
+//! that AVX2 wins despite avx512f being present, and on narrow
+//! workloads the portable autovec loop can beat both. This module
+//! replaces the proxy with the measurement itself: time one pass of
+//! the representative sweep pipeline per supported backend for a few
+//! milliseconds each and keep the observed winner.
+//!
+//! Three layers, separated so determinism is testable without a clock:
+//!
+//! * [`measure`] — wall-clock harness: reps of a caller-supplied
+//!   workload per level under a budget, yielding units/sec.
+//! * [`report_from`] — the **pure** winner rule: highest measured
+//!   throughput, ties to the wider level, nothing measured → the
+//!   widest supported level (PR 5's flag order). Same sample ⇒ same
+//!   winner, pinned by test; the wall clock only enters through the
+//!   sample.
+//! * [`auto_report`] / [`auto_report_with`] — the process-wide memo.
+//!   The **first** `Auto` resolution measures (the training setup path
+//!   injects a probe over the run's real packed blocks; everyone else
+//!   gets the synthetic [`ProbeWorkload`]); every later resolution —
+//!   cache fingerprint, serve, API predict — reuses the same winner.
+//!   This is the fingerprint-consistency contract: within a process
+//!   `resolve(Auto)` is a constant. Across *processes* of one run the
+//!   supervisor pins the winner into the config it ships
+//!   (`SimdLevel::as_kind`), so workers never re-measure; across
+//!   *runs*, a drifted winner changes the checkpoint/cache fingerprint
+//!   and is conservatively refused — exactly how a hardware change is
+//!   treated.
+//!
+//! No wall-clock reading is ever part of a fingerprint: the run
+//! fingerprint hashes the resolved level name only. `BENCH_autotune.
+//! json` (emitted by `benches/bench_updates.rs` via the shared bench
+//! runner) records the same per-backend throughputs for the cross-PR
+//! trajectory.
+
+use super::backend::SimdBackend;
+#[cfg(target_arch = "x86_64")]
+use super::backend::{Avx2, Avx512};
+use super::{supported_levels, Portable, SimdLevel};
+use crate::losses::kernel::LANES2;
+use crate::partition::omega::LANES;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Per-level budget for the default probe: long enough to amortize
+/// gather warm-up, short enough that three backends stay ~10 ms of
+/// setup.
+const PROBE_BUDGET: Duration = Duration::from_millis(3);
+/// Floor so a coarse clock can't decide a winner on one noisy rep.
+const MIN_REPS: u32 = 3;
+/// Ceiling so a pathologically fast clock/workload can't spin.
+const MAX_REPS: u32 = 10_000;
+
+/// One backend's measured throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub level: SimdLevel,
+    /// Workload units (processed entries) per second.
+    pub units_per_sec: f64,
+    /// Timed repetitions behind the estimate (excludes the warm-up).
+    pub reps: u32,
+}
+
+/// The autotune's outcome: the winner plus everything it was judged
+/// against — recorded on `SweepPlan` / the serve stack and surfaced in
+/// `BENCH_autotune.json`.
+#[derive(Clone, Debug)]
+pub struct AutotuneReport {
+    pub chosen: SimdLevel,
+    pub measured: Vec<Measurement>,
+}
+
+impl AutotuneReport {
+    /// The recorded throughput for `level`, if it was measured.
+    pub fn units_per_sec(&self, level: SimdLevel) -> Option<f64> {
+        self.measured.iter().find(|m| m.level == level).map(|m| m.units_per_sec)
+    }
+}
+
+/// Wall-clock measurement harness: per level, one warm-up rep (page-in,
+/// branch/µcode warm), then timed reps until `budget_per_level` (at
+/// least [`MIN_REPS`]). `run` returns the units it processed; levels
+/// it cannot handle should process 0 (they then never win — see
+/// [`report_from`]).
+pub fn measure<F>(levels: &[SimdLevel], budget_per_level: Duration, mut run: F) -> Vec<Measurement>
+where
+    F: FnMut(SimdLevel) -> usize,
+{
+    let mut out = Vec::with_capacity(levels.len());
+    for &level in levels {
+        let _ = run(level);
+        let start = Instant::now();
+        let mut units = 0u64;
+        let mut reps = 0u32;
+        loop {
+            units += run(level) as u64;
+            reps += 1;
+            if (reps >= MIN_REPS && start.elapsed() >= budget_per_level) || reps >= MAX_REPS {
+                break;
+            }
+        }
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        out.push(Measurement { level, units_per_sec: units as f64 / secs, reps });
+    }
+    out
+}
+
+/// The pure winner rule — deterministic in its inputs (no clock):
+///
+/// * highest `units_per_sec` among measurements of *supported* levels
+///   wins (a measurement for a level outside `levels` is discarded, so
+///   an injected probe can never select a backend this CPU lacks);
+/// * exact ties go to the wider level (the order of `levels`);
+/// * nothing (valid) measured — e.g. no lane-eligible work to time —
+///   falls back to the widest supported level, PR 5's flag behavior.
+pub fn report_from(levels: &[SimdLevel], measured: Vec<Measurement>) -> AutotuneReport {
+    fn rank(l: SimdLevel) -> u8 {
+        match l {
+            SimdLevel::Portable => 0,
+            SimdLevel::Avx2 => 1,
+            SimdLevel::Avx512 => 2,
+        }
+    }
+    let mut best: Option<(f64, SimdLevel)> = None;
+    for m in measured.iter().filter(|m| levels.contains(&m.level)) {
+        let better = match best {
+            None => true,
+            Some((ups, lvl)) => {
+                m.units_per_sec > ups || (m.units_per_sec == ups && rank(m.level) > rank(lvl))
+            }
+        };
+        if better {
+            best = Some((m.units_per_sec, m.level));
+        }
+    }
+    let chosen = match best {
+        Some((_, lvl)) => lvl,
+        None => *levels.last().unwrap_or(&SimdLevel::Portable),
+    };
+    AutotuneReport { chosen, measured }
+}
+
+static AUTO: OnceLock<AutotuneReport> = OnceLock::new();
+
+/// The process-wide measured `Auto` winner, probing the synthetic
+/// [`ProbeWorkload`] if no earlier resolution has measured yet.
+pub fn auto_report() -> &'static AutotuneReport {
+    auto_report_with(|levels| {
+        let mut wk = ProbeWorkload::standard();
+        measure(levels, PROBE_BUDGET, |level| wk.run(level))
+    })
+}
+
+/// The process-wide measured `Auto` winner, with the caller's probe
+/// supplying the sample if (and only if) this is the first `Auto`
+/// resolution in the process. The training setup path uses this to
+/// measure on the run's **real packed blocks**; once memoized, every
+/// probe is ignored and the recorded report is returned as-is.
+///
+/// Single-backend hosts short-circuit without measuring: there is
+/// nothing to choose between.
+pub fn auto_report_with<F>(probe: F) -> &'static AutotuneReport
+where
+    F: FnOnce(&[SimdLevel]) -> Vec<Measurement>,
+{
+    AUTO.get_or_init(|| {
+        let levels = supported_levels();
+        if levels.len() == 1 {
+            return AutotuneReport { chosen: SimdLevel::Portable, measured: Vec::new() };
+        }
+        report_from(&levels, probe(&levels))
+    })
+}
+
+/// Deterministic synthetic stand-in for a run's packed blocks: one
+/// long lane-eligible row group (4096 entries of full pairs + one
+/// trailing 8-wide chunk, so both the paired path and the epilogue are
+/// timed) over a 512-column stripe. Column ids stride by 7, so every
+/// 16-entry window holds distinct ids (the row-group invariant the
+/// scatter relies on) while still exercising gather locality.
+///
+/// Used when `Auto` must resolve without a run in hand (serve, API
+/// predict, cache fingerprints) and by the bench harness for
+/// `BENCH_autotune.json`.
+pub struct ProbeWorkload {
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+    w: Vec<f32>,
+    acc: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+impl ProbeWorkload {
+    pub fn standard() -> ProbeWorkload {
+        const N_COLS: usize = 512;
+        const NNZ: usize = 4096 + LANES;
+        ProbeWorkload {
+            cols: (0..NNZ).map(|i| ((i * 7 + 3) % N_COLS) as u32).collect(),
+            vals: (0..NNZ).map(|i| 0.25 + 0.001 * (i % 97) as f32).collect(),
+            w: (0..N_COLS).map(|j| 0.01 * (j % 13) as f32 - 0.05).collect(),
+            acc: vec![0.5; N_COLS],
+            inv: (0..N_COLS).map(|j| 1.0 / (1.0 + (j % 31) as f32)).collect(),
+        }
+    }
+
+    /// One pass of the representative sweep pipeline (gather → ∇φ(L2)
+    /// → gradient FMA → AdaGrad η → clamp → writeback) on `level`;
+    /// returns the entries processed. The state evolves across reps
+    /// (clamped, so it stays finite) — throughput, not values, is the
+    /// output.
+    pub fn run(&mut self, level: SimdLevel) -> usize {
+        match level {
+            SimdLevel::Portable => probe_pass::<Portable>(self),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => {
+                assert!(super::avx2_supported(), "probe on unsupported backend");
+                // SAFETY: avx2+fma verified on the line above.
+                unsafe { probe_pass_avx2(self) }
+            }
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx512 => {
+                assert!(super::avx512_supported(), "probe on unsupported backend");
+                // SAFETY: avx512f+avx2+fma verified on the line above.
+                unsafe { probe_pass_avx512(self) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdLevel::Avx2 | SimdLevel::Avx512 => {
+                unreachable!("supported_levels never yields {level:?} off x86_64")
+            }
+        }
+    }
+}
+
+/// The generic probe body — the same chunk pipeline shape as
+/// `coordinator::updates::sweep_lanes` (paired loop for `PAIRED`
+/// backends, 8-wide remainder), inlined into the per-backend
+/// `#[target_feature]` wrappers below so the measured code has the
+/// same fused codegen as the real whole-sweep entry points.
+#[inline(always)]
+fn probe_pass<B: SimdBackend>(wk: &mut ProbeWorkload) -> usize {
+    let n = wk.cols.len();
+    let mut base = 0usize;
+    if B::PAIRED {
+        while base + LANES2 <= n {
+            // SAFETY: base + LANES2 <= cols.len() == vals.len(); every
+            // column id < 512 == w/acc/inv lengths by construction;
+            // ids within a 16-window are distinct (stride-7 pattern).
+            let (lj, wv, xv, iv) = unsafe { B::gather_chunk2(&wk.cols, &wk.vals, base, &wk.w, &wk.inv) };
+            let rv = B::l2_grad_lane2(&wv);
+            let gw = B::w_grad2(0.01, &rv, &iv, &xv, &xv);
+            // SAFETY: ids from gather_chunk2, all < acc.len().
+            let mut accv = unsafe { B::gather_idx2(&wk.acc, &lj) };
+            let etav = B::adagrad_eta_lane2(0.1, 1e-6, &mut accv, &gw);
+            let wn = B::w_step_clamp2(&wv, &etav, &gw, 10.0);
+            // SAFETY: ids validated above and distinct within the pair.
+            unsafe {
+                B::scatter2(&mut wk.w, &lj, &wn);
+                B::scatter2(&mut wk.acc, &lj, &accv);
+            }
+            base += LANES2;
+        }
+    }
+    while base + LANES <= n {
+        // SAFETY: base + LANES <= cols.len() == vals.len(); ids < 512.
+        let (lj, wv, xv, iv) = unsafe { B::gather_chunk(&wk.cols, &wk.vals, base, &wk.w, &wk.inv) };
+        let rv = B::l2_grad_lane(&wv);
+        let gw = B::w_grad(0.01, &rv, &iv, &xv, &xv);
+        // SAFETY: ids from gather_chunk, all < acc.len().
+        let mut accv = unsafe { B::gather_idx(&wk.acc, &lj) };
+        let etav = B::adagrad_eta_lane(0.1, 1e-6, &mut accv, &gw);
+        let wn = B::w_step_clamp(&wv, &etav, &gw, 10.0);
+        for k in 0..LANES {
+            wk.w[lj[k]] = wn[k];
+            wk.acc[lj[k]] = accv[k];
+        }
+        base += LANES;
+    }
+    base
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn probe_pass_avx2(wk: &mut ProbeWorkload) -> usize {
+    probe_pass::<Avx2>(wk)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+unsafe fn probe_pass_avx512(wk: &mut ProbeWorkload) -> usize {
+    probe_pass::<Avx512>(wk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(level: SimdLevel, ups: f64) -> Measurement {
+        Measurement { level, units_per_sec: ups, reps: 5 }
+    }
+
+    const ALL: [SimdLevel; 3] = [SimdLevel::Portable, SimdLevel::Avx2, SimdLevel::Avx512];
+
+    /// Same sample ⇒ same recorded winner — the determinism contract.
+    /// The wall clock only enters through the sample; the rule itself
+    /// is pure.
+    #[test]
+    fn winner_is_deterministic_for_a_fixed_sample() {
+        let sample = vec![
+            m(SimdLevel::Portable, 1.0e9),
+            m(SimdLevel::Avx2, 2.5e9),
+            m(SimdLevel::Avx512, 2.1e9),
+        ];
+        let a = report_from(&ALL, sample.clone());
+        let b = report_from(&ALL, sample);
+        assert_eq!(a.chosen, b.chosen);
+        // And the measured winner is the measured winner — avx2 beat
+        // avx512 in this sample, so flags must not override it.
+        assert_eq!(a.chosen, SimdLevel::Avx2);
+        assert_eq!(a.units_per_sec(SimdLevel::Avx512), Some(2.1e9));
+    }
+
+    #[test]
+    fn ties_prefer_the_wider_level() {
+        let report = report_from(
+            &ALL,
+            vec![m(SimdLevel::Portable, 2.0e9), m(SimdLevel::Avx2, 2.0e9)],
+        );
+        assert_eq!(report.chosen, SimdLevel::Avx2);
+        // ...regardless of measurement order.
+        let report = report_from(
+            &ALL,
+            vec![m(SimdLevel::Avx2, 2.0e9), m(SimdLevel::Portable, 2.0e9)],
+        );
+        assert_eq!(report.chosen, SimdLevel::Avx2);
+    }
+
+    #[test]
+    fn empty_sample_falls_back_to_widest_supported() {
+        // No lane-eligible work to time: keep PR 5's flag order.
+        assert_eq!(report_from(&ALL, Vec::new()).chosen, SimdLevel::Avx512);
+        assert_eq!(
+            report_from(&[SimdLevel::Portable], Vec::new()).chosen,
+            SimdLevel::Portable
+        );
+    }
+
+    #[test]
+    fn unsupported_levels_are_never_chosen() {
+        // A measurement for a level this host lacks (e.g. injected by
+        // a buggy probe) must be discarded, not executed.
+        let report = report_from(
+            &[SimdLevel::Portable],
+            vec![m(SimdLevel::Avx512, 9.9e9), m(SimdLevel::Portable, 1.0e9)],
+        );
+        assert_eq!(report.chosen, SimdLevel::Portable);
+    }
+
+    #[test]
+    fn measure_harness_times_every_level() {
+        let mut calls = 0u32;
+        let sample = measure(&[SimdLevel::Portable], Duration::from_micros(200), |_| {
+            calls += 1;
+            1000
+        });
+        assert_eq!(sample.len(), 1);
+        assert!(sample[0].reps >= 3, "at least MIN_REPS timed reps");
+        assert!(calls > sample[0].reps, "plus one warm-up rep");
+        assert!(sample[0].units_per_sec > 0.0);
+    }
+
+    #[test]
+    fn probe_workload_runs_on_every_supported_level() {
+        let mut wk = ProbeWorkload::standard();
+        for level in supported_levels() {
+            let units = wk.run(level);
+            assert_eq!(units, 4096 + crate::partition::omega::LANES, "level {level:?}");
+            for &v in &wk.w {
+                assert!(v.is_finite(), "probe state must stay finite on {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_report_is_memoized_process_wide() {
+        let a = auto_report();
+        let b = auto_report_with(|_| panic!("second probe must never run"));
+        assert!(std::ptr::eq(a, b), "one report per process");
+        assert!(supported_levels().contains(&a.chosen));
+        // Whenever more than one backend exists, each was measured.
+        let levels = supported_levels();
+        if levels.len() > 1 {
+            for level in levels {
+                assert!(a.units_per_sec(level).is_some(), "missing measurement for {level:?}");
+            }
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! This trait factors every lane-granular operation of the sweep —
 //! chunk gather, ∇φ, gradient FMA, AdaGrad accumulate/√/divide, box
 //! clamp, the affine-α coefficient lanes — behind one monomorphization
-//! parameter, with two implementations:
+//! parameter, with three implementations:
 //!
 //! * [`Portable`] — the PR 2/3 per-lane loops, **bit-identical by
 //!   construction** to the pre-backend kernels (it is the same code,
@@ -23,12 +23,22 @@
 //!   lanes stays explicit per-lane stores in the shared kernel code
 //!   (AVX2 has no scatter instruction; only the first `len` lanes of a
 //!   chunk may be written).
+//! * [`Avx512`] (`x86_64` only) — **chunk pairing** over the unchanged
+//!   8-lane layout: a [`SimdBackend::PAIRED`] backend makes the sweep
+//!   fuse two *adjacent* chunks per step, so full pairs run one
+//!   512-bit `_mm512_i32gather_ps` / FMA / native
+//!   `_mm512_i32scatter_ps` pipeline per 16 entries, and the odd
+//!   trailing chunk (plus short remainders with sentinels) takes the
+//!   8-wide 256-bit epilogue shared with [`Avx2`]. No relayout: the
+//!   packed block format, sentinels, and `LANES = 8` are untouched.
 //!
 //! Which backend runs is decided **once per run** by
-//! `coordinator::plan::SweepPlan` from runtime CPU-feature detection
-//! ([`super::resolve`]) — kernels monomorphize over `B: SimdBackend`,
-//! so there is zero per-chunk (or even per-sweep) dispatch, and
-//! engines never touch feature detection (`scripts/ci.sh` greps them).
+//! `coordinator::plan::SweepPlan` — forced levels via runtime
+//! CPU-feature validation, `auto` via the measured micro-autotune
+//! ([`super::resolve`] / [`super::autotune`]) — kernels monomorphize
+//! over `B: SimdBackend`, so there is zero per-chunk (or even
+//! per-sweep) dispatch, and engines never touch feature detection
+//! (`scripts/ci.sh` greps them).
 //!
 //! ## Float-summation-order caveat, per backend
 //!
@@ -38,21 +48,65 @@
 //! path rounds twice), so it is *tolerance-equivalent* to the portable
 //! backend — ≤1e-5 relative per sweep against the COO oracle,
 //! property-tested in `tests/lane_kernel.rs`/`tests/alpha_lane.rs` —
-//! not bit-identical across backends. Threaded ≡ replay bit-identity
-//! holds *within* a backend (both executions run the same plan).
+//! not bit-identical across backends. The same caveat extends to
+//! 512-bit: [`Avx512`]'s pair ops are the elementwise IEEE operations
+//! of the 256-bit pipeline at double width (a 512-bit FMA rounds each
+//! lane exactly like a 256-bit FMA), so pairing itself moves no bits
+//! relative to two 8-wide AVX steps — the cross-backend drift is still
+//! the FMA contraction, bounded by the same ≤1e-5 suites. Threaded ≡
+//! replay bit-identity holds *within* a backend (both executions run
+//! the same plan). The predict fold is the exception on every backend:
+//! f64 storage-order by contract, bit-identical across all three.
 //!
 //! # Safety
 //!
 //! This is an `unsafe trait`: an implementation asserts that its
 //! methods are sound to execute on the CPU the process is running on.
-//! [`Portable`] is unconditionally sound; [`Avx2`] requires AVX2+FMA,
-//! which every production path guarantees by construction — the only
-//! producers of an `Avx2`-monomorphized call are
-//! `SweepPlan`/[`super::resolve`] (behind `is_x86_feature_detected!`)
-//! and tests that perform the same guard.
+//! [`Portable`] is unconditionally sound; [`Avx2`] requires AVX2+FMA
+//! and [`Avx512`] additionally AVX-512F, which every production path
+//! guarantees by construction — the only producers of an
+//! intrinsics-backed monomorphized call are `SweepPlan`/
+//! [`super::resolve`] (behind `is_x86_feature_detected!`) and tests
+//! that perform the same guard.
 
-use crate::losses::kernel::Lane;
+use crate::losses::kernel::{Lane, Lane2, LANES2};
 use crate::partition::omega::LANES;
+
+/// Concatenate two adjacent lane chunks into one paired chunk.
+#[inline(always)]
+pub fn join_lanes(lo: &Lane, hi: &Lane) -> Lane2 {
+    let mut out: Lane2 = [0.0; LANES2];
+    out[..LANES].copy_from_slice(lo);
+    out[LANES..].copy_from_slice(hi);
+    out
+}
+
+/// Split a paired chunk back into its two adjacent lane chunks.
+#[inline(always)]
+pub fn split_lanes(v: &Lane2) -> (Lane, Lane) {
+    let (mut lo, mut hi): (Lane, Lane) = ([0.0; LANES], [0.0; LANES]);
+    lo.copy_from_slice(&v[..LANES]);
+    hi.copy_from_slice(&v[LANES..]);
+    (lo, hi)
+}
+
+/// Concatenate two chunks' column-id arrays.
+#[inline(always)]
+pub fn join_idx(lo: &[usize; LANES], hi: &[usize; LANES]) -> [usize; LANES2] {
+    let mut out = [0usize; LANES2];
+    out[..LANES].copy_from_slice(lo);
+    out[LANES..].copy_from_slice(hi);
+    out
+}
+
+/// Split a paired chunk's column ids back into its two halves.
+#[inline(always)]
+pub fn split_idx(v: &[usize; LANES2]) -> ([usize; LANES], [usize; LANES]) {
+    let (mut lo, mut hi) = ([0usize; LANES], [0usize; LANES]);
+    lo.copy_from_slice(&v[..LANES]);
+    hi.copy_from_slice(&v[LANES..]);
+    (lo, hi)
+}
 
 /// Lane-granular kernel operations, monomorphized into the sweeps.
 ///
@@ -68,6 +122,15 @@ use crate::partition::omega::LANES;
 pub unsafe trait SimdBackend: Copy + Send + Sync + 'static {
     /// Backend tag recorded by `SweepPlan` and the benches.
     const NAME: &'static str;
+
+    /// Whether the sweeps should fuse two adjacent chunks per step
+    /// (16-wide operation over the unchanged 8-lane layout). `false`
+    /// const-folds the kernels' pair loop away entirely, so non-paired
+    /// backends keep their pinned bit-exact code paths; [`Avx512`]
+    /// overrides it. Pair steps run only on **full** pairs (16 real
+    /// entries — sentinels never reach a pair op); the remainder takes
+    /// the ordinary 8-wide chunk path as an epilogue.
+    const PAIRED: bool = false;
 
     /// Full-width gather of one LANES chunk at physical `base`:
     /// (column ids, w values, x/m values, 1/|Ω̄_j|).
@@ -135,6 +198,154 @@ pub unsafe trait SimdBackend: Copy + Send + Sync + 'static {
         w: &[f32],
         acc: &mut f64,
     );
+
+    // -----------------------------------------------------------------
+    // Paired-chunk ops (two adjacent chunks fused into one step).
+    //
+    // The defaults compose the 8-wide ops half-by-half — exactly what a
+    // non-paired backend computes for the same entries — so every
+    // backend gets a correct pair surface for free and `Avx512`
+    // replaces each with one 512-bit op. Only `PAIRED` backends are
+    // ever driven through these by the sweeps.
+    // -----------------------------------------------------------------
+
+    /// Paired gather: the chunks at `base` and `base + LANES` in one
+    /// step.
+    ///
+    /// # Safety
+    /// As [`SimdBackend::gather_chunk`], with `base + 2·LANES` within
+    /// `cols`/`vals`.
+    #[inline(always)]
+    unsafe fn gather_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES2], Lane2, Lane2, Lane2) {
+        // SAFETY: forwarded contract — both chunk bases are in bounds
+        // because base + 2·LANES is.
+        let (lj0, wv0, xv0, iv0) = unsafe { Self::gather_chunk(cols, vals, base, w, inv) };
+        // SAFETY: as above.
+        let (lj1, wv1, xv1, iv1) = unsafe { Self::gather_chunk(cols, vals, base + LANES, w, inv) };
+        (
+            join_idx(&lj0, &lj1),
+            join_lanes(&wv0, &wv1),
+            join_lanes(&xv0, &xv1),
+            join_lanes(&iv0, &iv1),
+        )
+    }
+
+    /// Gather 16 f32 by the paired chunk's column ids (the AdaGrad
+    /// w-accumulator load).
+    ///
+    /// # Safety
+    /// Every `lj[k] < src.len()` — the validated ids returned by
+    /// [`SimdBackend::gather_chunk2`].
+    #[inline(always)]
+    unsafe fn gather_idx2(src: &[f32], lj: &[usize; LANES2]) -> Lane2 {
+        let (lo, hi) = split_idx(lj);
+        // SAFETY: forwarded contract.
+        let (a, b) = unsafe { (Self::gather_idx(src, &lo), Self::gather_idx(src, &hi)) };
+        join_lanes(&a, &b)
+    }
+
+    /// Paired [`SimdBackend::w_grad`].
+    #[inline(always)]
+    fn w_grad2(lam: f32, rv: &Lane2, iv: &Lane2, av: &Lane2, xv: &Lane2) -> Lane2 {
+        let (r0, r1) = split_lanes(rv);
+        let (i0, i1) = split_lanes(iv);
+        let (a0, a1) = split_lanes(av);
+        let (x0, x1) = split_lanes(xv);
+        join_lanes(&Self::w_grad(lam, &r0, &i0, &a0, &x0), &Self::w_grad(lam, &r1, &i1, &a1, &x1))
+    }
+
+    /// Paired [`SimdBackend::w_step_clamp`].
+    #[inline(always)]
+    fn w_step_clamp2(wv: &Lane2, etav: &Lane2, gw: &Lane2, b: f32) -> Lane2 {
+        let (w0, w1) = split_lanes(wv);
+        let (e0, e1) = split_lanes(etav);
+        let (g0, g1) = split_lanes(gw);
+        join_lanes(&Self::w_step_clamp(&w0, &e0, &g0, b), &Self::w_step_clamp(&w1, &e1, &g1, b))
+    }
+
+    /// Paired [`SimdBackend::affine_coeffs`].
+    #[inline(always)]
+    fn affine_coeffs2(bias: f32, wv: &Lane2, xv: &Lane2) -> Lane2 {
+        let (w0, w1) = split_lanes(wv);
+        let (x0, x1) = split_lanes(xv);
+        join_lanes(&Self::affine_coeffs(bias, &w0, &x0), &Self::affine_coeffs(bias, &w1, &x1))
+    }
+
+    /// Paired [`SimdBackend::l1_grad_lane`].
+    #[inline(always)]
+    fn l1_grad_lane2(w: &Lane2) -> Lane2 {
+        let (lo, hi) = split_lanes(w);
+        join_lanes(&Self::l1_grad_lane(&lo), &Self::l1_grad_lane(&hi))
+    }
+
+    /// Paired [`SimdBackend::l2_grad_lane`].
+    #[inline(always)]
+    fn l2_grad_lane2(w: &Lane2) -> Lane2 {
+        let (lo, hi) = split_lanes(w);
+        join_lanes(&Self::l2_grad_lane(&lo), &Self::l2_grad_lane(&hi))
+    }
+
+    /// Paired [`SimdBackend::adagrad_eta_lane`].
+    #[inline(always)]
+    fn adagrad_eta_lane2(e0: f32, eps: f32, acc: &mut Lane2, g: &Lane2) -> Lane2 {
+        let (mut a0, mut a1) = split_lanes(acc);
+        let (g0, g1) = split_lanes(g);
+        let out = join_lanes(
+            &Self::adagrad_eta_lane(e0, eps, &mut a0, &g0),
+            &Self::adagrad_eta_lane(e0, eps, &mut a1, &g1),
+        );
+        *acc = join_lanes(&a0, &a1);
+        out
+    }
+
+    /// Scatter the paired chunk's 16 values back through its column
+    /// ids — the w-side writeback. Pair steps run only on full pairs
+    /// of one row group, and a row group is one CSR row, so the 16
+    /// column ids are distinct and the scatter is conflict-free (the
+    /// same property the 8-wide per-lane store loop relies on).
+    ///
+    /// # Safety
+    /// Every `lj[k] < dst.len()` — the validated ids returned by
+    /// [`SimdBackend::gather_chunk2`].
+    #[inline(always)]
+    unsafe fn scatter2(dst: &mut [f32], lj: &[usize; LANES2], v: &Lane2) {
+        for k in 0..LANES2 {
+            debug_assert!(lj[k] < dst.len());
+            // SAFETY: caller guarantees lj[k] < dst.len().
+            unsafe { *dst.get_unchecked_mut(lj[k]) = v[k] };
+        }
+    }
+
+    /// Paired predict fold over a **full** pair (16 real entries — the
+    /// caller's pair loop never reaches sentinels, so there is no `n`
+    /// parameter). The fold stays serial f64 in storage order, so this
+    /// is bit-identical to two [`SimdBackend::predict_fold_chunk`]
+    /// calls on every backend; a paired backend's win is the single
+    /// 16-wide gather.
+    ///
+    /// # Safety
+    /// As [`SimdBackend::predict_fold_chunk`], with `base + 2·LANES`
+    /// within `cols`/`vals` and all 16 entries real.
+    #[inline(always)]
+    unsafe fn predict_fold_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        // SAFETY: forwarded contract (both chunks full and in bounds).
+        unsafe {
+            Self::predict_fold_chunk(cols, vals, base, LANES, w, acc);
+            Self::predict_fold_chunk(cols, vals, base + LANES, LANES, w, acc);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -550,6 +761,384 @@ mod avx2 {
     }
 }
 
+// ---------------------------------------------------------------------
+// AVX-512 backend (x86_64): paired 16-wide chunks, 8-wide epilogue
+// ---------------------------------------------------------------------
+
+/// AVX-512F backend: `PAIRED` chunk fusion over the unchanged
+/// lane-major layout. Full pairs of adjacent chunks run one 512-bit
+/// gather / FMA / native-scatter pipeline per 16 entries; the odd
+/// trailing chunk and short remainders (the only places sentinels can
+/// appear) run the 8-wide 256-bit pipeline shared with [`Avx2`], so
+/// sentinels keep AVX2's speculative in-range-gather/never-store
+/// treatment and no 512-bit op ever sees padding.
+///
+/// Requires avx512f **and** avx2+fma (the epilogue), detected as a
+/// unit by `super::avx512_supported`. Besides width, the native win
+/// over AVX2 is `_mm512_i32scatter_ps`: the w-side writeback that AVX2
+/// performs as per-lane scalar stores becomes one instruction per 16
+/// weights.
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Avx512;
+
+// SAFETY: the 8-wide ops delegate to the avx2 free functions and the
+// paired ops to `#[target_feature(enable = "avx512f", ...)]` functions;
+// the trait contract (module docs) makes the caller guarantee
+// avx512f+avx2+fma are present (`super::avx512_supported`) before an
+// Avx512 monomorphization executes.
+#[cfg(target_arch = "x86_64")]
+unsafe impl SimdBackend for Avx512 {
+    const NAME: &'static str = "avx512";
+    const PAIRED: bool = true;
+
+    #[inline(always)]
+    unsafe fn gather_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES], Lane, Lane, Lane) {
+        // SAFETY: bounds per the trait contract; avx2+fma are part of
+        // this backend's feature set (epilogue runs the 256-bit ops).
+        unsafe { avx2::gather_chunk(cols, vals, base, w, inv) }
+    }
+
+    #[inline(always)]
+    unsafe fn gather_idx(src: &[f32], lj: &[usize; LANES]) -> Lane {
+        // SAFETY: indices per the trait contract; features as above.
+        unsafe { avx2::gather_idx(src, lj) }
+    }
+
+    #[inline(always)]
+    fn w_grad(lam: f32, rv: &Lane, iv: &Lane, av: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: pure lane arithmetic on stack arrays; features per
+        // the backend-selection contract.
+        unsafe { avx2::w_grad(lam, rv, iv, av, xv) }
+    }
+
+    #[inline(always)]
+    fn w_step_clamp(wv: &Lane, etav: &Lane, gw: &Lane, b: f32) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::w_step_clamp(wv, etav, gw, b) }
+    }
+
+    #[inline(always)]
+    fn affine_coeffs(bias: f32, wv: &Lane, xv: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::affine_coeffs(bias, wv, xv) }
+    }
+
+    #[inline(always)]
+    fn l1_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::l1_grad_lane(w) }
+    }
+
+    #[inline(always)]
+    fn l2_grad_lane(w: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::l2_grad_lane(w) }
+    }
+
+    #[inline(always)]
+    fn adagrad_eta_lane(e0: f32, eps: f32, acc: &mut Lane, g: &Lane) -> Lane {
+        // SAFETY: as in `w_grad`.
+        unsafe { avx2::adagrad_eta_lane(e0, eps, acc, g) }
+    }
+
+    #[inline(always)]
+    unsafe fn predict_fold_chunk(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        n: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        // SAFETY: bounds per the trait contract; features as above.
+        unsafe { avx2::predict_fold_chunk(cols, vals, base, n, w, acc) }
+    }
+
+    #[inline(always)]
+    unsafe fn gather_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES2], Lane2, Lane2, Lane2) {
+        // SAFETY: bounds per the trait contract; avx512f present per
+        // the backend-selection contract.
+        unsafe { avx512::gather_chunk2(cols, vals, base, w, inv) }
+    }
+
+    #[inline(always)]
+    unsafe fn gather_idx2(src: &[f32], lj: &[usize; LANES2]) -> Lane2 {
+        // SAFETY: indices per the trait contract; features as above.
+        unsafe { avx512::gather_idx2(src, lj) }
+    }
+
+    #[inline(always)]
+    fn w_grad2(lam: f32, rv: &Lane2, iv: &Lane2, av: &Lane2, xv: &Lane2) -> Lane2 {
+        // SAFETY: pure lane arithmetic on stack arrays; features per
+        // the backend-selection contract.
+        unsafe { avx512::w_grad2(lam, rv, iv, av, xv) }
+    }
+
+    #[inline(always)]
+    fn w_step_clamp2(wv: &Lane2, etav: &Lane2, gw: &Lane2, b: f32) -> Lane2 {
+        // SAFETY: as in `w_grad2`.
+        unsafe { avx512::w_step_clamp2(wv, etav, gw, b) }
+    }
+
+    #[inline(always)]
+    fn affine_coeffs2(bias: f32, wv: &Lane2, xv: &Lane2) -> Lane2 {
+        // SAFETY: as in `w_grad2`.
+        unsafe { avx512::affine_coeffs2(bias, wv, xv) }
+    }
+
+    #[inline(always)]
+    fn l1_grad_lane2(w: &Lane2) -> Lane2 {
+        // SAFETY: as in `w_grad2`.
+        unsafe { avx512::l1_grad_lane2(w) }
+    }
+
+    #[inline(always)]
+    fn l2_grad_lane2(w: &Lane2) -> Lane2 {
+        // SAFETY: as in `w_grad2`.
+        unsafe { avx512::l2_grad_lane2(w) }
+    }
+
+    #[inline(always)]
+    fn adagrad_eta_lane2(e0: f32, eps: f32, acc: &mut Lane2, g: &Lane2) -> Lane2 {
+        // SAFETY: as in `w_grad2`.
+        unsafe { avx512::adagrad_eta_lane2(e0, eps, acc, g) }
+    }
+
+    #[inline(always)]
+    unsafe fn scatter2(dst: &mut [f32], lj: &[usize; LANES2], v: &Lane2) {
+        // SAFETY: indices per the trait contract (distinct, in
+        // bounds); features as above.
+        unsafe { avx512::scatter2(dst, lj, v) }
+    }
+
+    #[inline(always)]
+    unsafe fn predict_fold_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        // SAFETY: bounds per the trait contract; features as above.
+        unsafe { avx512::predict_fold_chunk2(cols, vals, base, w, acc) }
+    }
+}
+
+/// The 512-bit paired-chunk bodies — same free-function pattern as
+/// [`avx2`] (`#[target_feature]` cannot decorate trait methods). The
+/// feature set also enables avx2+fma so the shared 8-wide epilogue
+/// inlines into the avx512 whole-sweep wrappers.
+///
+/// Note the AVX-512 gather/scatter operand order: `(indices, pointer)`
+/// — reversed from the AVX2 gather intrinsic — with a byte pointer and
+/// an explicit ×4 scale.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use super::{Lane2, LANES2};
+    use core::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    unsafe fn ld2(l: &Lane2) -> __m512 {
+        // SAFETY: `l` is a valid [f32; 16]; loadu has no alignment
+        // requirement.
+        unsafe { _mm512_loadu_ps(l.as_ptr()) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    unsafe fn st2(v: __m512) -> Lane2 {
+        let mut out: Lane2 = [0.0; LANES2];
+        // SAFETY: `out` is a valid 16-f32 destination; storeu has no
+        // alignment requirement.
+        unsafe { _mm512_storeu_ps(out.as_mut_ptr(), v) };
+        out
+    }
+
+    /// 16 i32 gather/scatter indices from a paired chunk's column ids.
+    #[inline]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    unsafe fn idx16(lj: &[usize; LANES2]) -> __m512i {
+        let mut ix = [0i32; LANES2];
+        for k in 0..LANES2 {
+            // Ids were validated to fit i32 with the stripe width, so
+            // the narrowing keeps them non-negative.
+            ix[k] = lj[k] as i32;
+        }
+        // SAFETY: `ix` is a valid 16-i32 source; loadu is unaligned.
+        unsafe { _mm512_loadu_epi32(ix.as_ptr()) }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gather_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        inv: &[f32],
+    ) -> ([usize; LANES2], Lane2, Lane2, Lane2) {
+        debug_assert!(base + LANES2 <= cols.len() && base + LANES2 <= vals.len());
+        // SAFETY: (whole body) caller guarantees base + 2·LANES within
+        // cols/vals and every stored column id < w.len() <= inv.len().
+        // Column ids fit i32 (checked against the stripe width by
+        // `check_packed_bounds`), so the i32 gather indices are
+        // non-negative.
+        unsafe {
+            let idx = _mm512_loadu_epi32(cols.as_ptr().add(base) as *const i32);
+            // One 16-wide hardware gather per table: two adjacent
+            // chunks' w and reciprocal values in a single instruction
+            // each.
+            let wv = _mm512_i32gather_ps::<4>(idx, w.as_ptr() as *const u8);
+            let iv = _mm512_i32gather_ps::<4>(idx, inv.as_ptr() as *const u8);
+            let xv = _mm512_loadu_ps(vals.as_ptr().add(base));
+            let mut lj = [0usize; LANES2];
+            for (k, slot) in lj.iter_mut().enumerate() {
+                *slot = *cols.get_unchecked(base + k) as usize;
+            }
+            (lj, st2(wv), st2(xv), st2(iv))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gather_idx2(src: &[f32], lj: &[usize; LANES2]) -> Lane2 {
+        debug_assert!(lj.iter().all(|&j| j < src.len()));
+        // SAFETY: caller guarantees every lj[k] < src.len(); ids fit
+        // i32 per the packing validation.
+        unsafe { st2(_mm512_i32gather_ps::<4>(idx16(lj), src.as_ptr() as *const u8)) }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn scatter2(dst: &mut [f32], lj: &[usize; LANES2], v: &Lane2) {
+        debug_assert!(lj.iter().all(|&j| j < dst.len()));
+        // SAFETY: caller guarantees every lj[k] < dst.len() and that
+        // the pair's ids are distinct (a full pair of one row group),
+        // so the native scatter writes 16 disjoint in-bounds f32 slots.
+        unsafe { _mm512_i32scatter_ps::<4>(dst.as_mut_ptr() as *mut u8, idx16(lj), ld2(v)) };
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn w_grad2(
+        lam: f32,
+        rv: &Lane2,
+        iv: &Lane2,
+        av: &Lane2,
+        xv: &Lane2,
+    ) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            // Same contraction as the 256-bit pipeline at double width:
+            // t = λ·∇φ·(1/|Ω̄_j|); gw = t − α·x with one fused rounding.
+            let t = _mm512_mul_ps(_mm512_mul_ps(_mm512_set1_ps(lam), ld2(rv)), ld2(iv));
+            st2(_mm512_fnmadd_ps(ld2(av), ld2(xv), t))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn w_step_clamp2(wv: &Lane2, etav: &Lane2, gw: &Lane2, b: f32) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wn = _mm512_fnmadd_ps(ld2(etav), ld2(gw), ld2(wv));
+            st2(_mm512_min_ps(_mm512_max_ps(wn, _mm512_set1_ps(-b)), _mm512_set1_ps(b)))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn affine_coeffs2(bias: f32, wv: &Lane2, xv: &Lane2) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe { st2(_mm512_fnmadd_ps(ld2(wv), ld2(xv), _mm512_set1_ps(bias))) }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn l1_grad_lane2(w: &Lane2) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wv = ld2(w);
+            let zero = _mm512_setzero_ps();
+            // sign(w) with 0 at the kink, via mask-selects. AVX-512F
+            // has no 512-bit float OR (that's DQ), so the two selects
+            // combine with an add — exact, because each lane is +1/−1
+            // in exactly one operand and +0.0 in the other, and
+            // x + (+0.0) preserves the bit pattern (+0.0 + +0.0 = +0.0
+            // matches the portable kink convention bitwise).
+            let pos = _mm512_maskz_mov_ps(
+                _mm512_cmp_ps_mask::<{ _CMP_GT_OQ }>(wv, zero),
+                _mm512_set1_ps(1.0),
+            );
+            let neg = _mm512_maskz_mov_ps(
+                _mm512_cmp_ps_mask::<{ _CMP_LT_OQ }>(wv, zero),
+                _mm512_set1_ps(-1.0),
+            );
+            st2(_mm512_add_ps(pos, neg))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn l2_grad_lane2(w: &Lane2) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let wv = ld2(w);
+            st2(_mm512_add_ps(wv, wv))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn adagrad_eta_lane2(
+        e0: f32,
+        eps: f32,
+        acc: &mut Lane2,
+        g: &Lane2,
+    ) -> Lane2 {
+        // SAFETY: stack-only lane arithmetic; features per caller.
+        unsafe {
+            let gv = ld2(g);
+            let a = _mm512_fmadd_ps(gv, gv, ld2(acc));
+            *acc = st2(a);
+            st2(_mm512_div_ps(
+                _mm512_set1_ps(e0),
+                _mm512_sqrt_ps(_mm512_add_ps(_mm512_set1_ps(eps), a)),
+            ))
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn predict_fold_chunk2(
+        cols: &[u32],
+        vals: &[f32],
+        base: usize,
+        w: &[f32],
+        acc: &mut f64,
+    ) {
+        debug_assert!(base + LANES2 <= cols.len() && base + LANES2 <= vals.len());
+        // SAFETY: (whole body) caller guarantees base + 2·LANES within
+        // cols/vals, all 16 entries real, and every column id <
+        // w.len(); ids fit i32 (the packer refuses d > i32::MAX).
+        unsafe {
+            let idx = _mm512_loadu_epi32(cols.as_ptr().add(base) as *const i32);
+            let wv = st2(_mm512_i32gather_ps::<4>(idx, w.as_ptr() as *const u8));
+            let xv = st2(_mm512_loadu_ps(vals.as_ptr().add(base)));
+            // The fold stays scalar f64 in storage order — bit-identical
+            // to two 8-wide folds on any backend (the cross-backend
+            // predict contract); the single 16-wide gather is the win.
+            for k in 0..LANES2 {
+                *acc += xv[k] as f64 * wv[k] as f64;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -687,5 +1276,191 @@ mod tests {
                 assert_eq!(fa, fp, "predict_fold bitwise (base {base}, n {n})");
             }
         }
+    }
+
+    const W2: Lane2 = [
+        -1.5, -0.25, 0.0, 0.4, 1.0, -0.0, 3.25, -7.5, //
+        2.0, -3.0, 0.125, -0.5, 9.0, -0.0, 0.0, 1e-3,
+    ];
+
+    /// The composed pair-op defaults are *definitionally* two adjacent
+    /// 8-wide chunks — pin that on the portable backend so the pair
+    /// surface every backend inherits can't drift from the lane ops it
+    /// claims to fuse.
+    #[test]
+    fn paired_defaults_compose_two_lane_chunks_bitwise() {
+        let x2: Lane2 = [
+            0.5, -1.25, 2.0, -0.75, 0.125, 3.5, -2.25, 1.0, //
+            -0.5, 1.75, -3.0, 0.25, 4.5, -0.125, 2.5, -1.0,
+        ];
+        let (wlo, whi) = split_lanes(&W2);
+        let (xlo, xhi) = split_lanes(&x2);
+
+        let gw2 = Portable::w_grad2(0.3, &W2, &x2, &x2, &W2);
+        let glo = Portable::w_grad(0.3, &wlo, &xlo, &xlo, &wlo);
+        let ghi = Portable::w_grad(0.3, &whi, &xhi, &xhi, &whi);
+        assert_eq!(gw2, join_lanes(&glo, &ghi), "w_grad2");
+
+        let wn2 = Portable::w_step_clamp2(&W2, &x2, &x2, 2.5);
+        assert_eq!(
+            wn2,
+            join_lanes(
+                &Portable::w_step_clamp(&wlo, &xlo, &xlo, 2.5),
+                &Portable::w_step_clamp(&whi, &xhi, &xhi, 2.5)
+            ),
+            "w_step_clamp2"
+        );
+
+        assert_eq!(
+            Portable::affine_coeffs2(0.7, &W2, &x2),
+            join_lanes(
+                &Portable::affine_coeffs(0.7, &wlo, &xlo),
+                &Portable::affine_coeffs(0.7, &whi, &xhi)
+            ),
+            "affine_coeffs2"
+        );
+        assert_eq!(
+            Portable::l1_grad_lane2(&W2),
+            join_lanes(&Portable::l1_grad_lane(&wlo), &Portable::l1_grad_lane(&whi)),
+        );
+        assert_eq!(
+            Portable::l2_grad_lane2(&W2),
+            join_lanes(&Portable::l2_grad_lane(&wlo), &Portable::l2_grad_lane(&whi)),
+        );
+
+        let mut acc2: Lane2 = [0.5; LANES2];
+        let (mut alo, mut ahi): (Lane, Lane) = ([0.5; LANES], [0.5; LANES]);
+        let e2 = Portable::adagrad_eta_lane2(0.1, 1e-8, &mut acc2, &x2);
+        let elo = Portable::adagrad_eta_lane(0.1, 1e-8, &mut alo, &xlo);
+        let ehi = Portable::adagrad_eta_lane(0.1, 1e-8, &mut ahi, &xhi);
+        assert_eq!(e2, join_lanes(&elo, &ehi), "adagrad_eta_lane2");
+        assert_eq!(acc2, join_lanes(&alo, &ahi), "adagrad acc2");
+
+        // Paired gathers/scatter/fold over a synthetic two-chunk block
+        // with distinct ids per pair (the row-group invariant).
+        let cols: Vec<u32> = (0..16u32).map(|i| (i * 7 + 3) % 16).collect();
+        let vals: Vec<f32> = (0..16).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let w: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let inv: Vec<f32> = (0..16).map(|i| 1.0 / (2.0 + i as f32)).collect();
+        // SAFETY: cols[0..16] all < 16 == w.len() == inv.len().
+        let pair = unsafe { Portable::gather_chunk2(&cols, &vals, 0, &w, &inv) };
+        // SAFETY: as above, chunk by chunk.
+        let (c0, c1) = unsafe {
+            (
+                Portable::gather_chunk(&cols, &vals, 0, &w, &inv),
+                Portable::gather_chunk(&cols, &vals, LANES, &w, &inv),
+            )
+        };
+        assert_eq!(pair.0, join_idx(&c0.0, &c1.0));
+        assert_eq!(pair.1, join_lanes(&c0.1, &c1.1), "gather2 w");
+        assert_eq!(pair.2, join_lanes(&c0.2, &c1.2), "gather2 x");
+        assert_eq!(pair.3, join_lanes(&c0.3, &c1.3), "gather2 inv");
+        // SAFETY: ids validated above.
+        let acc_pair = unsafe { Portable::gather_idx2(&w, &pair.0) };
+        for k in 0..LANES2 {
+            assert_eq!(acc_pair[k], w[pair.0[k]], "gather_idx2 lane {k}");
+        }
+        let mut dst = vec![0f32; 16];
+        // SAFETY: ids validated above; cols covers each id exactly once
+        // (i*7+3 mod 16 is a bijection), so the scatter is conflict-free.
+        unsafe { Portable::scatter2(&mut dst, &pair.0, &W2) };
+        for k in 0..LANES2 {
+            assert_eq!(dst[pair.0[k]], W2[k], "scatter2 lane {k}");
+        }
+        let (mut f2, mut f88) = (0.75f64, 0.75f64);
+        // SAFETY: bounds as above; the pair fold requires both chunks
+        // real, which this synthetic block satisfies.
+        unsafe {
+            Portable::predict_fold_chunk2(&cols, &vals, 0, &w, &mut f2);
+            Portable::predict_fold_chunk(&cols, &vals, 0, LANES, &w, &mut f88);
+            Portable::predict_fold_chunk(&cols, &vals, LANES, LANES, &w, &mut f88);
+        }
+        assert_eq!(f2, f88, "predict_fold_chunk2 == two folds bitwise");
+    }
+
+    /// AVX-512 pair ops vs the composed portable defaults — the
+    /// fine-grained leg of the 512-bit differential story (kernel-level
+    /// legs in `tests/lane_kernel.rs` / `tests/alpha_lane.rs`).
+    /// Gathers, selects, the scatter, and the predict fold must agree
+    /// bitwise; FMA-contracted arithmetic to ≤1 ulp.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_pair_ops_match_portable() {
+        if !crate::simd::avx512_supported() {
+            eprintln!("skipping: avx512f+avx2+fma not available on this host");
+            return;
+        }
+        let x2: Lane2 = [
+            0.5, -1.25, 2.0, -0.75, 0.125, 3.5, -2.25, 1.0, //
+            -0.5, 1.75, -3.0, 0.25, 4.5, -0.125, 2.5, -1.0,
+        ];
+        let close = |a: &Lane2, b: &Lane2, what: &str| {
+            for k in 0..LANES2 {
+                let rel = (a[k] - b[k]).abs() / b[k].abs().max(1e-6);
+                assert!(rel <= 1e-6, "{what}[{k}]: {} vs {}", a[k], b[k]);
+            }
+        };
+        // Exact selects: bitwise against portable (kink convention
+        // included — W2 carries ±0.0 lanes).
+        assert_eq!(Avx512::l1_grad_lane2(&W2), Portable::l1_grad_lane2(&W2));
+        assert_eq!(Avx512::l2_grad_lane2(&W2), Portable::l2_grad_lane2(&W2));
+        close(
+            &Avx512::w_grad2(0.3, &W2, &x2, &x2, &W2),
+            &Portable::w_grad2(0.3, &W2, &x2, &x2, &W2),
+            "w_grad2",
+        );
+        close(
+            &Avx512::w_step_clamp2(&W2, &x2, &x2, 2.5),
+            &Portable::w_step_clamp2(&W2, &x2, &x2, 2.5),
+            "w_step_clamp2",
+        );
+        close(
+            &Avx512::affine_coeffs2(0.7, &W2, &x2),
+            &Portable::affine_coeffs2(0.7, &W2, &x2),
+            "affine_coeffs2",
+        );
+        let mut acc_a: Lane2 = [0.5; LANES2];
+        let mut acc_p: Lane2 = [0.5; LANES2];
+        let ea = Avx512::adagrad_eta_lane2(0.1, 1e-8, &mut acc_a, &x2);
+        let ep = Portable::adagrad_eta_lane2(0.1, 1e-8, &mut acc_p, &x2);
+        close(&ea, &ep, "adagrad_eta2");
+        close(&acc_a, &acc_p, "adagrad_acc2");
+
+        let cols: Vec<u32> = vec![7, 0, 3, 12, 2, 6, 1, 5, 4, 15, 8, 11, 9, 13, 10, 14];
+        let vals: Vec<f32> = (0..16).map(|i| 0.25 * i as f32 - 2.0).collect();
+        let w: Vec<f32> = (0..16).map(|i| (i as f32).cos()).collect();
+        let inv: Vec<f32> = (0..16).map(|i| 1.0 / (3.0 + i as f32)).collect();
+        // SAFETY: cols[0..16] all < 16 == w.len() == inv.len(); the
+        // avx512 guard above ran.
+        let a = unsafe { Avx512::gather_chunk2(&cols, &vals, 0, &w, &inv) };
+        // SAFETY: as above.
+        let p = unsafe { Portable::gather_chunk2(&cols, &vals, 0, &w, &inv) };
+        assert_eq!(a.0, p.0);
+        assert_eq!(a.1, p.1, "gather2 w bitwise");
+        assert_eq!(a.2, p.2, "load2 x bitwise");
+        assert_eq!(a.3, p.3, "gather2 inv bitwise");
+        // SAFETY: ids validated above.
+        let (aa, pa) = unsafe { (Avx512::gather_idx2(&w, &a.0), Portable::gather_idx2(&w, &p.0)) };
+        assert_eq!(aa, pa, "gather_idx2 bitwise");
+        let (mut da, mut dp) = (vec![0f32; 16], vec![0f32; 16]);
+        // SAFETY: ids validated above and distinct (cols is a
+        // permutation of 0..16), so both scatters are conflict-free.
+        unsafe {
+            Avx512::scatter2(&mut da, &a.0, &x2);
+            Portable::scatter2(&mut dp, &p.0, &x2);
+        }
+        assert_eq!(da, dp, "scatter2 bitwise");
+        let (mut fa, mut fp) = (1.5f64, 1.5f64);
+        // SAFETY: bounds as above; both chunks real.
+        unsafe {
+            Avx512::predict_fold_chunk2(&cols, &vals, 0, &w, &mut fa);
+            Portable::predict_fold_chunk2(&cols, &vals, 0, &w, &mut fp);
+        }
+        assert_eq!(fa, fp, "predict_fold_chunk2 bitwise");
+
+        // And the 8-wide epilogue ops are the AVX2 pipeline verbatim.
+        let (lo, _) = split_lanes(&W2);
+        assert_eq!(Avx512::l1_grad_lane(&lo), Avx2::l1_grad_lane(&lo));
+        assert_eq!(Avx512::l2_grad_lane(&lo), Avx2::l2_grad_lane(&lo));
     }
 }

@@ -1,19 +1,25 @@
 //! Explicit-SIMD kernel backends (§Perf, DESIGN.md §SIMD-backend).
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`aligned::AVec`] — the 64-byte-aligned storage the packed-block
 //!   lane regions and per-stripe tables live in.
 //! * [`backend::SimdBackend`] — the lane-granular kernel operations
 //!   (chunk gather, gradient FMA, AdaGrad η batch, clamp, affine-α
-//!   coefficients) behind one monomorphization parameter, with the
-//!   [`backend::Portable`] autovec baseline and the x86_64
-//!   [`backend::Avx2`] gather/FMA implementation.
+//!   coefficients, paired-chunk fusion) behind one monomorphization
+//!   parameter, with the [`backend::Portable`] autovec baseline and
+//!   the x86_64 [`backend::Avx2`] gather/FMA and
+//!   [`backend::Avx512`] paired 16-wide implementations.
 //! * [`resolve`] — the one place runtime CPU-feature detection runs.
 //!   Engines never detect features (ci.sh greps them); the resolved
 //!   [`SimdLevel`] is recorded in `coordinator::plan::SweepPlan`, which
 //!   monomorphizes the sweeps per backend so there is zero per-chunk
 //!   dispatch.
+//! * [`autotune`] — the measured `auto` policy: instead of trusting
+//!   CPU feature flags, `resolve(Auto)` times every host-supported
+//!   backend for a few milliseconds and keeps the observed winner
+//!   (memoized process-wide so every fingerprint site agrees).
+//!   Forced levels never measure: they validate and obey.
 
 // `unsafe fn` bodies in this subtree are NOT implicit unsafe contexts:
 // every unsafe operation needs its own explicit block with a
@@ -21,18 +27,20 @@
 #![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod aligned;
+pub mod autotune;
 pub mod backend;
 
 pub use aligned::{is_aligned, AVec, ALIGN};
 #[cfg(target_arch = "x86_64")]
-pub use backend::Avx2;
+pub use backend::{Avx2, Avx512};
 pub use backend::{Portable, SimdBackend};
 
 use crate::config::SimdKind;
 
 /// The backend a run executes with, resolved once at setup time and
-/// recorded in the sweep plan. (The *request* — auto/portable/avx2 —
-/// is [`crate::config::SimdKind`]; this is the answer.)
+/// recorded in the sweep plan. (The *request* —
+/// auto/portable/avx2/avx512 — is [`crate::config::SimdKind`]; this is
+/// the answer.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdLevel {
     /// Autovectorized per-lane loops; bit-identical to the PR 3
@@ -41,6 +49,11 @@ pub enum SimdLevel {
     /// AVX2 gathers + FMA pipeline (x86_64 with avx2+fma detected, or
     /// forced via `--simd avx2` on such a host).
     Avx2,
+    /// AVX-512 paired-chunk pipeline — 16-wide gather/FMA/scatter over
+    /// the unchanged 8-lane layout, 8-wide epilogue (x86_64 with
+    /// avx512f+avx2+fma detected, or forced via `--simd avx512` on
+    /// such a host).
+    Avx512,
 }
 
 impl SimdLevel {
@@ -48,6 +61,19 @@ impl SimdLevel {
         match self {
             SimdLevel::Portable => backend::Portable::NAME,
             SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// The forced [`SimdKind`] that resolves to exactly this level (on
+    /// a host that supports it). Used to pin a measured `auto` winner
+    /// into the config shipped to worker processes, so every process
+    /// of one run computes the same fingerprint without re-measuring.
+    pub fn as_kind(&self) -> SimdKind {
+        match self {
+            SimdLevel::Portable => SimdKind::Portable,
+            SimdLevel::Avx2 => SimdKind::Avx2,
+            SimdLevel::Avx512 => SimdKind::Avx512,
         }
     }
 }
@@ -65,31 +91,83 @@ pub fn avx2_supported() -> bool {
     }
 }
 
+/// Whether the running CPU supports the AVX-512 backend. The paired
+/// pipeline needs avx512f (512-bit gather/scatter/FMA) *and* the
+/// avx2+fma epilogue — detected as a unit, so `Avx512` implies the
+/// 256-bit ops it delegates short remainders to are sound.
+pub fn avx512_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512f") && avx2_supported()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Every backend the running CPU can execute, narrowest first
+/// (portable is always first; the widest supported level is last).
+/// This is the candidate set the [`autotune`] measures and the order
+/// its deterministic tie-break prefers wider entries over.
+pub fn supported_levels() -> Vec<SimdLevel> {
+    let mut levels = vec![SimdLevel::Portable];
+    if avx2_supported() {
+        levels.push(SimdLevel::Avx2);
+    }
+    if avx512_supported() {
+        levels.push(SimdLevel::Avx512);
+    }
+    levels
+}
+
+/// The refusal message for a forced backend the CPU lacks —
+/// enumerating every configurable kind, so the message stays correct
+/// as backends are added. Shared verbatim by [`resolve`]'s panic and
+/// `TrainConfig::validate`'s error: validating callers (the `Trainer`
+/// facade, the CLI) report it as a clean error, and callers that skip
+/// validation still can never get a silent fallback out of an explicit
+/// request.
+pub fn forced_unsupported_msg(kind: SimdKind) -> String {
+    let needs = match kind {
+        SimdKind::Avx2 => "avx2+fma",
+        SimdKind::Avx512 => "avx512f+avx2+fma",
+        // Portable/Auto are supported everywhere; no caller builds
+        // this message for them.
+        SimdKind::Portable | SimdKind::Auto => "(always supported)",
+    };
+    let supported: Vec<&str> = supported_levels().iter().map(|l| l.name()).collect();
+    format!(
+        "cluster.simd = \"{}\" but this CPU does not support {needs}; \
+         supported on this host: {} — use one of those, or \"auto\" \
+         (measures every supported backend and picks the fastest)",
+        kind.name(),
+        supported.join("|"),
+    )
+}
+
 /// Resolve the configured backend request against the running CPU.
-/// `Auto` picks AVX2 when supported and falls back to portable
-/// otherwise; explicit requests are honored exactly. A forced `Avx2`
-/// on an unsupported host **panics** with the same actionable message
-/// `TrainConfig::validate` reports: validating callers (the `Trainer`
-/// facade, the CLI) never reach the panic, and callers that skip
-/// validation (the deprecated free-function shims) still can never get
-/// a silent portable run out of an explicit avx2 request.
+///
+/// Explicit requests are honored exactly: a forced level on an
+/// unsupported host **panics** with [`forced_unsupported_msg`] (the
+/// same string `TrainConfig::validate` reports), never silently
+/// degrades. `Auto` is resolved by **measurement**, not feature
+/// flags: the first `Auto` resolution in the process runs the
+/// [`autotune`] micro-benchmark over every supported backend and the
+/// winner is memoized (see [`autotune::auto_report`]) so every later
+/// `Auto` site — plan build, cache fingerprint, serve, API predict —
+/// agrees within the process.
 pub fn resolve(kind: SimdKind) -> SimdLevel {
     match kind {
         SimdKind::Portable => SimdLevel::Portable,
-        SimdKind::Auto => {
-            if avx2_supported() {
-                SimdLevel::Avx2
-            } else {
-                SimdLevel::Portable
-            }
-        }
+        SimdKind::Auto => autotune::auto_report().chosen,
         SimdKind::Avx2 => {
-            assert!(
-                avx2_supported(),
-                "cluster.simd = \"avx2\" but this CPU does not support avx2+fma; \
-                 use simd = \"auto\" (runtime detection) or \"portable\""
-            );
+            assert!(avx2_supported(), "{}", forced_unsupported_msg(kind));
             SimdLevel::Avx2
+        }
+        SimdKind::Avx512 => {
+            assert!(avx512_supported(), "{}", forced_unsupported_msg(kind));
+            SimdLevel::Avx512
         }
     }
 }
@@ -104,9 +182,15 @@ mod tests {
     }
 
     #[test]
-    fn auto_matches_detection() {
-        let want = if avx2_supported() { SimdLevel::Avx2 } else { SimdLevel::Portable };
-        assert_eq!(resolve(SimdKind::Auto), want);
+    fn auto_is_measured_and_supported() {
+        // `Auto` no longer maps to a feature flag: it is whatever the
+        // micro-autotune measured fastest — necessarily one of the
+        // host-supported backends — and it is memoized, so every
+        // resolution in one process agrees (the fingerprint-consistency
+        // contract).
+        let got = resolve(SimdKind::Auto);
+        assert!(supported_levels().contains(&got), "winner {got:?} must be supported");
+        assert_eq!(resolve(SimdKind::Auto), got, "auto resolution must be stable in-process");
     }
 
     #[test]
@@ -123,17 +207,67 @@ mod tests {
     }
 
     #[test]
+    fn forced_avx512_never_degrades_silently() {
+        let got = std::panic::catch_unwind(|| resolve(SimdKind::Avx512));
+        if avx512_supported() {
+            assert_eq!(got.unwrap(), SimdLevel::Avx512);
+        } else {
+            assert!(got.is_err(), "forced avx512 must not fall back");
+        }
+    }
+
+    #[test]
+    fn refusal_messages_enumerate_all_kinds() {
+        // The forced-level refusal must name the requested kind, its
+        // missing feature set, and the full host-supported menu — no
+        // more hardcoding the portable/avx2 pair.
+        let msg = forced_unsupported_msg(SimdKind::Avx512);
+        assert!(msg.contains("avx512") && msg.contains("avx512f+avx2+fma"), "{msg}");
+        assert!(msg.contains("portable"), "{msg}");
+        assert!(msg.contains("auto"), "{msg}");
+        let msg2 = forced_unsupported_msg(SimdKind::Avx2);
+        assert!(msg2.contains("\"avx2\"") && msg2.contains("avx2+fma"), "{msg2}");
+    }
+
+    #[test]
     fn level_names_are_stable() {
         // Recorded in benches/JSON artifacts — renaming breaks the
         // cross-PR trajectory.
         assert_eq!(SimdLevel::Portable.name(), "portable");
         assert_eq!(SimdLevel::Avx2.name(), "avx2");
+        assert_eq!(SimdLevel::Avx512.name(), "avx512");
+    }
+
+    #[test]
+    fn levels_round_trip_through_forced_kinds() {
+        // as_kind is how a measured winner is pinned into a worker's
+        // config; the round trip through parse must be the identity.
+        for level in [SimdLevel::Portable, SimdLevel::Avx2, SimdLevel::Avx512] {
+            let kind = level.as_kind();
+            assert_eq!(SimdKind::parse(kind.name()).unwrap(), kind, "{level:?}");
+            assert_eq!(kind.name(), level.name(), "{level:?}");
+        }
+    }
+
+    #[test]
+    fn supported_levels_is_ordered_and_consistent() {
+        let levels = supported_levels();
+        assert_eq!(levels[0], SimdLevel::Portable, "portable is always supported and first");
+        // avx512 support implies avx2 support by construction (the
+        // epilogue delegates to the 256-bit pipeline).
+        if avx512_supported() {
+            assert!(avx2_supported());
+            assert_eq!(levels, vec![SimdLevel::Portable, SimdLevel::Avx2, SimdLevel::Avx512]);
+        }
+        assert!(levels.contains(&resolve(SimdKind::Auto)));
     }
 
     #[cfg(not(target_arch = "x86_64"))]
     #[test]
     fn non_x86_never_reports_avx2() {
         assert!(!avx2_supported());
+        assert!(!avx512_supported());
         assert_eq!(resolve(SimdKind::Auto), SimdLevel::Portable);
+        assert_eq!(supported_levels(), vec![SimdLevel::Portable]);
     }
 }

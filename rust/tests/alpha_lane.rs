@@ -722,3 +722,238 @@ mod avx2_backend {
         assert_eq!(threaded.total_updates, replayed.total_updates);
     }
 }
+
+// ---------------------------------------------------------------------
+// AVX-512 paired backend on the affine-α path: 16-wide coefficient
+// lanes split into two sequential 8-wide serial α folds (bitwise the
+// unpaired recurrence), w side fully 16-wide. Same guard discipline as
+// the avx2 module; the machine-independent pair-loop logic is pinned
+// by PairedPortable inside coordinator::updates.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx512_backend {
+    use super::*;
+    use dso::config::SimdKind;
+    use dso::coordinator::updates::{sweep_lanes_affine_with, sweep_lanes_with};
+    use dso::simd::{avx512_supported, Avx2, Avx512};
+
+    fn guard() -> bool {
+        if avx512_supported() {
+            true
+        } else {
+            eprintln!("skipping avx512 affine test: host lacks avx512f+avx2+fma");
+            false
+        }
+    }
+
+    #[test]
+    fn prop_avx512_affine_matches_portable_and_oracle() {
+        // AVX-512 affine-α fold vs the portable fold and the COO
+        // oracle, on random ragged square-loss blocks × {L1, L2} ×
+        // {Fixed, AdaGrad}: ≤1e-5 relative per sweep. The α fold stays
+        // scalar f64 even on the pair path (two sequential 8-wide
+        // folds), so only the w side widens.
+        if !guard() {
+            return;
+        }
+        prop::check("avx512 vs portable affine α", 40, |g| {
+            let ds = random_regression_dataset(g);
+            let p = g.usize_in(1, 2.min(ds.m()).min(ds.d()));
+            let rp = Partition::even(ds.m(), p);
+            let cp = Partition::even(ds.d(), p);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+            let eta = g.f64_in(0.05, 0.5);
+            let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+            let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+            let q = g.usize_in(0, p - 1);
+            let r = g.usize_in(0, p - 1);
+            let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize| {
+                packed_trajectory(
+                    kernel,
+                    om.block(q, r),
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    Loss::Square,
+                    reg,
+                    lambda,
+                    rule,
+                    1,
+                )
+            };
+            let (aw, _, aa, _) = run(sweep_lanes_affine_with::<Avx512>);
+            let (pw, _, pa, _) = run(sweep_lanes_affine);
+            for k in 0..aw.len() {
+                prop::assert_close(pw[k] as f64, aw[k] as f64, 1e-5, &format!("w[{k}]"))?;
+            }
+            for k in 0..aa.len() {
+                prop::assert_close(pa[k] as f64, aa[k] as f64, 1e-5, &format!("alpha[{k}]"))?;
+            }
+            let (rw, ra) = oracle_trajectory(&ds, &om, q, r, reg, lambda, rule, 1);
+            for k in 0..rw.len() {
+                prop::assert_close(rw[k] as f64, aw[k] as f64, 1e-5, &format!("oracle w[{k}]"))?;
+            }
+            for k in 0..ra.len() {
+                prop::assert_close(ra[k] as f64, aa[k] as f64, 1e-5, &format!("oracle a[{k}]"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn avx512_affine_sweep_is_bitwise_avx2() {
+        // The pair ops round per-lane exactly like the 256-bit ops and
+        // the α fold order is unchanged, so the affine AVX-512 sweep is
+        // bitwise the AVX2 sweep on the same block — pairs, odd
+        // trailing chunks and ragged tails included.
+        if !guard() {
+            return;
+        }
+        let ds = {
+            let mut d = SparseSpec {
+                name: "avx512-affine-pairs".into(),
+                m: 60,
+                d: 44,
+                nnz_per_row: 21.0,
+                zipf_s: 0.4,
+                label_noise: 0.0,
+                pos_frac: 0.5,
+                seed: 93,
+            }
+            .generate();
+            for (i, yv) in d.y.iter_mut().enumerate() {
+                *yv = ((i % 5) as f32 - 2.0) * 0.7;
+            }
+            d
+        };
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for reg in [Regularizer::L2, Regularizer::L1] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize| {
+                    packed_trajectory(
+                        kernel,
+                        om.block(0, 0),
+                        &ds,
+                        &om,
+                        0,
+                        0,
+                        Loss::Square,
+                        reg,
+                        1e-3,
+                        rule,
+                        3,
+                    )
+                };
+                assert_eq!(
+                    run(sweep_lanes_affine_with::<Avx512>),
+                    run(sweep_lanes_affine_with::<Avx2>),
+                    "{reg:?}/{rule:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx512_affine_entry_point_degrades_for_nonaffine_losses() {
+        // The non-affine degrade contract holds per backend, pair loop
+        // included: the AVX-512 affine entry with hinge/logistic is
+        // bitwise the AVX-512 plain lane kernel.
+        if !guard() {
+            return;
+        }
+        let ds = SparseSpec {
+            name: "avx512-nonaffine".into(),
+            m: 40,
+            d: 32,
+            nnz_per_row: 19.0,
+            zipf_s: 0.3,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 82,
+        }
+        .generate();
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for loss in [Loss::Hinge, Loss::Logistic] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let affine = packed_trajectory(
+                    sweep_lanes_affine_with::<Avx512>,
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                let plain = packed_trajectory(
+                    sweep_lanes_with::<Avx512>,
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    3,
+                );
+                assert_eq!(affine, plain, "{loss:?} {rule:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_avx512_affine_dispatch_threaded_equals_replay() {
+        // Lemma-2 bit-identity on the AVX-512 affine path: square
+        // loss, dense rows, `--simd avx512`, threaded vs serial replay
+        // bitwise equal.
+        if !guard() {
+            return;
+        }
+        let ds = {
+            let mut d = SparseSpec {
+                name: "avx512-affine-engine".into(),
+                m: 120,
+                d: 40,
+                nnz_per_row: 18.0,
+                zipf_s: 0.4,
+                label_noise: 0.0,
+                pos_frac: 0.5,
+                seed: 91,
+            }
+            .generate();
+            for (i, yv) in d.y.iter_mut().enumerate() {
+                *yv = ((i % 7) as f32 - 3.0) * 0.5;
+            }
+            d
+        };
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 3;
+        c.optim.eta0 = 0.2;
+        c.optim.step = StepKind::AdaGrad;
+        c.model.loss = LossKind::Square;
+        c.model.lambda = 1e-3;
+        c.cluster.machines = 2;
+        c.cluster.cores = 1;
+        c.cluster.simd = SimdKind::Avx512;
+        c.monitor.every = 0;
+        let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+        let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+        assert_eq!(threaded.w, replayed.w);
+        assert_eq!(threaded.alpha, replayed.alpha);
+        assert_eq!(threaded.total_updates, replayed.total_updates);
+    }
+}

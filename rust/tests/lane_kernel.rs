@@ -883,3 +883,381 @@ mod avx2_backend {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// AVX-512 paired backend. Same shape as the avx2 module: #[cfg]-gated
+// to x86_64 and guarded on runtime detection, so the suite auto-skips
+// (with a note) on hosts without avx512f. The pair-loop *logic*
+// (boundaries, epilogue handoff) is separately pinned bitwise on every
+// machine by the PairedPortable tests inside coordinator::updates; the
+// suite here is the hardware half: the real 512-bit gathers, FMA and
+// scatters against the portable/COO truth.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx512_backend {
+    use super::*;
+    use dso::config::SimdKind;
+    use dso::coordinator::updates::sweep_lanes_with;
+    use dso::simd::{avx512_supported, Avx2, Avx512};
+
+    fn guard() -> bool {
+        if avx512_supported() {
+            true
+        } else {
+            eprintln!("skipping avx512 backend test: host lacks avx512f+avx2+fma");
+            false
+        }
+    }
+
+    /// Groups long enough that every regime appears: full pairs, a
+    /// ragged tail behind a pair, an odd trailing full chunk, and
+    /// short scalar-fallback groups.
+    fn paired_dataset(seed: u64) -> Dataset {
+        SparseSpec {
+            name: "avx512-pairs".into(),
+            m: 70,
+            d: 48,
+            nnz_per_row: 2.6 * LANES as f64,
+            zipf_s: 0.4,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed,
+        }
+        .generate()
+    }
+
+    #[test]
+    fn prop_avx512_matches_portable_and_oracle() {
+        // The backend contract, now 16-wide: on random
+        // ragged/sentinel-padded blocks across every loss × reg ×
+        // rule, one AVX-512 sweep stays within 1e-5 relative of both
+        // the portable backend and the COO oracle.
+        if !guard() {
+            return;
+        }
+        prop::check("avx512 vs portable lane kernel", 40, |g| {
+            let ds = random_dataset(g);
+            let p = g.usize_in(1, 2.min(ds.m()).min(ds.d()));
+            let rp = Partition::even(ds.m(), p);
+            let cp = Partition::even(ds.d(), p);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            om.validate(&ds.x).map_err(|e| e)?;
+            let loss =
+                Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic, LossKind::Square]));
+            let reg = Regularizer::from(*g.pick(&[RegKind::L2, RegKind::L1]));
+            let eta = g.f64_in(0.05, 0.5);
+            let rule = if g.bool() { StepRule::Fixed(eta) } else { StepRule::AdaGrad(eta) };
+            let lambda = *g.pick(&[1e-2, 1e-3, 1e-4]);
+            let q = g.usize_in(0, p - 1);
+            let r = g.usize_in(0, p - 1);
+
+            let run = |kernel: fn(&PackedBlock, &PackedCtx, &mut PackedState) -> usize| {
+                packed_trajectory(
+                    kernel,
+                    om.block(q, r),
+                    &ds,
+                    &om,
+                    q,
+                    r,
+                    loss,
+                    reg,
+                    lambda,
+                    rule,
+                    1,
+                )
+            };
+            let (aw, _, aa, _) = run(sweep_lanes_with::<Avx512>);
+            let (pw, _, pa, _) = run(sweep_lanes);
+            for k in 0..aw.len() {
+                prop::assert_close(pw[k] as f64, aw[k] as f64, 1e-5, &format!("w[{k}]"))?;
+            }
+            for k in 0..aa.len() {
+                prop::assert_close(pa[k] as f64, aa[k] as f64, 1e-5, &format!("alpha[{k}]"))?;
+            }
+            let (rw, ra) = oracle_trajectory(&ds, &om, q, r, loss, reg, lambda, rule, 1);
+            for k in 0..rw.len() {
+                prop::assert_close(rw[k] as f64, aw[k] as f64, 1e-5, &format!("oracle w[{k}]"))?;
+            }
+            for k in 0..ra.len() {
+                prop::assert_close(ra[k] as f64, aa[k] as f64, 1e-5, &format!("oracle a[{k}]"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_avx512_sentinel_padding_inert() {
+        // Pair steps never reach sentinel slots (`rem >= 2·LANES`
+        // implies 16 real entries); the 8-wide epilogue gathers them
+        // speculatively like AVX2. Rewriting every sentinel must leave
+        // the output bitwise unchanged.
+        if !guard() {
+            return;
+        }
+        prop::check("avx512 sentinel padding inert", 20, |g| {
+            let ds = random_dataset(g);
+            let rp = Partition::even(ds.m(), 1);
+            let cp = Partition::even(ds.d(), 1);
+            let om = PackedBlocks::build(&ds.x, &rp, &cp);
+            let b = om.block(0, 0);
+            if !b.has_lanes() {
+                return Ok(());
+            }
+            let mut mutated = b.clone();
+            for gi in 0..mutated.groups.len() {
+                let g = mutated.groups[gi];
+                let ps = g.pad_start as usize;
+                for k in ps + g.len()..ps + g.padded_len() {
+                    mutated.cols[k] = mutated.n_cols - 1;
+                    mutated.vals[k] = -3.25;
+                }
+            }
+            let loss = Loss::from(*g.pick(&[LossKind::Hinge, LossKind::Logistic]));
+            let rule = StepRule::AdaGrad(g.f64_in(0.05, 0.5));
+            let run = |blk: &PackedBlock| {
+                packed_trajectory(
+                    sweep_lanes_with::<Avx512>,
+                    blk,
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    2,
+                )
+            };
+            prop::assert_that(run(b) == run(&mutated), "avx512 output depends on sentinels")
+        });
+    }
+
+    #[test]
+    fn avx512_is_bitwise_avx2_including_odd_chunk_epilogue() {
+        // Stronger than the 1e-5 contract: every pair op rounds
+        // per-lane exactly like the 256-bit op on the same entries
+        // (512-bit FMA is still one rounding per lane), gathers and
+        // scatters move bits, and the α recurrence is the same serial
+        // f64 fold — so a whole AVX-512 sweep is *bitwise* the AVX2
+        // sweep, pairs, odd trailing chunks and ragged tails included.
+        if !guard() {
+            return;
+        }
+        let ds = paired_dataset(331);
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for loss in [Loss::Hinge, Loss::Logistic, Loss::Square] {
+            for reg in [Regularizer::L2, Regularizer::L1] {
+                for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                    let run = |kernel: fn(
+                        &PackedBlock,
+                        &PackedCtx,
+                        &mut PackedState,
+                    ) -> usize| {
+                        packed_trajectory(
+                            kernel,
+                            om.block(0, 0),
+                            &ds,
+                            &om,
+                            0,
+                            0,
+                            loss,
+                            reg,
+                            1e-3,
+                            rule,
+                            3,
+                        )
+                    };
+                    assert_eq!(
+                        run(sweep_lanes_with::<Avx512>),
+                        run(sweep_lanes_with::<Avx2>),
+                        "{loss:?}/{reg:?}/{rule:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_avx512_entry_points_match_generic_bitwise() {
+        // The `#[target_feature]` whole-sweep entry points the plan
+        // uses must be bitwise the generic Avx512 monomorphization.
+        if !guard() {
+            return;
+        }
+        use dso::coordinator::updates::{
+            sweep_lanes_affine_avx512, sweep_lanes_affine_with, sweep_lanes_avx512,
+        };
+        let ds = paired_dataset(101);
+        let rp = Partition::even(ds.m(), 1);
+        let cp = Partition::even(ds.d(), 1);
+        let om = PackedBlocks::build(&ds.x, &rp, &cp);
+        assert!(om.block(0, 0).has_lanes());
+        for loss in [Loss::Hinge, Loss::Square] {
+            for rule in [StepRule::Fixed(0.3), StepRule::AdaGrad(0.3)] {
+                let generic = packed_trajectory(
+                    if loss == Loss::Square {
+                        sweep_lanes_affine_with::<Avx512>
+                    } else {
+                        sweep_lanes_with::<Avx512>
+                    },
+                    om.block(0, 0),
+                    &ds,
+                    &om,
+                    0,
+                    0,
+                    loss,
+                    Regularizer::L2,
+                    1e-3,
+                    rule,
+                    2,
+                );
+                let y_local = om.stripe_labels(&ds.y);
+                let alpha_bias = om.stripe_alpha_bias(&ds.y);
+                let ctx = PackedCtx {
+                    loss,
+                    reg: Regularizer::L2,
+                    lambda: 1e-3,
+                    w_bound: loss.w_bound(1e-3),
+                    rule,
+                    inv_col: &om.inv_col[0],
+                    inv_col32: &om.inv_col32[0],
+                    inv_row: &om.inv_row[0],
+                    y: &y_local[0],
+                    alpha_bias32: &alpha_bias[0],
+                };
+                let mut w = vec![0.01f32; om.col_part.block_len(0)];
+                let mut w_acc = vec![0f32; w.len()];
+                let mut alpha: Vec<f32> = om
+                    .row_part
+                    .block(0)
+                    .map(|i| loss.alpha_init(ds.y[i] as f64) as f32)
+                    .collect();
+                let mut a_acc = vec![0f32; alpha.len()];
+                for _ in 0..2 {
+                    let mut st = PackedState {
+                        w: &mut w,
+                        w_acc: &mut w_acc,
+                        alpha: &mut alpha,
+                        a_acc: &mut a_acc,
+                    };
+                    // SAFETY: inside the guard() avx512f+avx2+fma check.
+                    unsafe {
+                        if loss == Loss::Square {
+                            sweep_lanes_affine_avx512(om.block(0, 0), &ctx, &mut st);
+                        } else {
+                            sweep_lanes_avx512(om.block(0, 0), &ctx, &mut st);
+                        }
+                    }
+                }
+                assert_eq!(
+                    (w, w_acc, alpha, a_acc),
+                    generic,
+                    "{loss:?} {rule:?} fused != generic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_threaded_equals_replay_under_avx512() {
+        // Lemma-2 bit-identity holds *within* the paired backend: the
+        // threaded engine and the serial replay dispatch the same
+        // planned kernels, so `--simd avx512` trajectories are exactly
+        // serializable too.
+        if !guard() {
+            return;
+        }
+        let ds = SparseSpec {
+            name: "avx512-engine".into(),
+            m: 160,
+            d: 48,
+            nnz_per_row: 20.0,
+            zipf_s: 0.6,
+            label_noise: 0.05,
+            pos_frac: 0.5,
+            seed: 71,
+        }
+        .generate();
+        for loss in [LossKind::Hinge, LossKind::Logistic, LossKind::Square] {
+            for partition in [PartitionKind::Even, PartitionKind::Balanced] {
+                let mut c = TrainConfig::default();
+                c.optim.epochs = 3;
+                c.optim.eta0 = 0.3;
+                c.optim.step = StepKind::AdaGrad;
+                c.model.loss = loss;
+                c.model.lambda = 1e-3;
+                c.cluster.machines = 2;
+                c.cluster.cores = 1;
+                c.cluster.partition = partition;
+                c.cluster.simd = SimdKind::Avx512;
+                c.monitor.every = 0;
+                let threaded = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+                let replayed = dso::coordinator::run_replay(&c, &ds, None).unwrap();
+                assert_eq!(threaded.w, replayed.w, "{loss:?}/{partition:?}");
+                assert_eq!(threaded.alpha, replayed.alpha, "{loss:?}/{partition:?}");
+                assert_eq!(threaded.total_updates, replayed.total_updates);
+            }
+        }
+    }
+}
+
+/// Measured `auto` pins: deterministic in-process resolution, a winner
+/// from the supported set, and the report recorded on the plan. Runs on
+/// every host (no feature guard — `auto` is always valid).
+mod measured_auto {
+    use super::*;
+    use dso::config::SimdKind;
+
+    #[test]
+    fn auto_resolution_is_stable_and_recorded_on_the_plan() {
+        let first = dso::simd::resolve(SimdKind::Auto);
+        assert!(dso::simd::supported_levels().contains(&first));
+        // Memoized: every later resolution in this process agrees —
+        // the fingerprint-consistency contract.
+        assert_eq!(dso::simd::resolve(SimdKind::Auto), first);
+
+        let ds = SparseSpec {
+            name: "auto-plan".into(),
+            m: 60,
+            d: 32,
+            nnz_per_row: 18.0,
+            zipf_s: 0.4,
+            label_noise: 0.0,
+            pos_frac: 0.5,
+            seed: 17,
+        }
+        .generate();
+        let mut c = TrainConfig::default();
+        c.optim.epochs = 1;
+        c.cluster.machines = 2;
+        c.cluster.cores = 1;
+        c.monitor.every = 0;
+        assert_eq!(c.cluster.simd, SimdKind::Auto, "auto is the default");
+        let r = dso::coordinator::train_dso(&c, &ds, None).unwrap();
+        assert!(r.w.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forced_levels_refuse_rather_than_degrade() {
+        // validate() refuses a forced hardware backend the host lacks
+        // with the shared refusal message; on hosts that support it,
+        // the request passes validation unchanged.
+        for (kind, supported) in [
+            (SimdKind::Avx2, dso::simd::avx2_supported()),
+            (SimdKind::Avx512, dso::simd::avx512_supported()),
+        ] {
+            let mut c = TrainConfig::default();
+            c.cluster.simd = kind;
+            match (c.validate(), supported) {
+                (Ok(()), true) | (Err(_), false) => {}
+                (Ok(()), false) => panic!("{kind:?} validated on an unsupported host"),
+                (Err(e), true) => panic!("{kind:?} refused on a supporting host: {e}"),
+            }
+        }
+    }
+}

@@ -128,6 +128,60 @@ fn avx2_batch_predict_stays_within_tolerance() {
     }
 }
 
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn avx512_batch_predict_is_bitwise_portable() {
+    // The 16-wide pair fold keeps the serial f64 storage-order
+    // recurrence, so AVX-512 scores are bitwise portable scores — the
+    // same (stronger) contract the whole serve suite pins for AVX2.
+    if !dso::simd::avx512_supported() {
+        eprintln!("skipping: avx512f+avx2+fma unavailable on this host");
+        return;
+    }
+    let ds = dataset(9);
+    let fitted = Trainer::new(cfg(4)).fit(&ds, None).unwrap();
+    let w = fitted.w();
+    let packed = PackedRequests::pack(&ds.x, w.len()).unwrap();
+    let (mut a, mut p) = (Vec::new(), Vec::new());
+    predict_batch(&packed, w, SimdLevel::Avx512, &mut a);
+    predict_batch(&packed, w, SimdLevel::Portable, &mut p);
+    for i in 0..p.len() {
+        assert_eq!(a[i].to_bits(), p[i].to_bits(), "row {i}");
+    }
+}
+
+#[test]
+fn measured_auto_server_reports_its_selection() {
+    // A server bound with `--simd auto` carries the measured report:
+    // the chosen level matches the instance backend, every measurement
+    // is for a host-supported level with positive throughput, and the
+    // memoized resolution agrees with `simd::resolve(Auto)`.
+    let ds = dataset(13);
+    let fitted = Trainer::new(cfg(3)).fit(&ds, None).unwrap();
+    let dir = std::env::temp_dir().join(format!("dso-serve-auto-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("auto.dso");
+    fitted.save(&model).unwrap();
+    let socket = dir.join("auto.sock");
+    let server = Server::bind(&ServeOptions::new(&model, &socket)).unwrap();
+    let report = server.autotune_report().expect("auto binding must carry the report");
+    assert_eq!(report.chosen.name(), server.backend());
+    assert_eq!(report.chosen, resolve(SimdKind::Auto), "memoized agreement");
+    let supported = dso::simd::supported_levels();
+    for m in &report.measured {
+        assert!(supported.contains(&m.level), "{:?}", m.level);
+        assert!(m.units_per_sec > 0.0 && m.reps >= 1, "{:?}", m.level);
+    }
+    // A forced binding never measures.
+    let socket2 = dir.join("forced.sock");
+    let mut opts = ServeOptions::new(&model, &socket2);
+    opts.simd = SimdKind::Portable;
+    let forced = Server::bind(&opts).unwrap();
+    assert!(forced.autotune_report().is_none());
+    assert_eq!(forced.backend(), "portable");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The acceptance round trip: a server on a background thread, a
 /// framed-transport client driving every request kind, error paths
 /// included.

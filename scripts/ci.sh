@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # CI gate: format, lint, tests, and a quick-mode bench smoke that also
 # records BENCH_updates.json, BENCH_lanes.json, BENCH_alpha_lanes.json,
-# BENCH_simd.json, BENCH_faults.json, BENCH_transport.json and
-# BENCH_outofcore.json (the cross-PR perf trajectory; plot with
-# `python scripts/plot_results.py --bench`).
+# BENCH_simd.json, BENCH_autotune.json, BENCH_faults.json,
+# BENCH_transport.json and BENCH_outofcore.json (the cross-PR perf
+# trajectory; plot with `python scripts/plot_results.py --bench`).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -51,13 +51,28 @@ if grep -n "is_x86_feature_detected" rust/src/serve/*.rs rust/src/api.rs; then
     exit 1
 fi
 
+echo "== AVX-512 intrinsics and detection confined to rust/src/simd/ =="
+# The 512-bit intrinsics (and every _mm512/__m512 type) live behind the
+# SimdBackend trait like the AVX2 set: kernels, engines, serving and
+# benches reach them only through monomorphized backends or the fused
+# #[target_feature] entry points. Comment lines are exempt.
+if grep -rn "_mm512\|__m512\|__mmask" rust/src --include="*.rs" \
+    | grep -v "^rust/src/simd/" \
+    | grep -v ":[[:space:]]*//"; then
+    echo "ci.sh: AVX-512 intrinsics leaked outside rust/src/simd/;" \
+         "add an op to SimdBackend instead" >&2
+    exit 1
+fi
+
 echo "== every unsafe block in simd/ and updates.rs carries a SAFETY comment =="
 # The explicit-SIMD layer concentrates the repo's unsafe code; each
 # `unsafe {` block must be annotated with the argument that makes it
-# sound (a `// SAFETY:` line within the preceding few lines).
+# sound (a `// SAFETY:` line within the preceding dozen lines — wide
+# enough for a real soundness argument, narrow enough that a comment
+# cannot cover an unrelated block).
 unsafe_gate() {
     awk '
-        /SAFETY:/ { cover = 7 }
+        /SAFETY:/ { cover = 12 }
         # Only code lines count as unsafe blocks — a comment *about*
         # unsafe blocks must not trip the gate.
         /unsafe[[:space:]]*\{/ && $0 !~ /^[[:space:]]*\/\// {
@@ -95,8 +110,17 @@ if [[ "$(uname -m)" == "x86_64" ]]; then
     lane_required+=(prop_avx2_matches_portable_and_oracle
         prop_avx2_sentinel_padding_inert
         fused_avx2_entry_points_match_generic_bitwise
-        engine_threaded_equals_replay_under_avx2)
+        engine_threaded_equals_replay_under_avx2
+        prop_avx512_matches_portable_and_oracle
+        prop_avx512_sentinel_padding_inert
+        avx512_is_bitwise_avx2_including_odd_chunk_epilogue
+        fused_avx512_entry_points_match_generic_bitwise
+        engine_threaded_equals_replay_under_avx512)
 fi
+# The measured-auto pins and the machine-independent pair-loop tests
+# run on every architecture (no feature guard).
+lane_required+=(auto_resolution_is_stable_and_recorded_on_the_plan
+    forced_levels_refuse_rather_than_degrade)
 lane_tests="$(cargo test -q --test lane_kernel -- --list 2>/dev/null || true)"
 for required in "${lane_required[@]}"; do
     if ! grep -q "$required" <<<"$lane_tests"; then
@@ -115,7 +139,11 @@ alpha_required=(prop_affine_matches_coo_oracle prop_affine_sentinel_mutation_ine
     engine_affine_dispatch_threaded_equals_replay)
 if [[ "$(uname -m)" == "x86_64" ]]; then
     alpha_required+=(prop_avx2_affine_matches_portable_and_oracle
-        engine_avx2_affine_dispatch_threaded_equals_replay)
+        engine_avx2_affine_dispatch_threaded_equals_replay
+        prop_avx512_affine_matches_portable_and_oracle
+        avx512_affine_sweep_is_bitwise_avx2
+        avx512_affine_entry_point_degrades_for_nonaffine_losses
+        engine_avx512_affine_dispatch_threaded_equals_replay)
 fi
 alpha_tests="$(cargo test -q --test alpha_lane -- --list 2>/dev/null || true)"
 for required in "${alpha_required[@]}"; do
@@ -188,9 +216,11 @@ echo "== serving suite present =="
 # stats → shutdown) holds over the framed transport.
 serve_required=(batched_predict_is_bitwise_identical_to_scalar_predict
     auto_backend_matches_portable_bitwise
-    server_roundtrip_predict_reload_stats_shutdown)
+    server_roundtrip_predict_reload_stats_shutdown
+    measured_auto_server_reports_its_selection)
 if [[ "$(uname -m)" == "x86_64" ]]; then
-    serve_required+=(avx2_batch_predict_stays_within_tolerance)
+    serve_required+=(avx2_batch_predict_stays_within_tolerance
+        avx512_batch_predict_is_bitwise_portable)
 fi
 serve_tests="$(cargo test -q --test serve -- --list 2>/dev/null || true)"
 for required in "${serve_required[@]}"; do
@@ -301,8 +331,8 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_outofcore
     DSO_BENCH_QUICK=1 DSO_BENCH_JSON=1 cargo bench --bench bench_predict
     for f in BENCH_updates.json BENCH_lanes.json BENCH_alpha_lanes.json BENCH_simd.json \
-        BENCH_faults.json BENCH_transport.json BENCH_outofcore.json \
-        BENCH_predict.json BENCH_steprule.json; do
+        BENCH_autotune.json BENCH_faults.json BENCH_transport.json \
+        BENCH_outofcore.json BENCH_predict.json BENCH_steprule.json; do
         if [[ -f "$f" ]]; then
             echo "recorded $f"
         else
@@ -310,6 +340,20 @@ if [[ "${1:-}" != "--no-bench" ]]; then
             exit 1
         fi
     done
+    # On AVX-512 hosts the backend set must include the avx512 pair —
+    # a silently missing entry would hide a broken guard.
+    if grep -q avx512f /proc/cpuinfo 2>/dev/null; then
+        for name in simd_avx512_hinge_adagrad simd_avx512_square_fixed; do
+            if ! grep -q "$name" BENCH_simd.json; then
+                echo "ci.sh: host supports avx512f but BENCH_simd.json lacks $name" >&2
+                exit 1
+            fi
+        done
+        if ! grep -q "autotune_avx512" BENCH_autotune.json; then
+            echo "ci.sh: host supports avx512f but BENCH_autotune.json lacks autotune_avx512" >&2
+            exit 1
+        fi
+    fi
 fi
 
 echo "ci.sh: all green"

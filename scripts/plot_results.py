@@ -37,6 +37,7 @@ unavailable.
 
 import csv
 import json
+import math
 import os
 import sys
 
@@ -203,6 +204,46 @@ def collect_snapshots(paths):
     return snapshots
 
 
+BACKENDS = ("portable", "avx2", "avx512")
+
+
+def backend_throughput(trajectory, tags):
+    """Fold per-backend bench series into one throughput trajectory per
+    SIMD backend: {backend: {tag: units_per_sec}}.
+
+    Sources: the `simd` group's `simd_<backend>_<loss>_<rule>` kernels
+    and the `autotune` group's `autotune_<backend>` probe reps. Within a
+    (backend, tag) cell the entries are averaged geometrically so no
+    single loss/rule combination dominates. Backends with no entries at
+    all (e.g. avx512 on hosts without AVX-512) simply produce no series
+    — absence is expected, not an error."""
+    cells = {}  # backend -> tag -> [ups, ...]
+    for group, prefix in (("simd", "simd_"), ("autotune", "autotune_")):
+        for name, by_tag in trajectory.get(group, {}).items():
+            if not name.startswith(prefix):
+                continue
+            rest = name[len(prefix) :]
+            backend = next(
+                (b for b in BACKENDS if rest == b or rest.startswith(b + "_")),
+                None,
+            )
+            if backend is None:
+                continue  # e.g. autotune_resolve_<winner> marker rows
+            for tag, ups in by_tag.items():
+                if ups > 0:
+                    cells.setdefault(backend, {}).setdefault(tag, []).append(ups)
+    out = {}
+    for backend, by_tag in cells.items():
+        series = {}
+        for tag in tags:
+            vals = by_tag.get(tag)
+            if vals:
+                series[tag] = math.exp(sum(math.log(v) for v in vals) / len(vals))
+        if series:
+            out[backend] = series
+    return out
+
+
 def bench_mode(paths, out_dir, plt):
     snapshots = collect_snapshots(paths or ["."])
     if not snapshots:
@@ -252,6 +293,21 @@ def bench_mode(paths, out_dir, plt):
                 pts = [(t, by_tag[t] * 1e3) for t in tags if t in by_tag]
                 print(f"  {name:<40} " + "  ".join(f"{t}:{v:.3f}" for t, v in pts))
 
+    # Per-backend throughput rollup: geometric mean of every sweep
+    # kernel (simd group) and autotune probe rep for each SIMD backend.
+    # Backends absent from the snapshots (avx512 on non-AVX-512 hosts)
+    # are simply not listed.
+    backends = backend_throughput(trajectory, tags)
+    if backends:
+        print("\n== simd backend throughput (geomean units/sec) ==")
+        for backend in BACKENDS:
+            by_tag = backends.get(backend)
+            if not by_tag:
+                continue
+            pts = [(t, by_tag[t]) for t in tags if t in by_tag]
+            path_txt = "  ".join(f"{tag}:{ups:.3e}" for tag, ups in pts)
+            print(f"  {backend:<40} {path_txt}")
+
     if plt is None:
         return 0
     os.makedirs(out_dir, exist_ok=True)
@@ -292,6 +348,31 @@ def bench_mode(paths, out_dir, plt):
         ax.legend(fontsize=7)
         fig.tight_layout()
         path = os.path.join(out_dir, "bench_predict_latency.png")
+        fig.savefig(path, dpi=120)
+        plt.close(fig)
+        print(f"wrote {path}")
+
+    # Backend-throughput panel: one line per SIMD backend (portable /
+    # avx2 / avx512), geometric mean across that backend's sweep kernels
+    # and autotune probe reps. A backend with no recorded entries in any
+    # snapshot — avx512 on hosts without AVX-512 — contributes no line.
+    if backends:
+        fig, ax = plt.subplots(figsize=(8, 4.5))
+        for backend in BACKENDS:
+            by_tag = backends.get(backend)
+            if not by_tag:
+                continue
+            xs = [i for i, t in enumerate(tags) if t in by_tag]
+            ys = [by_tag[tags[i]] for i in xs]
+            ax.plot(xs, ys, label=backend, marker="o")
+        ax.set_xticks(range(len(tags)))
+        ax.set_xticklabels(tags, rotation=30, ha="right", fontsize=8)
+        ax.set_ylabel("geomean units / second")
+        ax.set_yscale("log")
+        ax.set_title("simd backend throughput (sweep kernels + autotune probe)")
+        ax.legend(fontsize=8)
+        fig.tight_layout()
+        path = os.path.join(out_dir, "bench_backend_throughput.png")
         fig.savefig(path, dpi=120)
         plt.close(fig)
         print(f"wrote {path}")
